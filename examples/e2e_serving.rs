@@ -1,0 +1,152 @@
+//! End-to-end serving driver (the repo's headline validation run).
+//!
+//! Full stack on a real small workload:
+//!  1. generate a Twitter-like graph (100k vertices, ~1M arcs);
+//!  2. build the Hub² index with |H| = 64 hubs — the hub BFS jobs run as
+//!     superstep-shared Quegel queries, and the hub-pair closure runs
+//!     through the AOT-compiled Pallas min-plus kernel via PJRT;
+//!  3. serve 512 PPSP queries in batched mode: each admission batch's
+//!     upper bounds d_ub are evaluated by ONE call to the compiled
+//!     `dub_batch` kernel (L1 on the hot path), then the BiBFS phase runs
+//!     under superstep sharing with capacity C = 8;
+//!  4. report throughput, latency percentiles, access rate, and validate a
+//!     sample of answers against the serial oracle.
+//!
+//!     make artifacts && cargo run --release --offline --example e2e_serving
+
+use quegel::apps::ppsp::hub2::{Hub2Indexer, Hub2Query, MinPlus, RustMinPlus};
+use quegel::apps::ppsp::{oracle, UNREACHED};
+use quegel::coordinator::Engine;
+use quegel::graph::gen;
+use quegel::metrics::{fmt_pct, fmt_secs};
+use quegel::network::Cluster;
+use quegel::runtime::minplus::PjrtMinPlus;
+use quegel::runtime::Runtime;
+use std::time::Instant;
+
+fn main() {
+    let t_total = Instant::now();
+    let n = 100_000;
+    let avg_deg = 10;
+    let n_queries = 512;
+    let capacity = 8;
+
+    println!("== e2e_serving: Quegel + Hub2 + PJRT kernels ==");
+    let t0 = Instant::now();
+    let mut g = gen::twitter_like(n, avg_deg, 7);
+    g.ensure_in_edges();
+    println!(
+        "[1] graph: |V| = {}, |E| = {}, max deg = {} ({} wall)",
+        g.num_vertices(),
+        g.num_edges(),
+        g.max_degree(),
+        fmt_secs(t0.elapsed().as_secs_f64())
+    );
+
+    // PJRT-backed kernels when artifacts are present; rust fallback else.
+    let rt = Runtime::cpu().ok();
+    let pjrt = rt.as_ref().and_then(|rt| {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        PjrtMinPlus::load(rt, dir, 128).ok()
+    });
+    let mp: &dyn MinPlus = match &pjrt {
+        Some(p) => {
+            println!("[2] kernels: PJRT Pallas artifacts (k = {}, c = {})", p.k, p.c);
+            p
+        }
+        None => {
+            println!("[2] kernels: rust fallback (run `make artifacts` for PJRT)");
+            &RustMinPlus
+        }
+    };
+
+    let cluster = Cluster::new(120); // paper's 15 machines x 8 workers
+    let t0 = Instant::now();
+    let (idx, istats) = Hub2Indexer::new(64).capacity(capacity).build(&g, cluster.clone(), mp);
+    println!(
+        "[3] hub2 index: k = {}, labels = {:.1}/vertex, sim {} (wall {})",
+        idx.k(),
+        idx.label_in.iter().map(Vec::len).sum::<usize>() as f64 / n as f64,
+        fmt_secs(istats.index_time),
+        fmt_secs(t0.elapsed().as_secs_f64()),
+    );
+
+    // ---- Serving phase.
+    let queries = gen::random_pairs(n, n_queries, 8);
+    let t_serve = Instant::now();
+    // Batched d_ub on the hot path: one kernel call per admission batch.
+    let k_pad = pjrt.as_ref().map(|p| p.k).unwrap_or(idx.k());
+    let dubs = idx.dub_for(&queries, mp, capacity, k_pad);
+    let dub_wall = t_serve.elapsed().as_secs_f64();
+
+    let mut eng = Engine::new(Hub2Query::new(&g, &idx), cluster.clone(), n).capacity(capacity);
+    let ids: Vec<_> = queries
+        .iter()
+        .zip(&dubs)
+        .map(|(&(s, t), &d)| eng.submit((s, t, d)))
+        .collect();
+    eng.run_until_idle();
+    let serve_wall = t_serve.elapsed().as_secs_f64();
+
+    // ---- Reporting.
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut access = 0.0;
+    let mut answered = 0usize;
+    for id in &ids {
+        let r = eng.results().iter().find(|r| r.qid == *id).unwrap();
+        latencies.push(r.stats.latency());
+        access += r.stats.access_rate;
+        if r.out.is_some() {
+            answered += 1;
+        }
+    }
+    latencies.sort_by(f64::total_cmp);
+    let pct = |p: f64| latencies[(p * (latencies.len() - 1) as f64) as usize];
+    let sim_total = eng.sim_time();
+    println!("[4] served {n_queries} queries (C = {capacity}):");
+    println!(
+        "    simulated cluster time {} -> {:.1} queries/s (paper: ~3/s on 2B edges)",
+        fmt_secs(sim_total),
+        n_queries as f64 / sim_total
+    );
+    println!(
+        "    wall time {} ({} of it in the dub kernel) -> {:.0} queries/s wall",
+        fmt_secs(serve_wall),
+        fmt_secs(dub_wall),
+        n_queries as f64 / serve_wall
+    );
+    println!(
+        "    sim latency p50 {} / p95 {} / p99 {}",
+        fmt_secs(pct(0.5)),
+        fmt_secs(pct(0.95)),
+        fmt_secs(pct(0.99))
+    );
+    println!(
+        "    mean access rate {} | reach rate {}",
+        fmt_pct(access / n_queries as f64),
+        fmt_pct(answered as f64 / n_queries as f64)
+    );
+
+    // ---- Validation against the serial oracle (sample).
+    let t0 = Instant::now();
+    let mut checked = 0;
+    for (i, id) in ids.iter().enumerate().step_by(16) {
+        let r = eng.results().iter().find(|r| r.qid == *id).unwrap();
+        let want = oracle::bfs_dist(&g, queries[i].0, queries[i].1);
+        assert_eq!(
+            r.out,
+            (want != UNREACHED).then_some(want),
+            "query {i} {:?} disagrees with oracle",
+            queries[i]
+        );
+        checked += 1;
+    }
+    println!(
+        "[5] validated {checked} sampled answers against the serial oracle ({})",
+        fmt_secs(t0.elapsed().as_secs_f64())
+    );
+    println!(
+        "== done in {} ==",
+        fmt_secs(t_total.elapsed().as_secs_f64())
+    );
+}

@@ -1,0 +1,57 @@
+//! Quickstart: generate a small social graph, run interactive PPSP queries
+//! with BFS and bidirectional BFS, and print per-query stats.
+//!
+//!     cargo run --release --offline --example quickstart
+
+use quegel::apps::ppsp::{Bfs, BiBfs};
+use quegel::coordinator::Engine;
+use quegel::graph::gen;
+use quegel::metrics::{fmt_pct, fmt_secs, Table};
+use quegel::network::Cluster;
+
+fn main() {
+    // A Twitter-like graph: skewed in-degrees, one weak component.
+    let n = 20_000;
+    let mut g = gen::twitter_like(n, 8, 1);
+    g.ensure_in_edges();
+    println!(
+        "graph: |V| = {}, |E| = {}, max deg = {}, avg deg = {:.1}",
+        g.num_vertices(),
+        g.num_edges(),
+        g.max_degree(),
+        g.avg_degree()
+    );
+
+    let cluster = Cluster::new(8); // 8 simulated workers
+    let queries = gen::random_pairs(n, 8, 2);
+
+    // Interactive mode: one query at a time, BFS vs BiBFS.
+    let mut table = Table::new(vec![
+        "query", "algo", "d(s,t)", "supersteps", "access", "sim time",
+    ]);
+    for &(s, t) in &queries {
+        let mut eng = Engine::new(Bfs::new(&g), cluster.clone(), n);
+        let r = eng.run_one((s, t));
+        table.row(vec![
+            format!("({s},{t})"),
+            "BFS".into(),
+            r.out.map_or("inf".into(), |d| d.to_string()),
+            r.stats.supersteps.to_string(),
+            fmt_pct(r.stats.access_rate),
+            fmt_secs(r.stats.processing()),
+        ]);
+        let mut eng = Engine::new(BiBfs::new(&g), cluster.clone(), n);
+        let r = eng.run_one((s, t));
+        table.row(vec![
+            format!("({s},{t})"),
+            "BiBFS".into(),
+            r.out.map_or("inf".into(), |d| d.to_string()),
+            r.stats.supersteps.to_string(),
+            fmt_pct(r.stats.access_rate),
+            fmt_secs(r.stats.processing()),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("BiBFS touches far less of the graph — the access-rate gap is");
+    println!("what Quegel's query-centric design exploits (paper §6).");
+}

@@ -1,0 +1,73 @@
+//! P2P reachability demo (paper §5.4): condense a web-like digraph, build
+//! the level/yes/no labels as Quegel jobs, then serve indexed queries.
+//!
+//!     cargo run --release --offline --example reachability
+
+use quegel::apps::reach::{build_labels, condense, ReachQuery};
+use quegel::coordinator::Engine;
+use quegel::graph::gen;
+use quegel::metrics::{fmt_pct, fmt_secs, Table};
+use quegel::network::Cluster;
+
+fn main() {
+    let n = 60_000;
+    let g = gen::web_cyclic(n, 120, 3, 21);
+    println!("graph: |V| = {}, |E| = {}", g.num_vertices(), g.num_edges());
+
+    let cond = condense(&g);
+    let mut dag = cond.dag.clone();
+    dag.ensure_in_edges();
+    println!(
+        "condensation: |V_DAG| = {}, |E_DAG| = {}",
+        dag.num_vertices(),
+        dag.num_edges()
+    );
+
+    let cluster = Cluster::new(8);
+    let (labels, lstats) = build_labels(&dag, &cluster, true);
+    println!(
+        "labels: level {} (in {} supersteps), yes {}, no {}",
+        fmt_secs(lstats.level_time),
+        lstats.level_supersteps,
+        fmt_secs(lstats.yes_time),
+        fmt_secs(lstats.no_time)
+    );
+
+    let queries = gen::random_pairs(n, 1_000, 22);
+    let app = ReachQuery::new(&dag, &labels);
+    let mut eng = Engine::new(app, cluster, dag.num_vertices()).capacity(8);
+    for &(s, t) in &queries {
+        eng.submit((cond.scc_of[s as usize], cond.scc_of[t as usize]));
+    }
+    eng.run_until_idle();
+
+    let mut reach = 0usize;
+    let mut label_only = 0usize;
+    let mut access = 0.0;
+    for r in eng.results() {
+        if r.out {
+            reach += 1;
+        }
+        if r.stats.supersteps <= 1 {
+            label_only += 1;
+        }
+        access += r.stats.access_rate;
+    }
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["queries".to_string(), queries.len().to_string()]);
+    t.row(vec!["sim time".into(), fmt_secs(eng.sim_time())]);
+    t.row(vec![
+        "avg / query".into(),
+        fmt_secs(eng.sim_time() / queries.len() as f64),
+    ]);
+    t.row(vec!["reachable".into(), fmt_pct(reach as f64 / queries.len() as f64)]);
+    t.row(vec![
+        "label-only answers".into(),
+        fmt_pct(label_only as f64 / queries.len() as f64),
+    ]);
+    t.row(vec![
+        "avg access rate".into(),
+        fmt_pct(access / queries.len() as f64),
+    ]);
+    println!("{}", t.render());
+}

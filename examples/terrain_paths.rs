@@ -1,0 +1,70 @@
+//! Terrain shortest-path demo (paper §5.3): build a fractal DEM, transform
+//! it into the ε-shortcut network, answer P2P queries with the distributed
+//! SSSP (early termination), and compare against the Chen–Han stand-in.
+//!
+//!     cargo run --release --offline --example terrain_paths
+
+use quegel::apps::terrain::baseline::{hausdorff, ChResult, ChenHanStandIn};
+use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
+use quegel::coordinator::Engine;
+use quegel::metrics::{fmt_pct, fmt_secs, Table};
+use quegel::network::Cluster;
+
+fn main() {
+    let dem = Dem::fractal(101, 140, 10.0, 300.0, 17);
+    println!(
+        "DEM: {}x{} @ {}m, TIN faces = {}",
+        dem.width,
+        dem.height,
+        dem.spacing,
+        dem.tin_faces()
+    );
+    let net = TerrainNet::build(&dem, 2.0);
+    println!(
+        "eps-network: |V| = {}, |E| = {}",
+        net.graph.num_vertices(),
+        net.graph.num_edges()
+    );
+
+    let ch = ChenHanStandIn::new(&dem);
+    let cluster = Cluster::new(8);
+    let mut table = Table::new(vec![
+        "query", "cells", "quegel len", "steps", "access", "sim time", "CH len", "CH time",
+        "HDist",
+    ]);
+    // Paper's query ladder: destinations 2^2 .. 2^6 cells along the diagonal.
+    for (qi, exp) in (2..=6).enumerate() {
+        let d = 1usize << exp;
+        let (tx, ty) = (d.min(dem.width - 1), d.min(dem.height - 1));
+        let s = net.corner(0, 0);
+        let t = net.corner(tx, ty);
+        let mut eng = Engine::new(TerrainSssp::new(&net), cluster.clone(), net.graph.num_vertices());
+        let r = eng.run_one((s, t));
+        let (ch_len, ch_time, hd) = match ch.query(0, 0, tx, ty) {
+            ChResult::Ok {
+                len,
+                modeled_secs,
+                path,
+            } => (
+                format!("{len:.1} m"),
+                fmt_secs(modeled_secs),
+                format!("{:.2} m", hausdorff(&r.out.path, &path)),
+            ),
+            ChResult::Oom => ("-".into(), "OOM".into(), "-".into()),
+        };
+        table.row(vec![
+            format!("Q{}", qi + 1),
+            d.to_string(),
+            format!("{:.1} m", r.out.dist),
+            r.stats.supersteps.to_string(),
+            fmt_pct(r.stats.access_rate),
+            fmt_secs(r.stats.processing()),
+            ch_len,
+            ch_time,
+            hd,
+        ]);
+    }
+    println!("{}", table.render());
+    println!("CH blows up quadratically with distance while the Quegel");
+    println!("network scales; HDist stays within a few meters (paper Tab 10).");
+}

@@ -1,0 +1,77 @@
+//! XML keyword search demo: parse an inline document (the paper's Figure 3
+//! shape), then run SLCA / ELCA / MaxMatch over a generated DBLP-like
+//! corpus with the inverted-index activation path.
+//!
+//!     cargo run --release --offline --example xml_search
+
+use quegel::apps::xml::{self, data, parser};
+use quegel::coordinator::Engine;
+use quegel::metrics::{fmt_pct, fmt_secs, Table};
+use quegel::network::Cluster;
+
+const DOC: &str = r#"<lab>
+  <name>Infolab</name>
+  <members>
+    <member><name>Tom</name><interest>Graph Database</interest></member>
+    <member><name>Peter</name><interest>Data Mining</interest></member>
+  </members>
+  <projects>Graph Systems</projects>
+</lab>"#;
+
+fn main() {
+    // ---- Part 1: semantics on a hand-written document.
+    let t = parser::parse(DOC).expect("parse inline document");
+    let q = t.query_ids(&["tom", "graph"]).expect("keywords exist");
+    println!("document: {} vertices; query = {{tom, graph}}", t.len());
+    let mut eng = Engine::new(xml::SlcaNaive::new(&t), Cluster::new(2), t.len());
+    let slca = eng.run_one(q.clone()).out;
+    println!("SLCA roots: {:?}", slca.iter().map(|r| r.0).collect::<Vec<_>>());
+    let mut eng = Engine::new(xml::Elca::new(&t), Cluster::new(2), t.len());
+    let elca = eng.run_one(q.clone()).out;
+    println!("ELCA roots: {:?}", elca.iter().map(|r| r.0).collect::<Vec<_>>());
+    let mut eng = Engine::new(xml::MaxMatch::new(&t), Cluster::new(2), t.len());
+    let mm = eng.run_one(q).out;
+    println!("MaxMatch tree vertices: {mm:?}\n");
+
+    // ---- Part 2: throughput over a DBLP-like corpus.
+    let corpus = data::generate(&data::XmlGenConfig {
+        dblp_like: true,
+        records: 20_000,
+        vocab: 5_000,
+        seed: 11,
+    });
+    println!(
+        "corpus: {} vertices, max fan-out {} (DBLP-like)",
+        corpus.len(),
+        corpus.max_fanout()
+    );
+    let pool = data::query_pool(&corpus, 50, 2, 12);
+    let cluster = Cluster::new(8);
+    let mut table = Table::new(vec!["semantics", "queries", "sim total", "avg access"]);
+    macro_rules! run_sem {
+        ($name:expr, $app:expr) => {{
+            let mut eng = Engine::new($app, cluster.clone(), corpus.len()).capacity(8);
+            for q in &pool {
+                eng.submit(q.clone());
+            }
+            eng.run_until_idle();
+            let acc: f64 = eng
+                .results()
+                .iter()
+                .map(|r| r.stats.access_rate)
+                .sum::<f64>()
+                / pool.len() as f64;
+            table.row(vec![
+                $name.to_string(),
+                pool.len().to_string(),
+                fmt_secs(eng.sim_time()),
+                fmt_pct(acc),
+            ]);
+        }};
+    }
+    run_sem!("SLCA (naive)", xml::SlcaNaive::new(&corpus));
+    run_sem!("SLCA (level-aligned)", xml::SlcaLevelAligned::new(&corpus));
+    run_sem!("ELCA", xml::Elca::new(&corpus));
+    run_sem!("MaxMatch", xml::MaxMatch::new(&corpus));
+    println!("{}", table.render());
+}

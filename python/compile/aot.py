@@ -1,0 +1,74 @@
+"""AOT-lower the L2 graphs to HLO text artifacts for the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per (graph, shape) variant plus a manifest.txt that the
+rust runtime reads to discover shapes.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Static artifact shapes. The hub table is padded to HUB_DIM on the rust
+# side; query batches are padded to BATCH rows.
+HUB_DIM = 128  # k: number of hubs after padding (1 VPU-aligned tile)
+HUB_DIM_LARGE = 256  # larger variant for the top-1k-hub experiments (scaled)
+BATCH = 8  # C: capacity parameter default (paper: throughput saturates ~8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variants():
+    f32 = jnp.float32
+    for k in (HUB_DIM, HUB_DIM_LARGE):
+        d = jax.ShapeDtypeStruct((k, k), f32)
+        yield f"hub_closure_k{k}", model.hub_closure_step, (d,)
+        s = jax.ShapeDtypeStruct((BATCH, k), f32)
+        t = jax.ShapeDtypeStruct((BATCH, k), f32)
+        yield f"dub_batch_c{BATCH}_k{k}", model.dub_batch, (s, d, t)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, fn, specs in variants():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ";".join(
+            "x".join(str(d) for d in spec.shape) for spec in specs
+        )
+        manifest.append(f"{name} {shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

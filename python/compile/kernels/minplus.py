@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: blocked tropical (min-plus) matrix multiply.
+
+    out[i, j] = min_k ( a[i, k] + b[k, j] )
+
+This is the numeric hot-spot of the Quegel Hub^2 index (hub-pair distance
+closure and batched query upper-bound evaluation) promoted to a TPU-shaped
+kernel.
+
+Hardware adaptation (paper cluster -> TPU, see DESIGN.md §4):
+  * Grid over (M/BM, N/BN, K/BK); the K axis is the innermost ("arbitrary")
+    grid dimension so the output block is revisited across k steps and can
+    act as the accumulator (revisiting semantics).
+  * A-block (BM, BK) and B-block (BK, BN) stream HBM->VMEM per grid step via
+    BlockSpec index maps; the accumulator block stays VMEM-resident.
+  * Default tile 128x128x128: 3 x 128x128 x 4B = 192 KiB of VMEM per step,
+    far under the ~16 MiB budget, leaving headroom for the pipeline
+    emitter's double buffering.
+  * min-plus has no MXU form (the MXU contracts with x/+), so the roofline
+    is the VPU's 8x128 lanes; tiles are multiples of (8, 128) accordingly.
+
+The kernel MUST run with interpret=True on this CPU-only image: a real TPU
+lowering emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INF
+
+# Plain python float for use inside the kernel body: pallas_call rejects
+# kernels that close over traced jnp constants.
+_INF = float(INF)
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref):
+    """One (BM, BK) x (BK, BN) tropical tile-product, accumulated into o_ref."""
+    k = pl.program_id(2)
+
+    # First visit of this output block: initialize the accumulator to +INF
+    # (the tropical zero).
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full(o_ref.shape, _INF, o_ref.dtype)
+
+    a = a_ref[...]  # (BM, BK)
+    b = b_ref[...]  # (BK, BN)
+    # (BM, BK, 1) + (1, BK, N) -> min over BK. The broadcast-add stays in
+    # registers/VMEM tile-by-tile; on TPU this vectorizes over the 8x128
+    # lanes of the VPU.
+    part = jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+    o_ref[...] = jnp.minimum(o_ref[...], part)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def minplus_matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Blocked tropical matmul via pallas_call (interpret mode on CPU).
+
+    Shapes must tile evenly: M % bm == K % bk == N % bn == 0. The L2 model
+    pads hub tables to multiples of 128 before calling.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    # Auto-shrink the requested tile to the full dimension when the dimension
+    # is smaller than (or does not tile by) the default 128 tile; production
+    # hub tables are padded to multiples of 128, small test shapes are not.
+    if m % bm != 0:
+        bm = m
+    if n % bn != 0:
+        bn = n
+    if k % bk != 0:
+        bk = k
+    grid = (m // bm, n // bn, k // bk)
+    out = pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,  # CPU-only image; see module docstring
+    )(a, b)
+    return jnp.minimum(out, INF)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package is
+checked against the corresponding function here by pytest (exact math on f32,
+so we expect allclose with tight tolerances).
+
+The tropical (min-plus) semiring replaces (*, +) with (+, min):
+
+    (A (*) B)[i, j] = min_k ( A[i, k] + B[k, j] )
+
+`INF` encodes "no path". We use a large finite sentinel rather than jnp.inf so
+that additions never produce NaN (inf + -inf) and the HLO stays trivially
+portable; callers clamp back to the sentinel.
+"""
+
+import jax.numpy as jnp
+
+# Finite "infinity" for distances. Large enough that no real composed path
+# reaches it (graph diameters here are << 1e9) and small enough that
+# INF + INF stays exactly representable in f32 (2^31 is a power of two).
+INF = jnp.float32(2.0**31)
+
+
+def minplus_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Tropical matmul: out[i,j] = min_k (a[i,k] + b[k,j]), clamped to INF."""
+    # (M, K, 1) + (1, K, N) -> (M, K, N) -> min over K
+    out = jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+    return jnp.minimum(out, INF)
+
+
+def hub_closure_step(d: jnp.ndarray) -> jnp.ndarray:
+    """One min-plus squaring step of the hub-pair distance table.
+
+    D' = min(D, D (*) D). Repeated log2(k) times this yields the all-pairs
+    shortest-path closure over the hub subgraph (paper §5.1.2, Hub^2).
+    """
+    return jnp.minimum(d, minplus_matmul(d, d))
+
+
+def dub_batch(s: jnp.ndarray, dh: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Batched Hub^2 upper bound (paper §5.1.2).
+
+    For each query q of a batch of C queries:
+        dub[q] = min_{i,j} ( s[q,i] + dh[i,j] + t[q,j] )
+    where s/t are (C, k) core-hub distance rows for the query endpoints and
+    dh is the (k, k) hub-pair distance table.
+    """
+    sd = minplus_matmul(s, dh)  # (C, k): min_i (s[q,i] + dh[i,j])
+    out = jnp.min(sd + t, axis=1)  # min_j ( sd[q,j] + t[q,j] )
+    return jnp.minimum(out, INF)

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: fused tropical row reduction.
+
+    out[q] = min_j ( a[q, j] + b[q, j] )
+
+The second stage of the Hub^2 batched upper bound: after `sd = S (*) D_H`
+(the min-plus matmul), the per-query bound is the row-wise tropical "dot"
+of `sd` with the t-side label rows. Fusing add+min in one kernel avoids
+materializing `sd + t` in HBM.
+
+BlockSpec schedule: grid over (C/BC, K/BK); each step streams (BC, BK)
+tiles of both operands into VMEM, reduces the K axis locally, and folds
+into the (BC,) accumulator column (revisiting semantics over the k grid
+axis). VMEM per step = 2 x BC x BK x 4B + BC x 4B — 64 KiB at the default
+(8, 1024) tile. Runs on the VPU (add+min, no MXU contraction).
+
+interpret=True on this CPU-only image (see minplus.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INF
+
+_INF = float(INF)
+
+
+def _rowmin_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full(o_ref.shape, _INF, o_ref.dtype)
+
+    part = jnp.min(a_ref[...] + b_ref[...], axis=1)
+    o_ref[...] = jnp.minimum(o_ref[...], part)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bk"))
+def tropical_rowmin(a, b, *, bc: int = 8, bk: int = 1024):
+    """out[q] = min_j (a[q,j] + b[q,j]), blocked over the j axis."""
+    c, k = a.shape
+    assert a.shape == b.shape, f"shape mismatch {a.shape} vs {b.shape}"
+    if c % bc != 0:
+        bc = c
+    if k % bk != 0:
+        bk = k
+    grid = (c // bc, k // bk)
+    out = pl.pallas_call(
+        _rowmin_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, bk), lambda i, kk: (i, kk)),
+            pl.BlockSpec((bc, bk), lambda i, kk: (i, kk)),
+        ],
+        out_specs=pl.BlockSpec((bc,), lambda i, kk: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c,), a.dtype),
+        interpret=True,  # CPU-only image
+    )(a, b)
+    return jnp.minimum(out, INF)

@@ -1,0 +1,40 @@
+"""L2: JAX compute graphs for the Quegel Hub^2 index, calling the L1 kernel.
+
+Two graphs are AOT-lowered to HLO text (see aot.py) and executed from the
+rust coordinator via PJRT:
+
+  * hub_closure_step(D)      -- one min-plus squaring step of the (k, k)
+                                hub-pair distance table. The rust indexer
+                                iterates it ceil(log2(k)) times to reach the
+                                all-pairs closure over the hub subgraph.
+  * dub_batch(S, D, T)       -- batched Hub^2 query upper bound for the C
+                                in-flight queries of a super-round:
+                                dub[q] = min_{i,j} S[q,i] + D[i,j] + T[q,j].
+
+Shapes are static per artifact (PJRT compiles one executable per variant);
+the rust side pads batches/tables with INF rows to the artifact shape.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.minplus import minplus_matmul
+from .kernels.ref import INF
+from .kernels.rowmin import tropical_rowmin
+
+
+def hub_closure_step(d: jnp.ndarray) -> tuple:
+    """D' = min(D, D (*) D), one squaring step toward the tropical closure."""
+    sq = minplus_matmul(d, d)
+    return (jnp.minimum(d, sq),)
+
+
+def dub_batch(s: jnp.ndarray, d: jnp.ndarray, t: jnp.ndarray) -> tuple:
+    """dub[q] = min_{i,j} ( s[q,i] + d[i,j] + t[q,j] ) for each query row q.
+
+    Computed as one tropical matmul followed by the fused tropical row-min
+    (both L1 Pallas kernels); the second "matmul" collapses to a diagonal
+    so we never materialize (C, C).
+    """
+    sd = minplus_matmul(s, d)  # (C, k)
+    dub = tropical_rowmin(sd, t)  # (C,)
+    return (jnp.minimum(dub, INF),)

@@ -1,0 +1,104 @@
+"""L1 correctness: Pallas min-plus kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel layer: hypothesis sweeps
+shapes, block sizes and value distributions; every case must match ref.py to
+f32-exact tolerances (min-plus is exact arithmetic: adds and mins only).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.minplus import minplus_matmul
+
+INF = float(ref.INF)
+
+
+def rand_dist(rng, shape, inf_frac=0.3):
+    """Random distance matrix: non-negative floats with INF holes."""
+    a = rng.uniform(0.0, 100.0, size=shape).astype(np.float32)
+    mask = rng.uniform(size=shape) < inf_frac
+    a[mask] = INF
+    return a
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (16, 8, 24), (128, 128, 128)])
+def test_matches_ref_basic(m, k, n):
+    rng = np.random.default_rng(7)
+    a, b = rand_dist(rng, (m, k)), rand_dist(rng, (k, n))
+    bm, bk, bn = min(m, 8), min(k, 8), min(n, 8)
+    got = minplus_matmul(jnp.asarray(a), jnp.asarray(b), bm=bm, bn=bn, bk=bk)
+    want = ref.minplus_matmul(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_identity():
+    """I (*) A == A where tropical identity has 0 diagonal, INF elsewhere."""
+    rng = np.random.default_rng(3)
+    a = rand_dist(rng, (16, 16))
+    eye = np.full((16, 16), INF, np.float32)
+    np.fill_diagonal(eye, 0.0)
+    got = minplus_matmul(jnp.asarray(eye), jnp.asarray(a), bm=8, bn=8, bk=8)
+    np.testing.assert_array_equal(np.asarray(got), a)
+
+
+def test_all_inf_stays_inf():
+    a = np.full((8, 8), INF, np.float32)
+    got = minplus_matmul(jnp.asarray(a), jnp.asarray(a), bm=8, bn=8, bk=8)
+    np.testing.assert_array_equal(np.asarray(got), a)
+
+
+def test_non_tiling_shapes_fall_back_to_full_dim():
+    """Shapes that don't tile by the requested block still compute correctly
+    (the tile auto-shrinks to the full dimension)."""
+    rng = np.random.default_rng(13)
+    a, b = rand_dist(rng, (9, 7)), rand_dist(rng, (7, 5))
+    got = minplus_matmul(jnp.asarray(a), jnp.asarray(b), bm=8, bn=8, bk=8)
+    want = ref.minplus_matmul(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    mi=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    ni=st.integers(1, 4),
+    blk=st.sampled_from([8, 16]),
+    inf_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_hypothesis(mi, ki, ni, blk, inf_frac, seed):
+    m, k, n = mi * blk, ki * blk, ni * blk
+    rng = np.random.default_rng(seed)
+    a, b = rand_dist(rng, (m, k), inf_frac), rand_dist(rng, (k, n), inf_frac)
+    got = minplus_matmul(jnp.asarray(a), jnp.asarray(b), bm=blk, bn=blk, bk=blk)
+    want = ref.minplus_matmul(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(blk=st.sampled_from([8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_block_shape_invariance(blk, seed):
+    """Result must not depend on the tiling."""
+    m = k = n = 32
+    rng = np.random.default_rng(seed)
+    a, b = rand_dist(rng, (m, k)), rand_dist(rng, (k, n))
+    got = minplus_matmul(jnp.asarray(a), jnp.asarray(b), bm=blk, bn=blk, bk=blk)
+    base = minplus_matmul(jnp.asarray(a), jnp.asarray(b), bm=32, bn=32, bk=32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_associativity_small():
+    """(A*B)*C == A*(B*C) on exact integer-valued floats."""
+    rng = np.random.default_rng(11)
+    mats = [
+        np.floor(rand_dist(rng, (16, 16), 0.2)).astype(np.float32) for _ in range(3)
+    ]
+    a, b, c = (jnp.asarray(x) for x in mats)
+    left = ref.minplus_matmul(ref.minplus_matmul(a, b), c)
+    right = ref.minplus_matmul(a, ref.minplus_matmul(b, c))
+    # Values beyond INF are clamped identically on both sides.
+    np.testing.assert_array_equal(np.asarray(left), np.asarray(right))

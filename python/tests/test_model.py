@@ -1,0 +1,81 @@
+"""L2 correctness: closure + batched d_ub graphs vs dense oracles."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+INF = float(ref.INF)
+
+
+def floyd_warshall(d):
+    """Dense APSP oracle over the hub subgraph (numpy, O(k^3))."""
+    d = d.copy()
+    k = d.shape[0]
+    for mid in range(k):
+        d = np.minimum(d, d[:, mid : mid + 1] + d[mid : mid + 1, :])
+    return np.minimum(d, INF)
+
+
+def random_hub_table(rng, k, edge_frac=0.3):
+    d = np.full((k, k), INF, np.float32)
+    np.fill_diagonal(d, 0.0)
+    mask = rng.uniform(size=(k, k)) < edge_frac
+    w = np.floor(rng.uniform(1, 20, size=(k, k))).astype(np.float32)
+    d = np.where(mask, np.minimum(d, w), d)
+    # symmetric (undirected hub graph, as in the paper's undirected case)
+    d = np.minimum(d, d.T)
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+@pytest.mark.parametrize("k", [8, 16, 32])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_closure_reaches_apsp(k, seed):
+    rng = np.random.default_rng(seed)
+    d = random_hub_table(rng, k)
+    want = floyd_warshall(d)
+    cur = jnp.asarray(d)
+    steps = max(1, int(np.ceil(np.log2(k))))
+    for _ in range(steps):
+        (cur,) = model.hub_closure_step(cur)
+    np.testing.assert_allclose(np.asarray(cur), want, rtol=0, atol=0)
+
+
+def test_closure_idempotent_at_fixpoint():
+    rng = np.random.default_rng(5)
+    d = random_hub_table(rng, 16)
+    fixed = jnp.asarray(floyd_warshall(d))
+    (again,) = model.hub_closure_step(fixed)
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(fixed))
+
+
+@pytest.mark.parametrize("c,k", [(1, 8), (8, 16), (4, 32)])
+def test_dub_batch_matches_bruteforce(c, k):
+    rng = np.random.default_rng(9)
+    s = rng.uniform(0, 50, size=(c, k)).astype(np.float32)
+    t = rng.uniform(0, 50, size=(c, k)).astype(np.float32)
+    d = random_hub_table(rng, k)
+    (got,) = model.dub_batch(jnp.asarray(s), jnp.asarray(d), jnp.asarray(t))
+    want = np.array(
+        [np.min(s[q][:, None] + d + t[q][None, :]) for q in range(c)],
+        np.float32,
+    )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=0, atol=0)
+
+
+def test_dub_batch_inf_rows_are_inert():
+    """Padding rows (all-INF s/t) must produce INF, not corrupt the batch."""
+    k = 16
+    rng = np.random.default_rng(2)
+    d = random_hub_table(rng, k)
+    s = np.full((2, k), INF, np.float32)
+    t = np.full((2, k), INF, np.float32)
+    s[0, 3] = 1.0
+    t[0, 5] = 2.0
+    (got,) = model.dub_batch(jnp.asarray(s), jnp.asarray(d), jnp.asarray(t))
+    assert np.asarray(got)[1] == INF
+    assert np.asarray(got)[0] == 1.0 + d[3, 5] + 2.0 or np.asarray(got)[0] <= INF

@@ -1,0 +1,56 @@
+//! Quegel benchmark harness: regenerates every table and figure of the
+//! paper's evaluation (§6) on the scaled synthetic datasets (DESIGN.md §6).
+//!
+//! criterion is unavailable in this offline image, so this is a
+//! `harness = false` bench binary: each module prints a paper-shaped table
+//! and the main dispatches on a name filter:
+//!
+//!     cargo bench --offline             # everything
+//!     cargo bench --offline -- tab5     # one experiment
+//!
+//! Absolute numbers are simulated-cluster seconds from the cost model (plus
+//! wall time where meaningful); the paper-vs-measured comparison lives in
+//! EXPERIMENTS.md.
+
+mod tables;
+
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let filter: Vec<&str> = args
+        .iter()
+        .filter(|a| !a.starts_with('-'))
+        .map(String::as_str)
+        .collect();
+    let want = |name: &str| filter.is_empty() || filter.iter().any(|f| name.contains(f));
+
+    let experiments: Vec<(&str, fn())> = vec![
+        ("fig1_balance", tables::fig1::run),
+        ("tab2_livej", tables::tab2::run),
+        ("tab3_twitter20", tables::tab34::run_twitter),
+        ("tab4_btc20", tables::tab34::run_btc),
+        ("tab5_twitter1k", tables::tab56::run_twitter),
+        ("tab6_btc1k", tables::tab56::run_btc),
+        ("tab7a_capacity", tables::tab7::run_capacity),
+        ("tab7b_machines", tables::tab7::run_machines),
+        ("tab8_xml", tables::tab8::run),
+        ("tab10_terrain", tables::tab10::run),
+        ("fig9_paths", tables::fig9::run),
+        ("tab11_reach", tables::tab11::run),
+        ("tab12_gkws", tables::tab12::run),
+        ("perf_engine", tables::perf::run),
+    ];
+
+    let t0 = Instant::now();
+    for (name, f) in experiments {
+        if !want(name) {
+            continue;
+        }
+        println!("\n================ {name} ================");
+        let t = Instant::now();
+        f();
+        println!("[{name}: {:.1}s wall]", t.elapsed().as_secs_f64());
+    }
+    println!("\ntotal bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,48 @@
+//! Figure 9: path-shape similarity — dump the CH and Quegel polylines for
+//! one mid-range query so they can be plotted, and report their Hausdorff
+//! distance.
+
+use quegel::apps::terrain::baseline::{hausdorff, ChResult, ChenHanStandIn};
+use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
+use quegel::coordinator::Engine;
+use std::io::Write;
+
+pub fn run() {
+    let dem = Dem::fractal(101, 140, 10.0, 250.0, 421); // Eagle-like (as tab10)
+    let net = TerrainNet::build(&dem, 2.0);
+    let ch = ChenHanStandIn::new(&dem);
+    let (tx, ty) = (16usize, 16usize); // Q3 of the ladder
+
+    let s = net.corner(0, 0);
+    let t = net.corner(tx, ty);
+    let mut eng = Engine::new(
+        TerrainSssp::new(&net),
+        super::paper_cluster(),
+        net.graph.num_vertices(),
+    );
+    let out = eng.run_one((s, t)).out;
+    let ChResult::Ok { path: ch_path, len, .. } = ch.query(0, 0, tx, ty) else {
+        panic!("Q3 must fit the CH budget");
+    };
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_out");
+    std::fs::create_dir_all(&dir).expect("mkdir bench_out");
+    let dump = |name: &str, path: &[(f64, f64, f64)]| {
+        let mut f = std::fs::File::create(dir.join(name)).expect("create polyline file");
+        for (x, y, z) in path {
+            writeln!(f, "{x:.2} {y:.2} {z:.2}").unwrap();
+        }
+    };
+    dump("fig9_ch_path.txt", &ch_path);
+    dump("fig9_quegel_path.txt", &out.path);
+    let hd = hausdorff(&out.path, &ch_path);
+    println!(
+        "Q3 ({tx},{ty}): CH len {len:.1} m, Quegel len {:.1} m, HDist {hd:.2} m",
+        out.dist
+    );
+    println!(
+        "polylines written to {} (plot to reproduce Fig 9)",
+        dir.display()
+    );
+    assert!(hd < 30.0, "paths must nearly coincide (paper Fig 9)");
+}

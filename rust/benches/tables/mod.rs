@@ -1,0 +1,37 @@
+//! One module per reproduced table/figure. Shared helpers live here.
+
+pub mod fig1;
+pub mod fig9;
+pub mod perf;
+pub mod tab10;
+pub mod tab11;
+pub mod tab12;
+pub mod tab2;
+pub mod tab34;
+pub mod tab56;
+pub mod tab7;
+pub mod tab8;
+
+use quegel::network::{Cluster, CostModel};
+
+/// The "paper cluster": 15 machines × 8 workers, Gigabit.
+pub fn paper_cluster() -> Cluster {
+    Cluster::new(120)
+}
+
+/// GraphX-like discipline: distributed but with Spark's per-stage
+/// scheduling overhead and serialization cost (modeled; DESIGN.md §5).
+pub fn graphx_cost() -> CostModel {
+    CostModel {
+        barrier_latency_s: 50e-3, // per-stage scheduling
+        per_msg_overhead_s: 2e-6, // JVM serialization
+        ..Default::default()
+    }
+}
+
+/// Load the PJRT kernels if artifacts are built.
+pub fn load_pjrt(k_max: usize) -> Option<quegel::runtime::minplus::PjrtMinPlus> {
+    let rt = quegel::runtime::Runtime::cpu().ok()?;
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    quegel::runtime::minplus::PjrtMinPlus::load(&rt, dir, k_max).ok()
+}

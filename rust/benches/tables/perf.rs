@@ -1,0 +1,76 @@
+//! §Perf micro-benchmarks: wall-clock cost of the engine hot paths, used by
+//! the optimization pass (EXPERIMENTS.md §Perf). Not a paper table.
+
+use quegel::apps::ppsp::{Bfs, BiBfs};
+use quegel::coordinator::Engine;
+use quegel::graph::gen;
+use quegel::metrics::Table;
+use quegel::network::Cluster;
+use std::time::Instant;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(f64::total_cmp);
+    xs[xs.len() / 2]
+}
+
+pub fn run() {
+    let mut g = gen::twitter_like(100_000, 10, 433);
+    g.ensure_in_edges();
+    let n = g.num_vertices();
+    let queries = gen::random_pairs(n, 64, 434);
+
+    let mut t = Table::new(vec![
+        "workload",
+        "median wall",
+        "compute calls",
+        "calls/us",
+    ]);
+
+    // Engine throughput: BFS batch (dense frontier — state-table bound).
+    for (name, cap) in [("bfs batch C=8", 8usize), ("bfs serial C=1", 1)] {
+        let mut times = Vec::new();
+        let mut calls = 0;
+        for _ in 0..3 {
+            let mut eng = Engine::new(Bfs::new(&g), Cluster::new(8), n).capacity(cap);
+            for &q in &queries {
+                eng.submit(q);
+            }
+            let t0 = Instant::now();
+            eng.run_until_idle();
+            times.push(t0.elapsed().as_secs_f64());
+            calls = eng.metrics().total_compute_calls;
+        }
+        let m = median(times);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1} ms", m * 1e3),
+            calls.to_string(),
+            format!("{:.1}", calls as f64 / (m * 1e6)),
+        ]);
+    }
+
+    // BiBFS batch (combiner-heavy).
+    let mut times = Vec::new();
+    let mut calls = 0;
+    for _ in 0..3 {
+        let mut eng = Engine::new(BiBfs::new(&g), Cluster::new(8), n).capacity(8);
+        for &q in &queries {
+            eng.submit(q);
+        }
+        let t0 = Instant::now();
+        eng.run_until_idle();
+        times.push(t0.elapsed().as_secs_f64());
+        calls = eng.metrics().total_compute_calls;
+    }
+    let m = median(times);
+    t.row(vec![
+        "bibfs batch C=8".to_string(),
+        format!("{:.1} ms", m * 1e3),
+        calls.to_string(),
+        format!("{:.1}", calls as f64 / (m * 1e6)),
+    ]);
+
+    println!("{}", t.render());
+    println!("target: > 2 compute calls / us in the batch path (see");
+    println!("EXPERIMENTS.md §Perf for the iteration log).");
+}

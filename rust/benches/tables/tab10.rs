@@ -1,0 +1,77 @@
+//! Tables 9 & 10: terrain shortest-path queries — Chen–Han stand-in vs the
+//! Quegel ε-network SSSP on Eagle-like and Bear-like fractal DEMs; query
+//! ladder Q1..Q8 at 2^2..2^9 cells along the diagonal.
+
+use quegel::apps::terrain::baseline::{hausdorff, ChResult, ChenHanStandIn};
+use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
+use quegel::coordinator::Engine;
+use quegel::metrics::{fmt_pct, fmt_secs, Table};
+
+fn run_dataset(name: &str, width: usize, height: usize, seed: u64) {
+    let dem = Dem::fractal(width, height, 10.0, 250.0, seed);
+    println!(
+        "{name}: mesh {}x{}, |F| = {} (paper Tab 9)",
+        width,
+        height,
+        dem.tin_faces()
+    );
+    let net = TerrainNet::build(&dem, 2.0);
+    println!(
+        "eps-network: |V| = {}, |E| = {}",
+        net.graph.num_vertices(),
+        net.graph.num_edges()
+    );
+    let ch = ChenHanStandIn::new(&dem);
+    let cluster = super::paper_cluster();
+
+    let mut t = Table::new(vec![
+        "Q", "CH time", "CH len", "Qg time", "Step", "Access", "Qg len", "HDist",
+    ]);
+    for (qi, exp) in (2..=9).enumerate() {
+        let d = 1usize << exp;
+        if d >= width.min(height) {
+            // Destination beyond the mesh: clamp to the far corner once.
+            if d / 2 >= width.min(height) {
+                continue;
+            }
+        }
+        let (tx, ty) = (d.min(width - 1), d.min(height - 1));
+        let s = net.corner(0, 0);
+        let tt = net.corner(tx, ty);
+        let mut eng =
+            Engine::new(TerrainSssp::new(&net), cluster.clone(), net.graph.num_vertices());
+        let r = eng.run_one((s, tt));
+        let (ch_time, ch_len, hd) = match ch.query(0, 0, tx, ty) {
+            ChResult::Ok {
+                len,
+                modeled_secs,
+                path,
+            } => (
+                fmt_secs(modeled_secs),
+                format!("{len:.1} m"),
+                format!("{:.2} m", hausdorff(&r.out.path, &path)),
+            ),
+            ChResult::Oom => ("-".into(), "-".into(), "-".into()),
+        };
+        t.row(vec![
+            format!("Q{}", qi + 1),
+            ch_time,
+            ch_len,
+            fmt_secs(r.stats.processing()),
+            r.stats.supersteps.to_string(),
+            fmt_pct(r.stats.access_rate),
+            format!("{:.1} m", r.out.dist),
+            hd,
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+pub fn run() {
+    run_dataset("Eagle-like", 101, 140, 421);
+    run_dataset("Bear-like", 97, 140, 423);
+    println!("expected shape (paper Tab 10): CH time explodes then OOMs as");
+    println!("distance grows; Quegel stays sub-linear with small access for");
+    println!("close pairs (early termination); lengths agree within a few %");
+    println!("and HDist stays at meter scale.");
+}

@@ -1,0 +1,80 @@
+//! Table 11: P2P reachability — label indexing (level / yes / no, with the
+//! level-aligned vs simple ablation) and 1000 queries on a Twitter-like
+//! cyclic graph and a WebUK-like deep layered graph.
+
+use quegel::apps::reach::{build_labels, condense, ReachQuery};
+use quegel::coordinator::Engine;
+use quegel::graph::{gen, Graph};
+use quegel::metrics::{fmt_pct, fmt_secs, Table};
+
+fn run_dataset(name: &str, g: Graph, seed: u64) {
+    let n = g.num_vertices();
+    let cond = condense(&g);
+    let mut dag = cond.dag.clone();
+    dag.ensure_in_edges();
+    println!(
+        "{name}: |V| = {n}, |E| = {}, |V_DAG| = {}, |E_DAG| = {}",
+        g.num_edges(),
+        dag.num_vertices(),
+        dag.num_edges()
+    );
+    let cluster = super::paper_cluster();
+
+    // ---- Indexing (level-aligned + simple ablation).
+    let (labels, st_aligned) = build_labels(&dag, &cluster, true);
+    let (_, st_simple) = build_labels(&dag, &cluster, false);
+    let mut it = Table::new(vec!["label", "Compute (aligned)", "Compute (simple)"]);
+    it.row(vec![
+        format!("level ({} supersteps)", st_aligned.level_supersteps),
+        fmt_secs(st_aligned.level_time),
+        fmt_secs(st_simple.level_time),
+    ]);
+    it.row(vec![
+        "yes-label".into(),
+        fmt_secs(st_aligned.yes_time),
+        fmt_secs(st_simple.yes_time),
+    ]);
+    it.row(vec![
+        "no-label".into(),
+        fmt_secs(st_aligned.no_time),
+        fmt_secs(st_simple.no_time),
+    ]);
+    println!("{}", it.render());
+
+    // ---- 1000 queries.
+    let queries = gen::random_pairs(n, 1_000, seed);
+    let mut eng = Engine::new(ReachQuery::new(&dag, &labels), cluster, dag.num_vertices())
+        .capacity(8);
+    for &(s, t) in &queries {
+        eng.submit((cond.scc_of[s as usize], cond.scc_of[t as usize]));
+    }
+    eng.run_until_idle();
+    let access: f64 =
+        eng.results().iter().map(|r| r.stats.access_rate).sum::<f64>() / queries.len() as f64;
+    let reach = eng.results().iter().filter(|r| r.out).count();
+    let mut qt = Table::new(vec!["Query (sim)", "avg/query", "Access", "reach rate"]);
+    qt.row(vec![
+        fmt_secs(eng.sim_time()),
+        fmt_secs(eng.sim_time() / 1_000.0),
+        fmt_pct(access),
+        fmt_pct(reach as f64 / 1_000.0),
+    ]);
+    println!("{}", qt.render());
+}
+
+pub fn run() {
+    run_dataset(
+        "Twitter-like (cyclic)",
+        gen::web_cyclic(100_000, 40, 4, 425),
+        426,
+    );
+    run_dataset(
+        "WebUK-like (deep)",
+        gen::web_cyclic(100_000, 500, 3, 427),
+        428,
+    );
+    println!("expected shape (paper Tab 11): level computation dominates the");
+    println!("indexing, with far more supersteps on the deep web graph (2793");
+    println!("vs 23 in the paper); queries average well under a second with");
+    println!("sub-1% access.");
+}

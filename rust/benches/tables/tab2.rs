@@ -1,0 +1,69 @@
+//! Table 2: non-scalable systems on LiveJ-like — Neo4j-like / GraphChi-like
+//! / GraphX-like vs Quegel-Hub², 20 serial PPSP queries.
+
+use quegel::apps::ppsp::hub2::{Hub2Indexer, Hub2Query, MinPlus, RustMinPlus};
+use quegel::baselines;
+use quegel::coordinator::Engine;
+use quegel::graph::gen;
+use quegel::metrics::{fmt_pct, fmt_secs, Table};
+use quegel::network::Cluster;
+
+pub fn run() {
+    // LiveJ-like bipartite membership graph.
+    let users = 40_000;
+    let groups = 8_000;
+    let mut g = gen::livej_like(users, groups, 5, 403);
+    g.ensure_in_edges();
+    let n = g.num_vertices();
+    println!("LiveJ-like: |V| = {n}, |E| = {}", g.num_edges());
+    let queries = gen::random_pairs(n, 20, 404);
+
+    // Quegel with Hub^2 (undirected).
+    let mp = super::load_pjrt(128);
+    let mp_ref: &dyn MinPlus = mp.as_ref().map(|p| p as &dyn MinPlus).unwrap_or(&RustMinPlus);
+    let (idx, istats) = Hub2Indexer::new(64)
+        .undirected(true)
+        .build(&g, super::paper_cluster(), mp_ref);
+    println!(
+        "hub2 preprocessing: {} simulated (paper: 2912 s end-to-end)",
+        fmt_secs(istats.index_time)
+    );
+
+    // Neo4j-like: serial pointer chasing, ~0.3 ms per random edge access.
+    let neo = baselines::neo4j_like_ppsp(&g, &queries, 3e-4);
+    // GraphChi-like: full scan per superstep (BFS algorithm).
+    let chi = baselines::graphchi_like::<quegel::apps::ppsp::Bfs, _>(&g, &queries, || {
+        quegel::apps::ppsp::Bfs::new(&g)
+    });
+    // GraphX-like: distributed but with Spark stage overheads.
+    let gx_cluster = Cluster::with_cost(120, super::graphx_cost());
+    let gx = baselines::graphlab_like::<quegel::apps::ppsp::Bfs, _>(&g, &gx_cluster, &queries, || {
+        quegel::apps::ppsp::Bfs::new(&g)
+    });
+
+    let mut t = Table::new(vec![
+        "Q", "Neo4j-like", "GraphChi-like", "GraphX-like", "Quegel", "Access", "Reach",
+    ]);
+    let mut quegel_total = 0.0;
+    for (i, &(s, tt)) in queries.iter().enumerate() {
+        let dub = idx.dub_for(&[(s, tt)], mp_ref, 1, idx.k())[0];
+        let mut eng = Engine::new(Hub2Query::new(&g, &idx), super::paper_cluster(), n);
+        let r = eng.run_one((s, tt, dub));
+        quegel_total += r.stats.processing();
+        t.row(vec![
+            format!("Q{}", i + 1),
+            fmt_secs(neo[i].1),
+            fmt_secs(chi.results[i].stats.processing()),
+            fmt_secs(gx.results[i].stats.processing()),
+            fmt_secs(r.stats.processing()),
+            fmt_pct(r.stats.access_rate),
+            if r.out.is_some() { "y" } else { "X" }.to_string(),
+        ]);
+        assert_eq!(r.out.is_some(), neo[i].0.is_some(), "answers agree");
+    }
+    println!("{}", t.render());
+    println!(
+        "Quegel avg {}/query; paper: ~1 s/query on LiveJ, Neo4j minutes-hours",
+        fmt_secs(quegel_total / queries.len() as f64)
+    );
+}

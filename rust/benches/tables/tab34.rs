@@ -1,0 +1,110 @@
+//! Tables 3 & 4: cumulative load/query/dump time for 20 PPSP queries under
+//! Giraph-like / GraphLab-like / Quegel, with BFS and BiBFS, on the
+//! Twitter-like (Table 3) and BTC-like (Table 4) graphs.
+
+use quegel::apps::ppsp::{Bfs, BiBfs};
+use quegel::baselines;
+use quegel::coordinator::Engine;
+use quegel::graph::{gen, Graph};
+use quegel::metrics::{fmt_pct, fmt_secs, Table};
+
+fn run_dataset(name: &str, mut g: Graph, seed: u64) {
+    g.ensure_in_edges();
+    let n = g.num_vertices();
+    println!("{name}: |V| = {n}, |E| = {}", g.num_edges());
+    let queries = gen::random_pairs(n, 20, seed);
+    let cluster = super::paper_cluster();
+
+    let mut t = Table::new(vec![
+        "algo", "system", "Load", "Query", "Dump", "Access",
+    ]);
+
+    // ---- BFS variants.
+    let gi = baselines::giraph_like::<Bfs, _>(&g, &cluster, &queries, || Bfs::new(&g));
+    t.row(vec![
+        "BFS".into(),
+        "Giraph-like".into(),
+        fmt_secs(gi.load_time),
+        fmt_secs(gi.query_time),
+        fmt_secs(gi.dump_time),
+        fmt_pct(gi.access_rate),
+    ]);
+    let gl = baselines::graphlab_like::<Bfs, _>(&g, &cluster, &queries, || Bfs::new(&g));
+    t.row(vec![
+        "BFS".into(),
+        "GraphLab-like".into(),
+        fmt_secs(gl.load_time),
+        fmt_secs(gl.query_time),
+        fmt_secs(gl.dump_time),
+        fmt_pct(gl.access_rate),
+    ]);
+    // Quegel: one-off load; queries share supersteps (C = 8); results to
+    // console (no dump).
+    let mut eng = Engine::new(Bfs::new(&g), cluster.clone(), n).capacity(8);
+    eng.advance_clock(cluster.load_time(g.footprint_bytes()));
+    let load = eng.sim_time();
+    for &q in &queries {
+        eng.submit(q);
+    }
+    eng.run_until_idle();
+    let acc: f64 = eng.results().iter().map(|r| r.stats.access_rate).sum::<f64>() / 20.0;
+    t.row(vec![
+        "BFS".into(),
+        "Quegel".into(),
+        fmt_secs(load),
+        fmt_secs(eng.sim_time() - load),
+        "-".into(),
+        fmt_pct(acc),
+    ]);
+
+    // ---- BiBFS variants (loading costs more: Γ_in materialization).
+    let bi_bytes = g.footprint_bytes(); // includes in-edges already built
+    let gi = baselines::giraph_like::<BiBfs, _>(&g, &cluster, &queries, || BiBfs::new(&g));
+    t.row(vec![
+        "BiBFS".into(),
+        "Giraph-like".into(),
+        fmt_secs(gi.load_time),
+        fmt_secs(gi.query_time),
+        fmt_secs(gi.dump_time),
+        fmt_pct(gi.access_rate),
+    ]);
+    let gl = baselines::graphlab_like::<BiBfs, _>(&g, &cluster, &queries, || BiBfs::new(&g));
+    t.row(vec![
+        "BiBFS".into(),
+        "GraphLab-like".into(),
+        fmt_secs(gl.load_time),
+        fmt_secs(gl.query_time),
+        fmt_secs(gl.dump_time),
+        fmt_pct(gl.access_rate),
+    ]);
+    let mut eng = Engine::new(BiBfs::new(&g), cluster.clone(), n).capacity(8);
+    eng.advance_clock(cluster.load_time(bi_bytes));
+    let load = eng.sim_time();
+    for &q in &queries {
+        eng.submit(q);
+    }
+    eng.run_until_idle();
+    let acc: f64 = eng.results().iter().map(|r| r.stats.access_rate).sum::<f64>() / 20.0;
+    t.row(vec![
+        "BiBFS".into(),
+        "Quegel".into(),
+        fmt_secs(load),
+        fmt_secs(eng.sim_time() - load),
+        "-".into(),
+        fmt_pct(acc),
+    ]);
+
+    println!("{}", t.render());
+}
+
+pub fn run_twitter() {
+    run_dataset("Twitter-like", gen::twitter_like(100_000, 10, 405), 406);
+    println!("expected shape (paper Tab 3): Giraph load >> query; Quegel");
+    println!("query < GraphLab query; BiBFS access < BFS access.");
+}
+
+pub fn run_btc() {
+    run_dataset("BTC-like", gen::btc_like(120_000, 8_000, 5, 407), 408);
+    println!("expected shape (paper Tab 4): gap vs baselines grows (tiny");
+    println!("access rate); BFS access < BiBFS access (many small CCs).");
+}

@@ -1,0 +1,179 @@
+//! Tables 5 & 6: 1000 PPSP queries — Hub² indexing time (two hub budgets)
+//! and querying time/access for BFS / BiBFS / Hub² vs the GraphLab-like
+//! baseline.
+
+use quegel::apps::ppsp::hub2::{Hub2Index, Hub2Indexer, Hub2Query, MinPlus, RustMinPlus};
+use quegel::apps::ppsp::{Bfs, BiBfs};
+use quegel::coordinator::Engine;
+use quegel::graph::{gen, Graph};
+use quegel::metrics::{fmt_pct, fmt_secs, Table};
+
+struct QueryRow {
+    name: String,
+    load: f64,
+    query: f64,
+    access: f64,
+}
+
+fn quegel_run<A: quegel::vertex::QueryApp<Query = (u32, u32)>>(
+    app: A,
+    n: usize,
+    load_bytes: usize,
+    queries: &[(u32, u32)],
+    name: &str,
+) -> QueryRow {
+    let cluster = super::paper_cluster();
+    let mut eng = Engine::new(app, cluster.clone(), n).capacity(8);
+    eng.advance_clock(cluster.load_time(load_bytes));
+    let load = eng.sim_time();
+    for &q in queries {
+        eng.submit(q);
+    }
+    eng.run_until_idle();
+    let access: f64 =
+        eng.results().iter().map(|r| r.stats.access_rate).sum::<f64>() / queries.len() as f64;
+    QueryRow {
+        name: name.to_string(),
+        load,
+        query: eng.sim_time() - load,
+        access,
+    }
+}
+
+fn hub2_run(
+    g: &Graph,
+    idx: &Hub2Index,
+    mp: &dyn MinPlus,
+    queries: &[(u32, u32)],
+    name: &str,
+    k_pad: usize,
+) -> QueryRow {
+    let n = g.num_vertices();
+    let cluster = super::paper_cluster();
+    let load_bytes = g.footprint_bytes() + idx.footprint_bytes();
+    let mut eng = Engine::new(Hub2Query::new(g, idx), cluster.clone(), n).capacity(8);
+    eng.advance_clock(cluster.load_time(load_bytes));
+    let load = eng.sim_time();
+    let dubs = idx.dub_for(queries, mp, 8, k_pad);
+    for (&(s, t), &dub) in queries.iter().zip(&dubs) {
+        eng.submit((s, t, dub));
+    }
+    eng.run_until_idle();
+    let access: f64 =
+        eng.results().iter().map(|r| r.stats.access_rate).sum::<f64>() / queries.len() as f64;
+    QueryRow {
+        name: name.to_string(),
+        load,
+        query: eng.sim_time() - load,
+        access,
+    }
+}
+
+fn render(rows: &[QueryRow], queries: usize) {
+    let mut t = Table::new(vec!["system", "Load", "Query", "Access", "q/s (sim)"]);
+    for r in rows {
+        t.row(vec![
+            r.name.clone(),
+            fmt_secs(r.load),
+            fmt_secs(r.query),
+            fmt_pct(r.access),
+            format!("{:.1}", queries as f64 / r.query),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn run_dataset(name: &str, mut g: Graph, undirected: bool, seed: u64, hub_ks: &[usize]) {
+    g.ensure_in_edges();
+    let n = g.num_vertices();
+    println!("{name}: |V| = {n}, |E| = {}", g.num_edges());
+    let queries = gen::random_pairs(n, 1_000, seed);
+    let mp_pjrt = super::load_pjrt(256);
+    let mp: &dyn MinPlus = mp_pjrt
+        .as_ref()
+        .map(|p| p as &dyn MinPlus)
+        .unwrap_or(&RustMinPlus);
+
+    // ---- Indexing table (5a / 6a).
+    let mut itab = Table::new(vec!["hubs", "Index (sim)", "Closure (wall)"]);
+    let mut indexes = Vec::new();
+    for &k in hub_ks {
+        let (idx, st) = Hub2Indexer::new(k)
+            .undirected(undirected)
+            .build(&g, super::paper_cluster(), mp);
+        itab.row(vec![
+            format!("top-{k}"),
+            fmt_secs(st.index_time),
+            fmt_secs(st.closure_time),
+        ]);
+        indexes.push(idx);
+    }
+    println!("{}", itab.render());
+
+    // ---- Querying table (5b / 6b).
+    let mut rows = Vec::new();
+    rows.push(quegel_run(
+        Bfs::new(&g),
+        n,
+        g.footprint_bytes(),
+        &queries,
+        "Quegel BFS",
+    ));
+    rows.push(quegel_run(
+        BiBfs::new(&g),
+        n,
+        g.footprint_bytes(),
+        &queries,
+        "Quegel BiBFS",
+    ));
+    // GraphLab-like BiBFS baseline for the throughput ratio.
+    let gl = quegel::baselines::graphlab_like::<BiBfs, _>(
+        &g,
+        &super::paper_cluster(),
+        &queries,
+        || BiBfs::new(&g),
+    );
+    rows.push(QueryRow {
+        name: "GraphLab-like BiBFS".into(),
+        load: gl.load_time,
+        query: gl.query_time,
+        access: gl.access_rate,
+    });
+    let k_pad = mp_pjrt.as_ref().map(|p| p.k).unwrap_or(0);
+    for (idx, &k) in indexes.iter().zip(hub_ks) {
+        rows.push(hub2_run(
+            &g,
+            idx,
+            mp,
+            &queries,
+            &format!("Quegel Hub2 top-{k}"),
+            k_pad.max(idx.k()),
+        ));
+    }
+    render(&rows, queries.len());
+    let hub_best = rows.last().unwrap();
+    let ratio = gl.query_time / hub_best.query;
+    println!(
+        "Hub2 vs GraphLab-like throughput ratio: {ratio:.0}x (paper: 39x on Twitter, 68x on BTC)"
+    );
+}
+
+pub fn run_twitter() {
+    run_dataset(
+        "Twitter-like (1k queries)",
+        gen::twitter_like(100_000, 10, 409),
+        false,
+        410,
+        &[64, 128],
+    );
+}
+
+pub fn run_btc() {
+    run_dataset(
+        "BTC-like (1k queries)",
+        gen::btc_like(120_000, 8_000, 5, 411),
+        true,
+        412,
+        &[128],
+    );
+}

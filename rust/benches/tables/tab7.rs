@@ -1,0 +1,78 @@
+//! Table 7: (a) effect of the capacity parameter C on batch throughput;
+//! (b) horizontal scalability with the number of machines.
+
+use quegel::apps::ppsp::hub2::{Hub2Indexer, Hub2Query, MinPlus, RustMinPlus};
+use quegel::coordinator::Engine;
+use quegel::graph::gen;
+use quegel::metrics::{fmt_secs, Table};
+use quegel::network::Cluster;
+
+pub fn run_capacity() {
+    let mut g = gen::twitter_like(80_000, 10, 413);
+    g.ensure_in_edges();
+    let n = g.num_vertices();
+    let mp_pjrt = super::load_pjrt(128);
+    let mp: &dyn MinPlus = mp_pjrt
+        .as_ref()
+        .map(|p| p as &dyn MinPlus)
+        .unwrap_or(&RustMinPlus);
+    let (idx, _) = Hub2Indexer::new(128).build(&g, super::paper_cluster(), mp);
+    let queries = gen::random_pairs(n, 512, 414);
+    let k_pad = mp_pjrt.as_ref().map(|p| p.k).unwrap_or(idx.k());
+    let dubs = idx.dub_for(&queries, mp, 8, k_pad);
+
+    let mut t = Table::new(vec!["C", "Total_Query (sim)", "speedup vs C=1"]);
+    let mut t1 = 0.0;
+    for c in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        let mut eng =
+            Engine::new(Hub2Query::new(&g, &idx), super::paper_cluster(), n).capacity(c);
+        for (&(s, tt), &dub) in queries.iter().zip(&dubs) {
+            eng.submit((s, tt, dub));
+        }
+        eng.run_until_idle();
+        let total = eng.sim_time();
+        if c == 1 {
+            t1 = total;
+        }
+        t.row(vec![
+            c.to_string(),
+            fmt_secs(total),
+            format!("{:.2}x", t1 / total),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("expected shape (paper Tab 7a): C=8 ~3x over C=1, then flat");
+    println!("(bandwidth saturated).");
+}
+
+pub fn run_machines() {
+    let mut g = gen::twitter_like(80_000, 10, 415);
+    g.ensure_in_edges();
+    let n = g.num_vertices();
+    let queries = gen::random_pairs(n, 1_000, 416);
+    let mp_pjrt = super::load_pjrt(128);
+    let mp: &dyn MinPlus = mp_pjrt
+        .as_ref()
+        .map(|p| p as &dyn MinPlus)
+        .unwrap_or(&RustMinPlus);
+
+    let mut t = Table::new(vec!["# machines", "Total_Index (sim)", "Total_Query (sim)"]);
+    for machines in [8usize, 10, 12, 14] {
+        let cluster = Cluster::new(machines * 8);
+        let (idx, istats) = Hub2Indexer::new(128).build(&g, cluster.clone(), mp);
+        let k_pad = mp_pjrt.as_ref().map(|p| p.k).unwrap_or(idx.k());
+        let dubs = idx.dub_for(&queries, mp, 8, k_pad);
+        let mut eng = Engine::new(Hub2Query::new(&g, &idx), cluster, n).capacity(8);
+        for (&(s, tt), &dub) in queries.iter().zip(&dubs) {
+            eng.submit((s, tt, dub));
+        }
+        eng.run_until_idle();
+        t.row(vec![
+            machines.to_string(),
+            fmt_secs(istats.index_time),
+            fmt_secs(eng.sim_time()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("expected shape (paper Tab 7b): both times fall as machines grow.");
+}

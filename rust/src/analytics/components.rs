@@ -1,0 +1,144 @@
+//! Connected components (undirected) via min-label propagation — the
+//! HashMin Pregel algorithm, as a Quegel job.
+
+use crate::graph::{Graph, VertexId};
+use crate::vertex::{Ctx, QueryApp};
+
+pub struct ConnectedComponents<'g> {
+    g: &'g Graph,
+}
+
+impl<'g> ConnectedComponents<'g> {
+    /// `g` must store both arcs of every undirected edge.
+    pub fn new(g: &'g Graph) -> Self {
+        Self { g }
+    }
+}
+
+impl<'g> QueryApp for ConnectedComponents<'g> {
+    type Query = ();
+    /// Current component label (min vertex id seen).
+    type VQ = VertexId;
+    type Msg = VertexId;
+    type Agg = ();
+    /// (vertex, component label) for every vertex.
+    type Out = Vec<(VertexId, VertexId)>;
+
+    fn init_activate(&self, _q: &()) -> Vec<VertexId> {
+        (0..self.g.num_vertices() as VertexId).collect()
+    }
+
+    fn init_value(&self, _q: &(), v: VertexId) -> VertexId {
+        v
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, label: &mut VertexId) {
+        let mut best = *label;
+        if ctx.superstep() == 1 {
+            // Adopt the smallest neighbor id immediately (saves one round).
+            for &u in self.g.out(v) {
+                best = best.min(u);
+            }
+        } else {
+            for &m in ctx.msgs() {
+                best = best.min(m);
+            }
+        }
+        if best < *label || ctx.superstep() == 1 {
+            *label = best;
+            for &u in self.g.out(v) {
+                if u != best {
+                    ctx.send(u, best);
+                }
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    /// Min-combiner.
+    fn combine(&self, into: &mut VertexId, from: &VertexId) -> bool {
+        *into = (*into).min(*from);
+        true
+    }
+
+    fn finish(
+        &self,
+        _q: &(),
+        touched: &mut dyn Iterator<Item = (VertexId, &VertexId)>,
+        _agg: &(),
+    ) -> Self::Out {
+        let mut out: Vec<(VertexId, VertexId)> = touched.map(|(v, &l)| (v, l)).collect();
+        out.sort_unstable_by_key(|&(v, _)| v);
+        out
+    }
+
+    fn msg_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Serial union-find oracle.
+pub fn components_oracle(g: &Graph) -> Vec<VertexId> {
+    let n = g.num_vertices();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(parent: &mut [u32], x: u32) -> u32 {
+        let mut root = x;
+        while parent[root as usize] != root {
+            root = parent[root as usize];
+        }
+        let mut cur = x;
+        while parent[cur as usize] != root {
+            let next = parent[cur as usize];
+            parent[cur as usize] = root;
+            cur = next;
+        }
+        root
+    }
+    for u in 0..n as u32 {
+        for &v in g.out(u) {
+            let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+            if ru != rv {
+                parent[ru.max(rv) as usize] = ru.min(rv);
+            }
+        }
+    }
+    // Normalize: label = min member id of the component.
+    let mut label = vec![0u32; n];
+    for v in 0..n as u32 {
+        label[v as usize] = find(&mut parent, v);
+    }
+    label
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Engine;
+    use crate::graph::gen;
+    use crate::network::Cluster;
+
+    #[test]
+    fn matches_union_find() {
+        let g = gen::btc_like(600, 60, 4, 511);
+        let want = components_oracle(&g);
+        let mut eng = Engine::new(ConnectedComponents::new(&g), Cluster::new(4), 600)
+            .max_supersteps(1_000);
+        let got = eng.run_one(()).out;
+        for (v, l) in got {
+            assert_eq!(l, want[v as usize], "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn single_component_on_connected_graph() {
+        let g = gen::livej_like(300, 60, 4, 512);
+        let mut eng = Engine::new(ConnectedComponents::new(&g), Cluster::new(4), 360)
+            .max_supersteps(1_000);
+        let got = eng.run_one(()).out;
+        let want = components_oracle(&g);
+        let n_components: std::collections::HashSet<u32> = want.iter().copied().collect();
+        let got_components: std::collections::HashSet<u32> =
+            got.iter().map(|&(_, l)| l).collect();
+        assert_eq!(got_components.len(), n_components.len());
+    }
+}

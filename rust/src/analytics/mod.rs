@@ -1,0 +1,15 @@
+//! Pregel-compatibility mode: classic whole-graph analytics expressed as
+//! single-"query" Quegel jobs (the paper's second `Worker` class, used e.g.
+//! for the reachability label preprocessing).
+//!
+//! These demonstrate that the query-centric engine subsumes the original
+//! Pregel programming model: a job is just a query whose `init_activate`
+//! returns every (relevant) vertex.
+
+pub mod components;
+pub mod pagerank;
+pub mod sssp;
+
+pub use components::ConnectedComponents;
+pub use pagerank::PageRank;
+pub use sssp::WeightedSssp;

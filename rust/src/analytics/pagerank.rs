@@ -1,0 +1,209 @@
+//! PageRank as a Quegel job (Pregel's canonical example, paper §1).
+//!
+//! Runs a fixed number of iterations; the aggregator tracks the L1 delta
+//! between consecutive iterations so the master can stop early once the
+//! ranks converge. Dangling-vertex mass is redistributed uniformly via the
+//! aggregator (the standard correction).
+
+use crate::graph::{Graph, VertexId};
+use crate::vertex::{Ctx, MasterAction, QueryApp};
+
+/// Aggregator: this superstep's L1 delta + dangling mass collected.
+#[derive(Debug, Clone, Default)]
+pub struct PrAgg {
+    pub l1_delta: f64,
+    pub dangling: f64,
+}
+
+/// PageRank job. The "query" is the iteration/convergence config.
+#[derive(Debug, Clone, Copy)]
+pub struct PrConfig {
+    pub damping: f64,
+    pub max_iters: u64,
+    pub tol: f64,
+}
+
+impl Default for PrConfig {
+    fn default() -> Self {
+        Self {
+            damping: 0.85,
+            max_iters: 50,
+            tol: 1e-7,
+        }
+    }
+}
+
+pub struct PageRank<'g> {
+    g: &'g Graph,
+}
+
+impl<'g> PageRank<'g> {
+    pub fn new(g: &'g Graph) -> Self {
+        Self { g }
+    }
+
+    fn n(&self) -> f64 {
+        self.g.num_vertices() as f64
+    }
+}
+
+impl<'g> QueryApp for PageRank<'g> {
+    type Query = PrConfig;
+    /// Current rank.
+    type VQ = f64;
+    /// Rank contribution.
+    type Msg = f64;
+    type Agg = PrAgg;
+    /// (vertex, rank) for every vertex.
+    type Out = Vec<(VertexId, f64)>;
+
+    fn init_activate(&self, _q: &PrConfig) -> Vec<VertexId> {
+        (0..self.g.num_vertices() as VertexId).collect()
+    }
+
+    fn init_value(&self, _q: &PrConfig, _v: VertexId) -> f64 {
+        1.0 / self.n()
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, rank: &mut f64) {
+        let cfg = *ctx.query();
+        let step = ctx.superstep();
+        if step > 1 {
+            // Incorporate contributions (+ dangling mass from the previous
+            // superstep, uniformly redistributed).
+            let incoming: f64 = ctx.msgs().iter().sum();
+            let dangling = ctx.agg_prev().dangling / self.n();
+            let new_rank = (1.0 - cfg.damping) / self.n() + cfg.damping * (incoming + dangling);
+            let delta = (new_rank - *rank).abs();
+            ctx.aggregate(|_, a| a.l1_delta += delta);
+            *rank = new_rank;
+        }
+        let deg = self.g.out_degree(v);
+        if deg > 0 {
+            let share = *rank / deg as f64;
+            for &u in self.g.out(v) {
+                ctx.send(u, share);
+            }
+        } else {
+            let r = *rank;
+            ctx.aggregate(|_, a| a.dangling += r);
+        }
+        // PageRank never halts; the master stops the job.
+    }
+
+    /// Sum-combiner.
+    fn combine(&self, into: &mut f64, from: &f64) -> bool {
+        *into += *from;
+        true
+    }
+
+    fn master_step(
+        &self,
+        q: &PrConfig,
+        step: u64,
+        _prev: &PrAgg,
+        cur: &mut PrAgg,
+    ) -> MasterAction {
+        if step >= q.max_iters || (step > 2 && cur.l1_delta < q.tol) {
+            return MasterAction::Terminate;
+        }
+        MasterAction::Continue
+    }
+
+    fn finish(
+        &self,
+        _q: &PrConfig,
+        touched: &mut dyn Iterator<Item = (VertexId, &f64)>,
+        _agg: &PrAgg,
+    ) -> Self::Out {
+        let mut out: Vec<(VertexId, f64)> = touched.map(|(v, &r)| (v, r)).collect();
+        out.sort_unstable_by_key(|&(v, _)| v);
+        out
+    }
+
+    fn msg_bytes(&self) -> usize {
+        8
+    }
+}
+
+/// Serial oracle: power iteration with the same dangling correction.
+pub fn pagerank_oracle(g: &Graph, cfg: PrConfig) -> Vec<f64> {
+    let n = g.num_vertices();
+    let mut rank = vec![1.0 / n as f64; n];
+    for _ in 0..cfg.max_iters {
+        let mut next = vec![(1.0 - cfg.damping) / n as f64; n];
+        let mut dangling = 0.0;
+        for v in 0..n {
+            let deg = g.out_degree(v as VertexId);
+            if deg == 0 {
+                dangling += rank[v];
+            } else {
+                let share = cfg.damping * rank[v] / deg as f64;
+                for &u in g.out(v as VertexId) {
+                    next[u as usize] += share;
+                }
+            }
+        }
+        let spread = cfg.damping * dangling / n as f64;
+        for r in &mut next {
+            *r += spread;
+        }
+        let delta: f64 = rank.iter().zip(&next).map(|(a, b)| (a - b).abs()).sum();
+        rank = next;
+        if delta < cfg.tol {
+            break;
+        }
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Engine;
+    use crate::graph::gen;
+    use crate::network::Cluster;
+
+    #[test]
+    fn matches_power_iteration() {
+        let g = gen::twitter_like(500, 5, 501);
+        let cfg = PrConfig {
+            max_iters: 30,
+            ..Default::default()
+        };
+        let want = pagerank_oracle(&g, cfg);
+        let mut eng = Engine::new(PageRank::new(&g), Cluster::new(4), 500).max_supersteps(100);
+        let got = eng.run_one(cfg).out;
+        assert_eq!(got.len(), 500);
+        for (v, r) in got {
+            assert!(
+                (r - want[v as usize]).abs() < 1e-6,
+                "v={v}: {r} vs {}",
+                want[v as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn ranks_sum_to_one() {
+        let g = gen::btc_like(400, 40, 4, 502);
+        let mut eng = Engine::new(PageRank::new(&g), Cluster::new(4), 400).max_supersteps(100);
+        let got = eng.run_one(PrConfig::default()).out;
+        let total: f64 = got.iter().map(|&(_, r)| r).sum();
+        assert!((total - 1.0).abs() < 1e-6, "sum = {total}");
+    }
+
+    #[test]
+    fn hubs_rank_higher() {
+        let mut g = gen::twitter_like(2_000, 8, 503);
+        g.ensure_in_edges();
+        let mut eng = Engine::new(PageRank::new(&g), Cluster::new(4), 2_000).max_supersteps(100);
+        let got = eng.run_one(PrConfig::default()).out;
+        // The highest in-degree vertex must out-rank the median vertex.
+        let hub = (0..2_000u32).max_by_key(|&v| g.in_degree(v)).unwrap();
+        let hub_rank = got[hub as usize].1;
+        let mut ranks: Vec<f64> = got.iter().map(|&(_, r)| r).collect();
+        ranks.sort_by(f64::total_cmp);
+        assert!(hub_rank > ranks[1_000] * 5.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Generic weighted single-source shortest paths (Pregel's SSSP example),
+//! usable on any weighted graph.
+
+use crate::graph::{Graph, VertexId};
+use crate::vertex::{Ctx, QueryApp};
+
+pub struct WeightedSssp<'g> {
+    g: &'g Graph,
+}
+
+impl<'g> WeightedSssp<'g> {
+    pub fn new(g: &'g Graph) -> Self {
+        assert!(g.weighted(), "WeightedSssp requires edge weights");
+        Self { g }
+    }
+}
+
+impl<'g> QueryApp for WeightedSssp<'g> {
+    /// Source vertex.
+    type Query = VertexId;
+    /// Tentative distance.
+    type VQ = f64;
+    type Msg = f64;
+    type Agg = ();
+    /// (vertex, distance) for every reached vertex.
+    type Out = Vec<(VertexId, f64)>;
+
+    fn init_activate(&self, s: &VertexId) -> Vec<VertexId> {
+        vec![*s]
+    }
+
+    fn init_value(&self, s: &VertexId, v: VertexId) -> f64 {
+        if v == *s {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, d: &mut f64) {
+        let mut improved = ctx.superstep() == 1 && v == *ctx.query();
+        for &m in ctx.msgs() {
+            if m < *d {
+                *d = m;
+                improved = true;
+            }
+        }
+        if improved {
+            for (&u, &w) in self.g.out(v).iter().zip(self.g.out_w(v)) {
+                ctx.send(u, *d + w as f64);
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    /// Min-combiner.
+    fn combine(&self, into: &mut f64, from: &f64) -> bool {
+        *into = into.min(*from);
+        true
+    }
+
+    fn finish(
+        &self,
+        _q: &VertexId,
+        touched: &mut dyn Iterator<Item = (VertexId, &f64)>,
+        _agg: &(),
+    ) -> Self::Out {
+        let mut out: Vec<(VertexId, f64)> = touched
+            .filter(|(_, d)| d.is_finite())
+            .map(|(v, &d)| (v, d))
+            .collect();
+        out.sort_unstable_by_key(|&(v, _)| v);
+        out
+    }
+
+    fn msg_bytes(&self) -> usize {
+        8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::terrain::baseline::dijkstra;
+    use crate::coordinator::Engine;
+    use crate::graph::GraphBuilder;
+    use crate::network::Cluster;
+    use crate::util::Rng;
+
+    fn random_weighted(n: usize, deg: usize, seed: u64) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut b = GraphBuilder::new(n).undirected();
+        for u in 0..n - 1 {
+            b.wedge(u as u32, (u + 1) as u32, 1.0 + rng.f64() as f32 * 9.0);
+        }
+        for _ in 0..n * deg {
+            let u = rng.below_usize(n) as u32;
+            let v = rng.below_usize(n) as u32;
+            if u != v {
+                b.wedge(u, v, 1.0 + rng.f64() as f32 * 9.0);
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn matches_dijkstra() {
+        let g = random_weighted(300, 3, 521);
+        let (want, _) = dijkstra(&g, 7, None);
+        let mut eng = Engine::new(WeightedSssp::new(&g), Cluster::new(4), 300)
+            .max_supersteps(10_000);
+        let got = eng.run_one(7).out;
+        for (v, d) in got {
+            assert!(
+                (d - want[v as usize]).abs() < 1e-9,
+                "v={v}: {d} vs {}",
+                want[v as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn unreachable_vertices_not_reported() {
+        let mut b = GraphBuilder::new(4);
+        b.wedge(0, 1, 1.0);
+        b.wedge(2, 3, 1.0);
+        let g = b.build();
+        let mut eng = Engine::new(WeightedSssp::new(&g), Cluster::new(2), 4);
+        let got = eng.run_one(0).out;
+        let ids: Vec<u32> = got.iter().map(|&(v, _)| v).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Graph (RDF) keyword search (paper §5.5): RDF triples → adjacency
+//! representation, inverted keyword index, and the δ_max-bounded
+//! multi-source search with the four RDF message cases.
+
+pub mod data;
+pub mod query;
+
+pub use data::{RdfGenConfig, RdfGraph};
+pub use query::{GkwsQuery, KeywordSearch};

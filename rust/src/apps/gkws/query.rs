@@ -1,0 +1,359 @@
+//! The δ_max-bounded RDF keyword search query (paper §5.5).
+//!
+//! Each vertex maintains, per keyword k_i, its closest matching entity
+//! ⟨v_i, hop(v, v_i)⟩. Fields flow along *in*-edges (a root must reach its
+//! matches via out-edges). Superstep 1 applies the four RDF cases of
+//! Figure 8 (own text → ⟨v,0⟩; literal value/predicate → ⟨ℓ,1⟩; existing
+//! field; in-edge predicate → targeted ⟨v,0⟩); later supersteps relax and
+//! forward improved fields. After δ_max supersteps everything halts; any
+//! vertex with all m fields set is an answer root.
+
+use super::data::RdfGraph;
+use crate::graph::VertexId;
+use crate::vertex::{Ctx, MasterAction, QueryApp};
+
+/// Unset match-entity sentinel.
+pub const UNSET: VertexId = VertexId::MAX;
+
+/// Query content: keyword ids + the hop bound δ_max.
+#[derive(Debug, Clone)]
+pub struct GkwsQuery {
+    pub keywords: Vec<u32>,
+    pub delta_max: u32,
+}
+
+/// One per-keyword field ⟨v_i, hop⟩.
+pub type Field = (VertexId, u32);
+
+/// A result root: vertex + per-keyword (match, hop).
+pub type GkwsRoot = (VertexId, Vec<Field>);
+
+/// Keyword-search app over an [`RdfGraph`].
+pub struct KeywordSearch<'g> {
+    g: &'g RdfGraph,
+}
+
+impl<'g> KeywordSearch<'g> {
+    pub fn new(g: &'g RdfGraph) -> Self {
+        Self { g }
+    }
+
+    /// The four-case superstep-1 send logic for keyword `ki` at vertex `v`.
+    /// Returns the field v initializes for itself (if any); sends happen
+    /// through `send`: (destination, message).
+    fn step1_case(
+        &self,
+        v: VertexId,
+        k: u32,
+        send: &mut impl FnMut(VertexId, (u8, VertexId, u32)),
+        ki: u8,
+    ) -> Field {
+        let g = self.g;
+        // Case 1: own text matches — broadcast ⟨v, 0⟩.
+        if g.text[v as usize].contains(&k) {
+            for &(u, _) in &g.in_nbrs[v as usize] {
+                send(u, (ki, v, 0));
+            }
+            return (v, 0);
+        }
+        // Case 2: literal value or literal predicate — broadcast ⟨ℓ, 1⟩
+        // (the literal is one hop from v; we report v as the entity carrying
+        // it, at hop 1).
+        if g.literals[v as usize]
+            .iter()
+            .any(|(lw, p)| *p == k || lw.contains(&k))
+        {
+            for &(u, _) in &g.in_nbrs[v as usize] {
+                send(u, (ki, v, 1));
+            }
+            return (v, 1);
+        }
+        // Case 3 cannot apply at superstep 1 (no field yet).
+        // Case 4: in-edge predicate matches — targeted ⟨v, 0⟩ to that u.
+        for &(u, p) in &g.in_nbrs[v as usize] {
+            if p == k {
+                send(u, (ki, v, 0));
+            }
+        }
+        (UNSET, u32::MAX)
+    }
+}
+
+impl<'g> QueryApp for KeywordSearch<'g> {
+    type Query = GkwsQuery;
+    /// Per-keyword closest-match fields.
+    type VQ = Vec<Field>;
+    /// (keyword index, match entity, hop *at the sender*).
+    type Msg = (u8, VertexId, u32);
+    type Agg = ();
+    type Out = Vec<GkwsRoot>;
+
+    fn init_activate(&self, q: &GkwsQuery) -> Vec<VertexId> {
+        self.g.matching_vertices(&q.keywords)
+    }
+
+    fn init_value(&self, q: &GkwsQuery, _v: VertexId) -> Vec<Field> {
+        vec![(UNSET, u32::MAX); q.keywords.len()]
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, fields: &mut Vec<Field>) {
+        let q = ctx.query().clone();
+        if ctx.superstep() == 1 {
+            let mut staged: Vec<(VertexId, (u8, VertexId, u32))> = Vec::new();
+            for (i, &k) in q.keywords.iter().enumerate() {
+                let mut send = |dst: VertexId, m: (u8, VertexId, u32)| staged.push((dst, m));
+                let f = self.step1_case(v, k, &mut send, i as u8);
+                if f.0 != UNSET {
+                    fields[i] = f;
+                }
+            }
+            for (dst, m) in staged {
+                ctx.send(dst, m);
+            }
+            ctx.vote_halt();
+            return;
+        }
+        // Relaxation: receiving ⟨x, h⟩ from an out-neighbor means x is
+        // h + 1 hops from here.
+        let mut improved: Vec<u8> = Vec::new();
+        for &(ki, x, h) in ctx.msgs() {
+            let cand = h + 1;
+            let f = &mut fields[ki as usize];
+            if cand < f.1 {
+                *f = (x, cand);
+                improved.push(ki);
+            }
+        }
+        improved.sort_unstable();
+        improved.dedup();
+        for ki in improved {
+            let (x, h) = fields[ki as usize];
+            if h < q.delta_max {
+                // Forward only while the next hop stays within δ_max.
+                for &(u, _) in &self.g.in_nbrs[v as usize] {
+                    ctx.send(u, (ki, x, h));
+                }
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    /// Min-hop combiner per keyword: since messages for different keywords
+    /// must coexist, only combine equal-keyword messages.
+    fn combine(&self, into: &mut (u8, VertexId, u32), from: &(u8, VertexId, u32)) -> bool {
+        if into.0 == from.0 {
+            if from.2 < into.2 {
+                *into = *from;
+            }
+            return true;
+        }
+        false
+    }
+
+    fn master_step(&self, q: &GkwsQuery, step: u64, _prev: &(), _cur: &mut ()) -> MasterAction {
+        if step >= q.delta_max as u64 + 1 {
+            // δ_max propagation supersteps have run; stop everything.
+            return MasterAction::Terminate;
+        }
+        MasterAction::Continue
+    }
+
+    fn finish(
+        &self,
+        q: &GkwsQuery,
+        touched: &mut dyn Iterator<Item = (VertexId, &Vec<Field>)>,
+        _agg: &(),
+    ) -> Vec<GkwsRoot> {
+        let mut out: Vec<GkwsRoot> = Vec::new();
+        for (v, fields) in touched {
+            if fields.iter().all(|f| f.0 != UNSET && f.1 <= q.delta_max) {
+                out.push((v, fields.clone()));
+            }
+        }
+        out.sort_unstable_by_key(|r| r.0);
+        out
+    }
+
+    fn msg_bytes(&self) -> usize {
+        9
+    }
+}
+
+/// Serial oracle: simulate the same BSP rounds without the engine (used by
+/// tests to validate routing/combining/termination in the engine path).
+pub fn oracle(g: &RdfGraph, q: &GkwsQuery) -> Vec<GkwsRoot> {
+    let n = g.len();
+    let m = q.keywords.len();
+    let mut fields = vec![vec![(UNSET, u32::MAX); m]; n];
+    // (dst, ki, entity, hop-at-sender)
+    let mut inbox: Vec<(VertexId, u8, VertexId, u32)> = Vec::new();
+    let ks = KeywordSearch::new(g);
+    for v in g.matching_vertices(&q.keywords) {
+        for (i, &k) in q.keywords.iter().enumerate() {
+            let mut send =
+                |dst: VertexId, msg: (u8, VertexId, u32)| inbox.push((dst, msg.0, msg.1, msg.2));
+            let f = ks.step1_case(v, k, &mut send, i as u8);
+            if f.0 != UNSET {
+                fields[v as usize][i as usize] = f;
+            }
+        }
+    }
+    for _step in 2..=(q.delta_max as usize + 1) {
+        let mut next = Vec::new();
+        let mut improved: Vec<(VertexId, u8)> = Vec::new();
+        for (dst, ki, x, h) in inbox.drain(..) {
+            let cand = h + 1;
+            let f = &mut fields[dst as usize][ki as usize];
+            if cand < f.1 {
+                *f = (x, cand);
+                improved.push((dst, ki));
+            }
+        }
+        improved.sort_unstable();
+        improved.dedup();
+        for (v, ki) in improved {
+            let (x, h) = fields[v as usize][ki as usize];
+            if h < q.delta_max {
+                for &(u, _) in &g.in_nbrs[v as usize] {
+                    next.push((u, ki, x, h));
+                }
+            }
+        }
+        inbox = next;
+    }
+    let mut out: Vec<GkwsRoot> = fields
+        .into_iter()
+        .enumerate()
+        .filter(|(_, f)| f.iter().all(|x| x.0 != UNSET && x.1 <= q.delta_max))
+        .map(|(v, f)| (v as VertexId, f))
+        .collect();
+    out.sort_unstable_by_key(|r| r.0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::data::{generate, query_pool, RdfGenConfig};
+    use super::*;
+    use crate::coordinator::Engine;
+    use crate::network::Cluster;
+
+    fn small(seed: u64) -> RdfGraph {
+        generate(&RdfGenConfig {
+            resources: 400,
+            avg_deg: 3,
+            predicates: 15,
+            vocab: 80,
+            seed,
+        })
+    }
+
+    #[test]
+    fn distributed_matches_oracle() {
+        for seed in [101, 102] {
+            let g = small(seed);
+            for (m, dmax) in [(2usize, 3u32), (3, 3), (2, 2)] {
+                for kw in query_pool(&g, 8, m, seed + 7) {
+                    let q = GkwsQuery {
+                        keywords: kw,
+                        delta_max: dmax,
+                    };
+                    let want = oracle(&g, &q);
+                    let mut eng = Engine::new(KeywordSearch::new(&g), Cluster::new(4), g.len());
+                    let got = eng.run_one(q.clone()).out;
+                    // Hop values are unique; the matched *entity* may differ
+                    // at ties (message-order dependent, both answers valid).
+                    let project = |rs: &[GkwsRoot]| -> Vec<(VertexId, Vec<u32>)> {
+                        rs.iter()
+                            .map(|(v, f)| (*v, f.iter().map(|&(_, h)| h).collect()))
+                            .collect()
+                    };
+                    assert_eq!(project(&got), project(&want), "q={q:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn figure7_example() {
+        // Tom --supervises--> Peter --age--> "25"
+        let mut g = RdfGraph::default();
+        let supervises = g.intern("supervises");
+        let age = g.intern("age");
+        let tom_w = g.intern("tom");
+        let peter_w = g.intern("peter");
+        let lit25 = g.intern("25");
+        let tom = g.add_resource(vec![tom_w]);
+        let peter = g.add_resource(vec![peter_w]);
+        g.add_edge(tom, supervises, peter);
+        g.add_literal(peter, age, vec![lit25]);
+        g.build_inverted_index();
+
+        // Query {tom, 25}: root Tom covers "tom" at 0 and "25" at 2
+        // (Peter's literal, one hop to Peter + literal hop).
+        let q = GkwsQuery {
+            keywords: vec![tom_w, lit25],
+            delta_max: 3,
+        };
+        let mut eng = Engine::new(KeywordSearch::new(&g), Cluster::new(2), g.len());
+        let roots = eng.run_one(q).out;
+        let tom_root = roots.iter().find(|r| r.0 == tom).expect("tom is a root");
+        assert_eq!(tom_root.1[0], (tom, 0));
+        assert_eq!(tom_root.1[1], (peter, 2));
+    }
+
+    #[test]
+    fn delta_max_bounds_results() {
+        let g = small(103);
+        let kw = query_pool(&g, 1, 2, 104).pop().unwrap();
+        let tight = GkwsQuery {
+            keywords: kw.clone(),
+            delta_max: 1,
+        };
+        let loose = GkwsQuery {
+            keywords: kw,
+            delta_max: 4,
+        };
+        let mut e1 = Engine::new(KeywordSearch::new(&g), Cluster::new(4), g.len());
+        let r1 = e1.run_one(tight).out;
+        let mut e2 = Engine::new(KeywordSearch::new(&g), Cluster::new(4), g.len());
+        let r2 = e2.run_one(loose).out;
+        assert!(r1.len() <= r2.len(), "tighter bound must not add roots");
+        for (_, fields) in &r1 {
+            for f in fields {
+                assert!(f.1 <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn more_keywords_cost_more_access() {
+        // Table 12's trend: 3-keyword queries touch more than 2-keyword.
+        let g = small(105);
+        let q2 = query_pool(&g, 10, 2, 106);
+        let q3 = query_pool(&g, 10, 3, 106);
+        let mut t2 = 0u64;
+        let mut t3 = 0u64;
+        for kw in q2 {
+            let mut e = Engine::new(KeywordSearch::new(&g), Cluster::new(4), g.len());
+            t2 += e
+                .run_one(GkwsQuery {
+                    keywords: kw,
+                    delta_max: 3,
+                })
+                .stats
+                .touched;
+        }
+        for kw in q3 {
+            let mut e = Engine::new(KeywordSearch::new(&g), Cluster::new(4), g.len());
+            t3 += e
+                .run_one(GkwsQuery {
+                    keywords: kw,
+                    delta_max: 3,
+                })
+                .stats
+                .touched;
+        }
+        assert!(t3 > t2, "3-kw {t3} !> 2-kw {t2}");
+    }
+}

@@ -1,0 +1,14 @@
+//! The paper's five applications (§5), each written against the
+//! query-centric [`crate::vertex::QueryApp`] interface:
+//!
+//! * [`ppsp`]    — point-to-point shortest paths: BFS, BiBFS, Hub² (§5.1)
+//! * [`xml`]     — XML keyword search: SLCA / ELCA / MaxMatch (§5.2)
+//! * [`terrain`] — terrain shortest-path queries (§5.3)
+//! * [`reach`]   — P2P reachability with level/yes/no labels (§5.4)
+//! * [`gkws`]    — graph (RDF) keyword search (§5.5)
+
+pub mod gkws;
+pub mod ppsp;
+pub mod reach;
+pub mod terrain;
+pub mod xml;

@@ -1,0 +1,148 @@
+//! Plain BFS for PPSP queries (paper §5.1.1).
+//!
+//! `a_q(v)` is the current estimate of d(s, v); only `s` is activated
+//! initially; a vertex visited for the first time at superstep `i` sets
+//! d(s, v) = i - 1, broadcasts to its out-neighbors and halts. When the
+//! BFS reaches `t`, `t` calls `force_terminate()`.
+
+use super::{PpspQuery, UNREACHED};
+use crate::graph::{Graph, VertexId};
+use crate::vertex::{Ctx, QueryApp};
+
+/// BFS PPSP application. V-data = the graph's out-adjacency.
+pub struct Bfs<'g> {
+    g: &'g Graph,
+}
+
+impl<'g> Bfs<'g> {
+    pub fn new(g: &'g Graph) -> Self {
+        Self { g }
+    }
+}
+
+impl<'g> QueryApp for Bfs<'g> {
+    type Query = PpspQuery;
+    /// d(s, v) estimate.
+    type VQ = u32;
+    /// Pure activation: payload-free (distance is derived from the step).
+    type Msg = ();
+    type Agg = ();
+    /// `Some(d(s, t))` or `None` if unreachable.
+    type Out = Option<u32>;
+
+    fn init_activate(&self, q: &PpspQuery) -> Vec<VertexId> {
+        vec![q.0]
+    }
+
+    fn init_value(&self, q: &PpspQuery, v: VertexId) -> u32 {
+        if v == q.0 {
+            0
+        } else {
+            UNREACHED
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, d: &mut u32) {
+        let step = ctx.superstep();
+        let (_, t) = *ctx.query();
+        if step == 1 {
+            // v must be s (only s is in V_q^I).
+            if v == t {
+                ctx.force_terminate(); // s == t: d = 0 already recorded
+            }
+            for &u in self.g.out(v) {
+                ctx.send(u, ());
+            }
+            ctx.vote_halt();
+            return;
+        }
+        if *d == UNREACHED {
+            // First visit.
+            *d = (step - 1) as u32;
+            if v == t {
+                ctx.force_terminate();
+            } else {
+                for &u in self.g.out(v) {
+                    ctx.send(u, ());
+                }
+            }
+        }
+        // Already-visited vertices just halt.
+        ctx.vote_halt();
+    }
+
+    /// Activation messages are idempotent: combine everything into one.
+    fn combine(&self, _into: &mut (), _from: &()) -> bool {
+        true
+    }
+
+    fn finish(
+        &self,
+        q: &PpspQuery,
+        touched: &mut dyn Iterator<Item = (VertexId, &u32)>,
+        _agg: &(),
+    ) -> Option<u32> {
+        let t = q.1;
+        for (v, &d) in touched {
+            if v == t && d != UNREACHED {
+                return Some(d);
+            }
+        }
+        None
+    }
+
+    fn msg_bytes(&self) -> usize {
+        1 // activation flag on the wire
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::oracle;
+    use super::*;
+    use crate::coordinator::Engine;
+    use crate::graph::gen;
+    use crate::network::Cluster;
+
+    #[test]
+    fn bfs_matches_oracle_on_random_graph() {
+        let g = gen::twitter_like(500, 4, 11);
+        let app = Bfs::new(&g);
+        let mut eng = Engine::new(app, Cluster::new(4), g.num_vertices());
+        for (s, t) in gen::random_pairs(500, 10, 12) {
+            let want = oracle::bfs_dist(&g, s, t);
+            let got = eng.run_one((s, t)).out;
+            if want == UNREACHED {
+                assert_eq!(got, None, "({s},{t})");
+            } else {
+                assert_eq!(got, Some(want), "({s},{t})");
+            }
+        }
+    }
+
+    #[test]
+    fn self_query_is_zero() {
+        let g = gen::twitter_like(100, 3, 1);
+        let mut eng = Engine::new(Bfs::new(&g), Cluster::new(2), 100);
+        assert_eq!(eng.run_one((7, 7)).out, Some(0));
+    }
+
+    #[test]
+    fn early_termination_limits_access() {
+        // On a long path 0-1-2-...-99, query (0, 1) must touch far fewer
+        // vertices than the whole graph.
+        let mut b = crate::graph::GraphBuilder::new(100).undirected();
+        for i in 0..99u32 {
+            b.edge(i, i + 1);
+        }
+        let g = b.build();
+        let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), 100);
+        let r = eng.run_one((0, 1));
+        assert_eq!(r.out, Some(1));
+        assert!(
+            r.stats.touched < 10,
+            "force_terminate must stop the sweep, touched {}",
+            r.stats.touched
+        );
+    }
+}

@@ -1,0 +1,261 @@
+//! Bidirectional BFS for PPSP queries (paper §5.1.1).
+//!
+//! Forward BFS from `s` (out-edges) and backward BFS from `t` (in-edges)
+//! run in parallel with direction-tagged messages. `a_q(v)` keeps the pair
+//! (d(s,v), d(v,t)). When any vertex is bi-reached, it contributes
+//! d(s,v) + d(v,t) to the aggregator and force-terminates; the master takes
+//! the minimum over all bi-reached vertices (sums may be 2i-1 or 2i).
+//! The aggregator also counts messages per direction: if either direction
+//! sends none, the query stops with d = ∞ (the small-CC early stop).
+
+use super::{PpspQuery, UNREACHED};
+use crate::graph::{Graph, VertexId};
+use crate::vertex::{Ctx, MasterAction, QueryApp};
+
+/// Direction bitmask carried by messages.
+pub const FWD: u8 = 1;
+pub const BWD: u8 = 2;
+
+/// Per-vertex state: distances from s and to t.
+#[derive(Debug, Clone)]
+pub struct BiState {
+    pub ds: u32,
+    pub dt: u32,
+}
+
+/// Aggregator: best bi-reached sum + per-direction message counts.
+#[derive(Debug, Clone)]
+pub struct BiAgg {
+    pub best: u32,
+    pub fwd_sent: u64,
+    pub bwd_sent: u64,
+}
+
+impl Default for BiAgg {
+    fn default() -> Self {
+        Self {
+            best: UNREACHED,
+            fwd_sent: 0,
+            bwd_sent: 0,
+        }
+    }
+}
+
+/// Bidirectional BFS PPSP application. Requires `g.ensure_in_edges()`.
+pub struct BiBfs<'g> {
+    g: &'g Graph,
+}
+
+impl<'g> BiBfs<'g> {
+    pub fn new(g: &'g Graph) -> Self {
+        assert!(
+            g.has_in_edges(),
+            "BiBFS needs in-adjacency: call ensure_in_edges() first"
+        );
+        Self { g }
+    }
+
+    fn broadcast_fwd(&self, ctx: &mut Ctx<'_, Self>, v: VertexId) {
+        for &u in self.g.out(v) {
+            ctx.send(u, FWD);
+        }
+        let n = self.g.out(v).len() as u64;
+        ctx.aggregate(|_, a| a.fwd_sent += n);
+    }
+
+    fn broadcast_bwd(&self, ctx: &mut Ctx<'_, Self>, v: VertexId) {
+        for &u in self.g.inn(v) {
+            ctx.send(u, BWD);
+        }
+        let n = self.g.inn(v).len() as u64;
+        ctx.aggregate(|_, a| a.bwd_sent += n);
+    }
+}
+
+impl<'g> QueryApp for BiBfs<'g> {
+    type Query = PpspQuery;
+    type VQ = BiState;
+    /// Direction bitmask (FWD | BWD).
+    type Msg = u8;
+    type Agg = BiAgg;
+    type Out = Option<u32>;
+
+    fn init_activate(&self, q: &PpspQuery) -> Vec<VertexId> {
+        if q.0 == q.1 {
+            vec![q.0]
+        } else {
+            vec![q.0, q.1]
+        }
+    }
+
+    fn init_value(&self, q: &PpspQuery, v: VertexId) -> BiState {
+        BiState {
+            ds: if v == q.0 { 0 } else { UNREACHED },
+            dt: if v == q.1 { 0 } else { UNREACHED },
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, st: &mut BiState) {
+        let step = ctx.superstep();
+        let (s, t) = *ctx.query();
+        if step == 1 {
+            if s == t {
+                // d(s, t) = 0; report via aggregator.
+                ctx.aggregate(|_, a| a.best = 0);
+                ctx.force_terminate();
+                ctx.vote_halt();
+                return;
+            }
+            if v == s {
+                self.broadcast_fwd(ctx, v);
+            }
+            if v == t {
+                self.broadcast_bwd(ctx, v);
+            }
+            ctx.vote_halt();
+            return;
+        }
+        let mut mask = 0u8;
+        for &m in ctx.msgs() {
+            mask |= m;
+        }
+        let newly_fwd = mask & FWD != 0 && st.ds == UNREACHED;
+        let newly_bwd = mask & BWD != 0 && st.dt == UNREACHED;
+        if newly_fwd {
+            st.ds = (step - 1) as u32;
+        }
+        if newly_bwd {
+            st.dt = (step - 1) as u32;
+        }
+        if st.ds != UNREACHED && st.dt != UNREACHED && (newly_fwd || newly_bwd) {
+            // Bi-reached: contribute and stop the query at this barrier.
+            let sum = st.ds.saturating_add(st.dt);
+            ctx.aggregate(|_, a| a.best = a.best.min(sum));
+            ctx.force_terminate();
+            ctx.vote_halt();
+            return;
+        }
+        if newly_fwd {
+            self.broadcast_fwd(ctx, v);
+        }
+        if newly_bwd {
+            self.broadcast_bwd(ctx, v);
+        }
+        ctx.vote_halt();
+    }
+
+    /// Direction masks combine by OR.
+    fn combine(&self, into: &mut u8, from: &u8) -> bool {
+        *into |= *from;
+        true
+    }
+
+    fn agg_merge(&self, into: &mut BiAgg, from: &BiAgg) {
+        into.best = into.best.min(from.best);
+        into.fwd_sent += from.fwd_sent;
+        into.bwd_sent += from.bwd_sent;
+    }
+
+    fn master_step(
+        &self,
+        _q: &PpspQuery,
+        step: u64,
+        prev: &BiAgg,
+        agg: &mut BiAgg,
+    ) -> MasterAction {
+        agg.best = agg.best.min(prev.best);
+        if agg.best != UNREACHED {
+            return MasterAction::Terminate;
+        }
+        // Zero messages in either direction => that BFS is exhausted and no
+        // meeting point can exist (paper's disconnected-CC early stop).
+        if step >= 1 && (agg.fwd_sent == 0 || agg.bwd_sent == 0) {
+            return MasterAction::Terminate;
+        }
+        // Reset per-step message counters; keep best across steps.
+        agg.fwd_sent = 0;
+        agg.bwd_sent = 0;
+        MasterAction::Continue
+    }
+
+    fn finish(
+        &self,
+        _q: &PpspQuery,
+        _touched: &mut dyn Iterator<Item = (VertexId, &BiState)>,
+        agg: &BiAgg,
+    ) -> Option<u32> {
+        (agg.best != UNREACHED).then_some(agg.best)
+    }
+
+    fn msg_bytes(&self) -> usize {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::oracle;
+    use super::*;
+    use crate::coordinator::Engine;
+    use crate::graph::gen;
+    use crate::network::Cluster;
+
+    fn with_in(mut g: Graph) -> Graph {
+        g.ensure_in_edges();
+        g
+    }
+
+    #[test]
+    fn bibfs_matches_oracle_directed() {
+        let g = with_in(gen::twitter_like(400, 4, 21));
+        let mut eng = Engine::new(BiBfs::new(&g), Cluster::new(4), g.num_vertices());
+        for (s, t) in gen::random_pairs(400, 15, 22) {
+            let want = oracle::bfs_dist(&g, s, t);
+            let got = eng.run_one((s, t)).out;
+            assert_eq!(
+                got,
+                (want != UNREACHED).then_some(want),
+                "query ({s},{t}) want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn bibfs_matches_oracle_undirected_multi_cc() {
+        let g = with_in(gen::btc_like(600, 60, 4, 23));
+        let mut eng = Engine::new(BiBfs::new(&g), Cluster::new(3), g.num_vertices());
+        for (s, t) in gen::random_pairs(600, 15, 24) {
+            let want = oracle::bfs_dist(&g, s, t);
+            let got = eng.run_one((s, t)).out;
+            assert_eq!(got, (want != UNREACHED).then_some(want), "({s},{t})");
+        }
+    }
+
+    #[test]
+    fn self_query() {
+        let g = with_in(gen::twitter_like(50, 3, 2));
+        let mut eng = Engine::new(BiBfs::new(&g), Cluster::new(2), 50);
+        assert_eq!(eng.run_one((5, 5)).out, Some(0));
+    }
+
+    #[test]
+    fn small_cc_early_stop_bounds_supersteps() {
+        // s in a 3-vertex island, t in a long path: the zero-message early
+        // stop must fire quickly instead of sweeping t's component.
+        let mut b = crate::graph::GraphBuilder::new(103).undirected();
+        b.edge(100, 101);
+        b.edge(101, 102);
+        for i in 0..99u32 {
+            b.edge(i, i + 1);
+        }
+        let g = with_in(b.build());
+        let mut eng = Engine::new(BiBfs::new(&g), Cluster::new(2), 103);
+        let r = eng.run_one((100, 0));
+        assert_eq!(r.out, None);
+        assert!(
+            r.stats.supersteps < 10,
+            "early stop should bound supersteps, got {}",
+            r.stats.supersteps
+        );
+    }
+}

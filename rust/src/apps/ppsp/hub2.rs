@@ -1,0 +1,814 @@
+//! Hub²-Labeling for PPSP queries (paper §5.1.2).
+//!
+//! Hubs are the top-k highest-degree vertices. The index stores:
+//! * `hub_dist` — the k×k pairwise hub distance table `D_H`;
+//! * per-vertex core-hub labels: `L_out(v)` (exit-hubs `h` with `d(h, v)`)
+//!   and `L_in(v)` (entry-hubs `h` with `d(v, h)`). A hub `h` is a
+//!   core-hub of `v` iff no other hub lies on any shortest path between
+//!   them; for undirected graphs the two sides coincide.
+//!
+//! Indexing runs |H| BFS jobs *as Quegel queries* (superstep-shared), each
+//! propagating the paper's `pre_H` flag. The min-plus closure of `D_H` and
+//! the batched query upper bound `d_ub` are evaluated through the
+//! [`MinPlus`] trait — either the pure-rust fallback or the AOT-compiled
+//! Pallas kernel via PJRT (`crate::runtime::minplus`), which is the L1
+//! integration point on the query hot path.
+//!
+//! Querying: `d_ub = min_{h_s, h_t} d(s,h_s) + D_H[h_s,h_t] + d(h_t,t)`,
+//! then BiBFS restricted to non-hub vertices with the superstep cutoff
+//! `1 + floor(d_ub / 2)`.
+
+use super::bibfs::{BiAgg, BiState, BWD, FWD};
+use super::{PpspQuery, UNREACHED};
+use crate::coordinator::Engine;
+use crate::graph::{Graph, VertexId};
+use crate::metrics::EngineMetrics;
+use crate::network::Cluster;
+use crate::util::FxHashMap;
+use crate::vertex::{Ctx, MasterAction, QueryApp};
+
+/// f32 encoding of "unreachable" used by the kernels (2^31, matches
+/// python/compile/kernels/ref.py).
+pub const F_INF: f32 = 2_147_483_648.0;
+
+/// Convert a hop count to the kernel encoding.
+#[inline]
+pub fn to_f(d: u32) -> f32 {
+    if d == UNREACHED {
+        F_INF
+    } else {
+        d as f32
+    }
+}
+
+/// Convert back from the kernel encoding (clamps anything >= INF).
+#[inline]
+pub fn from_f(x: f32) -> u32 {
+    if x >= F_INF {
+        UNREACHED
+    } else {
+        x as u32
+    }
+}
+
+/// Tropical-algebra evaluator abstraction: pure-rust fallback or the
+/// PJRT-compiled Pallas kernel.
+pub trait MinPlus {
+    /// In-place min-plus closure of the `k×k` table `d` (repeated squaring
+    /// to fixpoint).
+    fn closure(&self, d: &mut [f32], k: usize);
+
+    /// Batched upper bound: for each query row `q` of the `c×k` tables,
+    /// `out[q] = min_{i,j} s[q*k+i] + d[i*k+j] + t[q*k+j]`.
+    fn dub_batch(&self, s: &[f32], d: &[f32], t: &[f32], c: usize, k: usize) -> Vec<f32>;
+}
+
+/// Pure-rust reference evaluator (used when artifacts are absent and by
+/// tests as the oracle for the PJRT path).
+pub struct RustMinPlus;
+
+impl MinPlus for RustMinPlus {
+    fn closure(&self, d: &mut [f32], k: usize) {
+        if k == 0 {
+            return;
+        }
+        let steps = (k as f64).log2().ceil() as usize + 1;
+        let mut cur = d.to_vec();
+        for _ in 0..steps.max(1) {
+            let mut next = cur.clone();
+            for i in 0..k {
+                for mid in 0..k {
+                    let dm = cur[i * k + mid];
+                    if dm >= F_INF {
+                        continue;
+                    }
+                    for j in 0..k {
+                        let cand = dm + cur[mid * k + j];
+                        if cand < next[i * k + j] {
+                            next[i * k + j] = cand;
+                        }
+                    }
+                }
+            }
+            if next == cur {
+                break;
+            }
+            cur = next;
+        }
+        d.copy_from_slice(&cur);
+    }
+
+    fn dub_batch(&self, s: &[f32], d: &[f32], t: &[f32], c: usize, k: usize) -> Vec<f32> {
+        (0..c)
+            .map(|q| {
+                let mut best = F_INF;
+                for i in 0..k {
+                    let si = s[q * k + i];
+                    if si >= F_INF {
+                        continue;
+                    }
+                    for j in 0..k {
+                        let cand = si + d[i * k + j] + t[q * k + j];
+                        if cand < best {
+                            best = cand;
+                        }
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+/// Hub selection criterion for directed graphs (paper: results similar;
+/// experiments report in-degree).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HubSelection {
+    InDegree,
+    OutDegree,
+    SumDegree,
+}
+
+/// The Hub² index.
+pub struct Hub2Index {
+    /// Hub vertex ids, rank order.
+    pub hubs: Vec<VertexId>,
+    /// vertex id -> hub rank.
+    pub hub_rank: FxHashMap<VertexId, u16>,
+    /// k×k pairwise hub distances (row i = from hub i), kernel encoding.
+    pub hub_dist: Vec<f32>,
+    /// L_in(v): entry-hub labels (h_rank, d(v, h)).
+    pub label_in: Vec<Vec<(u16, u32)>>,
+    /// L_out(v): exit-hub labels (h_rank, d(h, v)).
+    pub label_out: Vec<Vec<(u16, u32)>>,
+}
+
+impl Hub2Index {
+    /// Number of hubs.
+    pub fn k(&self) -> usize {
+        self.hubs.len()
+    }
+
+    /// True if `v` is a hub.
+    #[inline]
+    pub fn is_hub(&self, v: VertexId) -> bool {
+        self.hub_rank.contains_key(&v)
+    }
+
+    /// Entry-hub label row of `s` (d(s, h) per hub), padded to `k_pad`.
+    pub fn s_row(&self, s: VertexId, k_pad: usize) -> Vec<f32> {
+        let mut row = vec![F_INF; k_pad];
+        if let Some(&r) = self.hub_rank.get(&s) {
+            row[r as usize] = 0.0;
+        } else {
+            for &(h, d) in &self.label_in[s as usize] {
+                row[h as usize] = d as f32;
+            }
+        }
+        row
+    }
+
+    /// Exit-hub label row of `t` (d(h, t) per hub), padded to `k_pad`.
+    pub fn t_row(&self, t: VertexId, k_pad: usize) -> Vec<f32> {
+        let mut row = vec![F_INF; k_pad];
+        if let Some(&r) = self.hub_rank.get(&t) {
+            row[r as usize] = 0.0;
+        } else {
+            for &(h, d) in &self.label_out[t as usize] {
+                row[h as usize] = d as f32;
+            }
+        }
+        row
+    }
+
+    /// Pad `hub_dist` to `k_pad×k_pad` (kernel shapes are static); padding
+    /// rows/cols are INF with a 0 diagonal so they are inert.
+    pub fn padded_dist(&self, k_pad: usize) -> Vec<f32> {
+        let k = self.k();
+        assert!(k_pad >= k);
+        let mut d = vec![F_INF; k_pad * k_pad];
+        for i in 0..k {
+            d[i * k_pad..i * k_pad + k].copy_from_slice(&self.hub_dist[i * k..(i + 1) * k]);
+        }
+        for i in k..k_pad {
+            d[i * k_pad + i] = 0.0;
+        }
+        d
+    }
+
+    /// Compute d_ub for a batch of queries via the given evaluator,
+    /// padding each chunk to the evaluator-preferred batch width `c_pad`.
+    pub fn dub_for(
+        &self,
+        queries: &[PpspQuery],
+        mp: &dyn MinPlus,
+        c_pad: usize,
+        k_pad: usize,
+    ) -> Vec<u32> {
+        let k = k_pad.max(self.k());
+        let d = self.padded_dist(k);
+        let mut out = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(c_pad.max(1)) {
+            let c = c_pad.max(chunk.len());
+            let mut s = vec![F_INF; c * k];
+            let mut t = vec![F_INF; c * k];
+            for (qi, &(qs, qt)) in chunk.iter().enumerate() {
+                s[qi * k..(qi + 1) * k].copy_from_slice(&self.s_row(qs, k));
+                t[qi * k..(qi + 1) * k].copy_from_slice(&self.t_row(qt, k));
+            }
+            let dub = mp.dub_batch(&s, &d, &t, c, k);
+            for (qi, _) in chunk.iter().enumerate() {
+                out.push(from_f(dub[qi]));
+            }
+        }
+        out
+    }
+
+    /// Estimated index memory footprint in bytes (for load-time modeling).
+    pub fn footprint_bytes(&self) -> usize {
+        let labels: usize = self
+            .label_in
+            .iter()
+            .chain(self.label_out.iter())
+            .map(|l| l.len() * 6)
+            .sum();
+        self.hub_dist.len() * 4 + labels + self.hubs.len() * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Indexing: |H| BFS jobs run as Quegel queries with the pre_H flag.
+// ---------------------------------------------------------------------------
+
+/// Direction of a hub BFS pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Pass {
+    /// Forward BFS from h computes d(h, v) (exit-hub side, L_out).
+    Forward,
+    /// Backward BFS from h computes d(v, h) (entry-hub side, L_in).
+    Backward,
+}
+
+/// Per-vertex state of a hub BFS: (distance, pre_H flag).
+#[derive(Debug, Clone)]
+pub struct HubBfsState {
+    d: u32,
+    pre: bool,
+}
+
+/// The hub-BFS-as-a-query app (paper §5.1.2 "Algorithm for Indexing").
+struct HubBfs<'g> {
+    g: &'g Graph,
+    hubs: FxHashMap<VertexId, u16>,
+    pass: Pass,
+    /// Optional truncation radius: stop expanding past this distance and
+    /// let the min-plus closure complete D_H (fast-indexing mode).
+    radius: Option<u32>,
+}
+
+impl<'g> HubBfs<'g> {
+    fn nbrs(&self, v: VertexId) -> &[VertexId] {
+        match self.pass {
+            Pass::Forward => self.g.out(v),
+            Pass::Backward => self.g.inn(v),
+        }
+    }
+}
+
+impl<'g> QueryApp for HubBfs<'g> {
+    /// The hub vertex (query ⟨h⟩).
+    type Query = VertexId;
+    type VQ = HubBfsState;
+    /// TRUE iff the shortest path to the sender passes through another hub.
+    type Msg = bool;
+    type Agg = ();
+    /// All touched vertices with (v, d, pre): the "dump UDF" payload.
+    type Out = Vec<(VertexId, u32, bool)>;
+
+    fn init_activate(&self, h: &VertexId) -> Vec<VertexId> {
+        vec![*h]
+    }
+
+    fn init_value(&self, h: &VertexId, v: VertexId) -> HubBfsState {
+        HubBfsState {
+            d: if v == *h { 0 } else { UNREACHED },
+            pre: false,
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, st: &mut HubBfsState) {
+        let step = ctx.superstep();
+        if step == 1 {
+            // v == h: broadcast FALSE (no intermediate hub yet).
+            for &u in self.nbrs(v) {
+                ctx.send(u, false);
+            }
+            ctx.vote_halt();
+            return;
+        }
+        if st.d != UNREACHED {
+            ctx.vote_halt();
+            return;
+        }
+        st.d = (step - 1) as u32;
+        // pre_H(v) = TRUE iff any shortest path to v passed another hub.
+        st.pre = ctx.msgs().iter().any(|&m| m);
+        if self.radius.map(|r| st.d >= r).unwrap_or(false) {
+            ctx.vote_halt();
+            return;
+        }
+        // Hubs and hub-shadowed vertices taint downstream paths.
+        let relay = self.hubs.contains_key(&v) || st.pre;
+        for &u in self.nbrs(v) {
+            ctx.send(u, relay);
+        }
+        ctx.vote_halt();
+    }
+
+    /// pre_H needs "any shortest path", an OR over senders — all senders
+    /// are at BFS distance d-1 and deliver in the same superstep, so
+    /// OR-combining per destination is exact.
+    fn combine(&self, into: &mut bool, from: &bool) -> bool {
+        *into |= *from;
+        true
+    }
+
+    fn finish(
+        &self,
+        _h: &VertexId,
+        touched: &mut dyn Iterator<Item = (VertexId, &HubBfsState)>,
+        _agg: &(),
+    ) -> Self::Out {
+        let mut out = Vec::new();
+        for (v, st) in touched {
+            if st.d != UNREACHED {
+                out.push((v, st.d, st.pre));
+            }
+        }
+        out
+    }
+
+    fn msg_bytes(&self) -> usize {
+        1
+    }
+}
+
+/// Hub² index construction statistics (Table 5a / 6a rows).
+#[derive(Debug, Clone, Default)]
+pub struct IndexStats {
+    /// Simulated seconds spent in the BFS jobs.
+    pub index_time: f64,
+    /// Wall seconds for the closure evaluation.
+    pub closure_time: f64,
+    /// Engine counters of the (last) indexing run.
+    pub metrics: EngineMetrics,
+}
+
+/// Builder for [`Hub2Index`].
+pub struct Hub2Indexer {
+    pub k: usize,
+    pub selection: HubSelection,
+    /// True for graphs where in == out adjacency (stored undirected).
+    pub undirected: bool,
+    /// Fast-indexing mode: truncate hub BFS at this radius and recover the
+    /// full D_H via the min-plus closure kernel.
+    pub radius: Option<u32>,
+    /// Capacity for the indexing engine (hub BFS jobs superstep-share too).
+    pub capacity: usize,
+}
+
+impl Hub2Indexer {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            selection: HubSelection::InDegree,
+            undirected: false,
+            radius: None,
+            capacity: 8,
+        }
+    }
+
+    pub fn undirected(mut self, yes: bool) -> Self {
+        self.undirected = yes;
+        self
+    }
+
+    pub fn selection(mut self, s: HubSelection) -> Self {
+        self.selection = s;
+        self
+    }
+
+    pub fn radius(mut self, r: Option<u32>) -> Self {
+        self.radius = r;
+        self
+    }
+
+    pub fn capacity(mut self, c: usize) -> Self {
+        self.capacity = c;
+        self
+    }
+
+    /// Pick the top-k hubs by the configured degree criterion.
+    pub fn pick_hubs(&self, g: &Graph) -> Vec<VertexId> {
+        let n = g.num_vertices();
+        let score = |v: VertexId| -> usize {
+            match self.selection {
+                HubSelection::OutDegree => g.out_degree(v),
+                HubSelection::InDegree => g.in_degree(v),
+                HubSelection::SumDegree => g.out_degree(v) + g.in_degree(v),
+            }
+        };
+        let mut vs: Vec<VertexId> = (0..n as VertexId).collect();
+        vs.sort_by_key(|&v| (std::cmp::Reverse(score(v)), v));
+        vs.truncate(self.k.min(n));
+        vs
+    }
+
+    /// Build the index. `g` must have in-edges materialized.
+    pub fn build(&self, g: &Graph, cluster: Cluster, mp: &dyn MinPlus) -> (Hub2Index, IndexStats) {
+        assert!(g.has_in_edges(), "Hub2Indexer requires ensure_in_edges()");
+        let n = g.num_vertices();
+        let hubs = self.pick_hubs(g);
+        let k = hubs.len();
+        let mut hub_rank = FxHashMap::default();
+        for (i, &h) in hubs.iter().enumerate() {
+            hub_rank.insert(h, i as u16);
+        }
+
+        let mut stats = IndexStats::default();
+        let mut hub_dist = vec![F_INF; k * k];
+        for i in 0..k {
+            hub_dist[i * k + i] = 0.0;
+        }
+        let mut label_in: Vec<Vec<(u16, u32)>> = vec![Vec::new(); n];
+        let mut label_out: Vec<Vec<(u16, u32)>> = vec![Vec::new(); n];
+
+        let passes: &[Pass] = if self.undirected {
+            &[Pass::Forward]
+        } else {
+            &[Pass::Forward, Pass::Backward]
+        };
+        for &pass in passes {
+            let app = HubBfs {
+                g,
+                hubs: hub_rank.clone(),
+                pass,
+                radius: self.radius,
+            };
+            let mut eng = Engine::new(app, cluster.clone(), n).capacity(self.capacity);
+            let qids: Vec<_> = hubs.iter().map(|&h| eng.submit(h)).collect();
+            eng.run_until_idle();
+            stats.index_time += eng.sim_time();
+            stats.metrics = eng.metrics().clone();
+            for (hi, &qid) in qids.iter().enumerate() {
+                let res = eng
+                    .results()
+                    .iter()
+                    .find(|r| r.qid == qid)
+                    .expect("hub BFS completed");
+                for &(v, d, pre) in &res.out {
+                    if let Some(&vr) = hub_rank.get(&v) {
+                        // Hub-to-hub distance: Forward fills row h (d(h, v)),
+                        // Backward fills column h (d(v, h)).
+                        match pass {
+                            Pass::Forward => {
+                                let cell = &mut hub_dist[hi * k + vr as usize];
+                                *cell = cell.min(d as f32);
+                            }
+                            Pass::Backward => {
+                                let cell = &mut hub_dist[vr as usize * k + hi];
+                                *cell = cell.min(d as f32);
+                            }
+                        }
+                    } else if !pre {
+                        // Core-hub label (no other hub on any shortest path).
+                        match pass {
+                            Pass::Forward => label_out[v as usize].push((hi as u16, d)),
+                            Pass::Backward => label_in[v as usize].push((hi as u16, d)),
+                        }
+                    }
+                }
+            }
+        }
+        if self.undirected {
+            label_in = label_out.clone();
+        }
+
+        // Close D_H over hub-through-hub paths. With full BFS the table is
+        // already closed (closure is then an idempotent no-op); in
+        // fast-indexing (truncated) mode this recovers long-range entries.
+        let t0 = std::time::Instant::now();
+        mp.closure(&mut hub_dist, k);
+        stats.closure_time = t0.elapsed().as_secs_f64();
+
+        (
+            Hub2Index {
+                hubs,
+                hub_rank,
+                hub_dist,
+                label_in,
+                label_out,
+            },
+            stats,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Querying: BiBFS over non-hub vertices with the d_ub cutoff.
+// ---------------------------------------------------------------------------
+
+/// Query content: (s, t, d_ub). `d_ub` is produced by
+/// [`Hub2Index::dub_for`] (batched through the kernel on the hot path).
+pub type Hub2QueryContent = (VertexId, VertexId, u32);
+
+/// The Hub²-indexed PPSP query app.
+pub struct Hub2Query<'g, 'i> {
+    g: &'g Graph,
+    idx: &'i Hub2Index,
+}
+
+impl<'g, 'i> Hub2Query<'g, 'i> {
+    pub fn new(g: &'g Graph, idx: &'i Hub2Index) -> Self {
+        assert!(g.has_in_edges(), "Hub2Query needs in-adjacency");
+        Self { g, idx }
+    }
+
+    fn broadcast(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, dir: u8) {
+        if dir == FWD {
+            for &u in self.g.out(v) {
+                ctx.send(u, FWD);
+            }
+            let n = self.g.out(v).len() as u64;
+            ctx.aggregate(|_, a| a.fwd_sent += n);
+        } else {
+            for &u in self.g.inn(v) {
+                ctx.send(u, BWD);
+            }
+            let n = self.g.inn(v).len() as u64;
+            ctx.aggregate(|_, a| a.bwd_sent += n);
+        }
+    }
+}
+
+impl<'g, 'i> QueryApp for Hub2Query<'g, 'i> {
+    type Query = Hub2QueryContent;
+    type VQ = BiState;
+    type Msg = u8;
+    type Agg = BiAgg;
+    type Out = Option<u32>;
+
+    fn init_activate(&self, q: &Hub2QueryContent) -> Vec<VertexId> {
+        if q.0 == q.1 {
+            vec![q.0]
+        } else {
+            vec![q.0, q.1]
+        }
+    }
+
+    fn init_value(&self, q: &Hub2QueryContent, v: VertexId) -> BiState {
+        BiState {
+            ds: if v == q.0 { 0 } else { UNREACHED },
+            dt: if v == q.1 { 0 } else { UNREACHED },
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, st: &mut BiState) {
+        let step = ctx.superstep();
+        let (s, t, _dub) = *ctx.query();
+        if step == 1 {
+            if s == t {
+                ctx.aggregate(|_, a| a.best = 0);
+                ctx.force_terminate();
+                ctx.vote_halt();
+                return;
+            }
+            // s / t broadcast even if they are hubs (the hub-skip rule
+            // applies to *interior* vertices only).
+            if v == s {
+                self.broadcast(ctx, v, FWD);
+            }
+            if v == t {
+                self.broadcast(ctx, v, BWD);
+            }
+            ctx.vote_halt();
+            return;
+        }
+        let mut mask = 0u8;
+        for &m in ctx.msgs() {
+            mask |= m;
+        }
+        let newly_fwd = mask & FWD != 0 && st.ds == UNREACHED;
+        let newly_bwd = mask & BWD != 0 && st.dt == UNREACHED;
+        if newly_fwd {
+            st.ds = (step - 1) as u32;
+        }
+        if newly_bwd {
+            st.dt = (step - 1) as u32;
+        }
+        // Interior hubs absorb the wavefront: any s->..->h->..->t path is
+        // already covered by d_ub, so hubs never propagate.
+        if self.idx.is_hub(v) && v != s && v != t {
+            ctx.vote_halt();
+            return;
+        }
+        if st.ds != UNREACHED && st.dt != UNREACHED && (newly_fwd || newly_bwd) {
+            let sum = st.ds.saturating_add(st.dt);
+            ctx.aggregate(|_, a| a.best = a.best.min(sum));
+            ctx.force_terminate();
+            ctx.vote_halt();
+            return;
+        }
+        if newly_fwd {
+            self.broadcast(ctx, v, FWD);
+        }
+        if newly_bwd {
+            self.broadcast(ctx, v, BWD);
+        }
+        ctx.vote_halt();
+    }
+
+    fn combine(&self, into: &mut u8, from: &u8) -> bool {
+        *into |= *from;
+        true
+    }
+
+    fn agg_merge(&self, into: &mut BiAgg, from: &BiAgg) {
+        into.best = into.best.min(from.best);
+        into.fwd_sent += from.fwd_sent;
+        into.bwd_sent += from.bwd_sent;
+    }
+
+    fn master_step(
+        &self,
+        q: &Hub2QueryContent,
+        step: u64,
+        prev: &BiAgg,
+        agg: &mut BiAgg,
+    ) -> MasterAction {
+        let dub = q.2;
+        agg.best = agg.best.min(prev.best);
+        if agg.best != UNREACHED {
+            return MasterAction::Terminate;
+        }
+        // Cutoff: a non-hub meeting at superstep i or later has sum
+        // >= 2i - 1 >= d_ub, so d(s,t) = d_ub (paper §5.1.2).
+        if dub != UNREACHED && step >= 1 + (dub as u64) / 2 {
+            return MasterAction::Terminate;
+        }
+        if step >= 1 && (agg.fwd_sent == 0 || agg.bwd_sent == 0) {
+            return MasterAction::Terminate;
+        }
+        agg.fwd_sent = 0;
+        agg.bwd_sent = 0;
+        MasterAction::Continue
+    }
+
+    fn finish(
+        &self,
+        q: &Hub2QueryContent,
+        _touched: &mut dyn Iterator<Item = (VertexId, &BiState)>,
+        agg: &BiAgg,
+    ) -> Option<u32> {
+        let d = q.2.min(agg.best);
+        (d != UNREACHED).then_some(d)
+    }
+
+    fn msg_bytes(&self) -> usize {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::oracle;
+    use super::*;
+    use crate::graph::gen;
+
+    fn build_index(g: &Graph, k: usize, undirected: bool) -> Hub2Index {
+        Hub2Indexer::new(k)
+            .undirected(undirected)
+            .build(g, Cluster::new(4), &RustMinPlus)
+            .0
+    }
+
+    fn hub2_query(g: &Graph, idx: &Hub2Index, s: VertexId, t: VertexId) -> Option<u32> {
+        let dub = idx.dub_for(&[(s, t)], &RustMinPlus, 1, idx.k())[0];
+        let mut eng = Engine::new(Hub2Query::new(g, idx), Cluster::new(4), g.num_vertices());
+        eng.run_one((s, t, dub)).out
+    }
+
+    #[test]
+    fn hub2_matches_oracle_directed() {
+        let mut g = gen::twitter_like(400, 5, 31);
+        g.ensure_in_edges();
+        let idx = build_index(&g, 16, false);
+        for (s, t) in gen::random_pairs(400, 20, 32) {
+            let want = oracle::bfs_dist(&g, s, t);
+            let got = hub2_query(&g, &idx, s, t);
+            assert_eq!(got, (want != UNREACHED).then_some(want), "({s},{t})");
+        }
+    }
+
+    #[test]
+    fn hub2_matches_oracle_undirected_multi_cc() {
+        let mut g = gen::btc_like(500, 50, 4, 33);
+        g.ensure_in_edges();
+        let idx = build_index(&g, 12, true);
+        for (s, t) in gen::random_pairs(500, 20, 34) {
+            let want = oracle::bfs_dist(&g, s, t);
+            let got = hub2_query(&g, &idx, s, t);
+            assert_eq!(got, (want != UNREACHED).then_some(want), "({s},{t})");
+        }
+    }
+
+    #[test]
+    fn hub_to_hub_queries() {
+        let mut g = gen::twitter_like(300, 5, 35);
+        g.ensure_in_edges();
+        let idx = build_index(&g, 8, false);
+        let h0 = idx.hubs[0];
+        let h1 = idx.hubs[1];
+        let want = oracle::bfs_dist(&g, h0, h1);
+        assert_eq!(
+            hub2_query(&g, &idx, h0, h1),
+            (want != UNREACHED).then_some(want)
+        );
+    }
+
+    #[test]
+    fn truncated_indexing_never_underestimates() {
+        let mut g = gen::twitter_like(300, 6, 36);
+        g.ensure_in_edges();
+        let full = build_index(&g, 8, false);
+        let trunc = Hub2Indexer::new(8)
+            .radius(Some(2))
+            .build(&g, Cluster::new(4), &RustMinPlus)
+            .0;
+        for i in 0..full.k() {
+            for j in 0..full.k() {
+                let f = full.hub_dist[i * full.k() + j];
+                let t = trunc.hub_dist[i * trunc.k() + j];
+                assert!(
+                    t >= f,
+                    "truncated+closure must never underestimate ({i},{j}): {t} < {f}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dub_is_upper_bound() {
+        let mut g = gen::twitter_like(300, 5, 37);
+        g.ensure_in_edges();
+        let idx = build_index(&g, 16, false);
+        for (s, t) in gen::random_pairs(300, 20, 38) {
+            let want = oracle::bfs_dist(&g, s, t);
+            let dub = idx.dub_for(&[(s, t)], &RustMinPlus, 1, idx.k())[0];
+            assert!(dub >= want, "d_ub {dub} < true distance {want} ({s},{t})");
+        }
+    }
+
+    #[test]
+    fn rust_minplus_closure_small() {
+        // 0 ->(3) 1 ->(4) 2, expect d(0,2)=7 after closure.
+        let k = 3;
+        let mut d = vec![F_INF; k * k];
+        d[0] = 0.0;
+        d[4] = 0.0;
+        d[8] = 0.0;
+        d[1] = 3.0;
+        d[5] = 4.0;
+        RustMinPlus.closure(&mut d, k);
+        assert_eq!(d[2], 7.0);
+    }
+
+    #[test]
+    fn f_encoding_roundtrip() {
+        assert_eq!(from_f(to_f(UNREACHED)), UNREACHED);
+        assert_eq!(from_f(to_f(17)), 17);
+        assert_eq!(from_f(F_INF + 100.0), UNREACHED);
+    }
+
+    #[test]
+    fn access_rate_lower_with_index() {
+        // The whole point of Hub^2: the touched set shrinks vs plain BiBFS.
+        let mut g = gen::twitter_like(2_000, 8, 39);
+        g.ensure_in_edges();
+        let idx = build_index(&g, 32, false);
+        let pairs = gen::random_pairs(2_000, 10, 40);
+        let mut bibfs_touched = 0u64;
+        let mut hub2_touched = 0u64;
+        for &(s, t) in &pairs {
+            let mut e1 = Engine::new(super::super::BiBfs::new(&g), Cluster::new(4), 2_000);
+            bibfs_touched += e1.run_one((s, t)).stats.touched;
+            let dub = idx.dub_for(&[(s, t)], &RustMinPlus, 1, idx.k())[0];
+            let mut e2 = Engine::new(Hub2Query::new(&g, &idx), Cluster::new(4), 2_000);
+            hub2_touched += e2.run_one((s, t, dub)).stats.touched;
+        }
+        assert!(
+            hub2_touched < bibfs_touched,
+            "hub2 {hub2_touched} !< bibfs {bibfs_touched}"
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! Point-to-point shortest-path (PPSP) queries on unweighted graphs
+//! (paper §5.1): plain BFS, bidirectional BFS, and the Hub²-indexed
+//! algorithm, plus a serial oracle for testing.
+
+pub mod bfs;
+pub mod bibfs;
+pub mod hub2;
+pub mod oracle;
+
+pub use bfs::Bfs;
+pub use bibfs::BiBfs;
+pub use hub2::{Hub2Index, Hub2Indexer, Hub2Query};
+
+/// "Infinite" hop count for unreachable pairs.
+pub const UNREACHED: u32 = u32::MAX;
+
+/// A PPSP query: find the minimum number of hops from `s` to `t`.
+pub type PpspQuery = (crate::graph::VertexId, crate::graph::VertexId);

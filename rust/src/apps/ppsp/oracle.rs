@@ -1,0 +1,95 @@
+//! Serial BFS oracle used by tests and property checks.
+
+use super::UNREACHED;
+use crate::graph::{Graph, VertexId};
+
+/// Serial single-source BFS distance from `s` to `t` (hops), following
+/// out-edges. Returns `UNREACHED` if `t` is not reachable.
+pub fn bfs_dist(g: &Graph, s: VertexId, t: VertexId) -> u32 {
+    if s == t {
+        return 0;
+    }
+    let n = g.num_vertices();
+    let mut dist = vec![UNREACHED; n];
+    dist[s as usize] = 0;
+    let mut frontier = vec![s];
+    let mut d = 0;
+    while !frontier.is_empty() {
+        d += 1;
+        let mut next = Vec::new();
+        for &u in &frontier {
+            for &v in g.out(u) {
+                if dist[v as usize] == UNREACHED {
+                    if v == t {
+                        return d;
+                    }
+                    dist[v as usize] = d;
+                    next.push(v);
+                }
+            }
+        }
+        frontier = next;
+    }
+    UNREACHED
+}
+
+/// Full single-source BFS distance vector (hops along out-edges).
+pub fn bfs_all(g: &Graph, s: VertexId) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut dist = vec![UNREACHED; n];
+    dist[s as usize] = 0;
+    let mut frontier = vec![s];
+    let mut d = 0;
+    while !frontier.is_empty() {
+        d += 1;
+        let mut next = Vec::new();
+        for &u in &frontier {
+            for &v in g.out(u) {
+                if dist[v as usize] == UNREACHED {
+                    dist[v as usize] = d;
+                    next.push(v);
+                }
+            }
+        }
+        frontier = next;
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn path_graph(n: usize) -> Graph {
+        let mut b = GraphBuilder::new(n).undirected();
+        for i in 0..n - 1 {
+            b.edge(i as VertexId, (i + 1) as VertexId);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn path_distances() {
+        let g = path_graph(6);
+        assert_eq!(bfs_dist(&g, 0, 5), 5);
+        assert_eq!(bfs_dist(&g, 2, 2), 0);
+        assert_eq!(bfs_dist(&g, 5, 0), 5);
+    }
+
+    #[test]
+    fn unreachable() {
+        let mut b = GraphBuilder::new(4);
+        b.edge(0, 1);
+        b.edge(2, 3);
+        let g = b.build();
+        assert_eq!(bfs_dist(&g, 0, 3), UNREACHED);
+    }
+
+    #[test]
+    fn bfs_all_matches_pointwise() {
+        let g = path_graph(5);
+        let d = bfs_all(&g, 1);
+        assert_eq!(d, vec![1, 0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,255 @@
+//! SCC condensation and DFS-forest orders (paper §5.4 preprocessing).
+//!
+//! The paper computes SCCs with a separate Pregel job [36] and the DFS
+//! forest with an IO-efficient external algorithm [42], both *offline*
+//! preprocessing steps whose outputs Quegel loads as index data. Here we
+//! compute them with serial in-memory algorithms (iterative Tarjan and
+//! iterative DFS), which produce identical artifacts.
+
+use crate::graph::{Graph, GraphBuilder, VertexId};
+use crate::util::FxHashSet;
+
+/// Condensation of a digraph: the DAG of SCCs plus the v → SCC map.
+pub struct Condensation {
+    /// scc_of[v] = DAG vertex id of v's strongly connected component.
+    pub scc_of: Vec<VertexId>,
+    /// The condensed DAG (one vertex per SCC, deduped edges).
+    pub dag: Graph,
+    /// Number of SCCs.
+    pub num_sccs: usize,
+}
+
+/// Iterative Tarjan SCC + condensation.
+pub fn condense(g: &Graph) -> Condensation {
+    let n = g.num_vertices();
+    const UNSET: u32 = u32::MAX;
+    let mut index = vec![UNSET; n];
+    let mut low = vec![0u32; n];
+    let mut on_stack = vec![false; n];
+    let mut scc_of = vec![UNSET; n];
+    let mut stack: Vec<VertexId> = Vec::new();
+    let mut next_index = 0u32;
+    let mut num_sccs = 0usize;
+
+    // Explicit DFS state machine: (vertex, next-edge-offset).
+    let mut call: Vec<(VertexId, usize)> = Vec::new();
+    for root in 0..n as VertexId {
+        if index[root as usize] != UNSET {
+            continue;
+        }
+        call.push((root, 0));
+        index[root as usize] = next_index;
+        low[root as usize] = next_index;
+        next_index += 1;
+        stack.push(root);
+        on_stack[root as usize] = true;
+        while let Some(&mut (v, ref mut ei)) = call.last_mut() {
+            if *ei < g.out(v).len() {
+                let w = g.out(v)[*ei];
+                *ei += 1;
+                if index[w as usize] == UNSET {
+                    index[w as usize] = next_index;
+                    low[w as usize] = next_index;
+                    next_index += 1;
+                    stack.push(w);
+                    on_stack[w as usize] = true;
+                    call.push((w, 0));
+                } else if on_stack[w as usize] {
+                    low[v as usize] = low[v as usize].min(index[w as usize]);
+                }
+            } else {
+                call.pop();
+                if let Some(&mut (p, _)) = call.last_mut() {
+                    low[p as usize] = low[p as usize].min(low[v as usize]);
+                }
+                if low[v as usize] == index[v as usize] {
+                    // v is an SCC root: pop the component.
+                    loop {
+                        let w = stack.pop().expect("tarjan stack underflow");
+                        on_stack[w as usize] = false;
+                        scc_of[w as usize] = num_sccs as VertexId;
+                        if w == v {
+                            break;
+                        }
+                    }
+                    num_sccs += 1;
+                }
+            }
+        }
+    }
+
+    // Build the condensed DAG with deduped edges.
+    let mut b = GraphBuilder::new(num_sccs);
+    let mut seen = FxHashSet::default();
+    for u in 0..n as VertexId {
+        let su = scc_of[u as usize];
+        for &v in g.out(u) {
+            let sv = scc_of[v as usize];
+            if su != sv && seen.insert((su, sv)) {
+                b.edge(su, sv);
+            }
+        }
+    }
+    Condensation {
+        scc_of,
+        dag: b.build(),
+        num_sccs,
+    }
+}
+
+/// DFS forest orders over a DAG: pre(v) and post(v) (paper §5.4; the yes/no
+/// labels are intervals over these orders).
+pub struct DfsOrders {
+    pub pre: Vec<u32>,
+    pub post: Vec<u32>,
+}
+
+/// Compute pre/post orders of a DFS forest over `g` (roots in id order).
+pub fn dfs_orders(g: &Graph) -> DfsOrders {
+    let n = g.num_vertices();
+    let mut pre = vec![u32::MAX; n];
+    let mut post = vec![u32::MAX; n];
+    let mut pre_c = 0u32;
+    let mut post_c = 0u32;
+    let mut call: Vec<(VertexId, usize)> = Vec::new();
+    for root in 0..n as VertexId {
+        if pre[root as usize] != u32::MAX {
+            continue;
+        }
+        pre[root as usize] = pre_c;
+        pre_c += 1;
+        call.push((root, 0));
+        while let Some(&mut (v, ref mut ei)) = call.last_mut() {
+            if *ei < g.out(v).len() {
+                let w = g.out(v)[*ei];
+                *ei += 1;
+                if pre[w as usize] == u32::MAX {
+                    pre[w as usize] = pre_c;
+                    pre_c += 1;
+                    call.push((w, 0));
+                }
+            } else {
+                post[v as usize] = post_c;
+                post_c += 1;
+                call.pop();
+            }
+        }
+    }
+    DfsOrders { pre, post }
+}
+
+/// Serial reachability oracle on any digraph.
+pub fn reaches(g: &Graph, s: VertexId, t: VertexId) -> bool {
+    if s == t {
+        return true;
+    }
+    let n = g.num_vertices();
+    let mut vis = vec![false; n];
+    vis[s as usize] = true;
+    let mut stack = vec![s];
+    while let Some(u) = stack.pop() {
+        for &v in g.out(u) {
+            if v == t {
+                return true;
+            }
+            if !vis[v as usize] {
+                vis[v as usize] = true;
+                stack.push(v);
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn cycle_plus_tail() -> Graph {
+        // 0 -> 1 -> 2 -> 0 (SCC), 2 -> 3 -> 4
+        let mut b = GraphBuilder::new(5);
+        b.edge(0, 1);
+        b.edge(1, 2);
+        b.edge(2, 0);
+        b.edge(2, 3);
+        b.edge(3, 4);
+        b.build()
+    }
+
+    #[test]
+    fn condense_merges_cycle() {
+        let c = condense(&cycle_plus_tail());
+        assert_eq!(c.num_sccs, 3);
+        assert_eq!(c.scc_of[0], c.scc_of[1]);
+        assert_eq!(c.scc_of[1], c.scc_of[2]);
+        assert_ne!(c.scc_of[0], c.scc_of[3]);
+        // Condensed graph is a DAG: edge count 2 (scc -> 3 -> 4).
+        assert_eq!(c.dag.num_edges(), 2);
+    }
+
+    #[test]
+    fn condensation_preserves_reachability() {
+        let g = gen::twitter_like(300, 4, 61);
+        let c = condense(&g);
+        for (s, t) in gen::random_pairs(300, 25, 62) {
+            let want = reaches(&g, s, t);
+            let (ss, st) = (c.scc_of[s as usize], c.scc_of[t as usize]);
+            let got = ss == st || reaches(&c.dag, ss, st);
+            assert_eq!(got, want, "({s},{t})");
+        }
+    }
+
+    #[test]
+    fn condensed_graph_is_acyclic() {
+        let g = gen::twitter_like(200, 5, 63);
+        let c = condense(&g);
+        // Kahn's algorithm must consume every vertex.
+        let n = c.dag.num_vertices();
+        let mut indeg = vec![0usize; n];
+        for u in 0..n as VertexId {
+            for &v in c.dag.out(u) {
+                indeg[v as usize] += 1;
+            }
+        }
+        let mut queue: Vec<VertexId> = (0..n as VertexId)
+            .filter(|&v| indeg[v as usize] == 0)
+            .collect();
+        let mut seen = 0;
+        while let Some(u) = queue.pop() {
+            seen += 1;
+            for &v in c.dag.out(u) {
+                indeg[v as usize] -= 1;
+                if indeg[v as usize] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        assert_eq!(seen, n, "condensation must be acyclic");
+    }
+
+    #[test]
+    fn dfs_orders_are_permutations() {
+        let g = gen::webuk_like(500, 20, 3, 64);
+        let o = dfs_orders(&g);
+        let mut pre = o.pre.clone();
+        pre.sort_unstable();
+        assert_eq!(pre, (0..500).collect::<Vec<u32>>());
+        let mut post = o.post.clone();
+        post.sort_unstable();
+        assert_eq!(post, (0..500).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn dfs_ancestor_interval_nesting() {
+        // In a DFS forest, tree-descendants have nested [pre, post].
+        let mut b = GraphBuilder::new(4);
+        b.edge(0, 1);
+        b.edge(1, 2);
+        b.edge(0, 3);
+        let g = b.build();
+        let o = dfs_orders(&g);
+        assert!(o.pre[0] < o.pre[1] && o.post[1] < o.post[0]);
+        assert!(o.pre[1] < o.pre[2] && o.post[2] < o.post[1]);
+    }
+}

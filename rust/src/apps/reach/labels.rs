@@ -1,0 +1,429 @@
+//! Level / yes / no label construction (paper §5.4), each as a Pregel-style
+//! Quegel job over the condensed DAG.
+//!
+//! * level ℓ(v): longest hop count from any root (zero in-degree vertex);
+//!   if u reaches v then ℓ(u) < ℓ(v).
+//! * yes-label [pre(v), max_{u ∈ Out(v)} pre(u)]: yes(v) ⊆ yes(u) ⇒ u
+//!   reaches v.
+//! * no-label [min_{u ∈ Out(v)} post(u), post(v)]: u reaches v ⇒
+//!   no(v) ⊆ no(u) (used contrapositively for pruning).
+//!
+//! The yes/no jobs come in two variants: the simple multi-update algorithm
+//! and the level-aligned one (each vertex broadcasts exactly once, driven
+//! by an ℓ_max countdown aggregator) — the paper describes both; the bench
+//! compares them as an ablation.
+
+use super::dag::dfs_orders;
+use crate::coordinator::Engine;
+use crate::graph::{Graph, VertexId};
+use crate::network::Cluster;
+use crate::vertex::{Ctx, MasterAction, QueryApp};
+
+/// The reachability label set over the DAG.
+#[derive(Debug, Clone, Default)]
+pub struct ReachLabels {
+    /// ℓ(v): longest path length from a root.
+    pub level: Vec<u32>,
+    /// yes(v) = [pre(v), max pre over Out(v)].
+    pub yes: Vec<(u32, u32)>,
+    /// no(v) = [min post over Out(v), post(v)].
+    pub no: Vec<(u32, u32)>,
+}
+
+impl ReachLabels {
+    /// Interval containment a ⊆ b.
+    #[inline]
+    pub fn subsumes(b: (u32, u32), a: (u32, u32)) -> bool {
+        b.0 <= a.0 && a.1 <= b.1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Level job.
+// ---------------------------------------------------------------------------
+
+/// Longest-path level computation (paper's Pregel algorithm).
+struct LevelJob<'g> {
+    g: &'g Graph,
+    roots: Vec<VertexId>,
+}
+
+impl<'g> QueryApp for LevelJob<'g> {
+    type Query = ();
+    /// Current level estimate (-1 = unset).
+    type VQ = i64;
+    /// Proposed level (sender level + 1).
+    type Msg = i64;
+    type Agg = ();
+    type Out = Vec<(VertexId, u32)>;
+
+    fn init_activate(&self, _q: &()) -> Vec<VertexId> {
+        self.roots.clone()
+    }
+
+    fn init_value(&self, _q: &(), _v: VertexId) -> i64 {
+        -1
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, lvl: &mut i64) {
+        if ctx.superstep() == 1 {
+            *lvl = 0;
+            for &u in self.g.out(v) {
+                ctx.send(u, 1);
+            }
+            ctx.vote_halt();
+            return;
+        }
+        let proposed = ctx.msgs().iter().copied().max().unwrap_or(-1);
+        if proposed > *lvl {
+            *lvl = proposed;
+            for &u in self.g.out(v) {
+                ctx.send(u, proposed + 1);
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    /// Max-combiner: only the largest proposal matters.
+    fn combine(&self, into: &mut i64, from: &i64) -> bool {
+        *into = (*into).max(*from);
+        true
+    }
+
+    fn finish(
+        &self,
+        _q: &(),
+        touched: &mut dyn Iterator<Item = (VertexId, &i64)>,
+        _agg: &(),
+    ) -> Self::Out {
+        let mut out = Vec::new();
+        for (v, &l) in touched {
+            if l >= 0 {
+                out.push((v, l as u32));
+            }
+        }
+        out
+    }
+
+    fn msg_bytes(&self) -> usize {
+        4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Yes/no label jobs (simple and level-aligned variants).
+// ---------------------------------------------------------------------------
+
+/// Which interval endpoint is being propagated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    /// yes: fold = max over pre-orders.
+    YesMax,
+    /// no: fold = min over post-orders.
+    NoMin,
+}
+
+/// ℓ_max countdown aggregator for the level-aligned variants.
+#[derive(Debug, Clone, Copy)]
+struct Countdown {
+    lmax: i64,
+}
+
+impl Default for Countdown {
+    fn default() -> Self {
+        Self { lmax: -1 }
+    }
+}
+
+/// Backward propagation of max-pre (yes) / min-post (no) along in-edges.
+struct BoundJob<'g> {
+    g: &'g Graph,
+    /// pre(v) or post(v), per mode.
+    order: Vec<u32>,
+    /// ℓ(v) for the level-aligned variant.
+    level: Vec<u32>,
+    mode: Mode,
+    /// Level-aligned: broadcast exactly once, at ℓ(v)'s countdown turn.
+    aligned: bool,
+    /// Zero out-degree vertices (the initial activation set).
+    sinks: Vec<VertexId>,
+}
+
+impl<'g> BoundJob<'g> {
+    #[inline]
+    fn fold(&self, a: u32, b: u32) -> u32 {
+        match self.mode {
+            Mode::YesMax => a.max(b),
+            Mode::NoMin => a.min(b),
+        }
+    }
+}
+
+impl<'g> QueryApp for BoundJob<'g> {
+    type Query = ();
+    /// Current bound (max pre / min post over Out(v) ∪ {v}).
+    type VQ = u32;
+    type Msg = u32;
+    type Agg = Countdown;
+    type Out = Vec<(VertexId, u32)>;
+
+    fn init_activate(&self, _q: &()) -> Vec<VertexId> {
+        self.sinks.clone()
+    }
+
+    fn init_value(&self, _q: &(), v: VertexId) -> u32 {
+        self.order[v as usize]
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, bound: &mut u32) {
+        if self.aligned {
+            // Level-aligned: collect at step 1, broadcast at ℓ(v)'s turn.
+            if ctx.superstep() == 1 {
+                let lvl = self.level[v as usize] as i64;
+                ctx.aggregate(|_, a| a.lmax = a.lmax.max(lvl));
+                return; // stay active
+            }
+            for &m in ctx.msgs() {
+                *bound = self.fold(*bound, m);
+            }
+            if self.level[v as usize] as i64 == ctx.agg_prev().lmax {
+                for &u in self.g.inn(v) {
+                    ctx.send(u, *bound);
+                }
+                ctx.vote_halt();
+            }
+            // else: stay active until our level's turn.
+            return;
+        }
+        // Simple variant: broadcast on every improvement.
+        if ctx.superstep() == 1 {
+            for &u in self.g.inn(v) {
+                ctx.send(u, *bound);
+            }
+            ctx.vote_halt();
+            return;
+        }
+        let mut improved = false;
+        for &m in ctx.msgs() {
+            let f = self.fold(*bound, m);
+            if f != *bound {
+                *bound = f;
+                improved = true;
+            }
+        }
+        if improved {
+            for &u in self.g.inn(v) {
+                ctx.send(u, *bound);
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    fn combine(&self, into: &mut u32, from: &u32) -> bool {
+        *into = self.fold(*into, *from);
+        true
+    }
+
+    fn master_step(
+        &self,
+        _q: &(),
+        step: u64,
+        prev: &Countdown,
+        cur: &mut Countdown,
+    ) -> MasterAction {
+        if !self.aligned {
+            return MasterAction::Continue;
+        }
+        if step == 1 {
+            if cur.lmax < 0 {
+                return MasterAction::Terminate;
+            }
+            return MasterAction::Continue;
+        }
+        cur.lmax = prev.lmax - 1;
+        if cur.lmax < 0 {
+            return MasterAction::Terminate;
+        }
+        MasterAction::Continue
+    }
+
+    fn finish(
+        &self,
+        _q: &(),
+        touched: &mut dyn Iterator<Item = (VertexId, &u32)>,
+        _agg: &Countdown,
+    ) -> Self::Out {
+        let mut out = Vec::new();
+        for (v, &b) in touched {
+            out.push((v, b));
+        }
+        out
+    }
+
+    fn msg_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Per-label-type indexing statistics (Table 11b rows).
+#[derive(Debug, Clone, Default)]
+pub struct LabelStats {
+    pub level_time: f64,
+    pub yes_time: f64,
+    pub no_time: f64,
+    /// Supersteps of the level job (paper: 2793 on WebUK vs 23 on Twitter).
+    pub level_supersteps: u64,
+}
+
+/// Build all three label sets over the DAG. `dag` must have in-edges.
+/// `aligned` selects the level-aligned yes/no variants.
+pub fn build_labels(dag: &Graph, cluster: &Cluster, aligned: bool) -> (ReachLabels, LabelStats) {
+    assert!(dag.has_in_edges(), "build_labels requires ensure_in_edges()");
+    let n = dag.num_vertices();
+    let mut stats = LabelStats::default();
+
+    // --- Level job.
+    let roots: Vec<VertexId> = (0..n as VertexId)
+        .filter(|&v| dag.in_degree(v) == 0)
+        .collect();
+    let mut eng = Engine::new(LevelJob { g: dag, roots }, cluster.clone(), n);
+    let res = eng.run_one(());
+    stats.level_time = eng.sim_time();
+    stats.level_supersteps = res.stats.supersteps;
+    let mut level = vec![0u32; n];
+    for (v, l) in res.out {
+        level[v as usize] = l;
+    }
+
+    // --- DFS orders (offline preprocessing per the paper).
+    let orders = dfs_orders(dag);
+    let sinks: Vec<VertexId> = (0..n as VertexId)
+        .filter(|&v| dag.out_degree(v) == 0)
+        .collect();
+
+    // --- Yes job (max pre over Out(v)).
+    let mut eng = Engine::new(
+        BoundJob {
+            g: dag,
+            order: orders.pre.clone(),
+            level: level.clone(),
+            mode: Mode::YesMax,
+            aligned,
+            sinks: sinks.clone(),
+        },
+        cluster.clone(),
+        n,
+    );
+    let res = eng.run_one(());
+    stats.yes_time = eng.sim_time();
+    let mut max_pre = orders.pre.clone();
+    for (v, b) in res.out {
+        max_pre[v as usize] = b;
+    }
+    let yes: Vec<(u32, u32)> = (0..n).map(|v| (orders.pre[v], max_pre[v])).collect();
+
+    // --- No job (min post over Out(v)).
+    let mut eng = Engine::new(
+        BoundJob {
+            g: dag,
+            order: orders.post.clone(),
+            level: level.clone(),
+            mode: Mode::NoMin,
+            aligned,
+            sinks,
+        },
+        cluster.clone(),
+        n,
+    );
+    let res = eng.run_one(());
+    stats.no_time = eng.sim_time();
+    let mut min_post = orders.post.clone();
+    for (v, b) in res.out {
+        min_post[v as usize] = b;
+    }
+    let no: Vec<(u32, u32)> = (0..n).map(|v| (min_post[v], orders.post[v])).collect();
+
+    (ReachLabels { level, yes, no }, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dag::{condense, reaches};
+    use super::*;
+    use crate::graph::gen;
+
+    fn dag_fixture(seed: u64) -> Graph {
+        let g = gen::web_cyclic(600, 20, 3, seed);
+        let mut dag = condense(&g).dag;
+        dag.ensure_in_edges();
+        dag
+    }
+
+    #[test]
+    fn level_respects_reachability() {
+        let dag = dag_fixture(71);
+        let (labels, _) = build_labels(&dag, &Cluster::new(4), false);
+        for (s, t) in gen::random_pairs(dag.num_vertices(), 40, 72) {
+            if reaches(&dag, s, t) && s != t {
+                assert!(
+                    labels.level[s as usize] < labels.level[t as usize],
+                    "u reaches v ⇒ ℓ(u) < ℓ(v) for ({s},{t})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn yes_label_soundness() {
+        // yes(v) ⊆ yes(u) ⇒ u reaches v.
+        let dag = dag_fixture(73);
+        let (labels, _) = build_labels(&dag, &Cluster::new(4), false);
+        for (u, v) in gen::random_pairs(dag.num_vertices(), 60, 74) {
+            if ReachLabels::subsumes(labels.yes[u as usize], labels.yes[v as usize]) {
+                assert!(reaches(&dag, u, v), "yes-label claims {u} reaches {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_label_soundness() {
+        // u reaches v ⇒ no(v) ⊆ no(u).
+        let dag = dag_fixture(75);
+        let (labels, _) = build_labels(&dag, &Cluster::new(4), false);
+        for (u, v) in gen::random_pairs(dag.num_vertices(), 40, 76) {
+            if reaches(&dag, u, v) {
+                assert!(
+                    ReachLabels::subsumes(labels.no[u as usize], labels.no[v as usize]),
+                    "({u},{v}) reachable but no(v) ⊄ no(u)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_and_simple_variants_agree() {
+        let dag = dag_fixture(77);
+        let (a, _) = build_labels(&dag, &Cluster::new(4), false);
+        let (b, _) = build_labels(&dag, &Cluster::new(4), true);
+        assert_eq!(a.level, b.level);
+        assert_eq!(a.yes, b.yes);
+        assert_eq!(a.no, b.no);
+    }
+
+    #[test]
+    fn deep_dag_has_many_level_supersteps() {
+        // WebUK-like layered DAGs need many more supersteps than flat ones
+        // (paper: 2793 vs 23).
+        let mut deep = gen::webuk_like(2_000, 100, 3, 78);
+        deep.ensure_in_edges();
+        let (_, s_deep) = build_labels(&deep, &Cluster::new(4), false);
+        let flat = dag_fixture(79);
+        let (_, s_flat) = build_labels(&flat, &Cluster::new(4), false);
+        assert!(
+            s_deep.level_supersteps > 2 * s_flat.level_supersteps,
+            "deep {} !> 2x flat {}",
+            s_deep.level_supersteps,
+            s_flat.level_supersteps
+        );
+    }
+}

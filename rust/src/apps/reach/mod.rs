@@ -1,0 +1,10 @@
+//! P2P reachability queries (paper §5.4): SCC condensation, DFS-forest
+//! pre/post orders, level / yes / no labels, and the pruned BiBFS query.
+
+pub mod dag;
+pub mod labels;
+pub mod query;
+
+pub use dag::{condense, Condensation};
+pub use labels::{build_labels, ReachLabels};
+pub use query::ReachQuery;

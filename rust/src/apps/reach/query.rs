@@ -1,0 +1,303 @@
+//! P2P reachability queries over the condensed DAG with label pruning
+//! (paper §5.4): bidirectional BFS where every activated vertex is checked
+//! against the yes-label (instant positive answer), the level label and the
+//! no-label (pruning directions that cannot reach the target).
+
+use super::dag::Condensation;
+use super::labels::ReachLabels;
+use crate::graph::{Graph, VertexId};
+use crate::vertex::{Ctx, MasterAction, QueryApp};
+
+/// Direction bits.
+const FWD: u8 = 1;
+const BWD: u8 = 2;
+
+/// Aggregator: answer flag + per-direction message counts.
+#[derive(Debug, Clone, Default)]
+pub struct ReachAgg {
+    /// 0 = unknown, 1 = reachable, 2 = exhausted (unreachable).
+    pub verdict: u8,
+    pub fwd_sent: u64,
+    pub bwd_sent: u64,
+}
+
+/// Reachability query app over the DAG. Query = (s_dag, t_dag).
+pub struct ReachQuery<'g, 'l> {
+    dag: &'g Graph,
+    labels: &'l ReachLabels,
+}
+
+impl<'g, 'l> ReachQuery<'g, 'l> {
+    pub fn new(dag: &'g Graph, labels: &'l ReachLabels) -> Self {
+        assert!(dag.has_in_edges(), "ReachQuery needs in-adjacency");
+        Self { dag, labels }
+    }
+
+    /// Map an original-graph query to DAG vertices (the paper's
+    /// init_activate index lookup through the v → SCC map).
+    pub fn to_dag_query(cond: &Condensation, s: VertexId, t: VertexId) -> (VertexId, VertexId) {
+        (cond.scc_of[s as usize], cond.scc_of[t as usize])
+    }
+
+    /// Label-only fast path: Some(answer) if labels decide without search.
+    pub fn label_only(&self, s: VertexId, t: VertexId) -> Option<bool> {
+        if s == t {
+            return Some(true);
+        }
+        let l = self.labels;
+        if ReachLabels::subsumes(l.yes[s as usize], l.yes[t as usize]) {
+            return Some(true);
+        }
+        if l.level[s as usize] >= l.level[t as usize] {
+            return Some(false);
+        }
+        if !ReachLabels::subsumes(l.no[s as usize], l.no[t as usize]) {
+            return Some(false);
+        }
+        None
+    }
+}
+
+/// Per-vertex state: which directions have reached this vertex.
+pub type ReachState = u8;
+
+impl<'g, 'l> QueryApp for ReachQuery<'g, 'l> {
+    type Query = (VertexId, VertexId);
+    type VQ = ReachState;
+    type Msg = u8;
+    type Agg = ReachAgg;
+    type Out = bool;
+
+    fn init_activate(&self, q: &(VertexId, VertexId)) -> Vec<VertexId> {
+        if q.0 == q.1 {
+            vec![q.0]
+        } else {
+            vec![q.0, q.1]
+        }
+    }
+
+    fn init_value(&self, q: &(VertexId, VertexId), v: VertexId) -> ReachState {
+        let mut m = 0;
+        if v == q.0 {
+            m |= FWD;
+        }
+        if v == q.1 {
+            m |= BWD;
+        }
+        m
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, st: &mut ReachState) {
+        let (s, t) = *ctx.query();
+        let l = self.labels;
+        if ctx.superstep() == 1 {
+            // Label-only resolution before any traversal.
+            if let Some(ans) = self.label_only(s, t) {
+                if v == s {
+                    ctx.aggregate(|_, a| a.verdict = if ans { 1 } else { 2 });
+                    ctx.force_terminate();
+                }
+                ctx.vote_halt();
+                return;
+            }
+            if v == s {
+                for &u in self.dag.out(v) {
+                    ctx.send(u, FWD);
+                }
+                let n = self.dag.out(v).len() as u64;
+                ctx.aggregate(|_, a| a.fwd_sent += n);
+            }
+            if v == t {
+                for &u in self.dag.inn(v) {
+                    ctx.send(u, BWD);
+                }
+                let n = self.dag.inn(v).len() as u64;
+                ctx.aggregate(|_, a| a.bwd_sent += n);
+            }
+            ctx.vote_halt();
+            return;
+        }
+        let mut mask = 0u8;
+        for &m in ctx.msgs() {
+            mask |= m;
+        }
+        let newly_fwd = mask & FWD != 0 && *st & FWD == 0;
+        let newly_bwd = mask & BWD != 0 && *st & BWD == 0;
+        *st |= mask;
+        if *st & FWD != 0 && *st & BWD != 0 {
+            // Meeting point: s reaches v and v reaches t.
+            ctx.aggregate(|_, a| a.verdict = 1);
+            ctx.force_terminate();
+            ctx.vote_halt();
+            return;
+        }
+        if newly_fwd {
+            // Forward wavefront: s reaches v. Label checks against t.
+            if ReachLabels::subsumes(l.yes[v as usize], l.yes[t as usize]) {
+                // v reaches t via yes-label ⇒ s reaches t.
+                ctx.aggregate(|_, a| a.verdict = 1);
+                ctx.force_terminate();
+                ctx.vote_halt();
+                return;
+            }
+            let prune = l.level[v as usize] >= l.level[t as usize]
+                || !ReachLabels::subsumes(l.no[v as usize], l.no[t as usize]);
+            if !prune {
+                for &u in self.dag.out(v) {
+                    ctx.send(u, FWD);
+                }
+                let n = self.dag.out(v).len() as u64;
+                ctx.aggregate(|_, a| a.fwd_sent += n);
+            }
+        }
+        if newly_bwd {
+            // Backward wavefront: v reaches t. Label checks against s.
+            if ReachLabels::subsumes(l.yes[s as usize], l.yes[v as usize]) {
+                ctx.aggregate(|_, a| a.verdict = 1);
+                ctx.force_terminate();
+                ctx.vote_halt();
+                return;
+            }
+            let prune = l.level[s as usize] >= l.level[v as usize]
+                || !ReachLabels::subsumes(l.no[s as usize], l.no[v as usize]);
+            if !prune {
+                for &u in self.dag.inn(v) {
+                    ctx.send(u, BWD);
+                }
+                let n = self.dag.inn(v).len() as u64;
+                ctx.aggregate(|_, a| a.bwd_sent += n);
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    fn combine(&self, into: &mut u8, from: &u8) -> bool {
+        *into |= *from;
+        true
+    }
+
+    fn agg_merge(&self, into: &mut ReachAgg, from: &ReachAgg) {
+        into.verdict = into.verdict.max(from.verdict);
+        into.fwd_sent += from.fwd_sent;
+        into.bwd_sent += from.bwd_sent;
+    }
+
+    fn master_step(
+        &self,
+        _q: &(VertexId, VertexId),
+        step: u64,
+        prev: &ReachAgg,
+        agg: &mut ReachAgg,
+    ) -> MasterAction {
+        if prev.verdict == 1 {
+            agg.verdict = 1;
+        }
+        if agg.verdict != 0 {
+            return MasterAction::Terminate;
+        }
+        if step >= 1 && (agg.fwd_sent == 0 || agg.bwd_sent == 0) {
+            agg.verdict = 2;
+            return MasterAction::Terminate;
+        }
+        agg.fwd_sent = 0;
+        agg.bwd_sent = 0;
+        MasterAction::Continue
+    }
+
+    fn finish(
+        &self,
+        _q: &(VertexId, VertexId),
+        _touched: &mut dyn Iterator<Item = (VertexId, &ReachState)>,
+        agg: &ReachAgg,
+    ) -> bool {
+        agg.verdict == 1
+    }
+
+    fn msg_bytes(&self) -> usize {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dag::{condense, reaches};
+    use super::super::labels::build_labels;
+    use super::*;
+    use crate::coordinator::Engine;
+    use crate::graph::gen;
+    use crate::network::Cluster;
+
+    fn setup(seed: u64) -> (Graph, Condensation, ReachLabels) {
+        let g = gen::web_cyclic(600, 20, 3, seed);
+        let cond = condense(&g);
+        let mut dag = cond.dag.clone();
+        dag.ensure_in_edges();
+        let (labels, _) = build_labels(&dag, &Cluster::new(4), true);
+        (g, Condensation { dag, ..cond }, labels)
+    }
+
+    #[test]
+    fn indexed_reachability_matches_oracle() {
+        let (g, cond, labels) = setup(81);
+        let app = ReachQuery::new(&cond.dag, &labels);
+        let mut eng = Engine::new(app, Cluster::new(4), cond.num_sccs);
+        for (s, t) in gen::random_pairs(g.num_vertices(), 40, 82) {
+            let want = reaches(&g, s, t);
+            let dq = ReachQuery::to_dag_query(&cond, s, t);
+            let got = eng.run_one(dq).out;
+            assert_eq!(got, want, "({s},{t}) dag {dq:?}");
+        }
+    }
+
+    #[test]
+    fn same_scc_is_reachable() {
+        let (g, cond, labels) = setup(83);
+        let _ = g;
+        let app = ReachQuery::new(&cond.dag, &labels);
+        let mut eng = Engine::new(app, Cluster::new(2), cond.num_sccs);
+        assert!(eng.run_one((5, 5)).out);
+    }
+
+    #[test]
+    fn label_pruning_reduces_access() {
+        let (g, cond, labels) = setup(85);
+        // Unpruned bidirectional search (empty labels = no pruning power):
+        // give it degenerate labels that never prune nor shortcut.
+        let n = cond.num_sccs;
+        let no_labels = ReachLabels {
+            // level[v] = 0 except level of every vertex unchecked: use
+            // strictly increasing dummy levels so level pruning never fires,
+            level: (0..n as u32).map(|v| v % 1).collect(), // all zero
+            yes: (0..n as u32).map(|v| (v, v)).collect(),
+            no: vec![(0, u32::MAX); n],
+        };
+        // With all-zero levels the rule ℓ(s) >= ℓ(t) would *always* prune;
+        // instead emulate "no pruning" by monotone levels along edges:
+        // recompute unpruned via labels from build (level only cannot be
+        // faked simply) — so just compare touched counts with and without
+        // yes/no shortcuts by zeroing yes/no power only.
+        let (real_labels, _) = (labels.clone(), ());
+        let weak_labels = ReachLabels {
+            level: real_labels.level.clone(),
+            yes: no_labels.yes,
+            no: vec![(0, u32::MAX); n],
+        };
+        let queries = gen::random_pairs(g.num_vertices(), 15, 86);
+        let mut touched_real = 0u64;
+        let mut touched_weak = 0u64;
+        for &(s, t) in &queries {
+            let dq = ReachQuery::to_dag_query(&cond, s, t);
+            let mut e1 = Engine::new(ReachQuery::new(&cond.dag, &real_labels), Cluster::new(4), n);
+            let r1 = e1.run_one(dq);
+            let mut e2 = Engine::new(ReachQuery::new(&cond.dag, &weak_labels), Cluster::new(4), n);
+            let r2 = e2.run_one(dq);
+            assert_eq!(r1.out, r2.out, "pruning must not change answers");
+            touched_real += r1.stats.touched;
+            touched_weak += r2.stats.touched;
+        }
+        assert!(
+            touched_real <= touched_weak,
+            "labels must not increase access: {touched_real} > {touched_weak}"
+        );
+    }
+}

@@ -1,0 +1,149 @@
+//! Digital Elevation Model substrate (paper §5.3).
+//!
+//! The paper uses USGS DEMs (Eagle Peak 1012×1400, Bearhead 970×1404 at 10m
+//! spacing). Offline, we generate fractal terrains by multi-octave value
+//! noise — smooth, deterministic, and with the elevation continuity the
+//! shortest-path experiments exercise (DESIGN.md §5).
+
+use crate::util::Rng;
+
+/// A regular elevation grid: `width × height` samples at `spacing` meters.
+#[derive(Debug, Clone)]
+pub struct Dem {
+    pub width: usize,
+    pub height: usize,
+    /// Sampling interval in meters (paper: 10m).
+    pub spacing: f64,
+    /// Row-major elevations in meters.
+    pub elev: Vec<f64>,
+}
+
+impl Dem {
+    /// Elevation at grid coordinates.
+    #[inline]
+    pub fn at(&self, x: usize, y: usize) -> f64 {
+        self.elev[y * self.width + x]
+    }
+
+    /// Bilinear elevation at fractional grid coordinates.
+    pub fn sample(&self, fx: f64, fy: f64) -> f64 {
+        let x0 = (fx.floor() as usize).min(self.width - 2);
+        let y0 = (fy.floor() as usize).min(self.height - 2);
+        let tx = (fx - x0 as f64).clamp(0.0, 1.0);
+        let ty = (fy - y0 as f64).clamp(0.0, 1.0);
+        let a = self.at(x0, y0);
+        let b = self.at(x0 + 1, y0);
+        let c = self.at(x0, y0 + 1);
+        let d = self.at(x0 + 1, y0 + 1);
+        a * (1.0 - tx) * (1.0 - ty) + b * tx * (1.0 - ty) + c * (1.0 - tx) * ty + d * tx * ty
+    }
+
+    /// Number of triangular faces of the derived TIN (2 per cell, the
+    /// paper's |F| column).
+    pub fn tin_faces(&self) -> usize {
+        2 * (self.width - 1) * (self.height - 1)
+    }
+
+    /// Generate a fractal terrain: `octaves` layers of bilinear value
+    /// noise with persistence 0.5, scaled to `relief` meters of total
+    /// variation.
+    pub fn fractal(width: usize, height: usize, spacing: f64, relief: f64, seed: u64) -> Self {
+        assert!(width >= 2 && height >= 2);
+        let mut elev = vec![0.0f64; width * height];
+        let octaves = 5;
+        let mut amp = 1.0;
+        let mut cell = (width.max(height) / 4).max(2);
+        let mut total_amp = 0.0;
+        for oct in 0..octaves {
+            // Coarse random grid for this octave.
+            let gw = width.div_ceil(cell) + 2;
+            let gh = height.div_ceil(cell) + 2;
+            let mut rng = Rng::new(seed ^ (0x5eed + oct as u64 * 7919));
+            let grid: Vec<f64> = (0..gw * gh).map(|_| rng.f64() * 2.0 - 1.0).collect();
+            for y in 0..height {
+                for x in 0..width {
+                    let fx = x as f64 / cell as f64;
+                    let fy = y as f64 / cell as f64;
+                    let x0 = fx.floor() as usize;
+                    let y0 = fy.floor() as usize;
+                    let tx = smooth(fx - x0 as f64);
+                    let ty = smooth(fy - y0 as f64);
+                    let g = |xx: usize, yy: usize| grid[yy * gw + xx];
+                    let v = g(x0, y0) * (1.0 - tx) * (1.0 - ty)
+                        + g(x0 + 1, y0) * tx * (1.0 - ty)
+                        + g(x0, y0 + 1) * (1.0 - tx) * ty
+                        + g(x0 + 1, y0 + 1) * tx * ty;
+                    elev[y * width + x] += amp * v;
+                }
+            }
+            total_amp += amp;
+            amp *= 0.5;
+            cell = (cell / 2).max(2);
+        }
+        // Normalize to [0, relief].
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &e in &elev {
+            lo = lo.min(e);
+            hi = hi.max(e);
+        }
+        let span = (hi - lo).max(1e-9);
+        for e in &mut elev {
+            *e = (*e - lo) / span * relief;
+        }
+        let _ = total_amp;
+        Self {
+            width,
+            height,
+            spacing,
+            elev,
+        }
+    }
+}
+
+#[inline]
+fn smooth(t: f64) -> f64 {
+    t * t * (3.0 - 2.0 * t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractal_is_deterministic_and_bounded() {
+        let a = Dem::fractal(50, 40, 10.0, 200.0, 7);
+        let b = Dem::fractal(50, 40, 10.0, 200.0, 7);
+        assert_eq!(a.elev, b.elev);
+        for &e in &a.elev {
+            assert!((0.0..=200.0).contains(&e));
+        }
+    }
+
+    #[test]
+    fn fractal_is_smooth() {
+        // Adjacent samples must not jump by more than a fraction of relief.
+        let d = Dem::fractal(80, 80, 10.0, 100.0, 9);
+        for y in 0..80 {
+            for x in 0..79 {
+                let delta = (d.at(x + 1, y) - d.at(x, y)).abs();
+                assert!(delta < 30.0, "jump {delta} at ({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn bilinear_sample_matches_corners() {
+        let d = Dem::fractal(10, 10, 10.0, 50.0, 3);
+        assert!((d.sample(3.0, 4.0) - d.at(3, 4)).abs() < 1e-9);
+        let mid = d.sample(3.5, 4.0);
+        let lo = d.at(3, 4).min(d.at(4, 4));
+        let hi = d.at(3, 4).max(d.at(4, 4));
+        assert!(mid >= lo - 1e-9 && mid <= hi + 1e-9);
+    }
+
+    #[test]
+    fn tin_faces_count() {
+        let d = Dem::fractal(11, 21, 10.0, 10.0, 1);
+        assert_eq!(d.tin_faces(), 2 * 10 * 20);
+    }
+}

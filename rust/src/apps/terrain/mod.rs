@@ -1,0 +1,12 @@
+//! Terrain shortest-path queries (paper §5.3): DEM grids, the ε-shortcut
+//! network transform, distributed SSSP with Euclidean-lower-bound early
+//! termination, and the Chen–Han-style exact baseline.
+
+pub mod baseline;
+pub mod dem;
+pub mod network;
+pub mod sssp;
+
+pub use dem::Dem;
+pub use network::TerrainNet;
+pub use sssp::TerrainSssp;

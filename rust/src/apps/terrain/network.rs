@@ -1,0 +1,225 @@
+//! The ε-shortcut network transform (paper §5.3, Figure 4b).
+//!
+//! Each DEM cell edge is split so that consecutive vertices are ≤ ε apart,
+//! and within each cell a straight (3D) shortcut edge is added between
+//! every pair of boundary vertices that do not lie on the same horizontal
+//! or vertical edge line. Shortcuts point in many directions, so the
+//! network shortest path tracks the true terrain shortest path much better
+//! than the TIN's axis/diagonal edges (the paper's Manhattan-lower-bound
+//! argument).
+
+use super::dem::Dem;
+use crate::graph::{Graph, GraphBuilder, VertexId};
+
+/// The transformed terrain network: weighted graph + 3D vertex coordinates.
+pub struct TerrainNet {
+    pub graph: Graph,
+    /// (x, y, z) meters per vertex.
+    pub coords: Vec<(f64, f64, f64)>,
+    /// Grid corner (x, y) -> vertex id (for picking query endpoints).
+    width: usize,
+    height: usize,
+}
+
+impl TerrainNet {
+    /// Vertex id of grid corner (x, y).
+    pub fn corner(&self, x: usize, y: usize) -> VertexId {
+        debug_assert!(x < self.width && y < self.height);
+        (y * self.width + x) as VertexId
+    }
+
+    /// Euclidean (3D straight-line) distance between two vertices.
+    pub fn euclid(&self, a: VertexId, b: VertexId) -> f64 {
+        let (ax, ay, az) = self.coords[a as usize];
+        let (bx, by, bz) = self.coords[b as usize];
+        ((ax - bx).powi(2) + (ay - by).powi(2) + (az - bz).powi(2)).sqrt()
+    }
+
+    /// Build the ε-network from a DEM.
+    pub fn build(dem: &Dem, eps: f64) -> Self {
+        let (w, h, s) = (dem.width, dem.height, dem.spacing);
+        // Interior split points per cell edge.
+        let m = ((s / eps).ceil() as usize).saturating_sub(1);
+        let corner_count = w * h;
+        let hedge_count = (w - 1) * h; // horizontal edges
+        let vedge_count = w * (h - 1); // vertical edges
+        let n = corner_count + (hedge_count + vedge_count) * m;
+        let mut coords = Vec::with_capacity(n);
+
+        // Corners.
+        for y in 0..h {
+            for x in 0..w {
+                coords.push((x as f64 * s, y as f64 * s, dem.at(x, y)));
+            }
+        }
+        // Horizontal edge interiors: edge e = (x,y)->(x+1,y), points k=1..m.
+        let hbase = corner_count;
+        for y in 0..h {
+            for x in 0..w - 1 {
+                for k in 1..=m {
+                    let fx = x as f64 + k as f64 / (m + 1) as f64;
+                    coords.push((fx * s, y as f64 * s, dem.sample(fx, y as f64)));
+                }
+            }
+        }
+        // Vertical edge interiors.
+        let vbase = hbase + hedge_count * m;
+        for y in 0..h - 1 {
+            for x in 0..w {
+                for k in 1..=m {
+                    let fy = y as f64 + k as f64 / (m + 1) as f64;
+                    coords.push((x as f64 * s, fy * s, dem.sample(x as f64, fy)));
+                }
+            }
+        }
+        assert_eq!(coords.len(), n);
+
+        let hpt = |x: usize, y: usize, k: usize| -> usize {
+            debug_assert!(k >= 1 && k <= m);
+            hbase + (y * (w - 1) + x) * m + (k - 1)
+        };
+        let vpt = |x: usize, y: usize, k: usize| -> usize {
+            debug_assert!(k >= 1 && k <= m);
+            vbase + (y * w + x) * m + (k - 1)
+        };
+
+        let dist = |a: usize, b: usize| -> f32 {
+            let (ax, ay, az) = coords[a];
+            let (bx, by, bz) = coords[b];
+            (((ax - bx).powi(2) + (ay - by).powi(2) + (az - bz).powi(2)).sqrt()) as f32
+        };
+
+        let mut b = GraphBuilder::new(n).undirected();
+
+        // Split-edge segments along every grid edge.
+        for y in 0..h {
+            for x in 0..w - 1 {
+                let mut prev = y * w + x;
+                for k in 1..=m {
+                    let p = hpt(x, y, k);
+                    b.wedge(prev as VertexId, p as VertexId, dist(prev, p));
+                    prev = p;
+                }
+                let end = y * w + x + 1;
+                b.wedge(prev as VertexId, end as VertexId, dist(prev, end));
+            }
+        }
+        for y in 0..h - 1 {
+            for x in 0..w {
+                let mut prev = y * w + x;
+                for k in 1..=m {
+                    let p = vpt(x, y, k);
+                    b.wedge(prev as VertexId, p as VertexId, dist(prev, p));
+                    prev = p;
+                }
+                let end = (y + 1) * w + x;
+                b.wedge(prev as VertexId, end as VertexId, dist(prev, end));
+            }
+        }
+
+        // Cell shortcuts: boundary vertices grouped by which edge *line*
+        // they lie on; pairs on different lines get a straight-line edge.
+        // Group ids: 0 = bottom h-line, 1 = top h-line, 2 = left v-line,
+        // 3 = right v-line. Corners belong to one h-line and one v-line.
+        for y in 0..h - 1 {
+            for x in 0..w - 1 {
+                // (vertex, h-group or -1, v-group or -1)
+                let mut boundary: Vec<(usize, i8, i8)> = Vec::with_capacity(4 * (m + 1));
+                boundary.push((y * w + x, 0, 2)); // bottom-left
+                boundary.push((y * w + x + 1, 0, 3)); // bottom-right
+                boundary.push(((y + 1) * w + x, 1, 2)); // top-left
+                boundary.push(((y + 1) * w + x + 1, 1, 3)); // top-right
+                for k in 1..=m {
+                    boundary.push((hpt(x, y, k), 0, -1));
+                    boundary.push((hpt(x, y + 1, k), 1, -1));
+                    boundary.push((vpt(x, y, k), -1, 2));
+                    boundary.push((vpt(x + 1, y, k), -1, 3));
+                }
+                for i in 0..boundary.len() {
+                    for j in i + 1..boundary.len() {
+                        let (a, ha, va) = boundary[i];
+                        let (c, hb, vb) = boundary[j];
+                        let same_h = ha >= 0 && ha == hb;
+                        let same_v = va >= 0 && va == vb;
+                        if same_h || same_v {
+                            continue; // same edge line: already linked
+                        }
+                        b.wedge(a as VertexId, c as VertexId, dist(a, c));
+                    }
+                }
+            }
+        }
+
+        Self {
+            graph: b.build(),
+            coords,
+            width: w,
+            height: h,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_net(w: usize, h: usize, eps: f64) -> TerrainNet {
+        let dem = Dem {
+            width: w,
+            height: h,
+            spacing: 10.0,
+            elev: vec![0.0; w * h],
+        };
+        TerrainNet::build(&dem, eps)
+    }
+
+    #[test]
+    fn vertex_count_matches_formula() {
+        let net = flat_net(4, 3, 2.0); // m = 4
+        let m = 4;
+        let expected = 4 * 3 + (3 * 3 + 4 * 2) * m;
+        assert_eq!(net.coords.len(), expected);
+        assert_eq!(net.graph.num_vertices(), expected);
+    }
+
+    #[test]
+    fn shortcuts_beat_manhattan_on_flat_terrain() {
+        // Paper's motivating bound: axis-only grids cannot go below the
+        // Manhattan distance, shortcuts can. On flat ground the network
+        // distance for a diagonal must be well under Manhattan.
+        let net = flat_net(6, 6, 2.0);
+        let s = net.corner(0, 0);
+        let t = net.corner(5, 5);
+        let d = super::super::baseline::dijkstra(&net.graph, s, Some(t)).0[t as usize];
+        let manhattan = 2.0 * 5.0 * 10.0;
+        let euclid = net.euclid(s, t);
+        assert!(d < manhattan * 0.8, "network d {d} not beating Manhattan");
+        assert!(d >= euclid - 1e-6, "network d {d} below Euclid {euclid}");
+        // With ε = 2m shortcuts the detour factor should be small.
+        assert!(d < euclid * 1.10, "detour {} too large", d / euclid);
+    }
+
+    #[test]
+    fn weights_are_positive_3d_lengths() {
+        let dem = Dem::fractal(5, 5, 10.0, 80.0, 11);
+        let net = TerrainNet::build(&dem, 5.0);
+        for v in 0..net.graph.num_vertices() as VertexId {
+            for (&u, &w) in net.graph.out(v).iter().zip(net.graph.out_w(v)) {
+                assert!(w > 0.0);
+                let e = net.euclid(v, u) as f32;
+                assert!((w - e).abs() < 1e-3, "weight {w} vs euclid {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn elevation_lengthens_paths() {
+        let flat = flat_net(6, 6, 5.0);
+        let dem = Dem::fractal(6, 6, 10.0, 120.0, 13);
+        let rough = TerrainNet::build(&dem, 5.0);
+        let (s, t) = (flat.corner(0, 0), flat.corner(5, 5));
+        let df = super::super::baseline::dijkstra(&flat.graph, s, Some(t)).0[t as usize];
+        let dr = super::super::baseline::dijkstra(&rough.graph, s, Some(t)).0[t as usize];
+        assert!(dr > df, "rough terrain {dr} must be longer than flat {df}");
+    }
+}

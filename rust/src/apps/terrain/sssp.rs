@@ -1,0 +1,264 @@
+//! Distributed terrain SSSP with Euclidean-lower-bound early termination
+//! (paper §5.3).
+//!
+//! Standard Pregel SSSP over the ε-network, plus the paper's wavefront
+//! aggregator: every vertex updated in a superstep contributes its
+//! straight-line distance d_E(s, v); since d_E(s, v) ≤ d_N(s, v) and all
+//! future relaxations descend from the current wavefront, the query can
+//! stop as soon as the best known d_N(s, t) is below the wavefront's
+//! minimum d_E — without flooding the rest of the terrain.
+
+use super::network::TerrainNet;
+use crate::graph::VertexId;
+use crate::vertex::{Ctx, MasterAction, QueryApp};
+
+/// Aggregator: best distance at t so far + wavefront Euclidean minimum.
+#[derive(Debug, Clone)]
+pub struct SsspAgg {
+    pub best_t: f64,
+    pub min_euclid: f64,
+    /// Messages sent this superstep (0 ⇒ converged).
+    pub sent: u64,
+}
+
+impl Default for SsspAgg {
+    fn default() -> Self {
+        Self {
+            best_t: f64::INFINITY,
+            min_euclid: f64::INFINITY,
+            sent: 0,
+        }
+    }
+}
+
+/// Per-vertex state: tentative distance + predecessor (for path dumps).
+#[derive(Debug, Clone)]
+pub struct SsspState {
+    pub d: f64,
+    pub pred: VertexId,
+}
+
+/// Query result: distance and the s→t polyline.
+#[derive(Debug, Clone, Default)]
+pub struct SsspOut {
+    pub dist: f64,
+    pub path: Vec<(f64, f64, f64)>,
+    pub reached: bool,
+}
+
+/// Terrain SSSP query app; query = (s, t).
+pub struct TerrainSssp<'n> {
+    net: &'n TerrainNet,
+}
+
+impl<'n> TerrainSssp<'n> {
+    pub fn new(net: &'n TerrainNet) -> Self {
+        Self { net }
+    }
+}
+
+impl<'n> QueryApp for TerrainSssp<'n> {
+    type Query = (VertexId, VertexId);
+    type VQ = SsspState;
+    /// (tentative distance, sender).
+    type Msg = (f64, VertexId);
+    type Agg = SsspAgg;
+    type Out = SsspOut;
+
+    fn init_activate(&self, q: &(VertexId, VertexId)) -> Vec<VertexId> {
+        vec![q.0]
+    }
+
+    fn init_value(&self, q: &(VertexId, VertexId), v: VertexId) -> SsspState {
+        SsspState {
+            d: if v == q.0 { 0.0 } else { f64::INFINITY },
+            pred: VertexId::MAX,
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, st: &mut SsspState) {
+        let (s, t) = *ctx.query();
+        let g = &self.net.graph;
+        let mut improved = ctx.superstep() == 1 && v == s;
+        for &(d, from) in ctx.msgs() {
+            if d < st.d {
+                st.d = d;
+                st.pred = from;
+                improved = true;
+            }
+        }
+        if improved {
+            // Wavefront bookkeeping for the early-termination rule.
+            let de = self.net.euclid(s, v);
+            let dv = st.d;
+            ctx.aggregate(|_, a| a.min_euclid = a.min_euclid.min(de));
+            if v == t {
+                ctx.aggregate(|_, a| a.best_t = a.best_t.min(dv));
+            }
+            let mut sent = 0u64;
+            for (&u, &w) in g.out(v).iter().zip(g.out_w(v)) {
+                let cand = st.d + w as f64;
+                ctx.send(u, (cand, v));
+                sent += 1;
+            }
+            ctx.aggregate(|_, a| a.sent += sent);
+        }
+        ctx.vote_halt();
+    }
+
+    /// Min-combiner on tentative distances.
+    fn combine(&self, into: &mut (f64, VertexId), from: &(f64, VertexId)) -> bool {
+        if from.0 < into.0 {
+            *into = *from;
+        }
+        true
+    }
+
+    fn agg_merge(&self, into: &mut SsspAgg, from: &SsspAgg) {
+        into.best_t = into.best_t.min(from.best_t);
+        into.min_euclid = into.min_euclid.min(from.min_euclid);
+        into.sent += from.sent;
+    }
+
+    fn master_step(
+        &self,
+        _q: &(VertexId, VertexId),
+        _step: u64,
+        prev: &SsspAgg,
+        agg: &mut SsspAgg,
+    ) -> MasterAction {
+        agg.best_t = agg.best_t.min(prev.best_t);
+        // Early termination: the best path to t cannot be improved by any
+        // vertex whose straight-line distance from s already exceeds it.
+        if agg.best_t < agg.min_euclid {
+            return MasterAction::Terminate;
+        }
+        if agg.sent == 0 {
+            return MasterAction::Terminate;
+        }
+        agg.min_euclid = f64::INFINITY;
+        agg.sent = 0;
+        MasterAction::Continue
+    }
+
+    fn finish(
+        &self,
+        q: &(VertexId, VertexId),
+        touched: &mut dyn Iterator<Item = (VertexId, &SsspState)>,
+        agg: &SsspAgg,
+    ) -> SsspOut {
+        let (s, t) = *q;
+        // Rebuild the polyline by walking predecessors over touched state.
+        let mut dmap = crate::util::FxHashMap::default();
+        for (v, st) in touched {
+            dmap.insert(v, (st.d, st.pred));
+        }
+        let Some(&(dist, _)) = dmap.get(&t) else {
+            return SsspOut::default();
+        };
+        if dist.is_infinite() {
+            return SsspOut::default();
+        }
+        let mut path = vec![self.net.coords[t as usize]];
+        let mut cur = t;
+        while cur != s {
+            let Some(&(_, p)) = dmap.get(&cur) else {
+                break;
+            };
+            if p == VertexId::MAX {
+                break;
+            }
+            path.push(self.net.coords[p as usize]);
+            cur = p;
+        }
+        path.reverse();
+        let _ = agg;
+        SsspOut {
+            dist,
+            path,
+            reached: true,
+        }
+    }
+
+    fn msg_bytes(&self) -> usize {
+        12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::baseline::dijkstra;
+    use super::super::dem::Dem;
+    use super::*;
+    use crate::coordinator::Engine;
+    use crate::network::Cluster;
+
+    fn small_net(seed: u64) -> TerrainNet {
+        let dem = Dem::fractal(12, 10, 10.0, 80.0, seed);
+        TerrainNet::build(&dem, 5.0)
+    }
+
+    #[test]
+    fn sssp_matches_dijkstra() {
+        let net = small_net(21);
+        let n = net.graph.num_vertices();
+        let app = TerrainSssp::new(&net);
+        let mut eng = Engine::new(app, Cluster::new(4), n);
+        for (sx, sy, tx, ty) in [(0, 0, 11, 9), (3, 2, 8, 9), (0, 9, 11, 0)] {
+            let s = net.corner(sx, sy);
+            let t = net.corner(tx, ty);
+            let want = dijkstra(&net.graph, s, Some(t)).0[t as usize];
+            let got = eng.run_one((s, t)).out;
+            assert!(got.reached);
+            assert!(
+                (got.dist - want).abs() < 1e-6,
+                "({sx},{sy})->({tx},{ty}): {} vs {want}",
+                got.dist
+            );
+        }
+    }
+
+    #[test]
+    fn early_termination_limits_access_for_close_pairs() {
+        let net = small_net(23);
+        let n = net.graph.num_vertices();
+        let s = net.corner(0, 0);
+        let close = net.corner(1, 1);
+        let far = net.corner(11, 9);
+        let mut eng = Engine::new(TerrainSssp::new(&net), Cluster::new(4), n);
+        let r_close = eng.run_one((s, close));
+        let mut eng2 = Engine::new(TerrainSssp::new(&net), Cluster::new(4), n);
+        let r_far = eng2.run_one((s, far));
+        assert!(r_close.out.reached && r_far.out.reached);
+        assert!(
+            r_close.stats.touched * 2 < r_far.stats.touched,
+            "close query touched {} vs far {}",
+            r_close.stats.touched,
+            r_far.stats.touched
+        );
+    }
+
+    #[test]
+    fn path_endpoints_are_correct() {
+        let net = small_net(25);
+        let s = net.corner(2, 2);
+        let t = net.corner(9, 7);
+        let mut eng = Engine::new(TerrainSssp::new(&net), Cluster::new(2), net.graph.num_vertices());
+        let out = eng.run_one((s, t)).out;
+        assert!(out.reached);
+        let first = out.path.first().unwrap();
+        let last = out.path.last().unwrap();
+        assert_eq!(*first, net.coords[s as usize]);
+        assert_eq!(*last, net.coords[t as usize]);
+        // Polyline length must equal the reported distance.
+        let len: f64 = out
+            .path
+            .windows(2)
+            .map(|w| {
+                ((w[0].0 - w[1].0).powi(2) + (w[0].1 - w[1].1).powi(2) + (w[0].2 - w[1].2).powi(2))
+                    .sqrt()
+            })
+            .sum();
+        assert!((len - out.dist).abs() < 1e-6);
+    }
+}

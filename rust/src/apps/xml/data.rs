@@ -1,0 +1,395 @@
+//! XML tree substrate: the in-memory document model, the per-worker
+//! inverted keyword index (paper §4 `load2Idx`), and deterministic
+//! generators for DBLP-like and XMark-like corpora (DESIGN.md §5).
+
+use crate::graph::VertexId;
+use crate::util::{FxHashMap, Rng};
+
+/// Sentinel parent id for the root.
+pub const NO_PARENT: VertexId = VertexId::MAX;
+
+/// An XML document as a rooted tree (paper Fig. 3): internal vertices are
+/// tags, leaves are text; `ψ(v)` is the set of interned word ids of v's tag
+/// or text.
+#[derive(Debug, Default)]
+pub struct XmlTree {
+    /// pa(v); NO_PARENT for the root.
+    pub parent: Vec<VertexId>,
+    /// Γ_c(v).
+    pub children: Vec<Vec<VertexId>>,
+    /// ψ(v): interned word ids.
+    pub text: Vec<Vec<u32>>,
+    /// ℓ(v): depth from the root (root = 0). The paper computes this with
+    /// a separate Pregel BFS job; the builder records it at construction
+    /// and `recompute_levels` re-derives it for loaded documents.
+    pub level: Vec<u32>,
+    /// [start(v), end(v)] positions in the serialized document.
+    pub span: Vec<(u64, u64)>,
+    /// word string -> word id.
+    pub vocab: FxHashMap<String, u32>,
+    /// word id -> word string.
+    pub words: Vec<String>,
+    /// Inverted index: word id -> matching vertices (built by `load2Idx`).
+    pub inverted: FxHashMap<u32, Vec<VertexId>>,
+}
+
+impl XmlTree {
+    /// Number of vertices.
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    /// True if the tree is empty.
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Intern a word.
+    pub fn intern(&mut self, w: &str) -> u32 {
+        if let Some(&id) = self.vocab.get(w) {
+            return id;
+        }
+        let id = self.words.len() as u32;
+        self.vocab.insert(w.to_string(), id);
+        self.words.push(w.to_string());
+        id
+    }
+
+    /// Add a vertex with the given parent (NO_PARENT for root) and text.
+    pub fn add_vertex(&mut self, parent: VertexId, words: Vec<u32>) -> VertexId {
+        let v = self.parent.len() as VertexId;
+        self.parent.push(parent);
+        self.children.push(Vec::new());
+        self.text.push(words);
+        let lvl = if parent == NO_PARENT {
+            0
+        } else {
+            self.level[parent as usize] + 1
+        };
+        self.level.push(lvl);
+        self.span.push((0, 0));
+        if parent != NO_PARENT {
+            self.children[parent as usize].push(v);
+        }
+        v
+    }
+
+    /// Recompute ℓ(v) by BFS from the root (for documents loaded from
+    /// external sources where construction order is unknown).
+    pub fn recompute_levels(&mut self) {
+        let n = self.len();
+        self.level = vec![0; n];
+        let roots: Vec<VertexId> = (0..n as VertexId)
+            .filter(|&v| self.parent[v as usize] == NO_PARENT)
+            .collect();
+        let mut frontier = roots;
+        let mut lvl = 0;
+        while !frontier.is_empty() {
+            let mut next = Vec::new();
+            for &v in &frontier {
+                self.level[v as usize] = lvl;
+                next.extend_from_slice(&self.children[v as usize]);
+            }
+            frontier = next;
+            lvl += 1;
+        }
+    }
+
+    /// Assign [start, end] spans by DFS (document order).
+    pub fn assign_spans(&mut self) {
+        let n = self.len();
+        self.span = vec![(0, 0); n];
+        let mut counter: u64 = 0;
+        // Iterative DFS over all roots.
+        let roots: Vec<VertexId> = (0..n as VertexId)
+            .filter(|&v| self.parent[v as usize] == NO_PARENT)
+            .collect();
+        for root in roots {
+            // (vertex, child_index)
+            let mut stack: Vec<(VertexId, usize)> = vec![(root, 0)];
+            self.span[root as usize].0 = counter;
+            counter += 1;
+            while let Some(&mut (v, ref mut ci)) = stack.last_mut() {
+                if *ci < self.children[v as usize].len() {
+                    let c = self.children[v as usize][*ci];
+                    *ci += 1;
+                    self.span[c as usize].0 = counter;
+                    counter += 1;
+                    stack.push((c, 0));
+                } else {
+                    self.span[v as usize].1 = counter;
+                    counter += 1;
+                    stack.pop();
+                }
+            }
+        }
+    }
+
+    /// Build the inverted keyword index (the `load2Idx` UDF of paper §4:
+    /// called once per vertex right after loading).
+    pub fn build_inverted_index(&mut self) {
+        self.inverted.clear();
+        for v in 0..self.len() as VertexId {
+            for &w in &self.text[v as usize] {
+                self.inverted.entry(w).or_default().push(v);
+            }
+        }
+    }
+
+    /// Vertices matching any of the query word ids (the init_activate set).
+    pub fn matching_vertices(&self, words: &[u32]) -> Vec<VertexId> {
+        let mut out = Vec::new();
+        for &w in words {
+            if let Some(vs) = self.inverted.get(&w) {
+                out.extend_from_slice(vs);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Look up word ids for string keywords (None if any is unknown).
+    pub fn query_ids(&self, keywords: &[&str]) -> Option<Vec<u32>> {
+        keywords
+            .iter()
+            .map(|k| self.vocab.get(*k).copied())
+            .collect()
+    }
+
+    /// Maximum fan-out (used by tests to characterize DBLP vs XMark shape).
+    pub fn max_fanout(&self) -> usize {
+        self.children.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Approximate serialized size in bytes (for load-cost modeling).
+    pub fn footprint_bytes(&self) -> usize {
+        self.len() * 24 + self.text.iter().map(|t| t.len() * 4).sum::<usize>()
+    }
+}
+
+/// Generator configuration for synthetic corpora.
+#[derive(Debug, Clone)]
+pub struct XmlGenConfig {
+    /// Corpus shape: true = DBLP-like (shallow, huge fan-out at level 1),
+    /// false = XMark-like (deeper nesting, small fan-outs).
+    pub dblp_like: bool,
+    /// Number of top-level records (articles / auction items).
+    pub records: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+/// Generate a synthetic corpus per the config.
+pub fn generate(cfg: &XmlGenConfig) -> XmlTree {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = XmlTree::default();
+    // Pre-intern the vocabulary: w0..wN, Zipf-sampled in text.
+    let word_ids: Vec<u32> = (0..cfg.vocab)
+        .map(|i| t.intern(&format!("w{i}")))
+        .collect();
+    let sample_words = |rng: &mut Rng, t: &mut XmlTree, count: usize| -> Vec<u32> {
+        let _ = t;
+        (0..count)
+            .map(|_| word_ids[rng.zipf(word_ids.len(), 1.1)])
+            .collect()
+    };
+
+    if cfg.dblp_like {
+        // dblp root with `records` article children: high level-1 fan-out.
+        let root_w = t.intern("dblp");
+        let root = t.add_vertex(NO_PARENT, vec![root_w]);
+        let article_w = t.intern("article");
+        let title_w = t.intern("title");
+        let author_w = t.intern("author");
+        let year_w = t.intern("year");
+        let crossref_w = t.intern("crossref");
+        let booktitle_w = t.intern("booktitle");
+        for _ in 0..cfg.records {
+            let art = t.add_vertex(root, vec![article_w]);
+            let title = t.add_vertex(art, vec![title_w]);
+            let c = 3 + rng.below_usize(5);
+            let tw = sample_words(&mut rng, &mut t, c);
+            t.add_vertex(title, tw);
+            for _ in 0..1 + rng.below_usize(3) {
+                let au = t.add_vertex(art, vec![author_w]);
+                let aw = sample_words(&mut rng, &mut t, 2);
+                t.add_vertex(au, aw);
+            }
+            let yr = t.add_vertex(art, vec![year_w]);
+            let yw = sample_words(&mut rng, &mut t, 1);
+            t.add_vertex(yr, yw);
+            // Some records nest deeper (proceedings crossrefs): matching
+            // leaves then sit at mixed depths, which is what makes the
+            // naive SLCA algorithm re-send bitmaps upward (paper §5.2.2).
+            if rng.chance(0.3) {
+                let cr = t.add_vertex(art, vec![crossref_w]);
+                let bt = t.add_vertex(cr, vec![booktitle_w]);
+                let c = 2 + rng.below_usize(3);
+                let bw = sample_words(&mut rng, &mut t, c);
+                t.add_vertex(bt, bw);
+            }
+        }
+    } else {
+        // XMark-like: site -> 6 sections -> items -> nested descriptions.
+        let site_w = t.intern("site");
+        let root = t.add_vertex(NO_PARENT, vec![site_w]);
+        let sections = [
+            "regions",
+            "categories",
+            "catgraph",
+            "people",
+            "open_auctions",
+            "closed_auctions",
+        ];
+        let per_section = cfg.records / sections.len();
+        for sec in sections {
+            let sw = t.intern(sec);
+            let s = t.add_vertex(root, vec![sw]);
+            let item_w = t.intern("item");
+            for _ in 0..per_section {
+                let item = t.add_vertex(s, vec![item_w]);
+                // Nested chain: description -> parlist -> listitem -> text,
+                // depth 3..6, fan-out 1..3.
+                let mut cur = item;
+                let depth = 3 + rng.below_usize(4);
+                for d in 0..depth {
+                    let tag = t.intern(["description", "parlist", "listitem", "text", "bold"][d % 5]);
+                    let nxt = t.add_vertex(cur, vec![tag]);
+                    // Occasionally a sibling text leaf.
+                    if rng.chance(0.5) {
+                        let c = 2 + rng.below_usize(4);
+                        let ws = sample_words(&mut rng, &mut t, c);
+                        t.add_vertex(cur, ws);
+                    }
+                    cur = nxt;
+                }
+                let c = 3 + rng.below_usize(6);
+                let ws = sample_words(&mut rng, &mut t, c);
+                t.add_vertex(cur, ws);
+            }
+        }
+    }
+    t.assign_spans();
+    t.build_inverted_index();
+    t
+}
+
+/// Build a deterministic query pool of `count` queries with `m` keywords
+/// each, drawn from the moderately-frequent band of the vocabulary so that
+/// queries are selective but non-empty (paper: pools from prior work).
+pub fn query_pool(t: &XmlTree, count: usize, m: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    // Rank words by document frequency.
+    let mut freq: Vec<(u32, usize)> = t
+        .inverted
+        .iter()
+        .map(|(&w, vs)| (w, vs.len()))
+        .collect();
+    freq.sort_by_key(|&(w, c)| (std::cmp::Reverse(c), w));
+    // Moderately frequent band: skip the few stop-word-ish top tags, keep
+    // the next slice.
+    let lo = freq.len().min(5);
+    let hi = freq.len().min(lo + 200.max(freq.len() / 4));
+    let band: Vec<u32> = freq[lo..hi].iter().map(|&(w, _)| w).collect();
+    assert!(band.len() >= m, "vocabulary too small for query pool");
+    (0..count)
+        .map(|_| {
+            let mut q = Vec::with_capacity(m);
+            while q.len() < m {
+                let w = band[rng.below_usize(band.len())];
+                if !q.contains(&w) {
+                    q.push(w);
+                }
+            }
+            q
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dblp_small() -> XmlTree {
+        generate(&XmlGenConfig {
+            dblp_like: true,
+            records: 200,
+            vocab: 300,
+            seed: 1,
+        })
+    }
+
+    #[test]
+    fn dblp_shape() {
+        let t = dblp_small();
+        assert!(t.len() > 1000);
+        // High fan-out at the root (level 1 articles).
+        assert!(t.children[0].len() == 200);
+        assert_eq!(t.level[0], 0);
+    }
+
+    #[test]
+    fn xmark_shape_is_deeper() {
+        let x = generate(&XmlGenConfig {
+            dblp_like: false,
+            records: 120,
+            vocab: 300,
+            seed: 2,
+        });
+        let d = dblp_small();
+        let max_lvl_x = *x.level.iter().max().unwrap();
+        let max_lvl_d = *d.level.iter().max().unwrap();
+        assert!(
+            max_lvl_x > max_lvl_d,
+            "xmark depth {max_lvl_x} !> dblp depth {max_lvl_d}"
+        );
+        assert!(x.max_fanout() < d.max_fanout());
+    }
+
+    #[test]
+    fn spans_nest_properly() {
+        let t = dblp_small();
+        for v in 0..t.len() as VertexId {
+            let (s, e) = t.span[v as usize];
+            assert!(s < e);
+            let p = t.parent[v as usize];
+            if p != NO_PARENT {
+                let (ps, pe) = t.span[p as usize];
+                assert!(ps < s && e < pe, "child span must nest inside parent");
+            }
+        }
+    }
+
+    #[test]
+    fn inverted_index_finds_matches() {
+        let t = dblp_small();
+        for (&w, vs) in t.inverted.iter().take(20) {
+            for &v in vs {
+                assert!(t.text[v as usize].contains(&w));
+            }
+        }
+        let m = t.matching_vertices(&[t.vocab["article"]]);
+        assert_eq!(m.len(), 200);
+    }
+
+    #[test]
+    fn query_pool_nonempty_matches() {
+        let t = dblp_small();
+        for q in query_pool(&t, 50, 2, 3) {
+            assert_eq!(q.len(), 2);
+            for &w in &q {
+                assert!(!t.inverted[&w].is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn recompute_levels_matches_builder() {
+        let mut t = dblp_small();
+        let want = t.level.clone();
+        t.recompute_levels();
+        assert_eq!(t.level, want);
+    }
+}

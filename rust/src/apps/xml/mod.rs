@@ -1,0 +1,10 @@
+//! XML keyword search (paper §5.2): SLCA, ELCA and MaxMatch semantics over
+//! XML trees, with a per-worker inverted index built at load time.
+
+pub mod data;
+pub mod parser;
+pub mod queries;
+
+pub use data::{XmlGenConfig, XmlTree};
+pub use queries::{Elca, MaxMatch, SlcaLevelAligned, SlcaNaive, XmlQuery};
+pub mod oracle;

@@ -1,0 +1,168 @@
+//! Serial oracles for SLCA / ELCA / MaxMatch (used by tests and benches to
+//! validate the distributed algorithms).
+
+use super::data::{XmlTree, NO_PARENT};
+use crate::graph::VertexId;
+
+/// Subtree keyword bitmaps: bm[v] has bit i set iff keyword i occurs in T_v.
+pub fn subtree_bitmaps(t: &XmlTree, q: &[u32]) -> Vec<u32> {
+    let n = t.len();
+    let mut bm = vec![0u32; n];
+    for (v, slot) in bm.iter_mut().enumerate() {
+        for (i, &k) in q.iter().enumerate() {
+            if t.text[v].contains(&k) {
+                *slot |= 1 << i;
+            }
+        }
+    }
+    // Children have larger ids than parents in generated trees, but loaded
+    // documents may not be ordered: process by decreasing level.
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    order.sort_by_key(|&v| std::cmp::Reverse(t.level[v as usize]));
+    for &v in &order {
+        let p = t.parent[v as usize];
+        if p != NO_PARENT {
+            let b = bm[v as usize];
+            bm[p as usize] |= b;
+        }
+    }
+    bm
+}
+
+/// All SLCAs of `q`: vertices whose subtree covers all keywords and no
+/// child subtree does.
+pub fn slca(t: &XmlTree, q: &[u32]) -> Vec<VertexId> {
+    let all = (1u32 << q.len()) - 1;
+    let bm = subtree_bitmaps(t, q);
+    let mut out: Vec<VertexId> = (0..t.len() as VertexId)
+        .filter(|&v| {
+            bm[v as usize] == all
+                && !t.children[v as usize]
+                    .iter()
+                    .any(|&c| bm[c as usize] == all)
+        })
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// All ELCAs of `q`: vertices v whose own text plus non-all-one child
+/// subtrees still cover all keywords.
+pub fn elca(t: &XmlTree, q: &[u32]) -> Vec<VertexId> {
+    let all = (1u32 << q.len()) - 1;
+    let bm = subtree_bitmaps(t, q);
+    let mut out = Vec::new();
+    for v in 0..t.len() as VertexId {
+        let mut star = 0u32;
+        for (i, &k) in q.iter().enumerate() {
+            if t.text[v as usize].contains(&k) {
+                star |= 1 << i;
+            }
+        }
+        for &c in &t.children[v as usize] {
+            if bm[c as usize] != all {
+                star |= bm[c as usize];
+            }
+        }
+        if star == all {
+            out.push(v);
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// MaxMatch result: the union of pruned matching trees rooted at each SLCA.
+pub fn maxmatch(t: &XmlTree, q: &[u32]) -> Vec<VertexId> {
+    let bm = subtree_bitmaps(t, q);
+    let mut included = Vec::new();
+    for r in slca(t, q) {
+        let mut stack = vec![r];
+        while let Some(v) = stack.pop() {
+            included.push(v);
+            // Candidate children: those whose subtree matches something.
+            let cands: Vec<VertexId> = t.children[v as usize]
+                .iter()
+                .copied()
+                .filter(|&c| bm[c as usize] != 0)
+                .collect();
+            for &c in &cands {
+                let dominated = cands.iter().any(|&o| {
+                    bm[c as usize] != bm[o as usize]
+                        && (bm[c as usize] | bm[o as usize]) == bm[o as usize]
+                });
+                if !dominated {
+                    stack.push(c);
+                }
+            }
+        }
+    }
+    included.sort_unstable();
+    included.dedup();
+    included
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parser::parse;
+    use super::*;
+
+    /// The paper's Figure 3 example document.
+    const LAB: &str = r#"<lab>
+      <name>Infolab</name>
+      <members>
+        <member>
+          <name>Tom</name>
+          <interest>Graph Database</interest>
+        </member>
+        <member>
+          <name>Jack</name>
+        </member>
+      </members>
+      <projects>Web Data</projects>
+    </lab>"#;
+
+    #[test]
+    fn figure3_semantics() {
+        let t = parse(LAB).unwrap();
+        let q = t.query_ids(&["tom", "graph"]).unwrap();
+        let s = slca(&t, &q);
+        // The member element containing both Tom and Graph.
+        assert_eq!(s.len(), 1);
+        // ELCA includes the same member; the root is NOT an ELCA (its only
+        // coverage comes through the all-one member subtree).
+        let e = elca(&t, &q);
+        assert!(e.contains(&s[0]));
+        assert!(!e.contains(&0));
+    }
+
+    #[test]
+    fn elca_includes_root_with_split_coverage() {
+        // Root sees "tom" from one child and "graph" from another child
+        // whose subtree is not all-one, plus a member covering both.
+        let doc = r#"<lab><a>Tom</a><b>Graph</b><m><x>Tom</x><y>Graph</y></m></lab>"#;
+        let t = parse(doc).unwrap();
+        let q = t.query_ids(&["tom", "graph"]).unwrap();
+        let e = elca(&t, &q);
+        assert!(e.contains(&0), "root is an ELCA via a+b coverage");
+        let s = slca(&t, &q);
+        assert!(!s.contains(&0), "root is not an SLCA (m is lower)");
+    }
+
+    #[test]
+    fn maxmatch_prunes_dominated_siblings() {
+        // SLCA is the root r (no child subtree covers all three keywords);
+        // sibling c3 = {tom} is strictly dominated by c1 = {tom, graph}.
+        let doc = r#"<r><c1>Tom Graph</c1><c2>Db</c2><c3>Tom</c3></r>"#;
+        let t = parse(doc).unwrap();
+        let q = t.query_ids(&["tom", "graph", "db"]).unwrap();
+        assert_eq!(slca(&t, &q), vec![0], "root must be the only SLCA");
+        let mm = maxmatch(&t, &q);
+        let c3 = t.inverted[&t.vocab["c3"]][0];
+        assert!(!mm.contains(&c3), "dominated sibling c3 must be pruned");
+        assert!(mm.contains(&0), "SLCA root included");
+        let c1 = t.inverted[&t.vocab["c1"]][0];
+        let c2 = t.inverted[&t.vocab["c2"]][0];
+        assert!(mm.contains(&c1) && mm.contains(&c2));
+    }
+}

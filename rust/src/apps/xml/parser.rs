@@ -1,0 +1,138 @@
+//! A small SAX-style XML parser producing an [`XmlTree`] (the paper parses
+//! documents with a SAX parser at load time). Supports elements, self-
+//! closing tags, text content, comments and XML declarations; attributes
+//! are folded into the element's word set. Not a validating parser —
+//! enough for corpora of the DBLP/XMark shape.
+
+use super::data::{XmlTree, NO_PARENT};
+use anyhow::{bail, Result};
+
+/// Parse an XML document string into a tree.
+pub fn parse(doc: &str) -> Result<XmlTree> {
+    let mut t = XmlTree::default();
+    let mut stack: Vec<u32> = Vec::new();
+    let bytes = doc.as_bytes();
+    let mut i = 0usize;
+
+    let flush_text = |t: &mut XmlTree, stack: &[u32], text: &str| {
+        let trimmed = text.trim();
+        if trimmed.is_empty() {
+            return;
+        }
+        let words: Vec<u32> = trimmed
+            .split_whitespace()
+            .map(|w| t.intern(&w.to_lowercase()))
+            .collect();
+        let parent = stack.last().copied().unwrap_or(NO_PARENT);
+        t.add_vertex(parent, words);
+    };
+
+    while i < bytes.len() {
+        if bytes[i] == b'<' {
+            let close = doc[i..]
+                .find('>')
+                .map(|p| i + p)
+                .ok_or_else(|| anyhow::anyhow!("unterminated tag at byte {i}"))?;
+            let tag = &doc[i + 1..close];
+            if tag.starts_with("?") || tag.starts_with("!") {
+                // declaration / comment / doctype: skip
+            } else if let Some(name) = tag.strip_prefix('/') {
+                let name = name.trim();
+                let Some(top) = stack.pop() else {
+                    bail!("unmatched closing tag </{name}>");
+                };
+                let _ = top;
+            } else {
+                let self_closing = tag.ends_with('/');
+                let tag = tag.trim_end_matches('/').trim();
+                let mut parts = tag.split_whitespace();
+                let name = parts.next().unwrap_or_default().to_lowercase();
+                if name.is_empty() {
+                    bail!("empty tag name at byte {i}");
+                }
+                let mut words = vec![t.intern(&name)];
+                // Attribute values contribute words too.
+                for attr in parts {
+                    if let Some((_, v)) = attr.split_once('=') {
+                        let v = v.trim_matches(|c| c == '"' || c == '\'');
+                        if !v.is_empty() {
+                            words.push(t.intern(&v.to_lowercase()));
+                        }
+                    }
+                }
+                let parent = stack.last().copied().unwrap_or(NO_PARENT);
+                let v = t.add_vertex(parent, words);
+                if !self_closing {
+                    stack.push(v);
+                }
+            }
+            i = close + 1;
+        } else {
+            let next_tag = doc[i..].find('<').map(|p| i + p).unwrap_or(bytes.len());
+            flush_text(&mut t, &stack, &doc[i..next_tag]);
+            i = next_tag;
+        }
+    }
+    if !stack.is_empty() {
+        bail!("{} unclosed element(s)", stack.len());
+    }
+    t.assign_spans();
+    t.build_inverted_index();
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"<?xml version="1.0"?>
+<lab>
+  <member>
+    <name>Tom</name>
+    <interest>Graph Database</interest>
+  </member>
+  <member>
+    <name>Peter</name>
+  </member>
+  <seminar topic="graph"/>
+</lab>"#;
+
+    #[test]
+    fn parses_structure() {
+        let t = parse(DOC).unwrap();
+        // lab + 2 member + name + text + interest + text + name + text + seminar
+        assert_eq!(t.parent[0], super::super::data::NO_PARENT);
+        assert!(t.len() >= 9);
+        assert_eq!(t.level[0], 0);
+        // "tom" must be indexed
+        let tom = t.vocab["tom"];
+        assert_eq!(t.inverted[&tom].len(), 1);
+    }
+
+    #[test]
+    fn attributes_indexed() {
+        let t = parse(DOC).unwrap();
+        let g = t.vocab["graph"];
+        assert!(!t.inverted[&g].is_empty());
+    }
+
+    #[test]
+    fn rejects_unbalanced() {
+        assert!(parse("<a><b></a>").is_err() || parse("<a><b>").is_err());
+    }
+
+    #[test]
+    fn self_closing_has_no_children() {
+        let t = parse("<r><x/><y/></r>").unwrap();
+        assert_eq!(t.children[0].len(), 2);
+        assert!(t.children[1].is_empty());
+    }
+
+    #[test]
+    fn roundtrip_with_generator_style_queries() {
+        let t = parse(DOC).unwrap();
+        let q = t.query_ids(&["tom", "graph"]).unwrap();
+        let m = t.matching_vertices(&q);
+        assert!(m.len() >= 2);
+    }
+}

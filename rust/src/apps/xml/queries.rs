@@ -1,0 +1,699 @@
+//! Distributed XML keyword query algorithms (paper §5.2.2): SLCA (naive and
+//! level-aligned), ELCA, and MaxMatch, as `QueryApp`s over [`XmlTree`].
+//!
+//! Queries are sets of ≤ 32 keyword ids; per-vertex state carries the
+//! subtree keyword bitmap `bm(v)`. Messages combine at the sender into a
+//! single triple (OR of bitmaps, OR of non-all-one bitmaps, "some child was
+//! all-one"), which is exactly the information SLCA/ELCA labeling needs.
+
+use super::data::{XmlTree, NO_PARENT};
+use crate::graph::VertexId;
+use crate::vertex::{Ctx, MasterAction, QueryApp};
+
+/// Query content: interned keyword ids (m ≤ 32).
+pub type XmlQuery = Vec<u32>;
+
+/// Labeled result vertex: (vertex, start, end) document span.
+pub type SpanOut = Vec<(VertexId, u64, u64)>;
+
+fn own_bits(t: &XmlTree, v: VertexId, q: &[u32]) -> u32 {
+    let mut b = 0u32;
+    for (i, k) in q.iter().enumerate() {
+        if t.text[v as usize].contains(k) {
+            b |= 1 << i;
+        }
+    }
+    b
+}
+
+fn all_one(q: &[u32]) -> u32 {
+    (1u32 << q.len()) - 1
+}
+
+// ---------------------------------------------------------------------------
+// Naive SLCA: upward bitmap propagation, possibly multiple sends per vertex.
+// ---------------------------------------------------------------------------
+
+/// Vertex labels used by the SLCA algorithms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlcaLabel {
+    Unlabeled,
+    Slca,
+    NonSlca,
+}
+
+/// VQ-data of the SLCA apps.
+#[derive(Debug, Clone)]
+pub struct SlcaState {
+    pub bm: u32,
+    pub label: SlcaLabel,
+}
+
+/// Combined upward message: (OR of bms, OR of non-all-one bms, any all-one).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UpMsg {
+    pub or_all: u32,
+    pub or_non_allone: u32,
+    pub any_allone: bool,
+}
+
+impl UpMsg {
+    fn new(bm: u32, allone_mask: u32) -> Self {
+        Self {
+            or_all: bm,
+            or_non_allone: if bm == allone_mask { 0 } else { bm },
+            any_allone: bm == allone_mask,
+        }
+    }
+}
+
+/// Naive SLCA (paper §5.2.2 "Computing SLCA in Quegel", first variant).
+pub struct SlcaNaive<'t> {
+    pub t: &'t XmlTree,
+    /// Sender-side combining. Disabling it reproduces a combiner-less
+    /// Pregel runtime, where the naive algorithm's repeated upward sends
+    /// hit the network in full (the regime where the paper's level-aligned
+    /// variant wins on DBLP).
+    pub combiner: bool,
+}
+
+impl<'t> SlcaNaive<'t> {
+    pub fn new(t: &'t XmlTree) -> Self {
+        Self { t, combiner: true }
+    }
+
+    pub fn without_combiner(t: &'t XmlTree) -> Self {
+        Self { t, combiner: false }
+    }
+}
+
+impl<'t> QueryApp for SlcaNaive<'t> {
+    type Query = XmlQuery;
+    type VQ = SlcaState;
+    type Msg = UpMsg;
+    type Agg = ();
+    type Out = SpanOut;
+
+    fn init_activate(&self, q: &XmlQuery) -> Vec<VertexId> {
+        self.t.matching_vertices(q)
+    }
+
+    fn init_value(&self, q: &XmlQuery, v: VertexId) -> SlcaState {
+        SlcaState {
+            bm: own_bits(self.t, v, q),
+            label: SlcaLabel::Unlabeled,
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, st: &mut SlcaState) {
+        let q = ctx.query().clone();
+        let ao = all_one(&q);
+        let pa = self.t.parent[v as usize];
+        if ctx.superstep() == 1 {
+            // Matching vertices push their own bits upward.
+            if st.bm == ao {
+                // A single vertex covering every keyword is itself an SLCA
+                // candidate (children may relabel it later).
+                st.label = SlcaLabel::Slca;
+            }
+            if pa != NO_PARENT && st.bm != 0 {
+                ctx.send(pa, UpMsg::new(st.bm, ao));
+            }
+            ctx.vote_halt();
+            return;
+        }
+        let mut or_all = 0u32;
+        let mut any_allone = false;
+        for m in ctx.msgs() {
+            or_all |= m.or_all;
+            any_allone |= m.any_allone;
+        }
+        if st.bm != ao {
+            // Case (a): bitmap still incomplete.
+            let bm_or = st.bm | or_all;
+            if bm_or != st.bm {
+                st.bm = bm_or;
+                if pa != NO_PARENT {
+                    ctx.send(pa, UpMsg::new(st.bm, ao));
+                }
+            }
+            if bm_or == ao {
+                st.label = if any_allone {
+                    SlcaLabel::NonSlca
+                } else {
+                    SlcaLabel::Slca
+                };
+            }
+        } else {
+            // Case (b): already all-one (labeled in an earlier superstep).
+            if st.label == SlcaLabel::Slca && any_allone {
+                st.label = SlcaLabel::NonSlca;
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    fn combine(&self, into: &mut UpMsg, from: &UpMsg) -> bool {
+        if !self.combiner {
+            return false;
+        }
+        into.or_all |= from.or_all;
+        into.or_non_allone |= from.or_non_allone;
+        into.any_allone |= from.any_allone;
+        true
+    }
+
+    fn finish(
+        &self,
+        _q: &XmlQuery,
+        touched: &mut dyn Iterator<Item = (VertexId, &SlcaState)>,
+        _agg: &(),
+    ) -> SpanOut {
+        let mut out: SpanOut = Vec::new();
+        for (v, st) in touched {
+            if st.label == SlcaLabel::Slca {
+                let (s, e) = self.t.span[v as usize];
+                out.push((v, s, e));
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn msg_bytes(&self) -> usize {
+        9
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Level-aligned machinery shared by SLCA-LA, ELCA and MaxMatch.
+// ---------------------------------------------------------------------------
+
+/// Aggregator for level-aligned algorithms: the current ℓ_max countdown
+/// plus the MaxMatch phase number.
+#[derive(Debug, Clone, Copy)]
+pub struct LevelAgg {
+    pub lmax: i64,
+    pub phase: u8,
+}
+
+impl Default for LevelAgg {
+    fn default() -> Self {
+        Self { lmax: -1, phase: 1 }
+    }
+}
+
+fn level_master(step: u64, prev: &LevelAgg, cur: &mut LevelAgg) -> MasterAction {
+    if step == 1 {
+        // cur.lmax holds the max matching-vertex level collected this step.
+        if cur.lmax < 0 {
+            return MasterAction::Terminate; // no matches at all
+        }
+        cur.phase = 1;
+        return MasterAction::Continue;
+    }
+    cur.lmax = prev.lmax - 1;
+    cur.phase = prev.phase;
+    if cur.lmax < 0 {
+        return MasterAction::Terminate;
+    }
+    MasterAction::Continue
+}
+
+/// Level-aligned SLCA (paper's second variant: each vertex sends at most
+/// one message, driven by the ℓ_max countdown aggregator).
+pub struct SlcaLevelAligned<'t> {
+    pub t: &'t XmlTree,
+}
+
+impl<'t> SlcaLevelAligned<'t> {
+    pub fn new(t: &'t XmlTree) -> Self {
+        Self { t }
+    }
+}
+
+impl<'t> QueryApp for SlcaLevelAligned<'t> {
+    type Query = XmlQuery;
+    type VQ = SlcaState;
+    type Msg = UpMsg;
+    type Agg = LevelAgg;
+    type Out = SpanOut;
+
+    fn init_activate(&self, q: &XmlQuery) -> Vec<VertexId> {
+        self.t.matching_vertices(q)
+    }
+
+    fn init_value(&self, q: &XmlQuery, v: VertexId) -> SlcaState {
+        SlcaState {
+            bm: own_bits(self.t, v, q),
+            label: SlcaLabel::Unlabeled,
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, st: &mut SlcaState) {
+        let q = ctx.query().clone();
+        let ao = all_one(&q);
+        if ctx.superstep() == 1 {
+            // Collection superstep: contribute ℓ(v), stay active.
+            let lvl = self.t.level[v as usize] as i64;
+            ctx.aggregate(|_, a| a.lmax = a.lmax.max(lvl));
+            return; // no vote_halt: remain active until processed
+        }
+        let lmax = ctx.agg_prev().lmax;
+        if self.t.level[v as usize] as i64 != lmax {
+            return; // not our turn yet; stay active
+        }
+        let mut or_all = 0u32;
+        let mut any_allone = false;
+        for m in ctx.msgs() {
+            or_all |= m.or_all;
+            any_allone |= m.any_allone;
+        }
+        st.bm |= or_all;
+        if any_allone {
+            st.label = SlcaLabel::NonSlca;
+        } else if st.bm == ao {
+            st.label = SlcaLabel::Slca;
+        }
+        let pa = self.t.parent[v as usize];
+        if pa != NO_PARENT && st.bm != 0 {
+            ctx.send(pa, UpMsg::new(st.bm, ao));
+        }
+        ctx.vote_halt();
+    }
+
+    fn combine(&self, into: &mut UpMsg, from: &UpMsg) -> bool {
+        into.or_all |= from.or_all;
+        into.or_non_allone |= from.or_non_allone;
+        into.any_allone |= from.any_allone;
+        true
+    }
+
+    fn master_step(
+        &self,
+        _q: &XmlQuery,
+        step: u64,
+        prev: &LevelAgg,
+        cur: &mut LevelAgg,
+    ) -> MasterAction {
+        level_master(step, prev, cur)
+    }
+
+    fn finish(
+        &self,
+        _q: &XmlQuery,
+        touched: &mut dyn Iterator<Item = (VertexId, &SlcaState)>,
+        _agg: &LevelAgg,
+    ) -> SpanOut {
+        let mut out: SpanOut = Vec::new();
+        for (v, st) in touched {
+            if st.label == SlcaLabel::Slca {
+                let (s, e) = self.t.span[v as usize];
+                out.push((v, s, e));
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn msg_bytes(&self) -> usize {
+        9
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ELCA (level-aligned).
+// ---------------------------------------------------------------------------
+
+/// VQ-data for ELCA.
+#[derive(Debug, Clone)]
+pub struct ElcaState {
+    pub bm: u32,
+    pub elca: bool,
+}
+
+/// Level-aligned ELCA (paper §5.2.2 "Computing ELCA in Quegel").
+pub struct Elca<'t> {
+    pub t: &'t XmlTree,
+}
+
+impl<'t> Elca<'t> {
+    pub fn new(t: &'t XmlTree) -> Self {
+        Self { t }
+    }
+}
+
+impl<'t> QueryApp for Elca<'t> {
+    type Query = XmlQuery;
+    type VQ = ElcaState;
+    type Msg = UpMsg;
+    type Agg = LevelAgg;
+    type Out = SpanOut;
+
+    fn init_activate(&self, q: &XmlQuery) -> Vec<VertexId> {
+        self.t.matching_vertices(q)
+    }
+
+    fn init_value(&self, q: &XmlQuery, v: VertexId) -> ElcaState {
+        ElcaState {
+            bm: own_bits(self.t, v, q),
+            elca: false,
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, st: &mut ElcaState) {
+        let q = ctx.query().clone();
+        let ao = all_one(&q);
+        if ctx.superstep() == 1 {
+            let lvl = self.t.level[v as usize] as i64;
+            ctx.aggregate(|_, a| a.lmax = a.lmax.max(lvl));
+            return;
+        }
+        if self.t.level[v as usize] as i64 != ctx.agg_prev().lmax {
+            return;
+        }
+        let mut or_all = 0u32;
+        let mut or_non = 0u32;
+        for m in ctx.msgs() {
+            or_all |= m.or_all;
+            or_non |= m.or_non_allone;
+        }
+        // bm*_OR: own bits (bm before update) + non-all-one child bitmaps.
+        let star = st.bm | or_non;
+        if star == ao {
+            st.elca = true;
+        }
+        st.bm |= or_all;
+        let pa = self.t.parent[v as usize];
+        if pa != NO_PARENT && st.bm != 0 {
+            ctx.send(pa, UpMsg::new(st.bm, ao));
+        }
+        ctx.vote_halt();
+    }
+
+    fn combine(&self, into: &mut UpMsg, from: &UpMsg) -> bool {
+        into.or_all |= from.or_all;
+        into.or_non_allone |= from.or_non_allone;
+        into.any_allone |= from.any_allone;
+        true
+    }
+
+    fn master_step(
+        &self,
+        _q: &XmlQuery,
+        step: u64,
+        prev: &LevelAgg,
+        cur: &mut LevelAgg,
+    ) -> MasterAction {
+        level_master(step, prev, cur)
+    }
+
+    fn finish(
+        &self,
+        _q: &XmlQuery,
+        touched: &mut dyn Iterator<Item = (VertexId, &ElcaState)>,
+        _agg: &LevelAgg,
+    ) -> SpanOut {
+        let mut out: SpanOut = Vec::new();
+        for (v, st) in touched {
+            if st.elca {
+                let (s, e) = self.t.span[v as usize];
+                out.push((v, s, e));
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn msg_bytes(&self) -> usize {
+        9
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MaxMatch (two-phase level-aligned).
+// ---------------------------------------------------------------------------
+
+/// MaxMatch message: upward (child id, bm) in phase 1 — NOT combined, the
+/// parent needs per-child bitmaps — or a downward inclusion mark in phase 2.
+#[derive(Debug, Clone, Copy)]
+pub enum MmMsg {
+    Up { child: VertexId, bm: u32 },
+    Down,
+}
+
+/// VQ-data for MaxMatch.
+#[derive(Debug, Clone, Default)]
+pub struct MmState {
+    pub bm: u32,
+    /// Child bitmaps recorded when this vertex was processed in phase 1.
+    pub child_bms: Vec<(VertexId, u32)>,
+    pub slca: bool,
+    pub in_tree: bool,
+}
+
+/// Two-phase MaxMatch (paper §5.2.2 "Computing MaxMatch in Quegel").
+pub struct MaxMatch<'t> {
+    pub t: &'t XmlTree,
+}
+
+impl<'t> MaxMatch<'t> {
+    pub fn new(t: &'t XmlTree) -> Self {
+        Self { t }
+    }
+
+    /// Children (of the recorded candidates) not strictly dominated by a
+    /// sibling: K(u1) ⊂ K(u2) ⇔ bm1 != bm2 && (bm1 | bm2) == bm2.
+    fn undominated(cands: &[(VertexId, u32)]) -> Vec<VertexId> {
+        cands
+            .iter()
+            .filter(|&&(_, bm1)| {
+                bm1 != 0
+                    && !cands
+                        .iter()
+                        .any(|&(_, bm2)| bm1 != bm2 && (bm1 | bm2) == bm2)
+            })
+            .map(|&(c, _)| c)
+            .collect()
+    }
+}
+
+impl<'t> QueryApp for MaxMatch<'t> {
+    type Query = XmlQuery;
+    type VQ = MmState;
+    type Msg = MmMsg;
+    type Agg = LevelAgg;
+    /// All vertices of the pruned matching trees.
+    type Out = Vec<VertexId>;
+
+    fn init_activate(&self, q: &XmlQuery) -> Vec<VertexId> {
+        self.t.matching_vertices(q)
+    }
+
+    fn init_value(&self, q: &XmlQuery, v: VertexId) -> MmState {
+        MmState {
+            bm: own_bits(self.t, v, q),
+            ..Default::default()
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, st: &mut MmState) {
+        let q = ctx.query().clone();
+        let ao = all_one(&q);
+        if ctx.superstep() == 1 {
+            let lvl = self.t.level[v as usize] as i64;
+            ctx.aggregate(|_, a| a.lmax = a.lmax.max(lvl));
+            return;
+        }
+        let agg = *ctx.agg_prev();
+        if agg.phase == 1 {
+            // ---- Phase 1: level-aligned SLCA with per-child bitmaps.
+            if self.t.level[v as usize] as i64 != agg.lmax {
+                return; // stay active until our level
+            }
+            let mut any_allone = false;
+            for m in ctx.msgs() {
+                if let MmMsg::Up { child, bm } = *m {
+                    st.child_bms.push((child, bm));
+                    st.bm |= bm;
+                    any_allone |= bm == ao;
+                }
+            }
+            if !any_allone && st.bm == ao {
+                st.slca = true;
+            }
+            // Always report upward (ancestors must see all-one children to
+            // rule themselves out as SLCAs).
+            let pa = self.t.parent[v as usize];
+            if pa != NO_PARENT && st.bm != 0 {
+                ctx.send(pa, MmMsg::Up { child: v, bm: st.bm });
+            }
+            if !st.slca {
+                // SLCAs stay active so they can kick off phase 2.
+                ctx.vote_halt();
+            }
+        } else {
+            // ---- Phase 2: downward propagation from the SLCAs.
+            let start = st.slca && !st.in_tree;
+            let told = ctx.msgs().iter().any(|m| matches!(m, MmMsg::Down));
+            if start || told {
+                st.in_tree = true;
+                for c in Self::undominated(&st.child_bms) {
+                    ctx.send(c, MmMsg::Down);
+                }
+            }
+            ctx.vote_halt();
+        }
+    }
+
+    fn master_step(
+        &self,
+        _q: &XmlQuery,
+        step: u64,
+        prev: &LevelAgg,
+        cur: &mut LevelAgg,
+    ) -> MasterAction {
+        if step == 1 {
+            if cur.lmax < 0 {
+                return MasterAction::Terminate;
+            }
+            cur.phase = 1;
+            return MasterAction::Continue;
+        }
+        cur.phase = prev.phase;
+        if prev.phase == 1 {
+            cur.lmax = prev.lmax - 1;
+            if cur.lmax < 0 {
+                // Root level processed: switch to downward phase.
+                cur.phase = 2;
+            }
+            MasterAction::Continue
+        } else {
+            // Phase 2 runs until message flow dries up (engine quiescence).
+            cur.lmax = prev.lmax;
+            MasterAction::Continue
+        }
+    }
+
+    fn finish(
+        &self,
+        _q: &XmlQuery,
+        touched: &mut dyn Iterator<Item = (VertexId, &MmState)>,
+        _agg: &LevelAgg,
+    ) -> Vec<VertexId> {
+        let mut out: Vec<VertexId> = Vec::new();
+        for (v, st) in touched {
+            if st.in_tree {
+                out.push(v);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn msg_bytes(&self) -> usize {
+        8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::data::{generate, query_pool, XmlGenConfig};
+    use super::super::oracle;
+    use super::*;
+    use crate::coordinator::Engine;
+    use crate::network::Cluster;
+
+    fn corpus(dblp: bool, seed: u64) -> XmlTree {
+        generate(&XmlGenConfig {
+            dblp_like: dblp,
+            records: 120,
+            vocab: 150,
+            seed,
+        })
+    }
+
+    fn run_spans<A: QueryApp<Query = XmlQuery, Out = SpanOut>>(
+        app: A,
+        n: usize,
+        q: &XmlQuery,
+    ) -> Vec<VertexId> {
+        let mut eng = Engine::new(app, Cluster::new(4), n);
+        eng.run_one(q.clone()).out.into_iter().map(|(v, _, _)| v).collect()
+    }
+
+    #[test]
+    fn slca_naive_matches_oracle() {
+        for (dblp, seed) in [(true, 5), (false, 6)] {
+            let t = corpus(dblp, seed);
+            for q in query_pool(&t, 15, 2, seed + 10) {
+                let want = oracle::slca(&t, &q);
+                let got = run_spans(SlcaNaive::new(&t), t.len(), &q);
+                assert_eq!(got, want, "dblp={dblp} q={q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn slca_level_aligned_matches_oracle() {
+        for (dblp, seed) in [(true, 7), (false, 8)] {
+            let t = corpus(dblp, seed);
+            for q in query_pool(&t, 15, 3, seed + 10) {
+                let want = oracle::slca(&t, &q);
+                let got = run_spans(SlcaLevelAligned::new(&t), t.len(), &q);
+                assert_eq!(got, want, "dblp={dblp} q={q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn elca_matches_oracle() {
+        for (dblp, seed) in [(true, 9), (false, 10)] {
+            let t = corpus(dblp, seed);
+            for q in query_pool(&t, 15, 2, seed + 10) {
+                let want = oracle::elca(&t, &q);
+                let got = run_spans(Elca::new(&t), t.len(), &q);
+                assert_eq!(got, want, "dblp={dblp} q={q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn maxmatch_matches_oracle() {
+        for (dblp, seed) in [(true, 11), (false, 12)] {
+            let t = corpus(dblp, seed);
+            for q in query_pool(&t, 10, 2, seed + 10) {
+                let want = oracle::maxmatch(&t, &q);
+                let mut eng = Engine::new(MaxMatch::new(&t), Cluster::new(4), t.len());
+                let got = eng.run_one(q.clone()).out;
+                assert_eq!(got, want, "dblp={dblp} q={q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_query_result_when_keyword_missing() {
+        let t = corpus(true, 13);
+        // An id beyond the vocabulary matches nothing.
+        let q = vec![u32::MAX - 1];
+        let got = run_spans(SlcaNaive::new(&t), t.len(), &q);
+        assert!(got.is_empty());
+        let got = run_spans(SlcaLevelAligned::new(&t), t.len(), &q);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn access_rate_is_fractional() {
+        // The paper's Table 8 shows sub-1% access on DBLP: queries must not
+        // touch the whole tree.
+        let t = corpus(true, 14);
+        let q = &query_pool(&t, 1, 2, 15)[0];
+        let mut eng = Engine::new(SlcaLevelAligned::new(&t), Cluster::new(4), t.len());
+        let r = eng.run_one(q.clone());
+        assert!(
+            r.stats.access_rate < 0.5,
+            "access rate {} too high",
+            r.stats.access_rate
+        );
+    }
+}

@@ -1,0 +1,382 @@
+//! The superstep-sharing engine loop.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::query::{MsgSlot, Phase, QueryResult, QueryRt, VState};
+use crate::metrics::EngineMetrics;
+use crate::network::Cluster;
+use crate::vertex::{Ctx, MasterAction, QueryApp, QueryId};
+
+/// Safety cap: a query that exceeds this many supersteps is cut off and
+/// flagged `truncated` in its stats (guards against non-converging UDFs).
+const DEFAULT_MAX_SUPERSTEPS: u64 = 100_000;
+
+/// The Quegel engine: owns the app (V-data lives inside it), the simulated
+/// cluster, the query queue and all in-flight query state.
+pub struct Engine<A: QueryApp> {
+    app: A,
+    cluster: Cluster,
+    capacity: usize,
+    n_vertices: usize,
+    queue: VecDeque<(QueryId, A::Query, f64)>,
+    inflight: Vec<QueryRt<A>>,
+    results: Vec<QueryResult<A::Out>>,
+    next_qid: QueryId,
+    clock: f64,
+    max_supersteps: u64,
+    metrics: EngineMetrics,
+    // Scratch buffers reused across super-rounds (perf: no allocation in
+    // the hot loop).
+    outbox_scratch: Vec<(u32, A::Msg)>,
+}
+
+impl<A: QueryApp> Engine<A> {
+    /// Engine over `app` (which owns the graph / V-data) on `cluster`.
+    /// `n_vertices` is |V|, used for access-rate accounting.
+    pub fn new(app: A, cluster: Cluster, n_vertices: usize) -> Self {
+        Self {
+            app,
+            cluster,
+            capacity: 8, // paper: throughput saturates around C = 8
+            n_vertices,
+            queue: VecDeque::new(),
+            inflight: Vec::new(),
+            results: Vec::new(),
+            next_qid: 0,
+            clock: 0.0,
+            max_supersteps: DEFAULT_MAX_SUPERSTEPS,
+            metrics: EngineMetrics::default(),
+            outbox_scratch: Vec::new(),
+        }
+    }
+
+    /// Set the capacity parameter `C` (max queries per super-round).
+    pub fn capacity(mut self, c: usize) -> Self {
+        assert!(c > 0);
+        self.capacity = c;
+        self
+    }
+
+    /// Override the superstep safety cap.
+    pub fn max_supersteps(mut self, n: u64) -> Self {
+        self.max_supersteps = n;
+        self
+    }
+
+    /// Borrow the app (e.g. to read indexes it built).
+    pub fn app(&self) -> &A {
+        &self.app
+    }
+
+    /// Mutably borrow the app (e.g. to install index data between jobs).
+    pub fn app_mut(&mut self) -> &mut A {
+        &mut self.app
+    }
+
+    /// Current simulated cluster time (seconds).
+    pub fn sim_time(&self) -> f64 {
+        self.clock
+    }
+
+    /// Advance the simulated clock (e.g. to account for graph loading).
+    pub fn advance_clock(&mut self, dt: f64) {
+        self.clock += dt;
+    }
+
+    /// Engine-wide counters.
+    pub fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+
+    /// Completed queries so far (submission order not guaranteed; sort by
+    /// qid if needed).
+    pub fn results(&self) -> &[QueryResult<A::Out>] {
+        &self.results
+    }
+
+    /// Drain completed query results.
+    pub fn take_results(&mut self) -> Vec<QueryResult<A::Out>> {
+        std::mem::take(&mut self.results)
+    }
+
+    /// Submit a query; returns its id. Processing starts at the next
+    /// super-round with free capacity.
+    pub fn submit(&mut self, q: A::Query) -> QueryId {
+        let id = self.next_qid;
+        self.next_qid += 1;
+        self.queue.push_back((id, q, self.clock));
+        id
+    }
+
+    /// Run super-rounds until the queue and all in-flight queries drain.
+    pub fn run_until_idle(&mut self) {
+        while self.super_round() {}
+    }
+
+    /// Convenience: submit one query and run it to completion, returning
+    /// its result (interactive-mode helper).
+    pub fn run_one(&mut self, q: A::Query) -> QueryResult<A::Out> {
+        let id = self.submit(q);
+        self.run_until_idle();
+        let idx = self
+            .results
+            .iter()
+            .position(|r| r.qid == id)
+            .expect("query must have completed");
+        self.results.swap_remove(idx)
+    }
+
+    /// Execute one super-round. Returns false if there was nothing to do.
+    pub fn super_round(&mut self) -> bool {
+        if self.inflight.is_empty() && self.queue.is_empty() {
+            return false;
+        }
+        let wall_start = Instant::now();
+        let workers = self.cluster.workers;
+
+        // --- Admission: fetch queries while capacity permits (paper §3.1).
+        while self.inflight.len() < self.capacity {
+            let Some((id, q, submitted_at)) = self.queue.pop_front() else {
+                break;
+            };
+            let mut rt = QueryRt::<A>::new(id, q, workers, submitted_at);
+            rt.stats.started_at = self.clock;
+            // init_activate: seed the initial activation set V_q^I.
+            let init = self.app.init_activate(&rt.query);
+            for v in init {
+                let w = self.cluster.worker_of(v);
+                rt.vstate[w].entry(v).or_insert_with(|| VState {
+                    vq: self.app.init_value(&rt.query, v),
+                    halted: false,
+                    computed_step: 0,
+                });
+                rt.active[w].push(v);
+            }
+            self.inflight.push(rt);
+        }
+        self.metrics.peak_inflight = self.metrics.peak_inflight.max(self.inflight.len());
+        if self.inflight.is_empty() {
+            return false;
+        }
+
+        // --- Compute phase: per worker, serially over queries (paper: each
+        // worker processes its share of every in-flight query serially; we
+        // simulate workers and take max over per-worker costs).
+        let mut worker_cost = vec![0.0f64; workers];
+        let mut round_msgs: u64 = 0;
+        let mut round_bytes: u64 = 0;
+        let msg_size = self.app.msg_bytes() + self.cluster.cost.msg_header_bytes;
+
+        // Split the engine into disjoint field borrows so the hot loop can
+        // mutate vertex state IN PLACE (no per-call VQ clone, no second
+        // hash lookup) while the context borrows the app and scratch.
+        let app = &self.app;
+        let cluster = &self.cluster;
+        let outbox_scratch = &mut self.outbox_scratch;
+        let mut total_compute_calls: u64 = 0;
+
+        for w in 0..workers {
+            for rt in self.inflight.iter_mut() {
+                if rt.phase != Phase::Running {
+                    continue;
+                }
+                let step = rt.step + 1;
+                // Disjoint borrows of the query runtime's fields. Staged
+                // buffers and the aggregator partial live in the QueryRt
+                // and are reused across super-rounds (no allocation here).
+                let QueryRt {
+                    id,
+                    query,
+                    vstate,
+                    active,
+                    inbox,
+                    staged,
+                    agg_round,
+                    agg_prev,
+                    terminated,
+                    ..
+                } = rt;
+                let mut compute_calls: u64 = 0;
+                let mut msg_handled: u64 = 0;
+                let inbox_w = std::mem::take(&mut inbox[w]);
+                let mut next_active: Vec<u32> = Vec::new();
+
+                // One closure runs a compute() call over in-place state and
+                // routes the staged messages with the sender-side combiner.
+                let mut run_one = |v: u32,
+                                   st: &mut VState<A::VQ>,
+                                   msgs: &[A::Msg],
+                                   next_active: &mut Vec<u32>|
+                 -> u64 {
+                    let mut ctx = Ctx {
+                        app,
+                        qid: *id,
+                        query,
+                        step,
+                        msgs,
+                        prev_agg: agg_prev,
+                        agg_partial: agg_round,
+                        outbox: &mut *outbox_scratch,
+                        halt: false,
+                        terminate: false,
+                        sent: 0,
+                    };
+                    app.compute(&mut ctx, v, &mut st.vq);
+                    let (halt, terminate, sent) = (ctx.halt, ctx.terminate, ctx.sent);
+                    st.halted = halt;
+                    if !halt {
+                        next_active.push(v);
+                    }
+                    if terminate {
+                        *terminated = true;
+                    }
+                    for (dst, msg) in outbox_scratch.drain(..) {
+                        let dw = cluster.worker_of(dst);
+                        match staged[dw].entry(dst) {
+                            std::collections::hash_map::Entry::Occupied(mut e) => {
+                                let slot = e.get_mut();
+                                if let Some(first) = slot.first_mut() {
+                                    if app.combine(first, &msg) {
+                                        continue;
+                                    }
+                                }
+                                slot.push(msg);
+                            }
+                            std::collections::hash_map::Entry::Vacant(e) => {
+                                e.insert(MsgSlot::One(msg));
+                            }
+                        }
+                    }
+                    sent
+                };
+
+                // Process message receivers first, then still-active
+                // vertices that got no messages.
+                for (&v, msgs) in inbox_w.iter() {
+                    let st = vstate[w].entry(v).or_insert_with(|| VState {
+                        vq: app.init_value(query, v),
+                        halted: false,
+                        computed_step: 0,
+                    });
+                    st.halted = false;
+                    st.computed_step = step;
+                    msg_handled += msgs.len() as u64;
+                    compute_calls += 1;
+                    round_msgs += run_one(v, st, msgs.as_slice(), &mut next_active);
+                }
+                // Active vertices without messages.
+                let prev_active = std::mem::take(&mut active[w]);
+                for v in prev_active {
+                    let st = vstate[w].get_mut(&v).expect("active implies state");
+                    if st.halted || st.computed_step == step {
+                        continue;
+                    }
+                    st.computed_step = step;
+                    compute_calls += 1;
+                    round_msgs += run_one(v, st, &[], &mut next_active);
+                }
+                drop(run_one);
+                // Recycle the inbox map's capacity for the next round (the
+                // barrier below refills it).
+                let mut inbox_w = inbox_w;
+                inbox_w.clear();
+                rt.inbox[w] = inbox_w;
+                rt.active[w] = next_active;
+                worker_cost[w] += compute_calls as f64 * cluster.cost.per_vertex_compute_s
+                    + msg_handled as f64 * cluster.cost.per_msg_overhead_s;
+                total_compute_calls += compute_calls;
+            }
+        }
+        self.metrics.total_compute_calls += total_compute_calls;
+
+        // --- Barrier: route staged messages, merge aggregators, lifecycle.
+        for rt in self.inflight.iter_mut() {
+            if rt.phase != Phase::Running {
+                continue;
+            }
+            rt.step += 1;
+            let mut q_msgs: u64 = 0;
+            for (dw, buf) in rt.staged.iter_mut().enumerate() {
+                for (dst, slot) in buf.drain() {
+                    q_msgs += slot.len() as u64;
+                    match rt.inbox[dw].entry(dst) {
+                        std::collections::hash_map::Entry::Occupied(mut e) => {
+                            e.get_mut().merge(slot);
+                        }
+                        std::collections::hash_map::Entry::Vacant(e) => {
+                            e.insert(slot); // moves, no allocation
+                        }
+                    }
+                }
+            }
+            rt.stats.messages += q_msgs;
+            let q_bytes = q_msgs * msg_size as u64;
+            rt.stats.bytes += q_bytes;
+            round_bytes += q_bytes;
+
+            // Merge aggregator and run the master hook.
+            let mut merged = std::mem::take(&mut rt.agg_round);
+            // (worker partials were already folded into one value because
+            // Ctx::aggregate wrote into the shared per-query partial; the
+            // app's agg_merge handles multi-source merging semantics.)
+            let action = self
+                .app
+                .master_step(&rt.query, rt.step, &rt.agg_prev, &mut merged);
+            rt.agg_prev = merged;
+            if action == MasterAction::Terminate {
+                rt.terminated = true;
+            }
+            if rt.step >= self.max_supersteps {
+                rt.terminated = true;
+                rt.stats.truncated = true;
+            }
+            if rt.terminated || rt.quiescent() {
+                rt.phase = Phase::Reporting;
+            }
+            rt.stats.supersteps = rt.step;
+        }
+
+        // Aggregator sync bytes: one Agg per worker per running query.
+        round_bytes +=
+            (self.inflight.len() * workers * std::mem::size_of::<A::Agg>()) as u64;
+
+        // --- Advance the simulated clock.
+        let dt = self.cluster.super_round_time(&worker_cost, round_bytes as usize);
+        self.clock += dt;
+        self.metrics.super_rounds += 1;
+        self.metrics.total_messages += round_msgs;
+        self.metrics.total_bytes += round_bytes;
+        self.metrics.sim_time = self.clock;
+
+        // --- Reporting super-round (n_q + 1): assemble results and free
+        // all VQ-data / Q-data of finished queries.
+        let n_vertices = self.n_vertices;
+        let app = &self.app;
+        let clock = self.clock;
+        let results = &mut self.results;
+        self.inflight.retain_mut(|rt| {
+            if rt.phase != Phase::Reporting {
+                return true;
+            }
+            let touched = rt.touched();
+            rt.stats.touched = touched;
+            rt.stats.access_rate = touched as f64 / n_vertices.max(1) as f64;
+            rt.stats.finished_at = clock;
+            let mut iter = rt
+                .vstate
+                .iter()
+                .flat_map(|m| m.iter().map(|(&v, st)| (v, &st.vq)));
+            let out = app.finish(&rt.query, &mut iter, &rt.agg_prev);
+            results.push(QueryResult {
+                qid: rt.id,
+                out,
+                stats: rt.stats.clone(),
+            });
+            false // drop: frees HT_Q entry + all LUT_v entries of q
+        });
+
+        self.metrics.wall_time += wall_start.elapsed().as_secs_f64();
+        true
+    }
+}

@@ -1,0 +1,14 @@
+//! The Quegel coordinator: superstep-sharing execution engine (paper §3).
+//!
+//! Queries are processed in **super-rounds**: every in-flight query advances
+//! one superstep per super-round, and one message/aggregator barrier is paid
+//! per super-round instead of one per query-superstep. At most `capacity`
+//! (the paper's `C`) queries are in flight; new queries wait in a FIFO
+//! queue. Per-query VQ-data is allocated lazily — a vertex gets state for
+//! query `q` only when `q` first touches it.
+
+mod engine;
+mod query;
+
+pub use engine::Engine;
+pub use query::{QueryResult, VState};

@@ -1,0 +1,166 @@
+//! Per-query runtime state: the rust analog of the paper's Q-data entry in
+//! `HT_Q` plus the per-worker slices of VQ-data and message stores.
+
+use crate::graph::VertexId;
+use crate::metrics::QueryStats;
+use crate::util::FxHashMap;
+use crate::vertex::{QueryApp, QueryId};
+
+/// Per-vertex, per-query state (one `LUT_v[q]` entry): the vertex value
+/// `a_q(v)` plus the halted flag and a stamp to dedup processing within a
+/// super-round.
+#[derive(Debug, Clone)]
+pub struct VState<VQ> {
+    pub vq: VQ,
+    pub halted: bool,
+    pub(crate) computed_step: u64,
+}
+
+/// Message storage per destination vertex: the overwhelmingly common case
+/// after sender-side combining is a single message, which this enum keeps
+/// inline (no heap allocation on either side of the barrier).
+#[derive(Debug, Clone)]
+pub enum MsgSlot<M> {
+    One(M),
+    Many(Vec<M>),
+}
+
+impl<M> MsgSlot<M> {
+    #[inline]
+    pub fn push(&mut self, m: M) {
+        match self {
+            MsgSlot::One(_) => {
+                let MsgSlot::One(first) = std::mem::replace(self, MsgSlot::Many(Vec::new()))
+                else {
+                    unreachable!()
+                };
+                let MsgSlot::Many(v) = self else { unreachable!() };
+                v.reserve(4);
+                v.push(first);
+                v.push(m);
+            }
+            MsgSlot::Many(v) => v.push(m),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            MsgSlot::One(_) => 1,
+            MsgSlot::Many(v) => v.len(),
+        }
+    }
+
+    /// True when the slot holds no message (only possible for a drained
+    /// `Many`).
+    #[allow(dead_code)]
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as a slice (One is a 1-element slice via `slice::from_ref`).
+    #[inline]
+    pub fn as_slice(&self) -> &[M] {
+        match self {
+            MsgSlot::One(m) => std::slice::from_ref(m),
+            MsgSlot::Many(v) => v.as_slice(),
+        }
+    }
+
+    /// First message, mutable (combiner target).
+    #[inline]
+    pub fn first_mut(&mut self) -> Option<&mut M> {
+        match self {
+            MsgSlot::One(m) => Some(m),
+            MsgSlot::Many(v) => v.first_mut(),
+        }
+    }
+
+    /// Merge another slot into this one.
+    #[inline]
+    pub fn merge(&mut self, other: MsgSlot<M>) {
+        match other {
+            MsgSlot::One(m) => self.push(m),
+            MsgSlot::Many(ms) => {
+                for m in ms {
+                    self.push(m);
+                }
+            }
+        }
+    }
+}
+
+/// Completed-query record handed back to the submitter.
+#[derive(Debug, Clone)]
+pub struct QueryResult<Out> {
+    pub qid: QueryId,
+    pub out: Out,
+    pub stats: QueryStats,
+}
+
+/// Lifecycle phase of an in-flight query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Phase {
+    /// Executing supersteps.
+    Running,
+    /// Converged/terminated; the next super-round is the reporting round.
+    Reporting,
+}
+
+/// Q-data + per-worker stores for one in-flight query.
+pub(crate) struct QueryRt<A: QueryApp> {
+    pub id: QueryId,
+    pub query: A::Query,
+    /// Superstep number (1-based during compute).
+    pub step: u64,
+    pub phase: Phase,
+    /// Per-worker VQ-data tables (lazy: only touched vertices present).
+    pub vstate: Vec<FxHashMap<VertexId, VState<A::VQ>>>,
+    /// Per-worker active lists (vertices that did not vote halt).
+    pub active: Vec<Vec<VertexId>>,
+    /// Per-worker inbox for the *current* superstep.
+    pub inbox: Vec<FxHashMap<VertexId, MsgSlot<A::Msg>>>,
+    /// Per-dst-worker staged outgoing messages (reused across rounds).
+    pub staged: Vec<FxHashMap<VertexId, MsgSlot<A::Msg>>>,
+    /// This round's aggregator partial (reused across rounds).
+    pub agg_round: A::Agg,
+    /// Merged aggregator from the previous superstep (visible to compute).
+    pub agg_prev: A::Agg,
+    /// Set when any vertex (or the master hook) called force_terminate.
+    pub terminated: bool,
+    pub stats: QueryStats,
+}
+
+impl<A: QueryApp> QueryRt<A> {
+    pub fn new(id: QueryId, query: A::Query, workers: usize, submitted_at: f64) -> Self {
+        Self {
+            id,
+            query,
+            step: 0,
+            phase: Phase::Running,
+            vstate: (0..workers).map(|_| FxHashMap::default()).collect(),
+            active: vec![Vec::new(); workers],
+            inbox: (0..workers).map(|_| FxHashMap::default()).collect(),
+            staged: (0..workers).map(|_| FxHashMap::default()).collect(),
+            agg_round: A::Agg::default(),
+            agg_prev: A::Agg::default(),
+            terminated: false,
+            stats: QueryStats {
+                qid: id,
+                submitted_at,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Total touched vertices across workers (VQ-data entries allocated).
+    pub fn touched(&self) -> u64 {
+        self.vstate.iter().map(|m| m.len() as u64).sum()
+    }
+
+    /// True when no vertex is active and no message is pending.
+    pub fn quiescent(&self) -> bool {
+        self.active.iter().all(|a| a.is_empty()) && self.inbox.iter().all(|i| i.is_empty())
+    }
+}

@@ -1,0 +1,322 @@
+//! Deterministic synthetic dataset generators.
+//!
+//! The paper's datasets (Twitter, BTC, LiveJ, WebUK) are proprietary-scale
+//! downloads we cannot fetch in this offline image; each generator below
+//! reproduces the *structural property the experiments depend on* at a
+//! laptop scale (see DESIGN.md §5):
+//!
+//! * `twitter_like`  — Zipf-skewed degrees, one giant SCC-ish component,
+//!   high reach rate (Table 1a: max degree 0.78M vs avg 37; reach 78%).
+//! * `btc_like`      — many small connected components, low average degree,
+//!   low reach rate (41.8%), undirected.
+//! * `livej_like`    — bipartite user/group membership graph, undirected.
+//! * `webuk_like`    — layered web-graph-ish DAG with long diameter.
+
+use super::{Graph, GraphBuilder, VertexId};
+use crate::util::{FxHashSet, Rng};
+
+/// Twitter-like: directed, power-law out-degrees via preferential-ish
+/// attachment on a Zipf target distribution; a base ring guarantees one
+/// giant weakly-connected component.
+pub fn twitter_like(n: usize, avg_deg: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n);
+    let mut seen = FxHashSet::default();
+    // Base chain (not a ring!): guarantees weak connectivity and a high
+    // reach rate (forward via the chain, backward via celebrity shortcuts)
+    // without collapsing the graph into one giant SCC — the reachability
+    // experiments need a non-trivial condensation (paper Table 11a:
+    // Twitter condenses 52.6M vertices into a 12.4M-vertex DAG).
+    for u in 0..n - 1 {
+        b.edge(u as VertexId, (u + 1) as VertexId);
+        seen.insert((u as VertexId, (u + 1) as VertexId));
+    }
+    let extra = n * avg_deg.saturating_sub(1);
+    for _ in 0..extra {
+        let u = rng.below_usize(n) as VertexId;
+        // Zipf-ranked target: low ranks are "celebrities" with huge
+        // in-degree, giving the hub structure Hub^2 exploits.
+        let v = rng.zipf(n, 1.4) as VertexId;
+        if u != v && seen.insert((u, v)) {
+            b.edge(u, v);
+        }
+        // A fraction of follows are mutual: celebrities also follow back,
+        // which makes the graph small-world (real Twitter distances are
+        // ~4-5 hops) instead of chain-dominated.
+        if u != v && rng.chance(0.3) && seen.insert((v, u)) {
+            b.edge(v, u);
+        }
+    }
+    b.build()
+}
+
+/// BTC-like: undirected, many islands. `n` vertices are split into
+/// `components` clusters of Zipf-skewed sizes; edges stay within clusters.
+pub fn btc_like(n: usize, components: usize, avg_deg: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    // Assign vertices to components with skewed sizes (one bigger island,
+    // a tail of small ones — mirrors BTC's structure where most random
+    // (s, t) pairs are unreachable).
+    let mut comp_of = vec![0u32; n];
+    for (v, c) in comp_of.iter_mut().enumerate() {
+        *c = if v < n / 4 {
+            0 // giant component gets a quarter of the vertices
+        } else {
+            1 + rng.zipf(components - 1, 1.1) as u32
+        };
+    }
+    // Bucket members per component.
+    let mut members: Vec<Vec<VertexId>> = vec![Vec::new(); components];
+    for (v, &c) in comp_of.iter().enumerate() {
+        members[c as usize].push(v as VertexId);
+    }
+    let mut b = GraphBuilder::new(n).undirected();
+    let mut seen = FxHashSet::default();
+    for m in &members {
+        if m.len() < 2 {
+            continue;
+        }
+        // Path backbone keeps each island connected.
+        for w in m.windows(2) {
+            b.edge(w[0], w[1]);
+            seen.insert((w[0].min(w[1]), w[0].max(w[1])));
+        }
+        // Sparse random chords to reach the target degree.
+        let extra = m.len() * avg_deg / 2;
+        for _ in 0..extra {
+            let u = m[rng.below_usize(m.len())];
+            let v = m[rng.below_usize(m.len())];
+            let key = (u.min(v), u.max(v));
+            if u != v && seen.insert(key) {
+                b.edge(u, v);
+            }
+        }
+    }
+    b.build()
+}
+
+/// LiveJ-like: undirected bipartite membership graph with `users` user
+/// vertices and `groups` group vertices; group popularity is Zipf-skewed.
+pub fn livej_like(users: usize, groups: usize, memberships_per_user: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let n = users + groups;
+    let mut b = GraphBuilder::new(n).undirected();
+    let mut seen = FxHashSet::default();
+    for u in 0..users {
+        let k = 1 + rng.below_usize(memberships_per_user * 2);
+        for _ in 0..k {
+            let g = (users + rng.zipf(groups, 1.3)) as VertexId;
+            if seen.insert((u as VertexId, g)) {
+                b.edge(u as VertexId, g);
+            }
+        }
+    }
+    b.build()
+}
+
+/// WebUK-like: layered DAG with long diameter. Vertices are arranged in
+/// `layers` tiers; edges point from earlier to later tiers with strong
+/// locality (web graphs have high diameter — 2793 supersteps for level
+/// labels in the paper vs 23 on Twitter).
+pub fn webuk_like(n: usize, layers: usize, avg_deg: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let per = n / layers;
+    assert!(per >= 1, "need at least one vertex per layer");
+    let mut b = GraphBuilder::new(n);
+    let mut seen = FxHashSet::default();
+    let layer_of = |v: usize| (v / per).min(layers - 1);
+    for u in 0..n {
+        let lu = layer_of(u);
+        let deg = 1 + rng.below_usize(avg_deg * 2);
+        for _ in 0..deg {
+            // Strong locality: most edges go to the next layer; a few skip.
+            let jump = if rng.chance(0.9) {
+                1
+            } else {
+                1 + rng.below_usize(3)
+            };
+            let lt = lu + jump;
+            if lt >= layers {
+                continue;
+            }
+            let base = lt * per;
+            let span = if lt == layers - 1 { n - base } else { per };
+            let v = base + rng.below_usize(span);
+            if seen.insert((u as VertexId, v as VertexId)) {
+                b.edge(u as VertexId, v as VertexId);
+            }
+        }
+    }
+    b.build()
+}
+
+/// Web-like digraph with small intra-layer cycles: like [`webuk_like`] but
+/// every layer carries a few 3-cycles, so the SCC condensation is
+/// non-trivial (multi-vertex SCCs) without collapsing the graph — the
+/// shape the reachability experiments need (paper Table 11a: Twitter's
+/// 52.6M vertices condense to a 12.4M-vertex DAG).
+pub fn web_cyclic(n: usize, layers: usize, avg_deg: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed ^ 0xabcd);
+    let per = n / layers;
+    assert!(per >= 3, "need at least three vertices per layer");
+    let mut b = GraphBuilder::new(n);
+    let mut seen = FxHashSet::default();
+    let layer_of = |v: usize| (v / per).min(layers - 1);
+    for u in 0..n {
+        let lu = layer_of(u);
+        let deg = 1 + rng.below_usize(avg_deg * 2);
+        for _ in 0..deg {
+            let jump = if rng.chance(0.9) {
+                1
+            } else {
+                1 + rng.below_usize(3)
+            };
+            let lt = lu + jump;
+            if lt >= layers {
+                continue;
+            }
+            let base = lt * per;
+            let span = if lt == layers - 1 { n - base } else { per };
+            let v = base + rng.below_usize(span);
+            if seen.insert((u as VertexId, v as VertexId)) {
+                b.edge(u as VertexId, v as VertexId);
+            }
+        }
+    }
+    // Intra-layer 3-cycles: each merges three vertices into one SCC.
+    for l in 0..layers {
+        let base = l * per;
+        let span = if l == layers - 1 { n - base } else { per };
+        for _ in 0..span / 12 {
+            let x = (base + rng.below_usize(span)) as VertexId;
+            let y = (base + rng.below_usize(span)) as VertexId;
+            let z = (base + rng.below_usize(span)) as VertexId;
+            if x != y && y != z && z != x {
+                for (a, c) in [(x, y), (y, z), (z, x)] {
+                    if seen.insert((a, c)) {
+                        b.edge(a, c);
+                    }
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+/// Random (s, t) query pairs over `n` vertices.
+pub fn random_pairs(n: usize, count: usize, seed: u64) -> Vec<(VertexId, VertexId)> {
+    assert!(n >= 2, "need at least two vertices for distinct pairs");
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let s = rng.below_usize(n) as VertexId;
+            let mut t = rng.below_usize(n) as VertexId;
+            while t == s {
+                t = rng.below_usize(n) as VertexId;
+            }
+            (s, t)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::BitSet;
+
+    fn reach_fraction(g: &Graph, pairs: &[(VertexId, VertexId)]) -> f64 {
+        // plain serial BFS oracle
+        let n = g.num_vertices();
+        let mut hit = 0;
+        for &(s, t) in pairs {
+            let mut vis = BitSet::new(n);
+            vis.set(s as usize);
+            let mut frontier = vec![s];
+            'bfs: while !frontier.is_empty() {
+                let mut next = Vec::new();
+                for &u in &frontier {
+                    for &v in g.out(u) {
+                        if v == t {
+                            hit += 1;
+                            break 'bfs;
+                        }
+                        if !vis.set(v as usize) {
+                            next.push(v);
+                        }
+                    }
+                }
+                frontier = next;
+            }
+        }
+        hit as f64 / pairs.len() as f64
+    }
+
+    #[test]
+    fn twitter_like_is_skewed_and_reachable() {
+        let mut g = twitter_like(5_000, 10, 1);
+        assert_eq!(g.num_vertices(), 5_000);
+        assert!(g.avg_degree() >= 5.0);
+        // skew: Zipf targets concentrate IN-degree on "celebrity" vertices
+        g.ensure_in_edges();
+        let max_in = (0..5_000).map(|v| g.in_degree(v as u32)).max().unwrap();
+        assert!(
+            max_in as f64 > 10.0 * g.avg_degree(),
+            "max in-degree {max_in} vs avg {}",
+            g.avg_degree()
+        );
+        let pairs = random_pairs(5_000, 20, 2);
+        assert!(reach_fraction(&g, &pairs) > 0.6, "ring base ⇒ high reach");
+    }
+
+    #[test]
+    fn btc_like_has_low_reach() {
+        let g = btc_like(5_000, 400, 4, 3);
+        let pairs = random_pairs(5_000, 30, 4);
+        let r = reach_fraction(&g, &pairs);
+        assert!(r < 0.6, "many components ⇒ low reach, got {r}");
+    }
+
+    #[test]
+    fn livej_like_is_bipartite() {
+        let users = 1_000;
+        let groups = 200;
+        let g = livej_like(users, groups, 3, 5);
+        for u in 0..users {
+            for &v in g.out(u as VertexId) {
+                assert!(v as usize >= users, "user->user edge found");
+            }
+        }
+        for gv in users..users + groups {
+            for &v in g.out(gv as VertexId) {
+                assert!((v as usize) < users, "group->group edge found");
+            }
+        }
+    }
+
+    #[test]
+    fn webuk_like_is_dag_with_depth() {
+        let g = webuk_like(4_000, 40, 4, 7);
+        let per = 4_000 / 40;
+        // All edges go forward in layer order => DAG.
+        for u in 0..g.num_vertices() {
+            for &v in g.out(u as u32) {
+                assert!(v as usize / per > u / per || v as usize / per >= 39);
+            }
+        }
+    }
+
+    #[test]
+    fn random_pairs_no_self_loops() {
+        for (s, t) in random_pairs(100, 50, 9) {
+            assert_ne!(s, t);
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = twitter_like(1_000, 5, 42);
+        let b = twitter_like(1_000, 5, 42);
+        assert_eq!(a.num_edges(), b.num_edges());
+        assert_eq!(a.out(17), b.out(17));
+    }
+}

@@ -1,0 +1,146 @@
+//! Text loaders/dumpers for adjacency-list graph files.
+//!
+//! Format (one vertex per line, mirroring the HDFS line format the paper's
+//! Worker UDF parses):
+//!
+//! ```text
+//! <vertex-id> <tab> <neighbor> [<space> <neighbor>]*
+//! ```
+//!
+//! Weighted variant uses `neighbor:weight` tokens.
+
+use super::{Graph, GraphBuilder, VertexId};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Load an adjacency-list file. `n` is inferred as max-id + 1.
+pub fn load_adj<P: AsRef<Path>>(path: P) -> Result<Graph> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut edges: Vec<(VertexId, VertexId, Option<f32>)> = Vec::new();
+    let mut max_id: VertexId = 0;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let u: VertexId = parts
+            .next()
+            .context("missing vertex id")?
+            .parse()
+            .with_context(|| format!("line {}: bad vertex id", lineno + 1))?;
+        max_id = max_id.max(u);
+        for tok in parts {
+            let (v, w) = match tok.split_once(':') {
+                Some((v, w)) => (
+                    v.parse::<VertexId>()
+                        .with_context(|| format!("line {}: bad neighbor", lineno + 1))?,
+                    Some(
+                        w.parse::<f32>()
+                            .with_context(|| format!("line {}: bad weight", lineno + 1))?,
+                    ),
+                ),
+                None => (
+                    tok.parse::<VertexId>()
+                        .with_context(|| format!("line {}: bad neighbor", lineno + 1))?,
+                    None,
+                ),
+            };
+            max_id = max_id.max(v);
+            edges.push((u, v, w));
+        }
+    }
+    let weighted = edges.iter().any(|e| e.2.is_some());
+    if weighted && edges.iter().any(|e| e.2.is_none()) {
+        bail!("mixed weighted and unweighted edges");
+    }
+    let mut b = GraphBuilder::new(max_id as usize + 1);
+    for (u, v, w) in edges {
+        match w {
+            Some(w) => b.wedge(u, v, w),
+            None => b.edge(u, v),
+        }
+    }
+    Ok(b.build())
+}
+
+/// Dump a graph back to the adjacency-list format (V-data dump UDF analog).
+pub fn dump_adj<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    for v in 0..g.num_vertices() as VertexId {
+        write!(w, "{v}\t")?;
+        let nbrs = g.out(v);
+        if g.weighted() {
+            let ws = g.out_w(v);
+            for (i, (&u, &wt)) in nbrs.iter().zip(ws).enumerate() {
+                if i > 0 {
+                    write!(w, " ")?;
+                }
+                write!(w, "{u}:{wt}")?;
+            }
+        } else {
+            for (i, &u) in nbrs.iter().enumerate() {
+                if i > 0 {
+                    write!(w, " ")?;
+                }
+                write!(w, "{u}")?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_unweighted() {
+        let mut b = GraphBuilder::new(4);
+        b.edge(0, 1);
+        b.edge(0, 2);
+        b.edge(3, 0);
+        let g = b.build();
+        let dir = std::env::temp_dir().join("quegel_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.adj");
+        dump_adj(&g, &p).unwrap();
+        let g2 = load_adj(&p).unwrap();
+        assert_eq!(g2.num_vertices(), 4);
+        assert_eq!(g2.out(0), g.out(0));
+        assert_eq!(g2.out(3), g.out(3));
+    }
+
+    #[test]
+    fn roundtrip_weighted() {
+        let mut b = GraphBuilder::new(3);
+        b.wedge(0, 1, 1.5);
+        b.wedge(1, 2, 2.25);
+        let g = b.build();
+        let dir = std::env::temp_dir().join("quegel_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.adj");
+        dump_adj(&g, &p).unwrap();
+        let g2 = load_adj(&p).unwrap();
+        assert!(g2.weighted());
+        assert_eq!(g2.out_w(0), &[1.5]);
+        assert_eq!(g2.out_w(1), &[2.25]);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let dir = std::env::temp_dir().join("quegel_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.adj");
+        std::fs::write(&p, "# comment\n\n0\t1 2\n2\t0\n").unwrap();
+        let g = load_adj(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.out(0), &[1, 2]);
+    }
+}

@@ -1,0 +1,377 @@
+//! Graph substrate: CSR storage with optional in-edges and edge weights,
+//! plus loaders and synthetic dataset generators.
+
+pub mod gen;
+pub mod io;
+
+use crate::util::FxHashMap;
+
+/// Vertex identifier. 32 bits covers every dataset in the evaluation.
+pub type VertexId = u32;
+
+/// Direction selector for traversals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    Out,
+    In,
+}
+
+/// Compressed-sparse-row digraph. Undirected graphs store each edge in both
+/// directions. In-adjacency is materialized lazily (`ensure_in_edges`) since
+/// only bidirectional algorithms need it (mirrors the paper's observation
+/// that BiBFS loading costs more because Γ_in must be built).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    out_offsets: Vec<u64>,
+    out_edges: Vec<VertexId>,
+    /// Edge weights parallel to `out_edges`; empty means unweighted.
+    out_weights: Vec<f32>,
+    in_offsets: Vec<u64>,
+    in_edges: Vec<VertexId>,
+    in_weights: Vec<f32>,
+}
+
+impl Graph {
+    /// Number of vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.out_offsets.len().saturating_sub(1)
+    }
+
+    /// Number of directed edges (undirected graphs count both arcs).
+    pub fn num_edges(&self) -> usize {
+        self.out_edges.len()
+    }
+
+    /// True if edge weights are stored.
+    pub fn weighted(&self) -> bool {
+        !self.out_weights.is_empty()
+    }
+
+    /// Out-neighbors of `v`.
+    #[inline]
+    pub fn out(&self, v: VertexId) -> &[VertexId] {
+        let (a, b) = (
+            self.out_offsets[v as usize] as usize,
+            self.out_offsets[v as usize + 1] as usize,
+        );
+        &self.out_edges[a..b]
+    }
+
+    /// Out-neighbor weights of `v` (parallel to `out(v)`).
+    #[inline]
+    pub fn out_w(&self, v: VertexId) -> &[f32] {
+        let (a, b) = (
+            self.out_offsets[v as usize] as usize,
+            self.out_offsets[v as usize + 1] as usize,
+        );
+        &self.out_weights[a..b]
+    }
+
+    /// In-neighbors of `v`; panics unless `ensure_in_edges` was called.
+    #[inline]
+    pub fn inn(&self, v: VertexId) -> &[VertexId] {
+        debug_assert!(
+            !self.in_offsets.is_empty(),
+            "call ensure_in_edges() before inn()"
+        );
+        let (a, b) = (
+            self.in_offsets[v as usize] as usize,
+            self.in_offsets[v as usize + 1] as usize,
+        );
+        &self.in_edges[a..b]
+    }
+
+    /// In-neighbor weights of `v`.
+    #[inline]
+    pub fn in_w(&self, v: VertexId) -> &[f32] {
+        let (a, b) = (
+            self.in_offsets[v as usize] as usize,
+            self.in_offsets[v as usize + 1] as usize,
+        );
+        &self.in_weights[a..b]
+    }
+
+    /// Neighbors in the given direction.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId, dir: Dir) -> &[VertexId] {
+        match dir {
+            Dir::Out => self.out(v),
+            Dir::In => self.inn(v),
+        }
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn out_degree(&self, v: VertexId) -> usize {
+        self.out(v).len()
+    }
+
+    /// In-degree of `v` (requires in-edges).
+    #[inline]
+    pub fn in_degree(&self, v: VertexId) -> usize {
+        self.inn(v).len()
+    }
+
+    /// True if in-adjacency has been materialized.
+    pub fn has_in_edges(&self) -> bool {
+        !self.in_offsets.is_empty()
+    }
+
+    /// Materialize in-adjacency by transposing the out-CSR.
+    pub fn ensure_in_edges(&mut self) {
+        if self.has_in_edges() {
+            return;
+        }
+        let n = self.num_vertices();
+        let mut degs = vec![0u64; n + 1];
+        for &d in &self.out_edges {
+            degs[d as usize + 1] += 1;
+        }
+        for i in 0..n {
+            degs[i + 1] += degs[i];
+        }
+        let mut edges = vec![0 as VertexId; self.out_edges.len()];
+        let mut weights = if self.weighted() {
+            vec![0f32; self.out_edges.len()]
+        } else {
+            Vec::new()
+        };
+        let mut cursor = degs.clone();
+        for u in 0..n {
+            let (a, b) = (
+                self.out_offsets[u] as usize,
+                self.out_offsets[u + 1] as usize,
+            );
+            for idx in a..b {
+                let v = self.out_edges[idx] as usize;
+                let at = cursor[v] as usize;
+                edges[at] = u as VertexId;
+                if self.weighted() {
+                    weights[at] = self.out_weights[idx];
+                }
+                cursor[v] += 1;
+            }
+        }
+        self.in_offsets = degs;
+        self.in_edges = edges;
+        self.in_weights = weights;
+    }
+
+    /// Maximum out-degree (paper Table 1 reports max degree).
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.out_degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Average out-degree.
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            return 0.0;
+        }
+        self.num_edges() as f64 / self.num_vertices() as f64
+    }
+
+    /// Total in-memory footprint estimate in bytes (for load-cost modeling).
+    pub fn footprint_bytes(&self) -> usize {
+        self.out_offsets.len() * 8
+            + self.out_edges.len() * 4
+            + self.out_weights.len() * 4
+            + self.in_offsets.len() * 8
+            + self.in_edges.len() * 4
+            + self.in_weights.len() * 4
+    }
+}
+
+/// Incremental builder accepting unsorted edges, with optional dedup.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(VertexId, VertexId)>,
+    weights: Vec<f32>,
+    weighted: bool,
+    undirected: bool,
+}
+
+impl GraphBuilder {
+    /// Builder for a graph with `n` vertices.
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            ..Default::default()
+        }
+    }
+
+    /// Treat every added edge as undirected (stores both arcs).
+    pub fn undirected(mut self) -> Self {
+        self.undirected = true;
+        self
+    }
+
+    /// Add an unweighted edge.
+    pub fn edge(&mut self, u: VertexId, v: VertexId) {
+        debug_assert!(!self.weighted);
+        self.edges.push((u, v));
+        if self.undirected && u != v {
+            self.edges.push((v, u));
+        }
+    }
+
+    /// Add a weighted edge.
+    pub fn wedge(&mut self, u: VertexId, v: VertexId, w: f32) {
+        self.weighted = true;
+        self.edges.push((u, v));
+        self.weights.push(w);
+        if self.undirected && u != v {
+            self.edges.push((v, u));
+            self.weights.push(w);
+        }
+    }
+
+    /// Number of vertices declared.
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Finalize into CSR form. Duplicate parallel edges are retained (they
+    /// are harmless for BFS-style algorithms and the generators avoid them).
+    pub fn build(self) -> Graph {
+        let n = self.n;
+        let mut offsets = vec![0u64; n + 1];
+        for &(u, _) in &self.edges {
+            offsets[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let m = self.edges.len();
+        let mut out_edges = vec![0 as VertexId; m];
+        let mut out_weights = if self.weighted { vec![0f32; m] } else { Vec::new() };
+        let mut cursor = offsets.clone();
+        for (i, &(u, v)) in self.edges.iter().enumerate() {
+            let at = cursor[u as usize] as usize;
+            out_edges[at] = v;
+            if self.weighted {
+                out_weights[at] = self.weights[i];
+            }
+            cursor[u as usize] += 1;
+        }
+        Graph {
+            out_offsets: offsets,
+            out_edges,
+            out_weights,
+            in_offsets: Vec::new(),
+            in_edges: Vec::new(),
+            in_weights: Vec::new(),
+        }
+    }
+}
+
+/// Map external string ids to dense `VertexId`s (for text loaders).
+#[derive(Debug, Default)]
+pub struct IdMap {
+    map: FxHashMap<String, VertexId>,
+    names: Vec<String>,
+}
+
+impl IdMap {
+    /// Intern `name`, returning its dense id.
+    pub fn intern(&mut self, name: &str) -> VertexId {
+        if let Some(&id) = self.map.get(name) {
+            return id;
+        }
+        let id = self.names.len() as VertexId;
+        self.map.insert(name.to_string(), id);
+        self.names.push(name.to_string());
+        id
+    }
+
+    /// Look up an already-interned name.
+    pub fn get(&self, name: &str) -> Option<VertexId> {
+        self.map.get(name).copied()
+    }
+
+    /// Reverse lookup.
+    pub fn name(&self, id: VertexId) -> &str {
+        &self.names[id as usize]
+    }
+
+    /// Number of interned ids.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True if nothing has been interned.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3
+        let mut b = GraphBuilder::new(4);
+        b.edge(0, 1);
+        b.edge(0, 2);
+        b.edge(1, 3);
+        b.edge(2, 3);
+        b.build()
+    }
+
+    #[test]
+    fn csr_basic() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.out(0), &[1, 2]);
+        assert_eq!(g.out(3), &[] as &[VertexId]);
+        assert_eq!(g.max_degree(), 2);
+        assert!((g.avg_degree() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transpose() {
+        let mut g = diamond();
+        g.ensure_in_edges();
+        assert_eq!(g.inn(3), &[1, 2]);
+        assert_eq!(g.inn(0), &[] as &[VertexId]);
+        assert_eq!(g.in_degree(3), 2);
+    }
+
+    #[test]
+    fn undirected_doubles_arcs() {
+        let mut b = GraphBuilder::new(3).undirected();
+        b.edge(0, 1);
+        b.edge(1, 2);
+        let g = b.build();
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.out(1), &[0, 2]);
+    }
+
+    #[test]
+    fn weighted_edges() {
+        let mut b = GraphBuilder::new(3);
+        b.wedge(0, 1, 2.5);
+        b.wedge(0, 2, 1.5);
+        let mut g = b.build();
+        assert!(g.weighted());
+        assert_eq!(g.out_w(0), &[2.5, 1.5]);
+        g.ensure_in_edges();
+        assert_eq!(g.in_w(1), &[2.5]);
+    }
+
+    #[test]
+    fn idmap_roundtrip() {
+        let mut m = IdMap::default();
+        let a = m.intern("alice");
+        let b = m.intern("bob");
+        assert_eq!(m.intern("alice"), a);
+        assert_ne!(a, b);
+        assert_eq!(m.name(b), "bob");
+        assert_eq!(m.len(), 2);
+    }
+}

@@ -1,0 +1,28 @@
+//! Quegel: a general-purpose query-centric framework for querying big graphs.
+//!
+//! Reproduction of Yan et al., "Quegel: A General-Purpose Query-Centric
+//! Framework for Querying Big Graphs" (2016), as a three-layer
+//! Rust + JAX + Pallas stack. See DESIGN.md for the system inventory.
+//!
+//! Layer map:
+//! * [`coordinator`] — the superstep-sharing engine (the paper's core
+//!   contribution): super-rounds, capacity `C`, lazy VQ-data.
+//! * [`vertex`] — the `QueryApp` programming interface (paper §4).
+//! * [`network`] — simulated BSP cluster + cost model (testbed stand-in).
+//! * [`graph`] — CSR substrate, loaders, synthetic dataset generators.
+//! * [`apps`] — the paper's five applications (§5).
+//! * [`baselines`] — Giraph/GraphLab/GraphChi/Neo4j-like execution
+//!   disciplines for the comparison tables.
+//! * [`runtime`] — PJRT loader/executor for the AOT kernel artifacts.
+
+pub mod analytics;
+pub mod apps;
+pub mod baselines;
+pub mod coordinator;
+pub mod graph;
+pub mod metrics;
+pub mod network;
+pub mod prop;
+pub mod runtime;
+pub mod util;
+pub mod vertex;

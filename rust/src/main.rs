@@ -1,0 +1,341 @@
+//! The `quegel` CLI: graph loading, index construction and interactive /
+//! batch query serving from the console (the paper's client-console mode).
+//!
+//! Subcommands (hand-rolled parsing; the offline registry has no clap):
+//!
+//! ```text
+//! quegel ppsp   [--graph FILE | --gen twitter:N:D] [--algo bfs|bibfs|hub2]
+//!               [--hubs K] [--workers W] [--capacity C] [--queries FILE | --random N]
+//! quegel xml    [--dblp N | --xmark N] [--semantics slca|slca-la|elca|maxmatch]
+//!               [--random N]
+//! quegel reach  [--gen web:N:L:D] [--random N]
+//! quegel gkws   [--resources N] [--keywords M] [--random N]
+//! quegel terrain [--mesh WxH] [--eps E] [--query X,Y]
+//! ```
+//!
+//! Every subcommand prints per-query answers plus the engine metrics.
+
+use anyhow::{bail, Context, Result};
+use quegel::apps::ppsp::hub2::{Hub2Indexer, Hub2Query, MinPlus, RustMinPlus};
+use quegel::apps::ppsp::{Bfs, BiBfs};
+use quegel::coordinator::Engine;
+use quegel::graph::{gen, io, Graph};
+use quegel::metrics::{fmt_pct, fmt_secs};
+use quegel::network::Cluster;
+use std::collections::HashMap;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parsed `--key value` options.
+struct Opts {
+    flags: HashMap<String, String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected argument '{a}' (flags are --key value)");
+            };
+            let val = args
+                .get(i + 1)
+                .with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad --{key}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn load_graph(opts: &Opts) -> Result<Graph> {
+    if let Some(path) = opts.get("graph") {
+        return io::load_adj(path);
+    }
+    let spec = opts.get("gen").unwrap_or("twitter:50000:8");
+    let parts: Vec<&str> = spec.split(':').collect();
+    let g = match parts.as_slice() {
+        ["twitter", n, d] => gen::twitter_like(n.parse()?, d.parse()?, 1),
+        ["btc", n, c, d] => gen::btc_like(n.parse()?, c.parse()?, d.parse()?, 1),
+        ["livej", u, gr, m] => gen::livej_like(u.parse()?, gr.parse()?, m.parse()?, 1),
+        ["web", n, l, d] => gen::web_cyclic(n.parse()?, l.parse()?, d.parse()?, 1),
+        _ => bail!("unknown --gen spec '{spec}' (twitter:N:D, btc:N:C:D, livej:U:G:M, web:N:L:D)"),
+    };
+    Ok(g)
+}
+
+fn cmd_ppsp(opts: Opts) -> Result<()> {
+    let mut g = load_graph(&opts)?;
+    g.ensure_in_edges();
+    let n = g.num_vertices();
+    let workers = opts.usize_or("workers", 8)?;
+    let capacity = opts.usize_or("capacity", 8)?;
+    let cluster = Cluster::new(workers);
+    let algo = opts.get("algo").unwrap_or("bibfs");
+    let queries = match opts.get("queries") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            text.lines()
+                .filter(|l| !l.trim().is_empty())
+                .map(|l| {
+                    let (s, t) = l.split_once(char::is_whitespace).context("query line")?;
+                    Ok((s.trim().parse()?, t.trim().parse()?))
+                })
+                .collect::<Result<Vec<_>>>()?
+        }
+        None => gen::random_pairs(n, opts.usize_or("random", 8)?, 2),
+    };
+    println!("graph |V|={n} |E|={} algo={algo} W={workers} C={capacity}", g.num_edges());
+
+    macro_rules! serve {
+        ($app:expr, $mk:expr) => {{
+            let mut eng = Engine::new($app, cluster.clone(), n).capacity(capacity);
+            let ids: Vec<_> = queries.iter().map(|&q| eng.submit($mk(q))).collect();
+            eng.run_until_idle();
+            for (i, id) in ids.iter().enumerate() {
+                let r = eng.results().iter().find(|r| r.qid == *id).unwrap();
+                println!(
+                    "({}, {}) -> {}  [steps {}, access {}, sim {}]",
+                    queries[i].0,
+                    queries[i].1,
+                    r.out.map_or("unreachable".into(), |d| d.to_string()),
+                    r.stats.supersteps,
+                    fmt_pct(r.stats.access_rate),
+                    fmt_secs(r.stats.processing()),
+                );
+            }
+            println!("total sim {}", fmt_secs(eng.sim_time()));
+        }};
+    }
+    match algo {
+        "bfs" => serve!(Bfs::new(&g), |q| q),
+        "bibfs" => serve!(BiBfs::new(&g), |q| q),
+        "hub2" => {
+            let k = opts.usize_or("hubs", 64)?;
+            let mp: &dyn MinPlus = &RustMinPlus;
+            let (idx, st) = Hub2Indexer::new(k).build(&g, cluster.clone(), mp);
+            println!("hub2 index built: k={} sim {}", idx.k(), fmt_secs(st.index_time));
+            let dubs = idx.dub_for(&queries, mp, capacity, idx.k());
+            let mut eng = Engine::new(Hub2Query::new(&g, &idx), cluster.clone(), n).capacity(capacity);
+            let ids: Vec<_> = queries
+                .iter()
+                .zip(&dubs)
+                .map(|(&(s, t), &d)| eng.submit((s, t, d)))
+                .collect();
+            eng.run_until_idle();
+            for (i, id) in ids.iter().enumerate() {
+                let r = eng.results().iter().find(|r| r.qid == *id).unwrap();
+                println!(
+                    "({}, {}) -> {}  [steps {}, access {}]",
+                    queries[i].0,
+                    queries[i].1,
+                    r.out.map_or("unreachable".into(), |d| d.to_string()),
+                    r.stats.supersteps,
+                    fmt_pct(r.stats.access_rate),
+                );
+            }
+            println!("total sim {}", fmt_secs(eng.sim_time()));
+        }
+        other => bail!("unknown --algo '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_xml(opts: Opts) -> Result<()> {
+    use quegel::apps::xml::{self, data};
+    let corpus = if let Some(n) = opts.get("xmark") {
+        data::generate(&data::XmlGenConfig {
+            dblp_like: false,
+            records: n.parse()?,
+            vocab: 4000,
+            seed: 3,
+        })
+    } else {
+        data::generate(&data::XmlGenConfig {
+            dblp_like: true,
+            records: opts.usize_or("dblp", 20_000)?,
+            vocab: 4000,
+            seed: 3,
+        })
+    };
+    let nq = opts.usize_or("random", 10)?;
+    let pool = data::query_pool(&corpus, nq, 2, 4);
+    let sem = opts.get("semantics").unwrap_or("slca-la");
+    let cluster = Cluster::new(opts.usize_or("workers", 8)?);
+    println!("corpus {} vertices, semantics {sem}, {nq} queries", corpus.len());
+    macro_rules! serve {
+        ($app:expr) => {{
+            let mut eng = Engine::new($app, cluster.clone(), corpus.len()).capacity(8);
+            for q in &pool {
+                eng.submit(q.clone());
+            }
+            eng.run_until_idle();
+            for r in eng.results() {
+                println!(
+                    "q{} -> {} result vertices [access {}]",
+                    r.qid,
+                    r.out.len(),
+                    fmt_pct(r.stats.access_rate)
+                );
+            }
+            println!("total sim {}", fmt_secs(eng.sim_time()));
+        }};
+    }
+    match sem {
+        "slca" => serve!(xml::SlcaNaive::new(&corpus)),
+        "slca-la" => serve!(xml::SlcaLevelAligned::new(&corpus)),
+        "elca" => serve!(xml::Elca::new(&corpus)),
+        "maxmatch" => {
+            let mut eng = Engine::new(xml::MaxMatch::new(&corpus), cluster, corpus.len()).capacity(8);
+            for q in &pool {
+                eng.submit(q.clone());
+            }
+            eng.run_until_idle();
+            for r in eng.results() {
+                println!("q{} -> {} tree vertices", r.qid, r.out.len());
+            }
+            println!("total sim {}", fmt_secs(eng.sim_time()));
+        }
+        other => bail!("unknown --semantics '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_reach(opts: Opts) -> Result<()> {
+    use quegel::apps::reach::{build_labels, condense, ReachQuery};
+    let g = load_graph(&opts)?;
+    let n = g.num_vertices();
+    let cond = condense(&g);
+    let mut dag = cond.dag.clone();
+    dag.ensure_in_edges();
+    let cluster = Cluster::new(opts.usize_or("workers", 8)?);
+    let (labels, st) = build_labels(&dag, &cluster, true);
+    println!(
+        "|V_DAG|={} labels: level {} / yes {} / no {}",
+        dag.num_vertices(),
+        fmt_secs(st.level_time),
+        fmt_secs(st.yes_time),
+        fmt_secs(st.no_time)
+    );
+    let queries = gen::random_pairs(n, opts.usize_or("random", 10)?, 5);
+    let mut eng = Engine::new(ReachQuery::new(&dag, &labels), cluster, dag.num_vertices()).capacity(8);
+    let ids: Vec<_> = queries
+        .iter()
+        .map(|&(s, t)| eng.submit((cond.scc_of[s as usize], cond.scc_of[t as usize])))
+        .collect();
+    eng.run_until_idle();
+    for (i, id) in ids.iter().enumerate() {
+        let r = eng.results().iter().find(|r| r.qid == *id).unwrap();
+        println!(
+            "({}, {}) -> {}  [steps {}, access {}]",
+            queries[i].0,
+            queries[i].1,
+            if r.out { "reachable" } else { "unreachable" },
+            r.stats.supersteps,
+            fmt_pct(r.stats.access_rate)
+        );
+    }
+    println!("total sim {}", fmt_secs(eng.sim_time()));
+    Ok(())
+}
+
+fn cmd_gkws(opts: Opts) -> Result<()> {
+    use quegel::apps::gkws::{self, query::GkwsQuery, KeywordSearch};
+    let g = gkws::data::generate(&gkws::RdfGenConfig {
+        resources: opts.usize_or("resources", 30_000)?,
+        avg_deg: 5,
+        predicates: 300,
+        vocab: 4000,
+        seed: 6,
+    });
+    let m = opts.usize_or("keywords", 2)?;
+    let pool = gkws::data::query_pool(&g, opts.usize_or("random", 10)?, m, 7);
+    let cluster = Cluster::new(opts.usize_or("workers", 8)?);
+    let mut eng = Engine::new(KeywordSearch::new(&g), cluster, g.len()).capacity(8);
+    for kw in pool {
+        eng.submit(GkwsQuery {
+            keywords: kw,
+            delta_max: 3,
+        });
+    }
+    eng.run_until_idle();
+    for r in eng.results() {
+        println!(
+            "q{} -> {} roots [access {}]",
+            r.qid,
+            r.out.len(),
+            fmt_pct(r.stats.access_rate)
+        );
+    }
+    println!("total sim {}", fmt_secs(eng.sim_time()));
+    Ok(())
+}
+
+fn cmd_terrain(opts: Opts) -> Result<()> {
+    use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
+    let mesh = opts.get("mesh").unwrap_or("60x60");
+    let (w, h) = mesh
+        .split_once('x')
+        .context("--mesh must be WxH")
+        .and_then(|(a, b)| Ok((a.parse::<usize>()?, b.parse::<usize>()?)))?;
+    let eps: f64 = opts.get("eps").unwrap_or("2.0").parse()?;
+    let dem = Dem::fractal(w, h, 10.0, 250.0, 9);
+    let net = TerrainNet::build(&dem, eps);
+    println!(
+        "DEM {w}x{h}, eps {eps}: |V|={} |E|={}",
+        net.graph.num_vertices(),
+        net.graph.num_edges()
+    );
+    let q = opts.get("query").unwrap_or("10,10");
+    let (qx, qy) = q
+        .split_once(',')
+        .context("--query must be X,Y")
+        .and_then(|(a, b)| Ok((a.parse::<usize>()?, b.parse::<usize>()?)))?;
+    let cluster = Cluster::new(opts.usize_or("workers", 8)?);
+    let mut eng = Engine::new(TerrainSssp::new(&net), cluster, net.graph.num_vertices());
+    let r = eng.run_one((net.corner(0, 0), net.corner(qx.min(w - 1), qy.min(h - 1))));
+    println!(
+        "(0,0) -> ({qx},{qy}): {:.1} m over {} polyline points [steps {}, access {}]",
+        r.out.dist,
+        r.out.path.len(),
+        r.stats.supersteps,
+        fmt_pct(r.stats.access_rate)
+    );
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        println!("usage: quegel <ppsp|xml|reach|gkws|terrain> [--flags]");
+        println!("see rust/src/main.rs header for the full flag list");
+        return Ok(());
+    };
+    let opts = Opts::parse(rest)?;
+    match cmd.as_str() {
+        "ppsp" => cmd_ppsp(opts),
+        "xml" => cmd_xml(opts),
+        "reach" => cmd_reach(opts),
+        "gkws" => cmd_gkws(opts),
+        "terrain" => cmd_terrain(opts),
+        other => bail!("unknown subcommand '{other}'"),
+    }
+}

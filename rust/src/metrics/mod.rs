@@ -1,0 +1,175 @@
+//! Metrics: per-query statistics and engine-wide counters, plus the table
+//! formatting used by the benchmark harness to print paper-style rows.
+
+use crate::vertex::QueryId;
+
+/// Statistics for one completed query.
+#[derive(Debug, Clone, Default)]
+pub struct QueryStats {
+    pub qid: QueryId,
+    /// Supersteps executed (n_q; excludes the reporting super-round).
+    pub supersteps: u64,
+    /// Messages sent (post-combiner).
+    pub messages: u64,
+    /// Bytes put on the wire (post-combiner, incl. headers).
+    pub bytes: u64,
+    /// Distinct vertices that allocated VQ-data (the paper's access count).
+    pub touched: u64,
+    /// Access rate = touched / |V|.
+    pub access_rate: f64,
+    /// Simulated cluster time at submission.
+    pub submitted_at: f64,
+    /// Simulated cluster time when processing started (left the queue).
+    pub started_at: f64,
+    /// Simulated cluster time when the result was reported.
+    pub finished_at: f64,
+    /// True if the query hit the engine's superstep cap.
+    pub truncated: bool,
+}
+
+impl QueryStats {
+    /// End-to-end simulated latency (queue wait + processing).
+    pub fn latency(&self) -> f64 {
+        self.finished_at - self.submitted_at
+    }
+
+    /// Processing-only simulated time.
+    pub fn processing(&self) -> f64 {
+        self.finished_at - self.started_at
+    }
+}
+
+/// Engine-wide counters, accumulated across all super-rounds.
+#[derive(Debug, Clone, Default)]
+pub struct EngineMetrics {
+    pub super_rounds: u64,
+    pub total_messages: u64,
+    pub total_bytes: u64,
+    pub total_compute_calls: u64,
+    /// Simulated cluster seconds consumed so far.
+    pub sim_time: f64,
+    /// Wall-clock seconds spent inside the engine (perf pass metric).
+    pub wall_time: f64,
+    /// Peak number of simultaneously in-flight queries.
+    pub peak_inflight: usize,
+}
+
+/// Fixed-width table printer for bench output (we have no external
+/// table/serde crates offline; benches print paper-shaped rows).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Self {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with padded columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:<w$} | ", w = w));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&format!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        ));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Human-readable seconds with sensible precision.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0} s")
+    } else if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+/// Percentage with two significant digits.
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_decomposition() {
+        let s = QueryStats {
+            submitted_at: 1.0,
+            started_at: 2.0,
+            finished_at: 5.0,
+            ..Default::default()
+        };
+        assert!((s.latency() - 4.0).abs() < 1e-12);
+        assert!((s.processing() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["a", "bb"]);
+        t.row(vec!["x", "y"]);
+        t.row(vec!["long", "z"]);
+        let r = t.render();
+        assert!(r.contains("| a    | bb |"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(vec!["a"]);
+        t.row(vec!["x", "y"]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(0.0005), "500.0 us");
+        assert_eq!(fmt_secs(0.5), "500.00 ms");
+        assert_eq!(fmt_secs(2.5), "2.50 s");
+        assert_eq!(fmt_pct(0.1234), "12.34%");
+    }
+}

@@ -1,0 +1,184 @@
+//! Simulated BSP cluster: worker topology + network/compute cost model.
+//!
+//! The paper ran on 15 machines × 8 workers over Gigabit Ethernet. This
+//! module replaces that testbed with an analytic cost model: every
+//! super-round costs
+//!
+//! ```text
+//! max_w(compute_w) + barrier_latency + bytes_on_wire / bandwidth
+//! [+ scan_bytes / disk_bw   for single-PC engines]
+//! ```
+//!
+//! which is exactly the structure the paper's findings depend on (the
+//! superstep-sharing win is "one barrier per super-round instead of C",
+//! the capacity saturation is bandwidth saturation, Giraph's weakness is
+//! per-query reload). See DESIGN.md §5 for the substitution argument.
+
+use crate::graph::VertexId;
+
+/// Cost-model parameters (seconds / bytes). Defaults are calibrated to a
+/// Gigabit-Ethernet cluster of commodity nodes, scaled so that laptop-sized
+/// synthetic graphs land in the paper's regime (queries ~ a second without
+/// index, tens of ms with).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// One synchronization barrier (MPI allreduce-ish) per super-round.
+    pub barrier_latency_s: f64,
+    /// Cluster bisection bandwidth for message exchange.
+    pub bandwidth_bytes_per_s: f64,
+    /// CPU overhead of producing/consuming one message.
+    pub per_msg_overhead_s: f64,
+    /// Cost of one `compute()` call (excluding per-message work).
+    pub per_vertex_compute_s: f64,
+    /// Header bytes added to every message on the wire (dst + qid + len).
+    pub msg_header_bytes: usize,
+    /// Graph loading throughput from distributed storage ("HDFS").
+    pub load_bytes_per_s: f64,
+    /// Fixed job start-up cost (container scheduling etc.); dominant in the
+    /// Giraph-like baseline which pays it per query.
+    pub startup_s: f64,
+    /// If > 0: a single-PC out-of-core engine (GraphChi-like) that must
+    /// scan this many bytes from disk in EVERY super-round.
+    pub scan_bytes_per_round: f64,
+    /// Disk bandwidth for `scan_bytes_per_round`.
+    pub disk_bytes_per_s: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            // ~1 ms barrier: MPI barrier + aggregator allreduce on 15 nodes.
+            barrier_latency_s: 1e-3,
+            // Gigabit Ethernet ≈ 125 MB/s payload.
+            bandwidth_bytes_per_s: 125e6,
+            // ~100 ns to serialize + route + deliver one small message.
+            per_msg_overhead_s: 100e-9,
+            // ~50 ns per compute() call (hash lookup + user logic).
+            per_vertex_compute_s: 50e-9,
+            msg_header_bytes: 12,
+            // HDFS sequential read ≈ 200 MB/s aggregate.
+            load_bytes_per_s: 200e6,
+            startup_s: 0.0,
+            scan_bytes_per_round: 0.0,
+            disk_bytes_per_s: 100e6,
+        }
+    }
+}
+
+impl CostModel {
+    /// Simulated time to load `bytes` of graph data (one-off, or per query
+    /// for the Giraph-like baseline).
+    pub fn load_time(&self, bytes: usize) -> f64 {
+        self.startup_s + bytes as f64 / self.load_bytes_per_s
+    }
+}
+
+/// Logical cluster: `workers` BSP workers plus the cost model.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub workers: usize,
+    pub cost: CostModel,
+}
+
+impl Cluster {
+    /// Workers hosted per machine (the paper runs 8).
+    pub const WORKERS_PER_MACHINE: usize = 8;
+
+    /// Cluster with the default Gigabit cost model.
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        Self {
+            workers,
+            cost: CostModel::default(),
+        }
+    }
+
+    /// Cluster with an explicit cost model.
+    pub fn with_cost(workers: usize, cost: CostModel) -> Self {
+        assert!(workers > 0);
+        Self { workers, cost }
+    }
+
+    /// Number of physical machines (each contributes its own NIC, so
+    /// aggregate bandwidth scales with this).
+    pub fn machines(&self) -> usize {
+        self.workers.div_ceil(Self::WORKERS_PER_MACHINE).max(1)
+    }
+
+    /// Paper's hash partitioning: vertex v lives on worker v mod W.
+    #[inline]
+    pub fn worker_of(&self, v: VertexId) -> usize {
+        (v as usize) % self.workers
+    }
+
+    /// Simulated time for one super-round given per-worker compute seconds
+    /// and the total bytes exchanged at the barrier. `bandwidth_bytes_per_s`
+    /// is per machine; the aggregate scales with the machine count.
+    pub fn super_round_time(&self, per_worker_compute: &[f64], bytes_on_wire: usize) -> f64 {
+        let compute = per_worker_compute.iter().cloned().fold(0.0, f64::max);
+        let agg_bw = self.cost.bandwidth_bytes_per_s * self.machines() as f64;
+        let mut t = compute + self.cost.barrier_latency_s + bytes_on_wire as f64 / agg_bw;
+        if self.cost.scan_bytes_per_round > 0.0 {
+            t += self.cost.scan_bytes_per_round / self.cost.disk_bytes_per_s;
+        }
+        t
+    }
+
+    /// Simulated graph-load time (HDFS read parallelized across machines).
+    pub fn load_time(&self, bytes: usize) -> f64 {
+        self.cost.startup_s
+            + bytes as f64 / (self.cost.load_bytes_per_s * self.machines() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_of_is_mod() {
+        let c = Cluster::new(8);
+        assert_eq!(c.worker_of(0), 0);
+        assert_eq!(c.worker_of(17), 1);
+    }
+
+    #[test]
+    fn super_round_time_takes_max_worker() {
+        let c = Cluster::with_cost(
+            2,
+            CostModel {
+                barrier_latency_s: 1.0,
+                bandwidth_bytes_per_s: 100.0,
+                ..Default::default()
+            },
+        );
+        // workers at 2s and 4s, 200 bytes at 100 B/s = 2s, barrier 1s => 7s
+        let t = c.super_round_time(&[2.0, 4.0], 200);
+        assert!((t - 7.0).abs() < 1e-9, "got {t}");
+    }
+
+    #[test]
+    fn scan_cost_added_when_configured() {
+        let c = Cluster::with_cost(
+            1,
+            CostModel {
+                barrier_latency_s: 0.0,
+                scan_bytes_per_round: 1000.0,
+                disk_bytes_per_s: 100.0,
+                ..Default::default()
+            },
+        );
+        let t = c.super_round_time(&[0.0], 0);
+        assert!((t - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn load_time_includes_startup() {
+        let cm = CostModel {
+            startup_s: 5.0,
+            load_bytes_per_s: 100.0,
+            ..Default::default()
+        };
+        assert!((cm.load_time(1000) - 15.0).abs() < 1e-9);
+    }
+}

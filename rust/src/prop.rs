@@ -1,0 +1,77 @@
+//! Minimal in-repo property-testing harness.
+//!
+//! The offline registry has no `proptest`; this module provides the same
+//! methodology at small scale: run a property over many seeded random
+//! cases, and on failure report the seed so the case replays exactly
+//! (`Rng::new(seed)` is deterministic). Used by `rust/tests/props.rs` for
+//! the coordinator invariants listed in DESIGN.md §7.
+
+use crate::util::Rng;
+
+/// Run `prop` over `cases` deterministic random cases. Panics with the
+/// failing seed (replayable) if the property returns an `Err`.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        // Decorrelate consecutive case seeds.
+        let seed = 0x9e37_79b9u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(0x7f4a_7c15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+/// Equality helper with value reporting.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($arg:tt)*) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} (left: {:?}, right: {:?})",
+                format!($($arg)*),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("tautology", 50, |rng| {
+            let x = rng.below(100);
+            prop_assert!(x < 100, "below out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        check("fails", 10, |rng| {
+            let x = rng.below(10);
+            prop_assert!(x > 100, "x={x} not > 100");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,107 @@
+//! PJRT-backed [`MinPlus`](crate::apps::ppsp::hub2::MinPlus) evaluator: the
+//! L1 Pallas kernels (AOT-lowered to `artifacts/*.hlo.txt`) on the query
+//! hot path.
+//!
+//! Artifact shapes are static (see python/compile/aot.py): the hub table is
+//! padded to `k ∈ {128, 256}`, query batches to `c = 8` rows. The rust side
+//! pads with INF rows (inert in the tropical semiring).
+
+use super::{HloExecutable, Runtime};
+use crate::apps::ppsp::hub2::{MinPlus, F_INF};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Batch width the dub artifact was lowered with.
+pub const ARTIFACT_BATCH: usize = 8;
+/// Hub-table widths with available artifacts.
+pub const ARTIFACT_KS: [usize; 2] = [128, 256];
+
+/// PJRT-backed tropical evaluator bound to one artifact k-variant.
+pub struct PjrtMinPlus {
+    closure_exe: HloExecutable,
+    dub_exe: HloExecutable,
+    /// Kernel hub-table width (k after padding).
+    pub k: usize,
+    /// Kernel batch width (c after padding).
+    pub c: usize,
+}
+
+impl PjrtMinPlus {
+    /// Load the artifact pair for hub tables of up to `k_max` hubs from
+    /// `artifacts_dir`. Picks the smallest artifact k that fits.
+    pub fn load<P: AsRef<Path>>(rt: &Runtime, artifacts_dir: P, k_max: usize) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let Some(&k) = ARTIFACT_KS.iter().find(|&&k| k >= k_max) else {
+            bail!("no artifact variant for k_max={k_max} (have {ARTIFACT_KS:?})");
+        };
+        let closure_exe = rt
+            .load_hlo_text(dir.join(format!("hub_closure_k{k}.hlo.txt")))
+            .context("loading closure artifact")?;
+        let dub_exe = rt
+            .load_hlo_text(dir.join(format!("dub_batch_c{ARTIFACT_BATCH}_k{k}.hlo.txt")))
+            .context("loading dub artifact")?;
+        Ok(Self {
+            closure_exe,
+            dub_exe,
+            k,
+            c: ARTIFACT_BATCH,
+        })
+    }
+
+    /// Pad a `k×k` table into the kernel's `self.k × self.k` layout.
+    fn pad_table(&self, d: &[f32], k: usize) -> Vec<f32> {
+        let kk = self.k;
+        let mut out = vec![F_INF; kk * kk];
+        for i in 0..k {
+            out[i * kk..i * kk + k].copy_from_slice(&d[i * k..(i + 1) * k]);
+        }
+        for i in k..kk {
+            out[i * kk + i] = 0.0;
+        }
+        out
+    }
+}
+
+impl MinPlus for PjrtMinPlus {
+    fn closure(&self, d: &mut [f32], k: usize) {
+        assert!(k <= self.k, "table k={k} exceeds artifact k={}", self.k);
+        let kk = self.k;
+        let mut cur = self.pad_table(d, k);
+        // ceil(log2 k) squarings reach the fixpoint for any k-vertex table.
+        let steps = (k.max(2) as f64).log2().ceil() as usize;
+        for _ in 0..steps {
+            let out = self
+                .closure_exe
+                .run_f32(&[(&cur, &[kk, kk])])
+                .expect("closure kernel execution");
+            cur = out.into_iter().next().expect("one output");
+        }
+        for i in 0..k {
+            d[i * k..(i + 1) * k].copy_from_slice(&cur[i * kk..i * kk + k]);
+        }
+    }
+
+    fn dub_batch(&self, s: &[f32], d: &[f32], t: &[f32], c: usize, k: usize) -> Vec<f32> {
+        assert!(k <= self.k, "k={k} exceeds artifact k={}", self.k);
+        let (kk, cc) = (self.k, self.c);
+        let dp = self.pad_table(d, k);
+        let mut out = Vec::with_capacity(c);
+        // Process the batch in artifact-width chunks, padding with INF rows.
+        for chunk_start in (0..c).step_by(cc) {
+            let rows = cc.min(c - chunk_start);
+            let mut sp = vec![F_INF; cc * kk];
+            let mut tp = vec![F_INF; cc * kk];
+            for r in 0..rows {
+                let q = chunk_start + r;
+                sp[r * kk..r * kk + k].copy_from_slice(&s[q * k..(q + 1) * k]);
+                tp[r * kk..r * kk + k].copy_from_slice(&t[q * k..(q + 1) * k]);
+            }
+            let res = self
+                .dub_exe
+                .run_f32(&[(&sp, &[cc, kk]), (&dp, &[kk, kk]), (&tp, &[cc, kk])])
+                .expect("dub kernel execution");
+            out.extend_from_slice(&res[0][..rows]);
+        }
+        out
+    }
+}

@@ -1,0 +1,117 @@
+//! Dense bitset over vertex ids; used for visited/activated tracking where
+//! the touched set approaches the partition size.
+
+/// Fixed-capacity dense bitset.
+#[derive(Debug, Clone)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSet {
+    /// All-zero bitset with capacity for `len` bits.
+    pub fn new(len: usize) -> Self {
+        Self {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    /// Bit capacity.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no bit is set.
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Set bit `i`; returns the previous value.
+    #[inline]
+    pub fn set(&mut self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        let prev = self.words[w] & (1 << b) != 0;
+        self.words[w] |= 1 << b;
+        prev
+    }
+
+    /// Clear bit `i`.
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        let (w, b) = (i / 64, i % 64);
+        self.words[w] &= !(1 << b);
+    }
+
+    /// Read bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        self.words[w] & (1 << b) != 0
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Clear all bits (retains capacity).
+    pub fn clear_all(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Iterate indices of set bits in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = BitSet::new(130);
+        assert!(!b.set(0));
+        assert!(!b.set(129));
+        assert!(b.set(0));
+        assert!(b.get(0) && b.get(129) && !b.get(64));
+        b.clear(0);
+        assert!(!b.get(0));
+        assert_eq!(b.count(), 1);
+    }
+
+    #[test]
+    fn iter_ascending() {
+        let mut b = BitSet::new(200);
+        for i in [3usize, 64, 65, 199] {
+            b.set(i);
+        }
+        let got: Vec<usize> = b.iter().collect();
+        assert_eq!(got, vec![3, 64, 65, 199]);
+    }
+
+    #[test]
+    fn clear_all_resets() {
+        let mut b = BitSet::new(100);
+        b.set(7);
+        b.set(99);
+        b.clear_all();
+        assert!(b.is_empty());
+        assert_eq!(b.count(), 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities: deterministic RNG, fast hashing, bitsets.
+//!
+//! The offline registry has no `rand`/`rustc-hash`/`fixedbitset`, so these
+//! are hand-rolled; all experiments require determinism anyway (generators
+//! are seeded, so every bench regenerates identical workloads).
+
+pub mod bitset;
+pub mod fxhash;
+pub mod rng;
+
+pub use bitset::BitSet;
+pub use fxhash::{FxHashMap, FxHashSet};
+pub use rng::Rng;

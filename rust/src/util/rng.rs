@@ -1,0 +1,176 @@
+//! Deterministic splitmix64/xoshiro-style RNG for workload generation.
+
+/// A small, fast, deterministic PRNG (splitmix64 core).
+///
+/// Not cryptographic; used only for synthetic dataset generation and
+/// property-test case generation, where reproducibility is the requirement.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Seeded constructor; equal seeds yield equal streams on all platforms.
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixpoint without changing good seeds.
+        Self {
+            state: seed ^ 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+
+    /// Next raw u64 (splitmix64).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free variant is overkill here;
+        // 128-bit multiply keeps the bias below 2^-64 for our n << 2^32.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, n)`.
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Zipf-distributed rank in `[0, n)` with exponent `s` via rejection
+    /// inversion (approximate, adequate for degree-skew generation).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // Inverse-CDF on the continuous bounded Pareto, then clamp.
+        debug_assert!(n > 0);
+        let u = self.f64().max(1e-12);
+        if (s - 1.0).abs() < 1e-9 {
+            let x = (n as f64).powf(u) - 1.0;
+            (x as usize).min(n - 1)
+        } else {
+            let e = 1.0 - s;
+            let x = ((n as f64).powf(e) * u + (1.0 - u)).powf(1.0 / e) - 1.0;
+            (x.max(0.0) as usize).min(n - 1)
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct values from `[0, n)` (k << n expected).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        if k * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            return all;
+        }
+        let mut seen = crate::util::FxHashSet::default();
+        let mut out = Vec::with_capacity(k);
+        while out.len() < k {
+            let x = self.below_usize(n);
+            if seen.insert(x) {
+                out.push(x);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(2);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zipf_skew() {
+        // Rank 0 must be sampled far more often than rank n/2.
+        let mut r = Rng::new(3);
+        let n = 1000;
+        let mut lo = 0;
+        let mut hi = 0;
+        for _ in 0..20_000 {
+            let z = r.zipf(n, 1.2);
+            assert!(z < n);
+            if z == 0 {
+                lo += 1;
+            }
+            if z >= n / 2 {
+                hi += 1;
+            }
+        }
+        assert!(lo > hi, "zipf must favor low ranks: lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut r = Rng::new(4);
+        let s = r.sample_distinct(100, 30);
+        let set: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(set.len(), 30);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

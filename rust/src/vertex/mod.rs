@@ -1,0 +1,174 @@
+//! The vertex-centric programming interface (paper §4).
+//!
+//! A Quegel application implements [`QueryApp`], the rust analog of the
+//! paper's `Vertex<I, V^Q, V^V, M, Q>` + `Worker` subclassing:
+//!
+//! * `Query`  — the query content `<Q>` (e.g. `(s, t)` for PPSP);
+//! * `VQ`     — the query-dependent vertex attribute `a_q(v)` (VQ-data),
+//!   allocated lazily the first time `q` touches `v` via `init_value`;
+//! * `Msg`    — the message type `<M>`;
+//! * `Agg`    — the aggregator value;
+//! * `Out`    — the per-query result assembled in the reporting superstep.
+//!
+//! V-data (`a^V(v)`: adjacency lists, labels, text) is owned by the app
+//! struct itself — it is query-independent and shared by every in-flight
+//! query, which is exactly the paper's V-data / VQ-data split.
+
+use crate::graph::VertexId;
+
+/// Query identifier assigned by the engine at submission.
+pub type QueryId = u64;
+
+/// Decision returned by the per-superstep master hook.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MasterAction {
+    /// Keep running.
+    Continue,
+    /// Terminate the query at this barrier (aggregator-driven
+    /// `force_terminate`, e.g. BiBFS's zero-message-direction stop).
+    Terminate,
+}
+
+/// A Quegel application: user logic for one *generic* query.
+pub trait QueryApp {
+    /// Query content `<Q>`.
+    type Query: Clone;
+    /// Query-dependent vertex attribute `a_q(v)` (VQ-data).
+    type VQ: Clone;
+    /// Message type `<M>`.
+    type Msg: Clone;
+    /// Aggregator value; `Default` is the identity element.
+    type Agg: Clone + Default;
+    /// Per-query result type.
+    type Out: Clone + Default;
+
+    /// The initial activation set `V_q^I` (paper: `init_activate()` +
+    /// `get_vpos`/`activate`). Returning vertex ids (instead of per-worker
+    /// positions) lets the engine filter per worker; apps with indexes
+    /// (inverted lists, SCC maps) consult them here.
+    fn init_activate(&self, q: &Self::Query) -> Vec<VertexId>;
+
+    /// Initialize `a_q(v)` when `v` is first touched by `q`.
+    fn init_value(&self, q: &Self::Query, v: VertexId) -> Self::VQ;
+
+    /// The vertex UDF. Incoming messages are in `ctx.msgs`; outgoing
+    /// messages, votes and aggregation go through `ctx`.
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, vq: &mut Self::VQ)
+    where
+        Self: Sized;
+
+    /// Optional message combiner: fold `from` into `into`, returning true.
+    /// Return false (default) to disable combining for this app.
+    fn combine(&self, _into: &mut Self::Msg, _from: &Self::Msg) -> bool {
+        false
+    }
+
+    /// Merge a worker-local partial aggregate into `into`.
+    fn agg_merge(&self, _into: &mut Self::Agg, _from: &Self::Agg) {}
+
+    /// Master hook, run at the barrier with the merged aggregator of the
+    /// superstep that just finished (`cur`) and the previous superstep's
+    /// final value (`prev`). Whatever is left in `cur` is what `compute`
+    /// sees via `ctx.agg_prev()` in the next superstep — the master may
+    /// fold persistent Q-data from `prev` into `cur` (e.g. the level
+    /// countdown of the level-aligned XML algorithms).
+    fn master_step(
+        &self,
+        _q: &Self::Query,
+        _step: u64,
+        _prev: &Self::Agg,
+        _cur: &mut Self::Agg,
+    ) -> MasterAction {
+        MasterAction::Continue
+    }
+
+    /// Reporting superstep (super-round `n_q + 1`): assemble the result
+    /// from every touched vertex state.
+    fn finish(
+        &self,
+        q: &Self::Query,
+        touched: &mut dyn Iterator<Item = (VertexId, &Self::VQ)>,
+        agg: &Self::Agg,
+    ) -> Self::Out;
+
+    /// Wire size of one message, for the network cost model.
+    fn msg_bytes(&self) -> usize {
+        std::mem::size_of::<Self::Msg>()
+    }
+}
+
+/// Per-vertex, per-query execution context (the paper's `C_vertex` +
+/// `C_query` context objects: everything `compute` may touch without a
+/// table lookup).
+pub struct Ctx<'a, A: QueryApp> {
+    pub(crate) app: &'a A,
+    pub(crate) qid: QueryId,
+    pub(crate) query: &'a A::Query,
+    pub(crate) step: u64,
+    pub(crate) msgs: &'a [A::Msg],
+    pub(crate) prev_agg: &'a A::Agg,
+    pub(crate) agg_partial: &'a mut A::Agg,
+    /// Outgoing staged messages (dst, msg); routed at the barrier.
+    pub(crate) outbox: &'a mut Vec<(VertexId, A::Msg)>,
+    pub(crate) halt: bool,
+    pub(crate) terminate: bool,
+    pub(crate) sent: u64,
+}
+
+impl<'a, A: QueryApp> Ctx<'a, A> {
+    /// Superstep number of the current query (1-based, per paper).
+    #[inline]
+    pub fn superstep(&self) -> u64 {
+        self.step
+    }
+
+    /// Content of the current query (`get_query()`).
+    #[inline]
+    pub fn query(&self) -> &A::Query {
+        self.query
+    }
+
+    /// Engine-assigned id of the current query.
+    #[inline]
+    pub fn query_id(&self) -> QueryId {
+        self.qid
+    }
+
+    /// Incoming messages for this vertex.
+    #[inline]
+    pub fn msgs(&self) -> &[A::Msg] {
+        self.msgs
+    }
+
+    /// Merged aggregator value from the previous superstep.
+    #[inline]
+    pub fn agg_prev(&self) -> &A::Agg {
+        self.prev_agg
+    }
+
+    /// Contribute to this superstep's aggregator (worker-local partial;
+    /// merged across workers at the barrier).
+    #[inline]
+    pub fn aggregate(&mut self, f: impl FnOnce(&A, &mut A::Agg)) {
+        f(self.app, self.agg_partial);
+    }
+
+    /// Send a message to vertex `dst` (delivered next superstep).
+    #[inline]
+    pub fn send(&mut self, dst: VertexId, msg: A::Msg) {
+        self.sent += 1;
+        self.outbox.push((dst, msg));
+    }
+
+    /// Vote to halt: deactivate until re-activated by a message.
+    #[inline]
+    pub fn vote_halt(&mut self) {
+        self.halt = true;
+    }
+
+    /// Terminate the whole query at the end of this superstep.
+    #[inline]
+    pub fn force_terminate(&mut self) {
+        self.terminate = true;
+    }
+}

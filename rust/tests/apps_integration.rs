@@ -1,0 +1,185 @@
+//! Cross-layer integration: the PJRT-compiled Pallas kernels against the
+//! rust oracle, the full Hub² pipeline through the artifacts, and the
+//! terrain CH-baseline vs Quegel path-shape comparison.
+
+use quegel::apps::ppsp::hub2::{from_f, Hub2Indexer, Hub2Query, MinPlus, RustMinPlus, F_INF};
+use quegel::apps::ppsp::{oracle, UNREACHED};
+use quegel::apps::terrain::baseline::{hausdorff, ChResult, ChenHanStandIn};
+use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
+use quegel::coordinator::Engine;
+use quegel::graph::gen;
+use quegel::network::Cluster;
+use quegel::runtime::minplus::PjrtMinPlus;
+use quegel::runtime::Runtime;
+use quegel::util::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+#[test]
+fn pjrt_minplus_matches_rust_oracle() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let rt = Runtime::cpu().expect("pjrt client");
+    let mp = PjrtMinPlus::load(&rt, &dir, 64).expect("load artifacts");
+    let mut rng = Rng::new(42);
+
+    // Random closure tables.
+    for k in [5usize, 17, 64] {
+        let mut d = vec![F_INF; k * k];
+        for i in 0..k {
+            d[i * k + i] = 0.0;
+        }
+        for _ in 0..k * 3 {
+            let i = rng.below_usize(k);
+            let j = rng.below_usize(k);
+            let w = (1 + rng.below(30)) as f32;
+            if i != j && w < d[i * k + j] {
+                d[i * k + j] = w;
+            }
+        }
+        let mut want = d.clone();
+        RustMinPlus.closure(&mut want, k);
+        let mut got = d.clone();
+        mp.closure(&mut got, k);
+        assert_eq!(got, want, "closure k={k}");
+    }
+
+    // Random dub batches.
+    for (c, k) in [(1usize, 8usize), (8, 32), (13, 64)] {
+        let gen_rows = |rng: &mut Rng, len: usize| -> Vec<f32> {
+            (0..len)
+                .map(|_| {
+                    if rng.chance(0.3) {
+                        F_INF
+                    } else {
+                        rng.below(50) as f32
+                    }
+                })
+                .collect()
+        };
+        let s = gen_rows(&mut rng, c * k);
+        let t = gen_rows(&mut rng, c * k);
+        let mut d = gen_rows(&mut rng, k * k);
+        for i in 0..k {
+            d[i * k + i] = 0.0;
+        }
+        let want = RustMinPlus.dub_batch(&s, &d, &t, c, k);
+        let got = mp.dub_batch(&s, &d, &t, c, k);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(from_f(*g), from_f(*w), "dub[{i}] c={c} k={k}");
+        }
+    }
+}
+
+#[test]
+fn hub2_pipeline_through_pjrt_artifacts() {
+    // The L1-on-the-hot-path test: index + batched d_ub through the
+    // compiled Pallas kernel, answers checked against the serial oracle.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let rt = Runtime::cpu().expect("pjrt client");
+    let mp = PjrtMinPlus::load(&rt, &dir, 128).expect("load artifacts");
+
+    let mut g = gen::twitter_like(1_500, 6, 301);
+    g.ensure_in_edges();
+    let (idx, _) = Hub2Indexer::new(32).build(&g, Cluster::new(4), &mp);
+    let queries = gen::random_pairs(1_500, 24, 302);
+    let dubs = idx.dub_for(&queries, &mp, mp.c, mp.k);
+
+    let mut eng = Engine::new(Hub2Query::new(&g, &idx), Cluster::new(4), 1_500).capacity(8);
+    let ids: Vec<_> = queries
+        .iter()
+        .zip(&dubs)
+        .map(|(&(s, t), &dub)| eng.submit((s, t, dub)))
+        .collect();
+    eng.run_until_idle();
+    for (i, id) in ids.iter().enumerate() {
+        let r = eng.results().iter().find(|r| r.qid == *id).unwrap();
+        let want = oracle::bfs_dist(&g, queries[i].0, queries[i].1);
+        assert_eq!(
+            r.out,
+            (want != UNREACHED).then_some(want),
+            "query {i} {:?}",
+            queries[i]
+        );
+    }
+}
+
+#[test]
+fn terrain_quegel_path_tracks_ch_baseline() {
+    // Table 10's HDist claim: the two paths have similar length and shape.
+    let dem = Dem::fractal(40, 36, 10.0, 120.0, 303);
+    let net = TerrainNet::build(&dem, 2.5);
+    let ch = ChenHanStandIn::new(&dem);
+
+    let mut eng = Engine::new(TerrainSssp::new(&net), Cluster::new(4), net.graph.num_vertices());
+    for (tx, ty) in [(4usize, 4usize), (8, 8), (16, 12)] {
+        let s = net.corner(0, 0);
+        let t = net.corner(tx, ty);
+        let out = eng.run_one((s, t)).out;
+        assert!(out.reached);
+        match ch.query(0, 0, tx, ty) {
+            ChResult::Ok { len, path, .. } => {
+                let rel = (out.dist - len).abs() / len;
+                assert!(
+                    rel < 0.05,
+                    "length mismatch: quegel {} vs CH {len} ({rel:.3})",
+                    out.dist
+                );
+                let h = hausdorff(&out.path, &path);
+                assert!(
+                    h < 25.0,
+                    "paths diverge: HDist {h:.1} m for ({tx},{ty})"
+                );
+            }
+            ChResult::Oom => panic!("CH must handle short queries"),
+        }
+    }
+}
+
+#[test]
+fn e2e_mixed_apps_share_one_binary() {
+    // Smoke: every app family runs back-to-back in one process (no global
+    // state leaks between engines).
+    let mut g = gen::btc_like(400, 30, 4, 304);
+    g.ensure_in_edges();
+    let (idx, _) = Hub2Indexer::new(8)
+        .undirected(true)
+        .build(&g, Cluster::new(2), &RustMinPlus);
+    let q = gen::random_pairs(400, 3, 305);
+    for &(s, t) in &q {
+        let dub = idx.dub_for(&[(s, t)], &RustMinPlus, 1, idx.k())[0];
+        let mut eng = Engine::new(Hub2Query::new(&g, &idx), Cluster::new(2), 400);
+        let want = oracle::bfs_dist(&g, s, t);
+        assert_eq!(
+            eng.run_one((s, t, dub)).out,
+            (want != UNREACHED).then_some(want)
+        );
+    }
+
+    let t = quegel::apps::xml::data::generate(&quegel::apps::xml::XmlGenConfig {
+        dblp_like: true,
+        records: 50,
+        vocab: 80,
+        seed: 306,
+    });
+    let queries = quegel::apps::xml::data::query_pool(&t, 3, 2, 307);
+    for q in queries {
+        let want = quegel::apps::xml::oracle::slca(&t, &q);
+        let mut eng = Engine::new(
+            quegel::apps::xml::SlcaLevelAligned::new(&t),
+            Cluster::new(2),
+            t.len(),
+        );
+        let got: Vec<u32> = eng.run_one(q).out.iter().map(|&(v, _, _)| v).collect();
+        assert_eq!(got, want);
+    }
+}

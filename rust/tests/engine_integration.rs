@@ -1,0 +1,195 @@
+//! Integration tests for the superstep-sharing engine: scheduling,
+//! capacity, latency accounting and the Figure-1 load-balancing effect.
+
+use quegel::apps::ppsp::{oracle, Bfs, BiBfs, UNREACHED};
+use quegel::coordinator::Engine;
+use quegel::graph::gen;
+use quegel::network::{Cluster, CostModel};
+
+#[test]
+fn batch_results_match_serial_results() {
+    let g = gen::twitter_like(800, 5, 201);
+    let queries = gen::random_pairs(800, 24, 202);
+
+    // Serial: one query at a time.
+    let mut serial = Vec::new();
+    for &q in &queries {
+        let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), 800).capacity(1);
+        serial.push(eng.run_one(q).out);
+    }
+    // Shared: all queries in flight together.
+    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), 800).capacity(8);
+    let ids: Vec<_> = queries.iter().map(|&q| eng.submit(q)).collect();
+    eng.run_until_idle();
+    for (i, id) in ids.iter().enumerate() {
+        let r = eng.results().iter().find(|r| r.qid == *id).unwrap();
+        assert_eq!(r.out, serial[i], "query {i}");
+        let want = oracle::bfs_dist(&g, queries[i].0, queries[i].1);
+        assert_eq!(r.out, (want != UNREACHED).then_some(want));
+    }
+}
+
+#[test]
+fn capacity_is_never_exceeded() {
+    let g = gen::twitter_like(500, 4, 203);
+    for c in [1usize, 2, 5] {
+        let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), 500).capacity(c);
+        for q in gen::random_pairs(500, 20, 204) {
+            eng.submit(q);
+        }
+        eng.run_until_idle();
+        assert!(
+            eng.metrics().peak_inflight <= c,
+            "peak {} > C = {c}",
+            eng.metrics().peak_inflight
+        );
+        assert_eq!(eng.results().len(), 20);
+    }
+}
+
+#[test]
+fn superstep_sharing_beats_one_at_a_time() {
+    // The paper's core claim (Table 7a): C = 8 is ~3x faster than C = 1 on
+    // batch workloads, because barriers are shared and bandwidth is filled.
+    let mut g = gen::twitter_like(3_000, 8, 205);
+    g.ensure_in_edges();
+    let queries = gen::random_pairs(3_000, 32, 206);
+
+    let run = |c: usize| -> f64 {
+        let mut eng = Engine::new(BiBfs::new(&g), Cluster::new(8), 3_000).capacity(c);
+        for &q in &queries {
+            eng.submit(q);
+        }
+        eng.run_until_idle();
+        eng.sim_time()
+    };
+    let t1 = run(1);
+    let t8 = run(8);
+    assert!(
+        t8 < t1 * 0.6,
+        "sharing must cut simulated time: C=1 {t1:.3}s vs C=8 {t8:.3}s"
+    );
+}
+
+#[test]
+fn figure1_load_balancing_effect() {
+    // Two queries with opposite per-worker skew: shared super-rounds cost
+    // max(sum) per worker instead of sum(max) — strictly less total time.
+    let cost = CostModel {
+        per_vertex_compute_s: 1e-3, // exaggerate compute skew
+        barrier_latency_s: 10e-3,
+        ..Default::default()
+    };
+    let g = gen::twitter_like(2_000, 6, 207);
+    let queries = gen::random_pairs(2_000, 8, 208);
+
+    let run = |c: usize| -> f64 {
+        let mut eng =
+            Engine::new(Bfs::new(&g), Cluster::with_cost(2, cost.clone()), 2_000).capacity(c);
+        for &q in &queries {
+            eng.submit(q);
+        }
+        eng.run_until_idle();
+        eng.sim_time()
+    };
+    let individual = run(1);
+    let shared = run(8);
+    assert!(
+        shared < individual,
+        "shared {shared:.4}s !< individual {individual:.4}s"
+    );
+}
+
+#[test]
+fn latency_includes_queue_wait() {
+    let g = gen::twitter_like(500, 4, 209);
+    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(2), 500).capacity(1);
+    for q in gen::random_pairs(500, 6, 210) {
+        eng.submit(q);
+    }
+    eng.run_until_idle();
+    let mut results: Vec<_> = eng.results().to_vec();
+    results.sort_by_key(|r| r.qid);
+    // With C = 1, later queries must have waited in the queue.
+    let first = &results[0].stats;
+    let last = &results[5].stats;
+    assert!(last.started_at > first.started_at);
+    assert!(last.latency() >= last.processing());
+}
+
+#[test]
+fn truncation_guard_fires() {
+    // An app that never halts gets cut at max_supersteps.
+    struct Endless;
+    impl quegel::vertex::QueryApp for Endless {
+        type Query = ();
+        type VQ = ();
+        type Msg = ();
+        type Agg = ();
+        type Out = ();
+        fn init_activate(&self, _q: &()) -> Vec<u32> {
+            vec![0]
+        }
+        fn init_value(&self, _q: &(), _v: u32) {}
+        fn compute(&self, ctx: &mut quegel::vertex::Ctx<'_, Self>, _v: u32, _vq: &mut ()) {
+            ctx.send(0, ()); // self-message forever
+            ctx.vote_halt();
+        }
+        fn finish(
+            &self,
+            _q: &(),
+            _touched: &mut dyn Iterator<Item = (u32, &())>,
+            _agg: &(),
+        ) {
+        }
+    }
+    let mut eng = Engine::new(Endless, Cluster::new(1), 1).max_supersteps(50);
+    let r = eng.run_one(());
+    assert!(r.stats.truncated);
+    assert_eq!(r.stats.supersteps, 50);
+}
+
+#[test]
+fn metrics_accumulate_across_queries() {
+    let g = gen::twitter_like(400, 4, 211);
+    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), 400);
+    for q in gen::random_pairs(400, 5, 212) {
+        eng.submit(q);
+    }
+    eng.run_until_idle();
+    let m = eng.metrics();
+    assert!(m.super_rounds > 0);
+    assert!(m.total_messages > 0);
+    assert!(m.total_bytes > m.total_messages); // headers included
+    assert!(m.sim_time > 0.0);
+    assert!(m.wall_time > 0.0);
+}
+
+#[test]
+fn interleaved_submission_works() {
+    // Queries submitted while others are in flight join later super-rounds.
+    let g = gen::twitter_like(600, 4, 213);
+    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), 600).capacity(4);
+    let q1 = gen::random_pairs(600, 4, 214);
+    let q2 = gen::random_pairs(600, 4, 215);
+    for &q in &q1 {
+        eng.submit(q);
+    }
+    // Run a couple of super-rounds, then add more queries mid-flight.
+    eng.super_round();
+    eng.super_round();
+    for &q in &q2 {
+        eng.submit(q);
+    }
+    eng.run_until_idle();
+    assert_eq!(eng.results().len(), 8);
+    for r in eng.results() {
+        let (s, t) = if (r.qid as usize) < 4 {
+            q1[r.qid as usize]
+        } else {
+            q2[r.qid as usize - 4]
+        };
+        let want = oracle::bfs_dist(&g, s, t);
+        assert_eq!(r.out, (want != UNREACHED).then_some(want));
+    }
+}

@@ -1,0 +1,193 @@
+//! Property tests over the coordinator invariants (DESIGN.md §7), via the
+//! in-repo `prop` harness (offline substitution for proptest).
+
+use quegel::apps::ppsp::hub2::{Hub2Indexer, Hub2Query, RustMinPlus};
+use quegel::apps::ppsp::{oracle, Bfs, BiBfs, UNREACHED};
+use quegel::apps::reach::{build_labels, condense, ReachQuery};
+use quegel::apps::xml;
+use quegel::coordinator::Engine;
+use quegel::graph::{gen, Graph};
+use quegel::network::Cluster;
+use quegel::prop;
+use quegel::util::Rng;
+use quegel::{prop_assert, prop_assert_eq};
+
+fn random_graph(rng: &mut Rng) -> Graph {
+    let n = 100 + rng.below_usize(400);
+    let deg = 2 + rng.below_usize(5);
+    match rng.below(3) {
+        0 => gen::twitter_like(n, deg, rng.next_u64()),
+        1 => gen::btc_like(n, 10 + rng.below_usize(40), deg, rng.next_u64()),
+        _ => gen::livej_like(n, n / 5 + 2, deg, rng.next_u64()),
+    }
+}
+
+/// (i) Superstep-sharing is answer-preserving for any capacity.
+#[test]
+fn prop_sharing_invariant_under_capacity() {
+    prop::check("sharing-capacity", 12, |rng| {
+        let g = random_graph(rng);
+        let n = g.num_vertices();
+        let queries = gen::random_pairs(n, 4 + rng.below_usize(8), rng.next_u64());
+        let workers = 1 + rng.below_usize(7);
+        let mut base: Option<Vec<Option<u32>>> = None;
+        for c in [1usize, 3, 8] {
+            let mut eng = Engine::new(Bfs::new(&g), Cluster::new(workers), n).capacity(c);
+            let ids: Vec<_> = queries.iter().map(|&q| eng.submit(q)).collect();
+            eng.run_until_idle();
+            let mut outs = Vec::new();
+            for id in &ids {
+                outs.push(eng.results().iter().find(|r| r.qid == *id).unwrap().out);
+            }
+            match &base {
+                None => base = Some(outs),
+                Some(b) => prop_assert_eq!(&outs, b, "capacity {} changed answers", c),
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (ii) Lazy VQ-data: the touched set equals what BFS can actually reach.
+#[test]
+fn prop_lazy_state_bounded_by_reachable_set() {
+    prop::check("lazy-vq", 15, |rng| {
+        let g = random_graph(rng);
+        let n = g.num_vertices();
+        let (s, t) = gen::random_pairs(n, 1, rng.next_u64())[0];
+        let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), n);
+        let r = eng.run_one((s, t));
+        // Reachable set from s (+1 for t's possible lazy init).
+        let dists = oracle::bfs_all(&g, s);
+        let reachable = dists.iter().filter(|&&d| d != UNREACHED).count() as u64;
+        prop_assert!(
+            r.stats.touched <= reachable + 1,
+            "touched {} > reachable {}",
+            r.stats.touched,
+            reachable + 1
+        );
+        prop_assert!(r.stats.touched >= 1, "s must always be touched");
+        Ok(())
+    });
+}
+
+/// (iii) Worker partition is total: answers independent of worker count.
+#[test]
+fn prop_worker_count_invariance() {
+    prop::check("worker-invariance", 10, |rng| {
+        let g = random_graph(rng);
+        let n = g.num_vertices();
+        let (s, t) = gen::random_pairs(n, 1, rng.next_u64())[0];
+        let mut outs = Vec::new();
+        for w in [1usize, 2, 7, 16] {
+            let mut eng = Engine::new(Bfs::new(&g), Cluster::new(w), n);
+            outs.push(eng.run_one((s, t)).out);
+        }
+        prop_assert!(
+            outs.windows(2).all(|p| p[0] == p[1]),
+            "answers vary with workers: {:?}",
+            outs
+        );
+        Ok(())
+    });
+}
+
+/// (iv) BFS / BiBFS / Hub² / serial oracle all agree.
+#[test]
+fn prop_ppsp_algorithms_agree() {
+    prop::check("ppsp-agree", 8, |rng| {
+        let mut g = random_graph(rng);
+        g.ensure_in_edges();
+        let n = g.num_vertices();
+        let undirected = rng.chance(0.5);
+        let idx = Hub2Indexer::new(8 + rng.below_usize(12))
+            .undirected(undirected && false) // graphs here store both arcs only for btc/livej; treat as directed uniformly
+            .build(&g, Cluster::new(4), &RustMinPlus)
+            .0;
+        for (s, t) in gen::random_pairs(n, 6, rng.next_u64()) {
+            let want = oracle::bfs_dist(&g, s, t);
+            let expect = (want != UNREACHED).then_some(want);
+            let mut e1 = Engine::new(Bfs::new(&g), Cluster::new(3), n);
+            prop_assert_eq!(e1.run_one((s, t)).out, expect, "bfs ({},{})", s, t);
+            let mut e2 = Engine::new(BiBfs::new(&g), Cluster::new(3), n);
+            prop_assert_eq!(e2.run_one((s, t)).out, expect, "bibfs ({},{})", s, t);
+            let dub = idx.dub_for(&[(s, t)], &RustMinPlus, 1, idx.k())[0];
+            let mut e3 = Engine::new(Hub2Query::new(&g, &idx), Cluster::new(3), n);
+            prop_assert_eq!(e3.run_one((s, t, dub)).out, expect, "hub2 ({},{})", s, t);
+        }
+        Ok(())
+    });
+}
+
+/// (v) Reachability with label pruning ≡ serial reachability oracle.
+#[test]
+fn prop_reach_labels_sound_and_complete() {
+    prop::check("reach-labels", 8, |rng| {
+        let n = 200 + rng.below_usize(400);
+        let layers = 8 + rng.below_usize(20);
+        let g = gen::web_cyclic(n.max(layers * 3), layers, 2 + rng.below_usize(3), rng.next_u64());
+        let cond = condense(&g);
+        let mut dag = cond.dag.clone();
+        if dag.num_vertices() < 2 {
+            return Ok(());
+        }
+        dag.ensure_in_edges();
+        let (labels, _) = build_labels(&dag, &Cluster::new(4), rng.chance(0.5));
+        let app = ReachQuery::new(&dag, &labels);
+        let mut eng = Engine::new(app, Cluster::new(4), dag.num_vertices());
+        for (s, t) in gen::random_pairs(g.num_vertices(), 10, rng.next_u64()) {
+            let want = quegel::apps::reach::dag::reaches(&g, s, t);
+            let dq = (cond.scc_of[s as usize], cond.scc_of[t as usize]);
+            let got = eng.run_one(dq).out;
+            prop_assert_eq!(got, want, "({},{})", s, t);
+        }
+        Ok(())
+    });
+}
+
+/// (vi) XML: naive SLCA ≡ level-aligned SLCA ≡ oracle on random corpora.
+#[test]
+fn prop_xml_slca_variants_agree() {
+    prop::check("xml-slca", 8, |rng| {
+        let t = xml::data::generate(&xml::XmlGenConfig {
+            dblp_like: rng.chance(0.5),
+            records: 40 + rng.below_usize(120),
+            vocab: 60 + rng.below_usize(100),
+            seed: rng.next_u64(),
+        });
+        let m = 2 + rng.below_usize(2);
+        for q in xml::data::query_pool(&t, 5, m, rng.next_u64()) {
+            let want = xml::oracle::slca(&t, &q);
+            let mut e1 = Engine::new(xml::SlcaNaive::new(&t), Cluster::new(4), t.len());
+            let got1: Vec<u32> = e1.run_one(q.clone()).out.iter().map(|&(v, _, _)| v).collect();
+            prop_assert_eq!(&got1, &want, "naive q={:?}", q);
+            let mut e2 = Engine::new(xml::SlcaLevelAligned::new(&t), Cluster::new(4), t.len());
+            let got2: Vec<u32> = e2.run_one(q.clone()).out.iter().map(|&(v, _, _)| v).collect();
+            prop_assert_eq!(&got2, &want, "aligned q={:?}", q);
+        }
+        Ok(())
+    });
+}
+
+/// (vii) Message accounting: bytes scale with messages; combiner only
+/// reduces, never increases, traffic.
+#[test]
+fn prop_combiner_only_reduces_messages() {
+    prop::check("combiner-traffic", 10, |rng| {
+        let g = random_graph(rng);
+        let n = g.num_vertices();
+        let (s, t) = gen::random_pairs(n, 1, rng.next_u64())[0];
+        let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), n);
+        let r = eng.run_one((s, t));
+        // Post-combiner messages can never exceed edges scanned.
+        let scanned: u64 = g.num_edges() as u64;
+        prop_assert!(
+            r.stats.messages <= scanned,
+            "messages {} > edges {}",
+            r.stats.messages,
+            scanned
+        );
+        prop_assert!(r.stats.bytes >= r.stats.messages, "bytes below messages");
+        Ok(())
+    });
+}

@@ -1,0 +1,192 @@
+//! Property tests over application-level invariants: XML semantics
+//! relationships, terrain geometry, analytics vs oracles, and the RDF
+//! search's monotonicity in δ_max.
+
+use quegel::apps::gkws;
+use quegel::apps::terrain::baseline::{dijkstra, hausdorff};
+use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
+use quegel::apps::xml;
+use quegel::coordinator::Engine;
+use quegel::graph::gen;
+use quegel::network::Cluster;
+use quegel::prop;
+use quegel::util::Rng;
+use quegel::{prop_assert, prop_assert_eq};
+
+fn corpus(rng: &mut Rng) -> xml::XmlTree {
+    xml::data::generate(&xml::XmlGenConfig {
+        dblp_like: rng.chance(0.5),
+        records: 30 + rng.below_usize(80),
+        vocab: 50 + rng.below_usize(80),
+        seed: rng.next_u64(),
+    })
+}
+
+/// Every SLCA is an ELCA (SLCA ⊆ ELCA, by definition), and every SLCA root
+/// appears in the MaxMatch vertex set.
+#[test]
+fn prop_xml_semantics_containment() {
+    prop::check("xml-containment", 10, |rng| {
+        let t = corpus(rng);
+        for q in xml::data::query_pool(&t, 4, 2, rng.next_u64()) {
+            let slca = xml::oracle::slca(&t, &q);
+            let elca = xml::oracle::elca(&t, &q);
+            let mm = xml::oracle::maxmatch(&t, &q);
+            for v in &slca {
+                prop_assert!(elca.contains(v), "SLCA {v} not in ELCA q={q:?}");
+                prop_assert!(mm.contains(v), "SLCA {v} not in MaxMatch q={q:?}");
+            }
+            // MaxMatch vertices all descend from some SLCA.
+            for &v in &mm {
+                let mut cur = v;
+                let mut ok = slca.contains(&cur);
+                while !ok && t.parent[cur as usize] != xml::data::NO_PARENT {
+                    cur = t.parent[cur as usize];
+                    ok = slca.contains(&cur);
+                }
+                prop_assert!(ok, "MaxMatch vertex {v} not under any SLCA");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Distributed ELCA equals the oracle on random corpora (SLCA variants are
+/// covered in props.rs).
+#[test]
+fn prop_xml_elca_matches_oracle() {
+    prop::check("xml-elca", 8, |rng| {
+        let t = corpus(rng);
+        for q in xml::data::query_pool(&t, 4, 2, rng.next_u64()) {
+            let want = xml::oracle::elca(&t, &q);
+            let mut eng = Engine::new(xml::Elca::new(&t), Cluster::new(4), t.len());
+            let got: Vec<u32> = eng.run_one(q.clone()).out.iter().map(|r| r.0).collect();
+            prop_assert_eq!(&got, &want, "q={:?}", q);
+        }
+        Ok(())
+    });
+}
+
+/// Terrain: the distributed SSSP distance equals Dijkstra, lower-bounds
+/// never break (d >= euclid), and the polyline length equals the distance.
+#[test]
+fn prop_terrain_sssp_invariants() {
+    prop::check("terrain-sssp", 6, |rng| {
+        let w = 6 + rng.below_usize(8);
+        let h = 6 + rng.below_usize(8);
+        let dem = Dem::fractal(w, h, 10.0, 50.0 + rng.f64() * 150.0, rng.next_u64());
+        let net = TerrainNet::build(&dem, 3.0 + rng.f64() * 4.0);
+        let n = net.graph.num_vertices();
+        let s = net.corner(rng.below_usize(w), rng.below_usize(h));
+        let t = net.corner(rng.below_usize(w), rng.below_usize(h));
+        if s == t {
+            return Ok(());
+        }
+        let mut eng = Engine::new(TerrainSssp::new(&net), Cluster::new(4), n);
+        let out = eng.run_one((s, t)).out;
+        prop_assert!(out.reached, "terrain networks are connected");
+        let want = dijkstra(&net.graph, s, Some(t)).0[t as usize];
+        prop_assert!(
+            (out.dist - want).abs() < 1e-6,
+            "dist {} vs dijkstra {}",
+            out.dist,
+            want
+        );
+        prop_assert!(
+            out.dist >= net.euclid(s, t) - 1e-6,
+            "below the euclidean lower bound"
+        );
+        let len: f64 = out
+            .path
+            .windows(2)
+            .map(|p| {
+                ((p[0].0 - p[1].0).powi(2) + (p[0].1 - p[1].1).powi(2) + (p[0].2 - p[1].2).powi(2))
+                    .sqrt()
+            })
+            .sum();
+        // Edge weights are f32 while coordinates are f64, so the polyline
+        // length accumulates f32 rounding relative to the reported distance.
+        prop_assert!(
+            (len - out.dist).abs() < 1e-4 * out.dist.max(1.0),
+            "polyline length mismatch: {} vs {}",
+            len,
+            out.dist
+        );
+        // Hausdorff distance of a path to itself is 0.
+        prop_assert!(hausdorff(&out.path, &out.path) < 1e-9, "hdist self");
+        Ok(())
+    });
+}
+
+/// RDF keyword search: results grow monotonically with δ_max, and every
+/// reported hop respects the bound.
+#[test]
+fn prop_gkws_delta_monotone() {
+    prop::check("gkws-monotone", 6, |rng| {
+        let g = gkws::data::generate(&gkws::RdfGenConfig {
+            resources: 200 + rng.below_usize(400),
+            avg_deg: 2 + rng.below_usize(4),
+            predicates: 10 + rng.below_usize(20),
+            vocab: 40 + rng.below_usize(60),
+            seed: rng.next_u64(),
+        });
+        let kw = gkws::data::query_pool(&g, 1, 2, rng.next_u64()).pop().unwrap();
+        let mut prev = 0usize;
+        for dmax in 1..=4u32 {
+            let mut eng = Engine::new(gkws::KeywordSearch::new(&g), Cluster::new(4), g.len());
+            let roots = eng
+                .run_one(gkws::query::GkwsQuery {
+                    keywords: kw.clone(),
+                    delta_max: dmax,
+                })
+                .out;
+            prop_assert!(
+                roots.len() >= prev,
+                "root count must grow with delta_max ({} < {prev} at {dmax})",
+                roots.len()
+            );
+            for (_, fields) in &roots {
+                for f in fields {
+                    prop_assert!(f.1 <= dmax, "hop {} exceeds delta_max {dmax}", f.1);
+                }
+            }
+            prev = roots.len();
+        }
+        Ok(())
+    });
+}
+
+/// Analytics: PageRank mass conservation and CC label idempotence on
+/// random graphs.
+#[test]
+fn prop_analytics_invariants() {
+    prop::check("analytics", 6, |rng| {
+        let n = 100 + rng.below_usize(300);
+        let g = gen::btc_like(n, 10 + rng.below_usize(30), 3, rng.next_u64());
+        // PageRank sums to 1.
+        let mut eng = Engine::new(
+            quegel::analytics::PageRank::new(&g),
+            Cluster::new(4),
+            g.num_vertices(),
+        )
+        .max_supersteps(200);
+        let pr = eng
+            .run_one(quegel::analytics::pagerank::PrConfig::default())
+            .out;
+        let total: f64 = pr.iter().map(|&(_, r)| r).sum();
+        prop_assert!((total - 1.0).abs() < 1e-6, "rank mass {total}");
+        // CC labels are the component minima (idempotent under re-run).
+        let want = quegel::analytics::components::components_oracle(&g);
+        let mut eng = Engine::new(
+            quegel::analytics::ConnectedComponents::new(&g),
+            Cluster::new(4),
+            g.num_vertices(),
+        )
+        .max_supersteps(10_000);
+        let got = eng.run_one(()).out;
+        for (v, l) in got {
+            prop_assert_eq!(l, want[v as usize], "cc label of {}", v);
+        }
+        Ok(())
+    });
+}

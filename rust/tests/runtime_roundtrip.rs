@@ -1,0 +1,81 @@
+//! Integration: load AOT artifacts, execute on the PJRT CPU client, and
+//! check numerics against hand-computed min-plus results.
+//!
+//! Skips (with a message) if `artifacts/` has not been built yet; run
+//! `make artifacts` first.
+
+use quegel::runtime::Runtime;
+
+const INF: f32 = 2147483648.0; // 2^31, matches python/compile/kernels/ref.py
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+#[test]
+fn hub_closure_roundtrip() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let exe = rt
+        .load_hlo_text(dir.join("hub_closure_k128.hlo.txt"))
+        .expect("load artifact");
+
+    // Hub table: path 0 -> 1 -> 2 with weights 3 and 4; closure must find
+    // d(0, 2) = 7 after one squaring step.
+    let k = 128usize;
+    let mut d = vec![INF; k * k];
+    for i in 0..k {
+        d[i * k + i] = 0.0;
+    }
+    d[1] = 3.0; // d[0][1]
+    d[k + 2] = 4.0; // d[1][2]
+    let out = exe.run_f32(&[(&d, &[k, k])]).expect("execute");
+    assert_eq!(out.len(), 1);
+    let c = &out[0];
+    assert_eq!(c[1], 3.0);
+    assert_eq!(c[k + 2], 4.0);
+    assert_eq!(c[2], 7.0, "closure must compose 0->1->2");
+    assert_eq!(c[5 * k + 9], INF, "untouched pairs stay INF");
+}
+
+#[test]
+fn dub_batch_roundtrip() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let exe = rt
+        .load_hlo_text(dir.join("dub_batch_c8_k128.hlo.txt"))
+        .expect("load artifact");
+
+    let (c, k) = (8usize, 128usize);
+    let mut s = vec![INF; c * k];
+    let mut t = vec![INF; c * k];
+    let mut d = vec![INF; k * k];
+    for i in 0..k {
+        d[i * k + i] = 0.0;
+    }
+    // Query 0: s is 2 from hub 3; t is 5 from hub 7; d(3, 7) = 10.
+    s[3] = 2.0;
+    t[7] = 5.0;
+    d[3 * k + 7] = 10.0;
+    // Query 1: s and t share hub 4 (d(4,4) = 0): 1 + 0 + 1 = 2.
+    s[k + 4] = 1.0;
+    t[k + 4] = 1.0;
+
+    let out = exe
+        .run_f32(&[(&s, &[c, k]), (&d, &[k, k]), (&t, &[c, k])])
+        .expect("execute");
+    let dub = &out[0];
+    assert_eq!(dub.len(), c);
+    assert_eq!(dub[0], 17.0);
+    assert_eq!(dub[1], 2.0);
+    for q in 2..c {
+        assert_eq!(dub[q], INF, "padding rows must stay INF");
+    }
+}
