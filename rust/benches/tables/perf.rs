@@ -73,4 +73,49 @@ pub fn run() {
     println!("{}", t.render());
     println!("target: > 2 compute calls / us in the batch path (see");
     println!("EXPERIMENTS.md §Perf for the iteration log).");
+
+    // --- Threaded worker shards: compute-phase wall time on the
+    // Table-7-style batch workload (BiBFS, C = 8, W = 8) as the engine's
+    // `threads` knob grows. The barrier stays single-threaded, so the
+    // speedup target applies to the compute phase.
+    let mut tt = Table::new(vec![
+        "threads",
+        "compute wall",
+        "barrier wall",
+        "total wall",
+        "compute speedup",
+    ]);
+    let mut base_compute = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let mut computes = Vec::new();
+        let mut barriers = Vec::new();
+        let mut walls = Vec::new();
+        for _ in 0..3 {
+            let mut eng = Engine::new(BiBfs::new(&g), Cluster::new(8), n)
+                .capacity(8)
+                .threads(threads);
+            for &q in &queries {
+                eng.submit(q);
+            }
+            let t0 = Instant::now();
+            eng.run_until_idle();
+            walls.push(t0.elapsed().as_secs_f64());
+            computes.push(eng.metrics().compute_time);
+            barriers.push(eng.metrics().barrier_time);
+        }
+        let mc = median(computes);
+        if threads == 1 {
+            base_compute = mc;
+        }
+        tt.row(vec![
+            threads.to_string(),
+            format!("{:.1} ms", mc * 1e3),
+            format!("{:.1} ms", median(barriers) * 1e3),
+            format!("{:.1} ms", median(walls) * 1e3),
+            format!("{:.2}x", base_compute / mc),
+        ]);
+    }
+    println!("{}", tt.render());
+    println!("target: compute-phase speedup >= 1.5x at 4 threads (results");
+    println!("are bit-identical across the threads column by construction).");
 }

@@ -97,6 +97,12 @@ impl<'g> QueryApp for PageRank<'g> {
         true
     }
 
+    /// Both aggregator components are sums over disjoint vertex sets.
+    fn agg_merge(&self, into: &mut PrAgg, from: &PrAgg) {
+        into.l1_delta += from.l1_delta;
+        into.dangling += from.dangling;
+    }
+
     fn master_step(
         &self,
         q: &PrConfig,

@@ -224,6 +224,11 @@ impl<'g> QueryApp for BoundJob<'g> {
         true
     }
 
+    /// The countdown collects a max over levels; -1 is the identity.
+    fn agg_merge(&self, into: &mut Countdown, from: &Countdown) {
+        into.lmax = into.lmax.max(from.lmax);
+    }
+
     fn master_step(
         &self,
         _q: &(),

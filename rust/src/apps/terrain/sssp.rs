@@ -38,8 +38,10 @@ pub struct SsspState {
     pub pred: VertexId,
 }
 
-/// Query result: distance and the s→t polyline.
-#[derive(Debug, Clone, Default)]
+/// Query result: distance and the s→t polyline. `PartialEq` compares the
+/// floats exactly — determinism tests assert bit-identical results across
+/// engine thread counts.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SsspOut {
     pub dist: f64,
     pub path: Vec<(f64, f64, f64)>,

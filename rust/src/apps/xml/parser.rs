@@ -5,7 +5,8 @@
 //! enough for corpora of the DBLP/XMark shape.
 
 use super::data::{XmlTree, NO_PARENT};
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 /// Parse an XML document string into a tree.
 pub fn parse(doc: &str) -> Result<XmlTree> {
@@ -32,7 +33,7 @@ pub fn parse(doc: &str) -> Result<XmlTree> {
             let close = doc[i..]
                 .find('>')
                 .map(|p| i + p)
-                .ok_or_else(|| anyhow::anyhow!("unterminated tag at byte {i}"))?;
+                .ok_or_else(|| crate::err!("unterminated tag at byte {i}"))?;
             let tag = &doc[i + 1..close];
             if tag.starts_with("?") || tag.starts_with("!") {
                 // declaration / comment / doctype: skip

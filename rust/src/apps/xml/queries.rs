@@ -203,6 +203,13 @@ impl Default for LevelAgg {
     }
 }
 
+/// Worker partials only ever raise `lmax` (step-1 level collection); fold
+/// by max. `phase` is master-owned and identical across partials.
+fn level_agg_merge(into: &mut LevelAgg, from: &LevelAgg) {
+    into.lmax = into.lmax.max(from.lmax);
+    into.phase = into.phase.max(from.phase);
+}
+
 fn level_master(step: u64, prev: &LevelAgg, cur: &mut LevelAgg) -> MasterAction {
     if step == 1 {
         // cur.lmax holds the max matching-vertex level collected this step.
@@ -287,6 +294,10 @@ impl<'t> QueryApp for SlcaLevelAligned<'t> {
         into.or_non_allone |= from.or_non_allone;
         into.any_allone |= from.any_allone;
         true
+    }
+
+    fn agg_merge(&self, into: &mut LevelAgg, from: &LevelAgg) {
+        level_agg_merge(into, from);
     }
 
     fn master_step(
@@ -396,6 +407,10 @@ impl<'t> QueryApp for Elca<'t> {
         into.or_non_allone |= from.or_non_allone;
         into.any_allone |= from.any_allone;
         true
+    }
+
+    fn agg_merge(&self, into: &mut LevelAgg, from: &LevelAgg) {
+        level_agg_merge(into, from);
     }
 
     fn master_step(
@@ -544,6 +559,10 @@ impl<'t> QueryApp for MaxMatch<'t> {
             }
             ctx.vote_halt();
         }
+    }
+
+    fn agg_merge(&self, into: &mut LevelAgg, from: &LevelAgg) {
+        level_agg_merge(into, from);
     }
 
     fn master_step(

@@ -1,9 +1,22 @@
-//! The superstep-sharing engine loop.
+//! The superstep-sharing engine loop, with worker shards executed on real
+//! OS threads.
+//!
+//! Execution model: every BSP worker is a [`WorkerShard`] per in-flight
+//! query. The compute phase groups shard `w` of every running query into a
+//! worker *lane* and runs lanes on up to `threads` scoped threads
+//! (`std::thread::scope`, no locking — lanes own disjoint state). The
+//! barrier then runs single-threaded on the coordinator: it routes staged
+//! messages between shards in source-worker order, folds per-worker
+//! aggregator partials in worker order, and drives query lifecycle. Both
+//! phases are deterministic in the thread count: `threads = N` produces
+//! bit-identical `QueryResult`s to `threads = 1`.
 
+use std::collections::hash_map::Entry;
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use super::query::{MsgSlot, Phase, QueryResult, QueryRt, VState};
+use super::query::{MsgSlot, Phase, QueryResult, QueryRt, VState, WorkerShard};
+use crate::graph::VertexId;
 use crate::metrics::EngineMetrics;
 use crate::network::Cluster;
 use crate::vertex::{Ctx, MasterAction, QueryApp, QueryId};
@@ -18,6 +31,8 @@ pub struct Engine<A: QueryApp> {
     app: A,
     cluster: Cluster,
     capacity: usize,
+    /// OS threads for the compute phase (1 = serial; capped at `workers`).
+    threads: usize,
     n_vertices: usize,
     queue: VecDeque<(QueryId, A::Query, f64)>,
     inflight: Vec<QueryRt<A>>,
@@ -26,9 +41,158 @@ pub struct Engine<A: QueryApp> {
     clock: f64,
     max_supersteps: u64,
     metrics: EngineMetrics,
-    // Scratch buffers reused across super-rounds (perf: no allocation in
-    // the hot loop).
-    outbox_scratch: Vec<(u32, A::Msg)>,
+    // Per-worker scratch buffers reused across super-rounds (perf: no
+    // allocation in the hot loop; one per lane so threads never share).
+    outbox_scratch: Vec<Vec<(VertexId, A::Msg)>>,
+}
+
+/// One worker's share of a super-round: shard `w` of every running query,
+/// plus this worker's scratch buffer and cost/traffic accumulators. Lanes
+/// are handed to threads whole; nothing in a lane is visible to another.
+struct Lane<'a, A: QueryApp> {
+    tasks: Vec<Task<'a, A>>,
+    scratch: &'a mut Vec<(VertexId, A::Msg)>,
+    /// Simulated compute seconds accumulated by this worker.
+    cost: f64,
+    compute_calls: u64,
+    /// `ctx.send` calls (pre-combiner), for engine-wide traffic counters.
+    sent: u64,
+}
+
+/// One (query, worker) compute unit inside a lane.
+struct Task<'a, A: QueryApp> {
+    qid: QueryId,
+    /// Superstep this compute phase executes (1-based).
+    step: u64,
+    query: &'a A::Query,
+    agg_prev: &'a A::Agg,
+    shard: &'a mut WorkerShard<A>,
+}
+
+/// Append `m` to `into`, first offering it to the sender-side combiner
+/// against the slot head. Used both when staging (compute phase) and when
+/// the barrier delivers cross-shard slots — the single rule that makes the
+/// per-shard staging buffers reproduce, message for message, what one
+/// shared staging buffer would have held. Returns the number of messages
+/// added (0 when combined away).
+fn merge_msg<A: QueryApp>(app: &A, into: &mut MsgSlot<A::Msg>, m: A::Msg) -> u64 {
+    if let Some(first) = into.first_mut() {
+        if app.combine(first, &m) {
+            return 0;
+        }
+    }
+    into.push(m);
+    1
+}
+
+/// Execute every task of one lane: the per-worker serial loop over running
+/// queries. Runs on a worker thread when `threads > 1`; touches only the
+/// lane's own shards/scratch plus the read-shared app and cluster.
+fn run_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
+    for task in lane.tasks.iter_mut() {
+        let step = task.step;
+        let qid = task.qid;
+        let query = task.query;
+        let agg_prev = task.agg_prev;
+        // Disjoint borrows of the shard's fields so the hot loop can mutate
+        // vertex state IN PLACE while staging messages and aggregating.
+        let WorkerShard {
+            vstate,
+            active,
+            inbox,
+            staged,
+            agg_round,
+            terminated,
+        } = &mut *task.shard;
+        let outbox_scratch: &mut Vec<(VertexId, A::Msg)> = &mut *lane.scratch;
+
+        let mut compute_calls: u64 = 0;
+        let mut msg_handled: u64 = 0;
+        let mut sent_total: u64 = 0;
+        let inbox_now = std::mem::take(inbox);
+        let mut next_active: Vec<VertexId> = Vec::new();
+
+        // One closure runs a compute() call over in-place state and routes
+        // the staged messages with the sender-side combiner.
+        let mut run_one = |v: VertexId,
+                           st: &mut VState<A::VQ>,
+                           msgs: &[A::Msg],
+                           next_active: &mut Vec<VertexId>|
+         -> u64 {
+            let mut ctx = Ctx {
+                app,
+                qid,
+                query,
+                step,
+                msgs,
+                prev_agg: agg_prev,
+                agg_partial: &mut *agg_round,
+                outbox: &mut *outbox_scratch,
+                halt: false,
+                terminate: false,
+                sent: 0,
+            };
+            app.compute(&mut ctx, v, &mut st.vq);
+            let (halt, terminate, sent) = (ctx.halt, ctx.terminate, ctx.sent);
+            st.halted = halt;
+            if !halt {
+                next_active.push(v);
+            }
+            if terminate {
+                *terminated = true;
+            }
+            for (dst, msg) in outbox_scratch.drain(..) {
+                let dw = cluster.worker_of(dst);
+                match staged[dw].entry(dst) {
+                    Entry::Occupied(mut e) => {
+                        let _ = merge_msg(app, e.get_mut(), msg);
+                    }
+                    Entry::Vacant(e) => {
+                        e.insert(MsgSlot::One(msg));
+                    }
+                }
+            }
+            sent
+        };
+
+        // Process message receivers first, then still-active vertices that
+        // got no messages.
+        for (&v, msgs) in inbox_now.iter() {
+            let st = vstate.entry(v).or_insert_with(|| VState {
+                vq: app.init_value(query, v),
+                halted: false,
+                computed_step: 0,
+            });
+            st.halted = false;
+            st.computed_step = step;
+            msg_handled += msgs.len() as u64;
+            compute_calls += 1;
+            sent_total += run_one(v, st, msgs.as_slice(), &mut next_active);
+        }
+        // Active vertices without messages.
+        let prev_active = std::mem::take(active);
+        for v in prev_active {
+            let st = vstate.get_mut(&v).expect("active implies state");
+            if st.halted || st.computed_step == step {
+                continue;
+            }
+            st.computed_step = step;
+            compute_calls += 1;
+            sent_total += run_one(v, st, &[], &mut next_active);
+        }
+        drop(run_one);
+        // Recycle the inbox map's capacity for the next round (the barrier
+        // refills it).
+        let mut inbox_now = inbox_now;
+        inbox_now.clear();
+        *inbox = inbox_now;
+        *active = next_active;
+
+        lane.cost += compute_calls as f64 * cluster.cost.per_vertex_compute_s
+            + msg_handled as f64 * cluster.cost.per_msg_overhead_s;
+        lane.compute_calls += compute_calls;
+        lane.sent += sent_total;
+    }
 }
 
 impl<A: QueryApp> Engine<A> {
@@ -39,6 +203,7 @@ impl<A: QueryApp> Engine<A> {
             app,
             cluster,
             capacity: 8, // paper: throughput saturates around C = 8
+            threads: 1,
             n_vertices,
             queue: VecDeque::new(),
             inflight: Vec::new(),
@@ -55,6 +220,15 @@ impl<A: QueryApp> Engine<A> {
     pub fn capacity(mut self, c: usize) -> Self {
         assert!(c > 0);
         self.capacity = c;
+        self
+    }
+
+    /// Set the number of OS threads for the compute phase. `1` (the
+    /// default) keeps the fully serial loop; values above the worker count
+    /// are clamped. Results are bit-identical for every setting.
+    pub fn threads(mut self, t: usize) -> Self {
+        assert!(t > 0);
+        self.threads = t;
         self
     }
 
@@ -146,12 +320,13 @@ impl<A: QueryApp> Engine<A> {
             let init = self.app.init_activate(&rt.query);
             for v in init {
                 let w = self.cluster.worker_of(v);
-                rt.vstate[w].entry(v).or_insert_with(|| VState {
+                let shard = &mut rt.shards[w];
+                shard.vstate.entry(v).or_insert_with(|| VState {
                     vq: self.app.init_value(&rt.query, v),
                     halted: false,
                     computed_step: 0,
                 });
-                rt.active[w].push(v);
+                shard.active.push(v);
             }
             self.inflight.push(rt);
         }
@@ -160,154 +335,119 @@ impl<A: QueryApp> Engine<A> {
             return false;
         }
 
-        // --- Compute phase: per worker, serially over queries (paper: each
-        // worker processes its share of every in-flight query serially; we
-        // simulate workers and take max over per-worker costs).
-        let mut worker_cost = vec![0.0f64; workers];
-        let mut round_msgs: u64 = 0;
-        let mut round_bytes: u64 = 0;
         let msg_size = self.app.msg_bytes() + self.cluster.cost.msg_header_bytes;
-
-        // Split the engine into disjoint field borrows so the hot loop can
-        // mutate vertex state IN PLACE (no per-call VQ clone, no second
-        // hash lookup) while the context borrows the app and scratch.
         let app = &self.app;
         let cluster = &self.cluster;
-        let outbox_scratch = &mut self.outbox_scratch;
-        let mut total_compute_calls: u64 = 0;
 
-        for w in 0..workers {
-            for rt in self.inflight.iter_mut() {
-                if rt.phase != Phase::Running {
-                    continue;
-                }
-                let step = rt.step + 1;
-                // Disjoint borrows of the query runtime's fields. Staged
-                // buffers and the aggregator partial live in the QueryRt
-                // and are reused across super-rounds (no allocation here).
-                let QueryRt {
-                    id,
-                    query,
-                    vstate,
-                    active,
-                    inbox,
-                    staged,
-                    agg_round,
-                    agg_prev,
-                    terminated,
-                    ..
-                } = rt;
-                let mut compute_calls: u64 = 0;
-                let mut msg_handled: u64 = 0;
-                let inbox_w = std::mem::take(&mut inbox[w]);
-                let mut next_active: Vec<u32> = Vec::new();
-
-                // One closure runs a compute() call over in-place state and
-                // routes the staged messages with the sender-side combiner.
-                let mut run_one = |v: u32,
-                                   st: &mut VState<A::VQ>,
-                                   msgs: &[A::Msg],
-                                   next_active: &mut Vec<u32>|
-                 -> u64 {
-                    let mut ctx = Ctx {
-                        app,
-                        qid: *id,
-                        query,
-                        step,
-                        msgs,
-                        prev_agg: agg_prev,
-                        agg_partial: agg_round,
-                        outbox: &mut *outbox_scratch,
-                        halt: false,
-                        terminate: false,
-                        sent: 0,
-                    };
-                    app.compute(&mut ctx, v, &mut st.vq);
-                    let (halt, terminate, sent) = (ctx.halt, ctx.terminate, ctx.sent);
-                    st.halted = halt;
-                    if !halt {
-                        next_active.push(v);
-                    }
-                    if terminate {
-                        *terminated = true;
-                    }
-                    for (dst, msg) in outbox_scratch.drain(..) {
-                        let dw = cluster.worker_of(dst);
-                        match staged[dw].entry(dst) {
-                            std::collections::hash_map::Entry::Occupied(mut e) => {
-                                let slot = e.get_mut();
-                                if let Some(first) = slot.first_mut() {
-                                    if app.combine(first, &msg) {
-                                        continue;
-                                    }
-                                }
-                                slot.push(msg);
-                            }
-                            std::collections::hash_map::Entry::Vacant(e) => {
-                                e.insert(MsgSlot::One(msg));
-                            }
-                        }
-                    }
-                    sent
-                };
-
-                // Process message receivers first, then still-active
-                // vertices that got no messages.
-                for (&v, msgs) in inbox_w.iter() {
-                    let st = vstate[w].entry(v).or_insert_with(|| VState {
-                        vq: app.init_value(query, v),
-                        halted: false,
-                        computed_step: 0,
-                    });
-                    st.halted = false;
-                    st.computed_step = step;
-                    msg_handled += msgs.len() as u64;
-                    compute_calls += 1;
-                    round_msgs += run_one(v, st, msgs.as_slice(), &mut next_active);
-                }
-                // Active vertices without messages.
-                let prev_active = std::mem::take(&mut active[w]);
-                for v in prev_active {
-                    let st = vstate[w].get_mut(&v).expect("active implies state");
-                    if st.halted || st.computed_step == step {
-                        continue;
-                    }
-                    st.computed_step = step;
-                    compute_calls += 1;
-                    round_msgs += run_one(v, st, &[], &mut next_active);
-                }
-                drop(run_one);
-                // Recycle the inbox map's capacity for the next round (the
-                // barrier below refills it).
-                let mut inbox_w = inbox_w;
-                inbox_w.clear();
-                rt.inbox[w] = inbox_w;
-                rt.active[w] = next_active;
-                worker_cost[w] += compute_calls as f64 * cluster.cost.per_vertex_compute_s
-                    + msg_handled as f64 * cluster.cost.per_msg_overhead_s;
-                total_compute_calls += compute_calls;
+        // --- Compute phase: transpose the running queries into worker
+        // lanes (shard w of every query + worker w's scratch) and run the
+        // lanes on up to `threads` scoped threads. Each worker still
+        // processes its share of every in-flight query serially (paper
+        // model); only distinct workers run concurrently.
+        if self.outbox_scratch.len() < workers {
+            self.outbox_scratch.resize_with(workers, Vec::new);
+        }
+        let mut lanes: Vec<Lane<'_, A>> = self
+            .outbox_scratch
+            .iter_mut()
+            .take(workers)
+            .map(|scratch| Lane {
+                tasks: Vec::new(),
+                scratch,
+                cost: 0.0,
+                compute_calls: 0,
+                sent: 0,
+            })
+            .collect();
+        for rt in self.inflight.iter_mut() {
+            if rt.phase != Phase::Running {
+                continue;
+            }
+            let qid = rt.id;
+            let step = rt.step + 1;
+            let QueryRt { query, agg_prev, shards, .. } = rt;
+            // Shared refs (Copy) so every lane's task can carry them.
+            let query: &A::Query = query;
+            let agg_prev: &A::Agg = agg_prev;
+            for (lane, shard) in lanes.iter_mut().zip(shards.iter_mut()) {
+                lane.tasks.push(Task { qid, step, query, agg_prev, shard });
             }
         }
+
+        let compute_start = Instant::now();
+        let nthreads = self.threads.min(workers).max(1);
+        if nthreads <= 1 {
+            for lane in lanes.iter_mut() {
+                run_lane(app, cluster, lane);
+            }
+        } else {
+            let chunk = workers.div_ceil(nthreads);
+            std::thread::scope(|s| {
+                for lanes_chunk in lanes.chunks_mut(chunk) {
+                    // Handles are collected by the scope itself: it joins
+                    // every spawned thread (and propagates panics) on exit.
+                    let _ = s.spawn(move || {
+                        for lane in lanes_chunk.iter_mut() {
+                            run_lane(app, cluster, lane);
+                        }
+                    });
+                }
+            });
+        }
+        self.metrics.compute_time += compute_start.elapsed().as_secs_f64();
+
+        let mut worker_cost = Vec::with_capacity(workers);
+        let mut round_msgs: u64 = 0;
+        let mut total_compute_calls: u64 = 0;
+        for lane in &lanes {
+            worker_cost.push(lane.cost);
+            round_msgs += lane.sent;
+            total_compute_calls += lane.compute_calls;
+        }
+        drop(lanes);
         self.metrics.total_compute_calls += total_compute_calls;
 
-        // --- Barrier: route staged messages, merge aggregators, lifecycle.
+        // --- Barrier (single-threaded): route staged messages, fold
+        // aggregator partials, drive lifecycle.
+        let barrier_start = Instant::now();
+        let mut round_bytes: u64 = 0;
         for rt in self.inflight.iter_mut() {
             if rt.phase != Phase::Running {
                 continue;
             }
             rt.step += 1;
             let mut q_msgs: u64 = 0;
-            for (dw, buf) in rt.staged.iter_mut().enumerate() {
-                for (dst, slot) in buf.drain() {
-                    q_msgs += slot.len() as u64;
-                    match rt.inbox[dw].entry(dst) {
-                        std::collections::hash_map::Entry::Occupied(mut e) => {
-                            e.get_mut().merge(slot);
-                        }
-                        std::collections::hash_map::Entry::Vacant(e) => {
-                            e.insert(slot); // moves, no allocation
+            // Deliver in source-worker order: together with the combiner
+            // replay in merge_msg this reproduces, message for message, the
+            // arrival order of a single shared staging buffer — and is
+            // independent of how lanes were scheduled onto threads.
+            for src in 0..workers {
+                for dw in 0..workers {
+                    if rt.shards[src].staged[dw].is_empty() {
+                        continue; // skip the W^2-mostly-empty buckets cheaply
+                    }
+                    let mut buf = std::mem::take(&mut rt.shards[src].staged[dw]);
+                    for (dst, slot) in buf.drain() {
+                        match rt.shards[dw].inbox.entry(dst) {
+                            Entry::Occupied(mut e) => {
+                                let into = e.get_mut();
+                                match slot {
+                                    MsgSlot::One(m) => q_msgs += merge_msg(app, into, m),
+                                    MsgSlot::Many(ms) => {
+                                        for m in ms {
+                                            q_msgs += merge_msg(app, into, m);
+                                        }
+                                    }
+                                }
+                            }
+                            Entry::Vacant(e) => {
+                                q_msgs += slot.len() as u64;
+                                e.insert(slot); // moves, no allocation
+                            }
                         }
                     }
+                    // Hand the drained map back to recycle its capacity.
+                    rt.shards[src].staged[dw] = buf;
                 }
             }
             rt.stats.messages += q_msgs;
@@ -315,14 +455,18 @@ impl<A: QueryApp> Engine<A> {
             rt.stats.bytes += q_bytes;
             round_bytes += q_bytes;
 
-            // Merge aggregator and run the master hook.
-            let mut merged = std::mem::take(&mut rt.agg_round);
-            // (worker partials were already folded into one value because
-            // Ctx::aggregate wrote into the shared per-query partial; the
-            // app's agg_merge handles multi-source merging semantics.)
-            let action = self
-                .app
-                .master_step(&rt.query, rt.step, &rt.agg_prev, &mut merged);
+            // Fold per-worker aggregator partials deterministically (worker
+            // order), OR the per-shard terminate flags, run the master hook.
+            let mut merged = A::Agg::default();
+            for shard in rt.shards.iter_mut() {
+                let part = std::mem::take(&mut shard.agg_round);
+                app.agg_merge(&mut merged, &part);
+                if shard.terminated {
+                    rt.terminated = true;
+                    shard.terminated = false;
+                }
+            }
+            let action = app.master_step(&rt.query, rt.step, &rt.agg_prev, &mut merged);
             rt.agg_prev = merged;
             if action == MasterAction::Terminate {
                 rt.terminated = true;
@@ -352,7 +496,6 @@ impl<A: QueryApp> Engine<A> {
         // --- Reporting super-round (n_q + 1): assemble results and free
         // all VQ-data / Q-data of finished queries.
         let n_vertices = self.n_vertices;
-        let app = &self.app;
         let clock = self.clock;
         let results = &mut self.results;
         self.inflight.retain_mut(|rt| {
@@ -364,9 +507,9 @@ impl<A: QueryApp> Engine<A> {
             rt.stats.access_rate = touched as f64 / n_vertices.max(1) as f64;
             rt.stats.finished_at = clock;
             let mut iter = rt
-                .vstate
+                .shards
                 .iter()
-                .flat_map(|m| m.iter().map(|(&v, st)| (v, &st.vq)));
+                .flat_map(|s| s.vstate.iter().map(|(&v, st)| (v, &st.vq)));
             let out = app.finish(&rt.query, &mut iter, &rt.agg_prev);
             results.push(QueryResult {
                 qid: rt.id,
@@ -375,6 +518,7 @@ impl<A: QueryApp> Engine<A> {
             });
             false // drop: frees HT_Q entry + all LUT_v entries of q
         });
+        self.metrics.barrier_time += barrier_start.elapsed().as_secs_f64();
 
         self.metrics.wall_time += wall_start.elapsed().as_secs_f64();
         true

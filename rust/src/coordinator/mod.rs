@@ -6,6 +6,13 @@
 //! (the paper's `C`) queries are in flight; new queries wait in a FIFO
 //! queue. Per-query VQ-data is allocated lazily — a vertex gets state for
 //! query `q` only when `q` first touches it.
+//!
+//! Workers are real: each query's state is split into per-worker
+//! `WorkerShard`s, and the compute phase runs worker lanes on up
+//! to `Engine::threads` scoped OS threads. Message exchange and the
+//! per-worker aggregator fold happen at the single-threaded barrier, in
+//! worker order, so every thread count produces bit-identical results
+//! (see `rust/tests/determinism.rs`).
 
 mod engine;
 mod query;

@@ -1,5 +1,5 @@
 //! Per-query runtime state: the rust analog of the paper's Q-data entry in
-//! `HT_Q` plus the per-worker slices of VQ-data and message stores.
+//! `HT_Q` plus the per-worker shards of VQ-data and message stores.
 
 use crate::graph::VertexId;
 use crate::metrics::QueryStats;
@@ -108,23 +108,52 @@ pub(crate) enum Phase {
     Reporting,
 }
 
-/// Q-data + per-worker stores for one in-flight query.
+/// One worker's slice of one in-flight query: everything the worker thread
+/// mutates during the compute phase. Shards of the same query are disjoint,
+/// so the engine can hand shard `w` of every query to thread `w` without
+/// synchronization; cross-shard traffic flows only through `staged`, which
+/// the barrier (single-threaded) routes into the destination shards' inboxes.
+pub(crate) struct WorkerShard<A: QueryApp> {
+    /// VQ-data table of this worker (lazy: only touched vertices present).
+    pub vstate: FxHashMap<VertexId, VState<A::VQ>>,
+    /// Active list (vertices that did not vote halt).
+    pub active: Vec<VertexId>,
+    /// Inbox for the *current* superstep.
+    pub inbox: FxHashMap<VertexId, MsgSlot<A::Msg>>,
+    /// Staged outgoing messages, keyed by destination worker then by
+    /// destination vertex (reused across rounds; exchanged at the barrier).
+    pub staged: Vec<FxHashMap<VertexId, MsgSlot<A::Msg>>>,
+    /// This worker's aggregator partial for the current superstep (folded
+    /// across shards in worker order at the barrier, then reset).
+    pub agg_round: A::Agg,
+    /// Set when a vertex on this shard called `force_terminate` (OR-folded
+    /// into the query flag at the barrier).
+    pub terminated: bool,
+}
+
+impl<A: QueryApp> WorkerShard<A> {
+    fn new(workers: usize) -> Self {
+        Self {
+            vstate: FxHashMap::default(),
+            active: Vec::new(),
+            inbox: FxHashMap::default(),
+            staged: (0..workers).map(|_| FxHashMap::default()).collect(),
+            agg_round: A::Agg::default(),
+            terminated: false,
+        }
+    }
+}
+
+/// Q-data + per-worker shards for one in-flight query.
 pub(crate) struct QueryRt<A: QueryApp> {
     pub id: QueryId,
     pub query: A::Query,
     /// Superstep number (1-based during compute).
     pub step: u64,
     pub phase: Phase,
-    /// Per-worker VQ-data tables (lazy: only touched vertices present).
-    pub vstate: Vec<FxHashMap<VertexId, VState<A::VQ>>>,
-    /// Per-worker active lists (vertices that did not vote halt).
-    pub active: Vec<Vec<VertexId>>,
-    /// Per-worker inbox for the *current* superstep.
-    pub inbox: Vec<FxHashMap<VertexId, MsgSlot<A::Msg>>>,
-    /// Per-dst-worker staged outgoing messages (reused across rounds).
-    pub staged: Vec<FxHashMap<VertexId, MsgSlot<A::Msg>>>,
-    /// This round's aggregator partial (reused across rounds).
-    pub agg_round: A::Agg,
+    /// Worker-major state: `shards[w]` is owned by worker `w`'s thread
+    /// during the compute phase.
+    pub shards: Vec<WorkerShard<A>>,
     /// Merged aggregator from the previous superstep (visible to compute).
     pub agg_prev: A::Agg,
     /// Set when any vertex (or the master hook) called force_terminate.
@@ -139,11 +168,7 @@ impl<A: QueryApp> QueryRt<A> {
             query,
             step: 0,
             phase: Phase::Running,
-            vstate: (0..workers).map(|_| FxHashMap::default()).collect(),
-            active: vec![Vec::new(); workers],
-            inbox: (0..workers).map(|_| FxHashMap::default()).collect(),
-            staged: (0..workers).map(|_| FxHashMap::default()).collect(),
-            agg_round: A::Agg::default(),
+            shards: (0..workers).map(|_| WorkerShard::new(workers)).collect(),
             agg_prev: A::Agg::default(),
             terminated: false,
             stats: QueryStats {
@@ -156,11 +181,91 @@ impl<A: QueryApp> QueryRt<A> {
 
     /// Total touched vertices across workers (VQ-data entries allocated).
     pub fn touched(&self) -> u64 {
-        self.vstate.iter().map(|m| m.len() as u64).sum()
+        self.shards.iter().map(|s| s.vstate.len() as u64).sum()
     }
 
     /// True when no vertex is active and no message is pending.
     pub fn quiescent(&self) -> bool {
-        self.active.iter().all(|a| a.is_empty()) && self.inbox.iter().all(|i| i.is_empty())
+        self.shards
+            .iter()
+            .all(|s| s.active.is_empty() && s.inbox.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_promotes_one_to_many() {
+        let mut s = MsgSlot::One(1u32);
+        assert_eq!(s.len(), 1);
+        s.push(2);
+        match &s {
+            MsgSlot::Many(v) => assert_eq!(v.as_slice(), &[1, 2]),
+            MsgSlot::One(_) => panic!("push must promote One to Many"),
+        }
+        s.push(3);
+        assert_eq!(s.as_slice(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn merge_one_into_one() {
+        let mut a = MsgSlot::One(10u32);
+        a.merge(MsgSlot::One(20));
+        assert_eq!(a.as_slice(), &[10, 20]);
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn merge_many_into_one_and_one_into_many() {
+        let mut a = MsgSlot::One(1u32);
+        a.merge(MsgSlot::Many(vec![2, 3]));
+        assert_eq!(a.as_slice(), &[1, 2, 3]);
+
+        let mut b = MsgSlot::Many(vec![4u32, 5]);
+        b.merge(MsgSlot::One(6));
+        assert_eq!(b.as_slice(), &[4, 5, 6]);
+    }
+
+    #[test]
+    fn merge_many_into_many_keeps_order() {
+        let mut a = MsgSlot::Many(vec![1u32, 2]);
+        a.merge(MsgSlot::Many(vec![3, 4]));
+        assert_eq!(a.as_slice(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn as_slice_of_one_is_singleton() {
+        let s = MsgSlot::One(7u32);
+        assert_eq!(s.as_slice(), &[7]);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn first_mut_targets_head() {
+        let mut s = MsgSlot::One(1u32);
+        *s.first_mut().unwrap() = 9;
+        assert_eq!(s.as_slice(), &[9]);
+        s.push(2);
+        *s.first_mut().unwrap() = 8;
+        assert_eq!(s.as_slice(), &[8, 2]);
+    }
+
+    #[test]
+    fn drained_many_is_empty() {
+        // A Many whose Vec was drained is the only empty form a slot can
+        // take; One is always non-empty.
+        let mut s: MsgSlot<u32> = MsgSlot::Many(vec![1, 2]);
+        if let MsgSlot::Many(v) = &mut s {
+            v.clear();
+        }
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.as_slice(), &[] as &[u32]);
+        assert!(s.first_mut().is_none());
+        // Refilling via push works from the drained state.
+        s.push(5);
+        assert_eq!(s.as_slice(), &[5]);
     }
 }

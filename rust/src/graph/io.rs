@@ -10,7 +10,8 @@
 //! Weighted variant uses `neighbor:weight` tokens.
 
 use super::{Graph, GraphBuilder, VertexId};
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 

@@ -6,14 +6,23 @@
 //!
 //! Layer map:
 //! * [`coordinator`] — the superstep-sharing engine (the paper's core
-//!   contribution): super-rounds, capacity `C`, lazy VQ-data.
-//! * [`vertex`] — the `QueryApp` programming interface (paper §4).
+//!   contribution): super-rounds, capacity `C`, lazy VQ-data. Worker
+//!   shards execute on real OS threads (`Engine::threads` knob,
+//!   `std::thread::scope`): shard `w` of every in-flight query forms a
+//!   lane owned by one thread; the single-threaded barrier exchanges
+//!   staged messages and folds per-worker aggregator partials in worker
+//!   order, so results are bit-identical for every thread count.
+//! * [`vertex`] — the `QueryApp` programming interface (paper §4); app and
+//!   associated types carry the `Send`/`Sync` bounds the threaded shards
+//!   require.
 //! * [`network`] — simulated BSP cluster + cost model (testbed stand-in).
 //! * [`graph`] — CSR substrate, loaders, synthetic dataset generators.
 //! * [`apps`] — the paper's five applications (§5).
 //! * [`baselines`] — Giraph/GraphLab/GraphChi/Neo4j-like execution
 //!   disciplines for the comparison tables.
-//! * [`runtime`] — PJRT loader/executor for the AOT kernel artifacts.
+//! * [`runtime`] — PJRT loader/executor for the AOT kernel artifacts
+//!   (gated behind the `pjrt` cargo feature; the default offline build
+//!   uses the pure-rust fallback).
 
 pub mod analytics;
 pub mod apps;

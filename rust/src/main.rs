@@ -5,7 +5,8 @@
 //!
 //! ```text
 //! quegel ppsp   [--graph FILE | --gen twitter:N:D] [--algo bfs|bibfs|hub2]
-//!               [--hubs K] [--workers W] [--capacity C] [--queries FILE | --random N]
+//!               [--hubs K] [--workers W] [--capacity C] [--threads T]
+//!               [--queries FILE | --random N]
 //! quegel xml    [--dblp N | --xmark N] [--semantics slca|slca-la|elca|maxmatch]
 //!               [--random N]
 //! quegel reach  [--gen web:N:L:D] [--random N]
@@ -15,13 +16,14 @@
 //!
 //! Every subcommand prints per-query answers plus the engine metrics.
 
-use anyhow::{bail, Context, Result};
 use quegel::apps::ppsp::hub2::{Hub2Indexer, Hub2Query, MinPlus, RustMinPlus};
 use quegel::apps::ppsp::{Bfs, BiBfs};
+use quegel::bail;
 use quegel::coordinator::Engine;
 use quegel::graph::{gen, io, Graph};
 use quegel::metrics::{fmt_pct, fmt_secs};
 use quegel::network::Cluster;
+use quegel::util::error::{Context, Result};
 use std::collections::HashMap;
 
 fn main() {
@@ -88,6 +90,7 @@ fn cmd_ppsp(opts: Opts) -> Result<()> {
     let n = g.num_vertices();
     let workers = opts.usize_or("workers", 8)?;
     let capacity = opts.usize_or("capacity", 8)?;
+    let threads = opts.usize_or("threads", 1)?;
     let cluster = Cluster::new(workers);
     let algo = opts.get("algo").unwrap_or("bibfs");
     let queries = match opts.get("queries") {
@@ -107,7 +110,9 @@ fn cmd_ppsp(opts: Opts) -> Result<()> {
 
     macro_rules! serve {
         ($app:expr, $mk:expr) => {{
-            let mut eng = Engine::new($app, cluster.clone(), n).capacity(capacity);
+            let mut eng = Engine::new($app, cluster.clone(), n)
+                .capacity(capacity)
+                .threads(threads);
             let ids: Vec<_> = queries.iter().map(|&q| eng.submit($mk(q))).collect();
             eng.run_until_idle();
             for (i, id) in ids.iter().enumerate() {
@@ -134,7 +139,9 @@ fn cmd_ppsp(opts: Opts) -> Result<()> {
             let (idx, st) = Hub2Indexer::new(k).build(&g, cluster.clone(), mp);
             println!("hub2 index built: k={} sim {}", idx.k(), fmt_secs(st.index_time));
             let dubs = idx.dub_for(&queries, mp, capacity, idx.k());
-            let mut eng = Engine::new(Hub2Query::new(&g, &idx), cluster.clone(), n).capacity(capacity);
+            let mut eng = Engine::new(Hub2Query::new(&g, &idx), cluster.clone(), n)
+                .capacity(capacity)
+                .threads(threads);
             let ids: Vec<_> = queries
                 .iter()
                 .zip(&dubs)

@@ -50,6 +50,11 @@ pub struct EngineMetrics {
     pub sim_time: f64,
     /// Wall-clock seconds spent inside the engine (perf pass metric).
     pub wall_time: f64,
+    /// Wall-clock seconds spent in the (possibly threaded) compute phase.
+    pub compute_time: f64,
+    /// Wall-clock seconds spent in the single-threaded barrier phase
+    /// (message routing, aggregator fold, lifecycle, reporting).
+    pub barrier_time: f64,
     /// Peak number of simultaneously in-flight queries.
     pub peak_inflight: usize,
 }

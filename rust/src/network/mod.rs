@@ -181,4 +181,42 @@ mod tests {
         };
         assert!((cm.load_time(1000) - 15.0).abs() < 1e-9);
     }
+
+    #[test]
+    fn single_worker_cluster() {
+        let c = Cluster::new(1);
+        assert_eq!(c.machines(), 1);
+        // Every vertex lives on the only worker.
+        for v in [0u32, 1, 7, u32::MAX] {
+            assert_eq!(c.worker_of(v), 0);
+        }
+        // One worker, no traffic: the round costs compute + barrier only.
+        let t = c.super_round_time(&[2.0], 0);
+        assert!((t - (2.0 + c.cost.barrier_latency_s)).abs() < 1e-12, "got {t}");
+    }
+
+    #[test]
+    fn zero_bytes_on_wire_costs_no_bandwidth() {
+        let c = Cluster::with_cost(
+            4,
+            CostModel {
+                barrier_latency_s: 0.5,
+                bandwidth_bytes_per_s: 1.0, // absurdly slow: any byte would show
+                ..Default::default()
+            },
+        );
+        let t = c.super_round_time(&[1.0, 0.0, 0.0, 0.0], 0);
+        assert!((t - 1.5).abs() < 1e-12, "got {t}");
+    }
+
+    #[test]
+    fn machines_round_up_at_the_8_worker_boundary() {
+        // WORKERS_PER_MACHINE = 8: 1..=8 workers fit one machine, 9 needs 2.
+        assert_eq!(Cluster::new(7).machines(), 1);
+        assert_eq!(Cluster::new(8).machines(), 1);
+        assert_eq!(Cluster::new(9).machines(), 2);
+        assert_eq!(Cluster::new(16).machines(), 2);
+        assert_eq!(Cluster::new(17).machines(), 3);
+        assert_eq!(Cluster::new(120).machines(), 15); // the paper cluster
+    }
 }

@@ -8,7 +8,8 @@
 
 use super::{HloExecutable, Runtime};
 use crate::apps::ppsp::hub2::{MinPlus, F_INF};
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// Batch width the dub artifact was lowered with.

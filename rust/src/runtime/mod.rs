@@ -4,84 +4,98 @@
 //! Interchange format is HLO *text* (not serialized proto): jax >= 0.5 emits
 //! protos with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids and round-trips cleanly.
+//!
+//! The whole module is gated behind the `pjrt` cargo feature: the offline
+//! build image ships no `xla` crate, so the default build compiles the
+//! pure-rust [`crate::apps::ppsp::hub2::RustMinPlus`] evaluator only.
+//! Enable with `--features pjrt` after adding the `xla` dependency to
+//! `Cargo.toml`.
 
+#[cfg(feature = "pjrt")]
 pub mod minplus;
 
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{HloExecutable, Runtime};
 
-/// A compiled HLO executable bound to a PJRT client.
-pub struct HloExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use crate::util::error::{Context, Result};
+    use std::path::Path;
 
-/// PJRT client wrapper; owns the device and compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client })
+    /// A compiled HLO executable bound to a PJRT client.
+    pub struct HloExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        name: String,
     }
 
-    /// Platform name reported by PJRT (e.g. "Host").
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// PJRT client wrapper; owns the device and compiled executables.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    /// Load an HLO-text artifact and compile it for this client.
-    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<HloExecutable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(HloExecutable {
-            exe,
-            name: path.display().to_string(),
-        })
-    }
-}
-
-impl HloExecutable {
-    /// Execute with f32 input buffers of the given shapes, returning the
-    /// flattened f32 elements of every tuple output.
-    ///
-    /// Artifacts are lowered with `return_tuple=True`, so the single output
-    /// literal is a tuple; we decompose it and flatten each element.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .with_context(|| format!("reshaping input to {:?} for {}", shape, self.name))?;
-            lits.push(lit);
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { client })
         }
-        let mut result = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .with_context(|| format!("executing {}", self.name))?[0][0]
-            .to_literal_sync()?;
-        let parts = result.decompose_tuple()?;
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f32>()?);
+
+        /// Platform name reported by PJRT (e.g. "Host").
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        Ok(out)
+
+        /// Load an HLO-text artifact and compile it for this client.
+        pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<HloExecutable> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(HloExecutable {
+                exe,
+                name: path.display().to_string(),
+            })
+        }
     }
 
-    /// Name (artifact path) this executable was loaded from.
-    pub fn name(&self) -> &str {
-        &self.name
+    impl HloExecutable {
+        /// Execute with f32 input buffers of the given shapes, returning the
+        /// flattened f32 elements of every tuple output.
+        ///
+        /// Artifacts are lowered with `return_tuple=True`, so the single
+        /// output literal is a tuple; we decompose it and flatten each
+        /// element.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data).reshape(&dims).with_context(|| {
+                    format!("reshaping input to {:?} for {}", shape, self.name)
+                })?;
+                lits.push(lit);
+            }
+            let mut result = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .with_context(|| format!("executing {}", self.name))?[0][0]
+                .to_literal_sync()?;
+            let parts = result.decompose_tuple()?;
+            let mut out = Vec::with_capacity(parts.len());
+            for p in parts {
+                out.push(p.to_vec::<f32>()?);
+            }
+            Ok(out)
+        }
+
+        /// Name (artifact path) this executable was loaded from.
+        pub fn name(&self) -> &str {
+            &self.name
+        }
     }
 }

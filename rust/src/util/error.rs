@@ -1,0 +1,165 @@
+//! Minimal error-context plumbing: the subset of the `anyhow` API this
+//! crate uses (`Result`, `bail!`, `err!`, `.context()` / `.with_context()`),
+//! hand-rolled because the offline registry ships no error crates. The
+//! display contract matches anyhow's: `{}` prints the outermost message,
+//! `{:#}` prints the whole cause chain separated by `: `.
+
+use std::fmt;
+
+/// A boxed error message with an optional cause chain.
+pub struct Error {
+    /// Outermost message first, root cause last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+/// Debug prints the full chain (what `unwrap`/`expect` show).
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+/// Anything that is a standard error converts into [`Error`], capturing its
+/// source chain. (Error itself intentionally does NOT implement
+/// `std::error::Error`, so this blanket impl cannot conflict with the
+/// reflexive `From<T> for T`.)
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option` (the used subset
+/// of `anyhow::Context`).
+pub trait Context<T> {
+    /// Wrap the error (or a missing `Option` value) with a message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+
+    /// Wrap with a lazily-built message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow::anyhow!` stand-in: build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `anyhow::bail!` stand-in: early-return an error from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_num(s: &str) -> Result<u32> {
+        let n: u32 = s.parse().context("bad number")?;
+        if n > 100 {
+            bail!("{n} out of range");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn ok_path() {
+        assert_eq!(parse_num("42").unwrap(), 42);
+    }
+
+    #[test]
+    fn context_wraps_std_errors() {
+        let e = parse_num("nope").unwrap_err();
+        assert_eq!(format!("{e}"), "bad number");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("bad number: "), "{full}");
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = parse_num("500").unwrap_err();
+        assert_eq!(format!("{e}"), "500 out of range");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        let v = Some(7u32);
+        assert_eq!(v.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_io_errors() {
+        fn open() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/real/path")?;
+            Ok(s)
+        }
+        assert!(open().is_err());
+    }
+}

@@ -1,13 +1,16 @@
-//! Small self-contained utilities: deterministic RNG, fast hashing, bitsets.
+//! Small self-contained utilities: deterministic RNG, fast hashing,
+//! bitsets, and error-context plumbing.
 //!
-//! The offline registry has no `rand`/`rustc-hash`/`fixedbitset`, so these
-//! are hand-rolled; all experiments require determinism anyway (generators
-//! are seeded, so every bench regenerates identical workloads).
+//! The offline registry has no `rand`/`rustc-hash`/`fixedbitset`/`anyhow`,
+//! so these are hand-rolled; all experiments require determinism anyway
+//! (generators are seeded, so every bench regenerates identical workloads).
 
 pub mod bitset;
+pub mod error;
 pub mod fxhash;
 pub mod rng;
 
 pub use bitset::BitSet;
+pub use error::{Context, Error, Result};
 pub use fxhash::{FxHashMap, FxHashSet};
 pub use rng::Rng;

@@ -30,15 +30,24 @@ pub enum MasterAction {
 }
 
 /// A Quegel application: user logic for one *generic* query.
-pub trait QueryApp {
+///
+/// The engine executes worker shards on real OS threads
+/// (`std::thread::scope`), each thread holding `&self` plus exclusive
+/// ownership of its shard state. Hence the app must be `Sync` (V-data is
+/// read-shared across workers, exactly the paper's immutable-V-data
+/// contract), `Query`/`Agg` are read-shared per superstep (`Sync`), and
+/// `VQ`/`Msg`/`Agg` values live inside shard state owned by worker threads
+/// (`Send`).
+pub trait QueryApp: Sync {
     /// Query content `<Q>`.
-    type Query: Clone;
+    type Query: Clone + Sync;
     /// Query-dependent vertex attribute `a_q(v)` (VQ-data).
-    type VQ: Clone;
+    type VQ: Clone + Send;
     /// Message type `<M>`.
-    type Msg: Clone;
-    /// Aggregator value; `Default` is the identity element.
-    type Agg: Clone + Default;
+    type Msg: Clone + Send;
+    /// Aggregator value; `Default` is the identity element: `agg_merge`
+    /// folding a partial into a fresh `Default` must yield that partial.
+    type Agg: Clone + Default + Send + Sync;
     /// Per-query result type.
     type Out: Clone + Default;
 
@@ -63,7 +72,12 @@ pub trait QueryApp {
         false
     }
 
-    /// Merge a worker-local partial aggregate into `into`.
+    /// Merge a worker-local partial aggregate into `into`. Each worker
+    /// shard accumulates its own partial during the compute phase; the
+    /// barrier folds the partials **in worker order** through this hook
+    /// (deterministic regardless of thread count). Any app whose `compute`
+    /// calls [`Ctx::aggregate`] must implement this; the default no-op
+    /// discards every partial.
     fn agg_merge(&self, _into: &mut Self::Agg, _from: &Self::Agg) {}
 
     /// Master hook, run at the barrier with the merged aggregator of the

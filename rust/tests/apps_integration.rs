@@ -2,22 +2,28 @@
 //! rust oracle, the full Hub² pipeline through the artifacts, and the
 //! terrain CH-baseline vs Quegel path-shape comparison.
 
-use quegel::apps::ppsp::hub2::{from_f, Hub2Indexer, Hub2Query, MinPlus, RustMinPlus, F_INF};
+use quegel::apps::ppsp::hub2::{Hub2Indexer, Hub2Query, RustMinPlus};
 use quegel::apps::ppsp::{oracle, UNREACHED};
 use quegel::apps::terrain::baseline::{hausdorff, ChResult, ChenHanStandIn};
 use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
 use quegel::coordinator::Engine;
 use quegel::graph::gen;
 use quegel::network::Cluster;
-use quegel::runtime::minplus::PjrtMinPlus;
-use quegel::runtime::Runtime;
-use quegel::util::Rng;
+#[cfg(feature = "pjrt")]
+use quegel::{
+    apps::ppsp::hub2::{from_f, MinPlus, F_INF},
+    runtime::minplus::PjrtMinPlus,
+    runtime::Runtime,
+    util::Rng,
+};
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.txt").exists().then_some(dir)
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_minplus_matches_rust_oracle() {
     let Some(dir) = artifacts_dir() else {
@@ -77,6 +83,7 @@ fn pjrt_minplus_matches_rust_oracle() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn hub2_pipeline_through_pjrt_artifacts() {
     // The L1-on-the-hot-path test: index + batched d_ub through the

@@ -1,0 +1,164 @@
+//! Determinism suite for the threaded shard engine: for every app family,
+//! the same fixed-seed query batch must produce identical `QueryResult::out`
+//! across `threads ∈ {1, 4}` × `capacity ∈ {1, 8}`, and match the app's
+//! serial oracle. This pins the core guarantee of the worker-shard design:
+//! thread count and admission schedule never change answers.
+
+use quegel::apps::gkws::{self, query::GkwsQuery, KeywordSearch};
+use quegel::apps::ppsp::{oracle as ppsp_oracle, BiBfs, UNREACHED};
+use quegel::apps::reach::{build_labels, condense, dag, ReachQuery};
+use quegel::apps::terrain::baseline::dijkstra;
+use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
+use quegel::apps::xml::{self, SlcaLevelAligned};
+use quegel::coordinator::Engine;
+use quegel::graph::gen;
+use quegel::network::Cluster;
+use quegel::vertex::QueryApp;
+
+/// Run the same batch under every (threads, capacity) configuration and
+/// assert all runs return identical per-query outputs (in submission
+/// order). Returns one representative output vector for oracle checks.
+fn run_configs<A, F>(mk: F, n: usize, workers: usize, queries: &[A::Query]) -> Vec<A::Out>
+where
+    A: QueryApp,
+    A::Out: std::fmt::Debug + PartialEq,
+    F: Fn() -> A,
+{
+    let mut base: Option<Vec<A::Out>> = None;
+    for threads in [1usize, 4] {
+        for capacity in [1usize, 8] {
+            let mut eng = Engine::new(mk(), Cluster::new(workers), n)
+                .capacity(capacity)
+                .threads(threads);
+            let ids: Vec<_> = queries.iter().map(|q| eng.submit(q.clone())).collect();
+            eng.run_until_idle();
+            assert_eq!(eng.results().len(), queries.len());
+            let outs: Vec<A::Out> = ids
+                .iter()
+                .map(|id| {
+                    eng.results()
+                        .iter()
+                        .find(|r| r.qid == *id)
+                        .expect("query completed")
+                        .out
+                        .clone()
+                })
+                .collect();
+            match &base {
+                None => base = Some(outs),
+                Some(b) => assert_eq!(
+                    &outs, b,
+                    "threads={threads} C={capacity} changed query outputs"
+                ),
+            }
+        }
+    }
+    base.unwrap()
+}
+
+#[test]
+fn ppsp_bibfs_deterministic_and_correct() {
+    let mut g = gen::twitter_like(800, 5, 9001);
+    g.ensure_in_edges();
+    let queries = gen::random_pairs(800, 16, 9002);
+    let outs = run_configs(|| BiBfs::new(&g), 800, 6, &queries);
+    for (i, &(s, t)) in queries.iter().enumerate() {
+        let want = ppsp_oracle::bfs_dist(&g, s, t);
+        assert_eq!(
+            outs[i],
+            (want != UNREACHED).then_some(want),
+            "query ({s},{t})"
+        );
+    }
+}
+
+#[test]
+fn reach_deterministic_and_correct() {
+    let g = gen::web_cyclic(700, 25, 3, 9011);
+    let cond = condense(&g);
+    let mut dagg = cond.dag.clone();
+    dagg.ensure_in_edges();
+    let (labels, _) = build_labels(&dagg, &Cluster::new(4), true);
+    let pairs = gen::random_pairs(g.num_vertices(), 20, 9012);
+    let queries: Vec<(u32, u32)> = pairs
+        .iter()
+        .map(|&(s, t)| (cond.scc_of[s as usize], cond.scc_of[t as usize]))
+        .collect();
+    let n = dagg.num_vertices();
+    let outs = run_configs(|| ReachQuery::new(&dagg, &labels), n, 5, &queries);
+    for (i, &(s, t)) in pairs.iter().enumerate() {
+        assert_eq!(outs[i], dag::reaches(&g, s, t), "query ({s},{t})");
+    }
+}
+
+#[test]
+fn gkws_deterministic_and_correct() {
+    let g = gkws::data::generate(&gkws::RdfGenConfig {
+        resources: 500,
+        avg_deg: 3,
+        predicates: 20,
+        vocab: 90,
+        seed: 9021,
+    });
+    let queries: Vec<GkwsQuery> = gkws::data::query_pool(&g, 6, 2, 9022)
+        .into_iter()
+        .map(|keywords| GkwsQuery {
+            keywords,
+            delta_max: 3,
+        })
+        .collect();
+    let outs = run_configs(|| KeywordSearch::new(&g), g.len(), 4, &queries);
+    for (i, q) in queries.iter().enumerate() {
+        let want = gkws::query::oracle(&g, q);
+        // Hop values are unique; the matched entity may differ at ties
+        // (both answers valid), so compare roots + per-keyword hops.
+        let project = |rs: &[(u32, Vec<(u32, u32)>)]| -> Vec<(u32, Vec<u32>)> {
+            rs.iter()
+                .map(|(v, f)| (*v, f.iter().map(|&(_, h)| h).collect()))
+                .collect()
+        };
+        assert_eq!(project(&outs[i]), project(&want), "query {i}");
+    }
+}
+
+#[test]
+fn xml_slca_deterministic_and_correct() {
+    let t = xml::data::generate(&xml::XmlGenConfig {
+        dblp_like: true,
+        records: 150,
+        vocab: 160,
+        seed: 9031,
+    });
+    let queries = xml::data::query_pool(&t, 8, 2, 9032);
+    let outs = run_configs(|| SlcaLevelAligned::new(&t), t.len(), 4, &queries);
+    for (i, q) in queries.iter().enumerate() {
+        let got: Vec<u32> = outs[i].iter().map(|&(v, _, _)| v).collect();
+        assert_eq!(got, xml::oracle::slca(&t, q), "q={q:?}");
+    }
+}
+
+#[test]
+fn terrain_sssp_deterministic_and_correct() {
+    let dem = Dem::fractal(14, 12, 10.0, 90.0, 9041);
+    let net = TerrainNet::build(&dem, 5.0);
+    let n = net.graph.num_vertices();
+    let queries: Vec<(u32, u32)> = [
+        (0usize, 0usize, 13usize, 11usize),
+        (3, 2, 10, 9),
+        (0, 11, 13, 0),
+        (6, 6, 7, 7),
+    ]
+    .iter()
+    .map(|&(sx, sy, tx, ty)| (net.corner(sx, sy), net.corner(tx, ty)))
+    .collect();
+    let outs = run_configs(|| TerrainSssp::new(&net), n, 4, &queries);
+    for (i, &(s, t)) in queries.iter().enumerate() {
+        let want = dijkstra(&net.graph, s, Some(t)).0[t as usize];
+        assert!(outs[i].reached, "query {i} must reach its target");
+        assert!(
+            (outs[i].dist - want).abs() < 1e-6,
+            "query {i}: {} vs dijkstra {want}",
+            outs[i].dist
+        );
+    }
+}

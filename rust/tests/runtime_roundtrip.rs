@@ -2,7 +2,9 @@
 //! check numerics against hand-computed min-plus results.
 //!
 //! Skips (with a message) if `artifacts/` has not been built yet; run
-//! `make artifacts` first.
+//! `make artifacts` first. The whole suite requires the `pjrt` cargo
+//! feature (the default offline build has no PJRT runtime).
+#![cfg(feature = "pjrt")]
 
 use quegel::runtime::Runtime;
 

@@ -1,0 +1,86 @@
+//! Concurrency stress: repeated fixed-seed runs of interleaved submission
+//! on the *threaded* engine (threads = 4), asserting the per-query stats
+//! invariants the scheduler must uphold no matter how lanes are scheduled
+//! onto OS threads.
+
+use quegel::apps::ppsp::{oracle, Bfs, UNREACHED};
+use quegel::coordinator::Engine;
+use quegel::graph::gen;
+use quegel::network::Cluster;
+
+const REPS: u64 = 50;
+const CAPACITY: usize = 4;
+
+#[test]
+fn interleaved_submission_invariants_hold_across_50_reps() {
+    for rep in 0..REPS {
+        let seed = 7000 + rep * 3;
+        let n = 400 + (rep as usize % 5) * 50;
+        let g = gen::twitter_like(n, 4, seed);
+        let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), n)
+            .capacity(CAPACITY)
+            .threads(4);
+
+        let q1 = gen::random_pairs(n, 4, seed + 1);
+        let q2 = gen::random_pairs(n, 4, seed + 2);
+        let mut submitted = 0usize;
+        for &q in &q1 {
+            eng.submit(q);
+            submitted += 1;
+        }
+        // Run a couple of super-rounds, then add more queries mid-flight.
+        eng.super_round();
+        eng.super_round();
+        for &q in &q2 {
+            eng.submit(q);
+            submitted += 1;
+        }
+        eng.run_until_idle();
+
+        // Result count equals submissions; capacity never exceeded.
+        assert_eq!(eng.results().len(), submitted, "rep {rep}");
+        assert!(
+            eng.metrics().peak_inflight <= CAPACITY,
+            "rep {rep}: peak {} > C = {CAPACITY}",
+            eng.metrics().peak_inflight
+        );
+
+        for r in eng.results() {
+            let s = &r.stats;
+            // Scheduling timeline is monotone.
+            assert!(
+                s.submitted_at <= s.started_at,
+                "rep {rep} q{}: submitted {} > started {}",
+                s.qid,
+                s.submitted_at,
+                s.started_at
+            );
+            assert!(
+                s.started_at <= s.finished_at,
+                "rep {rep} q{}: started {} > finished {}",
+                s.qid,
+                s.started_at,
+                s.finished_at
+            );
+            // Lazy VQ-data can never exceed the vertex universe.
+            assert!(
+                s.touched <= n as u64,
+                "rep {rep} q{}: touched {} > |V| = {n}",
+                s.qid,
+                s.touched
+            );
+            // Answers stay correct under interleaving + threading.
+            let (qs, qt) = if (r.qid as usize) < q1.len() {
+                q1[r.qid as usize]
+            } else {
+                q2[r.qid as usize - q1.len()]
+            };
+            let want = oracle::bfs_dist(&g, qs, qt);
+            assert_eq!(
+                r.out,
+                (want != UNREACHED).then_some(want),
+                "rep {rep} query ({qs},{qt})"
+            );
+        }
+    }
+}
