@@ -5,8 +5,9 @@
 //! `harness = false` bench binary: each module prints a paper-shaped table
 //! and the main dispatches on a name filter:
 //!
-//!     cargo bench --offline             # everything
-//!     cargo bench --offline -- tab5     # one experiment
+//!     cargo bench --offline                  # everything
+//!     cargo bench --offline -- tab5          # one experiment
+//!     cargo bench --offline -- perf --json   # perf + BENCH_pr2.json
 //!
 //! Absolute numbers are simulated-cluster seconds from the cost model (plus
 //! wall time where meaningful); the paper-vs-measured comparison lives in
@@ -24,6 +25,10 @@ fn main() {
         .map(String::as_str)
         .collect();
     let want = |name: &str| filter.is_empty() || filter.iter().any(|f| name.contains(f));
+    if args.iter().any(|a| a == "--json") {
+        // Machine-readable perf output (phase-split wall times + speedups).
+        tables::perf::JSON.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
 
     let experiments: Vec<(&str, fn())> = vec![
         ("fig1_balance", tables::fig1::run),

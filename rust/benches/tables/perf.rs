@@ -1,16 +1,136 @@
 //! §Perf micro-benchmarks: wall-clock cost of the engine hot paths, used by
 //! the optimization pass (EXPERIMENTS.md §Perf). Not a paper table.
+//!
+//! The phase-split section attributes the pooled engine's win: per
+//! `threads` setting it reports compute / exchange / barrier wall time and
+//! the speedup of each over the serial (`threads = 1`) run. The XML
+//! workload runs SLCA *without* the sender-side combiner — the
+//! combiner-less regime where message routing dominated the old serial
+//! barrier. With `--json`, the same numbers are written to
+//! `BENCH_pr2.json` so the perf trajectory is machine-readable.
 
 use quegel::apps::ppsp::{Bfs, BiBfs};
+use quegel::apps::xml::{self, SlcaNaive, XmlGenConfig};
 use quegel::coordinator::Engine;
 use quegel::graph::gen;
 use quegel::metrics::Table;
 use quegel::network::Cluster;
+use quegel::vertex::QueryApp;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
+
+/// Set by `bench_main` when `--json` is passed: also emit `BENCH_pr2.json`.
+pub static JSON: AtomicBool = AtomicBool::new(false);
+
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
 
 fn median(mut xs: Vec<f64>) -> f64 {
     xs.sort_by(f64::total_cmp);
     xs[xs.len() / 2]
+}
+
+/// Median phase wall times of one workload at one `threads` setting.
+struct PhaseRow {
+    threads: usize,
+    compute: f64,
+    exchange: f64,
+    barrier: f64,
+    wall: f64,
+}
+
+/// Run `queries` as one batch (C = 8) per thread setting, 3 reps each,
+/// and report median phase times.
+fn phase_rows<A, F>(mk: F, n: usize, workers: usize, queries: &[A::Query]) -> Vec<PhaseRow>
+where
+    A: QueryApp,
+    F: Fn() -> A,
+{
+    THREAD_SWEEP
+        .iter()
+        .map(|&threads| {
+            let mut computes = Vec::new();
+            let mut exchanges = Vec::new();
+            let mut barriers = Vec::new();
+            let mut walls = Vec::new();
+            for _ in 0..3 {
+                let mut eng = Engine::new(mk(), Cluster::new(workers), n)
+                    .capacity(8)
+                    .threads(threads);
+                for q in queries {
+                    eng.submit(q.clone());
+                }
+                let t0 = Instant::now();
+                eng.run_until_idle();
+                walls.push(t0.elapsed().as_secs_f64());
+                computes.push(eng.metrics().compute_time);
+                exchanges.push(eng.metrics().exchange_time);
+                barriers.push(eng.metrics().barrier_time);
+            }
+            PhaseRow {
+                threads,
+                compute: median(computes),
+                exchange: median(exchanges),
+                barrier: median(barriers),
+                wall: median(walls),
+            }
+        })
+        .collect()
+}
+
+fn print_phase_table(name: &str, rows: &[PhaseRow]) {
+    let base_compute = rows[0].compute;
+    let base_xb = rows[0].exchange + rows[0].barrier;
+    let mut t = Table::new(vec![
+        "threads",
+        "compute",
+        "exchange",
+        "barrier",
+        "total wall",
+        "compute speedup",
+        "exch+barrier speedup",
+    ]);
+    for r in rows {
+        let xb = r.exchange + r.barrier;
+        t.row(vec![
+            r.threads.to_string(),
+            format!("{:.1} ms", r.compute * 1e3),
+            format!("{:.1} ms", r.exchange * 1e3),
+            format!("{:.1} ms", r.barrier * 1e3),
+            format!("{:.1} ms", r.wall * 1e3),
+            format!("{:.2}x", base_compute / r.compute),
+            format!("{:.2}x", base_xb / xb),
+        ]);
+    }
+    println!("[{name}]");
+    println!("{}", t.render());
+}
+
+/// Serialize one workload's sweep as a JSON array (no serde offline; the
+/// format is fixed and flat, so hand-rolling is safe).
+fn json_rows(rows: &[PhaseRow]) -> String {
+    let base_compute = rows[0].compute;
+    let base_xb = rows[0].exchange + rows[0].barrier;
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "{{\"threads\":{},\"compute_s\":{:.6},\"exchange_s\":{:.6},",
+                    "\"barrier_s\":{:.6},\"wall_s\":{:.6},",
+                    "\"compute_speedup_vs_t1\":{:.3},",
+                    "\"exchange_barrier_speedup_vs_t1\":{:.3}}}"
+                ),
+                r.threads,
+                r.compute,
+                r.exchange,
+                r.barrier,
+                r.wall,
+                base_compute / r.compute,
+                base_xb / (r.exchange + r.barrier),
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
 }
 
 pub fn run() {
@@ -31,7 +151,9 @@ pub fn run() {
         let mut times = Vec::new();
         let mut calls = 0;
         for _ in 0..3 {
-            let mut eng = Engine::new(Bfs::new(&g), Cluster::new(8), n).capacity(cap);
+            let mut eng = Engine::new(Bfs::new(&g), Cluster::new(8), n)
+                .capacity(cap)
+                .threads(1);
             for &q in &queries {
                 eng.submit(q);
             }
@@ -48,74 +170,53 @@ pub fn run() {
             format!("{:.1}", calls as f64 / (m * 1e6)),
         ]);
     }
-
-    // BiBFS batch (combiner-heavy).
-    let mut times = Vec::new();
-    let mut calls = 0;
-    for _ in 0..3 {
-        let mut eng = Engine::new(BiBfs::new(&g), Cluster::new(8), n).capacity(8);
-        for &q in &queries {
-            eng.submit(q);
-        }
-        let t0 = Instant::now();
-        eng.run_until_idle();
-        times.push(t0.elapsed().as_secs_f64());
-        calls = eng.metrics().total_compute_calls;
-    }
-    let m = median(times);
-    t.row(vec![
-        "bibfs batch C=8".to_string(),
-        format!("{:.1} ms", m * 1e3),
-        calls.to_string(),
-        format!("{:.1}", calls as f64 / (m * 1e6)),
-    ]);
-
     println!("{}", t.render());
     println!("target: > 2 compute calls / us in the batch path (see");
     println!("EXPERIMENTS.md §Perf for the iteration log).");
 
-    // --- Threaded worker shards: compute-phase wall time on the
-    // Table-7-style batch workload (BiBFS, C = 8, W = 8) as the engine's
-    // `threads` knob grows. The barrier stays single-threaded, so the
-    // speedup target applies to the compute phase.
-    let mut tt = Table::new(vec![
-        "threads",
-        "compute wall",
-        "barrier wall",
-        "total wall",
-        "compute speedup",
-    ]);
-    let mut base_compute = 0.0f64;
-    for threads in [1usize, 2, 4, 8] {
-        let mut computes = Vec::new();
-        let mut barriers = Vec::new();
-        let mut walls = Vec::new();
-        for _ in 0..3 {
-            let mut eng = Engine::new(BiBfs::new(&g), Cluster::new(8), n)
-                .capacity(8)
-                .threads(threads);
-            for &q in &queries {
-                eng.submit(q);
-            }
-            let t0 = Instant::now();
-            eng.run_until_idle();
-            walls.push(t0.elapsed().as_secs_f64());
-            computes.push(eng.metrics().compute_time);
-            barriers.push(eng.metrics().barrier_time);
+    // --- Phase split on the pooled engine, per threads setting.
+    //
+    // BiBFS (combiner-heavy: most traffic combines away at the sender, so
+    // compute dominates) vs naive SLCA without combiner (combiner-less:
+    // every upward send reaches the staging buffers, so the exchange phase
+    // carries the round).
+    let bibfs_rows = phase_rows(|| BiBfs::new(&g), n, 8, &queries);
+    print_phase_table("bibfs batch C=8 W=8 (combiner-heavy)", &bibfs_rows);
+
+    let tree = xml::data::generate(&XmlGenConfig {
+        dblp_like: true,
+        records: 15_000,
+        vocab: 400,
+        seed: 435,
+    });
+    let xml_queries = xml::data::query_pool(&tree, 48, 3, 436);
+    let xml_rows = phase_rows(
+        || SlcaNaive::without_combiner(&tree),
+        tree.len(),
+        8,
+        &xml_queries,
+    );
+    print_phase_table("xml slca no-combiner C=8 W=8 (combiner-less)", &xml_rows);
+
+    println!("targets: compute speedup >= 1.5x at 4 threads (BiBFS);");
+    println!("exchange+barrier speedup >= 1.3x at 4 threads on the");
+    println!("combiner-less XML workload. Results are bit-identical across");
+    println!("the threads column by construction (tests/determinism.rs).");
+
+    if JSON.load(Ordering::Relaxed) {
+        let payload = format!(
+            concat!(
+                "{{\"pr\":2,\"bench\":\"perf_engine\",",
+                "\"threads_swept\":[1,2,4,8],\"reps\":3,\"workloads\":{{",
+                "\"bibfs_batch_c8_w8\":{},",
+                "\"xml_slca_nocombiner_c8_w8\":{}}}}}\n"
+            ),
+            json_rows(&bibfs_rows),
+            json_rows(&xml_rows),
+        );
+        match std::fs::write("BENCH_pr2.json", &payload) {
+            Ok(()) => println!("wrote BENCH_pr2.json"),
+            Err(e) => eprintln!("could not write BENCH_pr2.json: {e}"),
         }
-        let mc = median(computes);
-        if threads == 1 {
-            base_compute = mc;
-        }
-        tt.row(vec![
-            threads.to_string(),
-            format!("{:.1} ms", mc * 1e3),
-            format!("{:.1} ms", median(barriers) * 1e3),
-            format!("{:.1} ms", median(walls) * 1e3),
-            format!("{:.2}x", base_compute / mc),
-        ]);
     }
-    println!("{}", tt.render());
-    println!("target: compute-phase speedup >= 1.5x at 4 threads (results");
-    println!("are bit-identical across the threads column by construction).");
 }

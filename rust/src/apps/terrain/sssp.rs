@@ -245,7 +245,8 @@ mod tests {
         let net = small_net(25);
         let s = net.corner(2, 2);
         let t = net.corner(9, 7);
-        let mut eng = Engine::new(TerrainSssp::new(&net), Cluster::new(2), net.graph.num_vertices());
+        let mut eng =
+            Engine::new(TerrainSssp::new(&net), Cluster::new(2), net.graph.num_vertices());
         let out = eng.run_one((s, t)).out;
         assert!(out.reached);
         let first = out.path.first().unwrap();

@@ -255,7 +255,8 @@ pub fn generate(cfg: &XmlGenConfig) -> XmlTree {
                 let mut cur = item;
                 let depth = 3 + rng.below_usize(4);
                 for d in 0..depth {
-                    let tag = t.intern(["description", "parlist", "listitem", "text", "bold"][d % 5]);
+                    let tag =
+                        t.intern(["description", "parlist", "listitem", "text", "bold"][d % 5]);
                     let nxt = t.add_vertex(cur, vec![tag]);
                     // Occasionally a sibling text leaf.
                     if rng.chance(0.5) {

@@ -1,24 +1,40 @@
-//! The superstep-sharing engine loop, with worker shards executed on real
-//! OS threads.
+//! The superstep-sharing engine loop: three parallel phases per super-round
+//! on a persistent worker pool.
 //!
 //! Execution model: every BSP worker is a [`WorkerShard`] per in-flight
-//! query. The compute phase groups shard `w` of every running query into a
-//! worker *lane* and runs lanes on up to `threads` scoped threads
-//! (`std::thread::scope`, no locking — lanes own disjoint state). The
-//! barrier then runs single-threaded on the coordinator: it routes staged
-//! messages between shards in source-worker order, folds per-worker
-//! aggregator partials in worker order, and drives query lifecycle. Both
-//! phases are deterministic in the thread count: `threads = N` produces
-//! bit-identical `QueryResult`s to `threads = 1`.
+//! query, and each super-round runs three phases, all executed by the same
+//! long-lived [`WorkerPool`] (created once per engine and woken per phase —
+//! no per-round thread spawn/join):
+//!
+//! 1. **Compute** — shard `w` of every running query is grouped into worker
+//!    *lane* `w`; lanes run concurrently, each owning disjoint state.
+//! 2. **Exchange** — the barrier's message routing, destination-sharded:
+//!    staging buffers are already keyed by destination worker, so
+//!    destination `dw` drains `shards[src].staged[dw]` from every `src` in
+//!    source-worker order, concurrently with every other destination. The
+//!    source-order replay, together with the sender-side combiner replay in
+//!    `merge_msg`, reproduces message for message what one shared staging
+//!    buffer would have held — delivery is bit-identical to the old serial
+//!    barrier, without its O(W²) serial loop.
+//! 3. **Fold** — per-query aggregator folding (worker order, unchanged),
+//!    the master hook and lifecycle transitions run concurrently across
+//!    queries; only the reporting round and the simulated-clock advance
+//!    stay on the coordinator.
+//!
+//! All three phases are deterministic in the thread count: `threads = N`
+//! produces bit-identical `QueryResult`s to `threads = 1` (pinned by
+//! `rust/tests/determinism.rs` across threads × workers × capacity).
 
 use std::collections::hash_map::Entry;
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use super::query::{MsgSlot, Phase, QueryResult, QueryRt, VState, WorkerShard};
+use super::pool::{Job, WorkerPool};
+use super::query::{merge_msg, MsgSlot, Phase, QueryResult, QueryRt, VState, WorkerShard};
 use crate::graph::VertexId;
 use crate::metrics::EngineMetrics;
 use crate::network::Cluster;
+use crate::util::FxHashMap;
 use crate::vertex::{Ctx, MasterAction, QueryApp, QueryId};
 
 /// Safety cap: a query that exceeds this many supersteps is cut off and
@@ -26,13 +42,17 @@ use crate::vertex::{Ctx, MasterAction, QueryApp, QueryId};
 const DEFAULT_MAX_SUPERSTEPS: u64 = 100_000;
 
 /// The Quegel engine: owns the app (V-data lives inside it), the simulated
-/// cluster, the query queue and all in-flight query state.
+/// cluster, the query queue, all in-flight query state, and the persistent
+/// worker pool that executes the parallel phases.
 pub struct Engine<A: QueryApp> {
     app: A,
     cluster: Cluster,
     capacity: usize,
-    /// OS threads for the compute phase (1 = serial; capped at `workers`).
+    /// OS threads for the parallel phases (1 = serial; capped at `workers`).
     threads: usize,
+    /// Long-lived pool, created lazily at the first super-round that needs
+    /// it and joined when the engine drops (even mid-queue).
+    pool: Option<WorkerPool>,
     n_vertices: usize,
     queue: VecDeque<(QueryId, A::Query, f64)>,
     inflight: Vec<QueryRt<A>>,
@@ -44,11 +64,16 @@ pub struct Engine<A: QueryApp> {
     // Per-worker scratch buffers reused across super-rounds (perf: no
     // allocation in the hot loop; one per lane so threads never share).
     outbox_scratch: Vec<Vec<(VertexId, A::Msg)>>,
+    // Exchange lanes reused across super-rounds: task structs and their
+    // `inbound` vectors keep their capacity, so the steady-state exchange
+    // allocates nothing (the maps themselves are loaned from the shards).
+    exchange_scratch: Vec<ExchangeLane<A>>,
 }
 
-/// One worker's share of a super-round: shard `w` of every running query,
-/// plus this worker's scratch buffer and cost/traffic accumulators. Lanes
-/// are handed to threads whole; nothing in a lane is visible to another.
+/// One worker's share of the compute phase: shard `w` of every running
+/// query, plus this worker's scratch buffer and cost/traffic accumulators.
+/// Lanes are handed to pool jobs whole; nothing in a lane is visible to
+/// another.
 struct Lane<'a, A: QueryApp> {
     tasks: Vec<Task<'a, A>>,
     scratch: &'a mut Vec<(VertexId, A::Msg)>,
@@ -69,24 +94,30 @@ struct Task<'a, A: QueryApp> {
     shard: &'a mut WorkerShard<A>,
 }
 
-/// Append `m` to `into`, first offering it to the sender-side combiner
-/// against the slot head. Used both when staging (compute phase) and when
-/// the barrier delivers cross-shard slots — the single rule that makes the
-/// per-shard staging buffers reproduce, message for message, what one
-/// shared staging buffer would have held. Returns the number of messages
-/// added (0 when combined away).
-fn merge_msg<A: QueryApp>(app: &A, into: &mut MsgSlot<A::Msg>, m: A::Msg) -> u64 {
-    if let Some(first) = into.first_mut() {
-        if app.combine(first, &m) {
-            return 0;
-        }
-    }
-    into.push(m);
-    1
+/// One destination worker's share of the exchange phase: for every running
+/// query, the staging buffers addressed to this worker plus the query's
+/// destination-shard inbox. Tasks hold the maps *by value* (taken from the
+/// shards for the duration of the phase and handed back afterwards), so a
+/// lane is owned data — pool jobs need no shard borrows and every
+/// destination drains concurrently with every other.
+struct ExchangeLane<A: QueryApp> {
+    /// One task per running query, in `inflight` order.
+    tasks: Vec<ExchangeTask<A>>,
+}
+
+/// The exchange unit for one (destination worker, query) pair.
+struct ExchangeTask<A: QueryApp> {
+    /// `shards[src].staged[dw]` for each source worker, in worker order —
+    /// the order the serial barrier replayed, so delivery is bit-identical.
+    inbound: Vec<FxHashMap<VertexId, MsgSlot<A::Msg>>>,
+    /// The destination shard's inbox for the next superstep.
+    inbox: FxHashMap<VertexId, MsgSlot<A::Msg>>,
+    /// Messages delivered (post-combiner); folded into stats afterwards.
+    delivered: u64,
 }
 
 /// Execute every task of one lane: the per-worker serial loop over running
-/// queries. Runs on a worker thread when `threads > 1`; touches only the
+/// queries. Runs on a pool worker when `threads > 1`; touches only the
 /// lane's own shards/scratch plus the read-shared app and cluster.
 fn run_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
     for task in lane.tasks.iter_mut() {
@@ -181,8 +212,8 @@ fn run_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
             sent_total += run_one(v, st, &[], &mut next_active);
         }
         drop(run_one);
-        // Recycle the inbox map's capacity for the next round (the barrier
-        // refills it).
+        // Recycle the inbox map's capacity for the next round (the exchange
+        // phase refills it).
         let mut inbox_now = inbox_now;
         inbox_now.clear();
         *inbox = inbox_now;
@@ -195,6 +226,114 @@ fn run_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
     }
 }
 
+/// Execute every task of one exchange lane: drain each source shard's
+/// staging buffer addressed to this destination into the destination inbox,
+/// in source-worker order, replaying the sender-side combiner per message.
+/// Runs on a pool worker; touches only owned task data plus the read-shared
+/// app.
+fn run_exchange<A: QueryApp>(app: &A, lane: &mut ExchangeLane<A>) {
+    for task in lane.tasks.iter_mut() {
+        let ExchangeTask {
+            inbound,
+            inbox,
+            delivered,
+        } = task;
+        for srcmap in inbound.iter_mut() {
+            if srcmap.is_empty() {
+                continue; // skip the W²-mostly-empty buckets cheaply
+            }
+            for (dst, slot) in srcmap.drain() {
+                match inbox.entry(dst) {
+                    Entry::Occupied(mut e) => {
+                        let into = e.get_mut();
+                        match slot {
+                            MsgSlot::One(m) => *delivered += merge_msg(app, into, m),
+                            MsgSlot::Many(ms) => {
+                                for m in ms {
+                                    *delivered += merge_msg(app, into, m);
+                                }
+                            }
+                        }
+                    }
+                    Entry::Vacant(e) => {
+                        *delivered += slot.len() as u64;
+                        e.insert(slot); // moves, no allocation
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one parallel phase: split `items` into `nthreads` contiguous
+/// chunks and run `f` over them on the pool, or inline when no pool exists
+/// (`threads = 1`). All three phases (compute / exchange / fold) route
+/// through here, so chunking policy lives in exactly one place.
+fn run_chunked<T: Send>(
+    pool: Option<&WorkerPool>,
+    nthreads: usize,
+    items: &mut [T],
+    f: impl Fn(&mut T) + Sync,
+) {
+    if items.is_empty() {
+        return;
+    }
+    match pool {
+        None => {
+            for item in items.iter_mut() {
+                f(item);
+            }
+        }
+        Some(pool) => {
+            let chunk = items.len().div_ceil(nthreads);
+            let f = &f;
+            let jobs: Vec<Job<'_>> = items
+                .chunks_mut(chunk)
+                .map(|chunk_items| {
+                    Box::new(move || {
+                        for item in chunk_items.iter_mut() {
+                            f(item);
+                        }
+                    }) as Job<'_>
+                })
+                .collect();
+            pool.run(jobs);
+        }
+    }
+}
+
+/// The fold-phase unit for one query: merge per-worker aggregator partials
+/// in worker order, OR the per-shard terminate flags, run the master hook,
+/// and drive the lifecycle transition. Pure per-query state, so queries
+/// fold concurrently on the pool without changing any result.
+fn fold_query<A: QueryApp>(app: &A, rt: &mut QueryRt<A>, max_supersteps: u64) {
+    if rt.phase != Phase::Running {
+        return;
+    }
+    let mut merged = A::Agg::default();
+    for shard in rt.shards.iter_mut() {
+        let part = std::mem::take(&mut shard.agg_round);
+        app.agg_merge(&mut merged, &part);
+        if shard.terminated {
+            rt.terminated = true;
+            shard.terminated = false;
+        }
+    }
+    let action = app.master_step(&rt.query, rt.step, &rt.agg_prev, &mut merged);
+    rt.agg_prev = merged;
+    if action == MasterAction::Terminate {
+        rt.terminated = true;
+    }
+    if rt.step >= max_supersteps {
+        rt.terminated = true;
+        rt.stats.truncated = true;
+    }
+    if rt.terminated || rt.quiescent() {
+        rt.phase = Phase::Reporting;
+    }
+    rt.stats.supersteps = rt.step;
+}
+
 impl<A: QueryApp> Engine<A> {
     /// Engine over `app` (which owns the graph / V-data) on `cluster`.
     /// `n_vertices` is |V|, used for access-rate accounting.
@@ -203,7 +342,10 @@ impl<A: QueryApp> Engine<A> {
             app,
             cluster,
             capacity: 8, // paper: throughput saturates around C = 8
-            threads: 1,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            pool: None,
             n_vertices,
             queue: VecDeque::new(),
             inflight: Vec::new(),
@@ -213,6 +355,7 @@ impl<A: QueryApp> Engine<A> {
             max_supersteps: DEFAULT_MAX_SUPERSTEPS,
             metrics: EngineMetrics::default(),
             outbox_scratch: Vec::new(),
+            exchange_scratch: Vec::new(),
         }
     }
 
@@ -223,12 +366,16 @@ impl<A: QueryApp> Engine<A> {
         self
     }
 
-    /// Set the number of OS threads for the compute phase. `1` (the
-    /// default) keeps the fully serial loop; values above the worker count
+    /// Set the number of OS threads for the parallel phases (compute,
+    /// exchange, fold). Defaults to `std::thread::available_parallelism()`;
+    /// `1` forces the fully serial loop, and values above the worker count
     /// are clamped. Results are bit-identical for every setting.
     pub fn threads(mut self, t: usize) -> Self {
         assert!(t > 0);
         self.threads = t;
+        // Re-created at the right size by the next super-round that needs
+        // it; dropping here joins any previously spawned workers.
+        self.pool = None;
         self
     }
 
@@ -289,7 +436,11 @@ impl<A: QueryApp> Engine<A> {
     }
 
     /// Convenience: submit one query and run it to completion, returning
-    /// its result (interactive-mode helper).
+    /// its result (interactive-mode helper). The result is removed from the
+    /// completed-result buffer, so sessions that only ever call `run_one`
+    /// never accumulate results; completion is still accounted in
+    /// [`EngineMetrics::queries_completed`] whether or not `take_results`
+    /// is ever called, so engine-level stats stay consistent either way.
     pub fn run_one(&mut self, q: A::Query) -> QueryResult<A::Out> {
         let id = self.submit(q);
         self.run_until_idle();
@@ -308,6 +459,10 @@ impl<A: QueryApp> Engine<A> {
         }
         let wall_start = Instant::now();
         let workers = self.cluster.workers;
+        let nthreads = self.threads.min(workers).max(1);
+        if nthreads > 1 && self.pool.is_none() {
+            self.pool = Some(WorkerPool::new(nthreads));
+        }
 
         // --- Admission: fetch queries while capacity permits (paper §3.1).
         while self.inflight.len() < self.capacity {
@@ -338,12 +493,13 @@ impl<A: QueryApp> Engine<A> {
         let msg_size = self.app.msg_bytes() + self.cluster.cost.msg_header_bytes;
         let app = &self.app;
         let cluster = &self.cluster;
+        let pool = self.pool.as_ref();
 
         // --- Compute phase: transpose the running queries into worker
         // lanes (shard w of every query + worker w's scratch) and run the
-        // lanes on up to `threads` scoped threads. Each worker still
-        // processes its share of every in-flight query serially (paper
-        // model); only distinct workers run concurrently.
+        // lanes on the pool. Each worker still processes its share of every
+        // in-flight query serially (paper model); only distinct workers run
+        // concurrently.
         if self.outbox_scratch.len() < workers {
             self.outbox_scratch.resize_with(workers, Vec::new);
         }
@@ -375,25 +531,9 @@ impl<A: QueryApp> Engine<A> {
         }
 
         let compute_start = Instant::now();
-        let nthreads = self.threads.min(workers).max(1);
-        if nthreads <= 1 {
-            for lane in lanes.iter_mut() {
-                run_lane(app, cluster, lane);
-            }
-        } else {
-            let chunk = workers.div_ceil(nthreads);
-            std::thread::scope(|s| {
-                for lanes_chunk in lanes.chunks_mut(chunk) {
-                    // Handles are collected by the scope itself: it joins
-                    // every spawned thread (and propagates panics) on exit.
-                    let _ = s.spawn(move || {
-                        for lane in lanes_chunk.iter_mut() {
-                            run_lane(app, cluster, lane);
-                        }
-                    });
-                }
-            });
-        }
+        run_chunked(pool, nthreads, &mut lanes, |lane| {
+            run_lane(app, cluster, lane)
+        });
         self.metrics.compute_time += compute_start.elapsed().as_secs_f64();
 
         let mut worker_cost = Vec::with_capacity(workers);
@@ -407,79 +547,88 @@ impl<A: QueryApp> Engine<A> {
         drop(lanes);
         self.metrics.total_compute_calls += total_compute_calls;
 
-        // --- Barrier (single-threaded): route staged messages, fold
-        // aggregator partials, drive lifecycle.
-        let barrier_start = Instant::now();
+        // --- Exchange phase: destination-sharded message routing. The
+        // staging buffers are keyed by destination worker already, so each
+        // destination drains its column of the W×W staging matrix
+        // independently. The maps are *taken* from the shards (cheap
+        // pointer-sized moves) so exchange lanes own their data outright,
+        // and are handed back below to recycle their capacity.
+        let exchange_start = Instant::now();
+        if self.exchange_scratch.len() < workers {
+            self.exchange_scratch
+                .resize_with(workers, || ExchangeLane { tasks: Vec::new() });
+        }
+        let ex_lanes = &mut self.exchange_scratch[..workers];
+        let mut qi = 0usize;
+        for rt in self.inflight.iter_mut() {
+            if rt.phase != Phase::Running {
+                continue;
+            }
+            for (dw, lane) in ex_lanes.iter_mut().enumerate() {
+                // Reuse last round's task slot where possible: its inbound
+                // vector was drained (capacity kept) and its inbox is an
+                // unallocated leftover default.
+                if lane.tasks.len() == qi {
+                    lane.tasks.push(ExchangeTask {
+                        inbound: Vec::with_capacity(workers),
+                        inbox: FxHashMap::default(),
+                        delivered: 0,
+                    });
+                }
+                let task = &mut lane.tasks[qi];
+                task.inbox = std::mem::take(&mut rt.shards[dw].inbox);
+                task.delivered = 0;
+            }
+            // Column extraction in source-worker order, so each destination
+            // replays arrivals exactly as the serial barrier did.
+            for shard in rt.shards.iter_mut() {
+                for (stg, lane) in shard.staged.iter_mut().zip(ex_lanes.iter_mut()) {
+                    lane.tasks[qi].inbound.push(std::mem::take(stg));
+                }
+            }
+            qi += 1;
+        }
+        let nq = qi;
+        for lane in ex_lanes.iter_mut() {
+            // Drop stale slots from rounds that ran more queries.
+            lane.tasks.truncate(nq);
+        }
+        run_chunked(pool, nthreads, &mut *ex_lanes, |lane| run_exchange(app, lane));
+        // Post-pass: hand filled inboxes and drained staging maps back to
+        // their shards (recycling capacity) and fold delivered counts into
+        // per-query stats.
         let mut round_bytes: u64 = 0;
+        let mut qi = 0usize;
         for rt in self.inflight.iter_mut() {
             if rt.phase != Phase::Running {
                 continue;
             }
             rt.step += 1;
             let mut q_msgs: u64 = 0;
-            // Deliver in source-worker order: together with the combiner
-            // replay in merge_msg this reproduces, message for message, the
-            // arrival order of a single shared staging buffer — and is
-            // independent of how lanes were scheduled onto threads.
-            for src in 0..workers {
-                for dw in 0..workers {
-                    if rt.shards[src].staged[dw].is_empty() {
-                        continue; // skip the W^2-mostly-empty buckets cheaply
-                    }
-                    let mut buf = std::mem::take(&mut rt.shards[src].staged[dw]);
-                    for (dst, slot) in buf.drain() {
-                        match rt.shards[dw].inbox.entry(dst) {
-                            Entry::Occupied(mut e) => {
-                                let into = e.get_mut();
-                                match slot {
-                                    MsgSlot::One(m) => q_msgs += merge_msg(app, into, m),
-                                    MsgSlot::Many(ms) => {
-                                        for m in ms {
-                                            q_msgs += merge_msg(app, into, m);
-                                        }
-                                    }
-                                }
-                            }
-                            Entry::Vacant(e) => {
-                                q_msgs += slot.len() as u64;
-                                e.insert(slot); // moves, no allocation
-                            }
-                        }
-                    }
-                    // Hand the drained map back to recycle its capacity.
-                    rt.shards[src].staged[dw] = buf;
+            for (dw, lane) in ex_lanes.iter_mut().enumerate() {
+                let task = &mut lane.tasks[qi];
+                q_msgs += task.delivered;
+                rt.shards[dw].inbox = std::mem::take(&mut task.inbox);
+                for (src, map) in task.inbound.drain(..).enumerate() {
+                    rt.shards[src].staged[dw] = map;
                 }
             }
+            qi += 1;
             rt.stats.messages += q_msgs;
             let q_bytes = q_msgs * msg_size as u64;
             rt.stats.bytes += q_bytes;
             round_bytes += q_bytes;
-
-            // Fold per-worker aggregator partials deterministically (worker
-            // order), OR the per-shard terminate flags, run the master hook.
-            let mut merged = A::Agg::default();
-            for shard in rt.shards.iter_mut() {
-                let part = std::mem::take(&mut shard.agg_round);
-                app.agg_merge(&mut merged, &part);
-                if shard.terminated {
-                    rt.terminated = true;
-                    shard.terminated = false;
-                }
-            }
-            let action = app.master_step(&rt.query, rt.step, &rt.agg_prev, &mut merged);
-            rt.agg_prev = merged;
-            if action == MasterAction::Terminate {
-                rt.terminated = true;
-            }
-            if rt.step >= self.max_supersteps {
-                rt.terminated = true;
-                rt.stats.truncated = true;
-            }
-            if rt.terminated || rt.quiescent() {
-                rt.phase = Phase::Reporting;
-            }
-            rt.stats.supersteps = rt.step;
         }
+        self.metrics.exchange_time += exchange_start.elapsed().as_secs_f64();
+
+        // --- Fold phase: per-query aggregator fold, master hook and
+        // lifecycle, parallel across queries (the fold inside each query
+        // stays in worker order, so results are unchanged).
+        let barrier_start = Instant::now();
+        let max_supersteps = self.max_supersteps;
+        run_chunked(pool, nthreads, &mut self.inflight, |rt| {
+            fold_query(app, rt, max_supersteps)
+        });
 
         // Aggregator sync bytes: one Agg per worker per running query.
         round_bytes +=
@@ -494,10 +643,13 @@ impl<A: QueryApp> Engine<A> {
         self.metrics.sim_time = self.clock;
 
         // --- Reporting super-round (n_q + 1): assemble results and free
-        // all VQ-data / Q-data of finished queries.
+        // all VQ-data / Q-data of finished queries. Completion is counted
+        // in the engine metrics here, so per-query accounting never depends
+        // on the caller draining `take_results`.
         let n_vertices = self.n_vertices;
         let clock = self.clock;
         let results = &mut self.results;
+        let metrics = &mut self.metrics;
         self.inflight.retain_mut(|rt| {
             if rt.phase != Phase::Reporting {
                 return true;
@@ -506,6 +658,7 @@ impl<A: QueryApp> Engine<A> {
             rt.stats.touched = touched;
             rt.stats.access_rate = touched as f64 / n_vertices.max(1) as f64;
             rt.stats.finished_at = clock;
+            metrics.queries_completed += 1;
             let mut iter = rt
                 .shards
                 .iter()

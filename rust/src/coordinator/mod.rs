@@ -8,13 +8,18 @@
 //! query `q` only when `q` first touches it.
 //!
 //! Workers are real: each query's state is split into per-worker
-//! `WorkerShard`s, and the compute phase runs worker lanes on up
-//! to `Engine::threads` scoped OS threads. Message exchange and the
-//! per-worker aggregator fold happen at the single-threaded barrier, in
-//! worker order, so every thread count produces bit-identical results
-//! (see `rust/tests/determinism.rs`).
+//! `WorkerShard`s, and every super-round runs three phases on a persistent
+//! [`pool`] of up to `Engine::threads` OS threads (created once per engine,
+//! woken per phase): **compute** (worker lanes, disjoint state),
+//! **exchange** (destination-sharded message routing — each destination
+//! worker drains its column of the staging matrix in source-worker order,
+//! concurrently with every other destination), and **fold** (per-query
+//! aggregator fold in worker order + lifecycle, parallel across queries).
+//! Every thread count produces bit-identical results (see
+//! `rust/tests/determinism.rs`).
 
 mod engine;
+mod pool;
 mod query;
 
 pub use engine::Engine;

@@ -1,0 +1,248 @@
+//! Persistent worker pool for the engine's parallel phases.
+//!
+//! PR 1 ran the compute phase on `std::thread::scope`, which spawns and
+//! joins fresh OS threads every super-round — a recurring cost that lands
+//! exactly in Quegel's regime of short, light supersteps (a query touches
+//! few vertices, so a super-round is often microseconds of real work).
+//! The pool replaces that with `threads` long-lived workers created once
+//! per [`Engine`](super::Engine) and woken per phase through a
+//! condvar-guarded job queue: the coordinator enqueues one closure per
+//! worker-lane chunk (compute), destination-worker chunk (exchange) or
+//! query chunk (fold), then blocks until every job of the batch has
+//! finished. Because [`WorkerPool::run`] does not return before the batch
+//! drains, jobs may safely borrow engine state for the duration of the
+//! call — the same guarantee `std::thread::scope` gave, without the
+//! per-round spawn/join tax.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One unit of phase work: a boxed closure that may borrow engine state
+/// for `'scope` (erased inside [`WorkerPool::run`], which outlives no
+/// borrow because it blocks until the batch completes).
+pub(crate) type Job<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+struct PoolState {
+    /// Pending jobs of the current batch. Pop order is irrelevant: every
+    /// job owns disjoint state, and whatever must be deterministic is
+    /// folded in a fixed order by the coordinator afterwards.
+    jobs: Vec<Job<'static>>,
+    /// Jobs of the current batch not yet finished (queued + running).
+    in_flight: usize,
+    /// First panic payload of the current batch; resumed by `run` so the
+    /// coordinator observes the original panic, as `std::thread::scope`
+    /// would have surfaced it.
+    panic: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for jobs (or shutdown).
+    work_cv: Condvar,
+    /// The coordinator waits here for batch completion.
+    done_cv: Condvar,
+}
+
+/// A fixed-size pool of long-lived worker threads executing batches of
+/// scoped jobs. Dropping the pool (e.g. dropping the engine mid-queue)
+/// shuts every worker down and joins it — no thread outlives the pool.
+pub(crate) struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` long-lived workers.
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0, "pool needs at least one worker");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                jobs: Vec::new(),
+                in_flight: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("quegel-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    /// Number of pool workers.
+    #[allow(dead_code)]
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run one batch of jobs on the pool workers, blocking the caller
+    /// until the last job finishes. A panic in any job is re-raised here
+    /// after the whole batch drained, mirroring `std::thread::scope`.
+    pub fn run<'scope>(&self, batch: Vec<Job<'scope>>) {
+        if batch.is_empty() {
+            return;
+        }
+        // SAFETY: `run` does not return until `in_flight == 0`, i.e. until
+        // every job of the batch has been executed (or unwound) and
+        // dropped. The worker-side decrement happens under the state mutex
+        // strictly after the job ran, and the wait below re-reads the
+        // counter under the same mutex, so all job effects happen-before
+        // `run` returns; no borrow captured by a job outlives the true
+        // `'scope` lifetime erased here.
+        let batch: Vec<Job<'static>> = batch
+            .into_iter()
+            .map(|job| unsafe { std::mem::transmute::<Job<'scope>, Job<'static>>(job) })
+            .collect();
+        let mut st = self.shared.state.lock().unwrap();
+        debug_assert_eq!(st.in_flight, 0, "WorkerPool::run is not reentrant");
+        st.in_flight = batch.len();
+        st.jobs.extend(batch);
+        self.shared.work_cv.notify_all();
+        while st.in_flight > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        let panic = st.panic.take();
+        drop(st);
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Wake every worker, have it exit, and join it. Runs whenever the
+    /// owning engine is dropped — even with queries still queued — so no
+    /// OS thread leaks past the engine's lifetime.
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.jobs.pop() {
+                    break Some(job);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let Some(job) = job else { return };
+        // Catch panics so the worker survives a failing job: the rest of
+        // the batch still drains and `run` re-raises on the coordinator.
+        let result = catch_unwind(AssertUnwindSafe(job));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(payload) = result {
+            // Keep the first payload; later ones are dropped (scope, too,
+            // surfaces a single panic per batch).
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
+        }
+        st.in_flight -= 1;
+        if st.in_flight == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn batch_runs_every_job_and_blocks_until_done() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let counter = AtomicUsize::new(0);
+        for round in 0..10usize {
+            let jobs: Vec<Job<'_>> = (0..16)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    }) as Job<'_>
+                })
+                .collect();
+            pool.run(jobs);
+            // run() is a barrier: every job of the batch has finished.
+            assert_eq!(counter.load(Ordering::Relaxed), (round + 1) * 16);
+        }
+    }
+
+    #[test]
+    fn jobs_may_borrow_caller_state_mutably() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 64];
+        let jobs: Vec<Job<'_>> = data
+            .chunks_mut(8)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, x) in chunk.iter_mut().enumerate() {
+                        *x = (i * 8 + j) as u64;
+                    }
+                }) as Job<'_>
+            })
+            .collect();
+        pool.run(jobs);
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i as u64);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let pool = WorkerPool::new(2);
+        pool.run(Vec::new());
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = WorkerPool::new(2);
+        pool.run(vec![Box::new(|| {}) as Job<'_>]);
+        drop(pool); // must return (join), not hang
+    }
+
+    #[test]
+    fn job_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(vec![Box::new(|| panic!("job panic (expected in test)")) as Job<'_>]);
+        }));
+        let payload = result.expect_err("run must re-raise job panics");
+        // The original payload is preserved (resume_unwind, not a fresh
+        // panic), matching std::thread::scope semantics.
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(
+            msg.contains("expected in test"),
+            "original panic payload must survive, got {msg:?}"
+        );
+        // The pool stays usable after a panicking batch.
+        let ok = AtomicUsize::new(0);
+        pool.run(vec![Box::new(|| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        }) as Job<'_>]);
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+}

@@ -6,6 +6,26 @@ use crate::metrics::QueryStats;
 use crate::util::FxHashMap;
 use crate::vertex::{QueryApp, QueryId};
 
+/// Append `m` to `into`, first offering it to the sender-side combiner
+/// against the slot head. Used both when staging (compute phase) and when
+/// the exchange phase delivers cross-shard slots — the single rule that
+/// makes the per-shard staging buffers reproduce, message for message, what
+/// one shared staging buffer would have held. Returns the number of
+/// messages added (0 when combined away).
+///
+/// This is the *only* way messages enter a slot: the old `MsgSlot::merge`
+/// convenience silently bypassed [`QueryApp::combine`] and was removed in
+/// its favor.
+pub(crate) fn merge_msg<A: QueryApp>(app: &A, into: &mut MsgSlot<A::Msg>, m: A::Msg) -> u64 {
+    if let Some(first) = into.first_mut() {
+        if app.combine(first, &m) {
+            return 0;
+        }
+    }
+    into.push(m);
+    1
+}
+
 /// Per-vertex, per-query state (one `LUT_v[q]` entry): the vertex value
 /// `a_q(v)` plus the halted flag and a stamp to dedup processing within a
 /// super-round.
@@ -56,7 +76,7 @@ impl<M> MsgSlot<M> {
     #[allow(dead_code)]
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        matches!(self, MsgSlot::Many(v) if v.is_empty())
     }
 
     /// View as a slice (One is a 1-element slice via `slice::from_ref`).
@@ -74,19 +94,6 @@ impl<M> MsgSlot<M> {
         match self {
             MsgSlot::One(m) => Some(m),
             MsgSlot::Many(v) => v.first_mut(),
-        }
-    }
-
-    /// Merge another slot into this one.
-    #[inline]
-    pub fn merge(&mut self, other: MsgSlot<M>) {
-        match other {
-            MsgSlot::One(m) => self.push(m),
-            MsgSlot::Many(ms) => {
-                for m in ms {
-                    self.push(m);
-                }
-            }
         }
     }
 }
@@ -110,9 +117,11 @@ pub(crate) enum Phase {
 
 /// One worker's slice of one in-flight query: everything the worker thread
 /// mutates during the compute phase. Shards of the same query are disjoint,
-/// so the engine can hand shard `w` of every query to thread `w` without
+/// so the engine can hand shard `w` of every query to a pool worker without
 /// synchronization; cross-shard traffic flows only through `staged`, which
-/// the barrier (single-threaded) routes into the destination shards' inboxes.
+/// is keyed by destination worker so the exchange phase can route every
+/// destination's column of the staging matrix concurrently (the maps are
+/// taken from the shards for the duration of the phase and handed back).
 pub(crate) struct WorkerShard<A: QueryApp> {
     /// VQ-data table of this worker (lazy: only touched vertices present).
     pub vstate: FxHashMap<VertexId, VState<A::VQ>>,
@@ -124,10 +133,10 @@ pub(crate) struct WorkerShard<A: QueryApp> {
     /// destination vertex (reused across rounds; exchanged at the barrier).
     pub staged: Vec<FxHashMap<VertexId, MsgSlot<A::Msg>>>,
     /// This worker's aggregator partial for the current superstep (folded
-    /// across shards in worker order at the barrier, then reset).
+    /// across shards in worker order by the fold phase, then reset).
     pub agg_round: A::Agg,
     /// Set when a vertex on this shard called `force_terminate` (OR-folded
-    /// into the query flag at the barrier).
+    /// into the query flag by the fold phase).
     pub terminated: bool,
 }
 
@@ -209,30 +218,68 @@ mod tests {
         assert_eq!(s.as_slice(), &[1, 2, 3]);
     }
 
-    #[test]
-    fn merge_one_into_one() {
-        let mut a = MsgSlot::One(10u32);
-        a.merge(MsgSlot::One(20));
-        assert_eq!(a.as_slice(), &[10, 20]);
-        assert_eq!(a.len(), 2);
+    /// Minimal app whose combiner sums `u32` messages while the head stays
+    /// below 100, used to pin `merge_msg`'s contract: every message is
+    /// offered to `QueryApp::combine` against the slot head before being
+    /// appended (the old `MsgSlot::merge` silently skipped the combiner).
+    struct SumBelow100;
+
+    impl QueryApp for SumBelow100 {
+        type Query = ();
+        type VQ = ();
+        type Msg = u32;
+        type Agg = ();
+        type Out = ();
+
+        fn init_activate(&self, _q: &()) -> Vec<VertexId> {
+            Vec::new()
+        }
+
+        fn init_value(&self, _q: &(), _v: VertexId) {}
+
+        fn compute(&self, _ctx: &mut crate::vertex::Ctx<'_, Self>, _v: VertexId, _vq: &mut ()) {}
+
+        fn combine(&self, into: &mut u32, from: &u32) -> bool {
+            if *into + *from < 100 {
+                *into += *from;
+                true
+            } else {
+                false
+            }
+        }
+
+        fn finish(
+            &self,
+            _q: &(),
+            _touched: &mut dyn Iterator<Item = (VertexId, &())>,
+            _agg: &(),
+        ) {
+        }
     }
 
     #[test]
-    fn merge_many_into_one_and_one_into_many() {
-        let mut a = MsgSlot::One(1u32);
-        a.merge(MsgSlot::Many(vec![2, 3]));
-        assert_eq!(a.as_slice(), &[1, 2, 3]);
-
-        let mut b = MsgSlot::Many(vec![4u32, 5]);
-        b.merge(MsgSlot::One(6));
-        assert_eq!(b.as_slice(), &[4, 5, 6]);
+    fn merge_msg_routes_through_combiner() {
+        let app = SumBelow100;
+        let mut slot = MsgSlot::One(10u32);
+        // Combined into the head: nothing appended, count 0.
+        assert_eq!(merge_msg(&app, &mut slot, 20), 0);
+        assert_eq!(slot.as_slice(), &[30]);
+        // Combiner declines (sum would reach 120): appended, count 1.
+        assert_eq!(merge_msg(&app, &mut slot, 90), 1);
+        assert_eq!(slot.as_slice(), &[30, 90]);
+        // The head stays the combiner target once the slot is Many.
+        assert_eq!(merge_msg(&app, &mut slot, 5), 0);
+        assert_eq!(slot.as_slice(), &[35, 90]);
     }
 
     #[test]
-    fn merge_many_into_many_keeps_order() {
-        let mut a = MsgSlot::Many(vec![1u32, 2]);
-        a.merge(MsgSlot::Many(vec![3, 4]));
-        assert_eq!(a.as_slice(), &[1, 2, 3, 4]);
+    fn merge_msg_into_drained_slot_appends() {
+        // A drained Many has no head, so the combiner has nothing to fold
+        // into and the message must be stored as-is.
+        let app = SumBelow100;
+        let mut slot: MsgSlot<u32> = MsgSlot::Many(Vec::new());
+        assert_eq!(merge_msg(&app, &mut slot, 7), 1);
+        assert_eq!(slot.as_slice(), &[7]);
     }
 
     #[test]

@@ -6,12 +6,18 @@
 //!
 //! Layer map:
 //! * [`coordinator`] — the superstep-sharing engine (the paper's core
-//!   contribution): super-rounds, capacity `C`, lazy VQ-data. Worker
-//!   shards execute on real OS threads (`Engine::threads` knob,
-//!   `std::thread::scope`): shard `w` of every in-flight query forms a
-//!   lane owned by one thread; the single-threaded barrier exchanges
-//!   staged messages and folds per-worker aggregator partials in worker
-//!   order, so results are bit-identical for every thread count.
+//!   contribution): super-rounds, capacity `C`, lazy VQ-data. Each
+//!   super-round runs three phases on a persistent worker pool
+//!   (`Engine::threads` knob, defaulting to the machine's available
+//!   parallelism; long-lived threads woken per phase, no per-round
+//!   spawn/join): **compute** (shard `w` of every in-flight query forms a
+//!   lane owned by one pool worker), **exchange** (destination-sharded
+//!   message routing — every destination worker drains its column of the
+//!   staging matrix in source-worker order, concurrently with the others),
+//!   and **fold** (per-worker aggregator partials folded in worker order
+//!   per query, queries folded in parallel). All phases replay the serial
+//!   order where it matters, so results are bit-identical for every
+//!   thread count.
 //! * [`vertex`] — the `QueryApp` programming interface (paper §4); app and
 //!   associated types carry the `Send`/`Sync` bounds the threaded shards
 //!   require.

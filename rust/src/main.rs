@@ -90,7 +90,11 @@ fn cmd_ppsp(opts: Opts) -> Result<()> {
     let n = g.num_vertices();
     let workers = opts.usize_or("workers", 8)?;
     let capacity = opts.usize_or("capacity", 8)?;
-    let threads = opts.usize_or("threads", 1)?;
+    // Default to the machine's parallelism, like `Engine` itself.
+    let threads = opts.usize_or(
+        "threads",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+    )?;
     let cluster = Cluster::new(workers);
     let algo = opts.get("algo").unwrap_or("bibfs");
     let queries = match opts.get("queries") {
@@ -211,7 +215,8 @@ fn cmd_xml(opts: Opts) -> Result<()> {
         "slca-la" => serve!(xml::SlcaLevelAligned::new(&corpus)),
         "elca" => serve!(xml::Elca::new(&corpus)),
         "maxmatch" => {
-            let mut eng = Engine::new(xml::MaxMatch::new(&corpus), cluster, corpus.len()).capacity(8);
+            let mut eng =
+                Engine::new(xml::MaxMatch::new(&corpus), cluster, corpus.len()).capacity(8);
             for q in &pool {
                 eng.submit(q.clone());
             }
@@ -243,7 +248,8 @@ fn cmd_reach(opts: Opts) -> Result<()> {
         fmt_secs(st.no_time)
     );
     let queries = gen::random_pairs(n, opts.usize_or("random", 10)?, 5);
-    let mut eng = Engine::new(ReachQuery::new(&dag, &labels), cluster, dag.num_vertices()).capacity(8);
+    let mut eng =
+        Engine::new(ReachQuery::new(&dag, &labels), cluster, dag.num_vertices()).capacity(8);
     let ids: Vec<_> = queries
         .iter()
         .map(|&(s, t)| eng.submit((cond.scc_of[s as usize], cond.scc_of[t as usize])))

@@ -50,11 +50,21 @@ pub struct EngineMetrics {
     pub sim_time: f64,
     /// Wall-clock seconds spent inside the engine (perf pass metric).
     pub wall_time: f64,
-    /// Wall-clock seconds spent in the (possibly threaded) compute phase.
+    /// Wall-clock seconds spent in the (possibly pooled) compute phase.
     pub compute_time: f64,
-    /// Wall-clock seconds spent in the single-threaded barrier phase
-    /// (message routing, aggregator fold, lifecycle, reporting).
+    /// Wall-clock seconds spent in the exchange phase: destination-sharded
+    /// message routing between worker shards, parallel across destination
+    /// workers on the pool (includes the serial map handoff around it).
+    pub exchange_time: f64,
+    /// Wall-clock seconds spent in the remaining barrier work: the
+    /// per-query aggregator fold + lifecycle (parallel across queries),
+    /// the simulated-clock advance and the reporting round.
     pub barrier_time: f64,
+    /// Queries completed (result reported). Accounted when the reporting
+    /// round runs, so it never depends on the caller draining
+    /// `take_results` — interactive `run_one` sessions and batch sessions
+    /// count identically.
+    pub queries_completed: u64,
     /// Peak number of simultaneously in-flight queries.
     pub peak_inflight: usize,
 }

@@ -31,16 +31,17 @@ pub enum MasterAction {
 
 /// A Quegel application: user logic for one *generic* query.
 ///
-/// The engine executes worker shards on real OS threads
-/// (`std::thread::scope`), each thread holding `&self` plus exclusive
-/// ownership of its shard state. Hence the app must be `Sync` (V-data is
-/// read-shared across workers, exactly the paper's immutable-V-data
-/// contract), `Query`/`Agg` are read-shared per superstep (`Sync`), and
-/// `VQ`/`Msg`/`Agg` values live inside shard state owned by worker threads
-/// (`Send`).
+/// The engine executes worker shards on a persistent pool of OS threads
+/// (compute, exchange and fold phases), each pool worker holding `&self`
+/// plus exclusive ownership of its share of the phase state. Hence the app
+/// must be `Sync` (V-data is read-shared across workers, exactly the
+/// paper's immutable-V-data contract); `Query`/`Agg` are read-shared per
+/// superstep (`Sync`) and travel to fold-phase workers inside per-query
+/// state (`Send`); `VQ`/`Msg`/`Agg` values live inside shard state owned
+/// by pool workers (`Send`).
 pub trait QueryApp: Sync {
     /// Query content `<Q>`.
-    type Query: Clone + Sync;
+    type Query: Clone + Send + Sync;
     /// Query-dependent vertex attribute `a_q(v)` (VQ-data).
     type VQ: Clone + Send;
     /// Message type `<M>`.
@@ -74,13 +75,13 @@ pub trait QueryApp: Sync {
 
     /// Merge a worker-local partial aggregate into `into`. Each worker
     /// shard accumulates its own partial during the compute phase; the
-    /// barrier folds the partials **in worker order** through this hook
+    /// fold phase folds the partials **in worker order** through this hook
     /// (deterministic regardless of thread count). Any app whose `compute`
     /// calls [`Ctx::aggregate`] must implement this; the default no-op
     /// discards every partial.
     fn agg_merge(&self, _into: &mut Self::Agg, _from: &Self::Agg) {}
 
-    /// Master hook, run at the barrier with the merged aggregator of the
+    /// Master hook, run in the fold phase with the merged aggregator of the
     /// superstep that just finished (`cur`) and the previous superstep's
     /// final value (`prev`). Whatever is left in `cur` is what `compute`
     /// sees via `ctx.agg_prev()` in the next superstep — the master may

@@ -1,15 +1,18 @@
-//! Determinism suite for the threaded shard engine: for every app family,
+//! Determinism suite for the pooled shard engine: for every app family,
 //! the same fixed-seed query batch must produce identical `QueryResult::out`
 //! across `threads ∈ {1, 4}` × `capacity ∈ {1, 8}`, and match the app's
-//! serial oracle. This pins the core guarantee of the worker-shard design:
-//! thread count and admission schedule never change answers.
+//! serial oracle; the pool-specific matrix additionally sweeps
+//! `threads ∈ {1, 2, 8}` × `workers ∈ {1, 3, 8}` (odd worker counts
+//! exercise uneven destination sharding in the exchange phase). This pins
+//! the core guarantee of the worker-shard design: thread count, worker
+//! partitioning and admission schedule never change answers.
 
 use quegel::apps::gkws::{self, query::GkwsQuery, KeywordSearch};
 use quegel::apps::ppsp::{oracle as ppsp_oracle, BiBfs, UNREACHED};
 use quegel::apps::reach::{build_labels, condense, dag, ReachQuery};
 use quegel::apps::terrain::baseline::dijkstra;
 use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
-use quegel::apps::xml::{self, SlcaLevelAligned};
+use quegel::apps::xml::{self, SlcaLevelAligned, SlcaNaive};
 use quegel::coordinator::Engine;
 use quegel::graph::gen;
 use quegel::network::Cluster;
@@ -54,6 +57,83 @@ where
         }
     }
     base.unwrap()
+}
+
+/// Pool-specific matrix: run the same batch across `threads` × `workers`
+/// and assert every configuration returns bit-identical outputs (only
+/// valid for apps whose output is independent of the partitioning, like
+/// the ones used below). Returns one representative output vector.
+fn run_matrix<A, F>(mk: F, n: usize, queries: &[A::Query]) -> Vec<A::Out>
+where
+    A: QueryApp,
+    A::Out: std::fmt::Debug + PartialEq,
+    F: Fn() -> A,
+{
+    let mut base: Option<Vec<A::Out>> = None;
+    for workers in [1usize, 3, 8] {
+        for threads in [1usize, 2, 8] {
+            let mut eng = Engine::new(mk(), Cluster::new(workers), n)
+                .capacity(8)
+                .threads(threads);
+            let ids: Vec<_> = queries.iter().map(|q| eng.submit(q.clone())).collect();
+            eng.run_until_idle();
+            assert_eq!(eng.results().len(), queries.len());
+            let outs: Vec<A::Out> = ids
+                .iter()
+                .map(|id| {
+                    eng.results()
+                        .iter()
+                        .find(|r| r.qid == *id)
+                        .expect("query completed")
+                        .out
+                        .clone()
+                })
+                .collect();
+            match &base {
+                None => base = Some(outs),
+                Some(b) => assert_eq!(
+                    &outs, b,
+                    "threads={threads} workers={workers} changed query outputs"
+                ),
+            }
+        }
+    }
+    base.unwrap()
+}
+
+#[test]
+fn pool_matrix_bibfs_bit_identical_across_threads_and_workers() {
+    let mut g = gen::twitter_like(600, 5, 9101);
+    g.ensure_in_edges();
+    let queries = gen::random_pairs(600, 12, 9102);
+    let outs = run_matrix(|| BiBfs::new(&g), 600, &queries);
+    for (i, &(s, t)) in queries.iter().enumerate() {
+        let want = ppsp_oracle::bfs_dist(&g, s, t);
+        assert_eq!(
+            outs[i],
+            (want != UNREACHED).then_some(want),
+            "query ({s},{t})"
+        );
+    }
+}
+
+#[test]
+fn pool_matrix_xml_combinerless_bit_identical() {
+    // SlcaNaive without its combiner is the exchange-heaviest workload:
+    // every upward send hits the staging buffers in full, so uneven
+    // destination sharding (workers = 3) gets real message volume.
+    let t = xml::data::generate(&xml::XmlGenConfig {
+        dblp_like: true,
+        records: 120,
+        vocab: 140,
+        seed: 9111,
+    });
+    let queries = xml::data::query_pool(&t, 6, 2, 9112);
+    let outs = run_matrix(|| SlcaNaive::without_combiner(&t), t.len(), &queries);
+    for (i, q) in queries.iter().enumerate() {
+        let got: Vec<u32> = outs[i].iter().map(|&(v, _, _)| v).collect();
+        assert_eq!(got, xml::oracle::slca(&t, q), "q={q:?}");
+    }
 }
 
 #[test]

@@ -166,6 +166,40 @@ fn metrics_accumulate_across_queries() {
 }
 
 #[test]
+fn run_one_drains_its_result_and_metrics_count_completions() {
+    // Regression: interactive sessions that only ever call `run_one` must
+    // not accumulate results, and completed-query accounting must live in
+    // `EngineMetrics` whether or not `take_results` is ever called.
+    let g = gen::twitter_like(500, 4, 216);
+    let queries = gen::random_pairs(500, 30, 217);
+    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), 500).capacity(4);
+    for (i, &q) in queries.iter().enumerate() {
+        let r = eng.run_one(q);
+        let want = oracle::bfs_dist(&g, q.0, q.1);
+        assert_eq!(r.out, (want != UNREACHED).then_some(want));
+        assert!(
+            eng.results().is_empty(),
+            "run_one leaked a result into the buffer at query {i}"
+        );
+        assert_eq!(eng.metrics().queries_completed, i as u64 + 1);
+    }
+    // Mixed usage: a batch-submitted query completed by run_one's
+    // run_until_idle stays claimable via results()/take_results, and every
+    // completion is counted exactly once.
+    let extra = eng.submit(queries[0]);
+    let _ = eng.run_one(queries[1]);
+    assert_eq!(eng.results().len(), 1);
+    assert_eq!(eng.results()[0].qid, extra);
+    assert_eq!(
+        eng.metrics().queries_completed,
+        queries.len() as u64 + 2,
+        "completion accounting must not depend on take_results"
+    );
+    assert_eq!(eng.take_results().len(), 1);
+    assert!(eng.results().is_empty());
+}
+
+#[test]
 fn interleaved_submission_works() {
     // Queries submitted while others are in flight join later super-rounds.
     let g = gen::twitter_like(600, 4, 213);

@@ -1,0 +1,86 @@
+//! Engine drop-test for the persistent worker pool: dropping an `Engine`
+//! mid-queue (queries still queued and in flight) must shut the pool down
+//! cleanly — every worker thread joined, none leaked.
+//!
+//! This lives in its own integration-test binary, as a single `#[test]`,
+//! on purpose: tests within one binary run concurrently and other suites
+//! also spawn engine pools, which would make a process-wide thread count
+//! race-prone. Cargo runs test binaries one at a time, so the counts
+//! observed here are stable.
+
+use quegel::apps::ppsp::{Bfs, BiBfs};
+use quegel::coordinator::Engine;
+use quegel::graph::gen;
+use quegel::network::Cluster;
+
+/// Current thread count of this process (Linux); None where /proc is
+/// unavailable, in which case the assertions degrade to "drop returns".
+fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+}
+
+/// Poll until the thread count drops back to `want` (worker teardown is
+/// synchronous via join, but give the kernel a moment to reap).
+fn settles_to(want: usize) -> bool {
+    for _ in 0..200 {
+        match process_threads() {
+            None => return true,
+            Some(n) if n <= want => return true,
+            Some(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+        }
+    }
+    false
+}
+
+#[test]
+fn engine_drop_and_reconfigure_join_pool_threads() {
+    // Scenario 1: drop mid-queue. The pool must wake, stop and join its
+    // workers even with queries still queued and in flight.
+    let before = process_threads();
+    {
+        let mut g = gen::twitter_like(400, 4, 9121);
+        g.ensure_in_edges();
+        let mut eng = Engine::new(BiBfs::new(&g), Cluster::new(8), 400)
+            .capacity(2)
+            .threads(8);
+        for q in gen::random_pairs(400, 16, 9122) {
+            eng.submit(q);
+        }
+        eng.super_round();
+        eng.super_round();
+        assert!(
+            eng.results().len() < 16,
+            "test must drop the engine mid-queue, not after completion"
+        );
+    }
+    if let Some(before) = before {
+        assert!(
+            settles_to(before),
+            "pool leaked threads past engine drop: before={before}, after={:?}",
+            process_threads()
+        );
+    }
+
+    // Scenario 2: reconfiguring `threads` drops (joins) the old pool
+    // before the next super-round spawns the new one — no accumulation.
+    let before = process_threads();
+    let g = gen::twitter_like(300, 4, 9131);
+    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), 300).threads(4);
+    let (s, t) = gen::random_pairs(300, 1, 9132)[0];
+    let first = eng.run_one((s, t));
+    let mut eng = eng.threads(2);
+    let second = eng.run_one((s, t));
+    assert_eq!(first.out, second.out);
+    drop(eng);
+    if let Some(before) = before {
+        assert!(
+            settles_to(before),
+            "threads() reconfiguration leaked workers: before={before}, after={:?}",
+            process_threads()
+        );
+    }
+}

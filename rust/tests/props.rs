@@ -99,9 +99,12 @@ fn prop_ppsp_algorithms_agree() {
         let mut g = random_graph(rng);
         g.ensure_in_edges();
         let n = g.num_vertices();
-        let undirected = rng.chance(0.5);
+        // Keep the rng draw (downstream seeds depend on the call order);
+        // graphs here store both arcs only for btc/livej, so treat every
+        // graph as directed uniformly.
+        let _undirected = rng.chance(0.5);
         let idx = Hub2Indexer::new(8 + rng.below_usize(12))
-            .undirected(undirected && false) // graphs here store both arcs only for btc/livej; treat as directed uniformly
+            .undirected(false)
             .build(&g, Cluster::new(4), &RustMinPlus)
             .0;
         for (s, t) in gen::random_pairs(n, 6, rng.next_u64()) {
