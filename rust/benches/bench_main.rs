@@ -7,7 +7,10 @@
 //!
 //!     cargo bench --offline                  # everything
 //!     cargo bench --offline -- tab5          # one experiment
-//!     cargo bench --offline -- perf --json   # perf + BENCH_pr2.json
+//!     cargo bench --offline -- perf --json   # perf + BENCH_pr{2,3}.json
+//!
+//! `QUEGEL_BENCH_SMOKE=1` shrinks the perf inputs for the CI smoke lane
+//! (same tables and JSON shape, minutes → seconds).
 //!
 //! Absolute numbers are simulated-cluster seconds from the cost model (plus
 //! wall time where meaningful); the paper-vs-measured comparison lives in

@@ -1,28 +1,47 @@
 //! §Perf micro-benchmarks: wall-clock cost of the engine hot paths, used by
 //! the optimization pass (EXPERIMENTS.md §Perf). Not a paper table.
 //!
-//! The phase-split section attributes the pooled engine's win: per
-//! `threads` setting it reports compute / exchange / barrier wall time and
-//! the speedup of each over the serial (`threads = 1`) run. The XML
-//! workload runs SLCA *without* the sender-side combiner — the
-//! combiner-less regime where message routing dominated the old serial
-//! barrier. With `--json`, the same numbers are written to
-//! `BENCH_pr2.json` so the perf trajectory is machine-readable.
+//! Two phase-split sections attribute the pooled engine's wins:
+//!
+//! * the **thread sweep** reports compute / exchange / barrier wall time
+//!   per `threads` setting and each one's speedup over the serial
+//!   (`threads = 1`) run, on a combiner-heavy (BiBFS) and a combiner-less
+//!   (XML SLCA) workload;
+//! * the **skew sweep** runs BFS over a deliberately hub-concentrated
+//!   partition (`gen::hub_concentrated`: worker 0 of 8 owns every
+//!   high-degree vertex) under the static chunk scheduler vs the
+//!   work-stealing scheduler, and reports per-phase wall times, steal
+//!   counts, job counts and the lane-imbalance ratio — the number that
+//!   shows stealing absorbing the skew static chunking serializes behind.
+//!
+//! With `--json`, the same numbers are written to `BENCH_pr2.json`
+//! (thread sweep) and `BENCH_pr3.json` (skew sweep) so the committed perf
+//! trajectory is machine-readable; CI's `bench-smoke` lane archives them
+//! as workflow artifacts. Setting `QUEGEL_BENCH_SMOKE=1` shrinks every
+//! input so the whole module runs in CI-smoke time (the JSON shape is
+//! unchanged; absolute numbers from smoke runs are not trajectory-grade).
 
 use quegel::apps::ppsp::{Bfs, BiBfs};
 use quegel::apps::xml::{self, SlcaNaive, XmlGenConfig};
-use quegel::coordinator::Engine;
-use quegel::graph::gen;
+use quegel::coordinator::{Engine, Sched};
+use quegel::graph::{gen, Graph};
 use quegel::metrics::Table;
 use quegel::network::Cluster;
 use quegel::vertex::QueryApp;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
-/// Set by `bench_main` when `--json` is passed: also emit `BENCH_pr2.json`.
+/// Set by `bench_main` when `--json` is passed: also emit the
+/// `BENCH_*.json` trajectory files.
 pub static JSON: AtomicBool = AtomicBool::new(false);
 
 const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// CI smoke mode: shrink inputs so the lane finishes fast while still
+/// producing structurally complete JSON.
+fn smoke() -> bool {
+    std::env::var("QUEGEL_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
 
 fn median(mut xs: Vec<f64>) -> f64 {
     xs.sort_by(f64::total_cmp);
@@ -38,9 +57,15 @@ struct PhaseRow {
     wall: f64,
 }
 
-/// Run `queries` as one batch (C = 8) per thread setting, 3 reps each,
-/// and report median phase times.
-fn phase_rows<A, F>(mk: F, n: usize, workers: usize, queries: &[A::Query]) -> Vec<PhaseRow>
+/// Run `queries` as one batch (C = 8) per thread setting, `reps` reps
+/// each, and report median phase times.
+fn phase_rows<A, F>(
+    mk: F,
+    n: usize,
+    workers: usize,
+    queries: &[A::Query],
+    reps: usize,
+) -> Vec<PhaseRow>
 where
     A: QueryApp,
     F: Fn() -> A,
@@ -52,7 +77,7 @@ where
             let mut exchanges = Vec::new();
             let mut barriers = Vec::new();
             let mut walls = Vec::new();
-            for _ in 0..3 {
+            for _ in 0..reps {
                 let mut eng = Engine::new(mk(), Cluster::new(workers), n)
                     .capacity(8)
                     .threads(threads);
@@ -133,11 +158,157 @@ fn json_rows(rows: &[PhaseRow]) -> String {
     format!("[{}]", items.join(","))
 }
 
+/// One (scheduler, threads) configuration of the skew sweep: median phase
+/// wall times plus the scheduler counters of a representative rep.
+struct SkewRow {
+    sched: Sched,
+    threads: usize,
+    compute: f64,
+    exchange: f64,
+    barrier: f64,
+    steals: u64,
+    jobs: u64,
+    imbalance: f64,
+}
+
+impl SkewRow {
+    /// Total phase wall time: the quantity the ≥1.2× skew target is on.
+    fn phase_wall(&self) -> f64 {
+        self.compute + self.exchange + self.barrier
+    }
+}
+
+fn sched_name(s: Sched) -> &'static str {
+    match s {
+        Sched::Static => "static",
+        Sched::Stealing => "stealing",
+    }
+}
+
+/// BFS batch (C = 8) over the hub-concentrated graph, swept over
+/// scheduler × threads.
+fn skew_rows(g: &Graph, workers: usize, queries: &[(u32, u32)], reps: usize) -> Vec<SkewRow> {
+    let mut rows = Vec::new();
+    for sched in [Sched::Static, Sched::Stealing] {
+        for &threads in &THREAD_SWEEP {
+            let mut computes = Vec::new();
+            let mut exchanges = Vec::new();
+            let mut barriers = Vec::new();
+            let mut steals = 0;
+            let mut jobs = 0;
+            let mut imbalance = 0.0;
+            for _ in 0..reps {
+                let mut eng = Engine::new(Bfs::new(g), Cluster::new(workers), g.num_vertices())
+                    .capacity(8)
+                    .threads(threads)
+                    .scheduler(sched);
+                for &q in queries {
+                    eng.submit(q);
+                }
+                eng.run_until_idle();
+                computes.push(eng.metrics().compute_time);
+                exchanges.push(eng.metrics().exchange_time);
+                barriers.push(eng.metrics().barrier_time);
+                steals = eng.metrics().steals();
+                jobs = eng.metrics().jobs_executed();
+                imbalance = eng.metrics().max_lane_imbalance;
+            }
+            rows.push(SkewRow {
+                sched,
+                threads,
+                compute: median(computes),
+                exchange: median(exchanges),
+                barrier: median(barriers),
+                steals,
+                jobs,
+                imbalance,
+            });
+        }
+    }
+    rows
+}
+
+/// Phase-wall speedup of stealing over static at the same thread count.
+fn skew_speedup(rows: &[SkewRow], threads: usize) -> f64 {
+    let wall = |sched: Sched| {
+        rows.iter()
+            .find(|r| r.sched == sched && r.threads == threads)
+            .map(SkewRow::phase_wall)
+            .unwrap_or(f64::NAN)
+    };
+    wall(Sched::Static) / wall(Sched::Stealing)
+}
+
+fn print_skew_table(name: &str, rows: &[SkewRow]) {
+    let mut t = Table::new(vec![
+        "sched",
+        "threads",
+        "compute",
+        "exchange",
+        "barrier",
+        "phase wall",
+        "jobs",
+        "steals",
+        "vs static",
+    ]);
+    for r in rows {
+        let vs = match r.sched {
+            Sched::Static => "baseline".to_string(),
+            Sched::Stealing => format!("{:.2}x", skew_speedup(rows, r.threads)),
+        };
+        t.row(vec![
+            sched_name(r.sched).to_string(),
+            r.threads.to_string(),
+            format!("{:.1} ms", r.compute * 1e3),
+            format!("{:.1} ms", r.exchange * 1e3),
+            format!("{:.1} ms", r.barrier * 1e3),
+            format!("{:.1} ms", r.phase_wall() * 1e3),
+            r.jobs.to_string(),
+            r.steals.to_string(),
+            vs,
+        ]);
+    }
+    println!("[{name}]");
+    println!("{}", t.render());
+}
+
+fn json_skew_rows(rows: &[SkewRow]) -> String {
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "{{\"sched\":\"{}\",\"threads\":{},\"compute_s\":{:.6},",
+                    "\"exchange_s\":{:.6},\"barrier_s\":{:.6},",
+                    "\"phase_wall_s\":{:.6},\"jobs_executed\":{},",
+                    "\"steals\":{},\"max_lane_imbalance\":{:.3}}}"
+                ),
+                sched_name(r.sched),
+                r.threads,
+                r.compute,
+                r.exchange,
+                r.barrier,
+                r.phase_wall(),
+                r.jobs,
+                r.steals,
+                r.imbalance,
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
 pub fn run() {
-    let mut g = gen::twitter_like(100_000, 10, 433);
+    let smoke = smoke();
+    let reps = if smoke { 1 } else { 3 };
+    let (tw_n, tw_q) = if smoke { (8_000, 16) } else { (100_000, 64) };
+    let mut g = gen::twitter_like(tw_n, 10, 433);
     g.ensure_in_edges();
     let n = g.num_vertices();
-    let queries = gen::random_pairs(n, 64, 434);
+    let queries = gen::random_pairs(n, tw_q, 434);
+    if smoke {
+        println!("QUEGEL_BENCH_SMOKE=1: shrunken inputs, 1 rep (CI lane)");
+    }
 
     let mut t = Table::new(vec![
         "workload",
@@ -150,7 +321,7 @@ pub fn run() {
     for (name, cap) in [("bfs batch C=8", 8usize), ("bfs serial C=1", 1)] {
         let mut times = Vec::new();
         let mut calls = 0;
-        for _ in 0..3 {
+        for _ in 0..reps {
             let mut eng = Engine::new(Bfs::new(&g), Cluster::new(8), n)
                 .capacity(cap)
                 .threads(1);
@@ -180,21 +351,22 @@ pub fn run() {
     // compute dominates) vs naive SLCA without combiner (combiner-less:
     // every upward send reaches the staging buffers, so the exchange phase
     // carries the round).
-    let bibfs_rows = phase_rows(|| BiBfs::new(&g), n, 8, &queries);
+    let bibfs_rows = phase_rows(|| BiBfs::new(&g), n, 8, &queries, reps);
     print_phase_table("bibfs batch C=8 W=8 (combiner-heavy)", &bibfs_rows);
 
     let tree = xml::data::generate(&XmlGenConfig {
         dblp_like: true,
-        records: 15_000,
+        records: if smoke { 1_000 } else { 15_000 },
         vocab: 400,
         seed: 435,
     });
-    let xml_queries = xml::data::query_pool(&tree, 48, 3, 436);
+    let xml_queries = xml::data::query_pool(&tree, if smoke { 8 } else { 48 }, 3, 436);
     let xml_rows = phase_rows(
         || SlcaNaive::without_combiner(&tree),
         tree.len(),
         8,
         &xml_queries,
+        reps,
     );
     print_phase_table("xml slca no-combiner C=8 W=8 (combiner-less)", &xml_rows);
 
@@ -203,20 +375,60 @@ pub fn run() {
     println!("combiner-less XML workload. Results are bit-identical across");
     println!("the threads column by construction (tests/determinism.rs).");
 
+    // --- Skew sweep: static chunks vs work stealing on a partition where
+    // worker 0 of 8 owns every hub. Static chunking welds lane 0 to lane 1
+    // in one thread's chunk at 4 threads; stealing gives the heavy lane a
+    // thread of its own the moment any other thread drains its deque.
+    let (sk_n, sk_q) = if smoke { (6_000, 8) } else { (60_000, 48) };
+    let skew_workers = 8;
+    let skew_g = gen::hub_concentrated(sk_n, skew_workers, 24, 6, 437);
+    let skew_queries = gen::random_pairs(sk_n, sk_q, 438);
+    let skew = skew_rows(&skew_g, skew_workers, &skew_queries, reps);
+    print_skew_table("bfs hub-concentrated C=8 W=8 (skewed lane 0)", &skew);
+    let headline = skew_speedup(&skew, 4);
+    println!(
+        "lane imbalance {:.1}x; stealing vs static phase wall at 4 threads: {:.2}x",
+        skew.last().map(|r| r.imbalance).unwrap_or(0.0),
+        headline
+    );
+    println!("target: stealing >= 1.2x over static at 4 threads on this");
+    println!("partition; steals > 0 shows the deques actually engaged.");
+
     if JSON.load(Ordering::Relaxed) {
         let payload = format!(
             concat!(
                 "{{\"pr\":2,\"bench\":\"perf_engine\",",
-                "\"threads_swept\":[1,2,4,8],\"reps\":3,\"workloads\":{{",
+                "\"threads_swept\":[1,2,4,8],\"reps\":{},\"workloads\":{{",
                 "\"bibfs_batch_c8_w8\":{},",
                 "\"xml_slca_nocombiner_c8_w8\":{}}}}}\n"
             ),
+            reps,
             json_rows(&bibfs_rows),
             json_rows(&xml_rows),
         );
         match std::fs::write("BENCH_pr2.json", &payload) {
             Ok(()) => println!("wrote BENCH_pr2.json"),
             Err(e) => eprintln!("could not write BENCH_pr2.json: {e}"),
+        }
+        let payload = format!(
+            concat!(
+                "{{\"pr\":3,\"bench\":\"perf_skew_sched\",",
+                "\"graph\":\"hub_concentrated\",\"n\":{},\"workers\":{},",
+                "\"queries\":{},\"threads_swept\":[1,2,4,8],\"reps\":{},",
+                "\"smoke\":{},\"rows\":{},",
+                "\"stealing_vs_static_phase_speedup_t4\":{:.3}}}\n"
+            ),
+            sk_n,
+            skew_workers,
+            sk_q,
+            reps,
+            smoke,
+            json_skew_rows(&skew),
+            headline,
+        );
+        match std::fs::write("BENCH_pr3.json", &payload) {
+            Ok(()) => println!("wrote BENCH_pr3.json"),
+            Err(e) => eprintln!("could not write BENCH_pr3.json: {e}"),
         }
     }
 }

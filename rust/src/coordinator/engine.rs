@@ -21,15 +21,27 @@
 //!    queries; only the reporting round and the simulated-clock advance
 //!    stay on the coordinator.
 //!
-//! All three phases are deterministic in the thread count: `threads = N`
-//! produces bit-identical `QueryResult`s to `threads = 1` (pinned by
-//! `rust/tests/determinism.rs` across threads × workers × capacity).
+//! Each phase is dispatched through [`run_phase`] at the granularity the
+//! [`Sched`] knob selects. The default, [`Sched::Stealing`], hands the
+//! pool one job per item — per worker lane (compute), per destination
+//! worker (exchange), per query (fold) — and lets idle pool threads steal
+//! queued jobs from busy ones, so a hub-heavy lane or one expensive query
+//! never pins a phase on a single thread. [`Sched::Static`] keeps the old
+//! one-contiguous-chunk-per-thread split as the benchmark baseline.
+//!
+//! All three phases are deterministic in the thread count *and* the
+//! scheduler: stealing only changes which thread executes a job, never the
+//! source-worker delivery order inside a destination's exchange job nor
+//! the worker-order `agg_merge` fold inside a query's fold job, so
+//! `threads = N` produces bit-identical `QueryResult`s to `threads = 1`
+//! (pinned by `rust/tests/determinism.rs` across threads × workers ×
+//! capacity × scheduler).
 
 use std::collections::hash_map::Entry;
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use super::pool::{Job, WorkerPool};
+use super::pool::{Job, RunStats, WorkerPool};
 use super::query::{merge_msg, MsgSlot, Phase, QueryResult, QueryRt, VState, WorkerShard};
 use crate::graph::VertexId;
 use crate::metrics::EngineMetrics;
@@ -50,6 +62,8 @@ pub struct Engine<A: QueryApp> {
     capacity: usize,
     /// OS threads for the parallel phases (1 = serial; capped at `workers`).
     threads: usize,
+    /// Phase-job granularity: stealing (default) or the static baseline.
+    sched: Sched,
     /// Long-lived pool, created lazily at the first super-round that needs
     /// it and joined when the engine drops (even mid-queue).
     pool: Option<WorkerPool>,
@@ -265,29 +279,54 @@ fn run_exchange<A: QueryApp>(app: &A, lane: &mut ExchangeLane<A>) {
     }
 }
 
-/// Dispatch one parallel phase: split `items` into `nthreads` contiguous
-/// chunks and run `f` over them on the pool, or inline when no pool exists
-/// (`threads = 1`). All three phases (compute / exchange / fold) route
-/// through here, so chunking policy lives in exactly one place.
-fn run_chunked<T: Send>(
+/// Phase-job granularity handed to the worker pool.
+///
+/// Both schedulers run on the same stealing deques; they differ only in
+/// how a phase's items are cut into jobs, which is exactly what decides
+/// whether skew can be absorbed. Outputs are bit-identical either way —
+/// the scheduler picks executors, never merge or delivery orders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sched {
+    /// One contiguous `div_ceil(items, threads)` mega-chunk per pool
+    /// thread (the pre-stealing scheduler, kept as the benchmark
+    /// baseline): a skewed item serializes its whole chunk behind it.
+    Static,
+    /// One job per item — per worker lane (compute), per destination
+    /// worker (exchange), per query (fold). Idle pool threads steal queued
+    /// jobs from the back of busy threads' deques, so a heavy lane never
+    /// pins the phase on one thread. The default.
+    Stealing,
+}
+
+/// Dispatch one parallel phase over the pool at the `sched` granularity,
+/// or inline when no pool exists (`threads = 1`). All three phases
+/// (compute / exchange / fold) route through here, so job-granularity
+/// policy lives in exactly one place. Returns the pool's scheduling
+/// counters for the engine's per-phase metrics.
+fn run_phase<T: Send>(
     pool: Option<&WorkerPool>,
     nthreads: usize,
+    sched: Sched,
     items: &mut [T],
     f: impl Fn(&mut T) + Sync,
-) {
+) -> RunStats {
     if items.is_empty() {
-        return;
+        return RunStats::default();
     }
-    match pool {
-        None => {
-            for item in items.iter_mut() {
-                f(item);
-            }
+    let Some(pool) = pool else {
+        for item in items.iter_mut() {
+            f(item);
         }
-        Some(pool) => {
+        return RunStats {
+            jobs: items.len() as u64,
+            steals: 0,
+        };
+    };
+    let f = &f;
+    let jobs: Vec<Job<'_>> = match sched {
+        Sched::Static => {
             let chunk = items.len().div_ceil(nthreads);
-            let f = &f;
-            let jobs: Vec<Job<'_>> = items
+            items
                 .chunks_mut(chunk)
                 .map(|chunk_items| {
                     Box::new(move || {
@@ -296,10 +335,14 @@ fn run_chunked<T: Send>(
                         }
                     }) as Job<'_>
                 })
-                .collect();
-            pool.run(jobs);
+                .collect()
         }
-    }
+        Sched::Stealing => items
+            .iter_mut()
+            .map(|item| Box::new(move || f(item)) as Job<'_>)
+            .collect(),
+    };
+    pool.run(jobs)
 }
 
 /// The fold-phase unit for one query: merge per-worker aggregator partials
@@ -345,6 +388,7 @@ impl<A: QueryApp> Engine<A> {
             threads: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
+            sched: Sched::Stealing,
             pool: None,
             n_vertices,
             queue: VecDeque::new(),
@@ -376,6 +420,15 @@ impl<A: QueryApp> Engine<A> {
         // Re-created at the right size by the next super-round that needs
         // it; dropping here joins any previously spawned workers.
         self.pool = None;
+        self
+    }
+
+    /// Select the phase-job scheduler. [`Sched::Stealing`] (the default)
+    /// splits every phase into per-item jobs balanced by work stealing;
+    /// [`Sched::Static`] keeps the contiguous one-chunk-per-thread split.
+    /// Results are bit-identical for either setting.
+    pub fn scheduler(mut self, s: Sched) -> Self {
+        self.sched = s;
         self
     }
 
@@ -494,6 +547,7 @@ impl<A: QueryApp> Engine<A> {
         let app = &self.app;
         let cluster = &self.cluster;
         let pool = self.pool.as_ref();
+        let sched = self.sched;
 
         // --- Compute phase: transpose the running queries into worker
         // lanes (shard w of every query + worker w's scratch) and run the
@@ -531,21 +585,41 @@ impl<A: QueryApp> Engine<A> {
         }
 
         let compute_start = Instant::now();
-        run_chunked(pool, nthreads, &mut lanes, |lane| {
+        let compute_stats = run_phase(pool, nthreads, sched, &mut lanes, |lane| {
             run_lane(app, cluster, lane)
         });
         self.metrics.compute_time += compute_start.elapsed().as_secs_f64();
+        self.metrics.compute_sched.add(compute_stats.jobs, compute_stats.steals);
 
         let mut worker_cost = Vec::with_capacity(workers);
+        let mut lane_load = Vec::with_capacity(workers);
         let mut round_msgs: u64 = 0;
         let mut total_compute_calls: u64 = 0;
         for lane in &lanes {
             worker_cost.push(lane.cost);
+            // Imbalance basis: receive-side cost PLUS send-side staging
+            // overhead. `cost` (what the simulated clock uses, unchanged)
+            // counts compute calls and *handled* messages only, which for
+            // combiner apps hides exactly the skew that hurts wall time —
+            // a hub lane's big out-fanout is staging work on the sender.
+            lane_load.push(lane.cost + lane.sent as f64 * cluster.cost.per_msg_overhead_s);
             round_msgs += lane.sent;
             total_compute_calls += lane.compute_calls;
         }
         drop(lanes);
         self.metrics.total_compute_calls += total_compute_calls;
+        // Lane-imbalance ratio of this round's compute phase (max lane
+        // load over mean lane load, from the deterministic cost model):
+        // the skew the stealing scheduler exists to absorb. ~1.0 means a
+        // balanced partition; W means one lane carried everything.
+        let max_load = lane_load.iter().copied().fold(0.0_f64, f64::max);
+        let total_load: f64 = lane_load.iter().sum();
+        if total_load > 0.0 {
+            let ratio = max_load * lane_load.len() as f64 / total_load;
+            if ratio > self.metrics.max_lane_imbalance {
+                self.metrics.max_lane_imbalance = ratio;
+            }
+        }
 
         // --- Exchange phase: destination-sharded message routing. The
         // staging buffers are keyed by destination worker already, so each
@@ -593,7 +667,10 @@ impl<A: QueryApp> Engine<A> {
             // Drop stale slots from rounds that ran more queries.
             lane.tasks.truncate(nq);
         }
-        run_chunked(pool, nthreads, &mut *ex_lanes, |lane| run_exchange(app, lane));
+        let exchange_stats = run_phase(pool, nthreads, sched, &mut *ex_lanes, |lane| {
+            run_exchange(app, lane)
+        });
+        self.metrics.exchange_sched.add(exchange_stats.jobs, exchange_stats.steals);
         // Post-pass: hand filled inboxes and drained staging maps back to
         // their shards (recycling capacity) and fold delivered counts into
         // per-query stats.
@@ -626,9 +703,10 @@ impl<A: QueryApp> Engine<A> {
         // stays in worker order, so results are unchanged).
         let barrier_start = Instant::now();
         let max_supersteps = self.max_supersteps;
-        run_chunked(pool, nthreads, &mut self.inflight, |rt| {
+        let fold_stats = run_phase(pool, nthreads, sched, &mut self.inflight, |rt| {
             fold_query(app, rt, max_supersteps)
         });
+        self.metrics.fold_sched.add(fold_stats.jobs, fold_stats.steals);
 
         // Aggregator sync bytes: one Agg per worker per running query.
         round_bytes +=

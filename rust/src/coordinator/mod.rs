@@ -9,18 +9,24 @@
 //!
 //! Workers are real: each query's state is split into per-worker
 //! `WorkerShard`s, and every super-round runs three phases on a persistent
-//! [`pool`] of up to `Engine::threads` OS threads (created once per engine,
-//! woken per phase): **compute** (worker lanes, disjoint state),
-//! **exchange** (destination-sharded message routing — each destination
-//! worker drains its column of the staging matrix in source-worker order,
-//! concurrently with every other destination), and **fold** (per-query
-//! aggregator fold in worker order + lifecycle, parallel across queries).
-//! Every thread count produces bit-identical results (see
+//! work-stealing [`pool`] of up to `Engine::threads` OS threads (created
+//! once per engine, woken per phase): **compute** (worker lanes, disjoint
+//! state), **exchange** (destination-sharded message routing — each
+//! destination worker drains its column of the staging matrix in
+//! source-worker order, concurrently with every other destination), and
+//! **fold** (per-query aggregator fold in worker order + lifecycle,
+//! parallel across queries). Under the default [`Sched::Stealing`]
+//! granularity each lane / destination / query is its own pool job, and
+//! idle pool threads steal queued jobs from the back of busy threads'
+//! deques, so a hub-heavy partition never pins a phase on one thread.
+//! Stealing only moves jobs between executors — every order-sensitive
+//! merge runs inside a single job or on the coordinator — so every thread
+//! count and scheduler produces bit-identical results (see
 //! `rust/tests/determinism.rs`).
 
 mod engine;
 mod pool;
 mod query;
 
-pub use engine::Engine;
+pub use engine::{Engine, Sched};
 pub use query::{QueryResult, VState};

@@ -1,20 +1,46 @@
-//! Persistent worker pool for the engine's parallel phases.
+//! Persistent work-stealing worker pool for the engine's parallel phases.
 //!
 //! PR 1 ran the compute phase on `std::thread::scope`, which spawns and
-//! joins fresh OS threads every super-round — a recurring cost that lands
-//! exactly in Quegel's regime of short, light supersteps (a query touches
-//! few vertices, so a super-round is often microseconds of real work).
-//! The pool replaces that with `threads` long-lived workers created once
-//! per [`Engine`](super::Engine) and woken per phase through a
-//! condvar-guarded job queue: the coordinator enqueues one closure per
-//! worker-lane chunk (compute), destination-worker chunk (exchange) or
-//! query chunk (fold), then blocks until every job of the batch has
-//! finished. Because [`WorkerPool::run`] does not return before the batch
-//! drains, jobs may safely borrow engine state for the duration of the
-//! call — the same guarantee `std::thread::scope` gave, without the
-//! per-round spawn/join tax.
+//! joins fresh OS threads every super-round. PR 2 replaced that with long-
+//! lived workers draining one *shared* job queue — cheap wakeups, but the
+//! coordinator still enqueued one contiguous mega-chunk per thread, so a
+//! hub-heavy worker lane serialized its whole chunk behind the slowest
+//! item (exactly the static-scheduling under-utilization iPregel reports
+//! for power-law graphs). This revision makes the pool a **work-stealing
+//! scheduler**:
+//!
+//! * every pool thread owns a local job **deque**; [`WorkerPool::run`]
+//!   distributes the batch round-robin across the deques (job `i` starts
+//!   on deque `i mod threads`), so contiguous items spread over threads;
+//! * an owner pops jobs from the *front* of its deque; a thread whose
+//!   deque is empty scans the other deques and **steals from the back** of
+//!   the first non-empty victim, so a heavy job never queues light ones
+//!   behind it — the batch finishes when the slowest single *job* does,
+//!   not the slowest static chunk;
+//! * a thread parks on the pool condvar only after a full scan found every
+//!   deque empty; batch publication bumps an epoch under the same lock, so
+//!   a job can never be published-but-unseen while a worker goes to sleep
+//!   (no lost wakeups), and threads that missed the notify re-scan on the
+//!   epoch change.
+//!
+//! **Determinism argument:** stealing changes *which OS thread executes a
+//! job*, never what the job does or in what order the coordinator consumes
+//! job results. Each job owns disjoint engine state (a worker lane, one
+//! destination worker's exchange column, one query's fold), every ordered
+//! merge (source-worker delivery order inside a destination's exchange,
+//! worker-order `agg_merge` inside a query's fold) happens *inside* a
+//! single job or on the coordinator after [`WorkerPool::run`] returned, so
+//! results are bit-identical for every thread count and every steal
+//! schedule (pinned by `rust/tests/determinism.rs`).
+//!
+//! A panic in any job — stolen or home-run — is caught on the executing
+//! worker, its original payload parked in the pool state, and re-raised by
+//! `resume_unwind` on the submitting thread once the batch drained; the
+//! workers themselves survive, so the pool stays usable and joinable on
+//! drop (pinned by `rust/tests/pool_drop.rs`).
 
 use std::any::Any;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -24,13 +50,27 @@ use std::thread::JoinHandle;
 /// borrow because it blocks until the batch completes).
 pub(crate) type Job<'scope> = Box<dyn FnOnce() + Send + 'scope>;
 
+/// What one [`WorkerPool::run`] batch did, for the engine's per-phase
+/// scheduler metrics.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct RunStats {
+    /// Jobs executed (= batch size).
+    pub jobs: u64,
+    /// Jobs executed by a thread other than the one whose deque they were
+    /// distributed to — the scheduler's load-balancing events.
+    pub steals: u64,
+}
+
 struct PoolState {
-    /// Pending jobs of the current batch. Pop order is irrelevant: every
-    /// job owns disjoint state, and whatever must be deterministic is
-    /// folded in a fixed order by the coordinator afterwards.
-    jobs: Vec<Job<'static>>,
     /// Jobs of the current batch not yet finished (queued + running).
     in_flight: usize,
+    /// Batch sequence number: bumped after a batch's jobs are visible in
+    /// the deques. A worker that found every deque empty compares this to
+    /// the epoch it last synced on — unchanged means it may park; changed
+    /// means a batch was published during its scan and it must re-scan.
+    epoch: u64,
+    /// Steals observed in the current batch (reset by `run`).
+    steals: u64,
     /// First panic payload of the current batch; resumed by `run` so the
     /// coordinator observes the original panic, as `std::thread::scope`
     /// would have surfaced it.
@@ -39,29 +79,37 @@ struct PoolState {
 }
 
 struct Shared {
+    /// One job deque per pool thread. The owner pops from the front; idle
+    /// threads steal from the back. Plain mutex-guarded deques (no lock-
+    /// free Chase–Lev here): jobs are lane-/query-sized, so the lock is
+    /// taken once per job, far off the hot path.
+    deques: Vec<Mutex<VecDeque<Job<'static>>>>,
     state: Mutex<PoolState>,
-    /// Workers wait here for jobs (or shutdown).
+    /// Workers park here when every deque is empty (or on shutdown).
     work_cv: Condvar,
     /// The coordinator waits here for batch completion.
     done_cv: Condvar,
 }
 
 /// A fixed-size pool of long-lived worker threads executing batches of
-/// scoped jobs. Dropping the pool (e.g. dropping the engine mid-queue)
-/// shuts every worker down and joins it — no thread outlives the pool.
+/// scoped jobs with work stealing. Dropping the pool (e.g. dropping the
+/// engine mid-queue) shuts every worker down and joins it — no thread
+/// outlives the pool.
 pub(crate) struct WorkerPool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
-    /// Spawn `threads` long-lived workers.
+    /// Spawn `threads` long-lived workers, each owning one steal deque.
     pub fn new(threads: usize) -> Self {
         assert!(threads > 0, "pool needs at least one worker");
         let shared = Arc::new(Shared {
+            deques: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
             state: Mutex::new(PoolState {
-                jobs: Vec::new(),
                 in_flight: 0,
+                epoch: 0,
+                steals: 0,
                 panic: None,
                 shutdown: false,
             }),
@@ -73,7 +121,7 @@ impl WorkerPool {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("quegel-worker-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, i))
                     .expect("spawn pool worker")
             })
             .collect();
@@ -87,11 +135,13 @@ impl WorkerPool {
     }
 
     /// Run one batch of jobs on the pool workers, blocking the caller
-    /// until the last job finishes. A panic in any job is re-raised here
-    /// after the whole batch drained, mirroring `std::thread::scope`.
-    pub fn run<'scope>(&self, batch: Vec<Job<'scope>>) {
-        if batch.is_empty() {
-            return;
+    /// until the last job finishes, and report how the batch was
+    /// scheduled. A panic in any job is re-raised here after the whole
+    /// batch drained, mirroring `std::thread::scope`.
+    pub fn run<'scope>(&self, batch: Vec<Job<'scope>>) -> RunStats {
+        let n = batch.len();
+        if n == 0 {
+            return RunStats::default();
         }
         // SAFETY: `run` does not return until `in_flight == 0`, i.e. until
         // every job of the batch has been executed (or unwound) and
@@ -99,24 +149,47 @@ impl WorkerPool {
         // strictly after the job ran, and the wait below re-reads the
         // counter under the same mutex, so all job effects happen-before
         // `run` returns; no borrow captured by a job outlives the true
-        // `'scope` lifetime erased here.
+        // `'scope` lifetime erased here. Stealing moves jobs between
+        // deques' consumers, never past the end of the batch.
         let batch: Vec<Job<'static>> = batch
             .into_iter()
             .map(|job| unsafe { std::mem::transmute::<Job<'scope>, Job<'static>>(job) })
             .collect();
+        // Publish the batch size *before* any job becomes visible: a
+        // worker may pop and finish a job while we are still distributing
+        // the rest, and its decrement must never underflow.
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert_eq!(st.in_flight, 0, "WorkerPool::run is not reentrant");
+            st.in_flight = n;
+            st.steals = 0;
+        }
+        // Round-robin distribution: job i starts on deque i mod threads,
+        // so every thread has local work and contiguous items (adjacent
+        // worker lanes, consecutive queries) spread across threads.
+        let k = self.shared.deques.len();
+        for (i, job) in batch.into_iter().enumerate() {
+            self.shared.deques[i % k].lock().unwrap().push_back(job);
+        }
+        // Bump the epoch only now that every job is findable by a scan,
+        // then wake the workers. Parking re-checks the epoch under this
+        // same lock, so no worker can sleep through the publication.
         let mut st = self.shared.state.lock().unwrap();
-        debug_assert_eq!(st.in_flight, 0, "WorkerPool::run is not reentrant");
-        st.in_flight = batch.len();
-        st.jobs.extend(batch);
+        st.epoch += 1;
         self.shared.work_cv.notify_all();
         while st.in_flight > 0 {
             st = self.shared.done_cv.wait(st).unwrap();
         }
+        let stats = RunStats {
+            jobs: n as u64,
+            steals: st.steals,
+        };
         let panic = st.panic.take();
         drop(st);
         if let Some(payload) = panic {
             resume_unwind(payload);
         }
+        stats
     }
 }
 
@@ -133,35 +206,68 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(shared: &Shared) {
+/// One pool thread: pop the own deque's front; failing that, steal from
+/// the back of the first non-empty victim (scan starting at the next
+/// index, wrapping); failing that, park until a new batch is published or
+/// the pool shuts down.
+fn worker_loop(shared: &Shared, me: usize) {
+    let k = shared.deques.len();
+    let mut seen_epoch = 0u64;
     loop {
-        let job = {
-            let mut st = shared.state.lock().unwrap();
-            loop {
-                if let Some(job) = st.jobs.pop() {
-                    break Some(job);
+        // Each lock lives for exactly one statement: a worker never holds
+        // its own deque's lock while probing a victim's (two scanning
+        // workers locking each other's deques would deadlock).
+        let local = shared.deques[me].lock().unwrap().pop_front();
+        let mut fetched: Option<(Job<'static>, bool)> = local.map(|job| (job, false));
+        if fetched.is_none() {
+            for i in 1..k {
+                let victim = (me + i) % k;
+                let stolen = shared.deques[victim].lock().unwrap().pop_back();
+                if let Some(job) = stolen {
+                    fetched = Some((job, true));
+                    break;
                 }
-                if st.shutdown {
-                    break None;
-                }
-                st = shared.work_cv.wait(st).unwrap();
-            }
-        };
-        let Some(job) = job else { return };
-        // Catch panics so the worker survives a failing job: the rest of
-        // the batch still drains and `run` re-raises on the coordinator.
-        let result = catch_unwind(AssertUnwindSafe(job));
-        let mut st = shared.state.lock().unwrap();
-        if let Err(payload) = result {
-            // Keep the first payload; later ones are dropped (scope, too,
-            // surfaces a single panic per batch).
-            if st.panic.is_none() {
-                st.panic = Some(payload);
             }
         }
-        st.in_flight -= 1;
-        if st.in_flight == 0 {
-            shared.done_cv.notify_all();
+        match fetched {
+            Some((job, stolen)) => {
+                // Catch panics so the worker survives a failing job: the
+                // rest of the batch still drains and `run` re-raises the
+                // original payload on the coordinator — also when the
+                // panicking job was a stolen one.
+                let result = catch_unwind(AssertUnwindSafe(job));
+                let mut st = shared.state.lock().unwrap();
+                if let Err(payload) = result {
+                    // Keep the first payload; later ones are dropped
+                    // (scope, too, surfaces a single panic per batch).
+                    if st.panic.is_none() {
+                        st.panic = Some(payload);
+                    }
+                }
+                if stolen {
+                    st.steals += 1;
+                }
+                st.in_flight -= 1;
+                if st.in_flight == 0 {
+                    shared.done_cv.notify_all();
+                }
+            }
+            None => {
+                let mut st = shared.state.lock().unwrap();
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch == seen_epoch {
+                    // Nothing was published since the scan above came up
+                    // empty, so parking cannot strand a job: publication
+                    // bumps the epoch under this lock and notifies.
+                    st = shared.work_cv.wait(st).unwrap();
+                    if st.shutdown {
+                        return;
+                    }
+                }
+                seen_epoch = st.epoch;
+            }
         }
     }
 }
@@ -169,7 +275,7 @@ fn worker_loop(shared: &Shared) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
     #[test]
     fn batch_runs_every_job_and_blocks_until_done() {
@@ -184,7 +290,8 @@ mod tests {
                     }) as Job<'_>
                 })
                 .collect();
-            pool.run(jobs);
+            let stats = pool.run(jobs);
+            assert_eq!(stats.jobs, 16);
             // run() is a barrier: every job of the batch has finished.
             assert_eq!(counter.load(Ordering::Relaxed), (round + 1) * 16);
         }
@@ -214,7 +321,9 @@ mod tests {
     #[test]
     fn empty_batch_is_a_no_op() {
         let pool = WorkerPool::new(2);
-        pool.run(Vec::new());
+        let stats = pool.run(Vec::new());
+        assert_eq!(stats.jobs, 0);
+        assert_eq!(stats.steals, 0);
     }
 
     #[test]
@@ -222,6 +331,35 @@ mod tests {
         let pool = WorkerPool::new(2);
         pool.run(vec![Box::new(|| {}) as Job<'_>]);
         drop(pool); // must return (join), not hang
+    }
+
+    /// Deterministic steal: job 0 lands on deque 0 and spins until every
+    /// light job has run — the lights round-robined onto deque 0 behind it
+    /// can only be executed by the *other* thread stealing them, so the
+    /// batch both terminates and records steals in every interleaving.
+    #[test]
+    fn stealing_engages_when_one_job_blocks_its_owner() {
+        const LIGHT: usize = 8;
+        let pool = WorkerPool::new(2);
+        let done = AtomicUsize::new(0);
+        let blocker: Job<'_> = Box::new(|| {
+            while done.load(Ordering::SeqCst) < LIGHT {
+                std::thread::yield_now();
+            }
+        });
+        let mut jobs: Vec<Job<'_>> = vec![blocker];
+        for _ in 0..LIGHT {
+            jobs.push(Box::new(|| {
+                done.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        let stats = pool.run(jobs);
+        assert_eq!(stats.jobs, (LIGHT + 1) as u64);
+        assert!(
+            stats.steals > 0,
+            "a blocked owner with queued jobs must be stolen from"
+        );
+        assert_eq!(done.load(Ordering::SeqCst), LIGHT);
     }
 
     #[test]
@@ -244,5 +382,45 @@ mod tests {
             ok.fetch_add(1, Ordering::Relaxed);
         }) as Job<'_>]);
         assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+
+    /// The stolen-job panic path: deque 0 holds [blocker, panicker] (jobs
+    /// 0 and 2 of the round-robin), and the blocker spins until the
+    /// panicker has run — so the panicker is necessarily executed by the
+    /// other thread, i.e. stolen. Its original payload must still surface
+    /// on the submitting thread and the pool must stay usable + joinable.
+    #[test]
+    fn panic_in_a_stolen_job_reraises_original_payload() {
+        let pool = WorkerPool::new(2);
+        let panicked = AtomicBool::new(false);
+        let jobs: Vec<Job<'_>> = vec![
+            // Job 0 -> deque 0 front: holds its owner hostage.
+            Box::new(|| {
+                while !panicked.load(Ordering::SeqCst) {
+                    std::thread::yield_now();
+                }
+            }),
+            // Job 1 -> deque 1: keeps the thief's own deque non-trivial.
+            Box::new(|| {}),
+            // Job 2 -> deque 0 back: flags, then panics — on the thief.
+            Box::new(|| {
+                panicked.store(true, Ordering::SeqCst);
+                panic!("stolen job panic (expected in test)");
+            }),
+            // Job 3 -> deque 1.
+            Box::new(|| {}),
+        ];
+        let result = catch_unwind(AssertUnwindSafe(|| pool.run(jobs)));
+        let payload = result.expect_err("run must re-raise a stolen job's panic");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(
+            msg.contains("expected in test"),
+            "stolen job's original panic payload must survive, got {msg:?}"
+        );
+        // Still usable after the panicking batch...
+        let stats = pool.run(vec![Box::new(|| {}) as Job<'_>]);
+        assert_eq!(stats.jobs, 1);
+        // ...and joinable (drop must not hang on a wedged worker).
+        drop(pool);
     }
 }

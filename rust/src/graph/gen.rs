@@ -203,6 +203,67 @@ pub fn web_cyclic(n: usize, layers: usize, avg_deg: usize, seed: u64) -> Graph {
     b.build()
 }
 
+/// Hub-concentrated partition stressor for the scheduler benchmarks and
+/// the work-stealing tests: under the engine's `v mod W` hash partitioning
+/// (see `Cluster::worker_of`), every vertex id that is a multiple of
+/// `stride` lands on worker 0 — and this generator makes exactly those
+/// vertices the high-degree hubs. Run it on a `Cluster::new(stride)` and
+/// worker 0's lane carries a multiple of every other lane's load:
+///
+/// * each hub fans out to `hub_deg` uniform random targets, so when a
+///   traversal wave reaches the hubs, lane 0 pays the message *staging*
+///   for all of them in one compute phase (the iPregel power-law case);
+/// * each non-hub points at 2 random hubs, concentrating message
+///   *delivery* on destination worker 0 in the exchange phase, plus
+///   `base_deg` uniform random targets — the balanced background load
+///   every lane sees;
+/// * a chain 0→1→…→n-1 guarantees weak connectivity, and the hubs' uniform
+///   fan-out carries traversals back out across all workers.
+pub fn hub_concentrated(
+    n: usize,
+    stride: usize,
+    hub_deg: usize,
+    base_deg: usize,
+    seed: u64,
+) -> Graph {
+    assert!(stride >= 2, "stride 1 would make every vertex a hub");
+    assert!(n > 2 * stride, "need several hubs to concentrate on");
+    let mut rng = Rng::new(seed);
+    let n_hubs = n.div_ceil(stride);
+    let mut b = GraphBuilder::new(n);
+    let mut seen = FxHashSet::default();
+    for u in 0..n - 1 {
+        b.edge(u as VertexId, (u + 1) as VertexId);
+        seen.insert((u as VertexId, (u + 1) as VertexId));
+    }
+    for u in 0..n {
+        let uid = u as VertexId;
+        if u % stride == 0 {
+            for _ in 0..hub_deg {
+                let v = rng.below_usize(n) as VertexId;
+                if uid != v && seen.insert((uid, v)) {
+                    b.edge(uid, v);
+                }
+            }
+        } else {
+            for _ in 0..2 {
+                // Max hub index is (n_hubs - 1) * stride < n.
+                let v = (rng.below_usize(n_hubs) * stride) as VertexId;
+                if uid != v && seen.insert((uid, v)) {
+                    b.edge(uid, v);
+                }
+            }
+            for _ in 0..base_deg {
+                let v = rng.below_usize(n) as VertexId;
+                if uid != v && seen.insert((uid, v)) {
+                    b.edge(uid, v);
+                }
+            }
+        }
+    }
+    b.build()
+}
+
 /// Random (s, t) query pairs over `n` vertices.
 pub fn random_pairs(n: usize, count: usize, seed: u64) -> Vec<(VertexId, VertexId)> {
     assert!(n >= 2, "need at least two vertices for distinct pairs");
@@ -303,6 +364,40 @@ mod tests {
                 assert!(v as usize / per > u / per || v as usize / per >= 39);
             }
         }
+    }
+
+    #[test]
+    fn hub_concentrated_skews_one_worker_lane() {
+        let stride = 8;
+        let n = 4_000;
+        let mut g = hub_concentrated(n, stride, 24, 6, 11);
+        g.ensure_in_edges();
+        // Both degree directions must concentrate on the `v mod 8 == 0`
+        // lane: hubs OWN the big out-fanout (compute-phase staging skew)
+        // and RECEIVE the spoke edges (exchange-phase delivery skew).
+        let mut lane_out = vec![0u64; stride];
+        let mut lane_in = vec![0u64; stride];
+        for v in 0..n {
+            lane_out[v % stride] += g.out(v as VertexId).len() as u64;
+            lane_in[v % stride] += g.in_degree(v as VertexId) as u64;
+        }
+        let others_out = lane_out[1..].iter().sum::<u64>() as f64 / (stride - 1) as f64;
+        let others_in = lane_in[1..].iter().sum::<u64>() as f64 / (stride - 1) as f64;
+        assert!(
+            lane_out[0] as f64 > 2.0 * others_out,
+            "hub lane out {} vs avg other lane {}",
+            lane_out[0],
+            others_out
+        );
+        assert!(
+            lane_in[0] as f64 > 2.0 * others_in,
+            "hub lane in {} vs avg other lane {}",
+            lane_in[0],
+            others_in
+        );
+        // The chain keeps it connected: random pairs mostly reach.
+        let pairs = random_pairs(n, 15, 12);
+        assert!(reach_fraction(&g, &pairs) > 0.6);
     }
 
     #[test]

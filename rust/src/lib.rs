@@ -7,17 +7,23 @@
 //! Layer map:
 //! * [`coordinator`] — the superstep-sharing engine (the paper's core
 //!   contribution): super-rounds, capacity `C`, lazy VQ-data. Each
-//!   super-round runs three phases on a persistent worker pool
-//!   (`Engine::threads` knob, defaulting to the machine's available
-//!   parallelism; long-lived threads woken per phase, no per-round
-//!   spawn/join): **compute** (shard `w` of every in-flight query forms a
-//!   lane owned by one pool worker), **exchange** (destination-sharded
-//!   message routing — every destination worker drains its column of the
-//!   staging matrix in source-worker order, concurrently with the others),
-//!   and **fold** (per-worker aggregator partials folded in worker order
-//!   per query, queries folded in parallel). All phases replay the serial
-//!   order where it matters, so results are bit-identical for every
-//!   thread count.
+//!   super-round runs three phases on a persistent **work-stealing**
+//!   worker pool (`Engine::threads` knob, defaulting to the machine's
+//!   available parallelism; long-lived threads woken per phase, no
+//!   per-round spawn/join): **compute** (shard `w` of every in-flight
+//!   query forms a lane), **exchange** (destination-sharded message
+//!   routing — every destination worker drains its column of the staging
+//!   matrix in source-worker order, concurrently with the others), and
+//!   **fold** (per-worker aggregator partials folded in worker order per
+//!   query, queries folded in parallel). Under the default
+//!   `Sched::Stealing` granularity every lane / destination / query is
+//!   its own pool job on a per-thread deque, and idle threads steal from
+//!   the back of busy threads' deques, so a hub-concentrated partition
+//!   never serializes a phase behind one thread. Stealing only decides
+//!   which thread *executes* a job; every order-sensitive merge (message
+//!   delivery, aggregator fold) replays the serial order inside a single
+//!   job, so results are bit-identical for every thread count and
+//!   scheduler.
 //! * [`vertex`] — the `QueryApp` programming interface (paper §4); app and
 //!   associated types carry the `Send`/`Sync` bounds the threaded shards
 //!   require.

@@ -39,6 +39,30 @@ impl QueryStats {
     }
 }
 
+/// Scheduler counters for one engine phase (compute / exchange / fold),
+/// accumulated across super-rounds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseSched {
+    /// Pool jobs executed. Under `Sched::Stealing` this counts items
+    /// (worker lanes / destination workers / queries); under
+    /// `Sched::Static` it counts contiguous chunks (≤ threads per round),
+    /// so the job-granularity difference between the schedulers is
+    /// directly observable here.
+    pub jobs_executed: u64,
+    /// Jobs executed by a pool thread other than the one whose deque they
+    /// were distributed to — each one is a load-balancing event where an
+    /// idle thread absorbed a busy thread's queued work.
+    pub steals: u64,
+}
+
+impl PhaseSched {
+    /// Fold one phase dispatch into the counters.
+    pub fn add(&mut self, jobs: u64, steals: u64) {
+        self.jobs_executed += jobs;
+        self.steals += steals;
+    }
+}
+
 /// Engine-wide counters, accumulated across all super-rounds.
 #[derive(Debug, Clone, Default)]
 pub struct EngineMetrics {
@@ -67,6 +91,33 @@ pub struct EngineMetrics {
     pub queries_completed: u64,
     /// Peak number of simultaneously in-flight queries.
     pub peak_inflight: usize,
+    /// Compute-phase scheduler counters (jobs = worker lanes).
+    pub compute_sched: PhaseSched,
+    /// Exchange-phase scheduler counters (jobs = destination workers).
+    pub exchange_sched: PhaseSched,
+    /// Fold-phase scheduler counters (jobs = in-flight queries).
+    pub fold_sched: PhaseSched,
+    /// Worst compute-phase lane imbalance seen: max lane cost over mean
+    /// lane cost (simulated cost model, so deterministic) of the most
+    /// skewed super-round. ~1.0 = balanced partition; `workers` = one lane
+    /// carried the whole phase. This is the skew the stealing scheduler
+    /// absorbs — read it next to `compute_sched.steals` to see whether a
+    /// workload's imbalance actually engaged the steal path.
+    pub max_lane_imbalance: f64,
+}
+
+impl EngineMetrics {
+    /// Stolen jobs across all three phases.
+    pub fn steals(&self) -> u64 {
+        self.compute_sched.steals + self.exchange_sched.steals + self.fold_sched.steals
+    }
+
+    /// Pool jobs executed across all three phases.
+    pub fn jobs_executed(&self) -> u64 {
+        self.compute_sched.jobs_executed
+            + self.exchange_sched.jobs_executed
+            + self.fold_sched.jobs_executed
+    }
 }
 
 /// Fixed-width table printer for bench output (we have no external
@@ -178,6 +229,19 @@ mod tests {
     fn table_rejects_bad_arity() {
         let mut t = Table::new(vec!["a"]);
         t.row(vec!["x", "y"]);
+    }
+
+    #[test]
+    fn phase_sched_counters_accumulate_and_total() {
+        let mut m = EngineMetrics::default();
+        m.compute_sched.add(8, 2);
+        m.compute_sched.add(8, 0);
+        m.exchange_sched.add(8, 1);
+        m.fold_sched.add(3, 0);
+        assert_eq!(m.compute_sched.jobs_executed, 16);
+        assert_eq!(m.compute_sched.steals, 2);
+        assert_eq!(m.jobs_executed(), 27);
+        assert_eq!(m.steals(), 3);
     }
 
     #[test]

@@ -8,12 +8,12 @@
 //! partitioning and admission schedule never change answers.
 
 use quegel::apps::gkws::{self, query::GkwsQuery, KeywordSearch};
-use quegel::apps::ppsp::{oracle as ppsp_oracle, BiBfs, UNREACHED};
+use quegel::apps::ppsp::{oracle as ppsp_oracle, Bfs, BiBfs, UNREACHED};
 use quegel::apps::reach::{build_labels, condense, dag, ReachQuery};
 use quegel::apps::terrain::baseline::dijkstra;
 use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
 use quegel::apps::xml::{self, SlcaLevelAligned, SlcaNaive};
-use quegel::coordinator::Engine;
+use quegel::coordinator::{Engine, Sched};
 use quegel::graph::gen;
 use quegel::network::Cluster;
 use quegel::vertex::QueryApp;
@@ -99,6 +99,56 @@ where
         }
     }
     base.unwrap()
+}
+
+/// Scheduler sweep on the partition the stealing scheduler exists for:
+/// `hub_concentrated` concentrates every high-degree vertex on worker 0,
+/// so under `Sched::Stealing` lane 0's job is routinely finished by a
+/// thief. Static chunks, per-item stealing jobs and the serial loop must
+/// all return bit-identical outputs — the scheduler picks executors,
+/// never merge or delivery orders.
+#[test]
+fn scheduler_choice_never_changes_outputs() {
+    let n = 2_000;
+    let g = gen::hub_concentrated(n, 8, 16, 3, 9201);
+    let queries = gen::random_pairs(n, 10, 9202);
+    let mut base: Option<Vec<Option<u32>>> = None;
+    for sched in [Sched::Static, Sched::Stealing] {
+        for threads in [1usize, 4, 8] {
+            let mut eng = Engine::new(Bfs::new(&g), Cluster::new(8), n)
+                .capacity(8)
+                .threads(threads)
+                .scheduler(sched);
+            let ids: Vec<_> = queries.iter().map(|&q| eng.submit(q)).collect();
+            eng.run_until_idle();
+            let outs: Vec<Option<u32>> = ids
+                .iter()
+                .map(|id| {
+                    eng.results()
+                        .iter()
+                        .find(|r| r.qid == *id)
+                        .expect("query completed")
+                        .out
+                })
+                .collect();
+            match &base {
+                None => base = Some(outs),
+                Some(b) => assert_eq!(
+                    &outs, b,
+                    "sched={sched:?} threads={threads} changed query outputs"
+                ),
+            }
+        }
+    }
+    let outs = base.unwrap();
+    for (i, &(s, t)) in queries.iter().enumerate() {
+        let want = ppsp_oracle::bfs_dist(&g, s, t);
+        assert_eq!(
+            outs[i],
+            (want != UNREACHED).then_some(want),
+            "query ({s},{t})"
+        );
+    }
 }
 
 #[test]

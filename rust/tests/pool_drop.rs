@@ -1,17 +1,21 @@
-//! Engine drop-test for the persistent worker pool: dropping an `Engine`
-//! mid-queue (queries still queued and in flight) must shut the pool down
-//! cleanly — every worker thread joined, none leaked.
+//! Engine drop-tests for the persistent work-stealing pool: dropping an
+//! `Engine` mid-queue (queries still queued and in flight) must shut the
+//! pool down cleanly — every worker thread joined, none leaked — and a
+//! panicking `compute()` must re-raise its original payload on the
+//! coordinator (whether the job ran on its home thread or was stolen)
+//! while leaving the pool joinable during the ensuing unwind.
 //!
-//! This lives in its own integration-test binary, as a single `#[test]`,
-//! on purpose: tests within one binary run concurrently and other suites
-//! also spawn engine pools, which would make a process-wide thread count
-//! race-prone. Cargo runs test binaries one at a time, so the counts
-//! observed here are stable.
+//! This lives in its own integration-test binary, as a single `#[test]`
+//! running serialized scenarios, on purpose: tests within one binary run
+//! concurrently and other suites also spawn engine pools, which would
+//! make a process-wide thread count race-prone. Cargo runs test binaries
+//! one at a time, so the counts observed here are stable.
 
 use quegel::apps::ppsp::{Bfs, BiBfs};
 use quegel::coordinator::Engine;
-use quegel::graph::gen;
+use quegel::graph::{gen, Graph, VertexId};
 use quegel::network::Cluster;
+use quegel::vertex::{Ctx, QueryApp};
 
 /// Current thread count of this process (Linux); None where /proc is
 /// unavailable, in which case the assertions degrade to "drop returns".
@@ -82,5 +86,80 @@ fn engine_drop_and_reconfigure_join_pool_threads() {
             "threads() reconfiguration leaked workers: before={before}, after={:?}",
             process_threads()
         );
+    }
+
+    // Scenario 3: a panicking compute() job (home-run or stolen) must
+    // re-raise its original payload on the coordinator, and the ensuing
+    // unwind drops the engine mid-flight — which must still join every
+    // pool worker.
+    let before = process_threads();
+    let g = gen::twitter_like(500, 4, 9141);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut eng = Engine::new(Poisoned { g: &g, poison: 123 }, Cluster::new(8), 500)
+            .capacity(4)
+            .threads(8);
+        eng.submit(0);
+        eng.run_until_idle();
+    }));
+    let payload = result.expect_err("a poisoned compute must fail the run");
+    let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+    assert!(
+        msg.contains("expected in test"),
+        "original panic payload must cross the pool barrier, got {msg:?}"
+    );
+    if let Some(before) = before {
+        assert!(
+            settles_to(before),
+            "panic-unwound engine leaked pool threads: before={before}, after={:?}",
+            process_threads()
+        );
+    }
+}
+
+/// Flood app whose `compute` panics when the flood reaches the poison
+/// vertex — from the pool's point of view, an arbitrary job (home-run or
+/// stolen, depending on scheduling) that unwinds mid-phase.
+struct Poisoned<'g> {
+    g: &'g Graph,
+    poison: VertexId,
+}
+
+impl<'g> QueryApp for Poisoned<'g> {
+    /// Flood source vertex.
+    type Query = VertexId;
+    /// Superstep at which the flood arrived (0 = untouched).
+    type VQ = u32;
+    type Msg = ();
+    type Agg = ();
+    type Out = u64;
+
+    fn init_activate(&self, q: &VertexId) -> Vec<VertexId> {
+        vec![*q]
+    }
+
+    fn init_value(&self, _q: &VertexId, _v: VertexId) -> u32 {
+        0
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, d: &mut u32) {
+        if v == self.poison {
+            panic!("poisoned vertex hit (expected in test)");
+        }
+        if *d == 0 {
+            *d = ctx.superstep() as u32;
+            for &w in self.g.out(v) {
+                ctx.send(w, ());
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    fn finish(
+        &self,
+        _q: &VertexId,
+        touched: &mut dyn Iterator<Item = (VertexId, &u32)>,
+        _agg: &(),
+    ) -> u64 {
+        touched.count() as u64
     }
 }

@@ -1,7 +1,9 @@
 //! Concurrency stress: repeated fixed-seed runs of interleaved submission
 //! on the *threaded* engine (threads = 4), asserting the per-query stats
 //! invariants the scheduler must uphold no matter how lanes are scheduled
-//! onto OS threads.
+//! onto OS threads — plus the work-stealing skew stress: one
+//! pathologically heavy lane must be absorbed by steals without changing
+//! a single output bit.
 
 use quegel::apps::ppsp::{oracle, Bfs, UNREACHED};
 use quegel::coordinator::Engine;
@@ -10,6 +12,66 @@ use quegel::network::Cluster;
 
 const REPS: u64 = 50;
 const CAPACITY: usize = 4;
+
+/// Work-stealing under pathological lane skew. `hub_concentrated` with
+/// stride = 16 puts every high-degree vertex (64-edge fanout each, vs a
+/// background degree of ~5) on worker 0 of a 16-worker cluster, so lane 0
+/// carries an order of magnitude more compute than any other lane. At
+/// `threads = 8` the pool distributes the 16 lane jobs two per deque:
+/// the deque that owns lane 0 cannot reach its second lane until the hub
+/// lane finishes, so some idle thread must steal it — and with per-query
+/// fold jobs and per-destination exchange jobs on top, every super-round
+/// offers steal opportunities.
+///
+/// Asserts (a) outputs are bit-identical to the fully serial `threads = 1`
+/// run, and (b) the steal path actually engaged (`metrics.steals() > 0`).
+/// Steal counts depend on OS scheduling, so (b) is given three attempts
+/// before the steal path is declared dead; (a) must hold on every attempt.
+#[test]
+fn work_stealing_absorbs_pathological_lane_skew() {
+    const N: usize = 8_000;
+    const WORKERS: usize = 16;
+    let g = gen::hub_concentrated(N, WORKERS, 64, 2, 4242);
+    let queries = gen::random_pairs(N, 24, 4243);
+    let run = |threads: usize| {
+        let mut eng = Engine::new(Bfs::new(&g), Cluster::new(WORKERS), N)
+            .capacity(8)
+            .threads(threads);
+        let ids: Vec<_> = queries.iter().map(|&q| eng.submit(q)).collect();
+        eng.run_until_idle();
+        let outs: Vec<Option<u32>> = ids
+            .iter()
+            .map(|id| {
+                eng.results()
+                    .iter()
+                    .find(|r| r.qid == *id)
+                    .expect("query completed")
+                    .out
+            })
+            .collect();
+        (outs, eng.metrics().steals(), eng.metrics().max_lane_imbalance)
+    };
+    let (serial, serial_steals, imbalance) = run(1);
+    assert_eq!(serial_steals, 0, "threads = 1 must never hit the pool");
+    assert!(
+        imbalance > 4.0,
+        "partition must be pathologically skewed for this test to bite, \
+         got lane imbalance {imbalance:.2}"
+    );
+    let mut steals = 0;
+    for _ in 0..3 {
+        let (outs, s, _) = run(8);
+        assert_eq!(outs, serial, "stealing changed query outputs");
+        steals = s;
+        if steals > 0 {
+            break;
+        }
+    }
+    assert!(
+        steals > 0,
+        "a heavy-lane batch at threads = 8 never stole a single job"
+    );
+}
 
 #[test]
 fn interleaved_submission_invariants_hold_across_50_reps() {
