@@ -7,7 +7,7 @@
 //!
 //!     cargo bench --offline                  # everything
 //!     cargo bench --offline -- tab5          # one experiment
-//!     cargo bench --offline -- perf --json   # perf + BENCH_pr{2,3}.json
+//!     cargo bench --offline -- perf --json   # perf + BENCH_pr{2,3,4}.json
 //!
 //! `QUEGEL_BENCH_SMOKE=1` shrinks the perf inputs for the CI smoke lane
 //! (same tables and JSON shape, minutes → seconds).

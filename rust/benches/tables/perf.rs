@@ -1,7 +1,7 @@
 //! §Perf micro-benchmarks: wall-clock cost of the engine hot paths, used by
 //! the optimization pass (EXPERIMENTS.md §Perf). Not a paper table.
 //!
-//! Two phase-split sections attribute the pooled engine's wins:
+//! Three phase-split sections attribute the pooled engine's wins:
 //!
 //! * the **thread sweep** reports compute / exchange / barrier wall time
 //!   per `threads` setting and each one's speedup over the serial
@@ -12,18 +12,24 @@
 //!   high-degree vertex) under the static chunk scheduler vs the
 //!   work-stealing scheduler, and reports per-phase wall times, steal
 //!   counts, job counts and the lane-imbalance ratio — the number that
-//!   shows stealing absorbing the skew static chunking serializes behind.
+//!   shows stealing absorbing the skew static chunking serializes behind;
+//! * the **split sweep** runs BFS over the single-mega-hub graph
+//!   (`gen::mega_hub`: one vertex's entire blast radius lands on worker 0
+//!   as ONE compute task) with sub-lane splitting off vs on, both under
+//!   the stealing scheduler — isolating exactly what splitting the task's
+//!   vertex range into sub-jobs buys over lane-granular stealing.
 //!
 //! With `--json`, the same numbers are written to `BENCH_pr2.json`
-//! (thread sweep) and `BENCH_pr3.json` (skew sweep) so the committed perf
-//! trajectory is machine-readable; CI's `bench-smoke` lane archives them
-//! as workflow artifacts. Setting `QUEGEL_BENCH_SMOKE=1` shrinks every
-//! input so the whole module runs in CI-smoke time (the JSON shape is
-//! unchanged; absolute numbers from smoke runs are not trajectory-grade).
+//! (thread sweep), `BENCH_pr3.json` (skew sweep) and `BENCH_pr4.json`
+//! (split sweep) so the committed perf trajectory is machine-readable;
+//! CI's `bench-smoke` lane archives them as workflow artifacts. Setting
+//! `QUEGEL_BENCH_SMOKE=1` shrinks every input so the whole module runs in
+//! CI-smoke time (the JSON shape is unchanged; absolute numbers from
+//! smoke runs are not trajectory-grade).
 
 use quegel::apps::ppsp::{Bfs, BiBfs};
 use quegel::apps::xml::{self, SlcaNaive, XmlGenConfig};
-use quegel::coordinator::{Engine, Sched};
+use quegel::coordinator::{Engine, Sched, Split};
 use quegel::graph::{gen, Graph};
 use quegel::metrics::Table;
 use quegel::network::Cluster;
@@ -78,9 +84,13 @@ where
             let mut barriers = Vec::new();
             let mut walls = Vec::new();
             for _ in 0..reps {
+                // Split::Off keeps this sweep measuring what it always
+                // has (thread scaling of the PR 2 phase pipeline), not
+                // the PR 4 sub-lane split — BENCH_pr4.json owns that.
                 let mut eng = Engine::new(mk(), Cluster::new(workers), n)
                     .capacity(8)
-                    .threads(threads);
+                    .threads(threads)
+                    .split(Split::Off);
                 for q in queries {
                     eng.submit(q.clone());
                 }
@@ -198,10 +208,16 @@ fn skew_rows(g: &Graph, workers: usize, queries: &[(u32, u32)], reps: usize) -> 
             let mut jobs = 0;
             let mut imbalance = 0.0;
             for _ in 0..reps {
+                // Split::Off: this sweep isolates static-vs-stealing lane
+                // scheduling (the PR 3 trajectory); with the engine's new
+                // Split::Adaptive default the stealing rows would silently
+                // measure stealing + sub-splitting instead — and BENCH_pr4
+                // is premised on split-off being exactly these numbers.
                 let mut eng = Engine::new(Bfs::new(g), Cluster::new(workers), g.num_vertices())
                     .capacity(8)
                     .threads(threads)
-                    .scheduler(sched);
+                    .scheduler(sched)
+                    .split(Split::Off);
                 for &q in queries {
                     eng.submit(q);
                 }
@@ -270,6 +286,153 @@ fn print_skew_table(name: &str, rows: &[SkewRow]) {
     }
     println!("[{name}]");
     println!("{}", t.render());
+}
+
+/// One (split, threads) configuration of the sub-lane split sweep on the
+/// single-mega-hub graph.
+struct SplitRow {
+    split: Split,
+    threads: usize,
+    compute: f64,
+    exchange: f64,
+    barrier: f64,
+    subjobs: u64,
+    tasks_split: u64,
+    lane_imbalance: f64,
+    post_split_imbalance: f64,
+}
+
+fn split_name(s: Split) -> &'static str {
+    match s {
+        Split::Off => "off",
+        Split::Adaptive => "adaptive",
+        Split::MaxTaskVertices(_) => "fixed",
+    }
+}
+
+/// BFS batch (C = 8) over the mega-hub graph, swept over split × threads,
+/// always under `Sched::Stealing` — split-off IS PR 3's lane-granular
+/// stealing, so the comparison isolates exactly what sub-splitting buys.
+fn split_rows(
+    g: &Graph,
+    workers: usize,
+    queries: &[(u32, u32)],
+    reps: usize,
+) -> Vec<SplitRow> {
+    let mut rows = Vec::new();
+    for split in [Split::Off, Split::Adaptive] {
+        for &threads in &THREAD_SWEEP {
+            let mut computes = Vec::new();
+            let mut exchanges = Vec::new();
+            let mut barriers = Vec::new();
+            let mut subjobs = 0;
+            let mut tasks_split = 0;
+            let mut lane_imbalance = 0.0;
+            let mut post_split_imbalance = 0.0;
+            for _ in 0..reps {
+                let mut eng = Engine::new(Bfs::new(g), Cluster::new(workers), g.num_vertices())
+                    .capacity(8)
+                    .threads(threads)
+                    .scheduler(Sched::Stealing)
+                    .split(split);
+                for &q in queries {
+                    eng.submit(q);
+                }
+                eng.run_until_idle();
+                computes.push(eng.metrics().compute_time);
+                exchanges.push(eng.metrics().exchange_time);
+                barriers.push(eng.metrics().barrier_time);
+                subjobs = eng.metrics().subjobs_executed;
+                tasks_split = eng.metrics().tasks_split;
+                lane_imbalance = eng.metrics().max_lane_imbalance;
+                post_split_imbalance = eng.metrics().max_post_split_imbalance;
+            }
+            rows.push(SplitRow {
+                split,
+                threads,
+                compute: median(computes),
+                exchange: median(exchanges),
+                barrier: median(barriers),
+                subjobs,
+                tasks_split,
+                lane_imbalance,
+                post_split_imbalance,
+            });
+        }
+    }
+    rows
+}
+
+/// Compute-wall speedup of split-on over split-off at the same threads —
+/// the quantity the ≥1.3× mega-hub target is on.
+fn split_speedup(rows: &[SplitRow], threads: usize) -> f64 {
+    let compute = |split: Split| {
+        rows.iter()
+            .find(|r| r.split == split && r.threads == threads)
+            .map(|r| r.compute)
+            .unwrap_or(f64::NAN)
+    };
+    compute(Split::Off) / compute(Split::Adaptive)
+}
+
+fn print_split_table(name: &str, rows: &[SplitRow]) {
+    let mut t = Table::new(vec![
+        "split",
+        "threads",
+        "compute",
+        "exchange",
+        "barrier",
+        "subjobs",
+        "tasks split",
+        "post-split imbal",
+        "vs off",
+    ]);
+    for r in rows {
+        let vs = match r.split {
+            Split::Off => "baseline".to_string(),
+            _ => format!("{:.2}x", split_speedup(rows, r.threads)),
+        };
+        t.row(vec![
+            split_name(r.split).to_string(),
+            r.threads.to_string(),
+            format!("{:.1} ms", r.compute * 1e3),
+            format!("{:.1} ms", r.exchange * 1e3),
+            format!("{:.1} ms", r.barrier * 1e3),
+            r.subjobs.to_string(),
+            r.tasks_split.to_string(),
+            format!("{:.2}x", r.post_split_imbalance),
+            vs,
+        ]);
+    }
+    println!("[{name}]");
+    println!("{}", t.render());
+}
+
+fn json_split_rows(rows: &[SplitRow]) -> String {
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "{{\"split\":\"{}\",\"threads\":{},\"compute_s\":{:.6},",
+                    "\"exchange_s\":{:.6},\"barrier_s\":{:.6},",
+                    "\"subjobs_executed\":{},\"tasks_split\":{},",
+                    "\"max_lane_imbalance\":{:.3},",
+                    "\"max_post_split_imbalance\":{:.3}}}"
+                ),
+                split_name(r.split),
+                r.threads,
+                r.compute,
+                r.exchange,
+                r.barrier,
+                r.subjobs,
+                r.tasks_split,
+                r.lane_imbalance,
+                r.post_split_imbalance,
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
 }
 
 fn json_skew_rows(rows: &[SkewRow]) -> String {
@@ -394,6 +557,35 @@ pub fn run() {
     println!("target: stealing >= 1.2x over static at 4 threads on this");
     println!("partition; steals > 0 shows the deques actually engaged.");
 
+    // --- Sub-lane split sweep: the single-mega-hub graph concentrates
+    // one vertex's entire blast radius (~n/8 receivers) on worker 0, so
+    // one compute task serializes the phase no matter how lanes are
+    // stolen. Split-off is PR 3's lane-granular stealing; split-on cuts
+    // the pathological task into sub-jobs.
+    let (mh_n, mh_q) = if smoke { (8_000, 8) } else { (80_000, 48) };
+    let mh_workers = 8;
+    let mh_g = gen::mega_hub(mh_n, mh_workers, 8, 439);
+    let mh_queries = gen::random_pairs(mh_n, mh_q, 440);
+    let split = split_rows(&mh_g, mh_workers, &mh_queries, reps);
+    print_split_table("bfs mega-hub C=8 W=8 (one pathological task)", &split);
+    let split_headline = split_speedup(&split, 4);
+    // Imbalance figures from the SAME configuration as the headline
+    // speedup (adaptive, 4 threads): post-split granularity depends on
+    // the thread count, so mixing rows would misattribute it.
+    let headline_row = split
+        .iter()
+        .find(|r| r.split == Split::Adaptive && r.threads == 4);
+    println!(
+        "lane imbalance {:.1}x -> post-split {:.1}x; split vs off compute wall at 4 threads: {:.2}x",
+        headline_row.map(|r| r.lane_imbalance).unwrap_or(0.0),
+        headline_row.map(|r| r.post_split_imbalance).unwrap_or(0.0),
+        split_headline
+    );
+    println!("target: splitting >= 1.3x over lane-granular stealing at 4");
+    println!("threads on the mega-hub compute wall; subjobs > 0 shows the");
+    println!("split actually engaged. Outputs are bit-identical across the");
+    println!("whole table by construction (tests/fuzz_determinism.rs).");
+
     if JSON.load(Ordering::Relaxed) {
         let payload = format!(
             concat!(
@@ -429,6 +621,26 @@ pub fn run() {
         match std::fs::write("BENCH_pr3.json", &payload) {
             Ok(()) => println!("wrote BENCH_pr3.json"),
             Err(e) => eprintln!("could not write BENCH_pr3.json: {e}"),
+        }
+        let payload = format!(
+            concat!(
+                "{{\"pr\":4,\"bench\":\"perf_sublane_split\",",
+                "\"graph\":\"mega_hub\",\"n\":{},\"workers\":{},",
+                "\"queries\":{},\"threads_swept\":[1,2,4,8],\"reps\":{},",
+                "\"smoke\":{},\"rows\":{},",
+                "\"split_vs_off_compute_speedup_t4\":{:.3}}}\n"
+            ),
+            mh_n,
+            mh_workers,
+            mh_q,
+            reps,
+            smoke,
+            json_split_rows(&split),
+            split_headline,
+        );
+        match std::fs::write("BENCH_pr4.json", &payload) {
+            Ok(()) => println!("wrote BENCH_pr4.json"),
+            Err(e) => eprintln!("could not write BENCH_pr4.json: {e}"),
         }
     }
 }

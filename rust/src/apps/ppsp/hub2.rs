@@ -769,6 +769,79 @@ mod tests {
         }
     }
 
+    /// Index-construction check: the k×k hub distance table produced by
+    /// the |H| superstep-shared BFS jobs must equal pairwise oracle BFS
+    /// distances exactly (full indexing, no truncation — the closure must
+    /// then be an idempotent no-op on an already-exact table).
+    #[test]
+    fn hub_dist_matches_oracle_pairwise() {
+        let mut g = gen::twitter_like(400, 5, 41);
+        g.ensure_in_edges();
+        let idx = build_index(&g, 12, false);
+        let k = idx.k();
+        for i in 0..k {
+            for j in 0..k {
+                let want = oracle::bfs_dist(&g, idx.hubs[i], idx.hubs[j]);
+                let got = from_f(idx.hub_dist[i * k + j]);
+                assert_eq!(
+                    got, want,
+                    "D_H[{i},{j}] = d({}, {})",
+                    idx.hubs[i], idx.hubs[j]
+                );
+            }
+        }
+    }
+
+    /// Index-construction check: every core-hub label distance must be the
+    /// true shortest-path distance — `L_out(v)` holds `d(h, v)` (forward
+    /// pass) and `L_in(v)` holds `d(v, h)` (backward pass). Labels with a
+    /// wrong distance would silently corrupt every `d_ub` they feed.
+    #[test]
+    fn core_hub_labels_match_oracle_distances() {
+        let mut g = gen::twitter_like(400, 5, 42);
+        g.ensure_in_edges();
+        let idx = build_index(&g, 12, false);
+        for v in 0..g.num_vertices() as VertexId {
+            if idx.is_hub(v) {
+                continue;
+            }
+            for &(h, d) in &idx.label_out[v as usize] {
+                let want = oracle::bfs_dist(&g, idx.hubs[h as usize], v);
+                assert_eq!(d, want, "L_out({v}) hub {h}");
+            }
+            for &(h, d) in &idx.label_in[v as usize] {
+                let want = oracle::bfs_dist(&g, v, idx.hubs[h as usize]);
+                assert_eq!(d, want, "L_in({v}) hub {h}");
+            }
+        }
+    }
+
+    /// The BiBFS cutoff contract on a random graph: with `d_ub` in hand
+    /// the restricted BiBFS must (a) still return the oracle distance and
+    /// (b) stop within `1 + floor(d_ub / 2)` supersteps — the §5.1.2
+    /// argument that a non-hub meeting at superstep i has path length
+    /// >= 2i - 1 >= d_ub, so searching further is pointless.
+    #[test]
+    fn bibfs_cutoff_matches_oracle() {
+        let mut g = gen::twitter_like(500, 5, 43);
+        g.ensure_in_edges();
+        let idx = build_index(&g, 16, false);
+        for (s, t) in gen::random_pairs(500, 25, 44) {
+            let dub = idx.dub_for(&[(s, t)], &RustMinPlus, 1, idx.k())[0];
+            let mut eng = Engine::new(Hub2Query::new(&g, &idx), Cluster::new(4), 500);
+            let r = eng.run_one((s, t, dub));
+            let want = oracle::bfs_dist(&g, s, t);
+            assert_eq!(r.out, (want != UNREACHED).then_some(want), "({s},{t})");
+            if dub != UNREACHED {
+                assert!(
+                    r.stats.supersteps <= 1 + dub as u64 / 2,
+                    "({s},{t}): {} supersteps past the 1 + {dub}/2 cutoff",
+                    r.stats.supersteps
+                );
+            }
+        }
+    }
+
     #[test]
     fn rust_minplus_closure_small() {
         // 0 ->(3) 1 ->(4) 2, expect d(0,2)=7 after closure.

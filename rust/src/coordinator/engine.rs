@@ -29,20 +29,37 @@
 //! never pins a phase on a single thread. [`Sched::Static`] keeps the old
 //! one-contiguous-chunk-per-thread split as the benchmark baseline.
 //!
-//! All three phases are deterministic in the thread count *and* the
-//! scheduler: stealing only changes which thread executes a job, never the
-//! source-worker delivery order inside a destination's exchange job nor
-//! the worker-order `agg_merge` fold inside a query's fold job, so
-//! `threads = N` produces bit-identical `QueryResult`s to `threads = 1`
-//! (pinned by `rust/tests/determinism.rs` across threads × workers ×
-//! capacity × scheduler).
+//! Lanes themselves are no longer atomic: under the [`Split`] knob the
+//! compute phase cuts a pathological (query, worker) task — one whose
+//! active/receiving vertex count crosses the split threshold — into
+//! contiguous **sub-ranges** of its serial work order, each a pool job of
+//! its own with private staging buffers, actives and aggregator partial
+//! ([`SubBuf`]). A merge pass folds the sub-buffers back **in sub-range
+//! order** through the same `merge_msg` rule the exchange phase uses, so
+//! the per-destination message sequences, the active order and the
+//! aggregator fold are exactly what the unsplit serial loop produces.
+//! This parallelizes *inside* the heaviest shard — the last compute-phase
+//! serialization point the lane-granular scheduler could not touch.
+//!
+//! All three phases are deterministic in the thread count, the scheduler
+//! *and* the split: stealing only changes which thread executes a job,
+//! never the source-worker delivery order inside a destination's exchange
+//! job nor the worker-order `agg_merge` fold inside a query's fold job;
+//! splitting only re-groups the serial work order into ranges whose
+//! effects are replayed in that same order. So `threads = N` produces
+//! bit-identical `QueryResult`s to `threads = 1` (pinned by
+//! `rust/tests/determinism.rs` and the randomized fuzzer in
+//! `rust/tests/fuzz_determinism.rs` across threads × workers × capacity ×
+//! scheduler × split).
 
 use std::collections::hash_map::Entry;
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use super::pool::{Job, RunStats, WorkerPool};
-use super::query::{merge_msg, MsgSlot, Phase, QueryResult, QueryRt, VState, WorkerShard};
+use super::query::{
+    merge_msg, MsgSlot, Phase, QueryResult, QueryRt, SubBuf, VState, WorkItem, WorkerShard,
+};
 use crate::graph::VertexId;
 use crate::metrics::EngineMetrics;
 use crate::network::Cluster;
@@ -52,6 +69,80 @@ use crate::vertex::{Ctx, MasterAction, QueryApp, QueryId};
 /// Safety cap: a query that exceeds this many supersteps is cut off and
 /// flagged `truncated` in its stats (guards against non-converging UDFs).
 const DEFAULT_MAX_SUPERSTEPS: u64 = 100_000;
+
+/// [`Split::Adaptive`]: sub-split only fires after a round whose compute
+/// lane-imbalance ratio exceeded this (a balanced partition never pays the
+/// split bookkeeping).
+const SPLIT_IMBALANCE_TRIGGER: f64 = 1.5;
+
+/// [`Split::Adaptive`]: tasks with fewer work items than this are never
+/// worth cutting (sub-job dispatch would cost more than it parallelizes).
+const SPLIT_MIN_ITEMS: usize = 256;
+
+/// [`Split::Adaptive`]: floor on the sub-range size, so a pathological
+/// task is never diced into per-vertex confetti.
+const SPLIT_MIN_SUB: usize = 64;
+
+/// Intra-lane sub-job splitting policy for the compute phase.
+///
+/// Work stealing (PR 3) balances whole worker lanes, but one pathological
+/// lane is still a single job — a hub-concentrated partition pins the
+/// phase's wall time on whichever thread executes that lane. Splitting
+/// cuts a heavy (query, worker) compute task's work-item list (message
+/// receivers in delivery order, then still-active vertices) into
+/// contiguous sub-ranges, runs each as its own pool job with private
+/// staging buffers, and folds the results back **in fixed sub-range
+/// order**, so the per-destination message sequences — and therefore the
+/// exchange phase's source-order delivery and `QueryResult::out` — are
+/// bit-identical to an unsplit run for every total or absent combiner
+/// (the same contract the `workers` partitioning already imposes).
+/// Splitting engages only under [`Sched::Stealing`]; the static baseline
+/// stays split-free by definition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    /// Never split: one compute job per worker lane (the PR 3 behavior,
+    /// kept as the benchmark baseline).
+    Off,
+    /// Cut any task with more than this many work items into contiguous
+    /// sub-ranges of at most this size.
+    MaxTaskVertices(usize),
+    /// The default: when skew is evident — after any round whose
+    /// lane-imbalance ratio exceeded [`SPLIT_IMBALANCE_TRIGGER`], or
+    /// whenever there are fewer worker lanes than threads (with a single
+    /// lane the ratio is identically 1.0, yet splitting is the only way
+    /// to use the other threads at all) — cut tasks of at least
+    /// [`SPLIT_MIN_ITEMS`] items into roughly `2 × threads` sub-ranges
+    /// (never smaller than [`SPLIT_MIN_SUB`]). All inputs (item counts,
+    /// worker/thread counts and the cost-model imbalance) are
+    /// deterministic, so the decision — and a fortiori the output —
+    /// never depends on thread scheduling.
+    Adaptive,
+}
+
+/// Per-round split decision, derived from (`Sched`, `Split`, last round's
+/// imbalance) once and copied into every lane.
+#[derive(Debug, Clone, Copy)]
+enum SplitPolicy {
+    Never,
+    /// Cut tasks with more than `.0` items into ranges of `.0`.
+    Fixed(usize),
+    /// Imbalance-triggered: aim for `2 × threads` ranges per heavy task.
+    Adaptive { threads: usize },
+}
+
+impl SplitPolicy {
+    /// Sub-range size for a task with `items` work items, or `None` to run
+    /// it serially inside the prep job. Depends only on deterministic
+    /// inputs, never on thread scheduling.
+    fn sub_size(self, items: usize) -> Option<usize> {
+        match self {
+            SplitPolicy::Never => None,
+            SplitPolicy::Fixed(n) => (items > n).then_some(n.max(1)),
+            SplitPolicy::Adaptive { threads } => (items >= SPLIT_MIN_ITEMS)
+                .then(|| items.div_ceil(2 * threads.max(1)).max(SPLIT_MIN_SUB)),
+        }
+    }
+}
 
 /// The Quegel engine: owns the app (V-data lives inside it), the simulated
 /// cluster, the query queue, all in-flight query state, and the persistent
@@ -64,6 +155,11 @@ pub struct Engine<A: QueryApp> {
     threads: usize,
     /// Phase-job granularity: stealing (default) or the static baseline.
     sched: Sched,
+    /// Intra-lane sub-job splitting policy (compute phase).
+    split: Split,
+    /// Compute lane-imbalance ratio of the most recent super-round, the
+    /// deterministic signal [`Split::Adaptive`] triggers on.
+    last_compute_imbalance: f64,
     /// Long-lived pool, created lazily at the first super-round that needs
     /// it and joined when the engine drops (even mid-queue).
     pool: Option<WorkerPool>,
@@ -75,27 +171,69 @@ pub struct Engine<A: QueryApp> {
     clock: f64,
     max_supersteps: u64,
     metrics: EngineMetrics,
-    // Per-worker scratch buffers reused across super-rounds (perf: no
-    // allocation in the hot loop; one per lane so threads never share).
-    outbox_scratch: Vec<Vec<(VertexId, A::Msg)>>,
+    // Per-worker scratch reused across super-rounds (perf: no allocation
+    // in the hot loop; one per lane so threads never share): the outbox
+    // plus the recycled sub-job buffers and work-item vectors of the
+    // sub-lane split.
+    lane_scratch: Vec<LaneScratch<A>>,
     // Exchange lanes reused across super-rounds: task structs and their
     // `inbound` vectors keep their capacity, so the steady-state exchange
     // allocates nothing (the maps themselves are loaned from the shards).
     exchange_scratch: Vec<ExchangeLane<A>>,
 }
 
+/// Recycled per-worker compute scratch: the serial outbox plus the
+/// sub-lane split's reusable buffers, so steady-state splitting allocates
+/// (almost) nothing.
+struct LaneScratch<A: QueryApp> {
+    /// Outbox for tasks run serially inside the prep job.
+    outbox: Vec<(VertexId, A::Msg)>,
+    /// Sub-job buffers, grown on demand and drained in place by the merge.
+    subs: Vec<SubBuf<A>>,
+    /// Recycled work-item vectors for split tasks.
+    items_pool: Vec<Vec<WorkItem<A>>>,
+    /// Recycled scratch for `split_items`' pointer-collection pass.
+    ptr_index: FxHashMap<VertexId, usize>,
+}
+
+impl<A: QueryApp> LaneScratch<A> {
+    fn new() -> Self {
+        Self {
+            outbox: Vec::new(),
+            subs: Vec::new(),
+            items_pool: Vec::new(),
+            ptr_index: FxHashMap::default(),
+        }
+    }
+}
+
 /// One worker's share of the compute phase: shard `w` of every running
-/// query, plus this worker's scratch buffer and cost/traffic accumulators.
-/// Lanes are handed to pool jobs whole; nothing in a lane is visible to
-/// another.
+/// query, plus this worker's scratch and counters. A lane is the unit of
+/// the **prep** dispatch: tasks below the split threshold run to
+/// completion right there (the PR 3 path); heavier tasks are transposed
+/// into work-item lists and handed out as sub-jobs. Counters are integers
+/// so lane totals are exactly associative — identical for every split
+/// setting — and converted to simulated seconds once per round.
 struct Lane<'a, A: QueryApp> {
     tasks: Vec<Task<'a, A>>,
-    scratch: &'a mut Vec<(VertexId, A::Msg)>,
-    /// Simulated compute seconds accumulated by this worker.
-    cost: f64,
+    scratch: &'a mut LaneScratch<A>,
+    /// This round's split decision (copied from the engine).
+    policy: SplitPolicy,
+    /// Tasks the prep pass decided to split, in task order.
+    splits: Vec<SplitPrep<'a, A>>,
+    /// Lane totals (serial tasks + merged sub-jobs).
     compute_calls: u64,
+    msg_handled: u64,
     /// `ctx.send` calls (pre-combiner), for engine-wide traffic counters.
     sent: u64,
+    /// Counters of the tasks run inline by the prep job only — the prep
+    /// job's own load, one unit of the post-split imbalance metric.
+    serial_calls: u64,
+    serial_handled: u64,
+    serial_sent: u64,
+    /// Per-sub-job loads in simulated seconds, filled by the merge (the
+    /// other units of the post-split imbalance metric).
+    sub_loads: Vec<f64>,
 }
 
 /// One (query, worker) compute unit inside a lane.
@@ -106,6 +244,32 @@ struct Task<'a, A: QueryApp> {
     query: &'a A::Query,
     agg_prev: &'a A::Agg,
     shard: &'a mut WorkerShard<A>,
+}
+
+/// A task the prep pass transposed for splitting: its serial-order work
+/// items plus everything a sub-job needs besides the shard itself.
+struct SplitPrep<'a, A: QueryApp> {
+    /// Index into `Lane::tasks` (for the merge to find the shard).
+    task_idx: usize,
+    qid: QueryId,
+    step: u64,
+    query: &'a A::Query,
+    agg_prev: &'a A::Agg,
+    items: Vec<WorkItem<A>>,
+    /// Sub-range size this task is cut at.
+    sub_size: usize,
+}
+
+/// One sub-range of one split task: the unit of the sub-job dispatch.
+/// Owns a disjoint slice of the task's work items plus a private
+/// [`SubBuf`]; nothing here is visible to any sibling sub-job.
+struct SubJob<'a, A: QueryApp> {
+    qid: QueryId,
+    step: u64,
+    query: &'a A::Query,
+    agg_prev: &'a A::Agg,
+    items: &'a mut [WorkItem<A>],
+    buf: &'a mut SubBuf<A>,
 }
 
 /// One destination worker's share of the exchange phase: for every running
@@ -130,113 +294,379 @@ struct ExchangeTask<A: QueryApp> {
     delivered: u64,
 }
 
-/// Execute every task of one lane: the per-worker serial loop over running
-/// queries. Runs on a pool worker when `threads > 1`; touches only the
-/// lane's own shards/scratch plus the read-shared app and cluster.
-fn run_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
-    for task in lane.tasks.iter_mut() {
-        let step = task.step;
-        let qid = task.qid;
-        let query = task.query;
-        let agg_prev = task.agg_prev;
-        // Disjoint borrows of the shard's fields so the hot loop can mutate
-        // vertex state IN PLACE while staging messages and aggregating.
-        let WorkerShard {
-            vstate,
-            active,
-            inbox,
-            staged,
-            agg_round,
-            terminated,
-        } = &mut *task.shard;
-        let outbox_scratch: &mut Vec<(VertexId, A::Msg)> = &mut *lane.scratch;
+/// Per-(query, worker) context of one compute dispatch, shared by the
+/// serial task loop and the split sub-jobs so the compute contract — Ctx
+/// construction, halt/terminate handling, activation, outbox routing —
+/// lives in exactly one place and the two paths can never diverge.
+struct ComputeCall<'a, A: QueryApp> {
+    qid: QueryId,
+    step: u64,
+    query: &'a A::Query,
+    agg_prev: &'a A::Agg,
+}
 
-        let mut compute_calls: u64 = 0;
-        let mut msg_handled: u64 = 0;
-        let mut sent_total: u64 = 0;
-        let inbox_now = std::mem::take(inbox);
-        let mut next_active: Vec<VertexId> = Vec::new();
+/// Everything one compute call may write: the aggregator partial, the
+/// outbox scratch, the activation list and the terminate flag of the
+/// executing unit — the shard itself for serial tasks, the private
+/// [`SubBuf`] for sub-jobs.
+struct ComputeSink<'a, A: QueryApp> {
+    agg: &'a mut A::Agg,
+    outbox: &'a mut Vec<(VertexId, A::Msg)>,
+    next_active: &'a mut Vec<VertexId>,
+    terminated: &'a mut bool,
+}
 
-        // One closure runs a compute() call over in-place state and routes
-        // the staged messages with the sender-side combiner.
-        let mut run_one = |v: VertexId,
-                           st: &mut VState<A::VQ>,
-                           msgs: &[A::Msg],
-                           next_active: &mut Vec<VertexId>|
-         -> u64 {
-            let mut ctx = Ctx {
-                app,
-                qid,
-                query,
-                step,
-                msgs,
-                prev_agg: agg_prev,
-                agg_partial: &mut *agg_round,
-                outbox: &mut *outbox_scratch,
-                halt: false,
-                terminate: false,
-                sent: 0,
-            };
-            app.compute(&mut ctx, v, &mut st.vq);
-            let (halt, terminate, sent) = (ctx.halt, ctx.terminate, ctx.sent);
-            st.halted = halt;
-            if !halt {
-                next_active.push(v);
-            }
-            if terminate {
-                *terminated = true;
-            }
-            for (dst, msg) in outbox_scratch.drain(..) {
-                let dw = cluster.worker_of(dst);
-                match staged[dw].entry(dst) {
-                    Entry::Occupied(mut e) => {
-                        let _ = merge_msg(app, e.get_mut(), msg);
-                    }
-                    Entry::Vacant(e) => {
-                        e.insert(MsgSlot::One(msg));
-                    }
+impl<'a, A: QueryApp> ComputeCall<'a, A> {
+    /// Run `compute()` for one vertex over in-place state, then route the
+    /// staged outbox through `stage` (which decides where a message lands:
+    /// the shard's staging maps or a sub-job's ordered private buffer).
+    /// Returns `ctx.sent`.
+    fn run(
+        &self,
+        app: &A,
+        v: VertexId,
+        st: &mut VState<A::VQ>,
+        msgs: &[A::Msg],
+        sink: &mut ComputeSink<'_, A>,
+        mut stage: impl FnMut(VertexId, A::Msg),
+    ) -> u64 {
+        let mut ctx = Ctx {
+            app,
+            qid: self.qid,
+            query: self.query,
+            step: self.step,
+            msgs,
+            prev_agg: self.agg_prev,
+            agg_partial: &mut *sink.agg,
+            outbox: &mut *sink.outbox,
+            halt: false,
+            terminate: false,
+            sent: 0,
+        };
+        app.compute(&mut ctx, v, &mut st.vq);
+        let (halt, terminate, sent) = (ctx.halt, ctx.terminate, ctx.sent);
+        st.halted = halt;
+        if !halt {
+            sink.next_active.push(v);
+        }
+        if terminate {
+            *sink.terminated = true;
+        }
+        for (dst, msg) in sink.outbox.drain(..) {
+            stage(dst, msg);
+        }
+        sent
+    }
+}
+
+/// Execute one (query, worker) compute task serially: the PR 3 per-task
+/// body, now also the below-threshold path of the prep dispatch. Returns
+/// `(compute_calls, msg_handled, sent)`.
+fn run_task<A: QueryApp>(
+    app: &A,
+    cluster: &Cluster,
+    task: &mut Task<'_, A>,
+    outbox_scratch: &mut Vec<(VertexId, A::Msg)>,
+) -> (u64, u64, u64) {
+    let step = task.step;
+    let call = ComputeCall {
+        qid: task.qid,
+        step,
+        query: task.query,
+        agg_prev: task.agg_prev,
+    };
+    // Disjoint borrows of the shard's fields so the hot loop can mutate
+    // vertex state IN PLACE while staging messages and aggregating.
+    let WorkerShard {
+        vstate,
+        active,
+        inbox,
+        staged,
+        agg_round,
+        terminated,
+    } = &mut *task.shard;
+
+    let mut compute_calls: u64 = 0;
+    let mut msg_handled: u64 = 0;
+    let mut sent_total: u64 = 0;
+    let inbox_now = std::mem::take(inbox);
+    let mut next_active: Vec<VertexId> = Vec::new();
+
+    // One closure runs a compute() call: the shared kernel with this
+    // shard's own buffers as the sink and its staging maps as the target.
+    let mut run_one = |v: VertexId,
+                       st: &mut VState<A::VQ>,
+                       msgs: &[A::Msg],
+                       next_active: &mut Vec<VertexId>|
+     -> u64 {
+        let mut sink = ComputeSink {
+            agg: &mut *agg_round,
+            outbox: &mut *outbox_scratch,
+            next_active,
+            terminated: &mut *terminated,
+        };
+        call.run(app, v, st, msgs, &mut sink, |dst, msg| {
+            let dw = cluster.worker_of(dst);
+            match staged[dw].entry(dst) {
+                Entry::Occupied(mut e) => {
+                    let _ = merge_msg(app, e.get_mut(), msg);
+                }
+                Entry::Vacant(e) => {
+                    e.insert(MsgSlot::One(msg));
                 }
             }
-            sent
+        })
+    };
+
+    // Process message receivers first, then still-active vertices that
+    // got no messages.
+    for (&v, msgs) in inbox_now.iter() {
+        let st = vstate.entry(v).or_insert_with(|| VState {
+            vq: app.init_value(call.query, v),
+            halted: false,
+            computed_step: 0,
+        });
+        st.halted = false;
+        st.computed_step = step;
+        msg_handled += msgs.len() as u64;
+        compute_calls += 1;
+        sent_total += run_one(v, st, msgs.as_slice(), &mut next_active);
+    }
+    // Active vertices without messages.
+    let prev_active = std::mem::take(active);
+    for v in prev_active {
+        let st = vstate.get_mut(&v).expect("active implies state");
+        if st.halted || st.computed_step == step {
+            continue;
+        }
+        st.computed_step = step;
+        compute_calls += 1;
+        sent_total += run_one(v, st, &[], &mut next_active);
+    }
+    drop(run_one);
+    // Recycle the inbox map's capacity for the next round (the exchange
+    // phase refills it).
+    let mut inbox_now = inbox_now;
+    inbox_now.clear();
+    *inbox = inbox_now;
+    *active = next_active;
+
+    (compute_calls, msg_handled, sent_total)
+}
+
+/// Execute an already-transposed work-item list serially against the
+/// shard itself: the single-sub-range fallback of the prep dispatch. The
+/// split decision is made on a cheap pre-dedup estimate, so a task can
+/// turn out to fit in one sub-range after transposition — dispatching it
+/// as a sub-job would parallelize nothing and pay the merge replay for
+/// free. Items are in serial order and stage straight into the shard's
+/// own buffers, so this is byte-for-byte the serial path's behavior.
+/// Returns `(compute_calls, msg_handled, sent)`.
+fn run_items_inline<A: QueryApp>(
+    app: &A,
+    cluster: &Cluster,
+    task: &mut Task<'_, A>,
+    items: &mut [WorkItem<A>],
+    outbox_scratch: &mut Vec<(VertexId, A::Msg)>,
+) -> (u64, u64, u64) {
+    let call = ComputeCall {
+        qid: task.qid,
+        step: task.step,
+        query: task.query,
+        agg_prev: task.agg_prev,
+    };
+    // `vstate` stays untouched (items hold pointers into it); every other
+    // shard field is the direct sink, exactly like the serial loop.
+    let WorkerShard {
+        active,
+        staged,
+        agg_round,
+        terminated,
+        ..
+    } = &mut *task.shard;
+    let mut compute_calls: u64 = 0;
+    let mut msg_handled: u64 = 0;
+    let mut sent_total: u64 = 0;
+    for item in items.iter_mut() {
+        // SAFETY: same argument as `run_sub` — the pointer was collected
+        // after the last vstate insertion, the map's structure is frozen,
+        // and this inline loop is the only live access to the slot.
+        let st: &mut VState<A::VQ> = unsafe { &mut *item.st.0 };
+        let msgs: &[A::Msg] = item.msgs.as_ref().map_or(&[], |s| s.as_slice());
+        let mut sink = ComputeSink {
+            agg: &mut *agg_round,
+            outbox: &mut *outbox_scratch,
+            next_active: &mut *active,
+            terminated: &mut *terminated,
         };
-
-        // Process message receivers first, then still-active vertices that
-        // got no messages.
-        for (&v, msgs) in inbox_now.iter() {
-            let st = vstate.entry(v).or_insert_with(|| VState {
-                vq: app.init_value(query, v),
-                halted: false,
-                computed_step: 0,
-            });
-            st.halted = false;
-            st.computed_step = step;
-            msg_handled += msgs.len() as u64;
-            compute_calls += 1;
-            sent_total += run_one(v, st, msgs.as_slice(), &mut next_active);
-        }
-        // Active vertices without messages.
-        let prev_active = std::mem::take(active);
-        for v in prev_active {
-            let st = vstate.get_mut(&v).expect("active implies state");
-            if st.halted || st.computed_step == step {
-                continue;
+        sent_total += call.run(app, item.v, st, msgs, &mut sink, |dst, msg| {
+            let dw = cluster.worker_of(dst);
+            match staged[dw].entry(dst) {
+                Entry::Occupied(mut e) => {
+                    let _ = merge_msg(app, e.get_mut(), msg);
+                }
+                Entry::Vacant(e) => {
+                    e.insert(MsgSlot::One(msg));
+                }
             }
-            st.computed_step = step;
-            compute_calls += 1;
-            sent_total += run_one(v, st, &[], &mut next_active);
-        }
-        drop(run_one);
-        // Recycle the inbox map's capacity for the next round (the exchange
-        // phase refills it).
-        let mut inbox_now = inbox_now;
-        inbox_now.clear();
-        *inbox = inbox_now;
-        *active = next_active;
+        });
+        compute_calls += 1;
+        msg_handled += msgs.len() as u64;
+    }
+    (compute_calls, msg_handled, sent_total)
+}
 
-        lane.cost += compute_calls as f64 * cluster.cost.per_vertex_compute_s
-            + msg_handled as f64 * cluster.cost.per_msg_overhead_s;
-        lane.compute_calls += compute_calls;
-        lane.sent += sent_total;
+/// The prep dispatch's per-lane job: run every below-threshold task to
+/// completion (the serial path above), and transpose every task the split
+/// policy selects into a work-item list plus enough recycled sub-buffers
+/// for its sub-ranges. Tasks whose post-dedup item count fits in a single
+/// sub-range fall back to the inline path — a split that produces one
+/// sub-job parallelizes nothing. Touches only the lane's own
+/// shards/scratch plus the read-shared app and cluster.
+fn prep_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
+    let mut bufs_needed = 0usize;
+    let workers = cluster.workers;
+    for idx in 0..lane.tasks.len() {
+        let task = &mut lane.tasks[idx];
+        // Upper-bound estimate of the work items (actives may dedup
+        // against receivers); deterministic, so the decision is too.
+        let est = task.shard.inbox.len() + task.shard.active.len();
+        match lane.policy.sub_size(est) {
+            None => {
+                let (calls, handled, sent) = run_task(app, cluster, task, &mut lane.scratch.outbox);
+                lane.serial_calls += calls;
+                lane.serial_handled += handled;
+                lane.serial_sent += sent;
+            }
+            Some(sub_size) => {
+                let mut items = lane.scratch.items_pool.pop().unwrap_or_default();
+                task.shard.split_items(
+                    app,
+                    task.query,
+                    task.step,
+                    &mut items,
+                    &mut lane.scratch.ptr_index,
+                );
+                if items.len() <= sub_size {
+                    let (calls, handled, sent) =
+                        run_items_inline(app, cluster, task, &mut items, &mut lane.scratch.outbox);
+                    lane.serial_calls += calls;
+                    lane.serial_handled += handled;
+                    lane.serial_sent += sent;
+                    items.clear();
+                    lane.scratch.items_pool.push(items);
+                } else {
+                    bufs_needed += items.len().div_ceil(sub_size);
+                    lane.splits.push(SplitPrep {
+                        task_idx: idx,
+                        qid: task.qid,
+                        step: task.step,
+                        query: task.query,
+                        agg_prev: task.agg_prev,
+                        items,
+                        sub_size,
+                    });
+                }
+            }
+        }
+    }
+    if lane.scratch.subs.len() < bufs_needed {
+        lane.scratch
+            .subs
+            .resize_with(bufs_needed, || SubBuf::new(workers));
+    }
+    lane.compute_calls += lane.serial_calls;
+    lane.msg_handled += lane.serial_handled;
+    lane.sent += lane.serial_sent;
+}
+
+/// The sub-job dispatch's unit: one contiguous sub-range of one split
+/// task, computed against private staging. Identical semantics to the
+/// serial loop except that staging, aggregation, actives and counters go
+/// to the sub-job's own [`SubBuf`]; the merge replays them in sub-range
+/// order afterwards.
+fn run_sub<A: QueryApp>(app: &A, cluster: &Cluster, sub: &mut SubJob<'_, A>) {
+    let call = ComputeCall {
+        qid: sub.qid,
+        step: sub.step,
+        query: sub.query,
+        agg_prev: sub.agg_prev,
+    };
+    let SubBuf {
+        staged,
+        next_active,
+        outbox,
+        agg,
+        terminated,
+        compute_calls,
+        msg_handled,
+        sent,
+    } = &mut *sub.buf;
+    for item in sub.items.iter_mut() {
+        // SAFETY: the pointer was collected by `split_items` after the last
+        // vstate insertion of this round; the map's structure is untouched
+        // until the merge, items hold distinct vertices, and sub-jobs own
+        // disjoint item ranges — so this is the only live access to the
+        // slot, and the pool's run() barrier sequences it before any
+        // coordinator use.
+        let st: &mut VState<A::VQ> = unsafe { &mut *item.st.0 };
+        let msgs: &[A::Msg] = item.msgs.as_ref().map_or(&[], |s| s.as_slice());
+        let mut sink = ComputeSink {
+            agg: &mut *agg,
+            outbox: &mut *outbox,
+            next_active: &mut *next_active,
+            terminated: &mut *terminated,
+        };
+        *sent += call.run(app, item.v, st, msgs, &mut sink, |dst, msg| {
+            let dw = cluster.worker_of(dst);
+            staged[dw].stage(app, dst, msg);
+        });
+        *compute_calls += 1;
+        *msg_handled += msgs.len() as u64;
+    }
+}
+
+/// The merge dispatch's per-lane job: fold every split task's sub-buffers
+/// back into its shard **in sub-range order** (the serial work order), so
+/// per-destination message sequences, active order and the aggregator fold
+/// are exactly what an unsplit run produces. Also settles counters: lane
+/// totals, per-sub loads for the post-split imbalance metric, and buffer
+/// recycling for the next round.
+fn merge_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
+    let Lane {
+        tasks,
+        scratch,
+        splits,
+        compute_calls,
+        msg_handled,
+        sent,
+        sub_loads,
+        ..
+    } = lane;
+    let c1 = cluster.cost.per_vertex_compute_s;
+    let c2 = cluster.cost.per_msg_overhead_s;
+    let mut buf_idx = 0usize;
+    for sp in splits.drain(..) {
+        let shard = &mut *tasks[sp.task_idx].shard;
+        let n_subs = sp.items.len().div_ceil(sp.sub_size);
+        for _ in 0..n_subs {
+            let buf = &mut scratch.subs[buf_idx];
+            buf_idx += 1;
+            *compute_calls += buf.compute_calls;
+            *msg_handled += buf.msg_handled;
+            *sent += buf.sent;
+            // Same load basis as the lane-imbalance metric: receive-side
+            // cost plus send-side staging overhead. Computed from exact
+            // integer counters, so it is identical for every schedule.
+            sub_loads.push(
+                buf.compute_calls as f64 * c1 + (buf.msg_handled + buf.sent) as f64 * c2,
+            );
+            shard.absorb_sub(app, buf);
+            buf.reset_counters();
+        }
+        let mut items = sp.items;
+        items.clear();
+        scratch.items_pool.push(items);
     }
 }
 
@@ -296,6 +726,32 @@ pub enum Sched {
     /// jobs from the back of busy threads' deques, so a heavy lane never
     /// pins the phase on one thread. The default.
     Stealing,
+}
+
+impl Sched {
+    /// The default scheduler for new engines: [`Sched::Stealing`], unless
+    /// the `QUEGEL_TEST_SCHED` environment variable says `static`. This is
+    /// the CI test-matrix hook — `QUEGEL_TEST_SCHED=static cargo test`
+    /// runs the whole suite under the static baseline without touching any
+    /// call site; explicit [`Engine::scheduler`] calls still win.
+    pub fn default_from_env() -> Self {
+        match std::env::var("QUEGEL_TEST_SCHED") {
+            Ok(v) if v.eq_ignore_ascii_case("static") => {
+                // An ambient env var silently changing engine behavior is
+                // surprising outside CI — say so once, loudly enough to
+                // explain unexpected static-baseline performance.
+                static NOTE: std::sync::Once = std::sync::Once::new();
+                NOTE.call_once(|| {
+                    eprintln!(
+                        "quegel: QUEGEL_TEST_SCHED=static overrides the default \
+                         scheduler (test-matrix hook); unset it for production use"
+                    );
+                });
+                Sched::Static
+            }
+            _ => Sched::Stealing,
+        }
+    }
 }
 
 /// Dispatch one parallel phase over the pool at the `sched` granularity,
@@ -388,7 +844,9 @@ impl<A: QueryApp> Engine<A> {
             threads: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
-            sched: Sched::Stealing,
+            sched: Sched::default_from_env(),
+            split: Split::Adaptive,
+            last_compute_imbalance: 0.0,
             pool: None,
             n_vertices,
             queue: VecDeque::new(),
@@ -398,7 +856,7 @@ impl<A: QueryApp> Engine<A> {
             clock: 0.0,
             max_supersteps: DEFAULT_MAX_SUPERSTEPS,
             metrics: EngineMetrics::default(),
-            outbox_scratch: Vec::new(),
+            lane_scratch: Vec::new(),
             exchange_scratch: Vec::new(),
         }
     }
@@ -412,8 +870,11 @@ impl<A: QueryApp> Engine<A> {
 
     /// Set the number of OS threads for the parallel phases (compute,
     /// exchange, fold). Defaults to `std::thread::available_parallelism()`;
-    /// `1` forces the fully serial loop, and values above the worker count
-    /// are clamped. Results are bit-identical for every setting.
+    /// `1` forces the fully serial loop. Values above the worker count
+    /// engage whenever sub-lane splitting can use them (they parallelize
+    /// inside a single shard); rounds where splitting cannot engage keep
+    /// the worker-count clamp so idle threads are never spawned or woken.
+    /// Results are bit-identical for every setting.
     pub fn threads(mut self, t: usize) -> Self {
         assert!(t > 0);
         self.threads = t;
@@ -430,6 +891,22 @@ impl<A: QueryApp> Engine<A> {
     pub fn scheduler(mut self, s: Sched) -> Self {
         self.sched = s;
         self
+    }
+
+    /// Select the intra-lane sub-job splitting policy for the compute
+    /// phase (see [`Split`]). [`Split::Adaptive`] is the default; results
+    /// are bit-identical for every setting.
+    pub fn split(mut self, s: Split) -> Self {
+        self.split = s;
+        self
+    }
+
+    /// Convenience for [`Split::MaxTaskVertices`]: cut any (query, worker)
+    /// compute task with more than `n` active/receiving vertices into
+    /// sub-ranges of at most `n`.
+    pub fn max_lane_vertices(self, n: usize) -> Self {
+        assert!(n > 0);
+        self.split(Split::MaxTaskVertices(n))
     }
 
     /// Override the superstep safety cap.
@@ -461,6 +938,18 @@ impl<A: QueryApp> Engine<A> {
     /// Engine-wide counters.
     pub fn metrics(&self) -> &EngineMetrics {
         &self.metrics
+    }
+
+    /// Zero the engine-wide counters, so a caller can account a session
+    /// (e.g. one `run_one`) in isolation: scheduler counters like
+    /// `steals`/`jobs_executed` are per-`WorkerPool::run` batch and only
+    /// ever accumulate, so without a reset a second session always reads
+    /// the first one's totals too. The simulated clock is NOT reset (it is
+    /// engine state, not a counter); `sim_time` re-syncs to it at the next
+    /// super-round.
+    pub fn reset_metrics(&mut self) {
+        self.metrics.reset();
+        self.metrics.sim_time = self.clock;
     }
 
     /// Completed queries so far (submission order not guaranteed; sort by
@@ -512,10 +1001,6 @@ impl<A: QueryApp> Engine<A> {
         }
         let wall_start = Instant::now();
         let workers = self.cluster.workers;
-        let nthreads = self.threads.min(workers).max(1);
-        if nthreads > 1 && self.pool.is_none() {
-            self.pool = Some(WorkerPool::new(nthreads));
-        }
 
         // --- Admission: fetch queries while capacity permits (paper §3.1).
         while self.inflight.len() < self.capacity {
@@ -543,6 +1028,54 @@ impl<A: QueryApp> Engine<A> {
             return false;
         }
 
+        // --- Thread budget & pool. Since the sub-lane split, threads
+        // beyond `workers` are exactly what parallelizes INSIDE one
+        // pathological shard (workers = 1, threads = 8 used to force a
+        // fully serial engine). The old worker-count clamp still applies
+        // whenever splitting cannot engage THIS round — static scheduler,
+        // Split::Off, or an unarmed Split::Adaptive — so balanced
+        // default-configured engines never spawn (and wake, three times
+        // per round) pool threads that cannot have work.
+        //
+        // Adaptive arms on skew evidence, all of it deterministic: a
+        // prior lane-imbalance round OR fewer lanes than threads (a
+        // single lane's imbalance ratio is identically 1.0, yet splitting
+        // is the only way to use the other threads at all) — AND at least
+        // one task this round big enough to actually split.
+        let mut max_task_est = 0usize;
+        for rt in self.inflight.iter() {
+            if rt.phase != Phase::Running {
+                continue;
+            }
+            for shard in rt.shards.iter() {
+                max_task_est = max_task_est.max(shard.inbox.len() + shard.active.len());
+            }
+        }
+        let adaptive_armed = (self.last_compute_imbalance > SPLIT_IMBALANCE_TRIGGER
+            || workers < self.threads)
+            && max_task_est >= SPLIT_MIN_ITEMS;
+        let splittable = match (self.sched, self.split) {
+            (Sched::Stealing, Split::MaxTaskVertices(_)) => true,
+            (Sched::Stealing, Split::Adaptive) => adaptive_armed,
+            _ => false,
+        };
+        let nthreads = if splittable {
+            self.threads.max(1)
+        } else {
+            self.threads.min(workers).max(1)
+        };
+        // The pool only ever GROWS to the demanded size; a bigger-than-
+        // needed pool from an earlier skewed round is kept, not thrashed.
+        let need_pool = nthreads > 1
+            && match &self.pool {
+                Some(pool) => pool.threads() < nthreads,
+                None => true,
+            };
+        if need_pool {
+            self.pool = None; // join any smaller pool's workers first
+            self.pool = Some(WorkerPool::new(nthreads));
+        }
+
         let msg_size = self.app.msg_bytes() + self.cluster.cost.msg_header_bytes;
         let app = &self.app;
         let cluster = &self.cluster;
@@ -550,23 +1083,52 @@ impl<A: QueryApp> Engine<A> {
         let sched = self.sched;
 
         // --- Compute phase: transpose the running queries into worker
-        // lanes (shard w of every query + worker w's scratch) and run the
-        // lanes on the pool. Each worker still processes its share of every
-        // in-flight query serially (paper model); only distinct workers run
-        // concurrently.
-        if self.outbox_scratch.len() < workers {
-            self.outbox_scratch.resize_with(workers, Vec::new);
+        // lanes (shard w of every query + worker w's scratch) and run them
+        // through up to three pool dispatches: **prep** (below-threshold
+        // tasks run to completion, heavy tasks transpose into work items),
+        // **sub-jobs** (one per contiguous sub-range, private staging), and
+        // **merge** (fold sub-buffers back in fixed sub-range order). When
+        // nothing splits — the common balanced case — the prep dispatch IS
+        // the whole phase and the other two are skipped.
+        let policy = if nthreads == 1 {
+            // Serial engine: sub-jobs would run one after another on the
+            // same thread, so transposition + merge replay would be pure
+            // overhead. Outputs are split-invariant by construction
+            // (pinned by the fuzzer), so skipping is unobservable.
+            SplitPolicy::Never
+        } else {
+            match (sched, self.split) {
+                // The static baseline and explicit Off never split.
+                (Sched::Static, _) | (_, Split::Off) => SplitPolicy::Never,
+                (_, Split::MaxTaskVertices(n)) => SplitPolicy::Fixed(n.max(1)),
+                (_, Split::Adaptive) => {
+                    if adaptive_armed {
+                        SplitPolicy::Adaptive { threads: nthreads }
+                    } else {
+                        SplitPolicy::Never
+                    }
+                }
+            }
+        };
+        if self.lane_scratch.len() < workers {
+            self.lane_scratch.resize_with(workers, LaneScratch::new);
         }
         let mut lanes: Vec<Lane<'_, A>> = self
-            .outbox_scratch
+            .lane_scratch
             .iter_mut()
             .take(workers)
             .map(|scratch| Lane {
                 tasks: Vec::new(),
                 scratch,
-                cost: 0.0,
+                policy,
+                splits: Vec::new(),
                 compute_calls: 0,
+                msg_handled: 0,
                 sent: 0,
+                serial_calls: 0,
+                serial_handled: 0,
+                serial_sent: 0,
+                sub_loads: Vec::new(),
             })
             .collect();
         for rt in self.inflight.iter_mut() {
@@ -585,39 +1147,99 @@ impl<A: QueryApp> Engine<A> {
         }
 
         let compute_start = Instant::now();
-        let compute_stats = run_phase(pool, nthreads, sched, &mut lanes, |lane| {
-            run_lane(app, cluster, lane)
+        let prep_stats = run_phase(pool, nthreads, sched, &mut lanes, |lane| {
+            prep_lane(app, cluster, lane)
         });
-        self.metrics.compute_time += compute_start.elapsed().as_secs_f64();
-        self.metrics.compute_sched.add(compute_stats.jobs, compute_stats.steals);
+        self.metrics.compute_sched.add(prep_stats.jobs, prep_stats.steals);
 
+        // Sub-job dispatch: pair each split task's item sub-ranges with the
+        // lane's recycled sub-buffers, in a fixed order the merge replays.
+        let mut tasks_split = 0u64;
+        let mut subjobs: Vec<SubJob<'_, A>> = Vec::new();
+        for lane in lanes.iter_mut() {
+            tasks_split += lane.splits.len() as u64;
+            let Lane { splits, scratch, .. } = lane;
+            let mut bufs = scratch.subs.iter_mut();
+            for sp in splits.iter_mut() {
+                for items in sp.items.chunks_mut(sp.sub_size) {
+                    let buf = bufs.next().expect("prep sized the buffer pool");
+                    subjobs.push(SubJob {
+                        qid: sp.qid,
+                        step: sp.step,
+                        query: sp.query,
+                        agg_prev: sp.agg_prev,
+                        items,
+                        buf,
+                    });
+                }
+            }
+        }
+        if !subjobs.is_empty() {
+            let sub_stats = run_phase(pool, nthreads, sched, &mut subjobs, |sub| {
+                run_sub(app, cluster, sub)
+            });
+            drop(subjobs);
+            self.metrics.compute_sched.add(sub_stats.jobs, sub_stats.steals);
+            self.metrics.subjobs_executed += sub_stats.jobs;
+            self.metrics.tasks_split += tasks_split;
+            let merge_stats = run_phase(pool, nthreads, sched, &mut lanes, |lane| {
+                merge_lane(app, cluster, lane)
+            });
+            self.metrics.compute_sched.add(merge_stats.jobs, merge_stats.steals);
+        }
+        self.metrics.compute_time += compute_start.elapsed().as_secs_f64();
+
+        let c1 = cluster.cost.per_vertex_compute_s;
+        let c2 = cluster.cost.per_msg_overhead_s;
         let mut worker_cost = Vec::with_capacity(workers);
         let mut lane_load = Vec::with_capacity(workers);
         let mut round_msgs: u64 = 0;
         let mut total_compute_calls: u64 = 0;
+        // Post-split work units: the prep job's serial share per lane plus
+        // every sub-job — what the scheduler can actually move between
+        // threads after splitting.
+        let mut max_unit_load = 0.0_f64;
         for lane in &lanes {
-            worker_cost.push(lane.cost);
+            // Lane totals come from exact integer counters, so the derived
+            // simulated cost is identical for every split setting.
+            let cost = lane.compute_calls as f64 * c1 + lane.msg_handled as f64 * c2;
+            worker_cost.push(cost);
             // Imbalance basis: receive-side cost PLUS send-side staging
-            // overhead. `cost` (what the simulated clock uses, unchanged)
-            // counts compute calls and *handled* messages only, which for
-            // combiner apps hides exactly the skew that hurts wall time —
-            // a hub lane's big out-fanout is staging work on the sender.
-            lane_load.push(lane.cost + lane.sent as f64 * cluster.cost.per_msg_overhead_s);
+            // overhead, which for combiner apps is exactly the skew that
+            // hurts wall time — a hub lane's big out-fanout is staging
+            // work on the sender.
+            lane_load.push(cost + lane.sent as f64 * c2);
             round_msgs += lane.sent;
             total_compute_calls += lane.compute_calls;
+            let serial_load = lane.serial_calls as f64 * c1
+                + (lane.serial_handled + lane.serial_sent) as f64 * c2;
+            max_unit_load = max_unit_load.max(serial_load);
+            for &l in &lane.sub_loads {
+                max_unit_load = max_unit_load.max(l);
+            }
         }
         drop(lanes);
         self.metrics.total_compute_calls += total_compute_calls;
         // Lane-imbalance ratio of this round's compute phase (max lane
         // load over mean lane load, from the deterministic cost model):
         // the skew the stealing scheduler exists to absorb. ~1.0 means a
-        // balanced partition; W means one lane carried everything.
+        // balanced partition; W means one lane carried everything. The
+        // per-round value also drives next round's Split::Adaptive
+        // decision; the post-split ratio uses the same normalization but
+        // measures the largest *schedulable unit* left after splitting —
+        // read the two together to see how much of a pathological lane the
+        // sub-jobs actually broke up.
         let max_load = lane_load.iter().copied().fold(0.0_f64, f64::max);
         let total_load: f64 = lane_load.iter().sum();
         if total_load > 0.0 {
             let ratio = max_load * lane_load.len() as f64 / total_load;
+            self.last_compute_imbalance = ratio;
             if ratio > self.metrics.max_lane_imbalance {
                 self.metrics.max_lane_imbalance = ratio;
+            }
+            let post_ratio = max_unit_load * lane_load.len() as f64 / total_load;
+            if post_ratio > self.metrics.max_post_split_imbalance {
+                self.metrics.max_post_split_imbalance = post_ratio;
             }
         }
 

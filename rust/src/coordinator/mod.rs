@@ -19,14 +19,24 @@
 //! granularity each lane / destination / query is its own pool job, and
 //! idle pool threads steal queued jobs from the back of busy threads'
 //! deques, so a hub-heavy partition never pins a phase on one thread.
-//! Stealing only moves jobs between executors — every order-sensitive
-//! merge runs inside a single job or on the coordinator — so every thread
-//! count and scheduler produces bit-identical results (see
-//! `rust/tests/determinism.rs`).
+//!
+//! Since the sub-lane split ([`Split`]), even ONE pathological lane is no
+//! longer atomic: a compute task whose active/receiving vertex count
+//! crosses the split threshold is transposed into its serial work-item
+//! order and cut into contiguous sub-ranges, each its own pool job with
+//! private staging; a merge pass folds the sub-buffers back in sub-range
+//! order, replaying exactly the serial message sequences. The determinism
+//! argument is uniform: stealing moves jobs between executors, splitting
+//! re-groups a fixed serial order — every order-sensitive merge (message
+//! delivery, aggregator fold, sub-buffer absorption) replays that order
+//! inside a single job or on the coordinator — so every thread count,
+//! scheduler and split setting produces bit-identical results (see
+//! `rust/tests/determinism.rs` and the randomized matrix in
+//! `rust/tests/fuzz_determinism.rs`).
 
 mod engine;
 mod pool;
 mod query;
 
-pub use engine::{Engine, Sched};
+pub use engine::{Engine, Sched, Split};
 pub use query::{QueryResult, VState};

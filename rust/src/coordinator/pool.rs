@@ -166,10 +166,21 @@ impl WorkerPool {
         }
         // Round-robin distribution: job i starts on deque i mod threads,
         // so every thread has local work and contiguous items (adjacent
-        // worker lanes, consecutive queries) spread across threads.
+        // worker lanes, consecutive queries, neighboring sub-ranges of a
+        // split task) spread across threads. Group each deque's strided
+        // share first and take every deque lock exactly once: sub-lane
+        // splitting made batches much larger than the thread count, and
+        // one lock per *job* would contend with workers already draining
+        // the deques mid-distribution. Placement and per-deque FIFO order
+        // are identical to the per-job loop this replaces.
         let k = self.shared.deques.len();
+        let mut shares: Vec<Vec<Job<'static>>> =
+            (0..k).map(|_| Vec::with_capacity(n.div_ceil(k))).collect();
         for (i, job) in batch.into_iter().enumerate() {
-            self.shared.deques[i % k].lock().unwrap().push_back(job);
+            shares[i % k].push(job);
+        }
+        for (deque, share) in self.shared.deques.iter().zip(shares) {
+            deque.lock().unwrap().extend(share);
         }
         // Bump the epoch only now that every job is findable by a scan,
         // then wake the workers. Parking re-checks the epoch under this

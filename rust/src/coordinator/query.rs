@@ -1,5 +1,11 @@
 //! Per-query runtime state: the rust analog of the paper's Q-data entry in
-//! `HT_Q` plus the per-worker shards of VQ-data and message stores.
+//! `HT_Q` plus the per-worker shards of VQ-data and message stores — and,
+//! since the sub-lane split, the primitives that let ONE shard's compute
+//! work be cut into independently schedulable sub-ranges ([`WorkItem`],
+//! [`SubBuf`], [`WorkerShard::split_items`], [`WorkerShard::absorb_sub`])
+//! without changing a single output bit.
+
+use std::collections::hash_map::Entry;
 
 use crate::graph::VertexId;
 use crate::metrics::QueryStats;
@@ -151,6 +157,237 @@ impl<A: QueryApp> WorkerShard<A> {
             terminated: false,
         }
     }
+
+    /// Transpose this shard's superstep into an explicit work-item list so
+    /// the compute can be cut into contiguous sub-ranges. The list order is
+    /// EXACTLY the order the serial loop would have processed: message
+    /// receivers in inbox drain order (== iteration order), then still-
+    /// active vertices that received nothing, in active-list order. VQ-data
+    /// entries for new receivers are inserted here, in that same order, so
+    /// the `vstate` iteration order the reporting round sees is identical
+    /// to an unsplit run's.
+    ///
+    /// Items carry raw pointers to their `VState` slots, collected in a
+    /// second pass after every insertion is done (insertions may rehash the
+    /// map and move values; afterwards nothing mutates the map's structure
+    /// until the merge, so the pointers stay valid through the sub-jobs).
+    /// Distinct vertices own distinct slots, so sub-jobs over disjoint item
+    /// ranges never alias.
+    /// `ptr_index` is caller-provided scratch (recycled across rounds) for
+    /// the pointer-collection pass; it is cleared before use.
+    pub(crate) fn split_items(
+        &mut self,
+        app: &A,
+        query: &A::Query,
+        step: u64,
+        items: &mut Vec<WorkItem<A>>,
+        ptr_index: &mut FxHashMap<VertexId, usize>,
+    ) {
+        debug_assert!(items.is_empty());
+        let mut inbox_now = std::mem::take(&mut self.inbox);
+        for (v, slot) in inbox_now.drain() {
+            let st = self.vstate.entry(v).or_insert_with(|| VState {
+                vq: app.init_value(query, v),
+                halted: false,
+                computed_step: 0,
+            });
+            st.halted = false;
+            st.computed_step = step;
+            items.push(WorkItem {
+                v,
+                st: SendPtr(std::ptr::null_mut()),
+                msgs: Some(slot),
+            });
+        }
+        // Recycle the inbox map's capacity (the exchange phase refills it),
+        // exactly like the serial path does.
+        self.inbox = inbox_now;
+        let prev_active = std::mem::take(&mut self.active);
+        for v in &prev_active {
+            let st = self.vstate.get_mut(v).expect("active implies state");
+            if st.halted || st.computed_step == step {
+                continue;
+            }
+            st.computed_step = step;
+            items.push(WorkItem {
+                v: *v,
+                st: SendPtr(std::ptr::null_mut()),
+                msgs: None,
+            });
+        }
+        // Reuse the old active vec's capacity as the merge target.
+        let mut prev_active = prev_active;
+        prev_active.clear();
+        self.active = prev_active;
+        // Second pass: all insertions are done, so the slots are stable.
+        // Collect every pointer in ONE mutable traversal of the map: a
+        // get_mut per item would reborrow the whole map each time, which
+        // under the Stacked Borrows aliasing model invalidates the
+        // pointers collected before it — one traversal keeps the split
+        // path Miri-clean. (The traversal is O(|vstate|), i.e. every
+        // vertex the query ever touched, not just the frontier — the
+        // price of the aliasing-clean collection; splitting only fires on
+        // heavy rounds, whose compute dwarfs a flat table scan.)
+        ptr_index.clear();
+        for (i, item) in items.iter().enumerate() {
+            ptr_index.insert(item.v, i);
+        }
+        for (v, st) in self.vstate.iter_mut() {
+            if let Some(&i) = ptr_index.get(v) {
+                items[i].st = SendPtr(st);
+            }
+        }
+        debug_assert!(items.iter().all(|item| !item.st.0.is_null()));
+    }
+
+    /// Fold one sub-job's private buffers back into this shard, replaying
+    /// the exact serial order: called once per sub-range, in sub-range
+    /// order. Staged slots are re-offered to the sender-side combiner
+    /// message by message through [`merge_msg`] (the same single rule the
+    /// exchange phase uses), actives are appended, the aggregator partial
+    /// is folded through `agg_merge`, and `force_terminate` is OR-ed.
+    /// Because the concatenated sub-ranges are the serial work order, the
+    /// per-destination message sequences this produces are identical to an
+    /// unsplit run's for every total or absent combiner — the same contract
+    /// the worker partitioning already imposes.
+    pub(crate) fn absorb_sub(&mut self, app: &A, buf: &mut SubBuf<A>) {
+        for (stg, sub) in self.staged.iter_mut().zip(buf.staged.iter_mut()) {
+            sub.index.clear();
+            for (dst, slot) in sub.slots.drain(..) {
+                match stg.entry(dst) {
+                    Entry::Occupied(mut e) => {
+                        let into = e.get_mut();
+                        match slot {
+                            MsgSlot::One(m) => {
+                                let _ = merge_msg(app, into, m);
+                            }
+                            MsgSlot::Many(ms) => {
+                                for m in ms {
+                                    let _ = merge_msg(app, into, m);
+                                }
+                            }
+                        }
+                    }
+                    Entry::Vacant(e) => {
+                        e.insert(slot); // moves, no allocation
+                    }
+                }
+            }
+        }
+        self.active.append(&mut buf.next_active);
+        let part = std::mem::take(&mut buf.agg);
+        app.agg_merge(&mut self.agg_round, &part);
+        if buf.terminated {
+            self.terminated = true;
+            buf.terminated = false;
+        }
+    }
+}
+
+/// Insertion-ordered sub-staging for one destination worker: slots are
+/// kept in FIRST-TOUCH order (a `Vec`) with a hash index for combining,
+/// so the merge replays destinations in exactly the order a serial pass
+/// would have first staged them — and the shard's staging map therefore
+/// gets the same key-insertion history as an unsplit run. A plain hash
+/// map here would hand the merge its internal iteration order instead;
+/// since a hash map's iteration order downstream depends on insertion
+/// history, that would leak a split-dependent receiver-processing order
+/// into the NEXT superstep for order-sensitive apps.
+pub(crate) struct OrderedStaging<A: QueryApp> {
+    /// dst -> index into `slots`; cleared together with the slots when
+    /// the merge drains this buffer.
+    index: FxHashMap<VertexId, usize>,
+    /// (dst, slot) pairs in first-touch order.
+    pub slots: Vec<(VertexId, MsgSlot<A::Msg>)>,
+}
+
+impl<A: QueryApp> OrderedStaging<A> {
+    fn empty() -> Self {
+        Self {
+            index: FxHashMap::default(),
+            slots: Vec::new(),
+        }
+    }
+
+    /// Stage one message, replaying the sender-side combiner against the
+    /// destination's existing slot — the same [`merge_msg`] rule used
+    /// everywhere else a message enters a slot.
+    pub fn stage(&mut self, app: &A, dst: VertexId, msg: A::Msg) {
+        match self.index.entry(dst) {
+            Entry::Occupied(e) => {
+                let _ = merge_msg(app, &mut self.slots[*e.get()].1, msg);
+            }
+            Entry::Vacant(e) => {
+                e.insert(self.slots.len());
+                self.slots.push((dst, MsgSlot::One(msg)));
+            }
+        }
+    }
+}
+
+/// Raw pointer to a `VState` slot inside a shard's `vstate` map, safe to
+/// hand to a pool thread: the slots of one work-item list are pairwise
+/// distinct (distinct keys), the map's structure is frozen while sub-jobs
+/// run, and the coordinator blocks until the batch drains.
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+// SAFETY: the pointer is only ever dereferenced by the one sub-job that
+// owns the item (disjoint ranges over distinct vertices), and `run` blocks
+// the coordinator until every sub-job finished — the same happens-before
+// edge the pool already provides for `&mut` captures.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+
+/// One unit of split compute work: the vertex, a raw handle to its VQ-data
+/// slot, and the messages it received this superstep (owned — taken from
+/// the inbox during [`WorkerShard::split_items`]).
+pub(crate) struct WorkItem<A: QueryApp> {
+    pub v: VertexId,
+    pub st: SendPtr<VState<A::VQ>>,
+    pub msgs: Option<MsgSlot<A::Msg>>,
+}
+
+/// Private staging state of one compute sub-job: everything `compute` may
+/// write, so a sub-range runs with zero synchronization against its
+/// siblings. Buffers are recycled across super-rounds (the merge drains
+/// them in place).
+pub(crate) struct SubBuf<A: QueryApp> {
+    /// Sub-staging: outgoing messages per destination worker, in
+    /// first-touch destination order, combined sender-side within this
+    /// sub-range only.
+    pub staged: Vec<OrderedStaging<A>>,
+    /// Vertices of this sub-range that did not vote halt, in work order.
+    pub next_active: Vec<VertexId>,
+    /// Per-sub outbox scratch (drained after every compute call).
+    pub outbox: Vec<(VertexId, A::Msg)>,
+    /// This sub-range's aggregator partial (folded in sub-range order).
+    pub agg: A::Agg,
+    pub terminated: bool,
+    pub compute_calls: u64,
+    pub msg_handled: u64,
+    pub sent: u64,
+}
+
+impl<A: QueryApp> SubBuf<A> {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            staged: (0..workers).map(|_| OrderedStaging::empty()).collect(),
+            next_active: Vec::new(),
+            outbox: Vec::new(),
+            agg: A::Agg::default(),
+            terminated: false,
+            compute_calls: 0,
+            msg_handled: 0,
+            sent: 0,
+        }
+    }
+
+    /// Zero the per-round counters (buffers are already drained by the
+    /// merge; called after the lane folded the counters into its totals).
+    pub fn reset_counters(&mut self) {
+        self.compute_calls = 0;
+        self.msg_handled = 0;
+        self.sent = 0;
+    }
 }
 
 /// Q-data + per-worker shards for one in-flight query.
@@ -297,6 +534,67 @@ mod tests {
         s.push(2);
         *s.first_mut().unwrap() = 8;
         assert_eq!(s.as_slice(), &[8, 2]);
+    }
+
+    #[test]
+    fn split_items_replays_serial_order_and_dedups_actives() {
+        let app = SumBelow100;
+        let mut shard = WorkerShard::<SumBelow100>::new(2);
+        // Receiver 2 is new to the query (no VQ-data yet — the receiver
+        // pass must insert it); actives are [4, 2], and 2 also received,
+        // so the active pass must dedup it exactly like the serial loop.
+        shard.inbox.insert(2, MsgSlot::One(5));
+        shard.vstate.insert(
+            4,
+            VState {
+                vq: (),
+                halted: false,
+                computed_step: 0,
+            },
+        );
+        shard.active.extend([4u32, 2]);
+
+        let mut items = Vec::new();
+        shard.split_items(&app, &(), 1, &mut items, &mut FxHashMap::default());
+        let order: Vec<u32> = items.iter().map(|i| i.v).collect();
+        assert_eq!(order, vec![2, 4], "receivers first, then deduped actives");
+        assert!(items[0].msgs.is_some() && items[1].msgs.is_none());
+        for item in &items {
+            assert!(!item.st.0.is_null());
+            let st = shard.vstate.get(&item.v).unwrap();
+            assert_eq!(st.computed_step, 1, "work items must be stamped");
+        }
+        assert!(shard.inbox.is_empty(), "inbox must be drained for recycling");
+        assert!(shard.active.is_empty(), "actives consumed; merge refills");
+    }
+
+    #[test]
+    fn absorb_sub_replays_combiner_in_subrange_order() {
+        let app = SumBelow100;
+        let mut shard = WorkerShard::<SumBelow100>::new(2);
+        let mut buf1 = SubBuf::<SumBelow100>::new(2);
+        let mut buf2 = SubBuf::<SumBelow100>::new(2);
+        buf1.staged[0].stage(&app, 8, 7);
+        buf1.staged[0].stage(&app, 8, 3); // combines: 7 + 3 = 10 < 100
+        buf1.next_active.push(8);
+        buf2.staged[0].stage(&app, 9, 1);
+        buf2.staged[0].stage(&app, 8, 90);
+        buf2.next_active.push(9);
+        // Sub-staging preserves FIRST-TOUCH destination order, not hash
+        // order — that is what keeps the shard's staging map insertion
+        // history identical to a serial pass.
+        let touch_order: Vec<u32> = buf2.staged[0].slots.iter().map(|&(d, _)| d).collect();
+        assert_eq!(touch_order, vec![9, 8]);
+
+        shard.absorb_sub(&app, &mut buf1);
+        shard.absorb_sub(&app, &mut buf2);
+        // 10 then 90: the combiner declines (sum would hit 100), so the
+        // slot must hold both, in sub-range order — exactly the sequence
+        // one serial staging pass would have produced.
+        assert_eq!(shard.staged[0].get(&8).unwrap().as_slice(), &[10, 90]);
+        assert_eq!(shard.staged[0].get(&9).unwrap().as_slice(), &[1]);
+        assert_eq!(shard.active, vec![8, 9], "actives append in sub order");
+        assert!(buf1.staged[0].slots.is_empty() && buf2.staged[0].slots.is_empty());
     }
 
     #[test]

@@ -264,6 +264,61 @@ pub fn hub_concentrated(
     b.build()
 }
 
+/// Single-mega-hub stressor: the worst case the sub-lane compute split
+/// exists for, strictly nastier than [`hub_concentrated`]. There, worker
+/// 0 owns *many* moderately hot hubs, so lane-granular stealing still has
+/// hub-free lanes to rebalance against; here **one vertex** owns the hot
+/// edges and its entire blast radius lands on one worker:
+///
+/// * vertex 0 — the mega hub — has an out-edge to every other multiple of
+///   `stride`, i.e. ~`n / stride` edges from a single vertex (plus the
+///   chain edge), dwarfing every other out-degree in the graph;
+/// * under the engine's `v mod W` hash partitioning on a
+///   `Cluster::new(stride)`, all those targets live on worker 0 — so the
+///   superstep after a traversal wave reaches the hub, ONE worker lane
+///   receives the whole ~`n / stride`-vertex batch as ONE compute task.
+///   Whole-lane stealing cannot absorb that (a lane is a single job);
+///   only cutting the task's vertex range into sub-jobs can;
+/// * each spoke (`v % stride == 0`, `v != 0`) has `spoke_deg` uniform
+///   random out-edges, so the pathological round does real per-vertex
+///   staging work and the wave fans back out across every worker;
+/// * every vertex with `v % stride == 1` points at the hub, so traversals
+///   from anywhere find it within a couple of supersteps;
+/// * a chain `0 → 1 → … → n-1` guarantees weak connectivity.
+pub fn mega_hub(n: usize, stride: usize, spoke_deg: usize, seed: u64) -> Graph {
+    assert!(stride >= 2, "stride 1 would put every vertex on worker 0");
+    assert!(n > 4 * stride, "need a real spoke population");
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n);
+    let mut seen = FxHashSet::default();
+    for u in 0..n - 1 {
+        b.edge(u as VertexId, (u + 1) as VertexId);
+        seen.insert((u as VertexId, (u + 1) as VertexId));
+    }
+    for v in (stride..n).step_by(stride) {
+        // The mega fanout: hub 0 → every other multiple of stride.
+        let v = v as VertexId;
+        if seen.insert((0, v)) {
+            b.edge(0, v);
+        }
+        // Spokes fan the wave back out to uniform random targets.
+        for _ in 0..spoke_deg {
+            let t = rng.below_usize(n) as VertexId;
+            if t != v && seen.insert((v, t)) {
+                b.edge(v, t);
+            }
+        }
+    }
+    // Fast routes into the hub from every neighborhood.
+    for v in (1..n).step_by(stride) {
+        let v = v as VertexId;
+        if seen.insert((v, 0)) {
+            b.edge(v, 0);
+        }
+    }
+    b.build()
+}
+
 /// Random (s, t) query pairs over `n` vertices.
 pub fn random_pairs(n: usize, count: usize, seed: u64) -> Vec<(VertexId, VertexId)> {
     assert!(n >= 2, "need at least two vertices for distinct pairs");
@@ -397,6 +452,39 @@ mod tests {
         );
         // The chain keeps it connected: random pairs mostly reach.
         let pairs = random_pairs(n, 15, 12);
+        assert!(reach_fraction(&g, &pairs) > 0.6);
+    }
+
+    #[test]
+    fn mega_hub_concentrates_one_vertex_and_one_lane() {
+        let stride = 8;
+        let n = 4_000;
+        let g = mega_hub(n, stride, 6, 21);
+        // One vertex owns the big fanout: its out-degree dwarfs everyone
+        // else's (chain + spoke_deg at most elsewhere).
+        let hub_deg = g.out(0).len();
+        let max_other = (1..n).map(|v| g.out(v as VertexId).len()).max().unwrap();
+        assert!(
+            hub_deg >= n / stride,
+            "hub out-degree {hub_deg} < spoke count {}",
+            n / stride
+        );
+        assert!(
+            hub_deg > 10 * max_other,
+            "hub {hub_deg} vs next-biggest {max_other}: one vertex must own \
+             most of the hot edges"
+        );
+        // Every non-chain hub target is a multiple of stride, i.e. lives
+        // on worker 0 of a stride-worker cluster: the hub's whole blast
+        // radius is one lane's receiver batch.
+        for &t in g.out(0) {
+            assert!(
+                t == 1 || t as usize % stride == 0,
+                "hub target {t} not on worker 0"
+            );
+        }
+        // The chain keeps it connected: random pairs mostly reach.
+        let pairs = random_pairs(n, 15, 22);
         assert!(reach_fraction(&g, &pairs) > 0.6);
     }
 

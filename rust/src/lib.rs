@@ -19,11 +19,18 @@
 //!   `Sched::Stealing` granularity every lane / destination / query is
 //!   its own pool job on a per-thread deque, and idle threads steal from
 //!   the back of busy threads' deques, so a hub-concentrated partition
-//!   never serializes a phase behind one thread. Stealing only decides
-//!   which thread *executes* a job; every order-sensitive merge (message
-//!   delivery, aggregator fold) replays the serial order inside a single
-//!   job, so results are bit-identical for every thread count and
-//!   scheduler.
+//!   never serializes a phase behind one thread. Under the `Split` knob
+//!   even one pathological *lane* is no longer atomic: a compute task
+//!   whose active/receiving vertex count crosses the split threshold is
+//!   cut into contiguous sub-ranges of its serial work order, each its
+//!   own pool job with private staging buffers, folded back in sub-range
+//!   order by a merge pass. Stealing only decides which thread *executes*
+//!   a job, splitting only re-groups a fixed serial order; every
+//!   order-sensitive merge (message delivery, aggregator fold,
+//!   sub-buffer absorption) replays that order inside a single job, so
+//!   results are bit-identical for every thread count, scheduler and
+//!   split setting (pinned by the determinism suite and the randomized
+//!   fuzzer in `rust/tests/fuzz_determinism.rs`).
 //! * [`vertex`] — the `QueryApp` programming interface (paper §4); app and
 //!   associated types carry the `Send`/`Sync` bounds the threaded shards
 //!   require.

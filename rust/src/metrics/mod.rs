@@ -91,12 +91,21 @@ pub struct EngineMetrics {
     pub queries_completed: u64,
     /// Peak number of simultaneously in-flight queries.
     pub peak_inflight: usize,
-    /// Compute-phase scheduler counters (jobs = worker lanes).
+    /// Compute-phase scheduler counters. Jobs count every compute
+    /// dispatch: the per-lane prep jobs, plus — in rounds where the
+    /// sub-lane split engaged — the sub-jobs and the per-lane merge jobs.
     pub compute_sched: PhaseSched,
     /// Exchange-phase scheduler counters (jobs = destination workers).
     pub exchange_sched: PhaseSched,
     /// Fold-phase scheduler counters (jobs = in-flight queries).
     pub fold_sched: PhaseSched,
+    /// Compute sub-jobs executed by the sub-lane split: pool jobs that ran
+    /// one contiguous sub-range of a split task against private staging.
+    /// Zero means the split never engaged (balanced partitions,
+    /// `Split::Off`, or the static baseline).
+    pub subjobs_executed: u64,
+    /// (query, worker) compute tasks the split policy cut into sub-ranges.
+    pub tasks_split: u64,
     /// Worst compute-phase lane imbalance seen: max lane cost over mean
     /// lane cost (simulated cost model, so deterministic) of the most
     /// skewed super-round. ~1.0 = balanced partition; `workers` = one lane
@@ -104,6 +113,13 @@ pub struct EngineMetrics {
     /// absorbs — read it next to `compute_sched.steals` to see whether a
     /// workload's imbalance actually engaged the steal path.
     pub max_lane_imbalance: f64,
+    /// Same normalization as `max_lane_imbalance`, but over the largest
+    /// *schedulable unit* after sub-lane splitting (a prep job's serial
+    /// share, or one sub-job) instead of whole lanes. With splitting off
+    /// the two coincide; with splitting on, the gap between them is the
+    /// serialization the sub-jobs broke up — a pathological lane that
+    /// reads 8× on `max_lane_imbalance` but ~1× here was fully absorbed.
+    pub max_post_split_imbalance: f64,
 }
 
 impl EngineMetrics {
@@ -117,6 +133,17 @@ impl EngineMetrics {
         self.compute_sched.jobs_executed
             + self.exchange_sched.jobs_executed
             + self.fold_sched.jobs_executed
+    }
+
+    /// Zero every counter, so per-session accounting is possible on a
+    /// long-lived engine. Scheduler counters (`jobs_executed`, `steals`)
+    /// and the sub-lane split counters are per-batch values that only ever
+    /// accumulate — without a reset between sessions (e.g. two `run_one`
+    /// calls), the second session reads the first one's totals too.
+    /// Callers normally go through `Engine::reset_metrics`, which also
+    /// re-syncs `sim_time` to the engine clock.
+    pub fn reset(&mut self) {
+        *self = EngineMetrics::default();
     }
 }
 
@@ -242,6 +269,27 @@ mod tests {
         assert_eq!(m.compute_sched.steals, 2);
         assert_eq!(m.jobs_executed(), 27);
         assert_eq!(m.steals(), 3);
+    }
+
+    #[test]
+    fn reset_zeroes_every_counter() {
+        let mut m = EngineMetrics::default();
+        m.compute_sched.add(8, 2);
+        m.subjobs_executed = 5;
+        m.tasks_split = 2;
+        m.max_lane_imbalance = 7.5;
+        m.max_post_split_imbalance = 1.2;
+        m.queries_completed = 3;
+        m.super_rounds = 9;
+        m.reset();
+        assert_eq!(m.steals(), 0);
+        assert_eq!(m.jobs_executed(), 0);
+        assert_eq!(m.subjobs_executed, 0);
+        assert_eq!(m.tasks_split, 0);
+        assert_eq!(m.max_lane_imbalance, 0.0);
+        assert_eq!(m.max_post_split_imbalance, 0.0);
+        assert_eq!(m.queries_completed, 0);
+        assert_eq!(m.super_rounds, 0);
     }
 
     #[test]

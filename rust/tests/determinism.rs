@@ -13,10 +13,11 @@ use quegel::apps::reach::{build_labels, condense, dag, ReachQuery};
 use quegel::apps::terrain::baseline::dijkstra;
 use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
 use quegel::apps::xml::{self, SlcaLevelAligned, SlcaNaive};
-use quegel::coordinator::{Engine, Sched};
+use quegel::coordinator::{Engine, Sched, Split};
 use quegel::graph::gen;
+use quegel::graph::VertexId;
 use quegel::network::Cluster;
-use quegel::vertex::QueryApp;
+use quegel::vertex::{Ctx, QueryApp};
 
 /// Run the same batch under every (threads, capacity) configuration and
 /// assert all runs return identical per-query outputs (in submission
@@ -140,6 +141,139 @@ fn scheduler_choice_never_changes_outputs() {
             }
         }
     }
+    let outs = base.unwrap();
+    for (i, &(s, t)) in queries.iter().enumerate() {
+        let want = ppsp_oracle::bfs_dist(&g, s, t);
+        assert_eq!(
+            outs[i],
+            (want != UNREACHED).then_some(want),
+            "query ({s},{t})"
+        );
+    }
+}
+
+/// Combiner-less app whose answer depends on MESSAGE ORDER: the receiver
+/// folds its inbox through the non-commutative `h -> h * 31 + m`. Three
+/// senders are crafted so the fold only produces the locked constant when
+/// delivery replays (a) worker-0's staging before worker-1's (the exchange
+/// phase's source-worker order) and (b) worker-0's two senders in active-
+/// list order (the compute phase's serial work order — exactly what the
+/// sub-staging merge must reproduce when the task is split). Any silent
+/// reordering anywhere in the staging/merge/exchange pipeline flips the
+/// result.
+struct OrderHash;
+
+impl QueryApp for OrderHash {
+    type Query = ();
+    /// The receiver's fold accumulator (senders leave it 0).
+    type VQ = u64;
+    type Msg = u64;
+    type Agg = ();
+    type Out = u64;
+
+    fn init_activate(&self, _q: &()) -> Vec<VertexId> {
+        // Worker 0 (v mod 2 == 0) gets senders 0 then 2 in this order;
+        // worker 1 gets sender 1. Vertex 3 (worker 1) is the receiver.
+        vec![0, 2, 1]
+    }
+
+    fn init_value(&self, _q: &(), _v: VertexId) -> u64 {
+        0
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, vq: &mut u64) {
+        if ctx.superstep() == 1 {
+            // Sender v contributes v + 1, all addressed to vertex 3.
+            ctx.send(3, v as u64 + 1);
+        } else {
+            for &m in ctx.msgs() {
+                *vq = *vq * 31 + m;
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    fn finish(
+        &self,
+        _q: &(),
+        touched: &mut dyn Iterator<Item = (VertexId, &u64)>,
+        _agg: &(),
+    ) -> u64 {
+        touched.find(|&(v, _)| v == 3).map(|(_, &h)| h).unwrap_or(0)
+    }
+}
+
+/// In-source-order delivery is `[1, 3, 2]` (worker 0's senders 0 and 2 in
+/// active order, then worker 1's sender 1), so the locked fold value is
+/// `((0*31 + 1)*31 + 3)*31 + 2 = 1056`. The sweep includes a split
+/// threshold of 1, which cuts worker 0's two-sender task into two
+/// sub-jobs with separate staging buffers — the merge must replay them in
+/// sub-range order or the constant flips.
+#[test]
+fn exchange_and_substaging_preserve_source_order() {
+    // h0 = 1, h1 = 1*31 + 3 = 34, h2 = 34*31 + 2 = 1056.
+    const WANT: u64 = (31 + 3) * 31 + 2;
+    for threads in [1usize, 2] {
+        for sched in [Sched::Static, Sched::Stealing] {
+            for split in [Split::Off, Split::MaxTaskVertices(1), Split::Adaptive] {
+                let mut eng = Engine::new(OrderHash, Cluster::new(2), 4)
+                    .threads(threads)
+                    .scheduler(sched)
+                    .split(split);
+                let out = eng.run_one(()).out;
+                assert_eq!(
+                    out, WANT,
+                    "threads={threads} sched={sched:?} split={split:?} \
+                     delivered out of source order"
+                );
+            }
+        }
+    }
+}
+
+/// Split sweep on the partition the sub-lane split exists for: the
+/// mega-hub graph concentrates one vertex's whole blast radius on worker
+/// 0 as a single compute task, so `MaxTaskVertices(50)` reliably cuts it
+/// into sub-jobs. Serial, lane-granular and sub-split runs must return
+/// bit-identical outputs and match the BFS oracle — and the split path
+/// must actually have engaged, so this can never silently test nothing.
+#[test]
+fn split_choice_never_changes_outputs() {
+    let n = 3_000;
+    let g = gen::mega_hub(n, 8, 5, 9301);
+    let queries = gen::random_pairs(n, 8, 9302);
+    let mut base: Option<Vec<Option<u32>>> = None;
+    let mut subjobs = 0u64;
+    for split in [Split::Off, Split::MaxTaskVertices(50), Split::Adaptive] {
+        for threads in [1usize, 4] {
+            let mut eng = Engine::new(Bfs::new(&g), Cluster::new(8), n)
+                .capacity(8)
+                .threads(threads)
+                .scheduler(Sched::Stealing)
+                .split(split);
+            let ids: Vec<_> = queries.iter().map(|&q| eng.submit(q)).collect();
+            eng.run_until_idle();
+            subjobs += eng.metrics().subjobs_executed;
+            let outs: Vec<Option<u32>> = ids
+                .iter()
+                .map(|id| {
+                    eng.results()
+                        .iter()
+                        .find(|r| r.qid == *id)
+                        .expect("query completed")
+                        .out
+                })
+                .collect();
+            match &base {
+                None => base = Some(outs),
+                Some(b) => assert_eq!(
+                    &outs, b,
+                    "split={split:?} threads={threads} changed query outputs"
+                ),
+            }
+        }
+    }
+    assert!(subjobs > 0, "the sweep never executed a sub-job");
     let outs = base.unwrap();
     for (i, &(s, t)) in queries.iter().enumerate() {
         let want = ppsp_oracle::bfs_dist(&g, s, t);

@@ -200,6 +200,48 @@ fn run_one_drains_its_result_and_metrics_count_completions() {
 }
 
 #[test]
+fn reset_metrics_isolates_sessions() {
+    // Regression: scheduler counters (jobs_executed / steals, and the
+    // sub-lane split's subjobs_executed) are per-`WorkerPool::run` batch
+    // and only ever accumulate in `EngineMetrics`, so a long-lived engine
+    // serving one `run_one` session after another reports the SUM of all
+    // sessions unless the caller can reset between them.
+    let g = gen::twitter_like(800, 5, 218);
+    let queries = gen::random_pairs(800, 4, 219);
+    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), 800)
+        .capacity(4)
+        .threads(4);
+
+    let _ = eng.run_one(queries[0]);
+    let first_jobs = eng.metrics().jobs_executed();
+    assert!(first_jobs > 0, "a threaded run must dispatch pool jobs");
+
+    // Without a reset, the second session reads the first one's totals.
+    let _ = eng.run_one(queries[1]);
+    assert!(eng.metrics().jobs_executed() > first_jobs);
+
+    // With a reset, counters reflect exactly one session again.
+    eng.reset_metrics();
+    assert_eq!(eng.metrics().jobs_executed(), 0);
+    assert_eq!(eng.metrics().steals(), 0);
+    assert_eq!(eng.metrics().super_rounds, 0);
+    assert_eq!(eng.metrics().queries_completed, 0);
+    let r = eng.run_one(queries[2]);
+    let want = oracle::bfs_dist(&g, queries[2].0, queries[2].1);
+    assert_eq!(r.out, (want != UNREACHED).then_some(want));
+    assert_eq!(
+        eng.metrics().queries_completed, 1,
+        "post-reset counters must be session-sized, not lifetime-sized"
+    );
+    assert!(eng.metrics().jobs_executed() > 0);
+    assert!(eng.metrics().super_rounds > 0);
+    // The simulated clock is engine state, not a counter: it must survive
+    // the reset and keep sim_time in sync.
+    assert!(eng.sim_time() > 0.0);
+    assert!((eng.metrics().sim_time - eng.sim_time()).abs() < 1e-12);
+}
+
+#[test]
 fn interleaved_submission_works() {
     // Queries submitted while others are in flight join later super-rounds.
     let g = gen::twitter_like(600, 4, 213);

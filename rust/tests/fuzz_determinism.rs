@@ -1,0 +1,178 @@
+//! Randomized determinism fuzzer for the sub-lane split engine.
+//!
+//! The hand-written determinism suite sweeps a fixed grid; this fuzzer
+//! drives the same guarantee through ~100 *random* corners: a seeded
+//! `util::Rng` generates random graphs (four structural families,
+//! including the pathological mega-hub) × random query batches × random
+//! engine configurations `{threads, workers, capacity, Sched, Split}`,
+//! and every configuration's `QueryResult::out` vector must be
+//! bit-identical to the serial reference run (`threads = 1`, static
+//! scheduler, splitting off). On a mismatch the failing case seed and
+//! configuration are printed, so any regression reproduces with a
+//! one-line test.
+//!
+//! `QUEGEL_BENCH_SMOKE=1` shrinks the case count for the CI smoke lane.
+//! The split threshold is deliberately drawn small, so the sub-job path
+//! engages even on fuzz-sized graphs — asserted at the end, to make sure
+//! the fuzz can never silently degenerate into testing the unsplit path.
+
+use quegel::apps::ppsp::{Bfs, BiBfs};
+use quegel::coordinator::{Engine, Sched, Split};
+use quegel::graph::{gen, Graph};
+use quegel::network::Cluster;
+use quegel::util::Rng;
+use quegel::vertex::QueryApp;
+
+/// One random engine configuration of a fuzz case.
+#[derive(Debug, Clone, Copy)]
+struct Config {
+    threads: usize,
+    workers: usize,
+    capacity: usize,
+    sched: Sched,
+    split: Split,
+}
+
+fn random_config(rng: &mut Rng) -> Config {
+    let sched = if rng.chance(0.3) {
+        Sched::Static
+    } else {
+        Sched::Stealing
+    };
+    let split = match rng.below(4) {
+        0 => Split::Off,
+        1 => Split::Adaptive,
+        // Small fixed thresholds, so fuzz-sized frontiers really split.
+        2 => Split::MaxTaskVertices(1 + rng.below_usize(48)),
+        _ => Split::MaxTaskVertices(64 + rng.below_usize(256)),
+    };
+    Config {
+        threads: [2, 3, 4, 8][rng.below_usize(4)],
+        workers: 1 + rng.below_usize(8),
+        capacity: [1, 2, 8][rng.below_usize(3)],
+        sched,
+        split,
+    }
+}
+
+/// Random graph from one of four structural families. Returns the graph
+/// and a short description for failure messages.
+fn random_graph(rng: &mut Rng, seed: u64) -> (Graph, String) {
+    let n = 300 + rng.below_usize(900);
+    match rng.below(4) {
+        0 => {
+            let deg = 3 + rng.below_usize(5);
+            (
+                gen::twitter_like(n, deg, seed),
+                format!("twitter_like({n}, {deg}, {seed})"),
+            )
+        }
+        1 => {
+            let hub = 8 + rng.below_usize(24);
+            let base = 2 + rng.below_usize(4);
+            (
+                gen::hub_concentrated(n, 8, hub, base, seed),
+                format!("hub_concentrated({n}, 8, {hub}, {base}, {seed})"),
+            )
+        }
+        2 => {
+            let spoke = 3 + rng.below_usize(8);
+            (
+                gen::mega_hub(n, 8, spoke, seed),
+                format!("mega_hub({n}, 8, {spoke}, {seed})"),
+            )
+        }
+        _ => {
+            let layers = 5 + rng.below_usize(15);
+            let deg = 2 + rng.below_usize(4);
+            (
+                gen::webuk_like(n, layers, deg, seed),
+                format!("webuk_like({n}, {layers}, {deg}, {seed})"),
+            )
+        }
+    }
+}
+
+/// Run one batch under one configuration, returning outputs in submission
+/// order plus whether the sub-job path engaged.
+fn run_batch<A, F>(mk: F, n: usize, queries: &[A::Query], cfg: Config) -> (Vec<A::Out>, bool)
+where
+    A: QueryApp,
+    A::Out: Clone,
+    F: FnOnce() -> A,
+{
+    let mut eng = Engine::new(mk(), Cluster::new(cfg.workers), n)
+        .capacity(cfg.capacity)
+        .threads(cfg.threads)
+        .scheduler(cfg.sched)
+        .split(cfg.split);
+    let ids: Vec<_> = queries.iter().map(|q| eng.submit(q.clone())).collect();
+    eng.run_until_idle();
+    let outs = ids
+        .iter()
+        .map(|id| {
+            eng.results()
+                .iter()
+                .find(|r| r.qid == *id)
+                .expect("query completed")
+                .out
+                .clone()
+        })
+        .collect();
+    (outs, eng.metrics().subjobs_executed > 0)
+}
+
+#[test]
+fn randomized_matrix_is_bit_identical_to_serial() {
+    const MASTER_SEED: u64 = 0x5eed_f022;
+    let smoke = std::env::var("QUEGEL_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    let cases = if smoke { 12 } else { 100 };
+    let configs_per_case = 3;
+    let serial = Config {
+        threads: 1,
+        workers: 4,
+        capacity: 4,
+        sched: Sched::Static,
+        split: Split::Off,
+    };
+
+    let mut split_engaged = false;
+    for case in 0..cases {
+        let case_seed = MASTER_SEED.wrapping_add(1 + case as u64 * 0x9e37);
+        let mut rng = Rng::new(case_seed);
+        let (mut g, desc) = random_graph(&mut rng, case_seed);
+        let n = g.num_vertices();
+        let nq = 1 + rng.below_usize(6);
+        let queries = gen::random_pairs(n, nq, case_seed ^ 0x51ee7);
+        let use_bibfs = rng.chance(0.4);
+        if use_bibfs {
+            g.ensure_in_edges();
+        }
+
+        let (base, _) = if use_bibfs {
+            run_batch(|| BiBfs::new(&g), n, &queries, serial)
+        } else {
+            run_batch(|| Bfs::new(&g), n, &queries, serial)
+        };
+        for ci in 0..configs_per_case {
+            let cfg = random_config(&mut rng);
+            let (outs, engaged) = if use_bibfs {
+                run_batch(|| BiBfs::new(&g), n, &queries, cfg)
+            } else {
+                run_batch(|| Bfs::new(&g), n, &queries, cfg)
+            };
+            split_engaged |= engaged;
+            assert_eq!(
+                outs, base,
+                "fuzz case {case} (seed {case_seed:#x}, {desc}, \
+                 bibfs={use_bibfs}) config {ci} {cfg:?} changed outputs \
+                 vs the serial reference"
+            );
+        }
+    }
+    assert!(
+        split_engaged,
+        "no fuzz configuration ever executed a sub-job: the fuzzer is not \
+         exercising the split path"
+    );
+}

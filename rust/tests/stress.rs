@@ -6,7 +6,7 @@
 //! a single output bit.
 
 use quegel::apps::ppsp::{oracle, Bfs, UNREACHED};
-use quegel::coordinator::Engine;
+use quegel::coordinator::{Engine, Sched};
 use quegel::graph::gen;
 use quegel::network::Cluster;
 
@@ -34,9 +34,14 @@ fn work_stealing_absorbs_pathological_lane_skew() {
     let g = gen::hub_concentrated(N, WORKERS, 64, 2, 4242);
     let queries = gen::random_pairs(N, 24, 4243);
     let run = |threads: usize| {
+        // Explicitly a WORK-STEALING test: must not silently flip to the
+        // static baseline under CI's QUEGEL_TEST_SCHED=static matrix lane
+        // (static chunks only steal on a startup race, so the steals > 0
+        // assertion would become a lottery there).
         let mut eng = Engine::new(Bfs::new(&g), Cluster::new(WORKERS), N)
             .capacity(8)
-            .threads(threads);
+            .threads(threads)
+            .scheduler(Sched::Stealing);
         let ids: Vec<_> = queries.iter().map(|&q| eng.submit(q)).collect();
         eng.run_until_idle();
         let outs: Vec<Option<u32>> = ids
