@@ -1,0 +1,221 @@
+#!/usr/bin/env python3
+"""Schema + regression-gate validator for the BENCH_*.json perf trajectory.
+
+The perf bench (``cd rust && cargo bench -- perf --json``) emits one JSON
+file per PR milestone — BENCH_pr2.json (phase thread sweep), BENCH_pr3.json
+(static-vs-stealing skew sweep), BENCH_pr4.json (sub-lane split sweep) and
+BENCH_pr5.json (edge-level split sweep). This script is the single source
+of truth for their shape, shared by the ``bench-smoke`` CI lane and local
+runs:
+
+    python3 ci/validate_bench.py rust/BENCH_*.json          # schema checks
+    python3 ci/validate_bench.py --gate rust/BENCH_*.json   # + speedup floors
+
+``--gate`` additionally compares every headline speedup found in the files
+against its floor in ``ci/bench_floors.json`` and fails if any committed
+headline fell below it. Set ``QUEGEL_BENCH_NO_GATE=1`` to downgrade gate
+failures to warnings — CI smoke runs are single-rep measurements on shared
+runners and their absolute numbers are not trajectory-grade.
+
+Exit status: 0 on success, 1 on any schema failure (always) or gate
+failure (unless downgraded).
+"""
+
+import json
+import os
+import sys
+
+FLOORS_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_floors.json")
+
+PHASE_ROW_KEYS = (
+    "threads",
+    "compute_s",
+    "exchange_s",
+    "barrier_s",
+    "wall_s",
+    "compute_speedup_vs_t1",
+    "exchange_barrier_speedup_vs_t1",
+)
+
+
+def fail(msg):
+    raise AssertionError(msg)
+
+
+def require_keys(row, keys, ctx):
+    for k in keys:
+        if k not in row:
+            fail(f"{ctx}: row missing {k!r}: {row}")
+
+
+def check_pr2(doc, name):
+    workloads = doc.get("workloads")
+    if not isinstance(workloads, dict) or not workloads:
+        fail(f"{name}: missing/empty 'workloads'")
+    for wname, rows in workloads.items():
+        if not rows:
+            fail(f"{name}: workload {wname!r} has no rows")
+        for row in rows:
+            require_keys(row, PHASE_ROW_KEYS, f"{name}:{wname}")
+    print(f"{name} ok: {len(workloads)} workloads")
+
+
+def check_pr3(doc, name):
+    rows = doc.get("rows") or fail(f"{name}: skew sweep produced no rows")
+    for row in rows:
+        require_keys(
+            row,
+            (
+                "sched",
+                "threads",
+                "compute_s",
+                "exchange_s",
+                "barrier_s",
+                "phase_wall_s",
+                "jobs_executed",
+                "steals",
+                "max_lane_imbalance",
+            ),
+            name,
+        )
+    if {r["sched"] for r in rows} != {"static", "stealing"}:
+        fail(f"{name}: rows must cover both schedulers")
+    print(
+        f"{name} ok: {len(rows)} rows; stealing vs static at 4 threads:",
+        doc["stealing_vs_static_phase_speedup_t4"],
+    )
+
+
+def check_pr4(doc, name):
+    rows = doc.get("rows") or fail(f"{name}: split sweep produced no rows")
+    for row in rows:
+        require_keys(
+            row,
+            (
+                "split",
+                "threads",
+                "compute_s",
+                "exchange_s",
+                "barrier_s",
+                "subjobs_executed",
+                "tasks_split",
+                "max_lane_imbalance",
+                "max_post_split_imbalance",
+            ),
+            name,
+        )
+    if {r["split"] for r in rows} != {"off", "adaptive"}:
+        fail(f"{name}: rows must cover split off and adaptive")
+    if not any(r["split"] == "adaptive" and r["subjobs_executed"] > 0 for r in rows):
+        fail(f"{name}: split-on rows never executed a sub-job")
+    if not all(r["subjobs_executed"] == 0 for r in rows if r["split"] == "off"):
+        fail(f"{name}: split-off rows must not execute sub-jobs")
+    print(
+        f"{name} ok: {len(rows)} rows; split vs off at 4 threads:",
+        doc["split_vs_off_compute_speedup_t4"],
+    )
+
+
+def check_pr5(doc, name):
+    rows = doc.get("rows") or fail(f"{name}: edge-split sweep produced no rows")
+    for row in rows:
+        require_keys(
+            row,
+            (
+                "edge_split",
+                "threads",
+                "compute_s",
+                "exchange_s",
+                "barrier_s",
+                "edge_ranges_split",
+                "max_edge_task",
+                "subjobs_executed",
+                "max_lane_imbalance",
+                "max_post_split_imbalance",
+            ),
+            name,
+        )
+    if {r["edge_split"] for r in rows} != {"off", "adaptive"}:
+        fail(f"{name}: rows must cover edge split off and adaptive")
+    if not any(r["edge_split"] == "adaptive" and r["edge_ranges_split"] > 0 for r in rows):
+        fail(f"{name}: edge-split-on rows never executed an edge-range job")
+    if not all(r["edge_ranges_split"] == 0 for r in rows if r["edge_split"] == "off"):
+        fail(f"{name}: edge-split-off rows must not execute edge-range jobs")
+    # The mono-hub fan is the whole graph minus one vertex; a tiny
+    # max_edge_task means the bench silently stopped generating the
+    # pathology it exists to measure.
+    if not any(r["max_edge_task"] >= doc.get("n", 0) - 1 for r in rows):
+        fail(f"{name}: no row saw the full mono-hub fanout (n={doc.get('n')})")
+    print(
+        f"{name} ok: {len(rows)} rows; edge split vs off at 4 threads:",
+        doc["edge_split_vs_off_compute_speedup_t4"],
+    )
+
+
+CHECKERS = {
+    "perf_engine": check_pr2,
+    "perf_skew_sched": check_pr3,
+    "perf_sublane_split": check_pr4,
+    "perf_edge_split": check_pr5,
+}
+
+
+def gate(docs):
+    """Compare every headline found in `docs` against its committed floor."""
+    with open(FLOORS_PATH) as f:
+        floors = {k: v for k, v in json.load(f).items() if not k.startswith("_")}
+    advisory = os.environ.get("QUEGEL_BENCH_NO_GATE", "") not in ("", "0")
+    failures = []
+    checked = 0
+    for name, doc in docs:
+        for key, floor in floors.items():
+            if key not in doc:
+                continue
+            checked += 1
+            value = doc[key]
+            status = "ok" if value >= floor else "BELOW FLOOR"
+            print(f"gate: {name}: {key} = {value:.3f} (floor {floor}) {status}")
+            if value < floor:
+                failures.append(f"{name}: {key} = {value:.3f} < floor {floor}")
+    if checked == 0:
+        failures.append("gate: no headline speedup found in any input file")
+    if failures:
+        for f_ in failures:
+            print(f"gate failure: {f_}", file=sys.stderr)
+        if advisory:
+            print("QUEGEL_BENCH_NO_GATE set: gate failures are advisory (smoke noise)")
+            return True
+        return False
+    return True
+
+
+def main(argv):
+    args = [a for a in argv if a != "--gate"]
+    run_gate = "--gate" in argv
+    if not args:
+        print(__doc__)
+        print("error: no BENCH_*.json files given", file=sys.stderr)
+        return 1
+    docs = []
+    ok = True
+    for path in args:
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            bench = doc.get("bench")
+            checker = CHECKERS.get(bench)
+            if checker is None:
+                fail(f"{name}: unknown bench kind {bench!r}")
+            checker(doc, name)
+            docs.append((name, doc))
+        except (AssertionError, OSError, json.JSONDecodeError, KeyError) as e:
+            print(f"schema failure: {name}: {e}", file=sys.stderr)
+            ok = False
+    if ok and run_gate:
+        ok = gate(docs)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

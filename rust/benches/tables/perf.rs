@@ -17,19 +17,26 @@
 //!   (`gen::mega_hub`: one vertex's entire blast radius lands on worker 0
 //!   as ONE compute task) with sub-lane splitting off vs on, both under
 //!   the stealing scheduler — isolating exactly what splitting the task's
-//!   vertex range into sub-jobs buys over lane-granular stealing.
+//!   vertex range into sub-jobs buys over lane-granular stealing;
+//! * the **edge-split sweep** runs BFS over the mono-hub graph
+//!   (`gen::mono_hub`: ONE vertex owns an out-edge to everyone, so a
+//!   single `compute()` call stages the whole fanout) with edge-level
+//!   splitting off vs on — isolating what parking the fan and staging its
+//!   contiguous edge ranges as pool jobs buys over every coarser
+//!   granularity.
 //!
 //! With `--json`, the same numbers are written to `BENCH_pr2.json`
-//! (thread sweep), `BENCH_pr3.json` (skew sweep) and `BENCH_pr4.json`
-//! (split sweep) so the committed perf trajectory is machine-readable;
-//! CI's `bench-smoke` lane archives them as workflow artifacts. Setting
-//! `QUEGEL_BENCH_SMOKE=1` shrinks every input so the whole module runs in
-//! CI-smoke time (the JSON shape is unchanged; absolute numbers from
-//! smoke runs are not trajectory-grade).
+//! (thread sweep), `BENCH_pr3.json` (skew sweep), `BENCH_pr4.json`
+//! (split sweep) and `BENCH_pr5.json` (edge-split sweep) so the committed
+//! perf trajectory is machine-readable; CI's `bench-smoke` lane validates
+//! them with `ci/validate_bench.py` and archives them as workflow
+//! artifacts. Setting `QUEGEL_BENCH_SMOKE=1` shrinks every input so the
+//! whole module runs in CI-smoke time (the JSON shape is unchanged;
+//! absolute numbers from smoke runs are not trajectory-grade).
 
 use quegel::apps::ppsp::{Bfs, BiBfs};
 use quegel::apps::xml::{self, SlcaNaive, XmlGenConfig};
-use quegel::coordinator::{Engine, Sched, Split};
+use quegel::coordinator::{EdgeSplit, Engine, Sched, Split};
 use quegel::graph::{gen, Graph};
 use quegel::metrics::Table;
 use quegel::network::Cluster;
@@ -84,13 +91,15 @@ where
             let mut barriers = Vec::new();
             let mut walls = Vec::new();
             for _ in 0..reps {
-                // Split::Off keeps this sweep measuring what it always
-                // has (thread scaling of the PR 2 phase pipeline), not
-                // the PR 4 sub-lane split — BENCH_pr4.json owns that.
+                // Split::Off + EdgeSplit::Off keep this sweep measuring
+                // what it always has (thread scaling of the PR 2 phase
+                // pipeline), not the PR 4/PR 5 splits — BENCH_pr4.json
+                // and BENCH_pr5.json own those.
                 let mut eng = Engine::new(mk(), Cluster::new(workers), n)
                     .capacity(8)
                     .threads(threads)
-                    .split(Split::Off);
+                    .split(Split::Off)
+                    .edge_split(EdgeSplit::Off);
                 for q in queries {
                     eng.submit(q.clone());
                 }
@@ -208,16 +217,18 @@ fn skew_rows(g: &Graph, workers: usize, queries: &[(u32, u32)], reps: usize) -> 
             let mut jobs = 0;
             let mut imbalance = 0.0;
             for _ in 0..reps {
-                // Split::Off: this sweep isolates static-vs-stealing lane
-                // scheduling (the PR 3 trajectory); with the engine's new
-                // Split::Adaptive default the stealing rows would silently
-                // measure stealing + sub-splitting instead — and BENCH_pr4
-                // is premised on split-off being exactly these numbers.
+                // Split::Off + EdgeSplit::Off: this sweep isolates
+                // static-vs-stealing lane scheduling (the PR 3
+                // trajectory); with the engine's Adaptive defaults the
+                // stealing rows would silently measure stealing +
+                // splitting instead — and BENCH_pr4 is premised on
+                // split-off being exactly these numbers.
                 let mut eng = Engine::new(Bfs::new(g), Cluster::new(workers), g.num_vertices())
                     .capacity(8)
                     .threads(threads)
                     .scheduler(sched)
-                    .split(Split::Off);
+                    .split(Split::Off)
+                    .edge_split(EdgeSplit::Off);
                 for &q in queries {
                     eng.submit(q);
                 }
@@ -330,11 +341,16 @@ fn split_rows(
             let mut lane_imbalance = 0.0;
             let mut post_split_imbalance = 0.0;
             for _ in 0..reps {
+                // EdgeSplit::Off: the PR 4 sweep isolates vertex-range
+                // splitting of a heavy receiver batch; letting the new
+                // edge split park the mega-hub's fanout would shrink the
+                // very serialization this sweep's off-rows measure.
                 let mut eng = Engine::new(Bfs::new(g), Cluster::new(workers), g.num_vertices())
                     .capacity(8)
                     .threads(threads)
                     .scheduler(Sched::Stealing)
-                    .split(split);
+                    .split(split)
+                    .edge_split(EdgeSplit::Off);
                 for &q in queries {
                     eng.submit(q);
                 }
@@ -427,6 +443,161 @@ fn json_split_rows(rows: &[SplitRow]) -> String {
                 r.barrier,
                 r.subjobs,
                 r.tasks_split,
+                r.lane_imbalance,
+                r.post_split_imbalance,
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
+/// One (edge-split, threads) configuration of the edge-level split sweep
+/// on the single-vertex-fanout graph.
+struct EdgeRow {
+    edge: EdgeSplit,
+    threads: usize,
+    compute: f64,
+    exchange: f64,
+    barrier: f64,
+    edge_ranges: u64,
+    max_edge_task: u64,
+    subjobs: u64,
+    lane_imbalance: f64,
+    post_split_imbalance: f64,
+}
+
+fn edge_name(e: EdgeSplit) -> &'static str {
+    match e {
+        EdgeSplit::Off => "off",
+        EdgeSplit::Adaptive => "adaptive",
+        EdgeSplit::MaxFanout(_) => "fixed",
+    }
+}
+
+/// BFS batch (C = 8) over the mono-hub graph, swept over edge-split ×
+/// threads, always under `Sched::Stealing` + `Split::Adaptive` — with the
+/// edge split off, the hub's `compute()` staging its whole fanout is ONE
+/// indivisible work item no vertex-range split can cut, so the comparison
+/// isolates exactly what edge-range splitting buys.
+fn edge_rows(
+    g: &Graph,
+    workers: usize,
+    queries: &[(u32, u32)],
+    reps: usize,
+) -> Vec<EdgeRow> {
+    let mut rows = Vec::new();
+    for edge in [EdgeSplit::Off, EdgeSplit::Adaptive] {
+        for &threads in &THREAD_SWEEP {
+            let mut computes = Vec::new();
+            let mut exchanges = Vec::new();
+            let mut barriers = Vec::new();
+            let mut edge_ranges = 0;
+            let mut max_edge_task = 0;
+            let mut subjobs = 0;
+            let mut lane_imbalance = 0.0;
+            let mut post_split_imbalance = 0.0;
+            for _ in 0..reps {
+                let mut eng = Engine::new(Bfs::new(g), Cluster::new(workers), g.num_vertices())
+                    .capacity(8)
+                    .threads(threads)
+                    .scheduler(Sched::Stealing)
+                    .split(Split::Adaptive)
+                    .edge_split(edge);
+                for &q in queries {
+                    eng.submit(q);
+                }
+                eng.run_until_idle();
+                computes.push(eng.metrics().compute_time);
+                exchanges.push(eng.metrics().exchange_time);
+                barriers.push(eng.metrics().barrier_time);
+                edge_ranges = eng.metrics().edge_ranges_split;
+                max_edge_task = eng.metrics().max_edge_task;
+                subjobs = eng.metrics().subjobs_executed;
+                lane_imbalance = eng.metrics().max_lane_imbalance;
+                post_split_imbalance = eng.metrics().max_post_split_imbalance;
+            }
+            rows.push(EdgeRow {
+                edge,
+                threads,
+                compute: median(computes),
+                exchange: median(exchanges),
+                barrier: median(barriers),
+                edge_ranges,
+                max_edge_task,
+                subjobs,
+                lane_imbalance,
+                post_split_imbalance,
+            });
+        }
+    }
+    rows
+}
+
+/// Compute-wall speedup of edge-split-on over edge-split-off at the same
+/// threads — the quantity the ≥1.25× mono-hub target is on.
+fn edge_speedup(rows: &[EdgeRow], threads: usize) -> f64 {
+    let compute = |edge: EdgeSplit| {
+        rows.iter()
+            .find(|r| r.edge == edge && r.threads == threads)
+            .map(|r| r.compute)
+            .unwrap_or(f64::NAN)
+    };
+    compute(EdgeSplit::Off) / compute(EdgeSplit::Adaptive)
+}
+
+fn print_edge_table(name: &str, rows: &[EdgeRow]) {
+    let mut t = Table::new(vec![
+        "edge split",
+        "threads",
+        "compute",
+        "exchange",
+        "barrier",
+        "edge ranges",
+        "max fan",
+        "post-split imbal",
+        "vs off",
+    ]);
+    for r in rows {
+        let vs = match r.edge {
+            EdgeSplit::Off => "baseline".to_string(),
+            _ => format!("{:.2}x", edge_speedup(rows, r.threads)),
+        };
+        t.row(vec![
+            edge_name(r.edge).to_string(),
+            r.threads.to_string(),
+            format!("{:.1} ms", r.compute * 1e3),
+            format!("{:.1} ms", r.exchange * 1e3),
+            format!("{:.1} ms", r.barrier * 1e3),
+            r.edge_ranges.to_string(),
+            r.max_edge_task.to_string(),
+            format!("{:.2}x", r.post_split_imbalance),
+            vs,
+        ]);
+    }
+    println!("[{name}]");
+    println!("{}", t.render());
+}
+
+fn json_edge_rows(rows: &[EdgeRow]) -> String {
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "{{\"edge_split\":\"{}\",\"threads\":{},\"compute_s\":{:.6},",
+                    "\"exchange_s\":{:.6},\"barrier_s\":{:.6},",
+                    "\"edge_ranges_split\":{},\"max_edge_task\":{},",
+                    "\"subjobs_executed\":{},\"max_lane_imbalance\":{:.3},",
+                    "\"max_post_split_imbalance\":{:.3}}}"
+                ),
+                edge_name(r.edge),
+                r.threads,
+                r.compute,
+                r.exchange,
+                r.barrier,
+                r.edge_ranges,
+                r.max_edge_task,
+                r.subjobs,
                 r.lane_imbalance,
                 r.post_split_imbalance,
             )
@@ -586,6 +757,33 @@ pub fn run() {
     println!("split actually engaged. Outputs are bit-identical across the");
     println!("whole table by construction (tests/fuzz_determinism.rs).");
 
+    // --- Edge-level split sweep: the mono-hub graph gives ONE vertex an
+    // out-edge to everyone, so the fan superstep stages ~n messages from
+    // a single compute() call — one indivisible work item for every
+    // earlier splitting granularity. Edge-split-off is PR 4's engine in
+    // full; edge-split-on parks the fan, stages contiguous edge ranges as
+    // pool jobs and folds them back per destination worker.
+    let (eh_n, eh_q) = if smoke { (8_000, 8) } else { (80_000, 48) };
+    let eh_workers = 8;
+    let eh_g = gen::mono_hub(eh_n, 2, 441);
+    let eh_queries = gen::random_pairs(eh_n, eh_q, 442);
+    let edge = edge_rows(&eh_g, eh_workers, &eh_queries, reps);
+    print_edge_table("bfs mono-hub C=8 W=8 (one pathological vertex)", &edge);
+    let edge_headline = edge_speedup(&edge, 4);
+    let edge_row = edge
+        .iter()
+        .find(|r| r.edge == EdgeSplit::Adaptive && r.threads == 4);
+    println!(
+        "max fan {} -> {} edge ranges; edge split vs off compute wall at 4 threads: {:.2}x",
+        edge_row.map(|r| r.max_edge_task).unwrap_or(0),
+        edge_row.map(|r| r.edge_ranges).unwrap_or(0),
+        edge_headline
+    );
+    println!("target: edge splitting >= 1.25x over the unsplit engine at 4");
+    println!("threads on the mono-hub compute wall; edge ranges > 0 shows");
+    println!("the fan actually parked. Outputs are bit-identical across the");
+    println!("whole table by construction (tests/fuzz_determinism.rs).");
+
     if JSON.load(Ordering::Relaxed) {
         let payload = format!(
             concat!(
@@ -641,6 +839,26 @@ pub fn run() {
         match std::fs::write("BENCH_pr4.json", &payload) {
             Ok(()) => println!("wrote BENCH_pr4.json"),
             Err(e) => eprintln!("could not write BENCH_pr4.json: {e}"),
+        }
+        let payload = format!(
+            concat!(
+                "{{\"pr\":5,\"bench\":\"perf_edge_split\",",
+                "\"graph\":\"mono_hub\",\"n\":{},\"workers\":{},",
+                "\"queries\":{},\"threads_swept\":[1,2,4,8],\"reps\":{},",
+                "\"smoke\":{},\"rows\":{},",
+                "\"edge_split_vs_off_compute_speedup_t4\":{:.3}}}\n"
+            ),
+            eh_n,
+            eh_workers,
+            eh_q,
+            reps,
+            smoke,
+            json_edge_rows(&edge),
+            edge_headline,
+        );
+        match std::fs::write("BENCH_pr5.json", &payload) {
+            Ok(()) => println!("wrote BENCH_pr5.json"),
+            Err(e) => eprintln!("could not write BENCH_pr5.json: {e}"),
         }
     }
 }

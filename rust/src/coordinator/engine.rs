@@ -34,23 +34,31 @@
 //! active/receiving vertex count crosses the split threshold — into
 //! contiguous **sub-ranges** of its serial work order, each a pool job of
 //! its own with private staging buffers, actives and aggregator partial
-//! ([`SubBuf`]). A merge pass folds the sub-buffers back **in sub-range
-//! order** through the same `merge_msg` rule the exchange phase uses, so
-//! the per-destination message sequences, the active order and the
-//! aggregator fold are exactly what the unsplit serial loop produces.
-//! This parallelizes *inside* the heaviest shard — the last compute-phase
-//! serialization point the lane-granular scheduler could not touch.
+//! ([`SubBuf`]). And under the [`EdgeSplit`] knob not even one *vertex*
+//! is atomic: a `compute()` call that stages a mega-fanout has its outbox
+//! parked and cut into contiguous **edge ranges**, each staged by its own
+//! pool job into a private insertion-ordered buffer — the second,
+//! (vertex, edge-range) task granularity below the vertex-range sub-job.
+//! A merge dispatch folds everything back through the same `merge_msg`
+//! rule the exchange phase uses — sub-buffers and edge ranges in fixed
+//! serial-stream order, concurrently across destination workers (distinct
+//! destinations own distinct staging maps) — so the per-destination
+//! message sequences, the active order and the aggregator fold are
+//! exactly what the unsplit serial loop produces. This parallelizes
+//! *inside* the heaviest shard and *inside* its heaviest vertex — the
+//! last compute-phase serialization points the lane-granular scheduler
+//! could not touch.
 //!
 //! All three phases are deterministic in the thread count, the scheduler
-//! *and* the split: stealing only changes which thread executes a job,
+//! *and* both splits: stealing only changes which thread executes a job,
 //! never the source-worker delivery order inside a destination's exchange
 //! job nor the worker-order `agg_merge` fold inside a query's fold job;
-//! splitting only re-groups the serial work order into ranges whose
-//! effects are replayed in that same order. So `threads = N` produces
-//! bit-identical `QueryResult`s to `threads = 1` (pinned by
-//! `rust/tests/determinism.rs` and the randomized fuzzer in
+//! splitting (either granularity) only re-groups the serial work order
+//! into ranges whose effects are replayed in that same order. So
+//! `threads = N` produces bit-identical `QueryResult`s to `threads = 1`
+//! (pinned by `rust/tests/determinism.rs` and the randomized fuzzer in
 //! `rust/tests/fuzz_determinism.rs` across threads × workers × capacity ×
-//! scheduler × split).
+//! scheduler × split × edge-split).
 
 use std::collections::hash_map::Entry;
 use std::collections::VecDeque;
@@ -58,7 +66,8 @@ use std::time::Instant;
 
 use super::pool::{Job, RunStats, WorkerPool};
 use super::query::{
-    merge_msg, MsgSlot, Phase, QueryResult, QueryRt, SubBuf, VState, WorkItem, WorkerShard,
+    merge_msg, FanTask, MsgSlot, OrderedStaging, Phase, QueryResult, QueryRt, StageStream,
+    StageUnit, StagingCol, SubBuf, VState, WorkItem, WorkerShard,
 };
 use crate::graph::VertexId;
 use crate::metrics::EngineMetrics;
@@ -82,6 +91,83 @@ const SPLIT_MIN_ITEMS: usize = 256;
 /// [`Split::Adaptive`]: floor on the sub-range size, so a pathological
 /// task is never diced into per-vertex confetti.
 const SPLIT_MIN_SUB: usize = 64;
+
+/// [`EdgeSplit::Adaptive`]: a single `compute()` call must stage at least
+/// this many messages before its outbox is parked for edge-range splitting
+/// (below that, the park/dispatch/fold bookkeeping costs more than the
+/// staging it parallelizes).
+const EDGE_SPLIT_MIN_FAN: usize = 256;
+
+/// [`EdgeSplit::Adaptive`]: floor on the edge-range size, so a mega-fanout
+/// is never diced into per-edge confetti.
+const EDGE_SPLIT_MIN_RANGE: usize = 64;
+
+/// Retention cap on a lane's recycled ordered-staging pool, per
+/// destination worker: enough to reseed every stream segment and a
+/// generously-sized fan's range buffers next round, while bounding what a
+/// long split-heavy session can accumulate (excess buffers are dropped).
+const ORD_POOL_CAP_PER_WORKER: usize = 64;
+
+/// Edge-level splitting policy: what to do when ONE vertex's `compute()`
+/// stages a mega-fanout.
+///
+/// Sub-lane splitting ([`Split`]) cuts a heavy receiver batch into vertex
+/// ranges, but a single hub vertex staging its entire fanout is still one
+/// indivisible work item — the last compute-phase serialization point.
+/// Under this knob, a compute call whose `ctx.send` count crosses the
+/// threshold has its outbox *parked* instead of drained: the engine cuts
+/// it into contiguous **edge ranges**, stages each range as its own pool
+/// job into a private insertion-ordered buffer, and folds the ranges back
+/// in fixed range order through the same `merge_msg` combiner replay the
+/// sub-staging merge and the exchange use — concurrently across
+/// destination workers, since distinct destinations own distinct staging
+/// maps. The concatenated ranges are the exact `ctx.send` order, so the
+/// staging map's insertion history — and with it exchange drain order and
+/// `QueryResult::out` — is bit-identical to an inline drain for every
+/// total or absent combiner. The decision reads only the outbox length
+/// (deterministic app output), never thread scheduling.
+///
+/// Edge splitting engages only under [`Sched::Stealing`] with a pool
+/// (`threads > 1`); the static baseline and serial engines never park.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeSplit {
+    /// Never park a fanout: every outbox drains inline (the PR 4
+    /// behavior, kept as the benchmark baseline).
+    Off,
+    /// Park any compute call staging more than this many messages and cut
+    /// it into ranges of at most this size.
+    MaxFanout(usize),
+    /// The default: park fanouts of at least [`EDGE_SPLIT_MIN_FAN`]
+    /// messages and cut them into roughly `2 × threads` ranges (never
+    /// smaller than [`EDGE_SPLIT_MIN_RANGE`]).
+    Adaptive,
+}
+
+/// Per-round edge-split decision, derived from (`Sched`, `EdgeSplit`,
+/// thread budget) once and copied into every lane.
+#[derive(Debug, Clone, Copy)]
+enum EdgePolicy {
+    Never,
+    /// Park outboxes longer than `.0`, cut at ranges of `.0`.
+    Fixed(usize),
+    /// Aim for `2 × threads` ranges per parked fan.
+    Adaptive { threads: usize },
+}
+
+impl EdgePolicy {
+    /// Edge-range size for a compute call that staged `fan` messages, or
+    /// `None` to drain the outbox inline. Depends only on deterministic
+    /// inputs (the app's send count, the engine configuration), never on
+    /// thread scheduling — and either answer yields identical output.
+    fn fan_range(self, fan: usize) -> Option<usize> {
+        match self {
+            EdgePolicy::Never => None,
+            EdgePolicy::Fixed(n) => (fan > n).then_some(n.max(1)),
+            EdgePolicy::Adaptive { threads } => (fan >= EDGE_SPLIT_MIN_FAN)
+                .then(|| fan.div_ceil(2 * threads.max(1)).max(EDGE_SPLIT_MIN_RANGE)),
+        }
+    }
+}
 
 /// Intra-lane sub-job splitting policy for the compute phase.
 ///
@@ -157,9 +243,16 @@ pub struct Engine<A: QueryApp> {
     sched: Sched,
     /// Intra-lane sub-job splitting policy (compute phase).
     split: Split,
+    /// Edge-level splitting policy for mega-fanout compute calls.
+    edge_split: EdgeSplit,
     /// Compute lane-imbalance ratio of the most recent super-round, the
     /// deterministic signal [`Split::Adaptive`] triggers on.
     last_compute_imbalance: f64,
+    /// Largest single-compute-call fanout seen so far: deterministic
+    /// evidence that edge splitting can engage, used (like the imbalance
+    /// ratio) to decide when threads beyond the worker count are worth
+    /// waking. Monotone — the pool only ever grows.
+    seen_max_fan: u64,
     /// Long-lived pool, created lazily at the first super-round that needs
     /// it and joined when the engine drops (even mid-queue).
     pool: Option<WorkerPool>,
@@ -194,6 +287,13 @@ struct LaneScratch<A: QueryApp> {
     items_pool: Vec<Vec<WorkItem<A>>>,
     /// Recycled scratch for `split_items`' pointer-collection pass.
     ptr_index: FxHashMap<VertexId, usize>,
+    /// Recycled insertion-ordered staging buffers: the staging-column
+    /// replay drains buffers into here; fan-range allocation pops them
+    /// back out, and each sub-buffer's stream re-seeds its private
+    /// segment pool from here between rounds. Capped per round
+    /// ([`ORD_POOL_CAP_PER_WORKER`]) so a long split-heavy session can't
+    /// accumulate buffers without bound.
+    ord_pool: Vec<OrderedStaging<A>>,
 }
 
 impl<A: QueryApp> LaneScratch<A> {
@@ -203,6 +303,7 @@ impl<A: QueryApp> LaneScratch<A> {
             subs: Vec::new(),
             items_pool: Vec::new(),
             ptr_index: FxHashMap::default(),
+            ord_pool: Vec::new(),
         }
     }
 }
@@ -219,8 +320,13 @@ struct Lane<'a, A: QueryApp> {
     scratch: &'a mut LaneScratch<A>,
     /// This round's split decision (copied from the engine).
     policy: SplitPolicy,
+    /// This round's edge-split decision (copied from the engine).
+    edge: EdgePolicy,
     /// Tasks the prep pass decided to split, in task order.
     splits: Vec<SplitPrep<'a, A>>,
+    /// Serial-path tasks that parked at least one mega-fanout, in task
+    /// order: their post-first-fan staging lives in the attached stream.
+    fans: Vec<FanPrep<A>>,
     /// Lane totals (serial tasks + merged sub-jobs).
     compute_calls: u64,
     msg_handled: u64,
@@ -231,9 +337,28 @@ struct Lane<'a, A: QueryApp> {
     serial_calls: u64,
     serial_handled: u64,
     serial_sent: u64,
+    /// Messages the serial path parked into fans (⊆ `serial_sent`); the
+    /// post-split imbalance metric subtracts them, since edge-range jobs
+    /// carry that staging.
+    fanned: u64,
+    /// Largest single `compute()` fanout (ctx.send count) this round,
+    /// across the serial path and (after the merge fold) every sub-job.
+    max_fan: u64,
     /// Per-sub-job loads in simulated seconds, filled by the merge (the
     /// other units of the post-split imbalance metric).
     sub_loads: Vec<f64>,
+}
+
+/// A serial-path task that parked at least one mega-fanout: once the
+/// first fan parks, everything the task stages afterwards is captured in
+/// `stream` (fans as their own units, ordinary messages in segments) so
+/// the staging-column merge can replay it AFTER the fan — preserving the
+/// shard staging map's serial insertion history, whose prefix the task
+/// already wrote directly before the fan appeared.
+struct FanPrep<A: QueryApp> {
+    /// Index into `Lane::tasks` (for the merge to find the shard).
+    task_idx: usize,
+    stream: StageStream<A>,
 }
 
 /// One (query, worker) compute unit inside a lane.
@@ -296,13 +421,69 @@ struct ExchangeTask<A: QueryApp> {
 
 /// Per-(query, worker) context of one compute dispatch, shared by the
 /// serial task loop and the split sub-jobs so the compute contract — Ctx
-/// construction, halt/terminate handling, activation, outbox routing —
-/// lives in exactly one place and the two paths can never diverge.
+/// construction, halt/terminate handling, activation, outbox routing,
+/// mega-fanout parking — lives in exactly one place and the paths can
+/// never diverge.
 struct ComputeCall<'a, A: QueryApp> {
     qid: QueryId,
     step: u64,
     query: &'a A::Query,
     agg_prev: &'a A::Agg,
+    cluster: &'a Cluster,
+    /// This round's edge-split decision (reads only the outbox length).
+    edge: EdgePolicy,
+}
+
+/// Where a compute call's drained outbox lands. The serial paths stage
+/// straight into the shard's staging maps until the first fan parks, then
+/// switch to an overflow [`StageStream`] so everything after the fan can
+/// be replayed after it; sub-jobs always stage into their private stream.
+enum Router<'b, A: QueryApp> {
+    Shard {
+        staged: &'b mut Vec<FxHashMap<VertexId, MsgSlot<A::Msg>>>,
+        overflow: &'b mut Option<StageStream<A>>,
+        fanned: &'b mut u64,
+    },
+    Stream {
+        stream: &'b mut StageStream<A>,
+        fanned: &'b mut u64,
+    },
+}
+
+impl<A: QueryApp> Router<'_, A> {
+    /// Stage one message at the current position of the serial staging
+    /// order (direct map, overflow stream, or sub-stream).
+    fn stage(&mut self, app: &A, cluster: &Cluster, dst: VertexId, msg: A::Msg) {
+        let dw = cluster.worker_of(dst);
+        match self {
+            Router::Shard { staged, overflow, .. } => match overflow {
+                Some(stream) => stream.stage(app, dw, dst, msg),
+                None => match staged[dw].entry(dst) {
+                    Entry::Occupied(mut e) => {
+                        let _ = merge_msg(app, e.get_mut(), msg);
+                    }
+                    Entry::Vacant(e) => {
+                        e.insert(MsgSlot::One(msg));
+                    }
+                },
+            },
+            Router::Stream { stream, .. } => stream.stage(app, dw, dst, msg),
+        }
+    }
+
+    /// Park one mega-fanout at the current position (opening the overflow
+    /// stream on the serial paths' first fan).
+    fn park(&mut self, workers: usize, msgs: Vec<(VertexId, A::Msg)>, range: usize) {
+        let (stream, fanned) = match self {
+            Router::Shard { overflow, fanned, .. } => (
+                overflow.get_or_insert_with(|| StageStream::new(workers)),
+                fanned,
+            ),
+            Router::Stream { stream, fanned } => (&mut **stream, fanned),
+        };
+        **fanned += msgs.len() as u64;
+        stream.park_fan(msgs, range);
+    }
 }
 
 /// Everything one compute call may write: the aggregator partial, the
@@ -318,9 +499,11 @@ struct ComputeSink<'a, A: QueryApp> {
 
 impl<'a, A: QueryApp> ComputeCall<'a, A> {
     /// Run `compute()` for one vertex over in-place state, then route the
-    /// staged outbox through `stage` (which decides where a message lands:
-    /// the shard's staging maps or a sub-job's ordered private buffer).
-    /// Returns `ctx.sent`.
+    /// staged outbox through the router — inline when the fanout is
+    /// ordinary, parked as an edge-splittable [`super::query::FanTask`]
+    /// when it crosses the edge-split threshold (the range-sliced send
+    /// path; either way the eventual staging sequence is the `ctx.send`
+    /// order). Returns `ctx.sent`.
     fn run(
         &self,
         app: &A,
@@ -328,7 +511,7 @@ impl<'a, A: QueryApp> ComputeCall<'a, A> {
         st: &mut VState<A::VQ>,
         msgs: &[A::Msg],
         sink: &mut ComputeSink<'_, A>,
-        mut stage: impl FnMut(VertexId, A::Msg),
+        router: &mut Router<'_, A>,
     ) -> u64 {
         let mut ctx = Ctx {
             app,
@@ -352,28 +535,54 @@ impl<'a, A: QueryApp> ComputeCall<'a, A> {
         if terminate {
             *sink.terminated = true;
         }
-        for (dst, msg) in sink.outbox.drain(..) {
-            stage(dst, msg);
+        if let Some(range) = self.edge.fan_range(sink.outbox.len()) {
+            // Park the whole outbox (the scratch vec regrows; fans are by
+            // definition rare and huge, so the trade is a few reallocs
+            // against parallelizing the entire staging pass).
+            let msgs = std::mem::take(sink.outbox);
+            router.park(self.cluster.workers, msgs, range);
+        } else {
+            for (dst, msg) in sink.outbox.drain(..) {
+                router.stage(app, self.cluster, dst, msg);
+            }
         }
         sent
     }
 }
 
+/// Result of one serially executed (query, worker) compute task.
+struct TaskRun<A: QueryApp> {
+    calls: u64,
+    handled: u64,
+    sent: u64,
+    /// Largest single compute-call fanout of this task.
+    max_fan: u64,
+    /// Messages parked into fans (⊆ `sent`).
+    fanned: u64,
+    /// Post-first-fan staging capture, when a mega-fanout parked.
+    overflow: Option<StageStream<A>>,
+}
+
 /// Execute one (query, worker) compute task serially: the PR 3 per-task
-/// body, now also the below-threshold path of the prep dispatch. Returns
-/// `(compute_calls, msg_handled, sent)`.
+/// body, now also the below-threshold path of the prep dispatch. Stages
+/// straight into the shard's staging maps until (if ever) a mega-fanout
+/// parks; from then on staging is captured in the returned overflow
+/// stream for the staging-column merge to replay in place.
 fn run_task<A: QueryApp>(
     app: &A,
     cluster: &Cluster,
+    edge: EdgePolicy,
     task: &mut Task<'_, A>,
     outbox_scratch: &mut Vec<(VertexId, A::Msg)>,
-) -> (u64, u64, u64) {
+) -> TaskRun<A> {
     let step = task.step;
     let call = ComputeCall {
         qid: task.qid,
         step,
         query: task.query,
         agg_prev: task.agg_prev,
+        cluster,
+        edge,
     };
     // Disjoint borrows of the shard's fields so the hot loop can mutate
     // vertex state IN PLACE while staging messages and aggregating.
@@ -386,72 +595,75 @@ fn run_task<A: QueryApp>(
         terminated,
     } = &mut *task.shard;
 
-    let mut compute_calls: u64 = 0;
-    let mut msg_handled: u64 = 0;
-    let mut sent_total: u64 = 0;
+    let mut out = TaskRun {
+        calls: 0,
+        handled: 0,
+        sent: 0,
+        max_fan: 0,
+        fanned: 0,
+        overflow: None,
+    };
     let inbox_now = std::mem::take(inbox);
     let mut next_active: Vec<VertexId> = Vec::new();
-
-    // One closure runs a compute() call: the shared kernel with this
-    // shard's own buffers as the sink and its staging maps as the target.
-    let mut run_one = |v: VertexId,
-                       st: &mut VState<A::VQ>,
-                       msgs: &[A::Msg],
-                       next_active: &mut Vec<VertexId>|
-     -> u64 {
-        let mut sink = ComputeSink {
-            agg: &mut *agg_round,
-            outbox: &mut *outbox_scratch,
-            next_active,
-            terminated: &mut *terminated,
+    let mut fanned = 0u64;
+    let mut overflow: Option<StageStream<A>> = None;
+    {
+        let mut router = Router::Shard {
+            staged,
+            overflow: &mut overflow,
+            fanned: &mut fanned,
         };
-        call.run(app, v, st, msgs, &mut sink, |dst, msg| {
-            let dw = cluster.worker_of(dst);
-            match staged[dw].entry(dst) {
-                Entry::Occupied(mut e) => {
-                    let _ = merge_msg(app, e.get_mut(), msg);
-                }
-                Entry::Vacant(e) => {
-                    e.insert(MsgSlot::One(msg));
-                }
-            }
-        })
-    };
-
-    // Process message receivers first, then still-active vertices that
-    // got no messages.
-    for (&v, msgs) in inbox_now.iter() {
-        let st = vstate.entry(v).or_insert_with(|| VState {
-            vq: app.init_value(call.query, v),
-            halted: false,
-            computed_step: 0,
-        });
-        st.halted = false;
-        st.computed_step = step;
-        msg_handled += msgs.len() as u64;
-        compute_calls += 1;
-        sent_total += run_one(v, st, msgs.as_slice(), &mut next_active);
-    }
-    // Active vertices without messages.
-    let prev_active = std::mem::take(active);
-    for v in prev_active {
-        let st = vstate.get_mut(&v).expect("active implies state");
-        if st.halted || st.computed_step == step {
-            continue;
+        // Process message receivers first, then still-active vertices
+        // that got no messages.
+        for (&v, msgs) in inbox_now.iter() {
+            let st = vstate.entry(v).or_insert_with(|| VState {
+                vq: app.init_value(call.query, v),
+                halted: false,
+                computed_step: 0,
+            });
+            st.halted = false;
+            st.computed_step = step;
+            out.handled += msgs.len() as u64;
+            out.calls += 1;
+            let mut sink = ComputeSink {
+                agg: &mut *agg_round,
+                outbox: &mut *outbox_scratch,
+                next_active: &mut next_active,
+                terminated: &mut *terminated,
+            };
+            let s = call.run(app, v, st, msgs.as_slice(), &mut sink, &mut router);
+            out.max_fan = out.max_fan.max(s);
+            out.sent += s;
         }
-        st.computed_step = step;
-        compute_calls += 1;
-        sent_total += run_one(v, st, &[], &mut next_active);
+        // Active vertices without messages.
+        let prev_active = std::mem::take(active);
+        for v in prev_active {
+            let st = vstate.get_mut(&v).expect("active implies state");
+            if st.halted || st.computed_step == step {
+                continue;
+            }
+            st.computed_step = step;
+            out.calls += 1;
+            let mut sink = ComputeSink {
+                agg: &mut *agg_round,
+                outbox: &mut *outbox_scratch,
+                next_active: &mut next_active,
+                terminated: &mut *terminated,
+            };
+            let s = call.run(app, v, st, &[], &mut sink, &mut router);
+            out.max_fan = out.max_fan.max(s);
+            out.sent += s;
+        }
     }
-    drop(run_one);
     // Recycle the inbox map's capacity for the next round (the exchange
     // phase refills it).
     let mut inbox_now = inbox_now;
     inbox_now.clear();
     *inbox = inbox_now;
     *active = next_active;
-
-    (compute_calls, msg_handled, sent_total)
+    out.fanned = fanned;
+    out.overflow = overflow;
+    out
 }
 
 /// Execute an already-transposed work-item list serially against the
@@ -460,20 +672,22 @@ fn run_task<A: QueryApp>(
 /// turn out to fit in one sub-range after transposition — dispatching it
 /// as a sub-job would parallelize nothing and pay the merge replay for
 /// free. Items are in serial order and stage straight into the shard's
-/// own buffers, so this is byte-for-byte the serial path's behavior.
-/// Returns `(compute_calls, msg_handled, sent)`.
+/// own buffers (mega-fanouts may still park, exactly like `run_task`).
 fn run_items_inline<A: QueryApp>(
     app: &A,
     cluster: &Cluster,
+    edge: EdgePolicy,
     task: &mut Task<'_, A>,
     items: &mut [WorkItem<A>],
     outbox_scratch: &mut Vec<(VertexId, A::Msg)>,
-) -> (u64, u64, u64) {
+) -> TaskRun<A> {
     let call = ComputeCall {
         qid: task.qid,
         step: task.step,
         query: task.query,
         agg_prev: task.agg_prev,
+        cluster,
+        edge,
     };
     // `vstate` stays untouched (items hold pointers into it); every other
     // shard field is the direct sink, exactly like the serial loop.
@@ -484,36 +698,45 @@ fn run_items_inline<A: QueryApp>(
         terminated,
         ..
     } = &mut *task.shard;
-    let mut compute_calls: u64 = 0;
-    let mut msg_handled: u64 = 0;
-    let mut sent_total: u64 = 0;
-    for item in items.iter_mut() {
-        // SAFETY: same argument as `run_sub` — the pointer was collected
-        // after the last vstate insertion, the map's structure is frozen,
-        // and this inline loop is the only live access to the slot.
-        let st: &mut VState<A::VQ> = unsafe { &mut *item.st.0 };
-        let msgs: &[A::Msg] = item.msgs.as_ref().map_or(&[], |s| s.as_slice());
-        let mut sink = ComputeSink {
-            agg: &mut *agg_round,
-            outbox: &mut *outbox_scratch,
-            next_active: &mut *active,
-            terminated: &mut *terminated,
+    let mut out = TaskRun {
+        calls: 0,
+        handled: 0,
+        sent: 0,
+        max_fan: 0,
+        fanned: 0,
+        overflow: None,
+    };
+    let mut fanned = 0u64;
+    let mut overflow: Option<StageStream<A>> = None;
+    {
+        let mut router = Router::Shard {
+            staged,
+            overflow: &mut overflow,
+            fanned: &mut fanned,
         };
-        sent_total += call.run(app, item.v, st, msgs, &mut sink, |dst, msg| {
-            let dw = cluster.worker_of(dst);
-            match staged[dw].entry(dst) {
-                Entry::Occupied(mut e) => {
-                    let _ = merge_msg(app, e.get_mut(), msg);
-                }
-                Entry::Vacant(e) => {
-                    e.insert(MsgSlot::One(msg));
-                }
-            }
-        });
-        compute_calls += 1;
-        msg_handled += msgs.len() as u64;
+        for item in items.iter_mut() {
+            // SAFETY: same argument as `run_sub` — the pointer was
+            // collected after the last vstate insertion, the map's
+            // structure is frozen, and this inline loop is the only live
+            // access to the slot.
+            let st: &mut VState<A::VQ> = unsafe { &mut *item.st.0 };
+            let msgs: &[A::Msg] = item.msgs.as_ref().map_or(&[], |s| s.as_slice());
+            let mut sink = ComputeSink {
+                agg: &mut *agg_round,
+                outbox: &mut *outbox_scratch,
+                next_active: &mut *active,
+                terminated: &mut *terminated,
+            };
+            let s = call.run(app, item.v, st, msgs, &mut sink, &mut router);
+            out.max_fan = out.max_fan.max(s);
+            out.sent += s;
+            out.calls += 1;
+            out.handled += msgs.len() as u64;
+        }
     }
-    (compute_calls, msg_handled, sent_total)
+    out.fanned = fanned;
+    out.overflow = overflow;
+    out
 }
 
 /// The prep dispatch's per-lane job: run every below-threshold task to
@@ -533,10 +756,18 @@ fn prep_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
         let est = task.shard.inbox.len() + task.shard.active.len();
         match lane.policy.sub_size(est) {
             None => {
-                let (calls, handled, sent) = run_task(app, cluster, task, &mut lane.scratch.outbox);
-                lane.serial_calls += calls;
-                lane.serial_handled += handled;
-                lane.serial_sent += sent;
+                let run = run_task(app, cluster, lane.edge, task, &mut lane.scratch.outbox);
+                lane.serial_calls += run.calls;
+                lane.serial_handled += run.handled;
+                lane.serial_sent += run.sent;
+                lane.fanned += run.fanned;
+                lane.max_fan = lane.max_fan.max(run.max_fan);
+                if let Some(stream) = run.overflow {
+                    lane.fans.push(FanPrep {
+                        task_idx: idx,
+                        stream,
+                    });
+                }
             }
             Some(sub_size) => {
                 let mut items = lane.scratch.items_pool.pop().unwrap_or_default();
@@ -548,11 +779,25 @@ fn prep_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
                     &mut lane.scratch.ptr_index,
                 );
                 if items.len() <= sub_size {
-                    let (calls, handled, sent) =
-                        run_items_inline(app, cluster, task, &mut items, &mut lane.scratch.outbox);
-                    lane.serial_calls += calls;
-                    lane.serial_handled += handled;
-                    lane.serial_sent += sent;
+                    let run = run_items_inline(
+                        app,
+                        cluster,
+                        lane.edge,
+                        task,
+                        &mut items,
+                        &mut lane.scratch.outbox,
+                    );
+                    lane.serial_calls += run.calls;
+                    lane.serial_handled += run.handled;
+                    lane.serial_sent += run.sent;
+                    lane.fanned += run.fanned;
+                    lane.max_fan = lane.max_fan.max(run.max_fan);
+                    if let Some(stream) = run.overflow {
+                        lane.fans.push(FanPrep {
+                            task_idx: idx,
+                            stream,
+                        });
+                    }
                     items.clear();
                     lane.scratch.items_pool.push(items);
                 } else {
@@ -585,15 +830,17 @@ fn prep_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
 /// serial loop except that staging, aggregation, actives and counters go
 /// to the sub-job's own [`SubBuf`]; the merge replays them in sub-range
 /// order afterwards.
-fn run_sub<A: QueryApp>(app: &A, cluster: &Cluster, sub: &mut SubJob<'_, A>) {
+fn run_sub<A: QueryApp>(app: &A, cluster: &Cluster, edge: EdgePolicy, sub: &mut SubJob<'_, A>) {
     let call = ComputeCall {
         qid: sub.qid,
         step: sub.step,
         query: sub.query,
         agg_prev: sub.agg_prev,
+        cluster,
+        edge,
     };
     let SubBuf {
-        staged,
+        stream,
         next_active,
         outbox,
         agg,
@@ -601,7 +848,10 @@ fn run_sub<A: QueryApp>(app: &A, cluster: &Cluster, sub: &mut SubJob<'_, A>) {
         compute_calls,
         msg_handled,
         sent,
+        fanned,
+        max_fan,
     } = &mut *sub.buf;
+    let mut router = Router::Stream { stream, fanned };
     for item in sub.items.iter_mut() {
         // SAFETY: the pointer was collected by `split_items` after the last
         // vstate insertion of this round; the map's structure is untouched
@@ -617,22 +867,24 @@ fn run_sub<A: QueryApp>(app: &A, cluster: &Cluster, sub: &mut SubJob<'_, A>) {
             next_active: &mut *next_active,
             terminated: &mut *terminated,
         };
-        *sent += call.run(app, item.v, st, msgs, &mut sink, |dst, msg| {
-            let dw = cluster.worker_of(dst);
-            staged[dw].stage(app, dst, msg);
-        });
+        let s = call.run(app, item.v, st, msgs, &mut sink, &mut router);
+        *max_fan = (*max_fan).max(s);
+        *sent += s;
         *compute_calls += 1;
         *msg_handled += msgs.len() as u64;
     }
 }
 
-/// The merge dispatch's per-lane job: fold every split task's sub-buffers
-/// back into its shard **in sub-range order** (the serial work order), so
-/// per-destination message sequences, active order and the aggregator fold
-/// are exactly what an unsplit run produces. Also settles counters: lane
-/// totals, per-sub loads for the post-split imbalance metric, and buffer
-/// recycling for the next round.
-fn merge_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
+/// The merge dispatch's per-lane control job: fold every split task's
+/// sub-buffer *non-staging* state back into its shard **in sub-range
+/// order** (the serial work order) — actives, aggregator partials,
+/// terminate flags, counters, per-sub loads for the post-split imbalance
+/// metric, and work-item recycling. Staged messages travel separately,
+/// through the per-(task, destination worker) [`StagingCol`] replay jobs
+/// of the same dispatch: the two touch disjoint state, and the columns
+/// replay the identical serial insertion history concurrently instead of
+/// re-serializing it behind one lane job.
+fn control_merge<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
     let Lane {
         tasks,
         scratch,
@@ -640,6 +892,7 @@ fn merge_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
         compute_calls,
         msg_handled,
         sent,
+        max_fan,
         sub_loads,
         ..
     } = lane;
@@ -655,18 +908,76 @@ fn merge_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
             *compute_calls += buf.compute_calls;
             *msg_handled += buf.msg_handled;
             *sent += buf.sent;
+            *max_fan = (*max_fan).max(buf.max_fan);
             // Same load basis as the lane-imbalance metric: receive-side
-            // cost plus send-side staging overhead. Computed from exact
-            // integer counters, so it is identical for every schedule.
+            // cost plus send-side staging overhead, minus the messages
+            // parked into fans (edge-range jobs carry that staging).
+            // Computed from exact integer counters, so it is identical
+            // for every schedule.
             sub_loads.push(
-                buf.compute_calls as f64 * c1 + (buf.msg_handled + buf.sent) as f64 * c2,
+                buf.compute_calls as f64 * c1
+                    + (buf.msg_handled + buf.sent - buf.fanned) as f64 * c2,
             );
-            shard.absorb_sub(app, buf);
+            shard.absorb_control(app, buf);
             buf.reset_counters();
         }
         let mut items = sp.items;
         items.clear();
         scratch.items_pool.push(items);
+    }
+}
+
+/// One contiguous edge range of one parked mega-fanout: the unit of the
+/// edge-range dispatch. Stages its slice of the fan's messages — in slice
+/// order, combined sender-side within this range only — into the range's
+/// private per-destination-worker buffers; nothing here is visible to any
+/// sibling range.
+struct EdgeJob<'e, A: QueryApp> {
+    /// This range's slice of the fan's outbox, cut into an owned vector
+    /// at collection time so the job MOVES messages into staging (no
+    /// per-message clone on the very path this split parallelizes).
+    msgs: Vec<(VertexId, A::Msg)>,
+    /// `bufs[dw]`: this range's insertion-ordered staging per destination.
+    bufs: &'e mut Vec<OrderedStaging<A>>,
+}
+
+fn run_edge<A: QueryApp>(app: &A, cluster: &Cluster, job: &mut EdgeJob<'_, A>) {
+    let EdgeJob { msgs, bufs } = job;
+    for (dst, msg) in msgs.drain(..) {
+        bufs[cluster.worker_of(dst)].stage(app, dst, msg);
+    }
+}
+
+/// One staging-replay merge job plus the provenance to hand its map back:
+/// the column of one (split or fanned) task for one destination worker.
+struct StagingMerge<A: QueryApp> {
+    lane: usize,
+    task: usize,
+    dw: usize,
+    col: StagingCol<A>,
+}
+
+/// The merge dispatch's heterogeneous unit: per-lane control folds and
+/// per-(task, destination worker) staging replays touch disjoint state,
+/// so one dispatch runs them all concurrently.
+enum MergeJob<'l, 'a, A: QueryApp> {
+    Control(&'l mut Lane<'a, A>),
+    Staging(StagingMerge<A>),
+}
+
+/// Recycle a drained stage stream: leftover fan range buffers go back to
+/// the ordered-staging pool, fan message vectors and segment husks are
+/// dropped, and the unit list is cleared for the next round.
+fn recycle_stream<A: QueryApp>(
+    stream: &mut StageStream<A>,
+    ord_pool: &mut Vec<OrderedStaging<A>>,
+) {
+    for unit in stream.units.drain(..) {
+        if let StageUnit::Fan(ft) = unit {
+            for rb in ft.bufs {
+                ord_pool.extend(rb);
+            }
+        }
     }
 }
 
@@ -846,7 +1157,9 @@ impl<A: QueryApp> Engine<A> {
                 .unwrap_or(1),
             sched: Sched::default_from_env(),
             split: Split::Adaptive,
+            edge_split: EdgeSplit::Adaptive,
             last_compute_imbalance: 0.0,
+            seen_max_fan: 0,
             pool: None,
             n_vertices,
             queue: VecDeque::new(),
@@ -907,6 +1220,22 @@ impl<A: QueryApp> Engine<A> {
     pub fn max_lane_vertices(self, n: usize) -> Self {
         assert!(n > 0);
         self.split(Split::MaxTaskVertices(n))
+    }
+
+    /// Select the edge-level splitting policy for mega-fanout compute
+    /// calls (see [`EdgeSplit`]). [`EdgeSplit::Adaptive`] is the default;
+    /// results are bit-identical for every setting.
+    pub fn edge_split(mut self, e: EdgeSplit) -> Self {
+        self.edge_split = e;
+        self
+    }
+
+    /// Convenience for [`EdgeSplit::MaxFanout`]: park any compute call
+    /// staging more than `n` messages and cut it into edge ranges of at
+    /// most `n`.
+    pub fn max_task_edges(self, n: usize) -> Self {
+        assert!(n > 0);
+        self.edge_split(EdgeSplit::MaxFanout(n))
     }
 
     /// Override the superstep safety cap.
@@ -1054,11 +1383,24 @@ impl<A: QueryApp> Engine<A> {
         let adaptive_armed = (self.last_compute_imbalance > SPLIT_IMBALANCE_TRIGGER
             || workers < self.threads)
             && max_task_est >= SPLIT_MIN_ITEMS;
-        let splittable = match (self.sched, self.split) {
-            (Sched::Stealing, Split::MaxTaskVertices(_)) => true,
-            (Sched::Stealing, Split::Adaptive) => adaptive_armed,
+        // Edge-split arming for the thread budget only: the park decision
+        // itself is made per compute call on the outbox length, but a
+        // mega-fanout seen in ANY earlier round (deterministic evidence,
+        // like the imbalance ratio) is what justifies waking threads
+        // beyond the worker count for rounds that may park again.
+        let edge_armed = match (self.sched, self.edge_split) {
+            (Sched::Stealing, EdgeSplit::MaxFanout(n)) => self.seen_max_fan as usize > n,
+            (Sched::Stealing, EdgeSplit::Adaptive) => {
+                self.seen_max_fan as usize >= EDGE_SPLIT_MIN_FAN
+            }
             _ => false,
         };
+        let splittable = edge_armed
+            || match (self.sched, self.split) {
+                (Sched::Stealing, Split::MaxTaskVertices(_)) => true,
+                (Sched::Stealing, Split::Adaptive) => adaptive_armed,
+                _ => false,
+            };
         let nthreads = if splittable {
             self.threads.max(1)
         } else {
@@ -1084,12 +1426,15 @@ impl<A: QueryApp> Engine<A> {
 
         // --- Compute phase: transpose the running queries into worker
         // lanes (shard w of every query + worker w's scratch) and run them
-        // through up to three pool dispatches: **prep** (below-threshold
-        // tasks run to completion, heavy tasks transpose into work items),
-        // **sub-jobs** (one per contiguous sub-range, private staging), and
-        // **merge** (fold sub-buffers back in fixed sub-range order). When
+        // through up to four pool dispatches: **prep** (below-threshold
+        // tasks run to completion, heavy tasks transpose into work items,
+        // mega-fanouts park), **sub-jobs** (one per contiguous vertex
+        // sub-range, private staging), **edge ranges** (one per contiguous
+        // range of a parked fanout, private staging), and **merge** (fold
+        // everything back in fixed serial-stream order — staging columns
+        // concurrent per destination worker, control folds per lane). When
         // nothing splits — the common balanced case — the prep dispatch IS
-        // the whole phase and the other two are skipped.
+        // the whole phase and the others are skipped.
         let policy = if nthreads == 1 {
             // Serial engine: sub-jobs would run one after another on the
             // same thread, so transposition + merge replay would be pure
@@ -1110,6 +1455,19 @@ impl<A: QueryApp> Engine<A> {
                 }
             }
         };
+        // Edge-split decision for this round. Unlike the vertex policy it
+        // needs no arming: the park test reads the outbox length at
+        // compute time, which is exactly the deterministic signal — a
+        // round with no mega-fanout pays nothing.
+        let edge_policy = if nthreads == 1 {
+            EdgePolicy::Never
+        } else {
+            match (sched, self.edge_split) {
+                (Sched::Static, _) | (_, EdgeSplit::Off) => EdgePolicy::Never,
+                (_, EdgeSplit::MaxFanout(n)) => EdgePolicy::Fixed(n.max(1)),
+                (_, EdgeSplit::Adaptive) => EdgePolicy::Adaptive { threads: nthreads },
+            }
+        };
         if self.lane_scratch.len() < workers {
             self.lane_scratch.resize_with(workers, LaneScratch::new);
         }
@@ -1121,13 +1479,17 @@ impl<A: QueryApp> Engine<A> {
                 tasks: Vec::new(),
                 scratch,
                 policy,
+                edge: edge_policy,
                 splits: Vec::new(),
+                fans: Vec::new(),
                 compute_calls: 0,
                 msg_handled: 0,
                 sent: 0,
                 serial_calls: 0,
                 serial_handled: 0,
                 serial_sent: 0,
+                fanned: 0,
+                max_fan: 0,
                 sub_loads: Vec::new(),
             })
             .collect();
@@ -1174,18 +1536,176 @@ impl<A: QueryApp> Engine<A> {
                 }
             }
         }
-        if !subjobs.is_empty() {
+        let did_subjobs = !subjobs.is_empty();
+        if did_subjobs {
             let sub_stats = run_phase(pool, nthreads, sched, &mut subjobs, |sub| {
-                run_sub(app, cluster, sub)
+                run_sub(app, cluster, edge_policy, sub)
             });
-            drop(subjobs);
             self.metrics.compute_sched.add(sub_stats.jobs, sub_stats.steals);
             self.metrics.subjobs_executed += sub_stats.jobs;
             self.metrics.tasks_split += tasks_split;
-            let merge_stats = run_phase(pool, nthreads, sched, &mut lanes, |lane| {
-                merge_lane(app, cluster, lane)
+        }
+        drop(subjobs);
+
+        // --- Edge-range dispatch: cut every parked mega-fanout (from the
+        // serial paths' overflow streams and the sub-jobs' streams) into
+        // contiguous edge ranges, each staged by its own pool job into a
+        // private insertion-ordered buffer. Range buffers recycle through
+        // the lane's ordered-staging pool.
+        let mut edge_loads: Vec<f64> = Vec::new();
+        let c2_edge = cluster.cost.per_msg_overhead_s;
+        let mut edge_jobs: Vec<EdgeJob<'_, A>> = Vec::new();
+        for lane in lanes.iter_mut() {
+            let Lane { scratch, fans, .. } = lane;
+            let LaneScratch { subs, ord_pool, .. } = &mut **scratch;
+            for stream in fans
+                .iter_mut()
+                .map(|fp| &mut fp.stream)
+                .chain(subs.iter_mut().map(|b| &mut b.stream))
+            {
+                for unit in stream.units.iter_mut() {
+                    let StageUnit::Fan(ft) = unit else { continue };
+                    let n = ft.n_ranges();
+                    ft.bufs.clear();
+                    for _ in 0..n {
+                        let mut rb = Vec::with_capacity(workers);
+                        for _ in 0..workers {
+                            rb.push(ord_pool.pop().unwrap_or_else(OrderedStaging::empty));
+                        }
+                        ft.bufs.push(rb);
+                    }
+                    let FanTask { msgs, range, bufs } = ft;
+                    let range = (*range).max(1);
+                    // Move the fan's messages into owned per-range chunks
+                    // (one pass, one Vec per range) so the jobs stage by
+                    // move, not clone.
+                    let mut drain = std::mem::take(msgs).into_iter();
+                    for rb in bufs.iter_mut() {
+                        let chunk: Vec<(VertexId, A::Msg)> =
+                            drain.by_ref().take(range).collect();
+                        // An edge range's load is pure staging overhead
+                        // (the compute call itself stays with its task).
+                        edge_loads.push(chunk.len() as f64 * c2_edge);
+                        edge_jobs.push(EdgeJob { msgs: chunk, bufs: rb });
+                    }
+                    debug_assert!(drain.next().is_none(), "bufs cover every range");
+                }
+            }
+        }
+        let n_edge_jobs = edge_jobs.len() as u64;
+        if !edge_jobs.is_empty() {
+            let edge_stats = run_phase(pool, nthreads, sched, &mut edge_jobs, |job| {
+                run_edge(app, cluster, job)
+            });
+            self.metrics.compute_sched.add(edge_stats.jobs, edge_stats.steals);
+            self.metrics.edge_ranges_split += n_edge_jobs;
+        }
+        drop(edge_jobs);
+
+        // --- Merge dispatch: per-(task, destination worker) staging
+        // columns replay the serial insertion history concurrently
+        // (distinct destinations own distinct maps), while per-lane
+        // control jobs fold the non-staging sub-buffer state — disjoint
+        // work, one dispatch.
+        if did_subjobs || n_edge_jobs > 0 {
+            let mut merge_jobs: Vec<MergeJob<'_, '_, A>> = Vec::new();
+            for (li, lane) in lanes.iter_mut().enumerate() {
+                let Lane {
+                    tasks,
+                    scratch,
+                    splits,
+                    fans,
+                    ..
+                } = lane;
+                let subs = &mut scratch.subs;
+                let mut buf_idx = 0usize;
+                for sp in splits.iter() {
+                    let n_subs = sp.items.len().div_ceil(sp.sub_size);
+                    let bufs = &mut subs[buf_idx..buf_idx + n_subs];
+                    buf_idx += n_subs;
+                    let staged = &mut tasks[sp.task_idx].shard.staged;
+                    for (dw, target) in staged.iter_mut().enumerate() {
+                        let mut sources = Vec::new();
+                        for buf in bufs.iter_mut() {
+                            buf.stream.collect_column(dw, &mut sources);
+                        }
+                        if sources.is_empty() {
+                            continue;
+                        }
+                        merge_jobs.push(MergeJob::Staging(StagingMerge {
+                            lane: li,
+                            task: sp.task_idx,
+                            dw,
+                            col: StagingCol {
+                                target: std::mem::take(target),
+                                sources,
+                            },
+                        }));
+                    }
+                }
+                for fp in fans.iter_mut() {
+                    let staged = &mut tasks[fp.task_idx].shard.staged;
+                    for (dw, target) in staged.iter_mut().enumerate() {
+                        let mut sources = Vec::new();
+                        fp.stream.collect_column(dw, &mut sources);
+                        if sources.is_empty() {
+                            continue;
+                        }
+                        merge_jobs.push(MergeJob::Staging(StagingMerge {
+                            lane: li,
+                            task: fp.task_idx,
+                            dw,
+                            col: StagingCol {
+                                target: std::mem::take(target),
+                                sources,
+                            },
+                        }));
+                    }
+                }
+            }
+            for lane in lanes.iter_mut() {
+                if !lane.splits.is_empty() {
+                    merge_jobs.push(MergeJob::Control(lane));
+                }
+            }
+            let merge_stats = run_phase(pool, nthreads, sched, &mut merge_jobs, |job| match job {
+                MergeJob::Control(lane) => control_merge(app, cluster, lane),
+                MergeJob::Staging(s) => s.col.replay(app),
             });
             self.metrics.compute_sched.add(merge_stats.jobs, merge_stats.steals);
+            // Hand the replayed staging maps back to their shards, then
+            // recycle the drained buffers and stream husks. Two passes:
+            // the first consumes the job list (releasing the control
+            // jobs' lane borrows), the second may index lanes freely.
+            let mut replayed: Vec<StagingMerge<A>> = Vec::new();
+            for job in merge_jobs {
+                if let MergeJob::Staging(s) = job {
+                    replayed.push(s);
+                }
+            }
+            for s in replayed {
+                let lane = &mut lanes[s.lane];
+                lane.tasks[s.task].shard.staged[s.dw] = s.col.target;
+                lane.scratch.ord_pool.extend(s.col.sources);
+            }
+            for lane in lanes.iter_mut() {
+                let Lane { scratch, fans, .. } = lane;
+                let LaneScratch { subs, ord_pool, .. } = &mut **scratch;
+                for fp in fans.drain(..) {
+                    let mut stream = fp.stream;
+                    recycle_stream(&mut stream, ord_pool);
+                }
+                for buf in subs.iter_mut() {
+                    recycle_stream(&mut buf.stream, ord_pool);
+                    // Reseed the stream's private segment pool (one
+                    // segment's worth) so next round's sub-jobs reuse
+                    // capacity instead of allocating fresh buffers.
+                    buf.stream.seed(ord_pool, workers);
+                }
+                // Bound the pool: without a cap, every split round pushes
+                // drained buffers that only fan rounds ever pop back out.
+                ord_pool.truncate(ORD_POOL_CAP_PER_WORKER * workers);
+            }
         }
         self.metrics.compute_time += compute_start.elapsed().as_secs_f64();
 
@@ -1199,6 +1719,7 @@ impl<A: QueryApp> Engine<A> {
         // every sub-job — what the scheduler can actually move between
         // threads after splitting.
         let mut max_unit_load = 0.0_f64;
+        let mut round_max_fan = 0u64;
         for lane in &lanes {
             // Lane totals come from exact integer counters, so the derived
             // simulated cost is identical for every split setting.
@@ -1211,14 +1732,22 @@ impl<A: QueryApp> Engine<A> {
             lane_load.push(cost + lane.sent as f64 * c2);
             round_msgs += lane.sent;
             total_compute_calls += lane.compute_calls;
+            round_max_fan = round_max_fan.max(lane.max_fan);
+            // The prep job's own share: messages it parked into fans are
+            // subtracted — their staging ran as edge-range jobs.
             let serial_load = lane.serial_calls as f64 * c1
-                + (lane.serial_handled + lane.serial_sent) as f64 * c2;
+                + (lane.serial_handled + lane.serial_sent - lane.fanned) as f64 * c2;
             max_unit_load = max_unit_load.max(serial_load);
             for &l in &lane.sub_loads {
                 max_unit_load = max_unit_load.max(l);
             }
         }
+        for &l in &edge_loads {
+            max_unit_load = max_unit_load.max(l);
+        }
         drop(lanes);
+        self.metrics.max_edge_task = self.metrics.max_edge_task.max(round_max_fan);
+        self.seen_max_fan = self.seen_max_fan.max(round_max_fan);
         self.metrics.total_compute_calls += total_compute_calls;
         // Lane-imbalance ratio of this round's compute phase (max lane
         // load over mean lane load, from the deterministic cost model):

@@ -25,12 +25,25 @@
 //! crosses the split threshold is transposed into its serial work-item
 //! order and cut into contiguous sub-ranges, each its own pool job with
 //! private staging; a merge pass folds the sub-buffers back in sub-range
-//! order, replaying exactly the serial message sequences. The determinism
-//! argument is uniform: stealing moves jobs between executors, splitting
-//! re-groups a fixed serial order — every order-sensitive merge (message
-//! delivery, aggregator fold, sub-buffer absorption) replays that order
-//! inside a single job or on the coordinator — so every thread count,
-//! scheduler and split setting produces bit-identical results (see
+//! order, replaying exactly the serial message sequences.
+//!
+//! Since the edge-level split ([`EdgeSplit`]), even ONE vertex is no
+//! longer atomic: a `compute()` call whose fanout crosses the edge-split
+//! threshold has its outbox parked and cut into contiguous
+//! **(vertex, edge-range)** tasks — the second, finer compute granularity
+//! below the (query, worker, vertex-range) sub-job. Each range stages its
+//! slice of the fan into a private insertion-ordered buffer; everything
+//! the task stages after the fan is captured in overflow segments; and
+//! the merge replays ranges and segments in exact send order,
+//! destination-sharded so the fold of a mega-fanout is itself parallel
+//! across workers' staging maps.
+//!
+//! The determinism argument is uniform: stealing moves jobs between
+//! executors, splitting (either granularity) re-groups a fixed serial
+//! order — every order-sensitive merge (message delivery, aggregator
+//! fold, sub-buffer and edge-range absorption) replays that order inside
+//! a single job or on the coordinator — so every thread count, scheduler,
+//! split and edge-split setting produces bit-identical results (see
 //! `rust/tests/determinism.rs` and the randomized matrix in
 //! `rust/tests/fuzz_determinism.rs`).
 
@@ -38,5 +51,5 @@ mod engine;
 mod pool;
 mod query;
 
-pub use engine::{Engine, Sched, Split};
+pub use engine::{EdgeSplit, Engine, Sched, Split};
 pub use query::{QueryResult, VState};

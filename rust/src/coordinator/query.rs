@@ -2,8 +2,19 @@
 //! `HT_Q` plus the per-worker shards of VQ-data and message stores — and,
 //! since the sub-lane split, the primitives that let ONE shard's compute
 //! work be cut into independently schedulable sub-ranges ([`WorkItem`],
-//! [`SubBuf`], [`WorkerShard::split_items`], [`WorkerShard::absorb_sub`])
+//! [`SubBuf`], [`WorkerShard::split_items`], [`WorkerShard::absorb_control`])
 //! without changing a single output bit.
+//!
+//! Since the edge-level split there is a second, finer granularity below
+//! the (query, worker, vertex-range) sub-job: ONE vertex whose `compute()`
+//! stages a mega-fanout is no longer an indivisible work item either. Its
+//! outbox is *parked* as a [`FanTask`] inside a segmented [`StageStream`],
+//! cut into contiguous **edge ranges** staged by dedicated pool jobs into
+//! private insertion-ordered buffers, and folded back in fixed range order
+//! through the same [`merge_msg`] combiner replay the sub-staging merge and
+//! the exchange already use — so the staging map's key-insertion history,
+//! and with it every downstream hash-iteration order, stays bit-identical
+//! to an unsplit run.
 
 use std::collections::hash_map::Entry;
 
@@ -240,40 +251,15 @@ impl<A: QueryApp> WorkerShard<A> {
         debug_assert!(items.iter().all(|item| !item.st.0.is_null()));
     }
 
-    /// Fold one sub-job's private buffers back into this shard, replaying
-    /// the exact serial order: called once per sub-range, in sub-range
-    /// order. Staged slots are re-offered to the sender-side combiner
-    /// message by message through [`merge_msg`] (the same single rule the
-    /// exchange phase uses), actives are appended, the aggregator partial
-    /// is folded through `agg_merge`, and `force_terminate` is OR-ed.
-    /// Because the concatenated sub-ranges are the serial work order, the
-    /// per-destination message sequences this produces are identical to an
-    /// unsplit run's for every total or absent combiner — the same contract
-    /// the worker partitioning already imposes.
-    pub(crate) fn absorb_sub(&mut self, app: &A, buf: &mut SubBuf<A>) {
-        for (stg, sub) in self.staged.iter_mut().zip(buf.staged.iter_mut()) {
-            sub.index.clear();
-            for (dst, slot) in sub.slots.drain(..) {
-                match stg.entry(dst) {
-                    Entry::Occupied(mut e) => {
-                        let into = e.get_mut();
-                        match slot {
-                            MsgSlot::One(m) => {
-                                let _ = merge_msg(app, into, m);
-                            }
-                            MsgSlot::Many(ms) => {
-                                for m in ms {
-                                    let _ = merge_msg(app, into, m);
-                                }
-                            }
-                        }
-                    }
-                    Entry::Vacant(e) => {
-                        e.insert(slot); // moves, no allocation
-                    }
-                }
-            }
-        }
+    /// Fold one sub-job's non-staging state back into this shard, in
+    /// sub-range order: actives are appended, the aggregator partial is
+    /// folded through `agg_merge`, and `force_terminate` is OR-ed. The
+    /// sub-job's *staged messages* are NOT absorbed here — since the
+    /// edge-level split they travel through per-destination-worker
+    /// [`StagingCol`] replay jobs (independent maps, so the columns fold
+    /// concurrently), which reproduce the identical serial insertion
+    /// history this method used to replay inline.
+    pub(crate) fn absorb_control(&mut self, app: &A, buf: &mut SubBuf<A>) {
         self.active.append(&mut buf.next_active);
         let part = std::mem::take(&mut buf.agg);
         app.agg_merge(&mut self.agg_round, &part);
@@ -302,7 +288,7 @@ pub(crate) struct OrderedStaging<A: QueryApp> {
 }
 
 impl<A: QueryApp> OrderedStaging<A> {
-    fn empty() -> Self {
+    pub(crate) fn empty() -> Self {
         Self {
             index: FxHashMap::default(),
             slots: Vec::new(),
@@ -321,6 +307,189 @@ impl<A: QueryApp> OrderedStaging<A> {
                 e.insert(self.slots.len());
                 self.slots.push((dst, MsgSlot::One(msg)));
             }
+        }
+    }
+
+    /// Drain this buffer into a shard staging map in first-touch order,
+    /// re-offering every message to the sender-side combiner through
+    /// [`merge_msg`] — the single replay rule shared with the exchange.
+    /// Leaves the buffer empty (capacity kept) for recycling.
+    pub(crate) fn drain_into(
+        &mut self,
+        app: &A,
+        target: &mut FxHashMap<VertexId, MsgSlot<A::Msg>>,
+    ) {
+        self.index.clear();
+        for (dst, slot) in self.slots.drain(..) {
+            match target.entry(dst) {
+                Entry::Occupied(mut e) => {
+                    let into = e.get_mut();
+                    match slot {
+                        MsgSlot::One(m) => {
+                            let _ = merge_msg(app, into, m);
+                        }
+                        MsgSlot::Many(ms) => {
+                            for m in ms {
+                                let _ = merge_msg(app, into, m);
+                            }
+                        }
+                    }
+                }
+                Entry::Vacant(e) => {
+                    e.insert(slot); // moves, no allocation
+                }
+            }
+        }
+    }
+}
+
+/// One parked mega-fanout: the outbox of a single `compute()` call whose
+/// `ctx.send` count crossed the edge-split threshold, held in exact send
+/// order. The edge-range dispatch cuts `msgs` into contiguous ranges of
+/// `range` and stages each into its own private per-destination-worker
+/// buffer in `bufs` (one `Vec<OrderedStaging>` per range, indexed by
+/// destination worker); the staging-column merge then folds `bufs[r][dw]`
+/// back **in range order** — the concatenation of the ranges IS the serial
+/// send order, so the replay is indistinguishable from an inline drain.
+pub(crate) struct FanTask<A: QueryApp> {
+    /// The heavy vertex's outbox, in `ctx.send` order.
+    pub msgs: Vec<(VertexId, A::Msg)>,
+    /// Contiguous edge-range size this fan is cut at (≥ 1).
+    pub range: usize,
+    /// Per-range private staging, `bufs[r][dw]`; allocated by the engine
+    /// when the edge-range jobs are collected, filled by the jobs.
+    pub bufs: Vec<Vec<OrderedStaging<A>>>,
+}
+
+impl<A: QueryApp> FanTask<A> {
+    /// Number of contiguous edge ranges this fan is cut into.
+    pub fn n_ranges(&self) -> usize {
+        self.msgs.len().div_ceil(self.range.max(1))
+    }
+}
+
+/// One unit of a [`StageStream`]: either an inline-staged segment (the
+/// messages of ordinary-fanout vertices, per destination worker, in
+/// first-touch order) or a parked mega-fanout awaiting the edge-range
+/// dispatch. The unit sequence is the serial staging order.
+pub(crate) enum StageUnit<A: QueryApp> {
+    Seg(Vec<OrderedStaging<A>>),
+    Fan(FanTask<A>),
+}
+
+/// Segmented private staging: the ordered sequence of everything one
+/// compute unit (a sub-job, or the post-first-fan tail of a serial task)
+/// staged, with mega-fanouts parked as their own units so they can be cut
+/// into edge ranges without disturbing the messages around them. Replaying
+/// the units in order — segments slot by slot, fans range by range —
+/// reproduces the exact serial insertion sequence.
+pub(crate) struct StageStream<A: QueryApp> {
+    pub units: Vec<StageUnit<A>>,
+    /// Destination-worker count (sizes fresh segments).
+    workers: usize,
+    /// Recycled drained buffers for new segments, seeded from the lane's
+    /// ordered-staging pool between rounds ([`StageStream::seed`]) — this
+    /// is what gives split rounds back the capacity reuse the pre-stream
+    /// per-sub staging had. Private per stream, so concurrent sub-jobs
+    /// never contend. Recycled buffers are empty; only their capacity
+    /// differs from fresh ones, and nothing observable depends on map
+    /// capacity (the index is never iterated, slot order is insertion
+    /// order), so outputs are unchanged.
+    pool: Vec<OrderedStaging<A>>,
+}
+
+impl<A: QueryApp> StageStream<A> {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            units: Vec::new(),
+            workers,
+            pool: Vec::new(),
+        }
+    }
+
+    /// Stage one message into the tail segment (opening a segment — from
+    /// the recycle pool where possible — if the stream is empty or ends
+    /// in a parked fan).
+    pub fn stage(&mut self, app: &A, dw: usize, dst: VertexId, msg: A::Msg) {
+        if !matches!(self.units.last(), Some(StageUnit::Seg(_))) {
+            let mut segs = Vec::with_capacity(self.workers);
+            for _ in 0..self.workers {
+                segs.push(self.pool.pop().unwrap_or_else(OrderedStaging::empty));
+            }
+            self.units.push(StageUnit::Seg(segs));
+        }
+        let Some(StageUnit::Seg(segs)) = self.units.last_mut() else {
+            unreachable!("a Seg unit was just ensured")
+        };
+        segs[dw].stage(app, dst, msg);
+    }
+
+    /// Top this stream's segment pool up to `upto` buffers from `src`
+    /// (drained buffers recycled by the merge). Called between rounds by
+    /// the coordinator, never concurrently with staging.
+    pub fn seed(&mut self, src: &mut Vec<OrderedStaging<A>>, upto: usize) {
+        while self.pool.len() < upto {
+            let Some(b) = src.pop() else { break };
+            self.pool.push(b);
+        }
+    }
+
+    /// Park one mega-fanout at the current stream position; subsequent
+    /// `stage` calls open a new segment after it.
+    pub fn park_fan(&mut self, msgs: Vec<(VertexId, A::Msg)>, range: usize) {
+        self.units.push(StageUnit::Fan(FanTask {
+            msgs,
+            range: range.max(1),
+            bufs: Vec::new(),
+        }));
+    }
+
+    /// Move one destination worker's column out of this stream, in unit
+    /// order (segments whole, fan ranges in range order) — the serial
+    /// staging order the [`StagingCol`] replay must reproduce. Buffers
+    /// that staged nothing for this destination are left in place (they
+    /// carry no history and no capacity worth moving).
+    pub fn collect_column(&mut self, dw: usize, out: &mut Vec<OrderedStaging<A>>) {
+        for unit in self.units.iter_mut() {
+            match unit {
+                StageUnit::Seg(segs) => {
+                    if !segs[dw].slots.is_empty() {
+                        out.push(std::mem::replace(&mut segs[dw], OrderedStaging::empty()));
+                    }
+                }
+                StageUnit::Fan(ft) => {
+                    for rb in ft.bufs.iter_mut() {
+                        if !rb[dw].slots.is_empty() {
+                            out.push(std::mem::replace(&mut rb[dw], OrderedStaging::empty()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One (split task, destination worker) staging-replay column: the task's
+/// shard staging map for that destination (taken from the shard, prefix
+/// inserts — if any — already inside) plus every private staging buffer
+/// addressed to that destination, in exact serial-stream order (sub-ranges
+/// in sub order; within each stream, segments and fan ranges in unit
+/// order). Columns for distinct destination workers touch disjoint maps,
+/// so they replay concurrently — that is what keeps the fold of a parked
+/// mega-fanout from re-serializing the very staging the edge ranges just
+/// parallelized.
+pub(crate) struct StagingCol<A: QueryApp> {
+    pub target: FxHashMap<VertexId, MsgSlot<A::Msg>>,
+    pub sources: Vec<OrderedStaging<A>>,
+}
+
+impl<A: QueryApp> StagingCol<A> {
+    /// Replay every source into the target in order. After this the
+    /// sources are drained (capacity kept) and the target's key-insertion
+    /// history matches a serial pass exactly.
+    pub fn replay(&mut self, app: &A) {
+        for src in self.sources.iter_mut() {
+            src.drain_into(app, &mut self.target);
         }
     }
 }
@@ -351,10 +520,12 @@ pub(crate) struct WorkItem<A: QueryApp> {
 /// siblings. Buffers are recycled across super-rounds (the merge drains
 /// them in place).
 pub(crate) struct SubBuf<A: QueryApp> {
-    /// Sub-staging: outgoing messages per destination worker, in
-    /// first-touch destination order, combined sender-side within this
-    /// sub-range only.
-    pub staged: Vec<OrderedStaging<A>>,
+    /// Sub-staging: everything this sub-range staged, as a segmented
+    /// stream — inline segments per destination worker in first-touch
+    /// order, combined sender-side within this sub-range only, with
+    /// mega-fanouts parked as their own [`FanTask`] units for the
+    /// edge-range dispatch.
+    pub stream: StageStream<A>,
     /// Vertices of this sub-range that did not vote halt, in work order.
     pub next_active: Vec<VertexId>,
     /// Per-sub outbox scratch (drained after every compute call).
@@ -365,12 +536,17 @@ pub(crate) struct SubBuf<A: QueryApp> {
     pub compute_calls: u64,
     pub msg_handled: u64,
     pub sent: u64,
+    /// Messages parked into fans (⊆ `sent`); the post-split imbalance
+    /// metric subtracts them, since edge-range jobs carry that staging.
+    pub fanned: u64,
+    /// Largest single `compute()` fanout (ctx.send count) seen here.
+    pub max_fan: u64,
 }
 
 impl<A: QueryApp> SubBuf<A> {
     pub fn new(workers: usize) -> Self {
         Self {
-            staged: (0..workers).map(|_| OrderedStaging::empty()).collect(),
+            stream: StageStream::new(workers),
             next_active: Vec::new(),
             outbox: Vec::new(),
             agg: A::Agg::default(),
@@ -378,6 +554,8 @@ impl<A: QueryApp> SubBuf<A> {
             compute_calls: 0,
             msg_handled: 0,
             sent: 0,
+            fanned: 0,
+            max_fan: 0,
         }
     }
 
@@ -387,6 +565,8 @@ impl<A: QueryApp> SubBuf<A> {
         self.compute_calls = 0;
         self.msg_handled = 0;
         self.sent = 0;
+        self.fanned = 0;
+        self.max_fan = 0;
     }
 }
 
@@ -568,33 +748,118 @@ mod tests {
         assert!(shard.active.is_empty(), "actives consumed; merge refills");
     }
 
+    /// Extract the per-destination-worker staging column of a sequence of
+    /// sub-buffers with the SAME `collect_column` the engine's merge
+    /// collection uses, so this test exercises the real extraction logic.
+    fn column_of(bufs: &mut [SubBuf<SumBelow100>], dw: usize) -> StagingCol<SumBelow100> {
+        let mut sources = Vec::new();
+        for buf in bufs.iter_mut() {
+            buf.stream.collect_column(dw, &mut sources);
+        }
+        StagingCol {
+            target: FxHashMap::default(),
+            sources,
+        }
+    }
+
     #[test]
-    fn absorb_sub_replays_combiner_in_subrange_order() {
+    fn staging_column_replays_combiner_in_subrange_order() {
         let app = SumBelow100;
         let mut shard = WorkerShard::<SumBelow100>::new(2);
-        let mut buf1 = SubBuf::<SumBelow100>::new(2);
-        let mut buf2 = SubBuf::<SumBelow100>::new(2);
-        buf1.staged[0].stage(&app, 8, 7);
-        buf1.staged[0].stage(&app, 8, 3); // combines: 7 + 3 = 10 < 100
-        buf1.next_active.push(8);
-        buf2.staged[0].stage(&app, 9, 1);
-        buf2.staged[0].stage(&app, 8, 90);
-        buf2.next_active.push(9);
+        let mut bufs = vec![SubBuf::<SumBelow100>::new(2), SubBuf::new(2)];
+        bufs[0].stream.stage(&app, 0, 8, 7);
+        bufs[0].stream.stage(&app, 0, 8, 3); // combines: 7 + 3 = 10 < 100
+        bufs[0].next_active.push(8);
+        bufs[1].stream.stage(&app, 0, 9, 1);
+        bufs[1].stream.stage(&app, 0, 8, 90);
+        bufs[1].next_active.push(9);
         // Sub-staging preserves FIRST-TOUCH destination order, not hash
         // order — that is what keeps the shard's staging map insertion
         // history identical to a serial pass.
-        let touch_order: Vec<u32> = buf2.staged[0].slots.iter().map(|&(d, _)| d).collect();
+        let StageUnit::Seg(segs) = &bufs[1].stream.units[0] else {
+            panic!("inline staging must open a Seg unit")
+        };
+        let touch_order: Vec<u32> = segs[0].slots.iter().map(|&(d, _)| d).collect();
         assert_eq!(touch_order, vec![9, 8]);
 
-        shard.absorb_sub(&app, &mut buf1);
-        shard.absorb_sub(&app, &mut buf2);
+        let mut col = column_of(&mut bufs, 0);
+        col.replay(&app);
         // 10 then 90: the combiner declines (sum would hit 100), so the
         // slot must hold both, in sub-range order — exactly the sequence
         // one serial staging pass would have produced.
-        assert_eq!(shard.staged[0].get(&8).unwrap().as_slice(), &[10, 90]);
-        assert_eq!(shard.staged[0].get(&9).unwrap().as_slice(), &[1]);
+        assert_eq!(col.target.get(&8).unwrap().as_slice(), &[10, 90]);
+        assert_eq!(col.target.get(&9).unwrap().as_slice(), &[1]);
+        assert!(col.sources.iter().all(|s| s.slots.is_empty()));
+        // The non-staging state folds separately, in the same sub order.
+        let (b1, b2) = bufs.split_at_mut(1);
+        shard.absorb_control(&app, &mut b1[0]);
+        shard.absorb_control(&app, &mut b2[0]);
         assert_eq!(shard.active, vec![8, 9], "actives append in sub order");
-        assert!(buf1.staged[0].slots.is_empty() && buf2.staged[0].slots.is_empty());
+    }
+
+    #[test]
+    fn stage_stream_parks_fans_between_segments() {
+        let app = SumBelow100;
+        let mut stream = StageStream::<SumBelow100>::new(2);
+        stream.stage(&app, 0, 4, 1);
+        stream.park_fan(vec![(6, 2), (8, 3), (6, 4)], 2);
+        // Staging after a fan must open a NEW segment, not reuse the one
+        // before it — otherwise the replay would hoist these messages
+        // ahead of the fan's.
+        stream.stage(&app, 0, 4, 5);
+        assert_eq!(stream.units.len(), 3);
+        assert!(matches!(stream.units[0], StageUnit::Seg(_)));
+        let StageUnit::Fan(ft) = &stream.units[1] else {
+            panic!("fan must be its own unit")
+        };
+        assert_eq!(ft.n_ranges(), 2, "3 msgs at range 2 -> 2 ranges");
+        assert!(matches!(stream.units[2], StageUnit::Seg(_)));
+    }
+
+    #[test]
+    fn fan_range_replay_matches_inline_drain() {
+        // Staging a fan's ranges into private buffers and replaying them
+        // in range order must produce the same map contents and insertion
+        // history as draining the fan inline.
+        let app = SumBelow100;
+        let msgs: Vec<(u32, u32)> = vec![(2, 7), (4, 90), (2, 5), (6, 1), (4, 20), (2, 80)];
+        let range = 2;
+
+        let mut inline: FxHashMap<u32, MsgSlot<u32>> = FxHashMap::default();
+        for &(dst, m) in &msgs {
+            match inline.entry(dst) {
+                Entry::Occupied(mut e) => {
+                    let _ = merge_msg(&app, e.get_mut(), m);
+                }
+                Entry::Vacant(e) => {
+                    e.insert(MsgSlot::One(m));
+                }
+            }
+        }
+
+        // Edge-range path: every destination is on worker 0 of 1.
+        let mut bufs: Vec<Vec<OrderedStaging<SumBelow100>>> = (0..msgs.len().div_ceil(range))
+            .map(|_| vec![OrderedStaging::empty()])
+            .collect();
+        for (chunk, buf) in msgs.chunks(range).zip(bufs.iter_mut()) {
+            for &(dst, m) in chunk {
+                buf[0].stage(&app, dst, m);
+            }
+        }
+        let mut col = StagingCol::<SumBelow100> {
+            target: FxHashMap::default(),
+            sources: bufs.into_iter().map(|mut b| b.remove(0)).collect(),
+        };
+        col.replay(&app);
+
+        assert_eq!(col.target.len(), inline.len());
+        for (dst, slot) in &inline {
+            assert_eq!(
+                col.target.get(dst).unwrap().as_slice(),
+                slot.as_slice(),
+                "destination {dst} diverged from the inline drain"
+            );
+        }
     }
 
     #[test]

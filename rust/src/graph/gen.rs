@@ -319,6 +319,52 @@ pub fn mega_hub(n: usize, stride: usize, spoke_deg: usize, seed: u64) -> Graph {
     b.build()
 }
 
+/// Single-vertex fanout stressor for the edge-level split: ONE vertex
+/// owns ~all the hot edges, strictly nastier than [`mega_hub`]. There,
+/// the hub's blast radius lands on one worker as one multi-vertex
+/// *receiver batch*, which vertex-range splitting can cut; here the
+/// pathology is the hub's own `compute()` call — a single work item no
+/// vertex granularity can divide:
+///
+/// * vertex 0 — the mono hub — has an out-edge to EVERY other vertex
+///   (`n - 1` edges from one vertex; every other out-degree is
+///   `spoke_deg + 1`), so the superstep where a traversal wave reaches
+///   the hub, one compute call stages an `n - 1`-message fanout. Only
+///   cutting that outbox into edge ranges can parallelize it;
+/// * every other vertex points back at the hub, so a BFS from ANY source
+///   finds the hub at superstep 1 and the mega-fanout fires at superstep
+///   2 — batched queries all detonate their fans in the SAME super-round,
+///   piling every fan on the hub's worker lane;
+/// * each non-hub vertex also has `spoke_deg` uniform random out-edges:
+///   balanced background load, and the post-fan wave (every vertex
+///   receives at superstep 3) does real work on every worker.
+///
+/// The graph is strongly connected through the hub (s → 0 → t), so
+/// random query pairs always reach.
+pub fn mono_hub(n: usize, spoke_deg: usize, seed: u64) -> Graph {
+    assert!(n >= 8, "need a real spoke population");
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n);
+    let mut seen = FxHashSet::default();
+    for v in 1..n {
+        let v = v as VertexId;
+        // The mega fanout: hub 0 → everyone.
+        b.edge(0, v);
+        seen.insert((0, v));
+        // Fast route into the hub from everywhere.
+        b.edge(v, 0);
+        seen.insert((v, 0));
+        // Balanced background fanout.
+        for _ in 0..spoke_deg {
+            let t = rng.below_usize(n) as VertexId;
+            if t != v && seen.insert((v, t)) {
+                b.edge(v, t);
+            }
+        }
+    }
+    b.build()
+}
+
 /// Random (s, t) query pairs over `n` vertices.
 pub fn random_pairs(n: usize, count: usize, seed: u64) -> Vec<(VertexId, VertexId)> {
     assert!(n >= 2, "need at least two vertices for distinct pairs");
@@ -486,6 +532,32 @@ mod tests {
         // The chain keeps it connected: random pairs mostly reach.
         let pairs = random_pairs(n, 15, 22);
         assert!(reach_fraction(&g, &pairs) > 0.6);
+    }
+
+    #[test]
+    fn mono_hub_one_vertex_owns_the_edges() {
+        let n = 4_000;
+        let g = mono_hub(n, 2, 31);
+        // ONE vertex owns ~all the hot edges: the hub fans to everyone,
+        // everyone else stays at spoke_deg + 1.
+        let hub_deg = g.out(0).len();
+        assert_eq!(hub_deg, n - 1, "hub must fan to every other vertex");
+        let max_other = (1..n).map(|v| g.out(v as VertexId).len()).max().unwrap();
+        assert!(
+            max_other <= 3,
+            "spokes must stay tiny, got out-degree {max_other}"
+        );
+        // Every vertex routes back to the hub: the fan fires at superstep
+        // 2 of a BFS from ANY source.
+        for v in 1..n {
+            assert!(
+                g.out(v as VertexId).contains(&0),
+                "vertex {v} must point at the hub"
+            );
+        }
+        // Strongly connected through the hub: everything reaches.
+        let pairs = random_pairs(n, 10, 32);
+        assert!((reach_fraction(&g, &pairs) - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -24,13 +24,19 @@
 //!   whose active/receiving vertex count crosses the split threshold is
 //!   cut into contiguous sub-ranges of its serial work order, each its
 //!   own pool job with private staging buffers, folded back in sub-range
-//!   order by a merge pass. Stealing only decides which thread *executes*
-//!   a job, splitting only re-groups a fixed serial order; every
-//!   order-sensitive merge (message delivery, aggregator fold,
-//!   sub-buffer absorption) replays that order inside a single job, so
-//!   results are bit-identical for every thread count, scheduler and
-//!   split setting (pinned by the determinism suite and the randomized
-//!   fuzzer in `rust/tests/fuzz_determinism.rs`).
+//!   order by a merge pass. And under the `EdgeSplit` knob not even one
+//!   *vertex* is atomic: a `compute()` call staging a mega-fanout has
+//!   its outbox parked and cut into contiguous **(vertex, edge-range)**
+//!   tasks — each range staged by its own pool job into a private
+//!   insertion-ordered buffer, folded back in range order concurrently
+//!   per destination worker. Stealing only decides which thread
+//!   *executes* a job, splitting (either granularity) only re-groups a
+//!   fixed serial order; every order-sensitive merge (message delivery,
+//!   aggregator fold, sub-buffer and edge-range absorption) replays that
+//!   order inside a single job, so results are bit-identical for every
+//!   thread count, scheduler, split and edge-split setting (pinned by
+//!   the determinism suite and the randomized fuzzer in
+//!   `rust/tests/fuzz_determinism.rs`).
 //! * [`vertex`] — the `QueryApp` programming interface (paper §4); app and
 //!   associated types carry the `Send`/`Sync` bounds the threaded shards
 //!   require.

@@ -92,8 +92,10 @@ pub struct EngineMetrics {
     /// Peak number of simultaneously in-flight queries.
     pub peak_inflight: usize,
     /// Compute-phase scheduler counters. Jobs count every compute
-    /// dispatch: the per-lane prep jobs, plus — in rounds where the
-    /// sub-lane split engaged — the sub-jobs and the per-lane merge jobs.
+    /// dispatch: the per-lane prep jobs, plus — in rounds where either
+    /// split engaged — the vertex-range sub-jobs, the edge-range jobs of
+    /// parked mega-fanouts, and the merge jobs (per-lane control folds
+    /// and per-(task, destination worker) staging-column replays).
     pub compute_sched: PhaseSched,
     /// Exchange-phase scheduler counters (jobs = destination workers).
     pub exchange_sched: PhaseSched,
@@ -106,6 +108,17 @@ pub struct EngineMetrics {
     pub subjobs_executed: u64,
     /// (query, worker) compute tasks the split policy cut into sub-ranges.
     pub tasks_split: u64,
+    /// Edge-range jobs executed by the edge-level split: pool jobs that
+    /// staged one contiguous range of a parked mega-fanout into a private
+    /// insertion-ordered buffer. Zero means no compute call ever crossed
+    /// the edge-split threshold (or `EdgeSplit::Off` / the static
+    /// baseline / a serial engine).
+    pub edge_ranges_split: u64,
+    /// Largest single-vertex compute fanout seen: the `ctx.send` count of
+    /// the heaviest `compute()` call across every super-round. Read next
+    /// to `edge_ranges_split` to see whether a workload's mega-hubs were
+    /// big enough to engage the edge split.
+    pub max_edge_task: u64,
     /// Worst compute-phase lane imbalance seen: max lane cost over mean
     /// lane cost (simulated cost model, so deterministic) of the most
     /// skewed super-round. ~1.0 = balanced partition; `workers` = one lane
@@ -277,6 +290,8 @@ mod tests {
         m.compute_sched.add(8, 2);
         m.subjobs_executed = 5;
         m.tasks_split = 2;
+        m.edge_ranges_split = 11;
+        m.max_edge_task = 4096;
         m.max_lane_imbalance = 7.5;
         m.max_post_split_imbalance = 1.2;
         m.queries_completed = 3;
@@ -286,6 +301,8 @@ mod tests {
         assert_eq!(m.jobs_executed(), 0);
         assert_eq!(m.subjobs_executed, 0);
         assert_eq!(m.tasks_split, 0);
+        assert_eq!(m.edge_ranges_split, 0);
+        assert_eq!(m.max_edge_task, 0);
         assert_eq!(m.max_lane_imbalance, 0.0);
         assert_eq!(m.max_post_split_imbalance, 0.0);
         assert_eq!(m.queries_completed, 0);

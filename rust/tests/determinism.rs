@@ -13,7 +13,7 @@ use quegel::apps::reach::{build_labels, condense, dag, ReachQuery};
 use quegel::apps::terrain::baseline::dijkstra;
 use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
 use quegel::apps::xml::{self, SlcaLevelAligned, SlcaNaive};
-use quegel::coordinator::{Engine, Sched, Split};
+use quegel::coordinator::{EdgeSplit, Engine, Sched, Split};
 use quegel::graph::gen;
 use quegel::graph::VertexId;
 use quegel::network::Cluster;
@@ -216,18 +216,174 @@ fn exchange_and_substaging_preserve_source_order() {
     for threads in [1usize, 2] {
         for sched in [Sched::Static, Sched::Stealing] {
             for split in [Split::Off, Split::MaxTaskVertices(1), Split::Adaptive] {
-                let mut eng = Engine::new(OrderHash, Cluster::new(2), 4)
-                    .threads(threads)
-                    .scheduler(sched)
-                    .split(split);
-                let out = eng.run_one(()).out;
-                assert_eq!(
-                    out, WANT,
-                    "threads={threads} sched={sched:?} split={split:?} \
-                     delivered out of source order"
-                );
+                for edge in [EdgeSplit::Off, EdgeSplit::MaxFanout(1)] {
+                    let mut eng = Engine::new(OrderHash, Cluster::new(2), 4)
+                        .threads(threads)
+                        .scheduler(sched)
+                        .split(split)
+                        .edge_split(edge);
+                    let out = eng.run_one(()).out;
+                    assert_eq!(
+                        out, WANT,
+                        "threads={threads} sched={sched:?} split={split:?} \
+                         edge={edge:?} delivered out of source order"
+                    );
+                }
             }
         }
+    }
+}
+
+/// Combiner-less app that pins the edge-split replay order INSIDE one
+/// task: sender 0 stages a three-message fanout (parked and cut into
+/// ranges whenever the edge threshold allows), then sender 2 — later in
+/// the same task's serial order — stages one more message to the same
+/// destination, which must land in the post-fan overflow segment and
+/// replay AFTER every fan range. Receivers fold their inboxes through the
+/// non-commutative `h -> h * 31 + m`, so any reordering between the
+/// direct prefix, the fan ranges and the overflow tail flips the locked
+/// constants.
+struct OrderFan;
+
+impl QueryApp for OrderFan {
+    type Query = ();
+    type VQ = u64;
+    type Msg = u64;
+    type Agg = ();
+    /// (fold of vertex 3, fold of vertex 5).
+    type Out = (u64, u64);
+
+    fn init_activate(&self, _q: &()) -> Vec<VertexId> {
+        // Both senders live on worker 0 (v mod 2 == 0), receivers 3 and 5
+        // on worker 1; active order 0 then 2 is the serial work order.
+        vec![0, 2]
+    }
+
+    fn init_value(&self, _q: &(), _v: VertexId) -> u64 {
+        0
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, vq: &mut u64) {
+        if ctx.superstep() == 1 {
+            if v == 0 {
+                // The fan: msgs to 3, 5, 3 in this exact send order.
+                ctx.send(3, 1);
+                ctx.send(5, 2);
+                ctx.send(3, 3);
+            } else {
+                // The tail message, serially after the whole fan.
+                ctx.send(3, 4);
+            }
+        } else {
+            for &m in ctx.msgs() {
+                *vq = *vq * 31 + m;
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    fn finish(
+        &self,
+        _q: &(),
+        touched: &mut dyn Iterator<Item = (VertexId, &u64)>,
+        _agg: &(),
+    ) -> (u64, u64) {
+        let mut out = (0, 0);
+        for (v, &h) in touched {
+            if v == 3 {
+                out.0 = h;
+            } else if v == 5 {
+                out.1 = h;
+            }
+        }
+        out
+    }
+}
+
+/// Vertex 3 must fold `[1, 3, 4]` (fan order, then the tail): the locked
+/// value is `((0*31 + 1)*31 + 3)*31 + 4 = 1058`; vertex 5 folds `[2]`.
+/// `MaxFanout(2)` parks the fan and cuts it into ranges `[1, 2]` + `[3]`;
+/// `MaxFanout(1)` dices it into three single-edge ranges; either way the
+/// range-order fold and the overflow-tail replay must reproduce the
+/// inline sequence exactly.
+#[test]
+fn edge_ranges_and_overflow_tail_replay_in_send_order() {
+    const WANT: (u64, u64) = ((31 + 3) * 31 + 4, 2);
+    let mut parked = false;
+    for threads in [1usize, 2, 4] {
+        for edge in [
+            EdgeSplit::Off,
+            EdgeSplit::MaxFanout(2),
+            EdgeSplit::MaxFanout(1),
+            EdgeSplit::Adaptive,
+        ] {
+            let mut eng = Engine::new(OrderFan, Cluster::new(2), 6)
+                .threads(threads)
+                .scheduler(Sched::Stealing)
+                .edge_split(edge);
+            let out = eng.run_one(()).out;
+            parked |= eng.metrics().edge_ranges_split > 0;
+            assert_eq!(
+                out, WANT,
+                "threads={threads} edge={edge:?} replayed the fan or its \
+                 tail out of send order"
+            );
+        }
+    }
+    assert!(parked, "no configuration ever parked the fan");
+}
+
+/// Edge-split sweep on the partition the edge-level split exists for: the
+/// mono-hub graph gives ONE vertex an out-edge to everyone, so the fan
+/// superstep is a single `compute()` call staging ~n messages — no vertex
+/// granularity can cut it. Unsplit, fixed-threshold and adaptive runs
+/// must return bit-identical outputs and match the BFS oracle — and the
+/// edge-range path must actually have engaged.
+#[test]
+fn edge_split_choice_never_changes_outputs() {
+    let n = 3_000;
+    let g = gen::mono_hub(n, 3, 9401);
+    let queries = gen::random_pairs(n, 8, 9402);
+    let mut base: Option<Vec<Option<u32>>> = None;
+    let mut edge_ranges = 0u64;
+    for edge in [EdgeSplit::Off, EdgeSplit::MaxFanout(40), EdgeSplit::Adaptive] {
+        for threads in [1usize, 4] {
+            let mut eng = Engine::new(Bfs::new(&g), Cluster::new(8), n)
+                .capacity(8)
+                .threads(threads)
+                .scheduler(Sched::Stealing)
+                .edge_split(edge);
+            let ids: Vec<_> = queries.iter().map(|&q| eng.submit(q)).collect();
+            eng.run_until_idle();
+            edge_ranges += eng.metrics().edge_ranges_split;
+            let outs: Vec<Option<u32>> = ids
+                .iter()
+                .map(|id| {
+                    eng.results()
+                        .iter()
+                        .find(|r| r.qid == *id)
+                        .expect("query completed")
+                        .out
+                })
+                .collect();
+            match &base {
+                None => base = Some(outs),
+                Some(b) => assert_eq!(
+                    &outs, b,
+                    "edge={edge:?} threads={threads} changed query outputs"
+                ),
+            }
+        }
+    }
+    assert!(edge_ranges > 0, "the sweep never executed an edge-range job");
+    let outs = base.unwrap();
+    for (i, &(s, t)) in queries.iter().enumerate() {
+        let want = ppsp_oracle::bfs_dist(&g, s, t);
+        assert_eq!(
+            outs[i],
+            (want != UNREACHED).then_some(want),
+            "query ({s},{t})"
+        );
     }
 }
 

@@ -1,23 +1,31 @@
-//! Randomized determinism fuzzer for the sub-lane split engine.
+//! Randomized determinism fuzzer for the sub-lane + edge-level split
+//! engine.
 //!
 //! The hand-written determinism suite sweeps a fixed grid; this fuzzer
 //! drives the same guarantee through ~100 *random* corners: a seeded
-//! `util::Rng` generates random graphs (four structural families,
-//! including the pathological mega-hub) × random query batches × random
-//! engine configurations `{threads, workers, capacity, Sched, Split}`,
-//! and every configuration's `QueryResult::out` vector must be
-//! bit-identical to the serial reference run (`threads = 1`, static
-//! scheduler, splitting off). On a mismatch the failing case seed and
-//! configuration are printed, so any regression reproduces with a
+//! `util::Rng` generates random graphs (five structural families,
+//! including the pathological mega-hub and mono-hub) × random query
+//! batches × random engine configurations `{threads, workers, capacity,
+//! Sched, Split, EdgeSplit}`, and every configuration's
+//! `QueryResult::out` vector must be bit-identical to the serial
+//! reference run (`threads = 1`, static scheduler, all splitting off).
+//! Each case additionally runs one **edge-threshold-1 forcing
+//! configuration** (`EdgeSplit::MaxFanout(1)` + a tiny vertex-split
+//! threshold), which parks every multi-message outbox and dices it into
+//! single-edge ranges — the most adversarial exercise of the
+//! park/range/fold replay there is. On a mismatch the failing case seed
+//! and configuration are printed, so any regression reproduces with a
 //! one-line test.
 //!
-//! `QUEGEL_BENCH_SMOKE=1` shrinks the case count for the CI smoke lane.
-//! The split threshold is deliberately drawn small, so the sub-job path
-//! engages even on fuzz-sized graphs — asserted at the end, to make sure
-//! the fuzz can never silently degenerate into testing the unsplit path.
+//! `QUEGEL_BENCH_SMOKE=1` shrinks the case count for the CI smoke lane;
+//! `QUEGEL_FUZZ_CASES=N` overrides it outright (the nightly deep-fuzz CI
+//! lane runs 1000). The split thresholds are deliberately drawn small, so
+//! both the vertex-range and the edge-range paths engage even on
+//! fuzz-sized graphs — asserted at the end, to make sure the fuzz can
+//! never silently degenerate into testing the unsplit paths.
 
 use quegel::apps::ppsp::{Bfs, BiBfs};
-use quegel::coordinator::{Engine, Sched, Split};
+use quegel::coordinator::{EdgeSplit, Engine, Sched, Split};
 use quegel::graph::{gen, Graph};
 use quegel::network::Cluster;
 use quegel::util::Rng;
@@ -31,6 +39,7 @@ struct Config {
     capacity: usize,
     sched: Sched,
     split: Split,
+    edge: EdgeSplit,
 }
 
 fn random_config(rng: &mut Rng) -> Config {
@@ -46,20 +55,29 @@ fn random_config(rng: &mut Rng) -> Config {
         2 => Split::MaxTaskVertices(1 + rng.below_usize(48)),
         _ => Split::MaxTaskVertices(64 + rng.below_usize(256)),
     };
+    let edge = match rng.below(4) {
+        0 => EdgeSplit::Off,
+        1 => EdgeSplit::Adaptive,
+        // Tiny fanout thresholds, so ordinary-degree vertices park too
+        // (including ranges of a single edge).
+        2 => EdgeSplit::MaxFanout(1 + rng.below_usize(8)),
+        _ => EdgeSplit::MaxFanout(32 + rng.below_usize(256)),
+    };
     Config {
         threads: [2, 3, 4, 8][rng.below_usize(4)],
         workers: 1 + rng.below_usize(8),
         capacity: [1, 2, 8][rng.below_usize(3)],
         sched,
         split,
+        edge,
     }
 }
 
-/// Random graph from one of four structural families. Returns the graph
+/// Random graph from one of five structural families. Returns the graph
 /// and a short description for failure messages.
 fn random_graph(rng: &mut Rng, seed: u64) -> (Graph, String) {
     let n = 300 + rng.below_usize(900);
-    match rng.below(4) {
+    match rng.below(5) {
         0 => {
             let deg = 3 + rng.below_usize(5);
             (
@@ -82,6 +100,13 @@ fn random_graph(rng: &mut Rng, seed: u64) -> (Graph, String) {
                 format!("mega_hub({n}, 8, {spoke}, {seed})"),
             )
         }
+        3 => {
+            let spoke = 1 + rng.below_usize(4);
+            (
+                gen::mono_hub(n, spoke, seed),
+                format!("mono_hub({n}, {spoke}, {seed})"),
+            )
+        }
         _ => {
             let layers = 5 + rng.below_usize(15);
             let deg = 2 + rng.below_usize(4);
@@ -93,9 +118,16 @@ fn random_graph(rng: &mut Rng, seed: u64) -> (Graph, String) {
     }
 }
 
+/// Which split machinery a run engaged, so the fuzzer can prove it never
+/// degenerates into testing only the unsplit paths.
+struct Engaged {
+    subjobs: bool,
+    edge_ranges: bool,
+}
+
 /// Run one batch under one configuration, returning outputs in submission
-/// order plus whether the sub-job path engaged.
-fn run_batch<A, F>(mk: F, n: usize, queries: &[A::Query], cfg: Config) -> (Vec<A::Out>, bool)
+/// order plus which split paths engaged.
+fn run_batch<A, F>(mk: F, n: usize, queries: &[A::Query], cfg: Config) -> (Vec<A::Out>, Engaged)
 where
     A: QueryApp,
     A::Out: Clone,
@@ -105,7 +137,8 @@ where
         .capacity(cfg.capacity)
         .threads(cfg.threads)
         .scheduler(cfg.sched)
-        .split(cfg.split);
+        .split(cfg.split)
+        .edge_split(cfg.edge);
     let ids: Vec<_> = queries.iter().map(|q| eng.submit(q.clone())).collect();
     eng.run_until_idle();
     let outs = ids
@@ -119,14 +152,28 @@ where
                 .clone()
         })
         .collect();
-    (outs, eng.metrics().subjobs_executed > 0)
+    let engaged = Engaged {
+        subjobs: eng.metrics().subjobs_executed > 0,
+        edge_ranges: eng.metrics().edge_ranges_split > 0,
+    };
+    (outs, engaged)
 }
 
 #[test]
 fn randomized_matrix_is_bit_identical_to_serial() {
-    const MASTER_SEED: u64 = 0x5eed_f022;
+    // QUEGEL_FUZZ_SEED picks a different deterministic case universe per
+    // run (the nightly CI matrix fans out over seeds, so its legs cover
+    // DISTINCT cases instead of repeating one batch); the default keeps
+    // local and PR runs reproducible.
+    let master_seed = std::env::var("QUEGEL_FUZZ_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0x5eed_f022);
     let smoke = std::env::var("QUEGEL_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
-    let cases = if smoke { 12 } else { 100 };
+    let cases = std::env::var("QUEGEL_FUZZ_CASES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(if smoke { 12 } else { 100 });
     let configs_per_case = 3;
     let serial = Config {
         threads: 1,
@@ -134,11 +181,25 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         capacity: 4,
         sched: Sched::Static,
         split: Split::Off,
+        edge: EdgeSplit::Off,
+    };
+    // The edge-threshold-1 forcing leg: every outbox of 2+ messages is
+    // parked and diced into single-edge ranges, and a tiny vertex
+    // threshold keeps the vertex split in the mix, so the two replay
+    // pipelines compose.
+    let forcing = Config {
+        threads: 4,
+        workers: 3,
+        capacity: 8,
+        sched: Sched::Stealing,
+        split: Split::MaxTaskVertices(5),
+        edge: EdgeSplit::MaxFanout(1),
     };
 
     let mut split_engaged = false;
+    let mut edge_engaged = false;
     for case in 0..cases {
-        let case_seed = MASTER_SEED.wrapping_add(1 + case as u64 * 0x9e37);
+        let case_seed = master_seed.wrapping_add(1 + case as u64 * 0x9e37);
         let mut rng = Rng::new(case_seed);
         let (mut g, desc) = random_graph(&mut rng, case_seed);
         let n = g.num_vertices();
@@ -149,19 +210,19 @@ fn randomized_matrix_is_bit_identical_to_serial() {
             g.ensure_in_edges();
         }
 
-        let (base, _) = if use_bibfs {
-            run_batch(|| BiBfs::new(&g), n, &queries, serial)
-        } else {
-            run_batch(|| Bfs::new(&g), n, &queries, serial)
-        };
-        for ci in 0..configs_per_case {
-            let cfg = random_config(&mut rng);
-            let (outs, engaged) = if use_bibfs {
+        let run = |cfg: Config| {
+            if use_bibfs {
                 run_batch(|| BiBfs::new(&g), n, &queries, cfg)
             } else {
                 run_batch(|| Bfs::new(&g), n, &queries, cfg)
-            };
-            split_engaged |= engaged;
+            }
+        };
+        let (base, _) = run(serial);
+        for ci in 0..configs_per_case {
+            let cfg = random_config(&mut rng);
+            let (outs, engaged) = run(cfg);
+            split_engaged |= engaged.subjobs;
+            edge_engaged |= engaged.edge_ranges;
             assert_eq!(
                 outs, base,
                 "fuzz case {case} (seed {case_seed:#x}, {desc}, \
@@ -169,10 +230,24 @@ fn randomized_matrix_is_bit_identical_to_serial() {
                  vs the serial reference"
             );
         }
+        let (outs, engaged) = run(forcing);
+        split_engaged |= engaged.subjobs;
+        edge_engaged |= engaged.edge_ranges;
+        assert_eq!(
+            outs, base,
+            "fuzz case {case} (seed {case_seed:#x}, {desc}, \
+             bibfs={use_bibfs}) edge-threshold-1 forcing config {forcing:?} \
+             changed outputs vs the serial reference"
+        );
     }
     assert!(
         split_engaged,
         "no fuzz configuration ever executed a sub-job: the fuzzer is not \
-         exercising the split path"
+         exercising the vertex-split path"
+    );
+    assert!(
+        edge_engaged,
+        "no fuzz configuration ever executed an edge-range job: the fuzzer \
+         is not exercising the edge-split path"
     );
 }
