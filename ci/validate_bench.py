@@ -3,8 +3,9 @@
 
 The perf bench (``cd rust && cargo bench -- perf --json``) emits one JSON
 file per PR milestone — BENCH_pr2.json (phase thread sweep), BENCH_pr3.json
-(static-vs-stealing skew sweep), BENCH_pr4.json (sub-lane split sweep) and
-BENCH_pr5.json (edge-level split sweep). This script is the single source
+(static-vs-stealing skew sweep), BENCH_pr4.json (sub-lane split sweep),
+BENCH_pr5.json (edge-level split sweep) and BENCH_pr6.json
+(barrier-vs-pipelined round sweep). This script is the single source
 of truth for their shape, shared by the ``bench-smoke`` CI lane and local
 runs:
 
@@ -152,11 +153,60 @@ def check_pr5(doc, name):
     )
 
 
+def check_pr6(doc, name):
+    rows = doc.get("rows") or fail(f"{name}: pipeline sweep produced no rows")
+    for row in rows:
+        require_keys(
+            row,
+            (
+                "pipeline",
+                "threads",
+                "wall_s",
+                "compute_busy_s",
+                "exchange_busy_s",
+                "fold_busy_s",
+                "overlap_s",
+                "pipelined_rounds",
+            ),
+            name,
+        )
+    if {r["pipeline"] for r in rows} != {"barrier", "pipelined"}:
+        fail(f"{name}: rows must cover barrier and pipelined rounds")
+    if not any(
+        r["pipeline"] == "pipelined" and r["threads"] > 1 and r["pipelined_rounds"] > 0
+        for r in rows
+    ):
+        fail(f"{name}: threaded pipelined rows never ran a ready-driven round")
+    if not all(r["pipelined_rounds"] == 0 for r in rows if r["pipeline"] == "barrier"):
+        fail(f"{name}: barrier rows must not run ready-driven rounds")
+    # Busy accounting sanity: phase busy seconds can exceed the wall under
+    # overlap, but never by more than the thread count; overlap is a
+    # wall-time sub-interval. A generous 1.25 slack absorbs timer jitter
+    # on loaded CI runners without letting double-counting bugs through.
+    for r in rows:
+        busy = r["compute_busy_s"] + r["exchange_busy_s"] + r["fold_busy_s"]
+        if busy > r["threads"] * r["wall_s"] * 1.25 + 1e-4:
+            fail(
+                f"{name}: phase busy sum {busy:.6f}s exceeds threads x wall "
+                f"({r['threads']} x {r['wall_s']:.6f}s): double-counted time?"
+            )
+        if r["overlap_s"] > r["wall_s"] * 1.25 + 1e-4:
+            fail(
+                f"{name}: overlap {r['overlap_s']:.6f}s exceeds wall "
+                f"{r['wall_s']:.6f}s"
+            )
+    print(
+        f"{name} ok: {len(rows)} rows; pipelined vs barrier wall at 4 threads:",
+        doc["pipeline_vs_barrier_wall_speedup_t4"],
+    )
+
+
 CHECKERS = {
     "perf_engine": check_pr2,
     "perf_skew_sched": check_pr3,
     "perf_sublane_split": check_pr4,
     "perf_edge_split": check_pr5,
+    "perf_pipeline": check_pr6,
 }
 
 

@@ -23,11 +23,20 @@
 //!   single `compute()` call stages the whole fanout) with edge-level
 //!   splitting off vs on — isolating what parking the fan and staging its
 //!   contiguous edge ranges as pool jobs buys over every coarser
-//!   granularity.
+//!   granularity;
+//! * the **pipeline sweep** runs a stream of point lookups alongside one
+//!   deep BFS over the `gen::one_slow_query` graph (a ladder pinned to
+//!   worker 0's lane that grinds for ~depth supersteps while every other
+//!   query converges in two or three) under barrier rounds vs
+//!   `Pipeline::On` — measuring end-to-end wall, per-phase *busy* time
+//!   and the `overlap_time` gauge, i.e. what draining fast queries
+//!   through exchange/fold/reporting during the slow lane's compute buys
+//!   over paying three global barriers per round.
 //!
 //! With `--json`, the same numbers are written to `BENCH_pr2.json`
 //! (thread sweep), `BENCH_pr3.json` (skew sweep), `BENCH_pr4.json`
-//! (split sweep) and `BENCH_pr5.json` (edge-split sweep) so the committed
+//! (split sweep), `BENCH_pr5.json` (edge-split sweep) and
+//! `BENCH_pr6.json` (pipeline sweep) so the committed
 //! perf trajectory is machine-readable; CI's `bench-smoke` lane validates
 //! them with `ci/validate_bench.py` and archives them as workflow
 //! artifacts. Setting `QUEGEL_BENCH_SMOKE=1` shrinks every input so the
@@ -36,10 +45,11 @@
 
 use quegel::apps::ppsp::{Bfs, BiBfs};
 use quegel::apps::xml::{self, SlcaNaive, XmlGenConfig};
-use quegel::coordinator::{EdgeSplit, Engine, Sched, Split};
+use quegel::coordinator::{EdgeSplit, Engine, Pipeline, Sched, Split};
 use quegel::graph::{gen, Graph};
 use quegel::metrics::Table;
 use quegel::network::Cluster;
+use quegel::util::env_flag;
 use quegel::vertex::QueryApp;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
@@ -53,7 +63,7 @@ const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
 /// CI smoke mode: shrink inputs so the lane finishes fast while still
 /// producing structurally complete JSON.
 fn smoke() -> bool {
-    std::env::var("QUEGEL_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+    env_flag("QUEGEL_BENCH_SMOKE")
 }
 
 fn median(mut xs: Vec<f64>) -> f64 {
@@ -91,15 +101,17 @@ where
             let mut barriers = Vec::new();
             let mut walls = Vec::new();
             for _ in 0..reps {
-                // Split::Off + EdgeSplit::Off keep this sweep measuring
-                // what it always has (thread scaling of the PR 2 phase
-                // pipeline), not the PR 4/PR 5 splits — BENCH_pr4.json
-                // and BENCH_pr5.json own those.
+                // Split::Off + EdgeSplit::Off + Pipeline::Off keep this
+                // sweep measuring what it always has (thread scaling of
+                // the PR 2 phase pipeline), not the PR 4/PR 5 splits or
+                // the PR 6 pipelined rounds — BENCH_pr4.json,
+                // BENCH_pr5.json and BENCH_pr6.json own those.
                 let mut eng = Engine::new(mk(), Cluster::new(workers), n)
                     .capacity(8)
                     .threads(threads)
                     .split(Split::Off)
-                    .edge_split(EdgeSplit::Off);
+                    .edge_split(EdgeSplit::Off)
+                    .pipeline(Pipeline::Off);
                 for q in queries {
                     eng.submit(q.clone());
                 }
@@ -228,7 +240,8 @@ fn skew_rows(g: &Graph, workers: usize, queries: &[(u32, u32)], reps: usize) -> 
                     .threads(threads)
                     .scheduler(sched)
                     .split(Split::Off)
-                    .edge_split(EdgeSplit::Off);
+                    .edge_split(EdgeSplit::Off)
+                    .pipeline(Pipeline::Off);
                 for &q in queries {
                     eng.submit(q);
                 }
@@ -350,7 +363,8 @@ fn split_rows(
                     .threads(threads)
                     .scheduler(Sched::Stealing)
                     .split(split)
-                    .edge_split(EdgeSplit::Off);
+                    .edge_split(EdgeSplit::Off)
+                    .pipeline(Pipeline::Off);
                 for &q in queries {
                     eng.submit(q);
                 }
@@ -502,7 +516,8 @@ fn edge_rows(
                     .threads(threads)
                     .scheduler(Sched::Stealing)
                     .split(Split::Adaptive)
-                    .edge_split(edge);
+                    .edge_split(edge)
+                    .pipeline(Pipeline::Off);
                 for &q in queries {
                     eng.submit(q);
                 }
@@ -600,6 +615,157 @@ fn json_edge_rows(rows: &[EdgeRow]) -> String {
                 r.subjobs,
                 r.lane_imbalance,
                 r.post_split_imbalance,
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
+/// One (pipeline, threads) configuration of the pipelined-round sweep on
+/// the one-slow-query graph. `compute`/`exchange`/`fold` are per-phase
+/// **busy** seconds (work actually done, summed across threads), so under
+/// `Pipeline::On` their sum can legitimately exceed `wall`; `overlap` is
+/// the wall time with two-plus phases simultaneously live.
+struct PipeRow {
+    pipeline: Pipeline,
+    threads: usize,
+    wall: f64,
+    compute: f64,
+    exchange: f64,
+    fold: f64,
+    overlap: f64,
+    pipelined_rounds: u64,
+}
+
+fn pipeline_name(p: Pipeline) -> &'static str {
+    match p {
+        Pipeline::Off => "barrier",
+        Pipeline::On => "pipelined",
+    }
+}
+
+/// One slow BFS (the lane-0 ladder) + a stream of point lookups, swept
+/// over pipeline × threads under `Sched::Stealing` with both splits off
+/// (pipelining's engagement precondition, and the configuration the
+/// barrier baseline is PR 5's engine in). Capacity is deliberately
+/// modest so the admission queue keeps feeding fresh cheap queries every
+/// super-round for the ladder's whole lifetime — the workload pipelining
+/// exists for.
+fn pipe_rows(
+    g: &Graph,
+    workers: usize,
+    queries: &[(u32, u32)],
+    capacity: usize,
+    reps: usize,
+) -> Vec<PipeRow> {
+    let mut rows = Vec::new();
+    for pipeline in [Pipeline::Off, Pipeline::On] {
+        for &threads in &THREAD_SWEEP {
+            let mut walls = Vec::new();
+            let mut computes = Vec::new();
+            let mut exchanges = Vec::new();
+            let mut folds = Vec::new();
+            let mut overlaps = Vec::new();
+            let mut pipelined_rounds = 0;
+            for _ in 0..reps {
+                let mut eng = Engine::new(Bfs::new(g), Cluster::new(workers), g.num_vertices())
+                    .capacity(capacity)
+                    .threads(threads)
+                    .scheduler(Sched::Stealing)
+                    .split(Split::Off)
+                    .edge_split(EdgeSplit::Off)
+                    .pipeline(pipeline);
+                for &q in queries {
+                    eng.submit(q);
+                }
+                let t0 = Instant::now();
+                eng.run_until_idle();
+                walls.push(t0.elapsed().as_secs_f64());
+                computes.push(eng.metrics().compute_time);
+                exchanges.push(eng.metrics().exchange_time);
+                folds.push(eng.metrics().barrier_time);
+                overlaps.push(eng.metrics().overlap_time);
+                pipelined_rounds = eng.metrics().pipelined_rounds;
+            }
+            rows.push(PipeRow {
+                pipeline,
+                threads,
+                wall: median(walls),
+                compute: median(computes),
+                exchange: median(exchanges),
+                fold: median(folds),
+                overlap: median(overlaps),
+                pipelined_rounds,
+            });
+        }
+    }
+    rows
+}
+
+/// End-to-end wall speedup of pipelined over barrier rounds at the same
+/// thread count — the quantity the ≥1.3× one-slow-query target is on.
+fn pipe_speedup(rows: &[PipeRow], threads: usize) -> f64 {
+    let wall = |pipeline: Pipeline| {
+        rows.iter()
+            .find(|r| r.pipeline == pipeline && r.threads == threads)
+            .map(|r| r.wall)
+            .unwrap_or(f64::NAN)
+    };
+    wall(Pipeline::Off) / wall(Pipeline::On)
+}
+
+fn print_pipe_table(name: &str, rows: &[PipeRow]) {
+    let mut t = Table::new(vec![
+        "rounds",
+        "threads",
+        "wall",
+        "compute busy",
+        "exchange busy",
+        "fold busy",
+        "overlap",
+        "pipelined rounds",
+        "vs barrier",
+    ]);
+    for r in rows {
+        let vs = match r.pipeline {
+            Pipeline::Off => "baseline".to_string(),
+            Pipeline::On => format!("{:.2}x", pipe_speedup(rows, r.threads)),
+        };
+        t.row(vec![
+            pipeline_name(r.pipeline).to_string(),
+            r.threads.to_string(),
+            format!("{:.1} ms", r.wall * 1e3),
+            format!("{:.1} ms", r.compute * 1e3),
+            format!("{:.1} ms", r.exchange * 1e3),
+            format!("{:.1} ms", r.fold * 1e3),
+            format!("{:.1} ms", r.overlap * 1e3),
+            r.pipelined_rounds.to_string(),
+            vs,
+        ]);
+    }
+    println!("[{name}]");
+    println!("{}", t.render());
+}
+
+fn json_pipe_rows(rows: &[PipeRow]) -> String {
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "{{\"pipeline\":\"{}\",\"threads\":{},\"wall_s\":{:.6},",
+                    "\"compute_busy_s\":{:.6},\"exchange_busy_s\":{:.6},",
+                    "\"fold_busy_s\":{:.6},\"overlap_s\":{:.6},",
+                    "\"pipelined_rounds\":{}}}"
+                ),
+                pipeline_name(r.pipeline),
+                r.threads,
+                r.wall,
+                r.compute,
+                r.exchange,
+                r.fold,
+                r.overlap,
+                r.pipelined_rounds,
             )
         })
         .collect();
@@ -784,6 +950,53 @@ pub fn run() {
     println!("the fan actually parked. Outputs are bit-identical across the");
     println!("whole table by construction (tests/fuzz_determinism.rs).");
 
+    // --- Pipeline sweep: the one-slow-query graph pins a deep BFS ladder
+    // to worker 0's lane; everything else is point lookups that converge
+    // in two or three supersteps. Barrier rounds pay three global phase
+    // dispatches per super-round and serialize the fast queries' exchange,
+    // fold and reporting behind the slow lane; pipelined rounds ship each
+    // fast query's cascade the moment its last lane lands, on threads the
+    // slow lane isn't using.
+    let (pl_n, pl_q, pl_stride, pl_width, pl_depth) = if smoke {
+        (8_000, 120, 8usize, 16, 24)
+    } else {
+        (60_000, 600, 8usize, 48, 64)
+    };
+    let pl_workers = 8;
+    let pl_capacity = 16;
+    let pl_g = gen::one_slow_query(pl_n, pl_stride, pl_width, pl_depth, 443);
+    // Query stream: the slow ladder walk first (source = hub 0, target
+    // unreachable), then cheap lookups with any ladder id nudged onto the
+    // star population so only query 0 is slow.
+    let fix = |v: u32| {
+        if v as usize % pl_stride == 0 && v as usize / pl_stride <= pl_width * pl_depth {
+            v + 1
+        } else {
+            v
+        }
+    };
+    let mut pl_queries: Vec<(u32, u32)> = vec![(0, (pl_n - 1) as u32)];
+    for (s, t) in gen::random_pairs(pl_n, pl_q, 444) {
+        pl_queries.push((fix(s), fix(t)));
+    }
+    let pipe = pipe_rows(&pl_g, pl_workers, &pl_queries, pl_capacity, reps);
+    print_pipe_table("bfs one-slow-query C=16 W=8 (one slow lane)", &pipe);
+    let pipe_headline = pipe_speedup(&pipe, 4);
+    let pipe_row = pipe
+        .iter()
+        .find(|r| r.pipeline == Pipeline::On && r.threads == 4);
+    println!(
+        "pipelined rounds {}; overlap {:.1} ms; pipelined vs barrier end-to-end wall at 4 threads: {:.2}x",
+        pipe_row.map(|r| r.pipelined_rounds).unwrap_or(0),
+        pipe_row.map(|r| r.overlap * 1e3).unwrap_or(0.0),
+        pipe_headline
+    );
+    println!("target: pipelining >= 1.3x over barrier rounds at 4 threads");
+    println!("end-to-end on this workload; pipelined rounds > 0 shows the");
+    println!("ready-driven path actually engaged. Outputs are bit-identical");
+    println!("across the whole table by construction (tests/determinism.rs");
+    println!("pipeline_choice_never_changes_outputs).");
+
     if JSON.load(Ordering::Relaxed) {
         let payload = format!(
             concat!(
@@ -859,6 +1072,30 @@ pub fn run() {
         match std::fs::write("BENCH_pr5.json", &payload) {
             Ok(()) => println!("wrote BENCH_pr5.json"),
             Err(e) => eprintln!("could not write BENCH_pr5.json: {e}"),
+        }
+        let payload = format!(
+            concat!(
+                "{{\"pr\":6,\"bench\":\"perf_pipeline\",",
+                "\"graph\":\"one_slow_query\",\"n\":{},\"workers\":{},",
+                "\"capacity\":{},\"queries\":{},\"ladder_width\":{},",
+                "\"ladder_depth\":{},\"threads_swept\":[1,2,4,8],\"reps\":{},",
+                "\"smoke\":{},\"rows\":{},",
+                "\"pipeline_vs_barrier_wall_speedup_t4\":{:.3}}}\n"
+            ),
+            pl_n,
+            pl_workers,
+            pl_capacity,
+            pl_queries.len(),
+            pl_width,
+            pl_depth,
+            reps,
+            smoke,
+            json_pipe_rows(&pipe),
+            pipe_headline,
+        );
+        match std::fs::write("BENCH_pr6.json", &payload) {
+            Ok(()) => println!("wrote BENCH_pr6.json"),
+            Err(e) => eprintln!("could not write BENCH_pr6.json: {e}"),
         }
     }
 }

@@ -58,16 +58,42 @@
 //! `threads = N` produces bit-identical `QueryResult`s to `threads = 1`
 //! (pinned by `rust/tests/determinism.rs` and the randomized fuzzer in
 //! `rust/tests/fuzz_determinism.rs` across threads × workers × capacity ×
-//! scheduler × split × edge-split).
+//! scheduler × split × edge-split × pipeline).
+//!
+//! The barrier between the phases is itself optional now: under the
+//! [`Pipeline`] knob a super-round can run **ready-driven** instead of
+//! barrier-to-barrier. A pipelined round is ONE pool batch holding a step
+//! job per (query, worker) compute task plus the previous round's deferred
+//! reporting jobs; the last lane of a query to finish its compute
+//! immediately ships the query's staged columns into the destination
+//! inboxes (destinations in worker order, sources in worker order within
+//! each — the exact delivery sequence of the barrier exchange) and runs
+//! the query's fold, while slower queries' lanes are still computing. A
+//! query that converged has its reporting superstep deferred one round and
+//! executed as a job of the NEXT round's batch, overlapped with that
+//! round's compute. Because only *when* work runs changes — never the
+//! staging insertion history, the source-order delivery, or the
+//! worker-order fold — `QueryResult::out` is bit-identical across
+//! `Pipeline::{Off, On}`.
+//!
+//! Overlap breaks wall-segment phase stopwatches (a span with compute and
+//! exchange both active would be counted twice), so the phase timers in
+//! [`EngineMetrics`] are **busy** counters: summed from inside pool jobs,
+//! plus the coordinator's serial segments, with
+//! [`EngineMetrics::overlap_time`] reporting the wall seconds in which two
+//! or more phases were simultaneously active (always 0 under
+//! `Pipeline::Off`).
 
 use std::collections::hash_map::Entry;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use super::pool::{Job, RunStats, WorkerPool};
 use super::query::{
-    merge_msg, FanTask, MsgSlot, OrderedStaging, Phase, QueryResult, QueryRt, StageStream,
-    StageUnit, StagingCol, SubBuf, VState, WorkItem, WorkerShard,
+    deliver_map, merge_msg, FanTask, MsgSlot, OrderedStaging, Phase, QueryResult, QueryRt,
+    StageStream, StageUnit, StagingCol, SubBuf, VState, WorkItem, WorkerShard,
 };
 use crate::graph::VertexId;
 use crate::metrics::EngineMetrics;
@@ -245,6 +271,9 @@ pub struct Engine<A: QueryApp> {
     split: Split,
     /// Edge-level splitting policy for mega-fanout compute calls.
     edge_split: EdgeSplit,
+    /// Super-round execution mode: strict barriers or ready-driven
+    /// pipelining (see [`Pipeline`]).
+    pipeline: Pipeline,
     /// Compute lane-imbalance ratio of the most recent super-round, the
     /// deterministic signal [`Split::Adaptive`] triggers on.
     last_compute_imbalance: f64,
@@ -259,6 +288,11 @@ pub struct Engine<A: QueryApp> {
     n_vertices: usize,
     queue: VecDeque<(QueryId, A::Query, f64)>,
     inflight: Vec<QueryRt<A>>,
+    /// Queries whose reporting superstep a pipelined round deferred: their
+    /// `finish` runs as jobs of the NEXT pipelined batch (overlapped with
+    /// its compute) or serially in [`Engine::flush_pending_reports`].
+    /// Always empty between rounds under `Pipeline::Off`.
+    pending_reports: Vec<PendingReport<A>>,
     results: Vec<QueryResult<A::Out>>,
     next_qid: QueryId,
     clock: f64,
@@ -994,28 +1028,7 @@ fn run_exchange<A: QueryApp>(app: &A, lane: &mut ExchangeLane<A>) {
             delivered,
         } = task;
         for srcmap in inbound.iter_mut() {
-            if srcmap.is_empty() {
-                continue; // skip the W²-mostly-empty buckets cheaply
-            }
-            for (dst, slot) in srcmap.drain() {
-                match inbox.entry(dst) {
-                    Entry::Occupied(mut e) => {
-                        let into = e.get_mut();
-                        match slot {
-                            MsgSlot::One(m) => *delivered += merge_msg(app, into, m),
-                            MsgSlot::Many(ms) => {
-                                for m in ms {
-                                    *delivered += merge_msg(app, into, m);
-                                }
-                            }
-                        }
-                    }
-                    Entry::Vacant(e) => {
-                        *delivered += slot.len() as u64;
-                        e.insert(slot); // moves, no allocation
-                    }
-                }
-            }
+            *delivered += deliver_map(app, inbox, srcmap);
         }
     }
 }
@@ -1065,25 +1078,325 @@ impl Sched {
     }
 }
 
+/// Super-round execution mode: strict barriers or ready-driven pipelining.
+///
+/// Under [`Pipeline::On`] a super-round is ONE pool batch of per-(query,
+/// worker) step jobs plus the previous round's deferred reporting jobs.
+/// The last lane of a query to finish its compute ships the query's
+/// staged columns and runs its fold immediately (see the module docs), so
+/// fast queries flow through exchange and fold while a skewed query's
+/// heavy lane is still computing, and reporting supersteps overlap the
+/// next round's compute. Rounds where sub-lane splitting or edge-range
+/// splitting would engage fall back to the barrier path (splitting is the
+/// better answer to ONE pathologically heavy task; pipelining is the
+/// answer to heavy tasks *next to* light ones), as do serial engines —
+/// [`EngineMetrics::pipelined_rounds`] counts the rounds that actually
+/// ran ready-driven. Results are bit-identical for either setting, for
+/// every threads × workers × capacity × [`Sched`] × [`Split`] ×
+/// [`EdgeSplit`] combination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pipeline {
+    /// Strict compute → exchange → fold barriers (the PR 5 baseline).
+    Off,
+    /// Ready-driven super-rounds: eager per-query column handoff and
+    /// fold, with reporting overlapped onto the next round's compute.
+    On,
+}
+
+impl Pipeline {
+    /// The default mode for new engines: [`Pipeline::Off`], unless the
+    /// `QUEGEL_TEST_PIPELINE` environment variable says `on` (or `1`).
+    /// This is the CI test-matrix hook — `QUEGEL_TEST_PIPELINE=on cargo
+    /// test` runs the whole suite pipelined without touching any call
+    /// site; explicit [`Engine::pipeline`] calls still win.
+    pub fn default_from_env() -> Self {
+        match std::env::var("QUEGEL_TEST_PIPELINE") {
+            Ok(v) if v.eq_ignore_ascii_case("on") || v == "1" => {
+                static NOTE: std::sync::Once = std::sync::Once::new();
+                NOTE.call_once(|| {
+                    eprintln!(
+                        "quegel: QUEGEL_TEST_PIPELINE=on overrides the default \
+                         super-round mode (test-matrix hook); unset it for the \
+                         barrier baseline"
+                    );
+                });
+                Pipeline::On
+            }
+            _ => Pipeline::Off,
+        }
+    }
+}
+
+/// Phase tags for the busy/overlap interval log of a pipelined round.
+const PHASE_COMPUTE: u8 = 0;
+const PHASE_EXCHANGE: u8 = 1;
+const PHASE_FOLD: u8 = 2;
+
+/// Raw pointer handed to pipelined step jobs. `Send`/`Sync` because the
+/// access discipline is enforced by the readiness protocol at the use
+/// sites: shard `w` is touched only by the one (query, worker) job that
+/// owns it, and the whole `QueryRt` only by the query's last-finishing
+/// job (sequenced by the `remaining` AcqRel countdown) — with
+/// `WorkerPool::run`'s barrier ordering everything before the
+/// coordinator looks again.
+struct PipePtr<T>(*mut T);
+
+impl<T> Clone for PipePtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for PipePtr<T> {}
+// SAFETY: see the type docs — disjoint ownership per job plus the
+// countdown/barrier happens-before edges.
+unsafe impl<T: Send> Send for PipePtr<T> {}
+unsafe impl<T: Send> Sync for PipePtr<T> {}
+
+/// Shared handle to one running query inside a pipelined batch: raw
+/// routes to its state plus the readiness countdown that elects the lane
+/// which ships the query's exchange and fold.
+struct PipeQuery<A: QueryApp> {
+    rt: PipePtr<QueryRt<A>>,
+    /// `rt.shards.as_mut_ptr()`, captured while the coordinator still had
+    /// exclusive access so jobs never materialize a `&mut Vec` (two jobs
+    /// doing that concurrently would alias).
+    shards: PipePtr<WorkerShard<A>>,
+    query: PipePtr<A::Query>,
+    agg_prev: PipePtr<A::Agg>,
+    qid: QueryId,
+    /// Superstep this round executes for the query (1-based).
+    step: u64,
+    /// Lanes still computing; the job that decrements this to zero owns
+    /// the whole query and runs its exchange + fold.
+    remaining: AtomicUsize,
+}
+
+/// Read-shared context of one pipelined batch: app/cluster handles, the
+/// per-worker compute counters (the same integer totals the barrier path
+/// accumulates per lane, so the derived cost model is identical), and the
+/// busy/overlap instrumentation.
+struct PipeShared<'a, A: QueryApp> {
+    app: &'a A,
+    cluster: &'a Cluster,
+    workers: usize,
+    msg_size: usize,
+    max_supersteps: u64,
+    /// Per-worker-lane counters, `fetch_add`ed by step jobs: integer sums
+    /// are associative, so the totals match the barrier path's lane
+    /// counters exactly.
+    calls: Vec<AtomicU64>,
+    handled: Vec<AtomicU64>,
+    sent: Vec<AtomicU64>,
+    max_fan: AtomicU64,
+    /// Post-combiner wire bytes delivered this round.
+    round_bytes: AtomicU64,
+    compute_busy: &'a AtomicU64,
+    exchange_busy: &'a AtomicU64,
+    fold_busy: &'a AtomicU64,
+    /// Origin of the interval log's time axis.
+    base: Instant,
+    /// (phase, start_ns, end_ns) spans for the overlap sweep.
+    intervals: Mutex<Vec<(u8, u64, u64)>>,
+}
+
+impl<A: QueryApp> PipeShared<'_, A> {
+    /// Account one span of phase work: busy nanos plus an interval for
+    /// the overlap sweep.
+    fn record(&self, phase: u8, start: Instant, end: Instant) {
+        let ns = end.duration_since(start).as_nanos() as u64;
+        let busy = match phase {
+            PHASE_COMPUTE => self.compute_busy,
+            PHASE_EXCHANGE => self.exchange_busy,
+            _ => self.fold_busy,
+        };
+        busy.fetch_add(ns, Ordering::Relaxed);
+        let s = start.saturating_duration_since(self.base).as_nanos() as u64;
+        self.intervals.lock().unwrap().push((phase, s, s + ns));
+    }
+}
+
+/// A query whose reporting superstep was deferred by a pipelined round:
+/// its stats are already final (completion was accounted the round it
+/// converged); only `QueryApp::finish` is still owed, and it runs either
+/// as a job overlapped with the next pipelined round's compute or
+/// serially in [`Engine::flush_pending_reports`].
+struct PendingReport<A: QueryApp> {
+    rt: QueryRt<A>,
+    out: Option<A::Out>,
+}
+
+/// One pipelined (query, worker) step job: run the task's compute, and —
+/// when this is the query's last lane to finish — immediately drain the
+/// query's staged columns into the destination inboxes and run its fold,
+/// without waiting for any other query's lanes.
+fn pipe_task<A: QueryApp>(sh: &PipeShared<'_, A>, pq: &PipeQuery<A>, w: usize) {
+    let t0 = Instant::now();
+    let run = {
+        // SAFETY: exactly one job per (query, worker) exists, so shard `w`
+        // is this job's exclusive property until the countdown below;
+        // `query`/`agg_prev` are only read while step jobs run. The pool
+        // barrier sequences all of it before the coordinator continues.
+        let shard: &mut WorkerShard<A> = unsafe { &mut *pq.shards.0.add(w) };
+        let query: &A::Query = unsafe { &*pq.query.0 };
+        let agg_prev: &A::Agg = unsafe { &*pq.agg_prev.0 };
+        let mut task = Task {
+            qid: pq.qid,
+            step: pq.step,
+            query,
+            agg_prev,
+            shard,
+        };
+        // Private outbox scratch: unlike barrier lanes, tasks of distinct
+        // queries on the same worker run concurrently here, so they
+        // cannot share the lane scratch. Edge parking is disabled
+        // (ranges would re-serialize behind this job anyway); parking is
+        // output-neutral, so this changes no result.
+        let mut outbox: Vec<(VertexId, A::Msg)> = Vec::new();
+        run_task(sh.app, sh.cluster, EdgePolicy::Never, &mut task, &mut outbox)
+    };
+    debug_assert!(run.overflow.is_none() && run.fanned == 0);
+    sh.calls[w].fetch_add(run.calls, Ordering::Relaxed);
+    sh.handled[w].fetch_add(run.handled, Ordering::Relaxed);
+    sh.sent[w].fetch_add(run.sent, Ordering::Relaxed);
+    sh.max_fan.fetch_max(run.max_fan, Ordering::Relaxed);
+    let t1 = Instant::now();
+    sh.record(PHASE_COMPUTE, t0, t1);
+    // Readiness handoff: the RMW chain on `remaining` (AcqRel) orders
+    // this job after every sibling lane's writes; whoever reads 1 here is
+    // the query's last lane and owns the whole query from now on.
+    if pq.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
+        return;
+    }
+    // SAFETY: all `workers` step jobs of this query have completed (the
+    // countdown above), their borrows are dead, and the coordinator is
+    // still blocked in `WorkerPool::run` — exclusive access.
+    let rt: &mut QueryRt<A> = unsafe { &mut *pq.rt.0 };
+    let mut delivered = 0u64;
+    for dw in 0..sh.workers {
+        // Take the inbox so the src == dw iteration needs no split
+        // borrow; same map object the barrier exchange would have taken.
+        let mut inbox = std::mem::take(&mut rt.shards[dw].inbox);
+        for src in 0..sh.workers {
+            delivered += deliver_map(sh.app, &mut inbox, &mut rt.shards[src].staged[dw]);
+        }
+        rt.shards[dw].inbox = inbox;
+    }
+    rt.step += 1;
+    rt.stats.messages += delivered;
+    let q_bytes = delivered * sh.msg_size as u64;
+    rt.stats.bytes += q_bytes;
+    sh.round_bytes.fetch_add(q_bytes, Ordering::Relaxed);
+    let t2 = Instant::now();
+    sh.record(PHASE_EXCHANGE, t1, t2);
+    fold_query(sh.app, rt, sh.max_supersteps);
+    sh.record(PHASE_FOLD, t2, Instant::now());
+}
+
+/// Wall seconds during which two or more *distinct phases* were
+/// simultaneously active, from a (phase, start_ns, end_ns) interval log.
+/// Multiple concurrent jobs of the SAME phase do not count as overlap —
+/// each phase's intervals are merged into a union first, then a sweep
+/// accumulates the time with ≥ 2 phases live.
+fn overlap_seconds(intervals: &[(u8, u64, u64)]) -> f64 {
+    let mut events: Vec<(u64, i32)> = Vec::new();
+    for phase in [PHASE_COMPUTE, PHASE_EXCHANGE, PHASE_FOLD] {
+        let mut ivs: Vec<(u64, u64)> = intervals
+            .iter()
+            .filter(|iv| iv.0 == phase && iv.2 > iv.1)
+            .map(|iv| (iv.1, iv.2))
+            .collect();
+        ivs.sort_unstable();
+        let mut merged: Vec<(u64, u64)> = Vec::new();
+        for (s, e) in ivs {
+            match merged.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => merged.push((s, e)),
+            }
+        }
+        for (s, e) in merged {
+            events.push((s, 1));
+            events.push((e, -1));
+        }
+    }
+    // Sorting (t, delta) puts ends (-1) before starts (+1) at equal t, so
+    // touching-but-disjoint phases never register phantom overlap.
+    events.sort_unstable();
+    let mut active = 0i32;
+    let mut last_t = 0u64;
+    let mut overlap_ns = 0u64;
+    for (t, d) in events {
+        if active >= 2 {
+            overlap_ns += t - last_t;
+        }
+        active += d;
+        last_t = t;
+    }
+    overlap_ns as f64 * 1e-9
+}
+
+/// Serial-segment stopwatch for the barrier path: accumulates the wall
+/// time of coordinator-side phase work into that phase's busy counter,
+/// *pausing* around pool dispatches (whose jobs time themselves inside
+/// [`run_phase`]) so nothing is counted twice. Under `Pipeline::Off`
+/// phases never overlap, so busy-summing the serial segments and the job
+/// bodies reconstructs ≈ the phase's wall span — which is how the
+/// three-phases-sum-to-wall invariant survives the move to busy time.
+struct SerialTimer<'a> {
+    busy: &'a AtomicU64,
+    mark: Option<Instant>,
+}
+
+impl<'a> SerialTimer<'a> {
+    fn start(busy: &'a AtomicU64) -> Self {
+        Self {
+            busy,
+            mark: Some(Instant::now()),
+        }
+    }
+
+    fn pause(&mut self) {
+        if let Some(m) = self.mark.take() {
+            self.busy
+                .fetch_add(m.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn resume(&mut self) {
+        self.mark = Some(Instant::now());
+    }
+
+    fn stop(mut self) {
+        self.pause();
+    }
+}
+
 /// Dispatch one parallel phase over the pool at the `sched` granularity,
 /// or inline when no pool exists (`threads = 1`). All three phases
 /// (compute / exchange / fold) route through here, so job-granularity
 /// policy lives in exactly one place. Returns the pool's scheduling
 /// counters for the engine's per-phase metrics.
+///
+/// Each job body times itself into `busy` (nanoseconds of actual phase
+/// work, summed across threads) — the per-phase *busy* accounting that
+/// replaced the coordinator's wall-segment stopwatches, which double-count
+/// once phases overlap under [`Pipeline::On`].
 fn run_phase<T: Send>(
     pool: Option<&WorkerPool>,
     nthreads: usize,
     sched: Sched,
     items: &mut [T],
+    busy: &AtomicU64,
     f: impl Fn(&mut T) + Sync,
 ) -> RunStats {
     if items.is_empty() {
         return RunStats::default();
     }
     let Some(pool) = pool else {
+        let t0 = Instant::now();
         for item in items.iter_mut() {
             f(item);
         }
+        busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         return RunStats {
             jobs: items.len() as u64,
             steals: 0,
@@ -1097,16 +1410,24 @@ fn run_phase<T: Send>(
                 .chunks_mut(chunk)
                 .map(|chunk_items| {
                     Box::new(move || {
+                        let t0 = Instant::now();
                         for item in chunk_items.iter_mut() {
                             f(item);
                         }
+                        busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     }) as Job<'_>
                 })
                 .collect()
         }
         Sched::Stealing => items
             .iter_mut()
-            .map(|item| Box::new(move || f(item)) as Job<'_>)
+            .map(|item| {
+                Box::new(move || {
+                    let t0 = Instant::now();
+                    f(item);
+                    busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }) as Job<'_>
+            })
             .collect(),
     };
     pool.run(jobs)
@@ -1158,12 +1479,14 @@ impl<A: QueryApp> Engine<A> {
             sched: Sched::default_from_env(),
             split: Split::Adaptive,
             edge_split: EdgeSplit::Adaptive,
+            pipeline: Pipeline::default_from_env(),
             last_compute_imbalance: 0.0,
             seen_max_fan: 0,
             pool: None,
             n_vertices,
             queue: VecDeque::new(),
             inflight: Vec::new(),
+            pending_reports: Vec::new(),
             results: Vec::new(),
             next_qid: 0,
             clock: 0.0,
@@ -1238,6 +1561,14 @@ impl<A: QueryApp> Engine<A> {
         self.edge_split(EdgeSplit::MaxFanout(n))
     }
 
+    /// Select the super-round execution mode (see [`Pipeline`]).
+    /// [`Pipeline::Off`] — the strict barrier loop — is the default;
+    /// results are bit-identical for either setting.
+    pub fn pipeline(mut self, p: Pipeline) -> Self {
+        self.pipeline = p;
+        self
+    }
+
     /// Override the superstep safety cap.
     pub fn max_supersteps(mut self, n: u64) -> Self {
         self.max_supersteps = n;
@@ -1269,6 +1600,13 @@ impl<A: QueryApp> Engine<A> {
         &self.metrics
     }
 
+    /// Mutably borrow the engine-wide counters (e.g. to call
+    /// [`EngineMetrics::reset`] directly when re-syncing `sim_time` via
+    /// [`Engine::reset_metrics`] is not wanted).
+    pub fn metrics_mut(&mut self) -> &mut EngineMetrics {
+        &mut self.metrics
+    }
+
     /// Zero the engine-wide counters, so a caller can account a session
     /// (e.g. one `run_one`) in isolation: scheduler counters like
     /// `steals`/`jobs_executed` are per-`WorkerPool::run` batch and only
@@ -1287,8 +1625,10 @@ impl<A: QueryApp> Engine<A> {
         &self.results
     }
 
-    /// Drain completed query results.
+    /// Drain completed query results. Reports deferred by a pipelined
+    /// round are flushed first, so everything completed so far is visible.
     pub fn take_results(&mut self) -> Vec<QueryResult<A::Out>> {
+        self.flush_pending_reports();
         std::mem::take(&mut self.results)
     }
 
@@ -1326,6 +1666,10 @@ impl<A: QueryApp> Engine<A> {
     /// Execute one super-round. Returns false if there was nothing to do.
     pub fn super_round(&mut self) -> bool {
         if self.inflight.is_empty() && self.queue.is_empty() {
+            // The last pipelined round may have deferred reporting work
+            // with no next round to overlap it onto — run it now, so
+            // `run_until_idle` never strands a result.
+            self.flush_pending_reports();
             return false;
         }
         let wall_start = Instant::now();
@@ -1354,8 +1698,19 @@ impl<A: QueryApp> Engine<A> {
         }
         self.metrics.peak_inflight = self.metrics.peak_inflight.max(self.inflight.len());
         if self.inflight.is_empty() {
+            self.flush_pending_reports();
             return false;
         }
+
+        // Per-phase *busy* accumulators (nanoseconds of actual phase work,
+        // summed across threads). Every phase body — pool job or
+        // coordinator serial segment — times itself into one of these;
+        // the totals land in the `EngineMetrics` phase fields at the end
+        // of the round. Wall-segment stopwatches can't survive
+        // pipelining: once phases overlap, their segments double-count.
+        let compute_busy = AtomicU64::new(0);
+        let exchange_busy = AtomicU64::new(0);
+        let fold_busy = AtomicU64::new(0);
 
         // --- Thread budget & pool. Since the sub-lane split, threads
         // beyond `workers` are exactly what parallelizes INSIDE one
@@ -1401,7 +1756,11 @@ impl<A: QueryApp> Engine<A> {
                 (Sched::Stealing, Split::Adaptive) => adaptive_armed,
                 _ => false,
             };
-        let nthreads = if splittable {
+        // Pipelined rounds also use threads beyond the worker count: a
+        // batch holds (queries × workers) step jobs plus deferred report
+        // jobs, so there is work for them even with a single worker lane
+        // per query.
+        let nthreads = if splittable || self.pipeline == Pipeline::On {
             self.threads.max(1)
         } else {
             self.threads.min(workers).max(1)
@@ -1418,23 +1777,6 @@ impl<A: QueryApp> Engine<A> {
             self.pool = Some(WorkerPool::new(nthreads));
         }
 
-        let msg_size = self.app.msg_bytes() + self.cluster.cost.msg_header_bytes;
-        let app = &self.app;
-        let cluster = &self.cluster;
-        let pool = self.pool.as_ref();
-        let sched = self.sched;
-
-        // --- Compute phase: transpose the running queries into worker
-        // lanes (shard w of every query + worker w's scratch) and run them
-        // through up to four pool dispatches: **prep** (below-threshold
-        // tasks run to completion, heavy tasks transpose into work items,
-        // mega-fanouts park), **sub-jobs** (one per contiguous vertex
-        // sub-range, private staging), **edge ranges** (one per contiguous
-        // range of a parked fanout, private staging), and **merge** (fold
-        // everything back in fixed serial-stream order — staging columns
-        // concurrent per destination worker, control folds per lane). When
-        // nothing splits — the common balanced case — the prep dispatch IS
-        // the whole phase and the others are skipped.
         let policy = if nthreads == 1 {
             // Serial engine: sub-jobs would run one after another on the
             // same thread, so transposition + merge replay would be pure
@@ -1442,7 +1784,7 @@ impl<A: QueryApp> Engine<A> {
             // (pinned by the fuzzer), so skipping is unobservable.
             SplitPolicy::Never
         } else {
-            match (sched, self.split) {
+            match (self.sched, self.split) {
                 // The static baseline and explicit Off never split.
                 (Sched::Static, _) | (_, Split::Off) => SplitPolicy::Never,
                 (_, Split::MaxTaskVertices(n)) => SplitPolicy::Fixed(n.max(1)),
@@ -1462,12 +1804,49 @@ impl<A: QueryApp> Engine<A> {
         let edge_policy = if nthreads == 1 {
             EdgePolicy::Never
         } else {
-            match (sched, self.edge_split) {
+            match (self.sched, self.edge_split) {
                 (Sched::Static, _) | (_, EdgeSplit::Off) => EdgePolicy::Never,
                 (_, EdgeSplit::MaxFanout(n)) => EdgePolicy::Fixed(n.max(1)),
                 (_, EdgeSplit::Adaptive) => EdgePolicy::Adaptive { threads: nthreads },
             }
         };
+
+        // --- Pipelined-round gate. A round runs ready-driven only when no
+        // splitting machinery wants it: sub-lane and edge-range splitting
+        // answer ONE pathologically heavy task (they need barriers to
+        // merge), pipelining answers heavy tasks NEXT TO light ones. Every
+        // input here is deterministic (engine knobs plus skew evidence
+        // from prior rounds' integer counters), so the same round of the
+        // same run pipelines — or not — on every machine alike.
+        let pipelined = self.pipeline == Pipeline::On
+            && nthreads > 1
+            && self.pool.is_some()
+            && matches!(policy, SplitPolicy::Never)
+            && !edge_armed;
+        if pipelined {
+            return self.pipelined_round(wall_start, workers);
+        }
+        // Reporting work a pipelined round deferred can only overlap a
+        // pipelined batch; run it serially before this barrier round.
+        self.flush_pending_reports();
+
+        let msg_size = self.app.msg_bytes() + self.cluster.cost.msg_header_bytes;
+        let app = &self.app;
+        let cluster = &self.cluster;
+        let pool = self.pool.as_ref();
+        let sched = self.sched;
+
+        // --- Compute phase: transpose the running queries into worker
+        // lanes (shard w of every query + worker w's scratch) and run them
+        // through up to four pool dispatches: **prep** (below-threshold
+        // tasks run to completion, heavy tasks transpose into work items,
+        // mega-fanouts park), **sub-jobs** (one per contiguous vertex
+        // sub-range, private staging), **edge ranges** (one per contiguous
+        // range of a parked fanout, private staging), and **merge** (fold
+        // everything back in fixed serial-stream order — staging columns
+        // concurrent per destination worker, control folds per lane). When
+        // nothing splits — the common balanced case — the prep dispatch IS
+        // the whole phase and the others are skipped.
         if self.lane_scratch.len() < workers {
             self.lane_scratch.resize_with(workers, LaneScratch::new);
         }
@@ -1508,10 +1887,15 @@ impl<A: QueryApp> Engine<A> {
             }
         }
 
-        let compute_start = Instant::now();
-        let prep_stats = run_phase(pool, nthreads, sched, &mut lanes, |lane| {
+        // Coordinator-side serial segments of the phase (dispatch prep,
+        // buffer plumbing) count as phase busy time too; the timer pauses
+        // around pool dispatches, whose job bodies time themselves.
+        let mut ct = SerialTimer::start(&compute_busy);
+        ct.pause();
+        let prep_stats = run_phase(pool, nthreads, sched, &mut lanes, &compute_busy, |lane| {
             prep_lane(app, cluster, lane)
         });
+        ct.resume();
         self.metrics.compute_sched.add(prep_stats.jobs, prep_stats.steals);
 
         // Sub-job dispatch: pair each split task's item sub-ranges with the
@@ -1538,9 +1922,11 @@ impl<A: QueryApp> Engine<A> {
         }
         let did_subjobs = !subjobs.is_empty();
         if did_subjobs {
-            let sub_stats = run_phase(pool, nthreads, sched, &mut subjobs, |sub| {
+            ct.pause();
+            let sub_stats = run_phase(pool, nthreads, sched, &mut subjobs, &compute_busy, |sub| {
                 run_sub(app, cluster, edge_policy, sub)
             });
+            ct.resume();
             self.metrics.compute_sched.add(sub_stats.jobs, sub_stats.steals);
             self.metrics.subjobs_executed += sub_stats.jobs;
             self.metrics.tasks_split += tasks_split;
@@ -1594,9 +1980,11 @@ impl<A: QueryApp> Engine<A> {
         }
         let n_edge_jobs = edge_jobs.len() as u64;
         if !edge_jobs.is_empty() {
-            let edge_stats = run_phase(pool, nthreads, sched, &mut edge_jobs, |job| {
+            ct.pause();
+            let edge_stats = run_phase(pool, nthreads, sched, &mut edge_jobs, &compute_busy, |job| {
                 run_edge(app, cluster, job)
             });
+            ct.resume();
             self.metrics.compute_sched.add(edge_stats.jobs, edge_stats.steals);
             self.metrics.edge_ranges_split += n_edge_jobs;
         }
@@ -1668,10 +2056,13 @@ impl<A: QueryApp> Engine<A> {
                     merge_jobs.push(MergeJob::Control(lane));
                 }
             }
-            let merge_stats = run_phase(pool, nthreads, sched, &mut merge_jobs, |job| match job {
-                MergeJob::Control(lane) => control_merge(app, cluster, lane),
-                MergeJob::Staging(s) => s.col.replay(app),
-            });
+            ct.pause();
+            let merge_stats =
+                run_phase(pool, nthreads, sched, &mut merge_jobs, &compute_busy, |job| match job {
+                    MergeJob::Control(lane) => control_merge(app, cluster, lane),
+                    MergeJob::Staging(s) => s.col.replay(app),
+                });
+            ct.resume();
             self.metrics.compute_sched.add(merge_stats.jobs, merge_stats.steals);
             // Hand the replayed staging maps back to their shards, then
             // recycle the drained buffers and stream husks. Two passes:
@@ -1707,7 +2098,7 @@ impl<A: QueryApp> Engine<A> {
                 ord_pool.truncate(ORD_POOL_CAP_PER_WORKER * workers);
             }
         }
-        self.metrics.compute_time += compute_start.elapsed().as_secs_f64();
+        ct.stop();
 
         let c1 = cluster.cost.per_vertex_compute_s;
         let c2 = cluster.cost.per_msg_overhead_s;
@@ -1778,7 +2169,7 @@ impl<A: QueryApp> Engine<A> {
         // independently. The maps are *taken* from the shards (cheap
         // pointer-sized moves) so exchange lanes own their data outright,
         // and are handed back below to recycle their capacity.
-        let exchange_start = Instant::now();
+        let mut et = SerialTimer::start(&exchange_busy);
         if self.exchange_scratch.len() < workers {
             self.exchange_scratch
                 .resize_with(workers, || ExchangeLane { tasks: Vec::new() });
@@ -1818,9 +2209,12 @@ impl<A: QueryApp> Engine<A> {
             // Drop stale slots from rounds that ran more queries.
             lane.tasks.truncate(nq);
         }
-        let exchange_stats = run_phase(pool, nthreads, sched, &mut *ex_lanes, |lane| {
-            run_exchange(app, lane)
-        });
+        et.pause();
+        let exchange_stats =
+            run_phase(pool, nthreads, sched, &mut *ex_lanes, &exchange_busy, |lane| {
+                run_exchange(app, lane)
+            });
+        et.resume();
         self.metrics.exchange_sched.add(exchange_stats.jobs, exchange_stats.steals);
         // Post-pass: hand filled inboxes and drained staging maps back to
         // their shards (recycling capacity) and fold delivered counts into
@@ -1847,16 +2241,18 @@ impl<A: QueryApp> Engine<A> {
             rt.stats.bytes += q_bytes;
             round_bytes += q_bytes;
         }
-        self.metrics.exchange_time += exchange_start.elapsed().as_secs_f64();
+        et.stop();
 
         // --- Fold phase: per-query aggregator fold, master hook and
         // lifecycle, parallel across queries (the fold inside each query
         // stays in worker order, so results are unchanged).
-        let barrier_start = Instant::now();
+        let mut ft = SerialTimer::start(&fold_busy);
         let max_supersteps = self.max_supersteps;
-        let fold_stats = run_phase(pool, nthreads, sched, &mut self.inflight, |rt| {
+        ft.pause();
+        let fold_stats = run_phase(pool, nthreads, sched, &mut self.inflight, &fold_busy, |rt| {
             fold_query(app, rt, max_supersteps)
         });
+        ft.resume();
         self.metrics.fold_sched.add(fold_stats.jobs, fold_stats.steals);
 
         // Aggregator sync bytes: one Agg per worker per running query.
@@ -1900,9 +2296,307 @@ impl<A: QueryApp> Engine<A> {
             });
             false // drop: frees HT_Q entry + all LUT_v entries of q
         });
-        self.metrics.barrier_time += barrier_start.elapsed().as_secs_f64();
+        ft.stop();
 
+        self.fold_busy_into_metrics(&compute_busy, &exchange_busy, &fold_busy);
         self.metrics.wall_time += wall_start.elapsed().as_secs_f64();
         true
+    }
+
+    /// Land a round's per-phase busy accumulators in the metrics fields.
+    fn fold_busy_into_metrics(
+        &mut self,
+        compute_busy: &AtomicU64,
+        exchange_busy: &AtomicU64,
+        fold_busy: &AtomicU64,
+    ) {
+        self.metrics.compute_time += compute_busy.load(Ordering::Relaxed) as f64 * 1e-9;
+        self.metrics.exchange_time += exchange_busy.load(Ordering::Relaxed) as f64 * 1e-9;
+        self.metrics.barrier_time += fold_busy.load(Ordering::Relaxed) as f64 * 1e-9;
+    }
+
+    /// Run the reporting supersteps a pipelined round deferred, serially
+    /// on the coordinator: the fallback for rounds that cannot pipeline,
+    /// for the engine draining idle, and for [`Engine::take_results`].
+    /// Results are pushed in pending (completion) order, so the result
+    /// sequence is exactly what the barrier path would have produced.
+    fn flush_pending_reports(&mut self) {
+        if self.pending_reports.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        let app = &self.app;
+        let results = &mut self.results;
+        for rep in std::mem::take(&mut self.pending_reports) {
+            let PendingReport { rt, out } = rep;
+            let out = out.unwrap_or_else(|| {
+                let mut iter = rt
+                    .shards
+                    .iter()
+                    .flat_map(|s| s.vstate.iter().map(|(&v, st)| (v, &st.vq)));
+                app.finish(&rt.query, &mut iter, &rt.agg_prev)
+            });
+            results.push(QueryResult {
+                qid: rt.id,
+                out,
+                stats: rt.stats,
+            });
+        }
+        // Reporting is fold-phase work; it runs outside any round's wall
+        // span here, so it extends wall time by the same amount.
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.barrier_time += dt;
+        self.metrics.wall_time += dt;
+    }
+
+    /// One ready-driven super-round (see the module docs and [`Pipeline`]):
+    /// a single pool batch holding one step job per (running query, worker)
+    /// plus the previous pipelined round's deferred reporting jobs. Fast
+    /// queries drain through exchange and fold inside the batch — the last
+    /// lane of each query to finish ships its staged columns and folds it —
+    /// while slow lanes are still computing; nothing waits for the slowest
+    /// query except its own lifecycle.
+    ///
+    /// Everything observable (outputs, per-query stats, the simulated
+    /// clock, the cost-model metrics) is bit-identical to the barrier
+    /// path: step jobs run the same `run_task`, delivery replays the same
+    /// source-order [`deliver_map`] sequence, folds stay per-query in
+    /// worker order, and counters are integers folded in fixed order.
+    fn pipelined_round(&mut self, wall_start: Instant, workers: usize) -> bool {
+        let compute_busy = AtomicU64::new(0);
+        let exchange_busy = AtomicU64::new(0);
+        let fold_busy = AtomicU64::new(0);
+        let msg_size = self.app.msg_bytes() + self.cluster.cost.msg_header_bytes;
+        let mut reports = std::mem::take(&mut self.pending_reports);
+        let shared = PipeShared {
+            app: &self.app,
+            cluster: &self.cluster,
+            workers,
+            msg_size,
+            max_supersteps: self.max_supersteps,
+            calls: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            handled: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            sent: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            max_fan: AtomicU64::new(0),
+            round_bytes: AtomicU64::new(0),
+            compute_busy: &compute_busy,
+            exchange_busy: &exchange_busy,
+            fold_busy: &fold_busy,
+            base: wall_start,
+            intervals: Mutex::new(Vec::new()),
+        };
+        // One raw route per running query, collected in a single
+        // `iter_mut` pass (re-indexing `inflight` between queries would
+        // invalidate earlier pointers); every field pointer derives from
+        // the query's own `rt_ptr` so jobs touch nothing else.
+        let mut pipe_queries: Vec<PipeQuery<A>> = Vec::new();
+        for rt in self.inflight.iter_mut() {
+            if rt.phase != Phase::Running {
+                continue;
+            }
+            let rt_ptr: *mut QueryRt<A> = rt;
+            // SAFETY: `rt_ptr` is valid for the whole batch (the coordinator
+            // blocks in `WorkerPool::run` and touches `inflight` only after
+            // it returns); derived pointers are read per the discipline on
+            // [`PipePtr`].
+            unsafe {
+                pipe_queries.push(PipeQuery {
+                    rt: PipePtr(rt_ptr),
+                    shards: PipePtr((*rt_ptr).shards.as_mut_ptr()),
+                    query: PipePtr(std::ptr::addr_of_mut!((*rt_ptr).query)),
+                    agg_prev: PipePtr(std::ptr::addr_of_mut!((*rt_ptr).agg_prev)),
+                    qid: (*rt_ptr).id,
+                    step: (*rt_ptr).step + 1,
+                    remaining: AtomicUsize::new(workers),
+                });
+            }
+        }
+        let sh = &shared;
+        let mut jobs: Vec<Job<'_>> =
+            Vec::with_capacity(pipe_queries.len() * workers + reports.len());
+        for pq in pipe_queries.iter() {
+            for w in 0..workers {
+                jobs.push(Box::new(move || pipe_task(sh, pq, w)));
+            }
+        }
+        // Deferred reporting supersteps from the LAST pipelined round run
+        // at the tail of this batch, overlapped with this round's compute.
+        // Their stats were finalized the round they converged, so timing
+        // is untouched; only `finish` still has to run.
+        for rep in reports.iter_mut() {
+            jobs.push(Box::new(move || {
+                let t0 = Instant::now();
+                let mut iter = rep
+                    .rt
+                    .shards
+                    .iter()
+                    .flat_map(|s| s.vstate.iter().map(|(&v, st)| (v, &st.vq)));
+                rep.out = Some(sh.app.finish(&rep.rt.query, &mut iter, &rep.rt.agg_prev));
+                sh.record(PHASE_FOLD, t0, Instant::now());
+            }));
+        }
+        let stats = self
+            .pool
+            .as_ref()
+            .expect("pipelined gate requires a pool")
+            .run(jobs);
+        // The batch is heterogeneous (steps + reports); its scheduling
+        // counters land on the compute ledger, which dominates it.
+        self.metrics.compute_sched.add(stats.jobs, stats.steals);
+        self.metrics.pipelined_rounds += 1;
+        for rep in reports {
+            let out = rep.out.expect("report job ran in this batch");
+            self.results.push(QueryResult {
+                qid: rep.rt.id,
+                out,
+                stats: rep.rt.stats,
+            });
+        }
+
+        // --- Cost-model accounting, from the same integer counters the
+        // barrier path sums per lane (fetch_add totals are associative, so
+        // the floats derived here are bit-identical).
+        let c1 = self.cluster.cost.per_vertex_compute_s;
+        let c2 = self.cluster.cost.per_msg_overhead_s;
+        let mut worker_cost = Vec::with_capacity(workers);
+        let mut lane_load = Vec::with_capacity(workers);
+        let mut round_msgs = 0u64;
+        let mut total_compute_calls = 0u64;
+        let mut max_unit_load = 0.0_f64;
+        for w in 0..workers {
+            let calls = shared.calls[w].load(Ordering::Relaxed);
+            let handled = shared.handled[w].load(Ordering::Relaxed);
+            let sent = shared.sent[w].load(Ordering::Relaxed);
+            let cost = calls as f64 * c1 + handled as f64 * c2;
+            worker_cost.push(cost);
+            // Same imbalance basis as the barrier path; with no splitting
+            // the schedulable unit IS the lane.
+            let load = cost + sent as f64 * c2;
+            max_unit_load = max_unit_load.max(load);
+            lane_load.push(load);
+            round_msgs += sent;
+            total_compute_calls += calls;
+        }
+        let round_max_fan = shared.max_fan.load(Ordering::Relaxed);
+        self.metrics.max_edge_task = self.metrics.max_edge_task.max(round_max_fan);
+        self.seen_max_fan = self.seen_max_fan.max(round_max_fan);
+        self.metrics.total_compute_calls += total_compute_calls;
+        let max_load = lane_load.iter().copied().fold(0.0_f64, f64::max);
+        let total_load: f64 = lane_load.iter().sum();
+        if total_load > 0.0 {
+            let ratio = max_load * lane_load.len() as f64 / total_load;
+            self.last_compute_imbalance = ratio;
+            if ratio > self.metrics.max_lane_imbalance {
+                self.metrics.max_lane_imbalance = ratio;
+            }
+            let post_ratio = max_unit_load * lane_load.len() as f64 / total_load;
+            if post_ratio > self.metrics.max_post_split_imbalance {
+                self.metrics.max_post_split_imbalance = post_ratio;
+            }
+        }
+        let round_bytes = shared.round_bytes.load(Ordering::Relaxed)
+            + (self.inflight.len() * workers * std::mem::size_of::<A::Agg>()) as u64;
+
+        // --- Advance the simulated clock (identical inputs → identical
+        // `dt` → identical per-query `finished_at` stamps).
+        let dt = self.cluster.super_round_time(&worker_cost, round_bytes as usize);
+        self.clock += dt;
+        self.metrics.super_rounds += 1;
+        self.metrics.total_messages += round_msgs;
+        self.metrics.total_bytes += round_bytes;
+        self.metrics.sim_time = self.clock;
+
+        // --- Extract queries that converged this round, in `inflight`
+        // order (the order the barrier path reports them). Their stats are
+        // finalized NOW — completion timing is identical to the barrier
+        // path, and capacity frees this round either way — but `finish`
+        // is deferred into the next pipelined batch.
+        let mut i = 0;
+        while i < self.inflight.len() {
+            if self.inflight[i].phase != Phase::Reporting {
+                i += 1;
+                continue;
+            }
+            let mut rt = self.inflight.remove(i);
+            let touched = rt.touched();
+            rt.stats.touched = touched;
+            rt.stats.access_rate = touched as f64 / self.n_vertices.max(1) as f64;
+            rt.stats.finished_at = self.clock;
+            self.metrics.queries_completed += 1;
+            self.pending_reports.push(PendingReport { rt, out: None });
+        }
+
+        drop(pipe_queries);
+        self.metrics.overlap_time +=
+            overlap_seconds(&shared.intervals.into_inner().expect("no poisoned batch"));
+        self.fold_busy_into_metrics(&compute_busy, &exchange_busy, &fold_busy);
+        self.metrics.wall_time += wall_start.elapsed().as_secs_f64();
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = 1_000_000_000; // 1 second in the log's nanosecond axis
+
+    #[test]
+    fn overlap_requires_two_distinct_phases() {
+        // Phases strictly one after another: no overlap.
+        let log = [
+            (PHASE_COMPUTE, 0, 2 * S),
+            (PHASE_EXCHANGE, 2 * S, 3 * S),
+            (PHASE_FOLD, 3 * S, 4 * S),
+        ];
+        assert_eq!(overlap_seconds(&log), 0.0);
+        // Touching boundaries are not overlap (ends sort before starts).
+        let log = [(PHASE_COMPUTE, 0, S), (PHASE_FOLD, S, 2 * S)];
+        assert_eq!(overlap_seconds(&log), 0.0);
+    }
+
+    #[test]
+    fn same_phase_concurrency_is_not_overlap() {
+        // Four compute jobs running at once is parallelism, not phase
+        // overlap — the union of one phase's intervals counts once.
+        let log = [
+            (PHASE_COMPUTE, 0, 2 * S),
+            (PHASE_COMPUTE, 0, 2 * S),
+            (PHASE_COMPUTE, S, 3 * S),
+            (PHASE_COMPUTE, 0, 3 * S),
+        ];
+        assert_eq!(overlap_seconds(&log), 0.0);
+    }
+
+    #[test]
+    fn overlap_measures_wall_with_two_phases_live() {
+        // Compute [0, 10s), exchange [5s, 15s): 5 seconds of overlap.
+        let log = [(PHASE_COMPUTE, 0, 10 * S), (PHASE_EXCHANGE, 5 * S, 15 * S)];
+        let got = overlap_seconds(&log);
+        assert!((got - 5.0).abs() < 1e-9, "got {got}");
+        // A third phase inside the same window adds no extra overlap
+        // (the sweep counts wall time with >= 2 live, not pair counts).
+        let log = [
+            (PHASE_COMPUTE, 0, 10 * S),
+            (PHASE_EXCHANGE, 5 * S, 15 * S),
+            (PHASE_FOLD, 6 * S, 9 * S),
+        ];
+        let got = overlap_seconds(&log);
+        assert!((got - 5.0).abs() < 1e-9, "got {got}");
+        // Fragmented same-phase intervals merge before the sweep.
+        let log = [
+            (PHASE_COMPUTE, 0, 4 * S),
+            (PHASE_COMPUTE, 4 * S, 10 * S),
+            (PHASE_FOLD, 8 * S, 12 * S),
+        ];
+        let got = overlap_seconds(&log);
+        assert!((got - 2.0).abs() < 1e-9, "got {got}");
+    }
+
+    #[test]
+    fn empty_and_zero_width_intervals_are_ignored() {
+        assert_eq!(overlap_seconds(&[]), 0.0);
+        let log = [(PHASE_COMPUTE, 0, 10 * S), (PHASE_EXCHANGE, 5 * S, 5 * S)];
+        assert_eq!(overlap_seconds(&log), 0.0);
     }
 }

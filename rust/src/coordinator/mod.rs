@@ -38,18 +38,30 @@
 //! destination-sharded so the fold of a mega-fanout is itself parallel
 //! across workers' staging maps.
 //!
+//! Since the pipelined super-rounds ([`Pipeline`]), the three phases are
+//! no longer global barriers either: under `Pipeline::On` a super-round is
+//! ONE pool batch of per-(query, worker) step jobs, and the last lane of
+//! each query to finish its compute ships that query's staged columns and
+//! runs its fold immediately — fast queries drain through exchange and
+//! fold while a skewed query's heavy lane is still computing, and the
+//! reporting supersteps of queries that converged last round run as jobs
+//! of the same batch, overlapped with this round's compute.
+//!
 //! The determinism argument is uniform: stealing moves jobs between
 //! executors, splitting (either granularity) re-groups a fixed serial
-//! order — every order-sensitive merge (message delivery, aggregator
-//! fold, sub-buffer and edge-range absorption) replays that order inside
-//! a single job or on the coordinator — so every thread count, scheduler,
-//! split and edge-split setting produces bit-identical results (see
-//! `rust/tests/determinism.rs` and the randomized matrix in
+//! order, and pipelining only *re-times* each query's private
+//! exchange-then-fold cascade (per-query state is disjoint; the delivery
+//! replay inside the cascade is the barrier path's source-order sequence)
+//! — every order-sensitive merge (message delivery, aggregator fold,
+//! sub-buffer and edge-range absorption) replays that order inside a
+//! single job or on the coordinator — so every thread count, scheduler,
+//! split, edge-split and pipeline setting produces bit-identical results
+//! (see `rust/tests/determinism.rs` and the randomized matrix in
 //! `rust/tests/fuzz_determinism.rs`).
 
 mod engine;
 mod pool;
 mod query;
 
-pub use engine::{EdgeSplit, Engine, Sched, Split};
+pub use engine::{EdgeSplit, Engine, Pipeline, Sched, Split};
 pub use query::{QueryResult, VState};

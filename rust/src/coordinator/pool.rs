@@ -38,6 +38,16 @@
 //! `resume_unwind` on the submitting thread once the batch drained; the
 //! workers themselves survive, so the pool stays usable and joinable on
 //! drop (pinned by `rust/tests/pool_drop.rs`).
+//!
+//! Since the pipelined super-rounds (`Pipeline::On`), a batch may be
+//! **heterogeneous**: per-(query, worker) step jobs next to deferred
+//! reporting jobs, with phase *sequencing* handled inside the jobs
+//! themselves (the last lane of a query to finish its compute runs the
+//! query's exchange and fold inline — a readiness countdown, not a pool
+//! feature). The determinism argument is unchanged: the countdown orders
+//! a query's cascade strictly after every sibling step job regardless of
+//! which threads ran them or in what order, and the coordinator still
+//! consumes everything only after the full batch barrier.
 
 use std::any::Any;
 use std::collections::VecDeque;
@@ -129,7 +139,6 @@ impl WorkerPool {
     }
 
     /// Number of pool workers.
-    #[allow(dead_code)]
     pub fn threads(&self) -> usize {
         self.handles.len()
     }

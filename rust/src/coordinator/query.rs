@@ -43,6 +43,43 @@ pub(crate) fn merge_msg<A: QueryApp>(app: &A, into: &mut MsgSlot<A::Msg>, m: A::
     1
 }
 
+/// Drain one source shard's staging map into a destination inbox,
+/// replaying the sender-side combiner per message through [`merge_msg`] —
+/// the single delivery rule shared by the barrier exchange lanes and the
+/// pipelined eager column handoff, so the two paths can never diverge.
+/// Returns messages delivered (post-combiner); leaves `srcmap` empty with
+/// its capacity kept.
+pub(crate) fn deliver_map<A: QueryApp>(
+    app: &A,
+    inbox: &mut FxHashMap<VertexId, MsgSlot<A::Msg>>,
+    srcmap: &mut FxHashMap<VertexId, MsgSlot<A::Msg>>,
+) -> u64 {
+    if srcmap.is_empty() {
+        return 0; // skip the W²-mostly-empty buckets cheaply
+    }
+    let mut delivered = 0u64;
+    for (dst, slot) in srcmap.drain() {
+        match inbox.entry(dst) {
+            Entry::Occupied(mut e) => {
+                let into = e.get_mut();
+                match slot {
+                    MsgSlot::One(m) => delivered += merge_msg(app, into, m),
+                    MsgSlot::Many(ms) => {
+                        for m in ms {
+                            delivered += merge_msg(app, into, m);
+                        }
+                    }
+                }
+            }
+            Entry::Vacant(e) => {
+                delivered += slot.len() as u64;
+                e.insert(slot); // moves, no allocation
+            }
+        }
+    }
+    delivered
+}
+
 /// Per-vertex, per-query state (one `LUT_v[q]` entry): the vertex value
 /// `a_q(v)` plus the halted flag and a stamp to dedup processing within a
 /// super-round.

@@ -365,6 +365,73 @@ pub fn mono_hub(n: usize, spoke_deg: usize, seed: u64) -> Graph {
     b.build()
 }
 
+/// Pipelining stressor: ONE deep, lane-pinned traversal next to a sea of
+/// cheap point lookups. Splitting stressors ([`mega_hub`], [`mono_hub`])
+/// make one *task* pathological; this one makes one *query* pathological
+/// while every other query is trivial — the exact shape where barriered
+/// super-rounds waste the most time, because every cheap query's exchange,
+/// fold and reporting waits on the slow query's hub lane each round:
+///
+/// * the **slow component** is a ladder of `depth` bands of `width`
+///   vertices, every id a multiple of `stride` — i.e. all on worker 0
+///   under the engine's `v mod W` partitioning on a `Cluster::new(stride)`.
+///   Vertex 0 (the hub) fans to band 0; each band-`i` vertex points to all
+///   of band `i + 1`, so a BFS from the hub keeps a `width`-vertex
+///   frontier (`width²` messages per superstep) pinned to lane 0 for
+///   `depth` supersteps while every other lane is idle for that query;
+/// * the **cheap components** are small bidirectional stars (4–11
+///   vertices, sizes drawn from `seed`) over every id the ladder does not
+///   use. A traversal from any star member converges in ≤ 3 supersteps
+///   touching ≤ a dozen vertices — the "point lookup" population whose
+///   results a pipelined engine can drain while the slow query grinds.
+///
+/// The two populations are deliberately disconnected: cheap queries must
+/// never wander into the ladder and become slow themselves.
+pub fn one_slow_query(n: usize, stride: usize, width: usize, depth: usize, seed: u64) -> Graph {
+    assert!(stride >= 2, "stride 1 would put every vertex on worker 0");
+    assert!(width >= 1 && depth >= 1);
+    assert!(
+        stride * width * depth < n,
+        "need {} lane-0 ids for the ladder, have {}",
+        width * depth,
+        n / stride
+    );
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n);
+    // Band i, slot k lives at stride * (1 + i*width + k): a multiple of
+    // stride, hence worker 0.
+    let band = |i: usize, k: usize| (stride * (1 + i * width + k)) as VertexId;
+    for k in 0..width {
+        b.edge(0, band(0, k));
+    }
+    for i in 0..depth - 1 {
+        for k in 0..width {
+            for k2 in 0..width {
+                b.edge(band(i, k), band(i + 1, k2));
+            }
+        }
+    }
+    // Cheap stars over every id the ladder does not use (including the
+    // unused multiples of stride — a few stars touching lane 0 is fine,
+    // their work is tiny either way).
+    let free: Vec<VertexId> = (1..n)
+        .filter(|&v| !(v % stride == 0 && v / stride <= width * depth))
+        .map(|v| v as VertexId)
+        .collect();
+    let mut i = 0;
+    while i < free.len() {
+        let size = 4 + rng.below_usize(8);
+        let end = (i + size).min(free.len());
+        let center = free[i];
+        for &leaf in &free[i + 1..end] {
+            b.edge(center, leaf);
+            b.edge(leaf, center);
+        }
+        i = end;
+    }
+    b.build()
+}
+
 /// Random (s, t) query pairs over `n` vertices.
 pub fn random_pairs(n: usize, count: usize, seed: u64) -> Vec<(VertexId, VertexId)> {
     assert!(n >= 2, "need at least two vertices for distinct pairs");
@@ -558,6 +625,74 @@ mod tests {
         // Strongly connected through the hub: everything reaches.
         let pairs = random_pairs(n, 10, 32);
         assert!((reach_fraction(&g, &pairs) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn one_slow_query_pins_the_ladder_to_lane_zero() {
+        let stride = 4;
+        let (n, width, depth) = (4_000, 16, 12);
+        let g = one_slow_query(n, stride, width, depth, 41);
+        assert_eq!(g.out(0).len(), width, "hub fans to band 0");
+        // BFS from the hub: the frontier stays on worker 0 for the whole
+        // ladder and touches exactly the ladder.
+        let mut vis = BitSet::new(n);
+        vis.set(0);
+        let mut frontier = vec![0u32];
+        let mut levels = 0usize;
+        let mut touched = 1usize;
+        while !frontier.is_empty() {
+            let mut next = Vec::new();
+            for &u in &frontier {
+                for &v in g.out(u) {
+                    if !vis.set(v as usize) {
+                        assert_eq!(
+                            v as usize % stride,
+                            0,
+                            "slow frontier must stay on worker 0"
+                        );
+                        next.push(v);
+                        touched += 1;
+                    }
+                }
+            }
+            frontier = next;
+            if !frontier.is_empty() {
+                levels += 1;
+            }
+        }
+        assert_eq!(levels, depth, "one superstep per band");
+        assert_eq!(touched, 1 + width * depth, "hub + the full ladder");
+        // Cheap components: a traversal from any non-multiple id converges
+        // in a couple of hops touching at most one small star.
+        for src in [1u32, 997, 2_001, 3_998] {
+            assert_ne!(src as usize % stride, 0);
+            let mut vis = BitSet::new(n);
+            vis.set(src as usize);
+            let mut frontier = vec![src];
+            let mut hops = 0usize;
+            let mut touched = 1usize;
+            while !frontier.is_empty() {
+                let mut next = Vec::new();
+                for &u in &frontier {
+                    for &v in g.out(u) {
+                        if !vis.set(v as usize) {
+                            next.push(v);
+                            touched += 1;
+                        }
+                    }
+                }
+                frontier = next;
+                if !frontier.is_empty() {
+                    hops += 1;
+                }
+            }
+            assert!(hops <= 2, "leaf -> center -> leaves, got {hops}");
+            assert!(touched <= 11, "one star at most, got {touched}");
+        }
+        // Deterministic like every other generator.
+        let g2 = one_slow_query(n, stride, width, depth, 41);
+        assert_eq!(g.num_edges(), g2.num_edges());
+        assert_eq!(g.out(0), g2.out(0));
     }
 
     #[test]

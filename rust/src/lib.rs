@@ -36,7 +36,15 @@
 //!   order inside a single job, so results are bit-identical for every
 //!   thread count, scheduler, split and edge-split setting (pinned by
 //!   the determinism suite and the randomized fuzzer in
-//!   `rust/tests/fuzz_determinism.rs`).
+//!   `rust/tests/fuzz_determinism.rs`). Under the `Pipeline` knob the
+//!   three phases stop being global barriers altogether: a pipelined
+//!   super-round is one pool batch of per-(query, worker) step jobs
+//!   where the last lane of each query to finish ships that query's
+//!   exchange and fold immediately, and deferred reporting supersteps
+//!   overlap the next round's compute — same outputs, bit for bit, with
+//!   the engine's phase metrics accounted as per-phase *busy* time
+//!   (work actually done, summed across threads) plus an `overlap_time`
+//!   gauge of wall time with two-plus phases simultaneously active.
 //! * [`vertex`] — the `QueryApp` programming interface (paper §4); app and
 //!   associated types carry the `Send`/`Sync` bounds the threaded shards
 //!   require.

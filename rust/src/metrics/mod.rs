@@ -74,16 +74,37 @@ pub struct EngineMetrics {
     pub sim_time: f64,
     /// Wall-clock seconds spent inside the engine (perf pass metric).
     pub wall_time: f64,
-    /// Wall-clock seconds spent in the (possibly pooled) compute phase.
+    /// **Busy** seconds of compute-phase work: time spent inside compute
+    /// jobs (lane prep, sub-jobs, edge ranges, merges), summed across
+    /// pool threads, plus the coordinator's serial compute segments.
+    /// Under `Pipeline::Off` no two phases overlap, so the three phase
+    /// fields sum to ≈ `wall_time`; under `Pipeline::On` phases run
+    /// concurrently, so the busy-sum may exceed `wall_time` (bounded by
+    /// `threads × wall_time`) — a wall-segment stopwatch here would
+    /// double-count the overlapped spans, which is exactly the bug the
+    /// busy accounting replaces.
     pub compute_time: f64,
-    /// Wall-clock seconds spent in the exchange phase: destination-sharded
-    /// message routing between worker shards, parallel across destination
-    /// workers on the pool (includes the serial map handoff around it).
+    /// **Busy** seconds of exchange work: inbox delivery of staged
+    /// columns (the pooled destination drains, the pipelined eager
+    /// column applications, and the serial map handoff around them).
     pub exchange_time: f64,
-    /// Wall-clock seconds spent in the remaining barrier work: the
-    /// per-query aggregator fold + lifecycle (parallel across queries),
-    /// the simulated-clock advance and the reporting round.
+    /// **Busy** seconds of the remaining barrier work: the per-query
+    /// aggregator fold + lifecycle, the simulated-clock advance and the
+    /// reporting round (including reporting jobs overlapped onto the
+    /// next round's compute under `Pipeline::On`).
     pub barrier_time: f64,
+    /// Wall seconds during which ≥2 phases were *simultaneously* active,
+    /// summed over pipelined super-rounds. Always 0 under
+    /// `Pipeline::Off`; under `Pipeline::On` this is the overlap the
+    /// pipeline bought (and the reason the phase fields are busy time:
+    /// wall-segment timers cannot attribute these spans to one phase).
+    pub overlap_time: f64,
+    /// Super-rounds that ran the pipelined (ready-driven) path rather
+    /// than the barrier path. Zero under `Pipeline::Off`; under
+    /// `Pipeline::On` rounds may still fall back to the barrier path
+    /// (serial engines, split-armed rounds), so tests read this to prove
+    /// the pipeline actually engaged.
+    pub pipelined_rounds: u64,
     /// Queries completed (result reported). Accounted when the reporting
     /// round runs, so it never depends on the caller draining
     /// `take_results` — interactive `run_one` sessions and batch sessions
@@ -148,15 +169,30 @@ impl EngineMetrics {
             + self.fold_sched.jobs_executed
     }
 
-    /// Zero every counter, so per-session accounting is possible on a
-    /// long-lived engine. Scheduler counters (`jobs_executed`, `steals`)
-    /// and the sub-lane split counters are per-batch values that only ever
-    /// accumulate — without a reset between sessions (e.g. two `run_one`
-    /// calls), the second session reads the first one's totals too.
-    /// Callers normally go through `Engine::reset_metrics`, which also
-    /// re-syncs `sim_time` to the engine clock.
+    /// Zero the **per-session** counters, so per-session accounting is
+    /// possible on a long-lived engine. Scheduler counters
+    /// (`jobs_executed`, `steals`) and the split counters are per-batch
+    /// values that only ever accumulate — without a reset between
+    /// sessions (e.g. two `run_one` calls), the second session reads the
+    /// first one's totals too.
+    ///
+    /// **Engine-lifetime fields are preserved**: `sim_time` mirrors the
+    /// engine's monotone simulated clock (wiping it here used to leave a
+    /// stale zero until the next super-round re-synced it — visible to
+    /// any direct `metrics.reset()` caller bypassing
+    /// `Engine::reset_metrics`), and `peak_inflight` / `max_edge_task`
+    /// are high-water marks over the engine's whole life that a
+    /// per-session wipe would permanently lose.
     pub fn reset(&mut self) {
-        *self = EngineMetrics::default();
+        let sim_time = self.sim_time;
+        let peak_inflight = self.peak_inflight;
+        let max_edge_task = self.max_edge_task;
+        *self = EngineMetrics {
+            sim_time,
+            peak_inflight,
+            max_edge_task,
+            ..EngineMetrics::default()
+        };
     }
 }
 
@@ -285,28 +321,37 @@ mod tests {
     }
 
     #[test]
-    fn reset_zeroes_every_counter() {
+    fn reset_zeroes_session_counters_and_keeps_lifetime_fields() {
         let mut m = EngineMetrics::default();
         m.compute_sched.add(8, 2);
         m.subjobs_executed = 5;
         m.tasks_split = 2;
         m.edge_ranges_split = 11;
-        m.max_edge_task = 4096;
         m.max_lane_imbalance = 7.5;
         m.max_post_split_imbalance = 1.2;
         m.queries_completed = 3;
         m.super_rounds = 9;
+        m.overlap_time = 0.25;
+        m.pipelined_rounds = 4;
+        // Engine-lifetime fields: survive a bare reset().
+        m.sim_time = 12.5;
+        m.peak_inflight = 6;
+        m.max_edge_task = 4096;
         m.reset();
         assert_eq!(m.steals(), 0);
         assert_eq!(m.jobs_executed(), 0);
         assert_eq!(m.subjobs_executed, 0);
         assert_eq!(m.tasks_split, 0);
         assert_eq!(m.edge_ranges_split, 0);
-        assert_eq!(m.max_edge_task, 0);
         assert_eq!(m.max_lane_imbalance, 0.0);
         assert_eq!(m.max_post_split_imbalance, 0.0);
         assert_eq!(m.queries_completed, 0);
         assert_eq!(m.super_rounds, 0);
+        assert_eq!(m.overlap_time, 0.0);
+        assert_eq!(m.pipelined_rounds, 0);
+        assert!((m.sim_time - 12.5).abs() < 1e-12, "clock mirror preserved");
+        assert_eq!(m.peak_inflight, 6, "high-water mark preserved");
+        assert_eq!(m.max_edge_task, 4096, "high-water mark preserved");
     }
 
     #[test]

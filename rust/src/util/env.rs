@@ -1,0 +1,96 @@
+//! Typed environment-variable parsing with pure, unit-testable cores.
+//!
+//! The `QUEGEL_BENCH_SMOKE` flag predicate
+//! `is_ok_and(|v| !v.is_empty() && v != "0")` used to be copy-pasted
+//! between the perf bench and the determinism fuzzer — one future
+//! consumer writing the "obvious" `is_ok()` instead would silently treat
+//! `QUEGEL_BENCH_SMOKE=0` as ON. These helpers are the single home for
+//! that semantics:
+//!
+//! * [`env_flag`] — set-and-nonzero boolean (`""` and `"0"` are OFF);
+//! * [`env_u64`] / [`env_usize`] — typed values (`QUEGEL_FUZZ_SEED`,
+//!   `QUEGEL_FUZZ_CASES`) where absent/empty/garbage fall back to the
+//!   caller's default, so a typo'd variable can never panic a bench.
+//!   Unlike the flag semantics, `"0"` here is a *valid parsed value*.
+//!
+//! Each helper is a thin `std::env::var` wrapper over a pure `*_from`
+//! core, so the parsing rules are unit-tested without mutating the
+//! process environment (`std::env::set_var` is racy under threaded test
+//! runners and unsafe in newer editions).
+
+/// Pure core of [`env_flag`]: `None`, `""` and `"0"` are off; any other
+/// value (the flags are documented as 0/1) is on.
+#[inline]
+pub fn flag_from(val: Option<&str>) -> bool {
+    val.is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Pure core of [`env_u64`]: absent, empty or unparsable values yield
+/// `default`; `"0"` parses to 0.
+#[inline]
+pub fn u64_from(val: Option<&str>, default: u64) -> u64 {
+    val.and_then(|v| v.trim().parse::<u64>().ok())
+        .unwrap_or(default)
+}
+
+/// Pure core of [`env_usize`]; same fallback rules as [`u64_from`].
+#[inline]
+pub fn usize_from(val: Option<&str>, default: usize) -> usize {
+    val.and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(default)
+}
+
+/// Boolean flag: set-and-nonzero (e.g. `QUEGEL_BENCH_SMOKE`).
+pub fn env_flag(name: &str) -> bool {
+    flag_from(std::env::var(name).ok().as_deref())
+}
+
+/// Typed `u64` variable (e.g. `QUEGEL_FUZZ_SEED`), `default` on
+/// absent/empty/garbage.
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    u64_from(std::env::var(name).ok().as_deref(), default)
+}
+
+/// Typed `usize` variable (e.g. `QUEGEL_FUZZ_CASES`), `default` on
+/// absent/empty/garbage.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    usize_from(std::env::var(name).ok().as_deref(), default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_semantics_are_set_and_nonzero() {
+        assert!(!flag_from(None), "absent is off");
+        assert!(!flag_from(Some("")), "empty is off");
+        assert!(!flag_from(Some("0")), "explicit zero is off");
+        assert!(flag_from(Some("1")));
+        assert!(flag_from(Some("yes")), "any other value is on");
+        assert!(
+            flag_from(Some("00")),
+            "only the literal \"0\" is off — the contract is 0/1"
+        );
+    }
+
+    #[test]
+    fn u64_falls_back_on_empty_and_garbage_but_not_zero() {
+        assert_eq!(u64_from(None, 7), 7, "absent -> default");
+        assert_eq!(u64_from(Some(""), 7), 7, "empty -> default");
+        assert_eq!(u64_from(Some("not a number"), 7), 7, "garbage -> default");
+        assert_eq!(u64_from(Some("-3"), 7), 7, "negative -> default");
+        assert_eq!(u64_from(Some("0"), 7), 0, "zero is a valid value");
+        assert_eq!(u64_from(Some(" 42 "), 7), 42, "whitespace is trimmed");
+        assert_eq!(u64_from(Some("314159265358"), 7), 314_159_265_358);
+    }
+
+    #[test]
+    fn usize_falls_back_on_empty_and_garbage_but_not_zero() {
+        assert_eq!(usize_from(None, 100), 100);
+        assert_eq!(usize_from(Some(""), 100), 100);
+        assert_eq!(usize_from(Some("12 cases"), 100), 100);
+        assert_eq!(usize_from(Some("0"), 100), 0, "zero cases is a choice");
+        assert_eq!(usize_from(Some("1000"), 100), 1000);
+    }
+}

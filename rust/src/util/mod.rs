@@ -6,11 +6,13 @@
 //! (generators are seeded, so every bench regenerates identical workloads).
 
 pub mod bitset;
+pub mod env;
 pub mod error;
 pub mod fxhash;
 pub mod rng;
 
 pub use bitset::BitSet;
+pub use env::{env_flag, env_u64, env_usize};
 pub use error::{Context, Error, Result};
 pub use fxhash::{FxHashMap, FxHashSet};
 pub use rng::Rng;

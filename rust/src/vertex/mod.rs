@@ -49,8 +49,11 @@ pub trait QueryApp: Sync {
     /// Aggregator value; `Default` is the identity element: `agg_merge`
     /// folding a partial into a fresh `Default` must yield that partial.
     type Agg: Clone + Default + Send + Sync;
-    /// Per-query result type.
-    type Out: Clone + Default;
+    /// Per-query result type. `Send` because under `Pipeline::On` the
+    /// reporting superstep (`finish`) runs as a pool job overlapped with
+    /// the next super-round's compute, so the assembled result travels
+    /// from a pool worker back to the coordinator.
+    type Out: Clone + Send;
 
     /// The initial activation set `V_q^I` (paper: `init_activate()` +
     /// `get_vpos`/`activate`). Returning vertex ids (instead of per-worker

@@ -13,7 +13,7 @@ use quegel::apps::reach::{build_labels, condense, dag, ReachQuery};
 use quegel::apps::terrain::baseline::dijkstra;
 use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
 use quegel::apps::xml::{self, SlcaLevelAligned, SlcaNaive};
-use quegel::coordinator::{EdgeSplit, Engine, Sched, Split};
+use quegel::coordinator::{EdgeSplit, Engine, Pipeline, Sched, Split};
 use quegel::graph::gen;
 use quegel::graph::VertexId;
 use quegel::network::Cluster;
@@ -208,7 +208,9 @@ impl QueryApp for OrderHash {
 /// `((0*31 + 1)*31 + 3)*31 + 2 = 1056`. The sweep includes a split
 /// threshold of 1, which cuts worker 0's two-sender task into two
 /// sub-jobs with separate staging buffers — the merge must replay them in
-/// sub-range order or the constant flips.
+/// sub-range order or the constant flips — and both pipeline modes, since
+/// the pipelined cascade's eager column handoff must replay the exact
+/// same source-order delivery sequence as the barrier exchange.
 #[test]
 fn exchange_and_substaging_preserve_source_order() {
     // h0 = 1, h1 = 1*31 + 3 = 34, h2 = 34*31 + 2 = 1056.
@@ -217,17 +219,21 @@ fn exchange_and_substaging_preserve_source_order() {
         for sched in [Sched::Static, Sched::Stealing] {
             for split in [Split::Off, Split::MaxTaskVertices(1), Split::Adaptive] {
                 for edge in [EdgeSplit::Off, EdgeSplit::MaxFanout(1)] {
-                    let mut eng = Engine::new(OrderHash, Cluster::new(2), 4)
-                        .threads(threads)
-                        .scheduler(sched)
-                        .split(split)
-                        .edge_split(edge);
-                    let out = eng.run_one(()).out;
-                    assert_eq!(
-                        out, WANT,
-                        "threads={threads} sched={sched:?} split={split:?} \
-                         edge={edge:?} delivered out of source order"
-                    );
+                    for pipeline in [Pipeline::Off, Pipeline::On] {
+                        let mut eng = Engine::new(OrderHash, Cluster::new(2), 4)
+                            .threads(threads)
+                            .scheduler(sched)
+                            .split(split)
+                            .edge_split(edge)
+                            .pipeline(pipeline);
+                        let out = eng.run_one(()).out;
+                        assert_eq!(
+                            out, WANT,
+                            "threads={threads} sched={sched:?} split={split:?} \
+                             edge={edge:?} pipeline={pipeline:?} delivered out \
+                             of source order"
+                        );
+                    }
                 }
             }
         }
@@ -317,17 +323,20 @@ fn edge_ranges_and_overflow_tail_replay_in_send_order() {
             EdgeSplit::MaxFanout(1),
             EdgeSplit::Adaptive,
         ] {
-            let mut eng = Engine::new(OrderFan, Cluster::new(2), 6)
-                .threads(threads)
-                .scheduler(Sched::Stealing)
-                .edge_split(edge);
-            let out = eng.run_one(()).out;
-            parked |= eng.metrics().edge_ranges_split > 0;
-            assert_eq!(
-                out, WANT,
-                "threads={threads} edge={edge:?} replayed the fan or its \
-                 tail out of send order"
-            );
+            for pipeline in [Pipeline::Off, Pipeline::On] {
+                let mut eng = Engine::new(OrderFan, Cluster::new(2), 6)
+                    .threads(threads)
+                    .scheduler(Sched::Stealing)
+                    .edge_split(edge)
+                    .pipeline(pipeline);
+                let out = eng.run_one(()).out;
+                parked |= eng.metrics().edge_ranges_split > 0;
+                assert_eq!(
+                    out, WANT,
+                    "threads={threads} edge={edge:?} pipeline={pipeline:?} \
+                     replayed the fan or its tail out of send order"
+                );
+            }
         }
     }
     assert!(parked, "no configuration ever parked the fan");
@@ -438,6 +447,106 @@ fn split_choice_never_changes_outputs() {
             (want != UNREACHED).then_some(want),
             "query ({s},{t})"
         );
+    }
+}
+
+/// Pipeline sweep on the workload pipelining exists for: `one_slow_query`
+/// pins one deep BFS to worker 0's lane while a crowd of point lookups
+/// converges within a couple of supersteps. For every (threads, sched,
+/// capacity) the barrier and ready-driven runs must return bit-identical
+/// outputs AND an identical result sequence (qids in completion order —
+/// deferred reporting must not reorder anything), all matching the BFS
+/// oracle; the pipelined path must actually have engaged, and must never
+/// engage under `Pipeline::Off` or on a serial engine.
+#[test]
+fn pipeline_choice_never_changes_outputs() {
+    let n = 3_000;
+    let stride = 4usize;
+    let g = gen::one_slow_query(n, stride, 12, 20, 9501);
+    // One slow query (the hub ladder grinds ~20 supersteps and never
+    // reaches a star) among cheap star-to-star lookups.
+    let fix = |v: u32| if v as usize % stride == 0 { v + 1 } else { v };
+    let mut queries: Vec<(u32, u32)> = vec![(0, (n - 1) as u32)];
+    for i in 0..12u32 {
+        let s = fix((i * 211 + 1) % n as u32);
+        let t = fix((i * 389 + 2) % n as u32);
+        queries.push((s, t));
+    }
+    let mut engaged = 0u64;
+    for threads in [1usize, 2, 4] {
+        for sched in [Sched::Static, Sched::Stealing] {
+            for capacity in [1usize, 8] {
+                let mut runs: Vec<(Vec<Option<u32>>, Vec<u64>)> = Vec::new();
+                for pipeline in [Pipeline::Off, Pipeline::On] {
+                    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(stride), n)
+                        .capacity(capacity)
+                        .threads(threads)
+                        .scheduler(sched)
+                        .split(Split::Off)
+                        .edge_split(EdgeSplit::Off)
+                        .pipeline(pipeline);
+                    let ids: Vec<_> = queries.iter().map(|&q| eng.submit(q)).collect();
+                    eng.run_until_idle();
+                    let rounds = eng.metrics().pipelined_rounds;
+                    match pipeline {
+                        Pipeline::Off => assert_eq!(
+                            rounds, 0,
+                            "barrier mode must never take the pipelined path"
+                        ),
+                        Pipeline::On if threads == 1 => assert_eq!(
+                            rounds, 0,
+                            "a serial engine has nothing to overlap"
+                        ),
+                        Pipeline::On => engaged += rounds,
+                    }
+                    let order: Vec<u64> = eng.results().iter().map(|r| r.qid).collect();
+                    let outs: Vec<Option<u32>> = ids
+                        .iter()
+                        .map(|id| {
+                            eng.results()
+                                .iter()
+                                .find(|r| r.qid == *id)
+                                .expect("query completed")
+                                .out
+                        })
+                        .collect();
+                    runs.push((outs, order));
+                }
+                assert_eq!(
+                    runs[0], runs[1],
+                    "threads={threads} sched={sched:?} C={capacity}: pipelining \
+                     changed outputs or completion order"
+                );
+            }
+        }
+    }
+    assert!(
+        engaged > 0,
+        "no threaded Pipeline::On configuration ever ran a pipelined round"
+    );
+    let outs: Vec<Option<u32>> = queries
+        .iter()
+        .map(|&(s, t)| {
+            let want = ppsp_oracle::bfs_dist(&g, s, t);
+            (want != UNREACHED).then_some(want)
+        })
+        .collect();
+    // Any one run's outputs suffice for the oracle check (all are equal);
+    // rebuild one cheaply at the sweep's smallest config.
+    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(stride), n)
+        .capacity(8)
+        .threads(4)
+        .pipeline(Pipeline::On);
+    let ids: Vec<_> = queries.iter().map(|&q| eng.submit(q)).collect();
+    eng.run_until_idle();
+    for (i, id) in ids.iter().enumerate() {
+        let got = eng
+            .results()
+            .iter()
+            .find(|r| r.qid == *id)
+            .expect("query completed")
+            .out;
+        assert_eq!(got, outs[i], "query {:?}", queries[i]);
     }
 }
 

@@ -2,7 +2,7 @@
 //! capacity, latency accounting and the Figure-1 load-balancing effect.
 
 use quegel::apps::ppsp::{oracle, Bfs, BiBfs, UNREACHED};
-use quegel::coordinator::Engine;
+use quegel::coordinator::{EdgeSplit, Engine, Pipeline, Split};
 use quegel::graph::gen;
 use quegel::network::{Cluster, CostModel};
 
@@ -239,6 +239,118 @@ fn reset_metrics_isolates_sessions() {
     // the reset and keep sim_time in sync.
     assert!(eng.sim_time() > 0.0);
     assert!((eng.metrics().sim_time - eng.sim_time()).abs() < 1e-12);
+}
+
+#[test]
+fn bare_metrics_reset_preserves_engine_lifetime_fields() {
+    // Regression: `EngineMetrics::reset()` used to wipe the whole struct,
+    // so a serving loop calling `metrics_mut().reset()` directly between
+    // sessions (bypassing `Engine::reset_metrics` and its clock re-sync)
+    // left `sim_time` stale at zero until the next super-round and
+    // permanently lost the `peak_inflight` / `max_edge_task` high-water
+    // marks.
+    let g = gen::twitter_like(800, 5, 220);
+    let queries = gen::random_pairs(800, 3, 221);
+    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), 800)
+        .capacity(4)
+        .threads(2);
+
+    let _ = eng.run_one(queries[0]);
+    let sim = eng.metrics().sim_time;
+    let peak = eng.metrics().peak_inflight;
+    let fan = eng.metrics().max_edge_task;
+    assert!(sim > 0.0);
+    assert_eq!(peak, 1);
+    assert!(fan > 0, "BFS on twitter_like must fan out");
+
+    eng.metrics_mut().reset();
+    let m = eng.metrics();
+    assert_eq!(m.queries_completed, 0);
+    assert_eq!(m.super_rounds, 0);
+    assert_eq!(m.jobs_executed(), 0);
+    assert!(
+        (m.sim_time - sim).abs() < 1e-12,
+        "bare reset must keep the clock mirror: {} vs {sim}",
+        m.sim_time
+    );
+    assert_eq!(m.peak_inflight, peak, "high-water mark survives reset");
+    assert_eq!(m.max_edge_task, fan, "high-water mark survives reset");
+
+    let r = eng.run_one(queries[1]);
+    let want = oracle::bfs_dist(&g, queries[1].0, queries[1].1);
+    assert_eq!(r.out, (want != UNREACHED).then_some(want));
+    let m = eng.metrics();
+    assert_eq!(m.queries_completed, 1, "counters are session-sized");
+    assert!(
+        m.sim_time > sim,
+        "the clock keeps advancing from the preserved value, not from zero"
+    );
+    assert!(m.max_edge_task >= fan, "high-water marks only ever rise");
+}
+
+#[test]
+fn phase_busy_accounting_matches_execution_mode() {
+    // Phase metrics invariants. Barrier rounds on a serial engine time the
+    // three phases as *disjoint wall segments*, so their sum is bounded by
+    // wall_time (undershooting by coordinator-only work: admission, result
+    // pushes) and nothing ever overlaps. Pipelined rounds time per-phase
+    // *busy* seconds from inside pool jobs, so the sum is bounded by
+    // threads x wall_time instead, and `overlap_time` — wall time with
+    // two-plus phases simultaneously live — is a sub-interval of the wall.
+    let g = gen::twitter_like(2_000, 6, 222);
+    let queries = gen::random_pairs(2_000, 16, 223);
+    let eps = 1e-4;
+
+    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), 2_000)
+        .capacity(8)
+        .threads(1)
+        .pipeline(Pipeline::Off);
+    for &q in &queries {
+        eng.submit(q);
+    }
+    eng.run_until_idle();
+    let m = eng.metrics();
+    assert!(m.wall_time > 0.0);
+    let sum = m.compute_time + m.exchange_time + m.barrier_time;
+    assert!(sum > 0.0);
+    assert!(
+        sum <= m.wall_time * 1.05 + eps,
+        "serial barrier phases are disjoint wall segments: sum {sum} vs wall {}",
+        m.wall_time
+    );
+    assert_eq!(m.overlap_time, 0.0, "barrier rounds never overlap phases");
+    assert_eq!(m.pipelined_rounds, 0);
+
+    let threads = 4;
+    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(4), 2_000)
+        .capacity(8)
+        .threads(threads)
+        .split(Split::Off)
+        .edge_split(EdgeSplit::Off)
+        .pipeline(Pipeline::On);
+    for &q in &queries {
+        eng.submit(q);
+    }
+    eng.run_until_idle();
+    let m = eng.metrics();
+    assert!(
+        m.pipelined_rounds > 0,
+        "splitting off + threads > 1 must engage the ready-driven path"
+    );
+    assert!(m.wall_time > 0.0);
+    let busy = m.compute_time + m.exchange_time + m.barrier_time;
+    assert!(busy > 0.0);
+    assert!(
+        busy <= threads as f64 * m.wall_time * 1.05 + eps,
+        "phase busy sum {busy} must fit in threads x wall = {threads} x {}",
+        m.wall_time
+    );
+    assert!(
+        m.overlap_time <= m.wall_time + eps,
+        "overlap {} is a wall-time sub-interval (wall {})",
+        m.overlap_time,
+        m.wall_time
+    );
 }
 
 #[test]

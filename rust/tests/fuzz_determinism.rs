@@ -6,16 +6,18 @@
 //! `util::Rng` generates random graphs (five structural families,
 //! including the pathological mega-hub and mono-hub) × random query
 //! batches × random engine configurations `{threads, workers, capacity,
-//! Sched, Split, EdgeSplit}`, and every configuration's
+//! Sched, Split, EdgeSplit, Pipeline}`, and every configuration's
 //! `QueryResult::out` vector must be bit-identical to the serial
-//! reference run (`threads = 1`, static scheduler, all splitting off).
-//! Each case additionally runs one **edge-threshold-1 forcing
-//! configuration** (`EdgeSplit::MaxFanout(1)` + a tiny vertex-split
-//! threshold), which parks every multi-message outbox and dices it into
-//! single-edge ranges — the most adversarial exercise of the
-//! park/range/fold replay there is. On a mismatch the failing case seed
-//! and configuration are printed, so any regression reproduces with a
-//! one-line test.
+//! reference run (`threads = 1`, static scheduler, all splitting off,
+//! barrier rounds). Each case additionally runs one
+//! **edge-threshold-1 forcing configuration** (`EdgeSplit::MaxFanout(1)`
+//! + a tiny vertex-split threshold), which parks every multi-message
+//! outbox and dices it into single-edge ranges — the most adversarial
+//! exercise of the park/range/fold replay there is — and one
+//! **pipeline forcing configuration** (`Pipeline::On`, splitting off,
+//! 4 threads) whose ready-driven rounds are guaranteed to engage. On a
+//! mismatch the failing case seed and configuration are printed, so any
+//! regression reproduces with a one-line test.
 //!
 //! `QUEGEL_BENCH_SMOKE=1` shrinks the case count for the CI smoke lane;
 //! `QUEGEL_FUZZ_CASES=N` overrides it outright (the nightly deep-fuzz CI
@@ -25,10 +27,10 @@
 //! never silently degenerate into testing the unsplit paths.
 
 use quegel::apps::ppsp::{Bfs, BiBfs};
-use quegel::coordinator::{EdgeSplit, Engine, Sched, Split};
+use quegel::coordinator::{EdgeSplit, Engine, Pipeline, Sched, Split};
 use quegel::graph::{gen, Graph};
 use quegel::network::Cluster;
-use quegel::util::Rng;
+use quegel::util::{env_flag, env_u64, env_usize, Rng};
 use quegel::vertex::QueryApp;
 
 /// One random engine configuration of a fuzz case.
@@ -40,6 +42,7 @@ struct Config {
     sched: Sched,
     split: Split,
     edge: EdgeSplit,
+    pipeline: Pipeline,
 }
 
 fn random_config(rng: &mut Rng) -> Config {
@@ -63,6 +66,15 @@ fn random_config(rng: &mut Rng) -> Config {
         2 => EdgeSplit::MaxFanout(1 + rng.below_usize(8)),
         _ => EdgeSplit::MaxFanout(32 + rng.below_usize(256)),
     };
+    // The pipelined path only engages when splitting stays disarmed, so a
+    // random draw here mostly tests that Pipeline::On *degrades* to the
+    // barrier path correctly; the dedicated forcing config below is what
+    // guarantees the ready-driven rounds themselves run every case.
+    let pipeline = if rng.chance(0.5) {
+        Pipeline::On
+    } else {
+        Pipeline::Off
+    };
     Config {
         threads: [2, 3, 4, 8][rng.below_usize(4)],
         workers: 1 + rng.below_usize(8),
@@ -70,6 +82,7 @@ fn random_config(rng: &mut Rng) -> Config {
         sched,
         split,
         edge,
+        pipeline,
     }
 }
 
@@ -123,6 +136,7 @@ fn random_graph(rng: &mut Rng, seed: u64) -> (Graph, String) {
 struct Engaged {
     subjobs: bool,
     edge_ranges: bool,
+    pipelined: bool,
 }
 
 /// Run one batch under one configuration, returning outputs in submission
@@ -138,7 +152,8 @@ where
         .threads(cfg.threads)
         .scheduler(cfg.sched)
         .split(cfg.split)
-        .edge_split(cfg.edge);
+        .edge_split(cfg.edge)
+        .pipeline(cfg.pipeline);
     let ids: Vec<_> = queries.iter().map(|q| eng.submit(q.clone())).collect();
     eng.run_until_idle();
     let outs = ids
@@ -155,6 +170,7 @@ where
     let engaged = Engaged {
         subjobs: eng.metrics().subjobs_executed > 0,
         edge_ranges: eng.metrics().edge_ranges_split > 0,
+        pipelined: eng.metrics().pipelined_rounds > 0,
     };
     (outs, engaged)
 }
@@ -165,15 +181,9 @@ fn randomized_matrix_is_bit_identical_to_serial() {
     // run (the nightly CI matrix fans out over seeds, so its legs cover
     // DISTINCT cases instead of repeating one batch); the default keeps
     // local and PR runs reproducible.
-    let master_seed = std::env::var("QUEGEL_FUZZ_SEED")
-        .ok()
-        .and_then(|v| v.parse::<u64>().ok())
-        .unwrap_or(0x5eed_f022);
-    let smoke = std::env::var("QUEGEL_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
-    let cases = std::env::var("QUEGEL_FUZZ_CASES")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .unwrap_or(if smoke { 12 } else { 100 });
+    let master_seed = env_u64("QUEGEL_FUZZ_SEED").unwrap_or(0x5eed_f022);
+    let smoke = env_flag("QUEGEL_BENCH_SMOKE");
+    let cases = env_usize("QUEGEL_FUZZ_CASES").unwrap_or(if smoke { 12 } else { 100 });
     let configs_per_case = 3;
     let serial = Config {
         threads: 1,
@@ -182,6 +192,7 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         sched: Sched::Static,
         split: Split::Off,
         edge: EdgeSplit::Off,
+        pipeline: Pipeline::Off,
     };
     // The edge-threshold-1 forcing leg: every outbox of 2+ messages is
     // parked and diced into single-edge ranges, and a tiny vertex
@@ -194,10 +205,25 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         sched: Sched::Stealing,
         split: Split::MaxTaskVertices(5),
         edge: EdgeSplit::MaxFanout(1),
+        pipeline: Pipeline::Off,
+    };
+    // The pipeline forcing leg: splitting stays off and threads > 1, so
+    // every super-round takes the ready-driven per-(query, worker) path —
+    // asserted below, per run, so the fuzz can never silently stop
+    // exercising it.
+    let pipe_forcing = Config {
+        threads: 4,
+        workers: 3,
+        capacity: 8,
+        sched: Sched::Stealing,
+        split: Split::Off,
+        edge: EdgeSplit::Off,
+        pipeline: Pipeline::On,
     };
 
     let mut split_engaged = false;
     let mut edge_engaged = false;
+    let mut pipeline_engaged = false;
     for case in 0..cases {
         let case_seed = master_seed.wrapping_add(1 + case as u64 * 0x9e37);
         let mut rng = Rng::new(case_seed);
@@ -239,6 +265,14 @@ fn randomized_matrix_is_bit_identical_to_serial() {
              bibfs={use_bibfs}) edge-threshold-1 forcing config {forcing:?} \
              changed outputs vs the serial reference"
         );
+        let (outs, engaged) = run(pipe_forcing);
+        pipeline_engaged |= engaged.pipelined;
+        assert_eq!(
+            outs, base,
+            "fuzz case {case} (seed {case_seed:#x}, {desc}, \
+             bibfs={use_bibfs}) pipeline forcing config {pipe_forcing:?} \
+             changed outputs vs the serial reference"
+        );
     }
     assert!(
         split_engaged,
@@ -249,5 +283,10 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         edge_engaged,
         "no fuzz configuration ever executed an edge-range job: the fuzzer \
          is not exercising the edge-split path"
+    );
+    assert!(
+        pipeline_engaged,
+        "no fuzz configuration ever ran a pipelined super-round: the fuzzer \
+         is not exercising the ready-driven path"
     );
 }
