@@ -4,8 +4,9 @@
 The perf bench (``cd rust && cargo bench -- perf --json``) emits one JSON
 file per PR milestone — BENCH_pr2.json (phase thread sweep), BENCH_pr3.json
 (static-vs-stealing skew sweep), BENCH_pr4.json (sub-lane split sweep),
-BENCH_pr5.json (edge-level split sweep) and BENCH_pr6.json
-(barrier-vs-pipelined round sweep). This script is the single source
+BENCH_pr5.json (edge-level split sweep), BENCH_pr6.json
+(barrier-vs-pipelined round sweep) and BENCH_pr7.json
+(hashed-vs-flat store layout sweep). This script is the single source
 of truth for their shape, shared by the ``bench-smoke`` CI lane and local
 runs:
 
@@ -201,12 +202,47 @@ def check_pr6(doc, name):
     )
 
 
+def check_pr7(doc, name):
+    rows = doc.get("rows") or fail(f"{name}: layout sweep produced no rows")
+    for row in rows:
+        require_keys(
+            row,
+            (
+                "graph",
+                "layout",
+                "threads",
+                "compute_s",
+                "exchange_s",
+                "barrier_s",
+                "staging_bytes_peak",
+            ),
+            name,
+        )
+    if {r["layout"] for r in rows} != {"hashed", "flat"}:
+        fail(f"{name}: rows must cover both store layouts")
+    want_graphs = {"hub_concentrated", "mega_hub", "mono_hub"}
+    if {r["graph"] for r in rows} != want_graphs:
+        fail(f"{name}: rows must cover graphs {sorted(want_graphs)}")
+    # Engagement: only the flat columnar staging path ever moves the
+    # staging_bytes_peak gauge — a flat sweep that never touched it
+    # silently measured the hashed path twice.
+    if not any(r["layout"] == "flat" and r["staging_bytes_peak"] > 0 for r in rows):
+        fail(f"{name}: flat rows never engaged the columnar staging buffers")
+    if not all(r["staging_bytes_peak"] == 0 for r in rows if r["layout"] == "hashed"):
+        fail(f"{name}: hashed rows must not move the flat staging gauge")
+    print(
+        f"{name} ok: {len(rows)} rows; flat vs hashed at 4 threads (geomean):",
+        doc["flat_vs_hashed_compute_speedup_t4"],
+    )
+
+
 CHECKERS = {
     "perf_engine": check_pr2,
     "perf_skew_sched": check_pr3,
     "perf_sublane_split": check_pr4,
     "perf_edge_split": check_pr5,
     "perf_pipeline": check_pr6,
+    "perf_flat_layout": check_pr7,
 }
 
 

@@ -31,12 +31,20 @@
 //!   `Pipeline::On` — measuring end-to-end wall, per-phase *busy* time
 //!   and the `overlap_time` gauge, i.e. what draining fast queries
 //!   through exchange/fold/reporting during the slow lane's compute buys
-//!   over paying three global barriers per round.
+//!   over paying three global barriers per round;
+//! * the **layout sweep** re-runs BFS over the three adversarial graphs
+//!   above (hub-concentrated, mega-hub, mono-hub) with the per-query
+//!   stores in `Layout::Hashed` (the original hash maps) vs
+//!   `Layout::Flat` (slab arenas + columnar staging), both splits and
+//!   the pipeline off under the stealing scheduler — the configurations
+//!   differ ONLY in where state lives, so the comparison isolates what
+//!   the contiguous memory walk buys on the compute wall, with the
+//!   `staging_bytes_peak` gauge as the flat-engagement signal.
 //!
 //! With `--json`, the same numbers are written to `BENCH_pr2.json`
 //! (thread sweep), `BENCH_pr3.json` (skew sweep), `BENCH_pr4.json`
-//! (split sweep), `BENCH_pr5.json` (edge-split sweep) and
-//! `BENCH_pr6.json` (pipeline sweep) so the committed
+//! (split sweep), `BENCH_pr5.json` (edge-split sweep), `BENCH_pr6.json`
+//! (pipeline sweep) and `BENCH_pr7.json` (layout sweep) so the committed
 //! perf trajectory is machine-readable; CI's `bench-smoke` lane validates
 //! them with `ci/validate_bench.py` and archives them as workflow
 //! artifacts. Setting `QUEGEL_BENCH_SMOKE=1` shrinks every input so the
@@ -45,7 +53,7 @@
 
 use quegel::apps::ppsp::{Bfs, BiBfs};
 use quegel::apps::xml::{self, SlcaNaive, XmlGenConfig};
-use quegel::coordinator::{EdgeSplit, Engine, Pipeline, Sched, Split};
+use quegel::coordinator::{EdgeSplit, Engine, Layout, Pipeline, Sched, Split};
 use quegel::graph::{gen, Graph};
 use quegel::metrics::Table;
 use quegel::network::Cluster;
@@ -59,6 +67,11 @@ use std::time::Instant;
 pub static JSON: AtomicBool = AtomicBool::new(false);
 
 const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// Generators the layout sweep covers; its headline is the geometric
+/// mean of the per-generator flat-vs-hashed compute speedups at 4
+/// threads, so one graph's outlier can't carry (or sink) the gate alone.
+const LAYOUT_GRAPHS: [&str; 3] = ["hub_concentrated", "mega_hub", "mono_hub"];
 
 /// CI smoke mode: shrink inputs so the lane finishes fast while still
 /// producing structurally complete JSON.
@@ -772,6 +785,144 @@ fn json_pipe_rows(rows: &[PipeRow]) -> String {
     format!("[{}]", items.join(","))
 }
 
+/// One (graph, layout, threads) configuration of the memory-layout sweep
+/// across the three adversarial generators.
+struct LayoutRow {
+    graph: &'static str,
+    layout: Layout,
+    threads: usize,
+    compute: f64,
+    exchange: f64,
+    barrier: f64,
+    staging_peak: u64,
+}
+
+fn layout_name(l: Layout) -> &'static str {
+    match l {
+        Layout::Hashed => "hashed",
+        Layout::Flat => "flat",
+    }
+}
+
+/// BFS batch (C = 8) over one adversarial graph, swept over layout ×
+/// threads, always under `Sched::Stealing` with both splits and the
+/// pipeline off — the two configurations differ ONLY in where the
+/// per-query stores live (hash maps vs slab arenas + columnar staging),
+/// so the comparison isolates exactly what the contiguous memory walk
+/// buys on the compute wall.
+fn layout_rows(
+    graph: &'static str,
+    g: &Graph,
+    workers: usize,
+    queries: &[(u32, u32)],
+    reps: usize,
+) -> Vec<LayoutRow> {
+    let mut rows = Vec::new();
+    for layout in [Layout::Hashed, Layout::Flat] {
+        for &threads in &THREAD_SWEEP {
+            let mut computes = Vec::new();
+            let mut exchanges = Vec::new();
+            let mut barriers = Vec::new();
+            let mut staging_peak = 0;
+            for _ in 0..reps {
+                let mut eng = Engine::new(Bfs::new(g), Cluster::new(workers), g.num_vertices())
+                    .capacity(8)
+                    .threads(threads)
+                    .scheduler(Sched::Stealing)
+                    .split(Split::Off)
+                    .edge_split(EdgeSplit::Off)
+                    .pipeline(Pipeline::Off)
+                    .layout(layout);
+                for &q in queries {
+                    eng.submit(q);
+                }
+                eng.run_until_idle();
+                computes.push(eng.metrics().compute_time);
+                exchanges.push(eng.metrics().exchange_time);
+                barriers.push(eng.metrics().barrier_time);
+                staging_peak = eng.metrics().staging_bytes_peak;
+            }
+            rows.push(LayoutRow {
+                graph,
+                layout,
+                threads,
+                compute: median(computes),
+                exchange: median(exchanges),
+                barrier: median(barriers),
+                staging_peak,
+            });
+        }
+    }
+    rows
+}
+
+/// Compute-wall speedup of the flat stores over the hashed baseline on
+/// one graph at the same thread count — the per-generator input to the
+/// geomean headline the ≥1.3× layout target is on.
+fn layout_speedup(rows: &[LayoutRow], graph: &str, threads: usize) -> f64 {
+    let compute = |layout: Layout| {
+        rows.iter()
+            .find(|r| r.graph == graph && r.layout == layout && r.threads == threads)
+            .map(|r| r.compute)
+            .unwrap_or(f64::NAN)
+    };
+    compute(Layout::Hashed) / compute(Layout::Flat)
+}
+
+fn print_layout_table(name: &str, rows: &[LayoutRow]) {
+    let mut t = Table::new(vec![
+        "graph",
+        "layout",
+        "threads",
+        "compute",
+        "exchange",
+        "barrier",
+        "staging peak",
+        "vs hashed",
+    ]);
+    for r in rows {
+        let vs = match r.layout {
+            Layout::Hashed => "baseline".to_string(),
+            Layout::Flat => format!("{:.2}x", layout_speedup(rows, r.graph, r.threads)),
+        };
+        t.row(vec![
+            r.graph.to_string(),
+            layout_name(r.layout).to_string(),
+            r.threads.to_string(),
+            format!("{:.1} ms", r.compute * 1e3),
+            format!("{:.1} ms", r.exchange * 1e3),
+            format!("{:.1} ms", r.barrier * 1e3),
+            format!("{} B", r.staging_peak),
+            vs,
+        ]);
+    }
+    println!("[{name}]");
+    println!("{}", t.render());
+}
+
+fn json_layout_rows(rows: &[LayoutRow]) -> String {
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "{{\"graph\":\"{}\",\"layout\":\"{}\",\"threads\":{},",
+                    "\"compute_s\":{:.6},\"exchange_s\":{:.6},",
+                    "\"barrier_s\":{:.6},\"staging_bytes_peak\":{}}}"
+                ),
+                r.graph,
+                layout_name(r.layout),
+                r.threads,
+                r.compute,
+                r.exchange,
+                r.barrier,
+                r.staging_peak,
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
 fn json_skew_rows(rows: &[SkewRow]) -> String {
     let items: Vec<String> = rows
         .iter()
@@ -997,6 +1148,33 @@ pub fn run() {
     println!("across the whole table by construction (tests/determinism.rs");
     println!("pipeline_choice_never_changes_outputs).");
 
+    // --- Layout sweep: the same three adversarial graphs, hashed-map
+    // stores vs the PR 7 flat arena/columnar stores. Both splits and the
+    // pipeline stay off so the rows differ only in memory layout; the
+    // skew/split/edge sweeps above already own their mechanisms' numbers.
+    let mut lay = layout_rows("hub_concentrated", &skew_g, skew_workers, &skew_queries, reps);
+    lay.extend(layout_rows("mega_hub", &mh_g, mh_workers, &mh_queries, reps));
+    lay.extend(layout_rows("mono_hub", &eh_g, eh_workers, &eh_queries, reps));
+    print_layout_table("bfs hashed vs flat stores C=8 W=8 (three graphs)", &lay);
+    let layout_headline = {
+        let per: Vec<f64> = LAYOUT_GRAPHS
+            .iter()
+            .map(|&gname| layout_speedup(&lay, gname, 4))
+            .collect();
+        per.iter().product::<f64>().powf(1.0 / per.len() as f64)
+    };
+    println!(
+        "flat vs hashed compute wall at 4 threads (geomean over {} graphs): {:.2}x",
+        LAYOUT_GRAPHS.len(),
+        layout_headline
+    );
+    println!("target: flat >= 1.3x over hashed at 4 threads on the geomean");
+    println!("compute wall; staging_bytes_peak > 0 on flat rows (and == 0");
+    println!("on hashed rows) shows the columnar staging actually engaged.");
+    println!("Outputs are bit-identical across the whole table by");
+    println!("construction (tests/determinism.rs");
+    println!("layout_choice_never_changes_outputs).");
+
     if JSON.load(Ordering::Relaxed) {
         let payload = format!(
             concat!(
@@ -1096,6 +1274,23 @@ pub fn run() {
         match std::fs::write("BENCH_pr6.json", &payload) {
             Ok(()) => println!("wrote BENCH_pr6.json"),
             Err(e) => eprintln!("could not write BENCH_pr6.json: {e}"),
+        }
+        let payload = format!(
+            concat!(
+                "{{\"pr\":7,\"bench\":\"perf_flat_layout\",",
+                "\"graphs\":[\"hub_concentrated\",\"mega_hub\",\"mono_hub\"],",
+                "\"workers\":8,\"threads_swept\":[1,2,4,8],\"reps\":{},",
+                "\"smoke\":{},\"rows\":{},",
+                "\"flat_vs_hashed_compute_speedup_t4\":{:.3}}}\n"
+            ),
+            reps,
+            smoke,
+            json_layout_rows(&lay),
+            layout_headline,
+        );
+        match std::fs::write("BENCH_pr7.json", &payload) {
+            Ok(()) => println!("wrote BENCH_pr7.json"),
+            Err(e) => eprintln!("could not write BENCH_pr7.json: {e}"),
         }
     }
 }

@@ -24,12 +24,14 @@ use crate::coordinator::Engine;
 use crate::graph::{Graph, VertexId};
 use crate::metrics::EngineMetrics;
 use crate::network::Cluster;
+use crate::runtime::rowmin;
 use crate::util::FxHashMap;
 use crate::vertex::{Ctx, MasterAction, QueryApp};
 
 /// f32 encoding of "unreachable" used by the kernels (2^31, matches
-/// python/compile/kernels/ref.py).
-pub const F_INF: f32 = 2_147_483_648.0;
+/// python/compile/kernels/ref.py and the blocked kernels'
+/// [`rowmin::INF`]).
+pub const F_INF: f32 = rowmin::INF;
 
 /// Convert a hop count to the kernel encoding.
 #[inline]
@@ -117,6 +119,26 @@ impl MinPlus for RustMinPlus {
                 best
             })
             .collect()
+    }
+}
+
+/// Blocked-kernel evaluator: the tropical closure by repeated squaring
+/// and the two-stage batched upper bound (`sd = S ⊗ D_H` via the blocked
+/// min-plus matmul, then the fused row reduction against the t-side
+/// rows) over the cache-tiled loops in [`crate::runtime::rowmin`]. This
+/// is the default-build stand-in for the AOT-compiled Pallas artifacts
+/// and the evaluator the batched admission hook runs on the query hot
+/// path; [`RustMinPlus`] stays as the naive oracle it is tested against.
+pub struct BlockedMinPlus;
+
+impl MinPlus for BlockedMinPlus {
+    fn closure(&self, d: &mut [f32], k: usize) {
+        rowmin::closure_in_place(d, k);
+    }
+
+    fn dub_batch(&self, s: &[f32], d: &[f32], t: &[f32], c: usize, k: usize) -> Vec<f32> {
+        let sd = rowmin::minplus_matmul(s, d, c, k, k);
+        rowmin::tropical_rowmin(&sd, t, c, k)
     }
 }
 
@@ -519,8 +541,27 @@ impl Hub2Indexer {
 // ---------------------------------------------------------------------------
 
 /// Query content: (s, t, d_ub). `d_ub` is produced by
-/// [`Hub2Index::dub_for`] (batched through the kernel on the hot path).
+/// [`Hub2Index::dub_for`] — either explicitly by the caller, or lazily by
+/// the engine's batched admission hook when submitted as
+/// [`lazy_query`]`(s, t)` (the hot path: one blocked-kernel sweep fills
+/// the whole admitted batch).
 pub type Hub2QueryContent = (VertexId, VertexId, u32);
+
+/// Sentinel in a [`Hub2QueryContent`]'s third slot meaning "d_ub not
+/// computed yet": [`QueryApp::admit_batch`] replaces it with the real
+/// bound before any per-query state is built. Deliberately distinct from
+/// [`UNREACHED`], which is a *computed* bound ("the hub tables prove
+/// nothing") that must keep flowing through unchanged. `dub_for` can
+/// never produce this value: finite bounds are `< 2^31` and unreachable
+/// ones map to [`UNREACHED`].
+pub const DUB_PENDING: u32 = u32::MAX - 1;
+
+/// A lazily-bounded query: submit this and the engine's batched admission
+/// hook fills `d_ub` for the whole batch in one kernel sweep.
+#[inline]
+pub fn lazy_query(s: VertexId, t: VertexId) -> Hub2QueryContent {
+    (s, t, DUB_PENDING)
+}
 
 /// The Hub²-indexed PPSP query app.
 pub struct Hub2Query<'g, 'i> {
@@ -558,7 +599,34 @@ impl<'g, 'i> QueryApp for Hub2Query<'g, 'i> {
     type Agg = BiAgg;
     type Out = Option<u32>;
 
+    /// Batched admission: fill every lazy bound ([`DUB_PENDING`]) in the
+    /// admitted batch with one blocked-kernel sweep over the padded hub
+    /// tables — the amortization the per-query `dub_for` probe cannot
+    /// get. Queries submitted with an explicit bound pass through
+    /// untouched, so mixed batches work.
+    fn admit_batch(&self, batch: &mut [Hub2QueryContent]) {
+        let lazy: Vec<usize> = batch
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| q.2 == DUB_PENDING)
+            .map(|(i, _)| i)
+            .collect();
+        if lazy.is_empty() {
+            return;
+        }
+        let pairs: Vec<PpspQuery> = lazy.iter().map(|&i| (batch[i].0, batch[i].1)).collect();
+        // c_pad = the rowmin kernel's row-tile, so padded chunks tile
+        // evenly; k_pad = k (the CPU kernels auto-shrink their tiles).
+        let dubs = self
+            .idx
+            .dub_for(&pairs, &BlockedMinPlus, rowmin::RM_TILE.0, self.idx.k());
+        for (&i, d) in lazy.iter().zip(dubs) {
+            batch[i].2 = d;
+        }
+    }
+
     fn init_activate(&self, q: &Hub2QueryContent) -> Vec<VertexId> {
+        debug_assert_ne!(q.2, DUB_PENDING, "admit_batch must fill lazy d_ub");
         if q.0 == q.1 {
             vec![q.0]
         } else {
@@ -839,6 +907,90 @@ mod tests {
                     r.stats.supersteps
                 );
             }
+        }
+    }
+
+    /// The blocked-kernel evaluator must agree bit-exactly with the naive
+    /// oracle on hub-shaped tables (hop counts + INF): closure and the
+    /// two-stage batched upper bound alike. This is the CPU analog of the
+    /// Pallas-vs-reference parity tests in python/compile.
+    #[test]
+    fn blocked_minplus_matches_rust_oracle() {
+        let mut seed = 0x5EEDu32;
+        let mut next = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 17;
+            seed ^= seed << 5;
+            seed
+        };
+        let mut hop = move || {
+            let r = next();
+            if r % 4 == 0 {
+                F_INF
+            } else {
+                (r % 30) as f32
+            }
+        };
+        for &(c, k) in &[(1usize, 4usize), (5, 8), (9, 16)] {
+            let mut d: Vec<f32> = (0..k * k).map(|_| hop()).collect();
+            for i in 0..k {
+                d[i * k + i] = 0.0;
+            }
+            let mut d_blocked = d.clone();
+            BlockedMinPlus.closure(&mut d_blocked, k);
+            RustMinPlus.closure(&mut d, k);
+            assert_eq!(d_blocked, d, "closure ({k}x{k})");
+            let s: Vec<f32> = (0..c * k).map(|_| hop()).collect();
+            let t: Vec<f32> = (0..c * k).map(|_| hop()).collect();
+            assert_eq!(
+                BlockedMinPlus.dub_batch(&s, &d, &t, c, k),
+                RustMinPlus.dub_batch(&s, &d, &t, c, k),
+                "dub_batch ({c}x{k})"
+            );
+        }
+    }
+
+    /// Lazy submission ([`lazy_query`]) must be indistinguishable from the
+    /// explicit path: the admission hook's batched kernel sweep fills the
+    /// same d_ub `dub_for` computes per query, so outputs and superstep
+    /// counts match — and both match the BFS oracle.
+    #[test]
+    fn lazy_dub_queries_match_explicit() {
+        let mut g = gen::twitter_like(400, 5, 45);
+        g.ensure_in_edges();
+        let idx = build_index(&g, 16, false);
+        for (s, t) in gen::random_pairs(400, 15, 46) {
+            let explicit = hub2_query(&g, &idx, s, t);
+            let mut eng = Engine::new(Hub2Query::new(&g, &idx), Cluster::new(4), 400);
+            let lazy = eng.run_one(lazy_query(s, t));
+            assert_eq!(lazy.out, explicit, "lazy vs explicit ({s},{t})");
+            let want = oracle::bfs_dist(&g, s, t);
+            assert_eq!(lazy.out, (want != UNREACHED).then_some(want), "({s},{t})");
+        }
+    }
+
+    /// A whole batch of lazy queries superstep-shared under one capacity
+    /// still gets every bound filled (the hook runs per admission round,
+    /// not just for run_one's singleton batch).
+    #[test]
+    fn lazy_dub_fills_whole_admitted_batches() {
+        let mut g = gen::twitter_like(400, 5, 47);
+        g.ensure_in_edges();
+        let idx = build_index(&g, 12, false);
+        let pairs = gen::random_pairs(400, 12, 48);
+        let mut eng =
+            Engine::new(Hub2Query::new(&g, &idx), Cluster::new(4), 400).capacity(4);
+        let qids: Vec<_> = pairs.iter().map(|&(s, t)| eng.submit(lazy_query(s, t))).collect();
+        eng.run_until_idle();
+        for (&(s, t), &qid) in pairs.iter().zip(&qids) {
+            let got = eng
+                .results()
+                .iter()
+                .find(|r| r.qid == qid)
+                .expect("query completed")
+                .out;
+            let want = oracle::bfs_dist(&g, s, t);
+            assert_eq!(got, (want != UNREACHED).then_some(want), "({s},{t})");
         }
     }
 

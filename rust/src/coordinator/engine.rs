@@ -83,17 +83,33 @@
 //! [`EngineMetrics::overlap_time`] reporting the wall seconds in which two
 //! or more phases were simultaneously active (always 0 under
 //! `Pipeline::Off`).
+//!
+//! Orthogonal to all of the above is the **memory layout** of per-query
+//! state, selected by the [`Layout`] knob. [`Layout::Hashed`] keeps the
+//! original `FxHashMap` vertex-state/inbox/staging stores;
+//! [`Layout::Flat`] (the default) replaces them with slab arenas and
+//! columnar buffers — a dense `VertexId → u32` handle table over
+//! contiguous `Vec` slots for vertex state and message slots, and
+//! first-touch-ordered flat vectors for the per-destination staging
+//! columns — so the innermost loops walk contiguous memory instead of
+//! probing hash tables. Every order the determinism contract pins
+//! (first-touch staging insertion, source-order delivery, worker-order
+//! folds, reporting-round iteration) is recorded explicitly in the flat
+//! structures, so `QueryResult::out` is bit-identical across
+//! `Layout::{Hashed, Flat}` — the layout axis joins threads × workers ×
+//! capacity × scheduler × split × edge-split × pipeline in the
+//! determinism suite and the fuzzer.
 
-use std::collections::hash_map::Entry;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use super::arena::{deliver_into_sink, ExchangeSink, Layout, StagedBuf, VStore};
 use super::pool::{Job, RunStats, WorkerPool};
 use super::query::{
-    deliver_map, merge_msg, FanTask, MsgSlot, OrderedStaging, Phase, QueryResult, QueryRt,
-    StageStream, StageUnit, StagingCol, SubBuf, VState, WorkItem, WorkerShard,
+    FanTask, OrderedStaging, Phase, QueryResult, QueryRt, StageStream, StageUnit, StagingCol,
+    SubBuf, VState, WorkItem, WorkerShard,
 };
 use crate::graph::VertexId;
 use crate::metrics::EngineMetrics;
@@ -133,6 +149,15 @@ const EDGE_SPLIT_MIN_RANGE: usize = 64;
 /// generously-sized fan's range buffers next round, while bounding what a
 /// long split-heavy session can accumulate (excess buffers are dropped).
 const ORD_POOL_CAP_PER_WORKER: usize = 64;
+
+/// Retention cap (entries) on a shard's flat staging columns between
+/// super-rounds: the PR 5 recycling rule extended to [`Layout::Flat`]. A
+/// round that staged a mega-fanout would otherwise leave every column
+/// holding hub-sized capacity forever; after the exchange hands the
+/// drained columns back, anything above this many slots is released.
+/// The high-water mark before trimming is exported as
+/// [`EngineMetrics::staging_bytes_peak`].
+const FLAT_STAGED_RETAIN: usize = 1024;
 
 /// Edge-level splitting policy: what to do when ONE vertex's `compute()`
 /// stages a mega-fanout.
@@ -274,6 +299,10 @@ pub struct Engine<A: QueryApp> {
     /// Super-round execution mode: strict barriers or ready-driven
     /// pipelining (see [`Pipeline`]).
     pipeline: Pipeline,
+    /// Per-query state layout: flat arenas/columns or the hashed baseline
+    /// (see [`Layout`]). Fixed per engine; every shard and staging buffer
+    /// of every query is built for this layout.
+    layout: Layout,
     /// Compute lane-imbalance ratio of the most recent super-round, the
     /// deterministic signal [`Split::Adaptive`] triggers on.
     last_compute_imbalance: f64,
@@ -446,9 +475,11 @@ struct ExchangeLane<A: QueryApp> {
 struct ExchangeTask<A: QueryApp> {
     /// `shards[src].staged[dw]` for each source worker, in worker order —
     /// the order the serial barrier replayed, so delivery is bit-identical.
-    inbound: Vec<FxHashMap<VertexId, MsgSlot<A::Msg>>>,
-    /// The destination shard's inbox for the next superstep.
-    inbox: FxHashMap<VertexId, MsgSlot<A::Msg>>,
+    inbound: Vec<StagedBuf<A>>,
+    /// The destination shard's delivery sink for the next superstep: the
+    /// inbox map under [`Layout::Hashed`], the whole arena (delivery
+    /// assigns handles) under [`Layout::Flat`].
+    inbox: ExchangeSink<A>,
     /// Messages delivered (post-combiner); folded into stats afterwards.
     delivered: u64,
 }
@@ -474,7 +505,7 @@ struct ComputeCall<'a, A: QueryApp> {
 /// be replayed after it; sub-jobs always stage into their private stream.
 enum Router<'b, A: QueryApp> {
     Shard {
-        staged: &'b mut Vec<FxHashMap<VertexId, MsgSlot<A::Msg>>>,
+        staged: &'b mut Vec<StagedBuf<A>>,
         overflow: &'b mut Option<StageStream<A>>,
         fanned: &'b mut u64,
     },
@@ -486,20 +517,13 @@ enum Router<'b, A: QueryApp> {
 
 impl<A: QueryApp> Router<'_, A> {
     /// Stage one message at the current position of the serial staging
-    /// order (direct map, overflow stream, or sub-stream).
+    /// order (direct buffer, overflow stream, or sub-stream).
     fn stage(&mut self, app: &A, cluster: &Cluster, dst: VertexId, msg: A::Msg) {
         let dw = cluster.worker_of(dst);
         match self {
             Router::Shard { staged, overflow, .. } => match overflow {
                 Some(stream) => stream.stage(app, dw, dst, msg),
-                None => match staged[dw].entry(dst) {
-                    Entry::Occupied(mut e) => {
-                        let _ = merge_msg(app, e.get_mut(), msg);
-                    }
-                    Entry::Vacant(e) => {
-                        e.insert(MsgSlot::One(msg));
-                    }
-                },
+                None => staged[dw].stage(app, dst, msg),
             },
             Router::Stream { stream, .. } => stream.stage(app, dw, dst, msg),
         }
@@ -621,9 +645,8 @@ fn run_task<A: QueryApp>(
     // Disjoint borrows of the shard's fields so the hot loop can mutate
     // vertex state IN PLACE while staging messages and aggregating.
     let WorkerShard {
-        vstate,
+        store,
         active,
-        inbox,
         staged,
         agg_round,
         terminated,
@@ -637,7 +660,6 @@ fn run_task<A: QueryApp>(
         fanned: 0,
         overflow: None,
     };
-    let inbox_now = std::mem::take(inbox);
     let mut next_active: Vec<VertexId> = Vec::new();
     let mut fanned = 0u64;
     let mut overflow: Option<StageStream<A>> = None;
@@ -647,53 +669,117 @@ fn run_task<A: QueryApp>(
             overflow: &mut overflow,
             fanned: &mut fanned,
         };
-        // Process message receivers first, then still-active vertices
-        // that got no messages.
-        for (&v, msgs) in inbox_now.iter() {
-            let st = vstate.entry(v).or_insert_with(|| VState {
-                vq: app.init_value(call.query, v),
-                halted: false,
-                computed_step: 0,
-            });
-            st.halted = false;
-            st.computed_step = step;
-            out.handled += msgs.len() as u64;
-            out.calls += 1;
-            let mut sink = ComputeSink {
-                agg: &mut *agg_round,
-                outbox: &mut *outbox_scratch,
-                next_active: &mut next_active,
-                terminated: &mut *terminated,
-            };
-            let s = call.run(app, v, st, msgs.as_slice(), &mut sink, &mut router);
-            out.max_fan = out.max_fan.max(s);
-            out.sent += s;
-        }
-        // Active vertices without messages.
-        let prev_active = std::mem::take(active);
-        for v in prev_active {
-            let st = vstate.get_mut(&v).expect("active implies state");
-            if st.halted || st.computed_step == step {
-                continue;
+        match store {
+            VStore::Hashed { vstate, inbox } => {
+                let inbox_now = std::mem::take(inbox);
+                // Process message receivers first, then still-active
+                // vertices that got no messages.
+                for (&v, msgs) in inbox_now.iter() {
+                    let st = vstate.entry(v).or_insert_with(|| VState {
+                        vq: app.init_value(call.query, v),
+                        halted: false,
+                        computed_step: 0,
+                    });
+                    st.halted = false;
+                    st.computed_step = step;
+                    out.handled += msgs.len() as u64;
+                    out.calls += 1;
+                    let mut sink = ComputeSink {
+                        agg: &mut *agg_round,
+                        outbox: &mut *outbox_scratch,
+                        next_active: &mut next_active,
+                        terminated: &mut *terminated,
+                    };
+                    let s = call.run(app, v, st, msgs.as_slice(), &mut sink, &mut router);
+                    out.max_fan = out.max_fan.max(s);
+                    out.sent += s;
+                }
+                // Active vertices without messages.
+                let prev_active = std::mem::take(active);
+                for v in prev_active {
+                    let st = vstate.get_mut(&v).expect("active implies state");
+                    if st.halted || st.computed_step == step {
+                        continue;
+                    }
+                    st.computed_step = step;
+                    out.calls += 1;
+                    let mut sink = ComputeSink {
+                        agg: &mut *agg_round,
+                        outbox: &mut *outbox_scratch,
+                        next_active: &mut next_active,
+                        terminated: &mut *terminated,
+                    };
+                    let s = call.run(app, v, st, &[], &mut sink, &mut router);
+                    out.max_fan = out.max_fan.max(s);
+                    out.sent += s;
+                }
+                // Recycle the inbox map's capacity for the next round
+                // (the exchange phase refills it).
+                let mut inbox_now = inbox_now;
+                inbox_now.clear();
+                *inbox = inbox_now;
             }
-            st.computed_step = step;
-            out.calls += 1;
-            let mut sink = ComputeSink {
-                agg: &mut *agg_round,
-                outbox: &mut *outbox_scratch,
-                next_active: &mut next_active,
-                terminated: &mut *terminated,
-            };
-            let s = call.run(app, v, st, &[], &mut sink, &mut router);
-            out.max_fan = out.max_fan.max(s);
-            out.sent += s;
+            VStore::Flat(fs) => {
+                // Receivers in delivery order: the recv list is the
+                // source-order arrival sequence the exchange recorded, so
+                // the flat path visits receivers in exactly the order the
+                // hashed inbox would replay. Slots are moved out of the
+                // arena (leaving `None`), mirroring the taken inbox map.
+                let recv = std::mem::take(&mut fs.recv);
+                for &h in recv.iter() {
+                    let h = h as usize;
+                    let v = fs.verts[h];
+                    let slot = fs.msg[h].take().expect("recv implies pending slot");
+                    if fs.state[h].is_none() {
+                        fs.state[h] = Some(VState {
+                            vq: app.init_value(call.query, v),
+                            halted: false,
+                            computed_step: 0,
+                        });
+                        fs.n_state += 1;
+                    }
+                    let st = fs.state[h].as_mut().expect("state ensured above");
+                    st.halted = false;
+                    st.computed_step = step;
+                    out.handled += slot.len() as u64;
+                    out.calls += 1;
+                    let mut sink = ComputeSink {
+                        agg: &mut *agg_round,
+                        outbox: &mut *outbox_scratch,
+                        next_active: &mut next_active,
+                        terminated: &mut *terminated,
+                    };
+                    let s = call.run(app, v, st, slot.as_slice(), &mut sink, &mut router);
+                    out.max_fan = out.max_fan.max(s);
+                    out.sent += s;
+                }
+                // Recycle the recv list's capacity for the next round.
+                let mut recv = recv;
+                recv.clear();
+                fs.recv = recv;
+                // Active vertices without messages.
+                let prev_active = std::mem::take(active);
+                for v in prev_active {
+                    let h = fs.handle_of(v).expect("active implies handle") as usize;
+                    let st = fs.state[h].as_mut().expect("active implies state");
+                    if st.halted || st.computed_step == step {
+                        continue;
+                    }
+                    st.computed_step = step;
+                    out.calls += 1;
+                    let mut sink = ComputeSink {
+                        agg: &mut *agg_round,
+                        outbox: &mut *outbox_scratch,
+                        next_active: &mut next_active,
+                        terminated: &mut *terminated,
+                    };
+                    let s = call.run(app, v, st, &[], &mut sink, &mut router);
+                    out.max_fan = out.max_fan.max(s);
+                    out.sent += s;
+                }
+            }
         }
     }
-    // Recycle the inbox map's capacity for the next round (the exchange
-    // phase refills it).
-    let mut inbox_now = inbox_now;
-    inbox_now.clear();
-    *inbox = inbox_now;
     *active = next_active;
     out.fanned = fanned;
     out.overflow = overflow;
@@ -787,7 +873,7 @@ fn prep_lane<A: QueryApp>(app: &A, cluster: &Cluster, lane: &mut Lane<'_, A>) {
         let task = &mut lane.tasks[idx];
         // Upper-bound estimate of the work items (actives may dedup
         // against receivers); deterministic, so the decision is too.
-        let est = task.shard.inbox.len() + task.shard.active.len();
+        let est = task.shard.store.pending() + task.shard.active.len();
         match lane.policy.sub_size(est) {
             None => {
                 let run = run_task(app, cluster, lane.edge, task, &mut lane.scratch.outbox);
@@ -1027,8 +1113,8 @@ fn run_exchange<A: QueryApp>(app: &A, lane: &mut ExchangeLane<A>) {
             inbox,
             delivered,
         } = task;
-        for srcmap in inbound.iter_mut() {
-            *delivered += deliver_map(app, inbox, srcmap);
+        for srcbuf in inbound.iter_mut() {
+            *delivered += deliver_into_sink(app, inbox, srcbuf);
         }
     }
 }
@@ -1273,13 +1359,15 @@ fn pipe_task<A: QueryApp>(sh: &PipeShared<'_, A>, pq: &PipeQuery<A>, w: usize) {
     let rt: &mut QueryRt<A> = unsafe { &mut *pq.rt.0 };
     let mut delivered = 0u64;
     for dw in 0..sh.workers {
-        // Take the inbox so the src == dw iteration needs no split
-        // borrow; same map object the barrier exchange would have taken.
-        let mut inbox = std::mem::take(&mut rt.shards[dw].inbox);
+        // Take the delivery sink so the src == dw iteration needs no
+        // split borrow; same store object the barrier exchange would have
+        // taken (under Layout::Flat this moves the whole arena out and
+        // back, a pointer-sized swap).
+        let mut sink = rt.shards[dw].store.take_exchange_sink();
         for src in 0..sh.workers {
-            delivered += deliver_map(sh.app, &mut inbox, &mut rt.shards[src].staged[dw]);
+            delivered += deliver_into_sink(sh.app, &mut sink, &mut rt.shards[src].staged[dw]);
         }
-        rt.shards[dw].inbox = inbox;
+        rt.shards[dw].store.restore_exchange_sink(sink);
     }
     rt.step += 1;
     rt.stats.messages += delivered;
@@ -1480,6 +1568,7 @@ impl<A: QueryApp> Engine<A> {
             split: Split::Adaptive,
             edge_split: EdgeSplit::Adaptive,
             pipeline: Pipeline::default_from_env(),
+            layout: Layout::default_from_env(),
             last_compute_imbalance: 0.0,
             seen_max_fan: 0,
             pool: None,
@@ -1566,6 +1655,21 @@ impl<A: QueryApp> Engine<A> {
     /// results are bit-identical for either setting.
     pub fn pipeline(mut self, p: Pipeline) -> Self {
         self.pipeline = p;
+        self
+    }
+
+    /// Select the per-query state layout (see [`Layout`]).
+    /// [`Layout::Flat`] — slab arenas and columnar staging — is the
+    /// default; [`Layout::Hashed`] keeps the original hash-map stores as
+    /// the benchmark baseline. Must be set before any query is submitted
+    /// (every shard is built for the engine's layout); results are
+    /// bit-identical for either setting.
+    pub fn layout(mut self, l: Layout) -> Self {
+        assert!(
+            self.inflight.is_empty() && self.queue.is_empty(),
+            "layout must be chosen before queries are submitted"
+        );
+        self.layout = l;
         self
     }
 
@@ -1676,19 +1780,35 @@ impl<A: QueryApp> Engine<A> {
         let workers = self.cluster.workers;
 
         // --- Admission: fetch queries while capacity permits (paper §3.1).
-        while self.inflight.len() < self.capacity {
+        // The round's admitted batch is collected first and offered to the
+        // app's [`QueryApp::admit_batch`] hook in submission order — the
+        // batched-kernel entry point (e.g. hub2 fills lazy distance upper
+        // bounds for the whole batch in one min-plus sweep) — before any
+        // per-query runtime state is built.
+        let mut metas: Vec<(QueryId, f64)> = Vec::new();
+        let mut qs: Vec<A::Query> = Vec::new();
+        while self.inflight.len() + qs.len() < self.capacity {
             let Some((id, q, submitted_at)) = self.queue.pop_front() else {
                 break;
             };
-            let mut rt = QueryRt::<A>::new(id, q, workers, submitted_at);
+            metas.push((id, submitted_at));
+            qs.push(q);
+        }
+        if !qs.is_empty() {
+            self.app.admit_batch(&mut qs);
+        }
+        for ((id, submitted_at), q) in metas.into_iter().zip(qs) {
+            let mut rt = QueryRt::<A>::new(id, q, workers, self.layout, submitted_at);
             rt.stats.started_at = self.clock;
             // init_activate: seed the initial activation set V_q^I.
             let init = self.app.init_activate(&rt.query);
             for v in init {
                 let w = self.cluster.worker_of(v);
                 let shard = &mut rt.shards[w];
-                shard.vstate.entry(v).or_insert_with(|| VState {
-                    vq: self.app.init_value(&rt.query, v),
+                let app = &self.app;
+                let query = &rt.query;
+                shard.store.seed_with(v, || VState {
+                    vq: app.init_value(query, v),
                     halted: false,
                     computed_step: 0,
                 });
@@ -1732,7 +1852,7 @@ impl<A: QueryApp> Engine<A> {
                 continue;
             }
             for shard in rt.shards.iter() {
-                max_task_est = max_task_est.max(shard.inbox.len() + shard.active.len());
+                max_task_est = max_task_est.max(shard.store.pending() + shard.active.len());
             }
         }
         let adaptive_armed = (self.last_compute_imbalance > SPLIT_IMBALANCE_TRIGGER
@@ -2187,12 +2307,12 @@ impl<A: QueryApp> Engine<A> {
                 if lane.tasks.len() == qi {
                     lane.tasks.push(ExchangeTask {
                         inbound: Vec::with_capacity(workers),
-                        inbox: FxHashMap::default(),
+                        inbox: ExchangeSink::default(),
                         delivered: 0,
                     });
                 }
                 let task = &mut lane.tasks[qi];
-                task.inbox = std::mem::take(&mut rt.shards[dw].inbox);
+                task.inbox = rt.shards[dw].store.take_exchange_sink();
                 task.delivered = 0;
             }
             // Column extraction in source-worker order, so each destination
@@ -2230,9 +2350,11 @@ impl<A: QueryApp> Engine<A> {
             for (dw, lane) in ex_lanes.iter_mut().enumerate() {
                 let task = &mut lane.tasks[qi];
                 q_msgs += task.delivered;
-                rt.shards[dw].inbox = std::mem::take(&mut task.inbox);
-                for (src, map) in task.inbound.drain(..).enumerate() {
-                    rt.shards[src].staged[dw] = map;
+                rt.shards[dw]
+                    .store
+                    .restore_exchange_sink(std::mem::take(&mut task.inbox));
+                for (src, buf) in task.inbound.drain(..).enumerate() {
+                    rt.shards[src].staged[dw] = buf;
                 }
             }
             qi += 1;
@@ -2242,6 +2364,7 @@ impl<A: QueryApp> Engine<A> {
             round_bytes += q_bytes;
         }
         et.stop();
+        self.sweep_flat_staging();
 
         // --- Fold phase: per-query aggregator fold, master hook and
         // lifecycle, parallel across queries (the fold inside each query
@@ -2287,7 +2410,7 @@ impl<A: QueryApp> Engine<A> {
             let mut iter = rt
                 .shards
                 .iter()
-                .flat_map(|s| s.vstate.iter().map(|(&v, st)| (v, &st.vq)));
+                .flat_map(|s| s.store.touched_iter());
             let out = app.finish(&rt.query, &mut iter, &rt.agg_prev);
             results.push(QueryResult {
                 qid: rt.id,
@@ -2301,6 +2424,34 @@ impl<A: QueryApp> Engine<A> {
         self.fold_busy_into_metrics(&compute_busy, &exchange_busy, &fold_busy);
         self.metrics.wall_time += wall_start.elapsed().as_secs_f64();
         true
+    }
+
+    /// The PR 5 recycling cap extended to the flat layout (see
+    /// [`FLAT_STAGED_RETAIN`]): after the exchange hands the drained flat
+    /// staging columns back, record their retained footprint in the
+    /// [`EngineMetrics::staging_bytes_peak`] high-water gauge, then trim
+    /// every column above the retention cap — so one mega-fanout round
+    /// cannot pin hub-sized scratch in every column forever. No-op (and a
+    /// zero gauge) under [`Layout::Hashed`], which makes the gauge double
+    /// as the flat-engagement signal the fuzzer's forcing leg asserts on.
+    fn sweep_flat_staging(&mut self) {
+        if self.layout == Layout::Hashed {
+            return;
+        }
+        let mut retained: u64 = 0;
+        for rt in self.inflight.iter_mut() {
+            for shard in rt.shards.iter_mut() {
+                for buf in shard.staged.iter_mut() {
+                    if let StagedBuf::Flat(ord) = buf {
+                        retained += ord.retained_bytes() as u64;
+                        ord.shrink_to(FLAT_STAGED_RETAIN);
+                    }
+                }
+            }
+        }
+        if retained > self.metrics.staging_bytes_peak {
+            self.metrics.staging_bytes_peak = retained;
+        }
     }
 
     /// Land a round's per-phase busy accumulators in the metrics fields.
@@ -2333,7 +2484,7 @@ impl<A: QueryApp> Engine<A> {
                 let mut iter = rt
                     .shards
                     .iter()
-                    .flat_map(|s| s.vstate.iter().map(|(&v, st)| (v, &st.vq)));
+                    .flat_map(|s| s.store.touched_iter());
                 app.finish(&rt.query, &mut iter, &rt.agg_prev)
             });
             results.push(QueryResult {
@@ -2360,7 +2511,7 @@ impl<A: QueryApp> Engine<A> {
     /// Everything observable (outputs, per-query stats, the simulated
     /// clock, the cost-model metrics) is bit-identical to the barrier
     /// path: step jobs run the same `run_task`, delivery replays the same
-    /// source-order [`deliver_map`] sequence, folds stay per-query in
+    /// source-order [`deliver_into_sink`] sequence, folds stay per-query in
     /// worker order, and counters are integers folded in fixed order.
     fn pipelined_round(&mut self, wall_start: Instant, workers: usize) -> bool {
         let compute_busy = AtomicU64::new(0);
@@ -2430,7 +2581,7 @@ impl<A: QueryApp> Engine<A> {
                     .rt
                     .shards
                     .iter()
-                    .flat_map(|s| s.vstate.iter().map(|(&v, st)| (v, &st.vq)));
+                    .flat_map(|s| s.store.touched_iter());
                 rep.out = Some(sh.app.finish(&rep.rt.query, &mut iter, &rep.rt.agg_prev));
                 sh.record(PHASE_FOLD, t0, Instant::now());
             }));
@@ -2527,6 +2678,7 @@ impl<A: QueryApp> Engine<A> {
         }
 
         drop(pipe_queries);
+        self.sweep_flat_staging();
         self.metrics.overlap_time +=
             overlap_seconds(&shared.intervals.into_inner().expect("no poisoned batch"));
         self.fold_busy_into_metrics(&compute_busy, &exchange_busy, &fold_busy);

@@ -47,21 +47,35 @@
 //! reporting supersteps of queries that converged last round run as jobs
 //! of the same batch, overlapped with this round's compute.
 //!
+//! Since the flat memory layout ([`Layout`]), the per-query stores behind
+//! all of the above are no longer hash maps by default: `Layout::Flat`
+//! keeps each shard's VQ-data in a slab arena with a dense
+//! `VertexId → u32` handle table (first-touch order recorded explicitly),
+//! its inbox as message slots plus a delivery-order list inside the same
+//! arena, and the per-destination staging as insertion-ordered columnar
+//! buffers — so the compute and exchange inner loops walk contiguous
+//! memory instead of hashing. `Layout::Hashed` keeps the original maps as
+//! the benchmark baseline.
+//!
 //! The determinism argument is uniform: stealing moves jobs between
 //! executors, splitting (either granularity) re-groups a fixed serial
-//! order, and pipelining only *re-times* each query's private
+//! order, pipelining only *re-times* each query's private
 //! exchange-then-fold cascade (per-query state is disjoint; the delivery
-//! replay inside the cascade is the barrier path's source-order sequence)
+//! replay inside the cascade is the barrier path's source-order sequence),
+//! and the layout only moves where state lives (the flat stores record the
+//! very first-touch/delivery orders the hashed path pinned implicitly)
 //! — every order-sensitive merge (message delivery, aggregator fold,
 //! sub-buffer and edge-range absorption) replays that order inside a
 //! single job or on the coordinator — so every thread count, scheduler,
-//! split, edge-split and pipeline setting produces bit-identical results
-//! (see `rust/tests/determinism.rs` and the randomized matrix in
+//! split, edge-split, pipeline and layout setting produces bit-identical
+//! results (see `rust/tests/determinism.rs` and the randomized matrix in
 //! `rust/tests/fuzz_determinism.rs`).
 
+mod arena;
 mod engine;
 mod pool;
 mod query;
 
+pub use arena::Layout;
 pub use engine::{EdgeSplit, Engine, Pipeline, Sched, Split};
 pub use query::{QueryResult, VState};

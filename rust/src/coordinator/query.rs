@@ -18,6 +18,7 @@
 
 use std::collections::hash_map::Entry;
 
+use super::arena::{Layout, StagedBuf, VStore};
 use crate::graph::VertexId;
 use crate::metrics::QueryStats;
 use crate::util::FxHashMap;
@@ -177,15 +178,19 @@ pub(crate) enum Phase {
 /// destination's column of the staging matrix concurrently (the maps are
 /// taken from the shards for the duration of the phase and handed back).
 pub(crate) struct WorkerShard<A: QueryApp> {
-    /// VQ-data table of this worker (lazy: only touched vertices present).
-    pub vstate: FxHashMap<VertexId, VState<A::VQ>>,
+    /// VQ-data table + inbox of this worker, in the engine's
+    /// [`Layout`]: hash maps (`Layout::Hashed`) or a slab arena with a
+    /// dense handle table (`Layout::Flat`). Lazy either way: only touched
+    /// vertices are present.
+    pub store: VStore<A>,
     /// Active list (vertices that did not vote halt).
     pub active: Vec<VertexId>,
-    /// Inbox for the *current* superstep.
-    pub inbox: FxHashMap<VertexId, MsgSlot<A::Msg>>,
     /// Staged outgoing messages, keyed by destination worker then by
-    /// destination vertex (reused across rounds; exchanged at the barrier).
-    pub staged: Vec<FxHashMap<VertexId, MsgSlot<A::Msg>>>,
+    /// destination vertex (reused across rounds; exchanged at the
+    /// barrier). Hash maps under `Layout::Hashed`, insertion-ordered
+    /// columnar buffers under `Layout::Flat` — same [`merge_msg`]
+    /// combining either way.
+    pub staged: Vec<StagedBuf<A>>,
     /// This worker's aggregator partial for the current superstep (folded
     /// across shards in worker order by the fold phase, then reset).
     pub agg_round: A::Agg,
@@ -195,12 +200,11 @@ pub(crate) struct WorkerShard<A: QueryApp> {
 }
 
 impl<A: QueryApp> WorkerShard<A> {
-    fn new(workers: usize) -> Self {
+    fn new(workers: usize, layout: Layout) -> Self {
         Self {
-            vstate: FxHashMap::default(),
+            store: VStore::new(layout, workers),
             active: Vec::new(),
-            inbox: FxHashMap::default(),
-            staged: (0..workers).map(|_| FxHashMap::default()).collect(),
+            staged: (0..workers).map(|_| StagedBuf::new(layout)).collect(),
             agg_round: A::Agg::default(),
             terminated: false,
         }
@@ -209,16 +213,19 @@ impl<A: QueryApp> WorkerShard<A> {
     /// Transpose this shard's superstep into an explicit work-item list so
     /// the compute can be cut into contiguous sub-ranges. The list order is
     /// EXACTLY the order the serial loop would have processed: message
-    /// receivers in inbox drain order (== iteration order), then still-
-    /// active vertices that received nothing, in active-list order. VQ-data
-    /// entries for new receivers are inserted here, in that same order, so
-    /// the `vstate` iteration order the reporting round sees is identical
-    /// to an unsplit run's.
+    /// receivers in inbox drain order (hashed: map iteration order; flat:
+    /// the `recv` delivery-order list), then still-active vertices that
+    /// received nothing, in active-list order. VQ-data entries for new
+    /// receivers are inserted here, in that same order, so the touched
+    /// iteration order the reporting round sees is identical to an unsplit
+    /// run's under either layout.
     ///
     /// Items carry raw pointers to their `VState` slots, collected in a
-    /// second pass after every insertion is done (insertions may rehash the
-    /// map and move values; afterwards nothing mutates the map's structure
-    /// until the merge, so the pointers stay valid through the sub-jobs).
+    /// second pass after every insertion is done (hashed: insertions may
+    /// rehash the map and move values; flat: the arena's `state` vector
+    /// never grows here, since every receiver's slot was allocated at
+    /// delivery — either way nothing mutates the store's structure until
+    /// the merge, so the pointers stay valid through the sub-jobs).
     /// Distinct vertices own distinct slots, so sub-jobs over disjoint item
     /// ranges never alias.
     /// `ptr_index` is caller-provided scratch (recycled across rounds) for
@@ -232,57 +239,125 @@ impl<A: QueryApp> WorkerShard<A> {
         ptr_index: &mut FxHashMap<VertexId, usize>,
     ) {
         debug_assert!(items.is_empty());
-        let mut inbox_now = std::mem::take(&mut self.inbox);
-        for (v, slot) in inbox_now.drain() {
-            let st = self.vstate.entry(v).or_insert_with(|| VState {
-                vq: app.init_value(query, v),
-                halted: false,
-                computed_step: 0,
-            });
-            st.halted = false;
-            st.computed_step = step;
-            items.push(WorkItem {
-                v,
-                st: SendPtr(std::ptr::null_mut()),
-                msgs: Some(slot),
-            });
-        }
-        // Recycle the inbox map's capacity (the exchange phase refills it),
-        // exactly like the serial path does.
-        self.inbox = inbox_now;
-        let prev_active = std::mem::take(&mut self.active);
-        for v in &prev_active {
-            let st = self.vstate.get_mut(v).expect("active implies state");
-            if st.halted || st.computed_step == step {
-                continue;
+        match &mut self.store {
+            VStore::Hashed { vstate, inbox } => {
+                let mut inbox_now = std::mem::take(inbox);
+                for (v, slot) in inbox_now.drain() {
+                    let st = vstate.entry(v).or_insert_with(|| VState {
+                        vq: app.init_value(query, v),
+                        halted: false,
+                        computed_step: 0,
+                    });
+                    st.halted = false;
+                    st.computed_step = step;
+                    items.push(WorkItem {
+                        v,
+                        st: SendPtr(std::ptr::null_mut()),
+                        msgs: Some(slot),
+                    });
+                }
+                // Recycle the inbox map's capacity (the exchange phase
+                // refills it), exactly like the serial path does.
+                *inbox = inbox_now;
+                let prev_active = std::mem::take(&mut self.active);
+                for v in &prev_active {
+                    let st = vstate.get_mut(v).expect("active implies state");
+                    if st.halted || st.computed_step == step {
+                        continue;
+                    }
+                    st.computed_step = step;
+                    items.push(WorkItem {
+                        v: *v,
+                        st: SendPtr(std::ptr::null_mut()),
+                        msgs: None,
+                    });
+                }
+                // Reuse the old active vec's capacity as the merge target.
+                let mut prev_active = prev_active;
+                prev_active.clear();
+                self.active = prev_active;
+                // Second pass: all insertions are done, so the slots are
+                // stable. Collect every pointer in ONE mutable traversal
+                // of the map: a get_mut per item would reborrow the whole
+                // map each time, which under the Stacked Borrows aliasing
+                // model invalidates the pointers collected before it —
+                // one traversal keeps the split path Miri-clean. (The
+                // traversal is O(|vstate|), i.e. every vertex the query
+                // ever touched, not just the frontier — the price of the
+                // aliasing-clean collection; splitting only fires on
+                // heavy rounds, whose compute dwarfs a flat table scan.)
+                ptr_index.clear();
+                for (i, item) in items.iter().enumerate() {
+                    ptr_index.insert(item.v, i);
+                }
+                for (v, st) in vstate.iter_mut() {
+                    if let Some(&i) = ptr_index.get(v) {
+                        items[i].st = SendPtr(st);
+                    }
+                }
             }
-            st.computed_step = step;
-            items.push(WorkItem {
-                v: *v,
-                st: SendPtr(std::ptr::null_mut()),
-                msgs: None,
-            });
-        }
-        // Reuse the old active vec's capacity as the merge target.
-        let mut prev_active = prev_active;
-        prev_active.clear();
-        self.active = prev_active;
-        // Second pass: all insertions are done, so the slots are stable.
-        // Collect every pointer in ONE mutable traversal of the map: a
-        // get_mut per item would reborrow the whole map each time, which
-        // under the Stacked Borrows aliasing model invalidates the
-        // pointers collected before it — one traversal keeps the split
-        // path Miri-clean. (The traversal is O(|vstate|), i.e. every
-        // vertex the query ever touched, not just the frontier — the
-        // price of the aliasing-clean collection; splitting only fires on
-        // heavy rounds, whose compute dwarfs a flat table scan.)
-        ptr_index.clear();
-        for (i, item) in items.iter().enumerate() {
-            ptr_index.insert(item.v, i);
-        }
-        for (v, st) in self.vstate.iter_mut() {
-            if let Some(&i) = ptr_index.get(v) {
-                items[i].st = SendPtr(st);
+            VStore::Flat(fs) => {
+                let recv_now = std::mem::take(&mut fs.recv);
+                for &h in &recv_now {
+                    let v = fs.verts[h as usize];
+                    let slot = fs.msg[h as usize].take().expect("recv implies pending slot");
+                    let st_slot = &mut fs.state[h as usize];
+                    if st_slot.is_none() {
+                        *st_slot = Some(VState {
+                            vq: app.init_value(query, v),
+                            halted: false,
+                            computed_step: 0,
+                        });
+                        fs.n_state += 1;
+                    }
+                    let st = st_slot.as_mut().expect("just ensured");
+                    st.halted = false;
+                    st.computed_step = step;
+                    items.push(WorkItem {
+                        v,
+                        st: SendPtr(std::ptr::null_mut()),
+                        msgs: Some(slot),
+                    });
+                }
+                // Recycle the delivery-order list's capacity (the
+                // exchange phase refills it).
+                let mut recv_now = recv_now;
+                recv_now.clear();
+                fs.recv = recv_now;
+                let prev_active = std::mem::take(&mut self.active);
+                for v in &prev_active {
+                    let h = fs.handle_of(*v).expect("active implies handle");
+                    let st = fs.state[h as usize].as_mut().expect("active implies state");
+                    if st.halted || st.computed_step == step {
+                        continue;
+                    }
+                    st.computed_step = step;
+                    items.push(WorkItem {
+                        v: *v,
+                        st: SendPtr(std::ptr::null_mut()),
+                        msgs: None,
+                    });
+                }
+                let mut prev_active = prev_active;
+                prev_active.clear();
+                self.active = prev_active;
+                // Same one-traversal pointer pass as the hashed arm (a
+                // per-item index into the state vector would reborrow it
+                // each time and invalidate earlier pointers under Stacked
+                // Borrows). The arena's state vector cannot grow here —
+                // every receiver slot was allocated at delivery — so the
+                // slots are stable through the sub-jobs.
+                ptr_index.clear();
+                for (i, item) in items.iter().enumerate() {
+                    ptr_index.insert(item.v, i);
+                }
+                for (st, v) in fs.state.iter_mut().zip(fs.verts.iter()) {
+                    if let Some(st) = st {
+                        if let Some(&i) = ptr_index.get(v) {
+                            items[i].st = SendPtr(st);
+                        }
+                    }
+                }
             }
         }
         debug_assert!(items.iter().all(|item| !item.st.0.is_null()));
@@ -377,6 +452,76 @@ impl<A: QueryApp> OrderedStaging<A> {
                 }
             }
         }
+    }
+
+    /// Merge one whole slot for `dst`, replaying the combiner per message
+    /// against the destination's existing slot (vacant destinations take
+    /// the slot wholesale, recording first-touch order) — the
+    /// ordered-buffer twin of [`drain_into`](Self::drain_into)'s per-entry
+    /// rule.
+    pub(crate) fn merge_slot(&mut self, app: &A, dst: VertexId, slot: MsgSlot<A::Msg>) {
+        match self.index.entry(dst) {
+            Entry::Occupied(e) => {
+                let into = &mut self.slots[*e.get()].1;
+                match slot {
+                    MsgSlot::One(m) => {
+                        let _ = merge_msg(app, into, m);
+                    }
+                    MsgSlot::Many(ms) => {
+                        for m in ms {
+                            let _ = merge_msg(app, into, m);
+                        }
+                    }
+                }
+            }
+            Entry::Vacant(e) => {
+                e.insert(self.slots.len());
+                self.slots.push((dst, slot)); // moves, no allocation
+            }
+        }
+    }
+
+    /// Drain this buffer into another ordered buffer in first-touch order
+    /// — the `Layout::Flat` replay target, where a task's staged buffer
+    /// is itself insertion-ordered. Leaves the buffer empty (capacity
+    /// kept) for recycling.
+    pub(crate) fn drain_into_ordered(&mut self, app: &A, target: &mut OrderedStaging<A>) {
+        self.index.clear();
+        for (dst, slot) in self.slots.drain(..) {
+            target.merge_slot(app, dst, slot);
+        }
+    }
+
+    /// Drain this buffer into a layout-polymorphic staged buffer — the
+    /// single replay entry point the staging-column merge uses, so the
+    /// split paths never care which layout the engine runs.
+    pub(crate) fn drain_into_buf(&mut self, app: &A, target: &mut StagedBuf<A>) {
+        match target {
+            StagedBuf::Hashed(map) => self.drain_into(app, map),
+            StagedBuf::Flat(ord) => self.drain_into_ordered(app, ord),
+        }
+    }
+
+    /// Drain the slot list in first-touch order, clearing the combining
+    /// index first (the exchange-delivery entry point for flat stores).
+    pub(crate) fn drain_slots(&mut self) -> std::vec::Drain<'_, (VertexId, MsgSlot<A::Msg>)> {
+        self.index.clear();
+        self.slots.drain(..)
+    }
+
+    /// Bytes retained by this buffer's backing allocations (capacity, not
+    /// length — the scratch a drained-but-recycled buffer still pins).
+    pub(crate) fn retained_bytes(&self) -> usize {
+        self.slots.capacity() * std::mem::size_of::<(VertexId, MsgSlot<A::Msg>)>()
+            + self.index.capacity() * std::mem::size_of::<(VertexId, usize)>()
+    }
+
+    /// Cap the retained capacity at `cap` slots (the flat-staging twin of
+    /// the per-lane ordered-staging recycling pool's cap), so a one-off
+    /// mega-round cannot pin its high-water scratch forever.
+    pub(crate) fn shrink_to(&mut self, cap: usize) {
+        self.slots.shrink_to(cap);
+        self.index.shrink_to(cap);
     }
 }
 
@@ -516,17 +661,18 @@ impl<A: QueryApp> StageStream<A> {
 /// mega-fanout from re-serializing the very staging the edge ranges just
 /// parallelized.
 pub(crate) struct StagingCol<A: QueryApp> {
-    pub target: FxHashMap<VertexId, MsgSlot<A::Msg>>,
+    pub target: StagedBuf<A>,
     pub sources: Vec<OrderedStaging<A>>,
 }
 
 impl<A: QueryApp> StagingCol<A> {
     /// Replay every source into the target in order. After this the
     /// sources are drained (capacity kept) and the target's key-insertion
-    /// history matches a serial pass exactly.
+    /// (hashed) or first-touch (flat) history matches a serial pass
+    /// exactly.
     pub fn replay(&mut self, app: &A) {
         for src in self.sources.iter_mut() {
-            src.drain_into(app, &mut self.target);
+            src.drain_into_buf(app, &mut self.target);
         }
     }
 }
@@ -625,13 +771,21 @@ pub(crate) struct QueryRt<A: QueryApp> {
 }
 
 impl<A: QueryApp> QueryRt<A> {
-    pub fn new(id: QueryId, query: A::Query, workers: usize, submitted_at: f64) -> Self {
+    pub fn new(
+        id: QueryId,
+        query: A::Query,
+        workers: usize,
+        layout: Layout,
+        submitted_at: f64,
+    ) -> Self {
         Self {
             id,
             query,
             step: 0,
             phase: Phase::Running,
-            shards: (0..workers).map(|_| WorkerShard::new(workers)).collect(),
+            shards: (0..workers)
+                .map(|_| WorkerShard::new(workers, layout))
+                .collect(),
             agg_prev: A::Agg::default(),
             terminated: false,
             stats: QueryStats {
@@ -644,14 +798,14 @@ impl<A: QueryApp> QueryRt<A> {
 
     /// Total touched vertices across workers (VQ-data entries allocated).
     pub fn touched(&self) -> u64 {
-        self.shards.iter().map(|s| s.vstate.len() as u64).sum()
+        self.shards.iter().map(|s| s.store.touched() as u64).sum()
     }
 
     /// True when no vertex is active and no message is pending.
     pub fn quiescent(&self) -> bool {
         self.shards
             .iter()
-            .all(|s| s.active.is_empty() && s.inbox.is_empty())
+            .all(|s| s.active.is_empty() && s.store.pending() == 0)
     }
 }
 
@@ -756,12 +910,15 @@ mod tests {
     #[test]
     fn split_items_replays_serial_order_and_dedups_actives() {
         let app = SumBelow100;
-        let mut shard = WorkerShard::<SumBelow100>::new(2);
+        let mut shard = WorkerShard::<SumBelow100>::new(2, Layout::Hashed);
         // Receiver 2 is new to the query (no VQ-data yet — the receiver
         // pass must insert it); actives are [4, 2], and 2 also received,
         // so the active pass must dedup it exactly like the serial loop.
-        shard.inbox.insert(2, MsgSlot::One(5));
-        shard.vstate.insert(
+        let VStore::Hashed { vstate, inbox } = &mut shard.store else {
+            unreachable!("Layout::Hashed was requested")
+        };
+        inbox.insert(2, MsgSlot::One(5));
+        vstate.insert(
             4,
             VState {
                 vq: (),
@@ -776,12 +933,58 @@ mod tests {
         let order: Vec<u32> = items.iter().map(|i| i.v).collect();
         assert_eq!(order, vec![2, 4], "receivers first, then deduped actives");
         assert!(items[0].msgs.is_some() && items[1].msgs.is_none());
+        let VStore::Hashed { vstate, inbox } = &shard.store else {
+            unreachable!()
+        };
         for item in &items {
             assert!(!item.st.0.is_null());
-            let st = shard.vstate.get(&item.v).unwrap();
+            let st = vstate.get(&item.v).unwrap();
             assert_eq!(st.computed_step, 1, "work items must be stamped");
         }
-        assert!(shard.inbox.is_empty(), "inbox must be drained for recycling");
+        assert!(inbox.is_empty(), "inbox must be drained for recycling");
+        assert!(shard.active.is_empty(), "actives consumed; merge refills");
+    }
+
+    #[test]
+    fn flat_split_items_replays_delivery_order_and_dedups_actives() {
+        // The flat twin of the serial-order lock above: receivers come
+        // out in `recv` delivery order, actives dedup, and the arena's
+        // state slots back every work-item pointer.
+        let app = SumBelow100;
+        let mut shard = WorkerShard::<SumBelow100>::new(2, Layout::Flat);
+        let VStore::Flat(fs) = &mut shard.store else {
+            unreachable!("Layout::Flat was requested")
+        };
+        // Deliver to 6 then 2 (delivery order ≠ numeric order) and seed
+        // VQ-data for active-only vertex 4.
+        fs.deliver_slot(&app, 6, MsgSlot::One(5));
+        fs.deliver_slot(&app, 2, MsgSlot::One(7));
+        fs.ensure_state_with(4, || VState {
+            vq: (),
+            halted: false,
+            computed_step: 0,
+        });
+        shard.active.extend([4u32, 2]);
+
+        let mut items = Vec::new();
+        shard.split_items(&app, &(), 1, &mut items, &mut FxHashMap::default());
+        let order: Vec<u32> = items.iter().map(|i| i.v).collect();
+        assert_eq!(order, vec![6, 2, 4], "delivery order, then deduped actives");
+        assert!(items[0].msgs.is_some() && items[2].msgs.is_none());
+        let VStore::Flat(fs) = &shard.store else { unreachable!() };
+        assert_eq!(fs.n_state, 3, "receivers allocated VQ-data lazily");
+        for item in &items {
+            assert!(!item.st.0.is_null());
+            let h = fs.handle_of(item.v).unwrap() as usize;
+            let st = fs.state[h].as_ref().unwrap();
+            assert_eq!(st.computed_step, 1, "work items must be stamped");
+            assert!(
+                std::ptr::eq(item.st.0, st),
+                "item pointer must target the arena slot"
+            );
+        }
+        assert!(fs.recv.is_empty(), "recv list drained for recycling");
+        assert!(fs.msg.iter().all(Option::is_none), "inbox slots consumed");
         assert!(shard.active.is_empty(), "actives consumed; merge refills");
     }
 
@@ -794,15 +997,28 @@ mod tests {
             buf.stream.collect_column(dw, &mut sources);
         }
         StagingCol {
-            target: FxHashMap::default(),
+            target: StagedBuf::default(),
             sources,
+        }
+    }
+
+    /// Shared-slot lookup across both staged-buffer layouts, so the replay
+    /// tests can assert contents without caring which arm they drove.
+    fn staged_slot<'b>(buf: &'b StagedBuf<SumBelow100>, dst: u32) -> Option<&'b [u32]> {
+        match buf {
+            StagedBuf::Hashed(map) => map.get(&dst).map(|s| s.as_slice()),
+            StagedBuf::Flat(ord) => ord
+                .slots
+                .iter()
+                .find(|&&(d, _)| d == dst)
+                .map(|(_, s)| s.as_slice()),
         }
     }
 
     #[test]
     fn staging_column_replays_combiner_in_subrange_order() {
         let app = SumBelow100;
-        let mut shard = WorkerShard::<SumBelow100>::new(2);
+        let mut shard = WorkerShard::<SumBelow100>::new(2, Layout::Hashed);
         let mut bufs = vec![SubBuf::<SumBelow100>::new(2), SubBuf::new(2)];
         bufs[0].stream.stage(&app, 0, 8, 7);
         bufs[0].stream.stage(&app, 0, 8, 3); // combines: 7 + 3 = 10 < 100
@@ -824,8 +1040,8 @@ mod tests {
         // 10 then 90: the combiner declines (sum would hit 100), so the
         // slot must hold both, in sub-range order — exactly the sequence
         // one serial staging pass would have produced.
-        assert_eq!(col.target.get(&8).unwrap().as_slice(), &[10, 90]);
-        assert_eq!(col.target.get(&9).unwrap().as_slice(), &[1]);
+        assert_eq!(staged_slot(&col.target, 8).unwrap(), &[10, 90]);
+        assert_eq!(staged_slot(&col.target, 9).unwrap(), &[1]);
         assert!(col.sources.iter().all(|s| s.slots.is_empty()));
         // The non-staging state folds separately, in the same sub order.
         let (b1, b2) = bufs.split_at_mut(1);
@@ -884,17 +1100,64 @@ mod tests {
             }
         }
         let mut col = StagingCol::<SumBelow100> {
-            target: FxHashMap::default(),
+            target: StagedBuf::default(),
             sources: bufs.into_iter().map(|mut b| b.remove(0)).collect(),
         };
         col.replay(&app);
 
-        assert_eq!(col.target.len(), inline.len());
+        let StagedBuf::Hashed(target) = &col.target else {
+            unreachable!("default staged buffer is the hashed placeholder")
+        };
+        assert_eq!(target.len(), inline.len());
         for (dst, slot) in &inline {
             assert_eq!(
-                col.target.get(dst).unwrap().as_slice(),
+                target.get(dst).unwrap().as_slice(),
                 slot.as_slice(),
                 "destination {dst} diverged from the inline drain"
+            );
+        }
+    }
+
+    #[test]
+    fn ordered_replay_into_flat_target_matches_hashed_target() {
+        // The flat staging column replays through `drain_into_ordered` /
+        // `merge_slot` instead of `drain_into`; both targets must end up
+        // with identical per-destination slot contents, and the flat one
+        // must additionally pin FIRST-TOUCH destination order.
+        let app = SumBelow100;
+        let msgs: Vec<(u32, u32)> = vec![(4, 60), (2, 5), (4, 30), (6, 1), (4, 90), (2, 7)];
+        let build_sources = || {
+            let mut sources: Vec<OrderedStaging<SumBelow100>> = Vec::new();
+            for chunk in msgs.chunks(2) {
+                let mut b = OrderedStaging::empty();
+                for &(dst, m) in chunk {
+                    b.stage(&app, dst, m);
+                }
+                sources.push(b);
+            }
+            sources
+        };
+
+        let mut hashed = StagingCol::<SumBelow100> {
+            target: StagedBuf::new(Layout::Hashed),
+            sources: build_sources(),
+        };
+        hashed.replay(&app);
+        let mut flat = StagingCol::<SumBelow100> {
+            target: StagedBuf::new(Layout::Flat),
+            sources: build_sources(),
+        };
+        flat.replay(&app);
+        assert!(flat.sources.iter().all(|s| s.slots.is_empty()));
+
+        let StagedBuf::Flat(ord) = &flat.target else { unreachable!() };
+        let touch_order: Vec<u32> = ord.slots.iter().map(|&(d, _)| d).collect();
+        assert_eq!(touch_order, vec![4, 2, 6], "first-touch order preserved");
+        for dst in [4u32, 2, 6] {
+            assert_eq!(
+                staged_slot(&flat.target, dst).unwrap(),
+                staged_slot(&hashed.target, dst).unwrap(),
+                "destination {dst} diverged between layouts"
             );
         }
     }

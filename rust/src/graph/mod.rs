@@ -67,7 +67,17 @@ impl Graph {
         &self.out_weights[a..b]
     }
 
-    /// In-neighbors of `v`; panics unless `ensure_in_edges` was called.
+    /// In-neighbors of `v`.
+    ///
+    /// **Contract**: in-adjacency is lazily materialized, so every
+    /// in-direction accessor (`inn`, [`Graph::in_w`],
+    /// [`Graph::in_degree`], `neighbors(_, Dir::In)`) requires
+    /// [`Graph::ensure_in_edges`] to have run first — the loading-phase
+    /// step the paper bills to BiBFS-style algorithms (Γ_in costs extra).
+    /// Debug builds assert this and name the fix; release builds panic on
+    /// the out-of-bounds offset lookup (`in_offsets` is empty), which is
+    /// memory-safe but unexplained — callers should gate on
+    /// [`Graph::has_in_edges`] when direction use is data-dependent.
     #[inline]
     pub fn inn(&self, v: VertexId) -> &[VertexId] {
         debug_assert!(
@@ -81,9 +91,14 @@ impl Graph {
         &self.in_edges[a..b]
     }
 
-    /// In-neighbor weights of `v`.
+    /// In-neighbor weights of `v` (parallel to `inn(v)`). Same contract
+    /// as [`Graph::inn`]: requires [`Graph::ensure_in_edges`] first.
     #[inline]
     pub fn in_w(&self, v: VertexId) -> &[f32] {
+        debug_assert!(
+            !self.in_offsets.is_empty(),
+            "call ensure_in_edges() before in_w()"
+        );
         let (a, b) = (
             self.in_offsets[v as usize] as usize,
             self.in_offsets[v as usize + 1] as usize,
@@ -362,6 +377,52 @@ mod tests {
         assert_eq!(g.out_w(0), &[2.5, 1.5]);
         g.ensure_in_edges();
         assert_eq!(g.in_w(1), &[2.5]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "ensure_in_edges")]
+    fn inn_asserts_in_edges_materialized() {
+        let g = diamond();
+        let _ = g.inn(0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "ensure_in_edges")]
+    fn in_w_asserts_in_edges_materialized() {
+        let mut b = GraphBuilder::new(2);
+        b.wedge(0, 1, 1.0);
+        let g = b.build();
+        let _ = g.in_w(1);
+    }
+
+    /// Loading-path regression for the BiBFS family: after
+    /// `ensure_in_edges`, the in-CSR must be the exact transpose of the
+    /// out-CSR on a scale-free generator graph (`u ∈ inn(v)` iff
+    /// `v ∈ out(u)`, multiplicity included) — the invariant every
+    /// backward wavefront (BiBFS, the Hub² backward indexing pass)
+    /// silently depends on.
+    #[test]
+    fn in_csr_is_exact_transpose_on_generator_graph() {
+        let mut g = gen::twitter_like(300, 5, 11);
+        g.ensure_in_edges();
+        let n = g.num_vertices() as VertexId;
+        let mut fwd: Vec<(VertexId, VertexId)> = Vec::new();
+        let mut bwd: Vec<(VertexId, VertexId)> = Vec::new();
+        for u in 0..n {
+            for &v in g.out(u) {
+                fwd.push((u, v));
+            }
+            for &w in g.inn(u) {
+                bwd.push((w, u));
+            }
+        }
+        fwd.sort_unstable();
+        bwd.sort_unstable();
+        assert_eq!(fwd, bwd, "in-CSR is not the transpose of out-CSR");
+        let in_count: usize = (0..n).map(|v| g.in_degree(v)).sum();
+        assert_eq!(in_count, g.num_edges());
     }
 
     #[test]

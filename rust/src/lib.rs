@@ -45,6 +45,13 @@
 //!   the engine's phase metrics accounted as per-phase *busy* time
 //!   (work actually done, summed across threads) plus an `overlap_time`
 //!   gauge of wall time with two-plus phases simultaneously active.
+//!   Under the `Layout` knob (flat by default) the per-query stores
+//!   behind all of this are slab arenas with dense `VertexId → u32`
+//!   handle tables and insertion-ordered columnar staging buffers
+//!   instead of hash maps, so the compute/exchange inner loops walk
+//!   contiguous memory; `Layout::Hashed` keeps the original maps as the
+//!   benchmark baseline, and the bit-identical contract covers the
+//!   layout axis too.
 //! * [`vertex`] — the `QueryApp` programming interface (paper §4); app and
 //!   associated types carry the `Send`/`Sync` bounds the threaded shards
 //!   require.
@@ -53,9 +60,11 @@
 //! * [`apps`] — the paper's five applications (§5).
 //! * [`baselines`] — Giraph/GraphLab/GraphChi/Neo4j-like execution
 //!   disciplines for the comparison tables.
-//! * [`runtime`] — PJRT loader/executor for the AOT kernel artifacts
-//!   (gated behind the `pjrt` cargo feature; the default offline build
-//!   uses the pure-rust fallback).
+//! * [`runtime`] — the batched tropical kernels: pure-rust blocked
+//!   min-plus / row-reduction loops (`runtime::rowmin`, always built,
+//!   mirroring the Pallas tile schedules; the hub2 batched-admission hot
+//!   path runs on them) plus the PJRT loader/executor for the
+//!   AOT-compiled artifacts (gated behind the `pjrt` cargo feature).
 
 pub mod analytics;
 pub mod apps;

@@ -154,6 +154,13 @@ pub struct EngineMetrics {
     /// serialization the sub-jobs broke up — a pathological lane that
     /// reads 8× on `max_lane_imbalance` but ~1× here was fully absorbed.
     pub max_post_split_imbalance: f64,
+    /// High-water mark of bytes retained by flat staging buffers across
+    /// all in-flight shards, sampled at the end of each super-round (after
+    /// the exchange drained them, before the capped recycler trimmed
+    /// them). Always 0 under `Layout::Hashed` — tests read this to prove
+    /// the flat layout actually engaged. Like the other high-water marks
+    /// it is an engine-lifetime field preserved by [`EngineMetrics::reset`].
+    pub staging_bytes_peak: u64,
 }
 
 impl EngineMetrics {
@@ -187,10 +194,12 @@ impl EngineMetrics {
         let sim_time = self.sim_time;
         let peak_inflight = self.peak_inflight;
         let max_edge_task = self.max_edge_task;
+        let staging_bytes_peak = self.staging_bytes_peak;
         *self = EngineMetrics {
             sim_time,
             peak_inflight,
             max_edge_task,
+            staging_bytes_peak,
             ..EngineMetrics::default()
         };
     }
@@ -337,6 +346,7 @@ mod tests {
         m.sim_time = 12.5;
         m.peak_inflight = 6;
         m.max_edge_task = 4096;
+        m.staging_bytes_peak = 1 << 20;
         m.reset();
         assert_eq!(m.steals(), 0);
         assert_eq!(m.jobs_executed(), 0);
@@ -352,6 +362,7 @@ mod tests {
         assert!((m.sim_time - 12.5).abs() < 1e-12, "clock mirror preserved");
         assert_eq!(m.peak_inflight, 6, "high-water mark preserved");
         assert_eq!(m.max_edge_task, 4096, "high-water mark preserved");
+        assert_eq!(m.staging_bytes_peak, 1 << 20, "high-water mark preserved");
     }
 
     #[test]

@@ -5,11 +5,15 @@
 //! protos with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids and round-trips cleanly.
 //!
-//! The whole module is gated behind the `pjrt` cargo feature: the offline
-//! build image ships no `xla` crate, so the default build compiles the
-//! pure-rust [`crate::apps::ppsp::hub2::RustMinPlus`] evaluator only.
-//! Enable with `--features pjrt` after adding the `xla` dependency to
-//! `Cargo.toml`.
+//! The PJRT pieces are gated behind the `pjrt` cargo feature: the offline
+//! build image ships no `xla` crate, so the default build compiles only
+//! the pure-rust kernels in [`rowmin`] (the blocked tropical min-plus /
+//! row-reduction loops mirroring the Pallas tile schedules, used by the
+//! batched hub2 admission path) plus the naive
+//! [`crate::apps::ppsp::hub2::RustMinPlus`] oracle. Enable with
+//! `--features pjrt` after adding the `xla` dependency to `Cargo.toml`.
+
+pub mod rowmin;
 
 #[cfg(feature = "pjrt")]
 pub mod minplus;

@@ -1,0 +1,331 @@
+//! Pure-rust blocked tropical kernels: the CPU mirror of the L1 Pallas
+//! kernels (`python/compile/kernels/minplus.py` and `rowmin.py`).
+//!
+//! Two primitives:
+//!
+//! * [`minplus_matmul`] — `out[i,j] = min_k (a[i,k] + b[k,j])`, the
+//!   tropical matrix product used for the Hub² distance closure and the
+//!   first stage (`sd = S ⊗ D_H`) of the batched query upper bound;
+//! * [`tropical_rowmin`] — `out[q] = min_j (a[q,j] + b[q,j])`, the fused
+//!   row reduction that folds `sd` against the t-side label rows without
+//!   materializing `sd + t`.
+//!
+//! Both walk the same tile schedule as the Pallas `BlockSpec` grids
+//! (accumulator revisited across the contraction-axis blocks), so a tile
+//! of each operand stays cache-resident per step — this module is what
+//! the default (no `pjrt` feature) build runs on the query hot path, and
+//! it is the oracle the compiled artifacts are validated against. Like
+//! the Pallas kernels, requested tile sizes auto-shrink to the full
+//! dimension when the dimension does not tile evenly, and outputs are
+//! clamped to [`INF`] (`jnp.minimum(out, INF)` in the kernels).
+//!
+//! All inputs are hop counts encoded as f32 (small non-negative integers,
+//! exact in f32) or [`INF`]; `INF + x` rounds back to `INF` for any hop
+//! count `x` (the ulp at 2^31 is 256), so tropical associativity holds
+//! bit-exactly and the blocked schedules match the naive loops — the
+//! tests pin that parity.
+
+/// f32 encoding of "unreachable": 2^31, matching
+/// `python/compile/kernels/ref.py` (and `apps::ppsp::hub2::F_INF`).
+pub const INF: f32 = 2_147_483_648.0;
+
+/// Default tile for [`minplus_matmul`] (the Pallas kernel's 128×128×128).
+pub const MM_TILE: (usize, usize, usize) = (128, 128, 128);
+
+/// Default tile for [`tropical_rowmin`] (the Pallas kernel's (8, 1024)).
+pub const RM_TILE: (usize, usize) = (8, 1024);
+
+/// Shrink a requested tile size to the full dimension when it does not
+/// tile evenly (production hub tables are padded; test shapes are not).
+#[inline]
+fn fit(dim: usize, tile: usize) -> usize {
+    assert!(tile > 0, "tile size must be positive");
+    if dim == 0 || dim % tile != 0 {
+        dim.max(1)
+    } else {
+        tile
+    }
+}
+
+/// Blocked tropical (min-plus) matmul: `out[i,j] = min_k (a[i,k] + b[k,j])`
+/// with the default tile. `a` is `m×k` row-major, `b` is `k×n` row-major.
+pub fn minplus_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    minplus_matmul_blocked(a, b, m, k, n, MM_TILE.0, MM_TILE.1, MM_TILE.2)
+}
+
+/// [`minplus_matmul`] with explicit tile sizes `(bm, bn, bk)`. The grid
+/// runs `(m/bm, n/bn, k/bk)` with the k axis innermost, so each output
+/// tile is revisited across k blocks and acts as the accumulator —
+/// exactly the Pallas revisiting schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn minplus_matmul_blocked(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bm: usize,
+    bn: usize,
+    bk: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "a shape mismatch");
+    assert_eq!(b.len(), k * n, "b shape mismatch");
+    let (bm, bn, bk) = (fit(m, bm), fit(n, bn), fit(k, bk));
+    let mut out = vec![INF; m * n];
+    for i0 in (0..m).step_by(bm) {
+        for j0 in (0..n).step_by(bn) {
+            for k0 in (0..k).step_by(bk) {
+                for i in i0..i0 + bm {
+                    for kk in k0..k0 + bk {
+                        let av = a[i * k + kk];
+                        if av >= INF {
+                            // INF + b[kk,j] rounds to >= INF: never lowers
+                            // the accumulator (initialized to INF).
+                            continue;
+                        }
+                        let brow = &b[kk * n + j0..kk * n + j0 + bn];
+                        let orow = &mut out[i * n + j0..i * n + j0 + bn];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            let cand = av + bv;
+                            if cand < *o {
+                                *o = cand;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for o in &mut out {
+        *o = o.min(INF);
+    }
+    out
+}
+
+/// Fused tropical row reduction: `out[q] = min_j (a[q,j] + b[q,j])` with
+/// the default tile. Both operands are `c×k` row-major.
+pub fn tropical_rowmin(a: &[f32], b: &[f32], c: usize, k: usize) -> Vec<f32> {
+    tropical_rowmin_blocked(a, b, c, k, RM_TILE.0, RM_TILE.1)
+}
+
+/// [`tropical_rowmin`] with explicit tile sizes `(bc, bk)`: the grid runs
+/// `(c/bc, k/bk)`, streaming `(bc, bk)` tiles of both operands and
+/// folding each into the `(bc,)` accumulator column.
+pub fn tropical_rowmin_blocked(
+    a: &[f32],
+    b: &[f32],
+    c: usize,
+    k: usize,
+    bc: usize,
+    bk: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), c * k, "a shape mismatch");
+    assert_eq!(b.len(), c * k, "b shape mismatch");
+    let (bc, bk) = (fit(c, bc), fit(k, bk));
+    let mut out = vec![INF; c];
+    for q0 in (0..c).step_by(bc) {
+        for k0 in (0..k).step_by(bk) {
+            for q in q0..q0 + bc {
+                let arow = &a[q * k + k0..q * k + k0 + bk];
+                let brow = &b[q * k + k0..q * k + k0 + bk];
+                let mut acc = out[q];
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    let cand = av + bv;
+                    if cand < acc {
+                        acc = cand;
+                    }
+                }
+                out[q] = acc;
+            }
+        }
+    }
+    for o in &mut out {
+        *o = o.min(INF);
+    }
+    out
+}
+
+/// In-place min-plus closure of the `k×k` table `d` by repeated tropical
+/// squaring (`ceil(log2 k) + 1` rounds or until fixpoint) — the CPU
+/// mirror of the L2 closure built on [`minplus_matmul`].
+pub fn closure_in_place(d: &mut [f32], k: usize) {
+    assert_eq!(d.len(), k * k, "d shape mismatch");
+    if k == 0 {
+        return;
+    }
+    let steps = (k as f64).log2().ceil() as usize + 1;
+    for _ in 0..steps.max(1) {
+        let next = minplus_matmul(d, d, k, k, k);
+        // Squaring a reflexive table (0 diagonal) only ever shrinks
+        // entries, so fixpoint == equality.
+        if next == d {
+            break;
+        }
+        d.copy_from_slice(&next);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift32 — tests must not depend on crate rng.
+    struct Rng(u32);
+    impl Rng {
+        fn next(&mut self) -> u32 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 17;
+            x ^= x << 5;
+            self.0 = x;
+            x
+        }
+        /// Hop-count-shaped value: small integer or INF (~1 in 4).
+        fn hop(&mut self) -> f32 {
+            let r = self.next();
+            if r % 4 == 0 {
+                INF
+            } else {
+                (r % 50) as f32
+            }
+        }
+    }
+
+    fn table(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.hop()).collect()
+    }
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![INF; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    let cand = a[i * k + kk] + b[kk * n + j];
+                    if cand < out[i * n + j] {
+                        out[i * n + j] = cand;
+                    }
+                }
+                out[i * n + j] = out[i * n + j].min(INF);
+            }
+        }
+        out
+    }
+
+    fn naive_rowmin(a: &[f32], b: &[f32], c: usize, k: usize) -> Vec<f32> {
+        (0..c)
+            .map(|q| {
+                let mut best = INF;
+                for j in 0..k {
+                    best = best.min(a[q * k + j] + b[q * k + j]);
+                }
+                best.min(INF)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matmul_matches_naive_on_random_tables() {
+        let mut rng = Rng(0xC0FFEE);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (8, 8, 8), (13, 7, 17)] {
+            let a = table(&mut rng, m * k);
+            let b = table(&mut rng, k * n);
+            assert_eq!(
+                minplus_matmul(&a, &b, m, k, n),
+                naive_matmul(&a, &b, m, k, n),
+                "({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_blocking_is_invariant() {
+        let mut rng = Rng(42);
+        let (m, k, n) = (12, 16, 20);
+        let a = table(&mut rng, m * k);
+        let b = table(&mut rng, k * n);
+        let want = naive_matmul(&a, &b, m, k, n);
+        for &(bm, bn, bk) in &[(1, 1, 1), (4, 5, 8), (12, 20, 16), (3, 2, 4)] {
+            assert_eq!(
+                minplus_matmul_blocked(&a, &b, m, k, n, bm, bn, bk),
+                want,
+                "tile ({bm},{bn},{bk})"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_identity_is_inert() {
+        // Tropical identity: 0 diagonal, INF off-diagonal.
+        let mut rng = Rng(7);
+        let k = 6;
+        let a = table(&mut rng, k * k);
+        let mut id = vec![INF; k * k];
+        for i in 0..k {
+            id[i * k + i] = 0.0;
+        }
+        assert_eq!(minplus_matmul(&a, &id, k, k, k), a);
+        assert_eq!(minplus_matmul(&id, &a, k, k, k), a);
+    }
+
+    #[test]
+    fn rowmin_matches_naive_on_random_tables() {
+        let mut rng = Rng(0xDEAD);
+        for &(c, k) in &[(1, 1), (4, 9), (8, 1024), (5, 33)] {
+            let a = table(&mut rng, c * k);
+            let b = table(&mut rng, c * k);
+            assert_eq!(
+                tropical_rowmin(&a, &b, c, k),
+                naive_rowmin(&a, &b, c, k),
+                "({c},{k})"
+            );
+        }
+    }
+
+    #[test]
+    fn rowmin_blocking_is_invariant() {
+        let mut rng = Rng(99);
+        let (c, k) = (10, 24);
+        let a = table(&mut rng, c * k);
+        let b = table(&mut rng, c * k);
+        let want = naive_rowmin(&a, &b, c, k);
+        for &(bc, bk) in &[(1, 1), (2, 8), (5, 24), (10, 3)] {
+            assert_eq!(
+                tropical_rowmin_blocked(&a, &b, c, k, bc, bk),
+                want,
+                "tile ({bc},{bk})"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_contraction_yields_inf() {
+        assert_eq!(tropical_rowmin(&[], &[], 3, 0), vec![INF; 3]);
+        assert_eq!(minplus_matmul(&[], &[], 2, 0, 2), vec![INF; 4]);
+    }
+
+    #[test]
+    fn inf_plus_hop_rounds_back_to_inf() {
+        // The absorption the module doc relies on: ulp(2^31) = 256, so
+        // INF + any hop count rounds back to INF exactly.
+        for d in [1.0f32, 50.0, 200.0] {
+            assert_eq!(INF + d, INF);
+        }
+    }
+
+    #[test]
+    fn closure_finds_two_hop_paths_and_reaches_fixpoint() {
+        // 0 ->(3) 1 ->(4) 2: closure must fill d(0,2) = 7.
+        let k = 3;
+        let mut d = vec![INF; k * k];
+        for i in 0..k {
+            d[i * k + i] = 0.0;
+        }
+        d[1] = 3.0;
+        d[k + 2] = 4.0;
+        closure_in_place(&mut d, k);
+        assert_eq!(d[2], 7.0);
+        let fixed = d.clone();
+        closure_in_place(&mut d, k);
+        assert_eq!(d, fixed, "closure must be idempotent");
+    }
+}

@@ -55,6 +55,18 @@ pub trait QueryApp: Sync {
     /// from a pool worker back to the coordinator.
     type Out: Clone + Send;
 
+    /// Admission hook: the engine calls this once per super-round with the
+    /// whole batch of queries admitted that round (in submission order),
+    /// BEFORE building any per-query runtime state or calling
+    /// [`QueryApp::init_activate`]. Apps that can amortize per-query
+    /// preprocessing across a batch override it — e.g. the hub2 PPSP app
+    /// fills lazy distance upper bounds for every admitted query in one
+    /// batched min-plus kernel sweep over the padded hub table instead of
+    /// one row probe per query. Mutating a query here is the ONLY
+    /// sanctioned place to do so; afterwards the content is frozen for the
+    /// query's lifetime. The default is a no-op.
+    fn admit_batch(&self, _batch: &mut [Self::Query]) {}
+
     /// The initial activation set `V_q^I` (paper: `init_activate()` +
     /// `get_vpos`/`activate`). Returning vertex ids (instead of per-worker
     /// positions) lets the engine filter per worker; apps with indexes

@@ -13,7 +13,7 @@ use quegel::apps::reach::{build_labels, condense, dag, ReachQuery};
 use quegel::apps::terrain::baseline::dijkstra;
 use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
 use quegel::apps::xml::{self, SlcaLevelAligned, SlcaNaive};
-use quegel::coordinator::{EdgeSplit, Engine, Pipeline, Sched, Split};
+use quegel::coordinator::{EdgeSplit, Engine, Layout, Pipeline, Sched, Split};
 use quegel::graph::gen;
 use quegel::graph::VertexId;
 use quegel::network::Cluster;
@@ -152,6 +152,74 @@ fn scheduler_choice_never_changes_outputs() {
     }
 }
 
+/// Layout sweep on the partition the flat layout exists for: the
+/// hub-concentrated graph floods worker 0's staging and inbox, so the
+/// arena/columnar path gets real volume. The flat slab-arena stores and
+/// the hashed baseline maps must return bit-identical outputs across
+/// threads and both pipeline modes, match the BFS oracle — and the flat
+/// path must actually engage (the staging high-water gauge is its
+/// engagement signal) while the hashed baseline must never touch it.
+#[test]
+fn layout_choice_never_changes_outputs() {
+    let n = 2_000;
+    let g = gen::hub_concentrated(n, 8, 16, 3, 9601);
+    let queries = gen::random_pairs(n, 10, 9602);
+    let mut base: Option<Vec<Option<u32>>> = None;
+    for layout in [Layout::Hashed, Layout::Flat] {
+        for threads in [1usize, 4] {
+            for pipeline in [Pipeline::Off, Pipeline::On] {
+                let mut eng = Engine::new(Bfs::new(&g), Cluster::new(8), n)
+                    .capacity(8)
+                    .threads(threads)
+                    .scheduler(Sched::Stealing)
+                    .pipeline(pipeline)
+                    .layout(layout);
+                let ids: Vec<_> = queries.iter().map(|&q| eng.submit(q)).collect();
+                eng.run_until_idle();
+                let gauge = eng.metrics().staging_bytes_peak;
+                match layout {
+                    Layout::Flat => assert!(
+                        gauge > 0,
+                        "threads={threads} pipeline={pipeline:?}: flat layout never engaged"
+                    ),
+                    Layout::Hashed => assert_eq!(
+                        gauge, 0,
+                        "threads={threads} pipeline={pipeline:?}: hashed baseline \
+                         touched the flat staging gauge"
+                    ),
+                }
+                let outs: Vec<Option<u32>> = ids
+                    .iter()
+                    .map(|id| {
+                        eng.results()
+                            .iter()
+                            .find(|r| r.qid == *id)
+                            .expect("query completed")
+                            .out
+                    })
+                    .collect();
+                match &base {
+                    None => base = Some(outs),
+                    Some(b) => assert_eq!(
+                        &outs, b,
+                        "layout={layout:?} threads={threads} pipeline={pipeline:?} \
+                         changed query outputs"
+                    ),
+                }
+            }
+        }
+    }
+    let outs = base.unwrap();
+    for (i, &(s, t)) in queries.iter().enumerate() {
+        let want = ppsp_oracle::bfs_dist(&g, s, t);
+        assert_eq!(
+            outs[i],
+            (want != UNREACHED).then_some(want),
+            "query ({s},{t})"
+        );
+    }
+}
+
 /// Combiner-less app whose answer depends on MESSAGE ORDER: the receiver
 /// folds its inbox through the non-commutative `h -> h * 31 + m`. Three
 /// senders are crafted so the fold only produces the locked constant when
@@ -220,19 +288,22 @@ fn exchange_and_substaging_preserve_source_order() {
             for split in [Split::Off, Split::MaxTaskVertices(1), Split::Adaptive] {
                 for edge in [EdgeSplit::Off, EdgeSplit::MaxFanout(1)] {
                     for pipeline in [Pipeline::Off, Pipeline::On] {
-                        let mut eng = Engine::new(OrderHash, Cluster::new(2), 4)
-                            .threads(threads)
-                            .scheduler(sched)
-                            .split(split)
-                            .edge_split(edge)
-                            .pipeline(pipeline);
-                        let out = eng.run_one(()).out;
-                        assert_eq!(
-                            out, WANT,
-                            "threads={threads} sched={sched:?} split={split:?} \
-                             edge={edge:?} pipeline={pipeline:?} delivered out \
-                             of source order"
-                        );
+                        for layout in [Layout::Hashed, Layout::Flat] {
+                            let mut eng = Engine::new(OrderHash, Cluster::new(2), 4)
+                                .threads(threads)
+                                .scheduler(sched)
+                                .split(split)
+                                .edge_split(edge)
+                                .pipeline(pipeline)
+                                .layout(layout);
+                            let out = eng.run_one(()).out;
+                            assert_eq!(
+                                out, WANT,
+                                "threads={threads} sched={sched:?} split={split:?} \
+                                 edge={edge:?} pipeline={pipeline:?} \
+                                 layout={layout:?} delivered out of source order"
+                            );
+                        }
                     }
                 }
             }
@@ -324,18 +395,22 @@ fn edge_ranges_and_overflow_tail_replay_in_send_order() {
             EdgeSplit::Adaptive,
         ] {
             for pipeline in [Pipeline::Off, Pipeline::On] {
-                let mut eng = Engine::new(OrderFan, Cluster::new(2), 6)
-                    .threads(threads)
-                    .scheduler(Sched::Stealing)
-                    .edge_split(edge)
-                    .pipeline(pipeline);
-                let out = eng.run_one(()).out;
-                parked |= eng.metrics().edge_ranges_split > 0;
-                assert_eq!(
-                    out, WANT,
-                    "threads={threads} edge={edge:?} pipeline={pipeline:?} \
-                     replayed the fan or its tail out of send order"
-                );
+                for layout in [Layout::Hashed, Layout::Flat] {
+                    let mut eng = Engine::new(OrderFan, Cluster::new(2), 6)
+                        .threads(threads)
+                        .scheduler(Sched::Stealing)
+                        .edge_split(edge)
+                        .pipeline(pipeline)
+                        .layout(layout);
+                    let out = eng.run_one(()).out;
+                    parked |= eng.metrics().edge_ranges_split > 0;
+                    assert_eq!(
+                        out, WANT,
+                        "threads={threads} edge={edge:?} pipeline={pipeline:?} \
+                         layout={layout:?} replayed the fan or its tail out of \
+                         send order"
+                    );
+                }
             }
         }
     }

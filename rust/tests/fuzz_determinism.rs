@@ -6,18 +6,22 @@
 //! `util::Rng` generates random graphs (five structural families,
 //! including the pathological mega-hub and mono-hub) × random query
 //! batches × random engine configurations `{threads, workers, capacity,
-//! Sched, Split, EdgeSplit, Pipeline}`, and every configuration's
-//! `QueryResult::out` vector must be bit-identical to the serial
-//! reference run (`threads = 1`, static scheduler, all splitting off,
-//! barrier rounds). Each case additionally runs one
-//! **edge-threshold-1 forcing configuration** (`EdgeSplit::MaxFanout(1)`
-//! + a tiny vertex-split threshold), which parks every multi-message
-//! outbox and dices it into single-edge ranges — the most adversarial
-//! exercise of the park/range/fold replay there is — and one
-//! **pipeline forcing configuration** (`Pipeline::On`, splitting off,
-//! 4 threads) whose ready-driven rounds are guaranteed to engage. On a
-//! mismatch the failing case seed and configuration are printed, so any
-//! regression reproduces with a one-line test.
+//! Sched, Split, EdgeSplit, Pipeline, Layout}`, and every
+//! configuration's `QueryResult::out` vector must be bit-identical to
+//! the serial reference run (`threads = 1`, static scheduler, all
+//! splitting off, barrier rounds, the hashed-map layout). Each case
+//! additionally runs one **edge-threshold-1 forcing configuration**
+//! (`EdgeSplit::MaxFanout(1)` + a tiny vertex-split threshold), which
+//! parks every multi-message outbox and dices it into single-edge
+//! ranges — the most adversarial exercise of the park/range/fold replay
+//! there is — one **pipeline forcing configuration** (`Pipeline::On`,
+//! splitting off, 4 threads) whose ready-driven rounds are guaranteed to
+//! engage, and one **flat-layout forcing configuration**
+//! (`Layout::Flat` + stealing + both splits armed) whose arena stores
+//! and columnar staging are guaranteed to engage (asserted at the end
+//! via the `staging_bytes_peak` gauge, which only the flat path ever
+//! moves). On a mismatch the failing case seed and configuration are
+//! printed, so any regression reproduces with a one-line test.
 //!
 //! `QUEGEL_BENCH_SMOKE=1` shrinks the case count for the CI smoke lane;
 //! `QUEGEL_FUZZ_CASES=N` overrides it outright (the nightly deep-fuzz CI
@@ -27,7 +31,7 @@
 //! never silently degenerate into testing the unsplit paths.
 
 use quegel::apps::ppsp::{Bfs, BiBfs};
-use quegel::coordinator::{EdgeSplit, Engine, Pipeline, Sched, Split};
+use quegel::coordinator::{EdgeSplit, Engine, Layout, Pipeline, Sched, Split};
 use quegel::graph::{gen, Graph};
 use quegel::network::Cluster;
 use quegel::util::{env_flag, env_u64, env_usize, Rng};
@@ -43,6 +47,7 @@ struct Config {
     split: Split,
     edge: EdgeSplit,
     pipeline: Pipeline,
+    layout: Layout,
 }
 
 fn random_config(rng: &mut Rng) -> Config {
@@ -75,6 +80,11 @@ fn random_config(rng: &mut Rng) -> Config {
     } else {
         Pipeline::Off
     };
+    let layout = if rng.chance(0.5) {
+        Layout::Flat
+    } else {
+        Layout::Hashed
+    };
     Config {
         threads: [2, 3, 4, 8][rng.below_usize(4)],
         workers: 1 + rng.below_usize(8),
@@ -83,6 +93,7 @@ fn random_config(rng: &mut Rng) -> Config {
         split,
         edge,
         pipeline,
+        layout,
     }
 }
 
@@ -137,6 +148,7 @@ struct Engaged {
     subjobs: bool,
     edge_ranges: bool,
     pipelined: bool,
+    flat: bool,
 }
 
 /// Run one batch under one configuration, returning outputs in submission
@@ -153,7 +165,8 @@ where
         .scheduler(cfg.sched)
         .split(cfg.split)
         .edge_split(cfg.edge)
-        .pipeline(cfg.pipeline);
+        .pipeline(cfg.pipeline)
+        .layout(cfg.layout);
     let ids: Vec<_> = queries.iter().map(|q| eng.submit(q.clone())).collect();
     eng.run_until_idle();
     let outs = ids
@@ -171,6 +184,7 @@ where
         subjobs: eng.metrics().subjobs_executed > 0,
         edge_ranges: eng.metrics().edge_ranges_split > 0,
         pipelined: eng.metrics().pipelined_rounds > 0,
+        flat: eng.metrics().staging_bytes_peak > 0,
     };
     (outs, engaged)
 }
@@ -185,6 +199,8 @@ fn randomized_matrix_is_bit_identical_to_serial() {
     let smoke = env_flag("QUEGEL_BENCH_SMOKE");
     let cases = env_usize("QUEGEL_FUZZ_CASES").unwrap_or(if smoke { 12 } else { 100 });
     let configs_per_case = 3;
+    // The reference also pins the hashed-map layout, so every flat-layout
+    // draw below is compared against the original stores.
     let serial = Config {
         threads: 1,
         workers: 4,
@@ -193,6 +209,7 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         split: Split::Off,
         edge: EdgeSplit::Off,
         pipeline: Pipeline::Off,
+        layout: Layout::Hashed,
     };
     // The edge-threshold-1 forcing leg: every outbox of 2+ messages is
     // parked and diced into single-edge ranges, and a tiny vertex
@@ -206,6 +223,7 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         split: Split::MaxTaskVertices(5),
         edge: EdgeSplit::MaxFanout(1),
         pipeline: Pipeline::Off,
+        layout: Layout::Hashed,
     };
     // The pipeline forcing leg: splitting stays off and threads > 1, so
     // every super-round takes the ready-driven per-(query, worker) path —
@@ -219,11 +237,28 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         split: Split::Off,
         edge: EdgeSplit::Off,
         pipeline: Pipeline::On,
+        layout: Layout::Hashed,
+    };
+    // The flat-layout forcing leg: arena stores + columnar staging under
+    // stealing with BOTH splits armed, so the flat replay pipelines (the
+    // ordered sub-buffer and edge-range absorption into flat columns)
+    // compose every case; engagement is proved per run via the
+    // staging_bytes_peak gauge, which only the flat path ever moves.
+    let flat_forcing = Config {
+        threads: 4,
+        workers: 3,
+        capacity: 8,
+        sched: Sched::Stealing,
+        split: Split::MaxTaskVertices(5),
+        edge: EdgeSplit::MaxFanout(1),
+        pipeline: Pipeline::Off,
+        layout: Layout::Flat,
     };
 
     let mut split_engaged = false;
     let mut edge_engaged = false;
     let mut pipeline_engaged = false;
+    let mut flat_engaged = false;
     for case in 0..cases {
         let case_seed = master_seed.wrapping_add(1 + case as u64 * 0x9e37);
         let mut rng = Rng::new(case_seed);
@@ -249,6 +284,7 @@ fn randomized_matrix_is_bit_identical_to_serial() {
             let (outs, engaged) = run(cfg);
             split_engaged |= engaged.subjobs;
             edge_engaged |= engaged.edge_ranges;
+            flat_engaged |= engaged.flat;
             assert_eq!(
                 outs, base,
                 "fuzz case {case} (seed {case_seed:#x}, {desc}, \
@@ -273,6 +309,14 @@ fn randomized_matrix_is_bit_identical_to_serial() {
              bibfs={use_bibfs}) pipeline forcing config {pipe_forcing:?} \
              changed outputs vs the serial reference"
         );
+        let (outs, engaged) = run(flat_forcing);
+        flat_engaged |= engaged.flat;
+        assert_eq!(
+            outs, base,
+            "fuzz case {case} (seed {case_seed:#x}, {desc}, \
+             bibfs={use_bibfs}) flat-layout forcing config {flat_forcing:?} \
+             changed outputs vs the serial reference"
+        );
     }
     assert!(
         split_engaged,
@@ -288,5 +332,10 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         pipeline_engaged,
         "no fuzz configuration ever ran a pipelined super-round: the fuzzer \
          is not exercising the ready-driven path"
+    );
+    assert!(
+        flat_engaged,
+        "no fuzz configuration ever engaged the flat layout: the fuzzer is \
+         not exercising the arena/columnar path"
     );
 }
