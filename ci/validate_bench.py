@@ -5,13 +5,16 @@ The perf bench (``cd rust && cargo bench -- perf --json``) emits one JSON
 file per PR milestone — BENCH_pr2.json (phase thread sweep), BENCH_pr3.json
 (static-vs-stealing skew sweep), BENCH_pr4.json (sub-lane split sweep),
 BENCH_pr5.json (edge-level split sweep), BENCH_pr6.json
-(barrier-vs-pipelined round sweep) and BENCH_pr7.json
-(hashed-vs-flat store layout sweep). This script is the single source
-of truth for their shape, shared by the ``bench-smoke`` CI lane and local
-runs:
+(barrier-vs-pipelined round sweep), BENCH_pr7.json
+(hashed-vs-flat store layout sweep) and BENCH_serving.json (closed-loop
+serving sweep: open-loop arrivals with a whale burst under
+``Admit::Static`` vs ``Admit::Adaptive``). This script is the single
+source of truth for their shape, shared by the ``bench-smoke`` CI lane
+and local runs:
 
     python3 ci/validate_bench.py rust/BENCH_*.json          # schema checks
     python3 ci/validate_bench.py --gate rust/BENCH_*.json   # + speedup floors
+    python3 ci/validate_bench.py --selftest                 # validator self-checks
 
 ``--gate`` additionally compares every headline speedup found in the files
 against its floor in ``ci/bench_floors.json`` and fails if any committed
@@ -236,6 +239,51 @@ def check_pr7(doc, name):
     )
 
 
+SERVING_ROW_KEYS = (
+    "admit",
+    "threads",
+    "completed",
+    "qps",
+    "qps_wall",
+    "p50_s",
+    "p99_s",
+    "p999_s",
+    "queueing_p99_s",
+    "admit_deferrals",
+    "backpressured",
+    "wall_s",
+)
+
+
+def check_serving(doc, name):
+    rows = doc.get("rows") or fail(f"{name}: serving sweep produced no rows")
+    for row in rows:
+        require_keys(row, SERVING_ROW_KEYS, name)
+    if {r["admit"] for r in rows} != {"static", "adaptive"}:
+        fail(f"{name}: rows must cover both admission modes")
+    for r in rows:
+        if r["completed"] <= 0 or r["qps"] <= 0:
+            fail(f"{name}: {r['admit']}@t{r['threads']} completed nothing")
+        # Streaming-sketch percentiles are bucket upper edges, so exact
+        # monotonicity holds; any inversion means the sketch regressed.
+        if not (r["p50_s"] <= r["p99_s"] <= r["p999_s"]):
+            fail(
+                f"{name}: {r['admit']}@t{r['threads']} percentile inversion "
+                f"p50={r['p50_s']} p99={r['p99_s']} p99.9={r['p999_s']}"
+            )
+    # Engagement: the whale burst must force the adaptive planner to
+    # defer at least once, and the static planner must never defer — a
+    # sweep where both hold 0 silently measured Static twice.
+    if not any(r["admit"] == "adaptive" and r["admit_deferrals"] > 0 for r in rows):
+        fail(f"{name}: adaptive rows never engaged the admission planner")
+    if not all(r["admit_deferrals"] == 0 for r in rows if r["admit"] == "static"):
+        fail(f"{name}: static rows must not defer admissions")
+    print(
+        f"{name} ok: {len(rows)} rows; adaptive vs static p99 at 4 threads:",
+        doc["adaptive_vs_static_p99_improvement_t4"],
+    )
+
+
 CHECKERS = {
     "perf_engine": check_pr2,
     "perf_skew_sched": check_pr3,
@@ -243,6 +291,7 @@ CHECKERS = {
     "perf_edge_split": check_pr5,
     "perf_pipeline": check_pr6,
     "perf_flat_layout": check_pr7,
+    "perf_serving": check_serving,
 }
 
 
@@ -275,7 +324,115 @@ def gate(docs):
     return True
 
 
+def _serving_fixture():
+    """A minimal trajectory-grade BENCH_serving.json document."""
+
+    def row(admit, threads, deferrals, p99):
+        return {
+            "admit": admit,
+            "threads": threads,
+            "completed": 330,
+            "qps": 5.0,
+            "qps_wall": 1200.0,
+            "p50_s": 0.4,
+            "p99_s": p99,
+            "p999_s": p99 * 4.0,
+            "queueing_p99_s": p99 * 0.5,
+            "admit_deferrals": deferrals,
+            "backpressured": 2,
+            "wall_s": 0.25,
+        }
+
+    return {
+        "pr": 8,
+        "bench": "perf_serving",
+        "rows": [
+            row("static", 1, 0, 2.0),
+            row("adaptive", 1, 9, 1.0),
+            row("static", 4, 0, 2.0),
+            row("adaptive", 4, 9, 1.0),
+        ],
+        "adaptive_vs_static_p99_improvement_t4": 2.0,
+    }
+
+
+def selftest():
+    """Validator self-checks on synthetic in-memory fixtures.
+
+    Run by CI on every PR so that a regression in the validator itself
+    (a checker that silently accepts malformed rows, or gate logic that
+    stops comparing floors) fails the PR rather than the next nightly.
+    """
+
+    def expect_rejected(doc, label):
+        try:
+            CHECKERS[doc["bench"]](doc, label)
+        except (AssertionError, KeyError):
+            return
+        fail(f"selftest: {label} should have been rejected")
+
+    good = _serving_fixture()
+    CHECKERS[good["bench"]](good, "fixture-good")
+
+    no_rows = _serving_fixture()
+    no_rows["rows"] = []
+    expect_rejected(no_rows, "fixture-no-rows")
+
+    missing_key = _serving_fixture()
+    del missing_key["rows"][0]["p999_s"]
+    expect_rejected(missing_key, "fixture-missing-row-key")
+
+    one_mode = _serving_fixture()
+    one_mode["rows"] = [r for r in one_mode["rows"] if r["admit"] == "static"]
+    expect_rejected(one_mode, "fixture-static-only")
+
+    never_deferred = _serving_fixture()
+    for r in never_deferred["rows"]:
+        r["admit_deferrals"] = 0
+    expect_rejected(never_deferred, "fixture-planner-never-engaged")
+
+    static_deferred = _serving_fixture()
+    static_deferred["rows"][0]["admit_deferrals"] = 3
+    expect_rejected(static_deferred, "fixture-static-deferred")
+
+    inverted = _serving_fixture()
+    inverted["rows"][1]["p50_s"] = inverted["rows"][1]["p999_s"] * 2.0
+    expect_rejected(inverted, "fixture-percentile-inversion")
+
+    no_headline = _serving_fixture()
+    del no_headline["adaptive_vs_static_p99_improvement_t4"]
+    expect_rejected(no_headline, "fixture-missing-headline")
+
+    # Gate logic against the committed floors file: the good fixture's
+    # headline (2.0) clears the serving floor; a sub-floor headline must
+    # fail strictly and pass only when downgraded to advisory.
+    saved = os.environ.pop("QUEGEL_BENCH_NO_GATE", None)
+    try:
+        if not gate([("fixture-good", good)]):
+            fail("selftest: gate rejected a headline above its floor")
+        low = _serving_fixture()
+        low["adaptive_vs_static_p99_improvement_t4"] = 0.5
+        if gate([("fixture-low", low)]):
+            fail("selftest: gate accepted a headline below its floor")
+        os.environ["QUEGEL_BENCH_NO_GATE"] = "1"
+        if not gate([("fixture-low", low)]):
+            fail("selftest: advisory mode must downgrade gate failures")
+    finally:
+        os.environ.pop("QUEGEL_BENCH_NO_GATE", None)
+        if saved is not None:
+            os.environ["QUEGEL_BENCH_NO_GATE"] = saved
+
+    print("selftest ok: serving checker + gate fixtures all behaved")
+
+
 def main(argv):
+    if "--selftest" in argv:
+        try:
+            selftest()
+        except AssertionError as e:
+            print(f"selftest failure: {e}", file=sys.stderr)
+            return 1
+        return 0
     args = [a for a in argv if a != "--gate"]
     run_gate = "--gate" in argv
     if not args:

@@ -9,10 +9,19 @@
 //!     upper bounds d_ub are evaluated by ONE call to the compiled
 //!     `dub_batch` kernel (L1 on the hot path), then the BiBFS phase runs
 //!     under superstep sharing with capacity C = 8;
-//!  4. report throughput, latency percentiles, access rate, and validate a
-//!     sample of answers against the serial oracle.
+//!  4. report throughput, latency percentiles (exact sort here; the
+//!     engine also keeps streaming p50/p99/p999 sketches in
+//!     `EngineMetrics::latency` / `::queueing`), access rate, and validate
+//!     a sample of answers against the serial oracle.
 //!
 //!     make artifacts && cargo run --release --offline --example e2e_serving
+//!
+//! The closed-loop serving *benchmark* this example grew into lives in
+//! `rust/benches/tables/perf.rs` (the serving sweep): an open-loop arrival
+//! stream with a whale burst against the bounded submission queue
+//! (`Engine::try_submit`) under `Admit::Static` vs `Admit::Adaptive`,
+//! emitting `BENCH_serving.json`. Regenerate with
+//! `cargo bench -- perf --json` from `rust/`.
 
 use quegel::apps::ppsp::hub2::{Hub2Indexer, Hub2Query, MinPlus, RustMinPlus};
 use quegel::apps::ppsp::{oracle, UNREACHED};
@@ -79,6 +88,9 @@ fn main() {
     let dubs = idx.dub_for(&queries, mp, capacity, k_pad);
     let dub_wall = t_serve.elapsed().as_secs_f64();
 
+    // Explicit d_ub at submission also feeds the admission planner's
+    // whale flag (`Hub2Query::is_heavy`); the default `Admit::Adaptive`
+    // confines flagged queries to the reserved capacity slice.
     let mut eng = Engine::new(Hub2Query::new(&g, &idx), cluster.clone(), n).capacity(capacity);
     let ids: Vec<_> = queries
         .iter()
@@ -120,6 +132,13 @@ fn main() {
         fmt_secs(pct(0.5)),
         fmt_secs(pct(0.95)),
         fmt_secs(pct(0.99))
+    );
+    println!(
+        "    streaming sketch p50 {} / p99 {} / p99.9 {} ({} planner deferrals)",
+        fmt_secs(eng.metrics().latency.quantile(0.5)),
+        fmt_secs(eng.metrics().latency.quantile(0.99)),
+        fmt_secs(eng.metrics().latency.quantile(0.999)),
+        eng.metrics().admit_deferrals
     );
     println!(
         "    mean access rate {} | reach rate {}",

@@ -39,26 +39,37 @@
 //!   the pipeline off under the stealing scheduler — the configurations
 //!   differ ONLY in where state lives, so the comparison isolates what
 //!   the contiguous memory walk buys on the compute wall, with the
-//!   `staging_bytes_peak` gauge as the flat-engagement signal.
+//!   `staging_bytes_peak` gauge as the flat-engagement signal;
+//! * the **serving sweep** replays an open-loop hub2 arrival stream (a
+//!   hub core of `d_ub <= 2` point lookups with a whale burst — deep
+//!   ladder walks the index flags heavy — landing a quarter in) against
+//!   the bounded submission queue under `Admit::Static` vs
+//!   `Admit::Adaptive`, reporting throughput plus p50/p99/p99.9 latency
+//!   and p99 queueing delay from the engine's streaming sketches — all
+//!   on the simulated clock, so the percentiles and the
+//!   adaptive-vs-static p99 headline are machine-independent.
 //!
 //! With `--json`, the same numbers are written to `BENCH_pr2.json`
 //! (thread sweep), `BENCH_pr3.json` (skew sweep), `BENCH_pr4.json`
 //! (split sweep), `BENCH_pr5.json` (edge-split sweep), `BENCH_pr6.json`
-//! (pipeline sweep) and `BENCH_pr7.json` (layout sweep) so the committed
-//! perf trajectory is machine-readable; CI's `bench-smoke` lane validates
+//! (pipeline sweep), `BENCH_pr7.json` (layout sweep) and
+//! `BENCH_serving.json` (serving sweep) so the committed perf trajectory
+//! is machine-readable; CI's `bench-smoke` lane validates
 //! them with `ci/validate_bench.py` and archives them as workflow
 //! artifacts. Setting `QUEGEL_BENCH_SMOKE=1` shrinks every input so the
 //! whole module runs in CI-smoke time (the JSON shape is unchanged;
 //! absolute numbers from smoke runs are not trajectory-grade).
 
-use quegel::apps::ppsp::{Bfs, BiBfs};
+use quegel::apps::ppsp::hub2::{Hub2Index, Hub2QueryContent, RustMinPlus, HEAVY_DUB_THRESHOLD};
+use quegel::apps::ppsp::{Bfs, BiBfs, Hub2Indexer, Hub2Query};
 use quegel::apps::xml::{self, SlcaNaive, XmlGenConfig};
-use quegel::coordinator::{EdgeSplit, Engine, Layout, Pipeline, Sched, Split};
-use quegel::graph::{gen, Graph};
+use quegel::coordinator::{Admit, EdgeSplit, Engine, Layout, Pipeline, Sched, Split};
+use quegel::graph::{gen, Graph, GraphBuilder};
 use quegel::metrics::Table;
 use quegel::network::Cluster;
 use quegel::util::env_flag;
 use quegel::vertex::QueryApp;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
@@ -949,6 +960,270 @@ fn json_skew_rows(rows: &[SkewRow]) -> String {
     format!("[{}]", items.join(","))
 }
 
+// ---------------------------------------------------------------------------
+// Serving sweep: open-loop arrivals against the admission planner.
+// ---------------------------------------------------------------------------
+
+/// Serving testbed graph: a mono-hub **core** (hub vertex 0 wired to every
+/// spoke in both directions, so any core pair is within 2 hops of the hub
+/// and the Hub² front end stamps `d_ub <= 2` — provably-light point
+/// lookups) plus a disconnected complete-bipartite **ladder** whose
+/// entry-to-end walks grind for ~`depth/2` supersteps at up to `width^2`
+/// messages per band — the whale population (`d_ub = depth`, flagged heavy
+/// by [`Hub2Query::is_heavy`]). Returns (graph, ladder entry, last band).
+fn serving_graph(core_n: usize, width: usize, depth: usize) -> (Graph, u32, Vec<u32>) {
+    let n = core_n + 1 + width * depth;
+    let mut b = GraphBuilder::new(n);
+    for v in 1..core_n as u32 {
+        b.edge(0, v);
+        b.edge(v, 0);
+    }
+    let entry = core_n as u32;
+    let band = |i: usize, j: usize| (core_n + 1 + i * width + j) as u32;
+    for j in 0..width {
+        b.edge(entry, band(0, j));
+    }
+    for i in 0..depth - 1 {
+        for j in 0..width {
+            for j2 in 0..width {
+                b.edge(band(i, j), band(i + 1, j2));
+            }
+        }
+    }
+    let last: Vec<u32> = (0..width).map(|j| band(depth - 1, j)).collect();
+    let mut g = b.build();
+    g.ensure_in_edges();
+    (g, entry, last)
+}
+
+/// Fixed serving-engine shape shared by every row of the sweep.
+struct ServeCfg {
+    workers: usize,
+    capacity: usize,
+    queue_bound: usize,
+}
+
+/// Light-only service rate in queries per simulated second: a pilot batch
+/// of core lookups run to idle under static admission. The open-loop
+/// arrival rate is set to a fixed utilization of this, so the sweep
+/// stresses the planner rather than the absolute cost-model scale.
+fn light_service_rate(g: &Graph, idx: &Hub2Index, core_n: usize, cfg: &ServeCfg) -> f64 {
+    let pilot = gen::random_pairs(core_n, 64, 447);
+    let dubs = idx.dub_for(&pilot, &RustMinPlus, 1, idx.k());
+    let mut eng = Engine::new(Hub2Query::new(g, idx), Cluster::new(cfg.workers), g.num_vertices())
+        .capacity(cfg.capacity)
+        .admit(Admit::Static(cfg.capacity))
+        .threads(1)
+        .scheduler(Sched::Stealing)
+        .pipeline(Pipeline::Off);
+    for (&(s, t), &d) in pilot.iter().zip(dubs.iter()) {
+        eng.submit((s, t, d));
+    }
+    eng.run_until_idle();
+    pilot.len() as f64 / eng.sim_time().max(1e-12)
+}
+
+struct ServeRow {
+    admit: &'static str,
+    threads: usize,
+    completed: u64,
+    /// Throughput on the simulated clock (deterministic).
+    qps: f64,
+    /// Throughput on the host wall clock (machine-dependent, advisory).
+    qps_wall: f64,
+    p50: f64,
+    p99: f64,
+    p999: f64,
+    queueing_p99: f64,
+    deferrals: u64,
+    backpressured: u64,
+    wall: f64,
+}
+
+/// One closed-loop serving run: replay `trace` — (query, arrival
+/// sim-time) pairs in nondecreasing arrival order — against the engine as
+/// an open-loop source. Arrivals are delivered once the simulated clock
+/// passes them, back-pressured requests are re-offered in arrival order
+/// (their `arrived_at` stamp is the original arrival, so the wait shows
+/// up in the latency sketches), and the clock jumps to the next arrival
+/// whenever the engine goes idle. Percentiles come from the engine's
+/// streaming sketches on simulated time, so every number but the wall
+/// clock is bit-reproducible on any machine.
+fn serve_once(
+    g: &Graph,
+    idx: &Hub2Index,
+    trace: &[(Hub2QueryContent, f64)],
+    admit: Admit,
+    admit_name: &'static str,
+    threads: usize,
+    cfg: &ServeCfg,
+) -> ServeRow {
+    let mut eng = Engine::new(Hub2Query::new(g, idx), Cluster::new(cfg.workers), g.num_vertices())
+        .capacity(cfg.capacity)
+        .admit(admit)
+        .threads(threads)
+        .scheduler(Sched::Stealing)
+        .pipeline(Pipeline::Off)
+        .queue_bound(cfg.queue_bound);
+    let mut retry: VecDeque<(Hub2QueryContent, f64)> = VecDeque::new();
+    let mut backpressured = 0u64;
+    let mut next = 0usize;
+    let t0 = Instant::now();
+    loop {
+        while let Some(&(q, at)) = retry.front() {
+            if eng.try_submit(q, at).is_ok() {
+                retry.pop_front();
+            } else {
+                break;
+            }
+        }
+        while next < trace.len() && trace[next].1 <= eng.sim_time() {
+            let (q, at) = trace[next];
+            next += 1;
+            if retry.is_empty() {
+                match eng.try_submit(q, at) {
+                    Ok(_) => {}
+                    Err(q) => {
+                        backpressured += 1;
+                        retry.push_back((q, at));
+                    }
+                }
+            } else {
+                // Keep arrival order behind earlier back-pressured requests.
+                retry.push_back((q, at));
+            }
+        }
+        if !eng.super_round() {
+            if !retry.is_empty() {
+                // An idle engine has queue room: re-offered next pass.
+                continue;
+            }
+            if next < trace.len() {
+                let dt = trace[next].1 - eng.sim_time();
+                if dt > 0.0 {
+                    eng.advance_clock(dt);
+                }
+                continue;
+            }
+            break;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let span = eng.sim_time().max(1e-12);
+    let m = eng.metrics();
+    assert_eq!(m.queries_completed, trace.len() as u64);
+    ServeRow {
+        admit: admit_name,
+        threads,
+        completed: m.queries_completed,
+        qps: m.queries_completed as f64 / span,
+        qps_wall: m.queries_completed as f64 / wall.max(1e-12),
+        p50: m.latency.quantile(0.5),
+        p99: m.latency.quantile(0.99),
+        p999: m.latency.quantile(0.999),
+        queueing_p99: m.queueing.quantile(0.99),
+        deferrals: m.admit_deferrals,
+        backpressured,
+        wall,
+    }
+}
+
+fn serve_rows(
+    g: &Graph,
+    idx: &Hub2Index,
+    trace: &[(Hub2QueryContent, f64)],
+    cfg: &ServeCfg,
+) -> Vec<ServeRow> {
+    let mut rows = Vec::new();
+    for &threads in &[1usize, 4] {
+        for (admit, name) in [
+            (Admit::Static(cfg.capacity), "static"),
+            (Admit::Adaptive, "adaptive"),
+        ] {
+            rows.push(serve_once(g, idx, trace, admit, name, threads, cfg));
+        }
+    }
+    rows
+}
+
+/// Headline: static p99 / adaptive p99 at the given thread count (> 1
+/// means the planner improved the tail).
+fn serve_speedup(rows: &[ServeRow], threads: usize) -> f64 {
+    let p99 = |name: &str| {
+        rows.iter()
+            .find(|r| r.admit == name && r.threads == threads)
+            .map(|r| r.p99)
+            .unwrap_or(0.0)
+    };
+    let adaptive = p99("adaptive");
+    if adaptive > 0.0 {
+        p99("static") / adaptive
+    } else {
+        0.0
+    }
+}
+
+fn print_serve_table(name: &str, rows: &[ServeRow]) {
+    let mut t = Table::new(vec![
+        "admit",
+        "threads",
+        "qps(sim)",
+        "p50",
+        "p99",
+        "p99.9",
+        "queue p99",
+        "deferrals",
+        "backpressured",
+        "wall",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.admit.to_string(),
+            r.threads.to_string(),
+            format!("{:.1}", r.qps),
+            format!("{:.2} ms", r.p50 * 1e3),
+            format!("{:.2} ms", r.p99 * 1e3),
+            format!("{:.2} ms", r.p999 * 1e3),
+            format!("{:.2} ms", r.queueing_p99 * 1e3),
+            r.deferrals.to_string(),
+            r.backpressured.to_string(),
+            format!("{:.0} ms", r.wall * 1e3),
+        ]);
+    }
+    println!("\n{name}");
+    println!("{}", t.render());
+}
+
+fn json_serve_rows(rows: &[ServeRow]) -> String {
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "{{\"admit\":\"{}\",\"threads\":{},\"completed\":{},",
+                    "\"qps\":{:.3},\"qps_wall\":{:.3},\"p50_s\":{:.9},",
+                    "\"p99_s\":{:.9},\"p999_s\":{:.9},",
+                    "\"queueing_p99_s\":{:.9},\"admit_deferrals\":{},",
+                    "\"backpressured\":{},\"wall_s\":{:.6}}}"
+                ),
+                r.admit,
+                r.threads,
+                r.completed,
+                r.qps,
+                r.qps_wall,
+                r.p50,
+                r.p99,
+                r.p999,
+                r.queueing_p99,
+                r.deferrals,
+                r.backpressured,
+                r.wall,
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
 pub fn run() {
     let smoke = smoke();
     let reps = if smoke { 1 } else { 3 };
@@ -1175,6 +1450,81 @@ pub fn run() {
     println!("construction (tests/determinism.rs");
     println!("layout_choice_never_changes_outputs).");
 
+    // --- Serving sweep: an open-loop arrival stream against the admission
+    // planner. The graph is a hub core (every pair a d_ub<=2 point lookup)
+    // plus a disconnected bipartite ladder (d_ub=depth whales); a burst of
+    // whales lands a quarter into the stream. Static admission drains the
+    // queue FIFO, so the burst occupies every capacity slot and the lights
+    // behind it wait out the whole whale window; adaptive admission
+    // confines the whales to the reserved slice and the lights keep
+    // flowing. Latencies are simulated-clock, so the percentiles (and the
+    // headline) are machine-independent.
+    let (sv_core, sv_width, sv_depth, sv_lights, sv_whales) = if smoke {
+        (512, 8, 16, 320, 3)
+    } else {
+        (1536, 16, 28, 1536, 10)
+    };
+    let sv_cfg = ServeCfg {
+        workers: 8,
+        capacity: 8,
+        queue_bound: if smoke { 32 } else { 64 },
+    };
+    let sv_hubs = 8;
+    let (sv_g, sv_entry, sv_last) = serving_graph(sv_core, sv_width, sv_depth);
+    let (sv_idx, _) =
+        Hub2Indexer::new(sv_hubs).build(&sv_g, Cluster::new(sv_cfg.workers), &RustMinPlus);
+    let mu = light_service_rate(&sv_g, &sv_idx, sv_core, &sv_cfg);
+    let sv_dt = 1.0 / (0.6 * mu).max(1e-12);
+    // Pairs in arrival order: lights spaced 1/(0.6 mu) apart, the whale
+    // burst injected at one arrival instant a quarter into the stream
+    // (few enough whales that p99 stays on the lights; p99.9 is a whale).
+    let light_pairs = gen::random_pairs(sv_core, sv_lights, 445);
+    let burst_at = sv_lights / 4;
+    let mut sv_pairs: Vec<(u32, u32)> = Vec::new();
+    for (i, &(s, t)) in light_pairs.iter().enumerate() {
+        if i == burst_at {
+            for w in 0..sv_whales {
+                sv_pairs.push((sv_entry, sv_last[w]));
+            }
+        }
+        sv_pairs.push((s, t));
+    }
+    // The serving hot path: ONE batched front-end probe stamps d_ub for
+    // the whole trace, so the planner sees explicit bounds at submission.
+    let sv_dubs = sv_idx.dub_for(&sv_pairs, &RustMinPlus, 1, sv_idx.k());
+    let mut sv_trace: Vec<(Hub2QueryContent, f64)> = Vec::new();
+    let mut sv_li = 0usize;
+    for (&(s, t), &d) in sv_pairs.iter().zip(sv_dubs.iter()) {
+        let whale = s == sv_entry;
+        assert_eq!(
+            whale,
+            d >= HEAVY_DUB_THRESHOLD,
+            "bench premise: the whales and only the whales classify heavy"
+        );
+        let at = if whale {
+            burst_at as f64 * sv_dt
+        } else {
+            let a = sv_li as f64 * sv_dt;
+            sv_li += 1;
+            a
+        };
+        sv_trace.push(((s, t, d), at));
+    }
+    let serve = serve_rows(&sv_g, &sv_idx, &sv_trace, &sv_cfg);
+    print_serve_table("hub2 serving C=8 W=8 (whale burst at t/4)", &serve);
+    let serve_headline = serve_speedup(&serve, 4);
+    println!(
+        "arrival rate {:.1} q/s(sim) (0.6x light service rate); static vs adaptive p99 at 4 threads: {:.2}x",
+        1.0 / sv_dt,
+        serve_headline
+    );
+    println!("target: adaptive p99 >= 1.15x better than static at 4 threads;");
+    println!("admit_deferrals > 0 on adaptive rows (and == 0 on static rows)");
+    println!("shows the planner actually engaged. p99.9 sits on the whales");
+    println!("and may be worse under adaptive — the trade the reserved");
+    println!("slice buys. Outputs are bit-identical across the admit axis");
+    println!("(tests/determinism.rs admit_choice_never_changes_outputs).");
+
     if JSON.load(Ordering::Relaxed) {
         let payload = format!(
             concat!(
@@ -1291,6 +1641,35 @@ pub fn run() {
         match std::fs::write("BENCH_pr7.json", &payload) {
             Ok(()) => println!("wrote BENCH_pr7.json"),
             Err(e) => eprintln!("could not write BENCH_pr7.json: {e}"),
+        }
+        let payload = format!(
+            concat!(
+                "{{\"pr\":8,\"bench\":\"perf_serving\",",
+                "\"graph\":\"hub_core_plus_ladder\",\"n\":{},\"workers\":{},",
+                "\"capacity\":{},\"queue_bound\":{},\"hubs\":{},",
+                "\"lights\":{},\"whales\":{},\"ladder_width\":{},",
+                "\"ladder_depth\":{},\"arrival_qps_sim\":{:.3},",
+                "\"utilization\":0.6,\"threads_swept\":[1,4],\"reps\":1,",
+                "\"smoke\":{},\"rows\":{},",
+                "\"adaptive_vs_static_p99_improvement_t4\":{:.3}}}\n"
+            ),
+            sv_g.num_vertices(),
+            sv_cfg.workers,
+            sv_cfg.capacity,
+            sv_cfg.queue_bound,
+            sv_hubs,
+            sv_lights,
+            sv_whales,
+            sv_width,
+            sv_depth,
+            1.0 / sv_dt,
+            smoke,
+            json_serve_rows(&serve),
+            serve_headline,
+        );
+        match std::fs::write("BENCH_serving.json", &payload) {
+            Ok(()) => println!("wrote BENCH_serving.json"),
+            Err(e) => eprintln!("could not write BENCH_serving.json: {e}"),
         }
     }
 }

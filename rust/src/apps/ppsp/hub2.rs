@@ -563,6 +563,14 @@ pub fn lazy_query(s: VertexId, t: VertexId) -> Hub2QueryContent {
     (s, t, DUB_PENDING)
 }
 
+/// `d_ub` at or above which a query counts as a whale for the admission
+/// planner ([`QueryApp::is_heavy`]). The BiBFS cutoff bounds a query's
+/// supersteps by ~`1 + d_ub/2`, so a small `d_ub` *proves* the query is
+/// cheap; at 8 the index no longer guarantees a point-lookup-sized run
+/// and the adaptive planner confines the query to the reserved slice.
+/// [`UNREACHED`] (no cutoff at all — the worst whales) is far above this.
+pub const HEAVY_DUB_THRESHOLD: u32 = 8;
+
 /// The Hub²-indexed PPSP query app.
 pub struct Hub2Query<'g, 'i> {
     g: &'g Graph,
@@ -623,6 +631,19 @@ impl<'g, 'i> QueryApp for Hub2Query<'g, 'i> {
         for (&i, d) in lazy.iter().zip(dubs) {
             batch[i].2 = d;
         }
+    }
+
+    /// Whale classification for the admission planner: a query whose
+    /// index upper bound `d_ub` is at or above [`HEAVY_DUB_THRESHOLD`]
+    /// (including [`UNREACHED`], where the index proves nothing and the
+    /// BiBFS has no cutoff) is expected to grind for many supersteps.
+    /// Evaluated at submission, BEFORE [`QueryApp::admit_batch`] — so a
+    /// [`lazy_query`] still carries [`DUB_PENDING`] here and classifies
+    /// light: callers who want whales routed to the reserved slice
+    /// should resolve `d_ub` at the front end ([`Hub2Index::dub_for`])
+    /// and submit explicit bounds, which is the serving hot path anyway.
+    fn is_heavy(&self, q: &Hub2QueryContent) -> bool {
+        q.2 != DUB_PENDING && q.2 >= HEAVY_DUB_THRESHOLD
     }
 
     fn init_activate(&self, q: &Hub2QueryContent) -> Vec<VertexId> {
@@ -788,6 +809,23 @@ mod tests {
             let got = hub2_query(&g, &idx, s, t);
             assert_eq!(got, (want != UNREACHED).then_some(want), "({s},{t})");
         }
+    }
+
+    #[test]
+    fn heavy_classification_follows_dub_threshold() {
+        let mut g = gen::twitter_like(200, 5, 37);
+        g.ensure_in_edges();
+        let idx = build_index(&g, 8, false);
+        let app = Hub2Query::new(&g, &idx);
+        // Provably cheap (tight index cutoff): light.
+        assert!(!app.is_heavy(&(0, 1, 2)));
+        assert!(!app.is_heavy(&(0, 1, HEAVY_DUB_THRESHOLD - 1)));
+        // At/above the threshold, including "index proves nothing": heavy.
+        assert!(app.is_heavy(&(0, 1, HEAVY_DUB_THRESHOLD)));
+        assert!(app.is_heavy(&(0, 1, UNREACHED)));
+        // Lazy bound not yet filled: cost unknown, classifies light
+        // (is_heavy runs at submission, before admit_batch).
+        assert!(!app.is_heavy(&lazy_query(0, 1)));
     }
 
     #[test]

@@ -121,6 +121,11 @@ use crate::vertex::{Ctx, MasterAction, QueryApp, QueryId};
 /// flagged `truncated` in its stats (guards against non-converging UDFs).
 const DEFAULT_MAX_SUPERSTEPS: u64 = 100_000;
 
+/// Default capacity `C` (max in-flight queries): the paper's throughput
+/// saturation point. Shared by `Engine::new` and the static-admission
+/// test-matrix default so the two can never drift apart.
+const DEFAULT_CAPACITY: usize = 8;
+
 /// [`Split::Adaptive`]: sub-split only fires after a round whose compute
 /// lane-imbalance ratio exceeded this (a balanced partition never pays the
 /// split bookkeeping).
@@ -303,6 +308,17 @@ pub struct Engine<A: QueryApp> {
     /// (see [`Layout`]). Fixed per engine; every shard and staging buffer
     /// of every query is built for this layout.
     layout: Layout,
+    /// Admission policy: fixed FIFO budget or the per-round planner with
+    /// a reserved heavy slice (see [`Admit`]).
+    admit: Admit,
+    /// Submission-queue bound for the serving front end: `try_submit`
+    /// back-pressures once this many requests wait. `None` (default) =
+    /// unbounded, the historical batch behavior.
+    queue_bound: Option<usize>,
+    /// Post-combiner messages routed in the most recent super-round: the
+    /// deterministic saturation signal the adaptive admission planner
+    /// squeezes its heavy slice on.
+    last_round_messages: u64,
     /// Compute lane-imbalance ratio of the most recent super-round, the
     /// deterministic signal [`Split::Adaptive`] triggers on.
     last_compute_imbalance: f64,
@@ -315,7 +331,7 @@ pub struct Engine<A: QueryApp> {
     /// it and joined when the engine drops (even mid-queue).
     pool: Option<WorkerPool>,
     n_vertices: usize,
-    queue: VecDeque<(QueryId, A::Query, f64)>,
+    queue: VecDeque<Queued<A::Query>>,
     inflight: Vec<QueryRt<A>>,
     /// Queries whose reporting superstep a pipelined round deferred: their
     /// `finish` runs as jobs of the NEXT pipelined batch (overlapped with
@@ -1213,6 +1229,87 @@ impl Pipeline {
     }
 }
 
+/// Admission-control policy: which queued queries a super-round admits
+/// into the in-flight set (the serving layer's planner knob).
+///
+/// [`Admit::Static`] is the historical behavior — a fixed per-round
+/// budget drained FIFO. [`Admit::Adaptive`] (the default) plans per
+/// super-round: light queries still flow FIFO up to the capacity ceiling,
+/// but queries the app flagged as whales at submission
+/// ([`crate::vertex::QueryApp::is_heavy`] — e.g. hub2 PPSP pairs whose
+/// index upper bound `d_ub` crosses a depth threshold) are confined to a
+/// reserved capacity slice, squeezed further while the previous round was
+/// message-saturated and lights are waiting — so one whale can't starve
+/// thousands of point lookups by inflating every shared super-round.
+///
+/// The planner reads **deterministic inputs only** — queue contents and
+/// prior-round integer counters, never wall-clock — so the admission
+/// schedule is reproducible, and since admission timing never changes
+/// what a query computes, `QueryResult::out` stays bit-identical per
+/// query across the whole `Admit` axis (pinned by the determinism suite
+/// and the fuzzer's forcing leg). Result *order* is deterministic within
+/// an `Admit` setting but may legitimately differ between settings: that
+/// is the planner doing its job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admit {
+    /// Fixed FIFO admission budget of `c` queries per round (clamped to
+    /// the engine capacity): exactly the pre-serving-layer behavior.
+    Static(usize),
+    /// Per-round planning with a reserved heavy slice (capacity/4, or
+    /// capacity/8 under message pressure with lights waiting). With no
+    /// heavy-flagged queries this is identical to `Static(capacity)`.
+    /// The default.
+    Adaptive,
+}
+
+impl Admit {
+    /// The default admission policy for new engines: [`Admit::Adaptive`],
+    /// unless the `QUEGEL_TEST_ADMIT` environment variable says `static`.
+    /// This is the CI test-matrix hook — `QUEGEL_TEST_ADMIT=static cargo
+    /// test` runs the whole suite under the fixed-capacity baseline
+    /// without touching any call site; explicit [`Engine::admit`] calls
+    /// still win. The static payload starts at the engine's default
+    /// capacity and [`Engine::capacity`] re-syncs it, so the baseline leg
+    /// reproduces the historical admission loop exactly.
+    pub fn default_from_env() -> Self {
+        match std::env::var("QUEGEL_TEST_ADMIT") {
+            Ok(v) if v.eq_ignore_ascii_case("static") => {
+                static NOTE: std::sync::Once = std::sync::Once::new();
+                NOTE.call_once(|| {
+                    eprintln!(
+                        "quegel: QUEGEL_TEST_ADMIT=static overrides the default \
+                         admission planner (test-matrix hook); unset it for \
+                         adaptive admission"
+                    );
+                });
+                Admit::Static(DEFAULT_CAPACITY)
+            }
+            _ => Admit::Adaptive,
+        }
+    }
+}
+
+/// Message volume per capacity slot above which the adaptive planner
+/// treats the previous super-round as saturated and squeezes the heavy
+/// admission slice from capacity/4 to capacity/8. An integer count from
+/// the deterministic message accounting — never wall time — so the
+/// squeeze decision replays identically on any machine.
+const ADMIT_BUSY_MSGS_PER_SLOT: u64 = 256;
+
+/// One entry of the submission queue: a request waiting for admission.
+struct Queued<Q> {
+    id: QueryId,
+    query: Q,
+    /// Simulated time the request arrived at the serving front end. May
+    /// predate `enqueued_at` when a bounded queue back-pressured it
+    /// (`Engine::try_submit`).
+    arrived_at: f64,
+    /// Simulated time the request entered this queue.
+    enqueued_at: f64,
+    /// Whale flag from `QueryApp::is_heavy`, frozen at submission.
+    heavy: bool,
+}
+
 /// Phase tags for the busy/overlap interval log of a pipelined round.
 const PHASE_COMPUTE: u8 = 0;
 const PHASE_EXCHANGE: u8 = 1;
@@ -1560,7 +1657,7 @@ impl<A: QueryApp> Engine<A> {
         Self {
             app,
             cluster,
-            capacity: 8, // paper: throughput saturates around C = 8
+            capacity: DEFAULT_CAPACITY, // paper: throughput saturates around C = 8
             threads: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
@@ -1569,6 +1666,9 @@ impl<A: QueryApp> Engine<A> {
             edge_split: EdgeSplit::Adaptive,
             pipeline: Pipeline::default_from_env(),
             layout: Layout::default_from_env(),
+            admit: Admit::default_from_env(),
+            queue_bound: None,
+            last_round_messages: 0,
             last_compute_imbalance: 0.0,
             seen_max_fan: 0,
             pool: None,
@@ -1586,10 +1686,43 @@ impl<A: QueryApp> Engine<A> {
         }
     }
 
-    /// Set the capacity parameter `C` (max queries per super-round).
+    /// Set the capacity parameter `C` (max queries per super-round). A
+    /// default-from-env [`Admit::Static`] payload is re-synced to `c`, so
+    /// the `QUEGEL_TEST_ADMIT=static` baseline leg reproduces the
+    /// historical fixed-capacity admission at every call site; set an
+    /// explicit [`Engine::admit`] AFTER this to pin a smaller budget.
     pub fn capacity(mut self, c: usize) -> Self {
         assert!(c > 0);
         self.capacity = c;
+        if let Admit::Static(_) = self.admit {
+            self.admit = Admit::Static(c);
+        }
+        self
+    }
+
+    /// Select the admission policy (see [`Admit`]). [`Admit::Adaptive`]
+    /// is the default; `QueryResult::out` is bit-identical per query for
+    /// every setting (the planner only shapes *when* queries run).
+    /// An [`Admit::Static`] budget is clamped to the engine capacity at
+    /// planning time; call this after [`Engine::capacity`] so a later
+    /// capacity re-sync doesn't overwrite an explicit static budget.
+    pub fn admit(mut self, a: Admit) -> Self {
+        if let Admit::Static(c) = a {
+            assert!(c > 0);
+        }
+        self.admit = a;
+        self
+    }
+
+    /// Bound the submission queue to `n` waiting requests: once full,
+    /// [`Engine::try_submit`] back-pressures (returns the query to the
+    /// caller) instead of growing the queue without limit — the serving
+    /// front end's overload valve. Unbounded by default ([`Engine::submit`]
+    /// keeps the historical batch semantics and panics on a full bound,
+    /// since silently dropping a batch query would corrupt results).
+    pub fn queue_bound(mut self, n: usize) -> Self {
+        assert!(n > 0);
+        self.queue_bound = Some(n);
         self
     }
 
@@ -1737,12 +1870,53 @@ impl<A: QueryApp> Engine<A> {
     }
 
     /// Submit a query; returns its id. Processing starts at the next
-    /// super-round with free capacity.
+    /// super-round with free capacity. Arrival and queue entry coincide
+    /// (the historical batch semantics); panics if a configured
+    /// [`Engine::queue_bound`] is full — bounded serving front ends use
+    /// [`Engine::try_submit`] and handle the back-pressure.
     pub fn submit(&mut self, q: A::Query) -> QueryId {
+        match self.try_submit(q, self.clock) {
+            Ok(id) => id,
+            Err(_) => panic!(
+                "submission queue full (bound {:?}): use try_submit for back-pressure",
+                self.queue_bound
+            ),
+        }
+    }
+
+    /// Serving front-end submission with back-pressure: enqueue the
+    /// request, or hand it back (`Err`) if a configured
+    /// [`Engine::queue_bound`] is full so the arrival source can retry
+    /// after the next super-round. `arrived_at` is the simulated time the
+    /// request reached the front end — for a retried request that is
+    /// *earlier* than the eventual queue entry, and
+    /// [`crate::metrics::QueryStats::latency`] measures from it, so the
+    /// wait spent back-pressured stays visible in the tail percentiles.
+    /// The app's [`crate::vertex::QueryApp::is_heavy`] hook is evaluated
+    /// here, once, and the flag frozen for the query's lifetime.
+    pub fn try_submit(&mut self, q: A::Query, arrived_at: f64) -> Result<QueryId, A::Query> {
+        if let Some(bound) = self.queue_bound {
+            if self.queue.len() >= bound {
+                return Err(q);
+            }
+        }
         let id = self.next_qid;
         self.next_qid += 1;
-        self.queue.push_back((id, q, self.clock));
-        id
+        let heavy = self.app.is_heavy(&q);
+        self.queue.push_back(Queued {
+            id,
+            query: q,
+            arrived_at,
+            enqueued_at: self.clock,
+            heavy,
+        });
+        Ok(id)
+    }
+
+    /// Requests waiting in the submission queue (excludes in-flight
+    /// queries) — the depth signal arrival sources pace themselves on.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
     }
 
     /// Run super-rounds until the queue and all in-flight queries drain.
@@ -1779,26 +1953,86 @@ impl<A: QueryApp> Engine<A> {
         let wall_start = Instant::now();
         let workers = self.cluster.workers;
 
-        // --- Admission: fetch queries while capacity permits (paper §3.1).
-        // The round's admitted batch is collected first and offered to the
-        // app's [`QueryApp::admit_batch`] hook in submission order — the
+        // --- Admission: fetch queries according to the round's admission
+        // plan (paper §3.1, extended by the [`Admit`] planner). The
+        // admitted batch is collected first and offered to the app's
+        // [`QueryApp::admit_batch`] hook in admission order — the
         // batched-kernel entry point (e.g. hub2 fills lazy distance upper
         // bounds for the whole batch in one min-plus sweep) — before any
         // per-query runtime state is built.
-        let mut metas: Vec<(QueryId, f64)> = Vec::new();
-        let mut qs: Vec<A::Query> = Vec::new();
-        while self.inflight.len() + qs.len() < self.capacity {
-            let Some((id, q, submitted_at)) = self.queue.pop_front() else {
-                break;
-            };
-            metas.push((id, submitted_at));
-            qs.push(q);
+        let mut admitted: Vec<Queued<A::Query>> = Vec::new();
+        match self.admit {
+            // Fixed FIFO budget (clamped to capacity): the historical
+            // admission loop, bit for bit.
+            Admit::Static(c) => {
+                let budget = c.min(self.capacity);
+                while self.inflight.len() + admitted.len() < budget {
+                    let Some(e) = self.queue.pop_front() else {
+                        break;
+                    };
+                    admitted.push(e);
+                }
+            }
+            // Per-round plan: lights flow FIFO up to the capacity
+            // ceiling; heavies are confined to a reserved slice so a
+            // queue full of whales can't occupy every slot a point
+            // lookup needs. All inputs are deterministic — queue
+            // contents, the in-flight heavy count and the previous
+            // round's message counter — so the schedule replays
+            // identically on any machine or thread count.
+            Admit::Adaptive => {
+                // Reserved whale slice: a quarter of capacity, squeezed
+                // to an eighth while the previous round was
+                // message-saturated AND a light query is actually
+                // waiting (with only whales queued there is nobody to
+                // protect, so no reason to idle slots). At least one
+                // slot, and heavies already in flight count against it,
+                // so whales trickle through instead of starving.
+                let saturated = self.last_round_messages
+                    > ADMIT_BUSY_MSGS_PER_SLOT * self.capacity as u64;
+                let light_waiting = self.queue.iter().any(|e| !e.heavy);
+                let div = if saturated && light_waiting { 8 } else { 4 };
+                let slice = (self.capacity / div).max(1);
+                let heavy_inflight = self.inflight.iter().filter(|rt| rt.heavy).count();
+                let mut heavy_budget = slice.saturating_sub(heavy_inflight);
+                let mut kept: VecDeque<Queued<A::Query>> =
+                    VecDeque::with_capacity(self.queue.len());
+                while let Some(e) = self.queue.pop_front() {
+                    if self.inflight.len() + admitted.len() >= self.capacity {
+                        // Out of slots: everything else keeps waiting in
+                        // order (not a planner deferral — a full engine
+                        // defers under Static too).
+                        kept.push_back(e);
+                        continue;
+                    }
+                    if e.heavy && heavy_budget == 0 {
+                        // Slots are free but the whale slice is spent:
+                        // hold the whale, let lights behind it pass.
+                        // This is the planner engaging.
+                        self.metrics.admit_deferrals += 1;
+                        kept.push_back(e);
+                        continue;
+                    }
+                    if e.heavy {
+                        heavy_budget -= 1;
+                    }
+                    admitted.push(e);
+                }
+                self.queue = kept;
+            }
+        }
+        let mut metas: Vec<(QueryId, f64, f64, bool)> = Vec::with_capacity(admitted.len());
+        let mut qs: Vec<A::Query> = Vec::with_capacity(admitted.len());
+        for e in admitted {
+            metas.push((e.id, e.arrived_at, e.enqueued_at, e.heavy));
+            qs.push(e.query);
         }
         if !qs.is_empty() {
             self.app.admit_batch(&mut qs);
         }
-        for ((id, submitted_at), q) in metas.into_iter().zip(qs) {
-            let mut rt = QueryRt::<A>::new(id, q, workers, self.layout, submitted_at);
+        for ((id, arrived_at, submitted_at, heavy), q) in metas.into_iter().zip(qs) {
+            let mut rt =
+                QueryRt::<A>::new(id, q, workers, self.layout, arrived_at, submitted_at, heavy);
             rt.stats.started_at = self.clock;
             // init_activate: seed the initial activation set V_q^I.
             let init = self.app.init_activate(&rt.query);
@@ -2389,6 +2623,9 @@ impl<A: QueryApp> Engine<A> {
         self.metrics.total_messages += round_msgs;
         self.metrics.total_bytes += round_bytes;
         self.metrics.sim_time = self.clock;
+        // Deterministic saturation signal for the next round's admission
+        // plan (the adaptive heavy-slice squeeze).
+        self.last_round_messages = round_msgs;
 
         // --- Reporting super-round (n_q + 1): assemble results and free
         // all VQ-data / Q-data of finished queries. Completion is counted
@@ -2407,6 +2644,8 @@ impl<A: QueryApp> Engine<A> {
             rt.stats.access_rate = touched as f64 / n_vertices.max(1) as f64;
             rt.stats.finished_at = clock;
             metrics.queries_completed += 1;
+            metrics.latency.record(rt.stats.latency());
+            metrics.queueing.record(rt.stats.queueing());
             let mut iter = rt
                 .shards
                 .iter()
@@ -2656,6 +2895,9 @@ impl<A: QueryApp> Engine<A> {
         self.metrics.total_messages += round_msgs;
         self.metrics.total_bytes += round_bytes;
         self.metrics.sim_time = self.clock;
+        // Deterministic saturation signal for the next round's admission
+        // plan (the adaptive heavy-slice squeeze).
+        self.last_round_messages = round_msgs;
 
         // --- Extract queries that converged this round, in `inflight`
         // order (the order the barrier path reports them). Their stats are
@@ -2674,6 +2916,8 @@ impl<A: QueryApp> Engine<A> {
             rt.stats.access_rate = touched as f64 / self.n_vertices.max(1) as f64;
             rt.stats.finished_at = self.clock;
             self.metrics.queries_completed += 1;
+            self.metrics.latency.record(rt.stats.latency());
+            self.metrics.queueing.record(rt.stats.queueing());
             self.pending_reports.push(PendingReport { rt, out: None });
         }
 

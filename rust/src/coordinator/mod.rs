@@ -57,6 +57,23 @@
 //! memory instead of hashing. `Layout::Hashed` keeps the original maps as
 //! the benchmark baseline.
 //!
+//! Since the serving layer ([`Admit`]), the engine is no longer only a
+//! batch runner: requests enter through a (optionally bounded) submission
+//! queue with back-pressure (`Engine::try_submit` hands a request back
+//! when the bound is hit, and `QueryStats` keeps arrival separate from
+//! queue entry so the wait stays visible in the latency percentiles), and
+//! each super-round's admission is planned rather than a blind FIFO drain.
+//! Under `Admit::Adaptive` (the default) light queries still flow FIFO up
+//! to capacity, but queries the app flagged as whales at submission
+//! (`QueryApp::is_heavy`, e.g. hub2 pairs with a large index bound
+//! `d_ub`) are confined to a reserved capacity slice — squeezed while the
+//! previous round was message-saturated with lights waiting — so one
+//! whale can't inflate every co-resident point lookup's super-round
+//! count. The planner reads deterministic inputs only (queue contents,
+//! prior-round integer counters); `EngineMetrics` gains streaming
+//! p50/p99/p999 latency and queueing sketches plus an `admit_deferrals`
+//! engagement counter.
+//!
 //! The determinism argument is uniform: stealing moves jobs between
 //! executors, splitting (either granularity) re-groups a fixed serial
 //! order, pipelining only *re-times* each query's private
@@ -66,9 +83,11 @@
 //! very first-touch/delivery orders the hashed path pinned implicitly)
 //! — every order-sensitive merge (message delivery, aggregator fold,
 //! sub-buffer and edge-range absorption) replays that order inside a
-//! single job or on the coordinator — so every thread count, scheduler,
-//! split, edge-split, pipeline and layout setting produces bit-identical
-//! results (see `rust/tests/determinism.rs` and the randomized matrix in
+//! single job or on the coordinator, and the admission planner decides
+//! only *when* a query runs, never what it computes — so every thread
+//! count, scheduler, split, edge-split, pipeline, layout and admission
+//! setting produces bit-identical per-query results (see
+//! `rust/tests/determinism.rs` and the randomized matrix in
 //! `rust/tests/fuzz_determinism.rs`).
 
 mod arena;
@@ -77,5 +96,5 @@ mod pool;
 mod query;
 
 pub use arena::Layout;
-pub use engine::{EdgeSplit, Engine, Pipeline, Sched, Split};
+pub use engine::{Admit, EdgeSplit, Engine, Pipeline, Sched, Split};
 pub use query::{QueryResult, VState};

@@ -767,6 +767,10 @@ pub(crate) struct QueryRt<A: QueryApp> {
     pub agg_prev: A::Agg,
     /// Set when any vertex (or the master hook) called force_terminate.
     pub terminated: bool,
+    /// Whale flag from [`QueryApp::is_heavy`], frozen at submission: the
+    /// adaptive admission planner counts heavy in-flight queries against
+    /// the reserved capacity slice.
+    pub heavy: bool,
     pub stats: QueryStats,
 }
 
@@ -776,7 +780,9 @@ impl<A: QueryApp> QueryRt<A> {
         query: A::Query,
         workers: usize,
         layout: Layout,
+        arrived_at: f64,
         submitted_at: f64,
+        heavy: bool,
     ) -> Self {
         Self {
             id,
@@ -788,8 +794,10 @@ impl<A: QueryApp> QueryRt<A> {
                 .collect(),
             agg_prev: A::Agg::default(),
             terminated: false,
+            heavy,
             stats: QueryStats {
                 qid: id,
+                arrived_at,
                 submitted_at,
                 ..Default::default()
             },

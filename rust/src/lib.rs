@@ -51,7 +51,14 @@
 //!   instead of hash maps, so the compute/exchange inner loops walk
 //!   contiguous memory; `Layout::Hashed` keeps the original maps as the
 //!   benchmark baseline, and the bit-identical contract covers the
-//!   layout axis too.
+//!   layout axis too. And under the `Admit` knob (adaptive by default)
+//!   the engine is a serving front end, not just a batch runner: a
+//!   bounded submission queue with back-pressure (`try_submit`), an
+//!   admission planner that confines index-flagged heavy-hub queries to
+//!   a reserved capacity slice so one whale can't starve point lookups,
+//!   and streaming p50/p99/p999 latency + queueing sketches in
+//!   `EngineMetrics` — the planner reads deterministic inputs only, so
+//!   per-query outputs stay bit-identical across the admission axis.
 //! * [`vertex`] — the `QueryApp` programming interface (paper §4); app and
 //!   associated types carry the `Send`/`Sync` bounds the threaded shards
 //!   require.

@@ -17,7 +17,15 @@ pub struct QueryStats {
     pub touched: u64,
     /// Access rate = touched / |V|.
     pub access_rate: f64,
-    /// Simulated cluster time at submission.
+    /// Simulated cluster time when the request arrived at the serving
+    /// front end. Equal to `submitted_at` for direct `Engine::submit`
+    /// calls; earlier when a bounded submission queue back-pressured the
+    /// request and `Engine::try_submit` re-delivered it later — the wait
+    /// outside the queue is real latency the old single timestamp hid.
+    pub arrived_at: f64,
+    /// Simulated cluster time when the request entered the submission
+    /// queue (historically the only pre-admission timestamp, which is why
+    /// it conflated arrival with queue entry under back-pressure).
     pub submitted_at: f64,
     /// Simulated cluster time when processing started (left the queue).
     pub started_at: f64,
@@ -28,14 +36,123 @@ pub struct QueryStats {
 }
 
 impl QueryStats {
-    /// End-to-end simulated latency (queue wait + processing).
+    /// End-to-end simulated latency (arrival → finish: back-pressure wait
+    /// + queue wait + processing). Before the serving layer this was
+    /// measured from `submitted_at`, which under a bounded queue starts
+    /// the clock only once a slot frees up — exactly the delay a latency
+    /// metric exists to expose.
     pub fn latency(&self) -> f64 {
-        self.finished_at - self.submitted_at
+        self.finished_at - self.arrived_at
+    }
+
+    /// Queueing delay (arrival → admission into the in-flight set).
+    pub fn queueing(&self) -> f64 {
+        self.started_at - self.arrived_at
     }
 
     /// Processing-only simulated time.
     pub fn processing(&self) -> f64 {
         self.finished_at - self.started_at
+    }
+}
+
+/// Streaming percentile sketch for latency-style values: a log₂-bucketed
+/// histogram with 32 mantissa sub-buckets per octave, so any quantile is
+/// reported with ≤ 1/32 ≈ 3.2% relative error while `record` stays O(1)
+/// and allocation-free after the first call (one lazy ~2K-bucket table;
+/// a `Default` sketch that never records owns no heap at all).
+///
+/// The engine feeds it simulated-clock seconds, which are deterministic,
+/// so the quantiles themselves are bit-identical across thread counts —
+/// that is what lets CI put a strict floor on a p99 headline without
+/// runner-noise flakes.
+#[derive(Debug, Clone, Default)]
+pub struct LatencySketch {
+    /// Lazily allocated on first record: `(EXP_MAX - EXP_MIN + 1) * SUB`
+    /// counters, octave-major.
+    buckets: Vec<u64>,
+    count: u64,
+    min: f64,
+    max: f64,
+}
+
+impl LatencySketch {
+    /// Mantissa sub-buckets per octave (2^5): the resolution knob.
+    const SUB: usize = 32;
+    /// Smallest resolved octave, 2⁻³⁰ s ≈ 1 ns — below that everything
+    /// lands in bucket 0 (as do zero/negative/NaN inputs).
+    const EXP_MIN: i32 = -30;
+    /// Largest resolved octave, 2³⁰ s ≈ 34 years of simulated time.
+    const EXP_MAX: i32 = 30;
+    const NBUCKETS: usize = ((Self::EXP_MAX - Self::EXP_MIN) as usize + 1) * Self::SUB;
+
+    fn index(v: f64) -> usize {
+        if v.is_nan() || v <= 0.0 {
+            return 0;
+        }
+        let e = (v.log2().floor() as i32).clamp(Self::EXP_MIN, Self::EXP_MAX);
+        let lower = f64::exp2(e as f64);
+        // Saturating float→usize casts make the sub-bucket self-clamping
+        // at the bottom; the top needs the explicit min for values whose
+        // exponent was clamped down.
+        let sub = (((v / lower) - 1.0) * Self::SUB as f64) as usize;
+        (e - Self::EXP_MIN) as usize * Self::SUB + sub.min(Self::SUB - 1)
+    }
+
+    /// Upper edge of bucket `idx` — the value `quantile` reports, so the
+    /// sketch never under-states a latency.
+    fn upper_edge(idx: usize) -> f64 {
+        let e = (idx / Self::SUB) as i32 + Self::EXP_MIN;
+        let sub = idx % Self::SUB;
+        f64::exp2(e as f64) * (1.0 + (sub + 1) as f64 / Self::SUB as f64)
+    }
+
+    /// Fold one observation (seconds) into the sketch.
+    pub fn record(&mut self, secs: f64) {
+        // NaN pins min/max (and would make the quantile clamp panic);
+        // treat it as the same degenerate observation as zero.
+        let secs = if secs.is_nan() { 0.0 } else { secs };
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; Self::NBUCKETS];
+        }
+        if self.count == 0 {
+            self.min = secs;
+            self.max = secs;
+        } else {
+            self.min = self.min.min(secs);
+            self.max = self.max.max(secs);
+        }
+        self.buckets[Self::index(secs)] += 1;
+        self.count += 1;
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The q-quantile (q in [0, 1]): the upper edge of the bucket holding
+    /// the ⌈q·count⌉-th smallest observation, clamped into the exact
+    /// observed [min, max] range. Returns 0.0 on an empty sketch.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if q <= 0.0 {
+            return self.min;
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::upper_edge(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
     }
 }
 
@@ -161,6 +278,19 @@ pub struct EngineMetrics {
     /// the flat layout actually engaged. Like the other high-water marks
     /// it is an engine-lifetime field preserved by [`EngineMetrics::reset`].
     pub staging_bytes_peak: u64,
+    /// Streaming sketch of end-to-end query latency (arrival → reporting,
+    /// [`QueryStats::latency`]), fed once per completed query. Simulated
+    /// seconds, so p50/p99/p999 read off it are deterministic.
+    pub latency: LatencySketch,
+    /// Streaming sketch of queueing delay (arrival → admission,
+    /// [`QueryStats::queueing`]), fed once per completed query.
+    pub queueing: LatencySketch,
+    /// Heavy-flagged queries the adaptive admission planner held back
+    /// while light queries behind them were admitted (one count per
+    /// skip event, so a whale deferred for three rounds counts three
+    /// times). Zero under `Admit::Static` — tests and the serving bench
+    /// read this to prove the planner actually engaged.
+    pub admit_deferrals: u64,
 }
 
 impl EngineMetrics {
@@ -290,13 +420,33 @@ mod tests {
     #[test]
     fn latency_decomposition() {
         let s = QueryStats {
+            arrived_at: 0.5,
             submitted_at: 1.0,
             started_at: 2.0,
             finished_at: 5.0,
             ..Default::default()
         };
-        assert!((s.latency() - 4.0).abs() < 1e-12);
+        assert!((s.latency() - 4.5).abs() < 1e-12);
+        assert!((s.queueing() - 1.5).abs() < 1e-12);
         assert!((s.processing() - 3.0).abs() < 1e-12);
+    }
+
+    /// Regression for the serving-layer bugfix: when a bounded queue
+    /// back-pressures a request, `arrived_at` < `submitted_at`, and the
+    /// end-to-end latency must cover the wait *outside* the queue too —
+    /// the old `finished_at - submitted_at` definition hid it.
+    #[test]
+    fn latency_covers_backpressure_wait_before_queue_entry() {
+        let s = QueryStats {
+            arrived_at: 0.0,
+            submitted_at: 3.0, // sat out 3 s of back-pressure first
+            started_at: 4.0,
+            finished_at: 6.0,
+            ..Default::default()
+        };
+        assert!((s.latency() - 6.0).abs() < 1e-12);
+        assert!((s.queueing() - 4.0).abs() < 1e-12);
+        assert!(s.latency() > s.finished_at - s.submitted_at);
     }
 
     #[test]
@@ -342,6 +492,9 @@ mod tests {
         m.super_rounds = 9;
         m.overlap_time = 0.25;
         m.pipelined_rounds = 4;
+        m.latency.record(0.5);
+        m.queueing.record(0.1);
+        m.admit_deferrals = 7;
         // Engine-lifetime fields: survive a bare reset().
         m.sim_time = 12.5;
         m.peak_inflight = 6;
@@ -359,10 +512,86 @@ mod tests {
         assert_eq!(m.super_rounds, 0);
         assert_eq!(m.overlap_time, 0.0);
         assert_eq!(m.pipelined_rounds, 0);
+        assert_eq!(m.latency.count(), 0, "latency sketch is per-session");
+        assert_eq!(m.queueing.count(), 0, "queueing sketch is per-session");
+        assert_eq!(m.admit_deferrals, 0);
         assert!((m.sim_time - 12.5).abs() < 1e-12, "clock mirror preserved");
         assert_eq!(m.peak_inflight, 6, "high-water mark preserved");
         assert_eq!(m.max_edge_task, 4096, "high-water mark preserved");
         assert_eq!(m.staging_bytes_peak, 1 << 20, "high-water mark preserved");
+    }
+
+    #[test]
+    fn sketch_empty_single_and_extreme_inputs() {
+        let mut s = LatencySketch::default();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.quantile(0.5), 0.0, "empty sketch reports 0");
+        s.record(0.25);
+        assert_eq!(s.count(), 1);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(s.quantile(q), 0.25, "single sample: every quantile is it");
+        }
+        // Out-of-range inputs must not panic or poison the quantiles:
+        // sub-ns and non-positive values land in bucket 0, huge ones in
+        // the top octave.
+        let mut s = LatencySketch::default();
+        s.record(0.0);
+        s.record(-1.0);
+        s.record(f64::NAN);
+        s.record(1e-12);
+        s.record(1e12);
+        assert_eq!(s.count(), 5);
+        assert!(s.quantile(0.5).is_finite());
+        assert!(s.quantile(1.0) >= 1e12 - 1.0);
+    }
+
+    /// The sketch against an exact sort oracle: for every rank, the
+    /// reported quantile must bracket the exact order statistic from
+    /// above by at most one bucket width (33/32 ≈ 3.2% relative).
+    #[test]
+    fn sketch_matches_exact_sort_oracle_within_bucket_error() {
+        // Hand-rolled LCG (no RNG dep in this module): values spanning
+        // ~7 decades with a dense mantissa, the shape of a latency
+        // distribution with a long tail.
+        let mut state: u64 = 0x9E37_79B9_7F4A_7C15;
+        let mut next = move || {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        let mut sketch = LatencySketch::default();
+        let mut exact: Vec<f64> = Vec::new();
+        for _ in 0..10_000 {
+            let mantissa = 1.0 + (next() % 1_000_000) as f64 / 1_000_000.0;
+            let octave = (next() % 24) as i32 - 12; // 2⁻¹² .. 2¹² s
+            let v = mantissa * f64::exp2(octave as f64);
+            sketch.record(v);
+            exact.push(v);
+        }
+        exact.sort_by(f64::total_cmp);
+        for q in [0.01, 0.1, 0.25, 0.5, 0.9, 0.95, 0.99, 0.999, 0.9999] {
+            let rank = ((q * exact.len() as f64).ceil() as usize).clamp(1, exact.len());
+            let want = exact[rank - 1];
+            let got = sketch.quantile(q);
+            assert!(
+                got >= want - 1e-12,
+                "q={q}: sketch {got} under-states exact {want}"
+            );
+            assert!(
+                got <= want * (33.0 / 32.0) + 1e-12,
+                "q={q}: sketch {got} beyond one bucket above exact {want}"
+            );
+        }
+        // Quantiles are monotone in q, and the endpoints are exact.
+        assert_eq!(sketch.quantile(0.0), exact[0]);
+        assert_eq!(sketch.quantile(1.0), exact[exact.len() - 1]);
+        let (p50, p99, p999) = (
+            sketch.quantile(0.5),
+            sketch.quantile(0.99),
+            sketch.quantile(0.999),
+        );
+        assert!(p50 <= p99 && p99 <= p999);
     }
 
     #[test]

@@ -67,6 +67,24 @@ pub trait QueryApp: Sync {
     /// query's lifetime. The default is a no-op.
     fn admit_batch(&self, _batch: &mut [Self::Query]) {}
 
+    /// Serving-layer classification hook: does this query look like a
+    /// **whale** — one expected to grind for many supersteps and inflate
+    /// every co-resident light query's super-round count? The engine
+    /// evaluates it once at submission (BEFORE [`QueryApp::admit_batch`],
+    /// so content an app fills lazily per batch is not yet available —
+    /// classify from what the *submitter* knew) and the `Admit::Adaptive`
+    /// planner confines flagged queries to a reserved capacity slice so
+    /// they can't starve point lookups. Apps with an index that prices
+    /// queries up front override this — e.g. hub2 PPSP flags pairs whose
+    /// index upper bound `d_ub` crosses a depth threshold. The flag only
+    /// shapes *when* a query is admitted, never what it computes, so the
+    /// bit-identical output contract is indifferent to it. Default:
+    /// nothing is heavy (which makes `Admit::Adaptive` degenerate to
+    /// `Admit::Static` — a safe default for apps without an index).
+    fn is_heavy(&self, _q: &Self::Query) -> bool {
+        false
+    }
+
     /// The initial activation set `V_q^I` (paper: `init_activate()` +
     /// `get_vpos`/`activate`). Returning vertex ids (instead of per-worker
     /// positions) lets the engine filter per worker; apps with indexes

@@ -13,9 +13,8 @@ use quegel::apps::reach::{build_labels, condense, dag, ReachQuery};
 use quegel::apps::terrain::baseline::dijkstra;
 use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
 use quegel::apps::xml::{self, SlcaLevelAligned, SlcaNaive};
-use quegel::coordinator::{EdgeSplit, Engine, Layout, Pipeline, Sched, Split};
-use quegel::graph::gen;
-use quegel::graph::VertexId;
+use quegel::coordinator::{Admit, EdgeSplit, Engine, Layout, Pipeline, Sched, Split};
+use quegel::graph::{gen, Graph, VertexId};
 use quegel::network::Cluster;
 use quegel::vertex::{Ctx, QueryApp};
 
@@ -622,6 +621,177 @@ fn pipeline_choice_never_changes_outputs() {
             .expect("query completed")
             .out;
         assert_eq!(got, outs[i], "query {:?}", queries[i]);
+    }
+}
+
+/// Plain BFS plus a deterministic whale flag for the admission planner:
+/// a query is heavy iff its source is the slow ladder hub (vertex 0) or
+/// its endpoint sum is odd — a pure function of the query, so every run
+/// classifies identically. The BFS logic is byte-for-byte the library's
+/// (`Ctx` is parameterized on the app type, so flagging can't wrap
+/// `Bfs` by delegation).
+struct FlaggedBfs<'g> {
+    g: &'g Graph,
+}
+
+impl<'g> QueryApp for FlaggedBfs<'g> {
+    type Query = (u32, u32);
+    type VQ = u32;
+    type Msg = ();
+    type Agg = ();
+    type Out = Option<u32>;
+
+    fn is_heavy(&self, q: &(u32, u32)) -> bool {
+        q.0 == 0 || (q.0 + q.1) % 2 == 1
+    }
+
+    fn init_activate(&self, q: &(u32, u32)) -> Vec<VertexId> {
+        vec![q.0]
+    }
+
+    fn init_value(&self, q: &(u32, u32), v: VertexId) -> u32 {
+        if v == q.0 {
+            0
+        } else {
+            UNREACHED
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, d: &mut u32) {
+        let step = ctx.superstep();
+        let (_, t) = *ctx.query();
+        if step == 1 {
+            if v == t {
+                ctx.force_terminate();
+            }
+            for &u in self.g.out(v) {
+                ctx.send(u, ());
+            }
+            ctx.vote_halt();
+            return;
+        }
+        if *d == UNREACHED {
+            *d = (step - 1) as u32;
+            if v == t {
+                ctx.force_terminate();
+            } else {
+                for &u in self.g.out(v) {
+                    ctx.send(u, ());
+                }
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    fn combine(&self, _into: &mut (), _from: &()) -> bool {
+        true
+    }
+
+    fn finish(
+        &self,
+        q: &(u32, u32),
+        touched: &mut dyn Iterator<Item = (VertexId, &u32)>,
+        _agg: &(),
+    ) -> Option<u32> {
+        let t = q.1;
+        for (v, &d) in touched {
+            if v == t && d != UNREACHED {
+                return Some(d);
+            }
+        }
+        None
+    }
+}
+
+/// Admission sweep: the planner must decide only WHEN a query runs,
+/// never what it computes. The one-slow-query workload carries 7 heavy
+/// flags against a reserved slice of 2 (capacity 8), so `Admit::Adaptive`
+/// genuinely defers whales while slots are free. For every
+/// `Admit::{Static, Adaptive}` × threads × pipeline configuration the
+/// per-query outputs must be bit-identical (and match the BFS oracle);
+/// WITHIN each admission mode the result sequence (qids in completion
+/// order) must also be identical across threads and pipeline — the
+/// planner may legitimately reorder completions BETWEEN modes, which is
+/// exactly why the fixed arrival trace pins the rest of the matrix.
+/// Static admission must never defer; adaptive admission must defer at
+/// least once somewhere in the sweep.
+#[test]
+fn admit_choice_never_changes_outputs() {
+    let n = 3_000;
+    let stride = 4usize;
+    let g = gen::one_slow_query(n, stride, 12, 20, 9701);
+    let fix = |v: u32| if v as usize % stride == 0 { v + 1 } else { v };
+    let mut queries: Vec<(u32, u32)> = vec![(0, (n - 1) as u32)];
+    for i in 0..12u32 {
+        let s = fix((i * 211 + 1) % n as u32);
+        let t = fix((i * 389 + 2) % n as u32);
+        queries.push((s, t));
+    }
+    let mut base: Option<Vec<Option<u32>>> = None;
+    let mut deferred = 0u64;
+    for (ai, admit) in [Admit::Static(8), Admit::Adaptive].into_iter().enumerate() {
+        let mut mode_order: Option<Vec<u64>> = None;
+        for threads in [1usize, 4] {
+            for pipeline in [Pipeline::Off, Pipeline::On] {
+                let mut eng = Engine::new(FlaggedBfs { g: &g }, Cluster::new(stride), n)
+                    .capacity(8)
+                    .threads(threads)
+                    .scheduler(Sched::Stealing)
+                    .pipeline(pipeline)
+                    .admit(admit);
+                let ids: Vec<_> = queries.iter().map(|&q| eng.submit(q)).collect();
+                eng.run_until_idle();
+                match admit {
+                    Admit::Static(_) => assert_eq!(
+                        eng.metrics().admit_deferrals,
+                        0,
+                        "static admission must never defer"
+                    ),
+                    Admit::Adaptive => deferred += eng.metrics().admit_deferrals,
+                }
+                let order: Vec<u64> = eng.results().iter().map(|r| r.qid).collect();
+                match &mode_order {
+                    None => mode_order = Some(order),
+                    Some(o) => assert_eq!(
+                        &order, o,
+                        "admit#{ai} threads={threads} pipeline={pipeline:?}: \
+                         completion order changed within one admission mode"
+                    ),
+                }
+                let outs: Vec<Option<u32>> = ids
+                    .iter()
+                    .map(|id| {
+                        eng.results()
+                            .iter()
+                            .find(|r| r.qid == *id)
+                            .expect("query completed")
+                            .out
+                    })
+                    .collect();
+                match &base {
+                    None => base = Some(outs),
+                    Some(b) => assert_eq!(
+                        &outs, b,
+                        "admit={admit:?} threads={threads} pipeline={pipeline:?} \
+                         changed query outputs"
+                    ),
+                }
+            }
+        }
+    }
+    assert!(
+        deferred > 0,
+        "Admit::Adaptive never deferred a heavy query — the planner did \
+         not engage"
+    );
+    let outs = base.unwrap();
+    for (i, &(s, t)) in queries.iter().enumerate() {
+        let want = ppsp_oracle::bfs_dist(&g, s, t);
+        assert_eq!(
+            outs[i],
+            (want != UNREACHED).then_some(want),
+            "query ({s},{t})"
+        );
     }
 }
 

@@ -354,6 +354,68 @@ fn phase_busy_accounting_matches_execution_mode() {
 }
 
 #[test]
+fn try_submit_backpressure_and_arrival_accounting() {
+    // Serving front-end regression: `QueryStats::submitted_at` used to
+    // double as the arrival stamp, so a request that waited OUTSIDE a
+    // bounded submission queue (back-pressured, re-offered later) lost
+    // that wait from its latency. Arrival is recorded separately now:
+    // `latency()` covers arrival -> finish and `queueing()` covers
+    // arrival -> start, whichever side of the queue the waiting happened.
+    let g = gen::twitter_like(500, 4, 224);
+    let queries = gen::random_pairs(500, 4, 225);
+    let mut eng = Engine::new(Bfs::new(&g), Cluster::new(2), 500)
+        .capacity(1)
+        .queue_bound(1);
+
+    let _a = eng.try_submit(queries[0], 0.0).expect("queue empty");
+    assert_eq!(eng.queue_depth(), 1);
+    // The bound is hit: the request comes back to the caller, untouched.
+    let rejected = eng.try_submit(queries[1], 0.0).unwrap_err();
+    assert_eq!(rejected, queries[1]);
+    assert_eq!(eng.queue_depth(), 1);
+
+    // One super-round admits the queued query and frees the bound; the
+    // simulated clock has advanced past the rejected request's arrival.
+    assert!(eng.super_round());
+    let waited_until = eng.sim_time();
+    assert!(waited_until > 0.0);
+    let qid_b = eng
+        .try_submit(queries[1], 0.0)
+        .expect("bound freed after admission");
+    eng.run_until_idle();
+
+    let rb = eng.results().iter().find(|r| r.qid == qid_b).unwrap();
+    assert_eq!(rb.stats.arrived_at, 0.0, "arrival is the caller's stamp");
+    assert!(
+        rb.stats.submitted_at >= waited_until,
+        "queue entry {} must postdate the back-pressure wait {}",
+        rb.stats.submitted_at,
+        waited_until
+    );
+    assert!(
+        rb.stats.queueing() >= waited_until,
+        "queueing delay must cover the wait BEFORE queue entry"
+    );
+    assert!(
+        (rb.stats.latency() - (rb.stats.queueing() + rb.stats.processing())).abs() < 1e-12,
+        "latency decomposes into queueing + processing"
+    );
+
+    // The engine's streaming sketches saw every completion, and the top
+    // quantile is exactly the worst observed latency (no bucket error at
+    // the clamped endpoints).
+    let m = eng.metrics();
+    assert_eq!(m.latency.count(), 2);
+    assert_eq!(m.queueing.count(), 2);
+    let worst = eng
+        .results()
+        .iter()
+        .map(|r| r.stats.latency())
+        .fold(0.0f64, f64::max);
+    assert!((eng.metrics().latency.quantile(1.0) - worst).abs() < 1e-12);
+}
+
+#[test]
 fn interleaved_submission_works() {
     // Queries submitted while others are in flight join later super-rounds.
     let g = gen::twitter_like(600, 4, 213);

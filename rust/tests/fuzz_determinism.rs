@@ -23,6 +23,15 @@
 //! moves). On a mismatch the failing case seed and configuration are
 //! printed, so any regression reproduces with a one-line test.
 //!
+//! Since the serving layer, the random configuration also draws the
+//! `Admit` knob (random static capacities and the adaptive planner —
+//! inert for apps that flag nothing heavy, admission-width-throttling
+//! otherwise), and each case runs one **admission forcing
+//! configuration**: a BFS clone that flags EVERY query heavy under
+//! `Admit::Adaptive`, so the whole batch squeezes through the reserved
+//! capacity slice — deferrals are counted and asserted at the end, and
+//! the outputs must still be bit-identical to the serial reference.
+//!
 //! `QUEGEL_BENCH_SMOKE=1` shrinks the case count for the CI smoke lane;
 //! `QUEGEL_FUZZ_CASES=N` overrides it outright (the nightly deep-fuzz CI
 //! lane runs 1000). The split thresholds are deliberately drawn small, so
@@ -30,12 +39,12 @@
 //! fuzz-sized graphs — asserted at the end, to make sure the fuzz can
 //! never silently degenerate into testing the unsplit paths.
 
-use quegel::apps::ppsp::{Bfs, BiBfs};
-use quegel::coordinator::{EdgeSplit, Engine, Layout, Pipeline, Sched, Split};
-use quegel::graph::{gen, Graph};
+use quegel::apps::ppsp::{Bfs, BiBfs, UNREACHED};
+use quegel::coordinator::{Admit, EdgeSplit, Engine, Layout, Pipeline, Sched, Split};
+use quegel::graph::{gen, Graph, VertexId};
 use quegel::network::Cluster;
 use quegel::util::{env_flag, env_u64, env_usize, Rng};
-use quegel::vertex::QueryApp;
+use quegel::vertex::{Ctx, QueryApp};
 
 /// One random engine configuration of a fuzz case.
 #[derive(Debug, Clone, Copy)]
@@ -48,6 +57,7 @@ struct Config {
     edge: EdgeSplit,
     pipeline: Pipeline,
     layout: Layout,
+    admit: Admit,
 }
 
 fn random_config(rng: &mut Rng) -> Config {
@@ -85,6 +95,14 @@ fn random_config(rng: &mut Rng) -> Config {
     } else {
         Layout::Hashed
     };
+    // For apps that flag nothing heavy, Adaptive degenerates to
+    // Static(capacity); small static payloads throttle the admission
+    // width below the capacity — either way the answers must not move.
+    let admit = if rng.chance(0.5) {
+        Admit::Adaptive
+    } else {
+        Admit::Static(1 + rng.below_usize(8))
+    };
     Config {
         threads: [2, 3, 4, 8][rng.below_usize(4)],
         workers: 1 + rng.below_usize(8),
@@ -94,6 +112,7 @@ fn random_config(rng: &mut Rng) -> Config {
         edge,
         pipeline,
         layout,
+        admit,
     }
 }
 
@@ -149,6 +168,85 @@ struct Engaged {
     edge_ranges: bool,
     pipelined: bool,
     flat: bool,
+    deferred: bool,
+}
+
+/// BFS with every query flagged heavy — the admission forcing app. Same
+/// compute as the library's [`Bfs`] (so outputs compare equal to the
+/// serial reference of either PPSP app), but under `Admit::Adaptive` the
+/// whole batch is confined to the reserved capacity slice and deferrals
+/// are guaranteed whenever the batch outnumbers it.
+struct HeavyBfs<'g> {
+    g: &'g Graph,
+}
+
+impl<'g> QueryApp for HeavyBfs<'g> {
+    type Query = (u32, u32);
+    type VQ = u32;
+    type Msg = ();
+    type Agg = ();
+    type Out = Option<u32>;
+
+    fn is_heavy(&self, _q: &(u32, u32)) -> bool {
+        true
+    }
+
+    fn init_activate(&self, q: &(u32, u32)) -> Vec<VertexId> {
+        vec![q.0]
+    }
+
+    fn init_value(&self, q: &(u32, u32), v: VertexId) -> u32 {
+        if v == q.0 {
+            0
+        } else {
+            UNREACHED
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, d: &mut u32) {
+        let step = ctx.superstep();
+        let (_, t) = *ctx.query();
+        if step == 1 {
+            if v == t {
+                ctx.force_terminate();
+            }
+            for &u in self.g.out(v) {
+                ctx.send(u, ());
+            }
+            ctx.vote_halt();
+            return;
+        }
+        if *d == UNREACHED {
+            *d = (step - 1) as u32;
+            if v == t {
+                ctx.force_terminate();
+            } else {
+                for &u in self.g.out(v) {
+                    ctx.send(u, ());
+                }
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    fn combine(&self, _into: &mut (), _from: &()) -> bool {
+        true
+    }
+
+    fn finish(
+        &self,
+        q: &(u32, u32),
+        touched: &mut dyn Iterator<Item = (VertexId, &u32)>,
+        _agg: &(),
+    ) -> Option<u32> {
+        let t = q.1;
+        for (v, &d) in touched {
+            if v == t && d != UNREACHED {
+                return Some(d);
+            }
+        }
+        None
+    }
 }
 
 /// Run one batch under one configuration, returning outputs in submission
@@ -166,7 +264,8 @@ where
         .split(cfg.split)
         .edge_split(cfg.edge)
         .pipeline(cfg.pipeline)
-        .layout(cfg.layout);
+        .layout(cfg.layout)
+        .admit(cfg.admit);
     let ids: Vec<_> = queries.iter().map(|q| eng.submit(q.clone())).collect();
     eng.run_until_idle();
     let outs = ids
@@ -185,6 +284,7 @@ where
         edge_ranges: eng.metrics().edge_ranges_split > 0,
         pipelined: eng.metrics().pipelined_rounds > 0,
         flat: eng.metrics().staging_bytes_peak > 0,
+        deferred: eng.metrics().admit_deferrals > 0,
     };
     (outs, engaged)
 }
@@ -210,6 +310,7 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         edge: EdgeSplit::Off,
         pipeline: Pipeline::Off,
         layout: Layout::Hashed,
+        admit: Admit::Static(4),
     };
     // The edge-threshold-1 forcing leg: every outbox of 2+ messages is
     // parked and diced into single-edge ranges, and a tiny vertex
@@ -224,6 +325,7 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         edge: EdgeSplit::MaxFanout(1),
         pipeline: Pipeline::Off,
         layout: Layout::Hashed,
+        admit: Admit::Static(8),
     };
     // The pipeline forcing leg: splitting stays off and threads > 1, so
     // every super-round takes the ready-driven per-(query, worker) path —
@@ -238,6 +340,7 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         edge: EdgeSplit::Off,
         pipeline: Pipeline::On,
         layout: Layout::Hashed,
+        admit: Admit::Static(8),
     };
     // The flat-layout forcing leg: arena stores + columnar staging under
     // stealing with BOTH splits armed, so the flat replay pipelines (the
@@ -253,12 +356,30 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         edge: EdgeSplit::MaxFanout(1),
         pipeline: Pipeline::Off,
         layout: Layout::Flat,
+        admit: Admit::Static(8),
+    };
+    // The admission forcing leg: run with a BFS clone that flags EVERY
+    // query heavy, so `Admit::Adaptive` confines the whole batch to the
+    // reserved capacity slice (2 of 8) and any batch of 3+ queries is
+    // guaranteed to defer while slots sit free — the planner path
+    // engages, and the answers still must not move.
+    let admit_forcing = Config {
+        threads: 4,
+        workers: 3,
+        capacity: 8,
+        sched: Sched::Stealing,
+        split: Split::Off,
+        edge: EdgeSplit::Off,
+        pipeline: Pipeline::Off,
+        layout: Layout::Hashed,
+        admit: Admit::Adaptive,
     };
 
     let mut split_engaged = false;
     let mut edge_engaged = false;
     let mut pipeline_engaged = false;
     let mut flat_engaged = false;
+    let mut admit_engaged = false;
     for case in 0..cases {
         let case_seed = master_seed.wrapping_add(1 + case as u64 * 0x9e37);
         let mut rng = Rng::new(case_seed);
@@ -317,6 +438,16 @@ fn randomized_matrix_is_bit_identical_to_serial() {
              bibfs={use_bibfs}) flat-layout forcing config {flat_forcing:?} \
              changed outputs vs the serial reference"
         );
+        // Both PPSP apps answer with the same Option<u32> distance, so
+        // the all-heavy BFS clone compares against the same reference.
+        let (outs, engaged) = run_batch(|| HeavyBfs { g: &g }, n, &queries, admit_forcing);
+        admit_engaged |= engaged.deferred;
+        assert_eq!(
+            outs, base,
+            "fuzz case {case} (seed {case_seed:#x}, {desc}, \
+             bibfs={use_bibfs}) admission forcing config {admit_forcing:?} \
+             changed outputs vs the serial reference"
+        );
     }
     assert!(
         split_engaged,
@@ -337,5 +468,10 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         flat_engaged,
         "no fuzz configuration ever engaged the flat layout: the fuzzer is \
          not exercising the arena/columnar path"
+    );
+    assert!(
+        admit_engaged,
+        "no fuzz configuration ever deferred a heavy query: the fuzzer is \
+         not exercising the adaptive admission planner"
     );
 }
