@@ -6,9 +6,12 @@ file per PR milestone — BENCH_pr2.json (phase thread sweep), BENCH_pr3.json
 (static-vs-stealing skew sweep), BENCH_pr4.json (sub-lane split sweep),
 BENCH_pr5.json (edge-level split sweep), BENCH_pr6.json
 (barrier-vs-pipelined round sweep), BENCH_pr7.json
-(hashed-vs-flat store layout sweep) and BENCH_serving.json (closed-loop
+(hashed-vs-flat store layout sweep), BENCH_serving.json (closed-loop
 serving sweep: open-loop arrivals with a whale burst under
-``Admit::Static`` vs ``Admit::Adaptive``). This script is the single
+``Admit::Static`` vs ``Admit::Adaptive``) and BENCH_pr9.json (streaming
+mutation sweep: incremental hub2 maintenance over the epoch overlay vs
+folding every batch into a fresh CSR and rebuilding the whole index).
+This script is the single
 source of truth for their shape, shared by the ``bench-smoke`` CI lane
 and local runs:
 
@@ -284,6 +287,53 @@ def check_serving(doc, name):
     )
 
 
+MUT_ROW_KEYS = (
+    "mode",
+    "threads",
+    "wall_s",
+    "maint_s",
+    "epochs_applied",
+    "delta_bytes_peak",
+    "completed",
+)
+
+
+def check_pr9(doc, name):
+    rows = doc.get("rows") or fail(f"{name}: mutation sweep produced no rows")
+    for row in rows:
+        require_keys(row, MUT_ROW_KEYS, name)
+    if {r["mode"] for r in rows} != {"incremental", "rebuild"}:
+        fail(f"{name}: rows must cover both maintenance modes")
+    for r in rows:
+        if r["completed"] <= 0:
+            fail(f"{name}: {r['mode']}@t{r['threads']} completed nothing")
+        if r["wall_s"] <= 0 or r["maint_s"] < 0:
+            fail(f"{name}: {r['mode']}@t{r['threads']} nonsensical timing")
+    # Engagement: incremental rows must have pushed every batch through the
+    # epoch overlay; rebuild rows run immutable engines only, so their
+    # epoch gauge must stay at exactly 0 — a nonzero value means the sweep
+    # silently measured the overlay twice.
+    for r in rows:
+        if r["mode"] == "incremental" and not (
+            r["epochs_applied"] > 0 and r["delta_bytes_peak"] > 0
+        ):
+            fail(f"{name}: incremental@t{r['threads']} never engaged the overlay")
+        if r["mode"] == "rebuild" and r["epochs_applied"] != 0:
+            fail(f"{name}: rebuild@t{r['threads']} must not apply epochs")
+    # Both strategies answer the same query stream, so completion counts
+    # must agree per thread setting.
+    by_threads = {}
+    for r in rows:
+        by_threads.setdefault(r["threads"], {})[r["mode"]] = r["completed"]
+    for t, modes in sorted(by_threads.items()):
+        if len(modes) == 2 and modes["incremental"] != modes["rebuild"]:
+            fail(f"{name}: completed counts diverge at t{t}: {modes}")
+    print(
+        f"{name} ok: {len(rows)} rows; incremental vs rebuild wall at 4 threads:",
+        doc["hub2_incremental_vs_rebuild_speedup_t4"],
+    )
+
+
 CHECKERS = {
     "perf_engine": check_pr2,
     "perf_skew_sched": check_pr3,
@@ -292,6 +342,7 @@ CHECKERS = {
     "perf_pipeline": check_pr6,
     "perf_flat_layout": check_pr7,
     "perf_serving": check_serving,
+    "perf_mutation_maintenance": check_pr9,
 }
 
 
@@ -356,6 +407,33 @@ def _serving_fixture():
     }
 
 
+def _pr9_fixture():
+    """A minimal trajectory-grade BENCH_pr9.json document."""
+
+    def row(mode, threads, wall, epochs, delta):
+        return {
+            "mode": mode,
+            "threads": threads,
+            "wall_s": wall,
+            "maint_s": wall * 0.6,
+            "epochs_applied": epochs,
+            "delta_bytes_peak": delta,
+            "completed": 96,
+        }
+
+    return {
+        "pr": 9,
+        "bench": "perf_mutation_maintenance",
+        "rows": [
+            row("incremental", 1, 0.2, 6, 4096),
+            row("rebuild", 1, 0.5, 0, 0),
+            row("incremental", 4, 0.1, 6, 4096),
+            row("rebuild", 4, 0.3, 0, 0),
+        ],
+        "hub2_incremental_vs_rebuild_speedup_t4": 3.0,
+    }
+
+
 def selftest():
     """Validator self-checks on synthetic in-memory fixtures.
 
@@ -403,6 +481,31 @@ def selftest():
     del no_headline["adaptive_vs_static_p99_improvement_t4"]
     expect_rejected(no_headline, "fixture-missing-headline")
 
+    mut_good = _pr9_fixture()
+    CHECKERS[mut_good["bench"]](mut_good, "fixture-pr9-good")
+
+    mut_one_mode = _pr9_fixture()
+    mut_one_mode["rows"] = [r for r in mut_one_mode["rows"] if r["mode"] == "rebuild"]
+    expect_rejected(mut_one_mode, "fixture-pr9-rebuild-only")
+
+    mut_rebuild_epochs = _pr9_fixture()
+    mut_rebuild_epochs["rows"][1]["epochs_applied"] = 2
+    expect_rejected(mut_rebuild_epochs, "fixture-pr9-rebuild-applied-epochs")
+
+    mut_no_overlay = _pr9_fixture()
+    for r in mut_no_overlay["rows"]:
+        if r["mode"] == "incremental":
+            r["delta_bytes_peak"] = 0
+    expect_rejected(mut_no_overlay, "fixture-pr9-overlay-never-engaged")
+
+    mut_diverged = _pr9_fixture()
+    mut_diverged["rows"][2]["completed"] = 95
+    expect_rejected(mut_diverged, "fixture-pr9-completed-diverge")
+
+    mut_no_headline = _pr9_fixture()
+    del mut_no_headline["hub2_incremental_vs_rebuild_speedup_t4"]
+    expect_rejected(mut_no_headline, "fixture-pr9-missing-headline")
+
     # Gate logic against the committed floors file: the good fixture's
     # headline (2.0) clears the serving floor; a sub-floor headline must
     # fail strictly and pass only when downgraded to advisory.
@@ -422,7 +525,7 @@ def selftest():
         if saved is not None:
             os.environ["QUEGEL_BENCH_NO_GATE"] = saved
 
-    print("selftest ok: serving checker + gate fixtures all behaved")
+    print("selftest ok: serving + mutation checkers and gate fixtures all behaved")
 
 
 def main(argv):

@@ -48,26 +48,38 @@
 //!   and p99 queueing delay from the engine's streaming sketches — all
 //!   on the simulated clock, so the percentiles and the
 //!   adaptive-vs-static p99 headline are machine-independent.
+//! * the **mutation sweep** replays a streaming schedule of small edit
+//!   batches interleaved with lookup waves against the hub2 index two
+//!   ways — an always-on `Hub2Serve` engine with the epoch overlay and
+//!   incremental affected-hub maintenance vs folding every batch into a
+//!   fresh CSR and rebuilding the whole index over the same frozen hub
+//!   set — and reports end-to-end wall, the maintenance share, and the
+//!   epoch gauges that prove the overlay engaged.
 //!
 //! With `--json`, the same numbers are written to `BENCH_pr2.json`
 //! (thread sweep), `BENCH_pr3.json` (skew sweep), `BENCH_pr4.json`
 //! (split sweep), `BENCH_pr5.json` (edge-split sweep), `BENCH_pr6.json`
-//! (pipeline sweep), `BENCH_pr7.json` (layout sweep) and
-//! `BENCH_serving.json` (serving sweep) so the committed perf trajectory
+//! (pipeline sweep), `BENCH_pr7.json` (layout sweep),
+//! `BENCH_serving.json` (serving sweep) and `BENCH_pr9.json` (mutation
+//! sweep) so the committed perf trajectory
 //! is machine-readable; CI's `bench-smoke` lane validates
 //! them with `ci/validate_bench.py` and archives them as workflow
 //! artifacts. Setting `QUEGEL_BENCH_SMOKE=1` shrinks every input so the
 //! whole module runs in CI-smoke time (the JSON shape is unchanged;
 //! absolute numbers from smoke runs are not trajectory-grade).
 
-use quegel::apps::ppsp::hub2::{Hub2Index, Hub2QueryContent, RustMinPlus, HEAVY_DUB_THRESHOLD};
-use quegel::apps::ppsp::{Bfs, BiBfs, Hub2Indexer, Hub2Query};
+use quegel::apps::ppsp::hub2::{
+    lazy_query, Hub2Index, Hub2QueryContent, RustMinPlus, HEAVY_DUB_THRESHOLD,
+};
+use quegel::apps::ppsp::{
+    lazy_serve_query, Bfs, BiBfs, Hub2Indexer, Hub2Maintainer, Hub2Query, Hub2Serve,
+};
 use quegel::apps::xml::{self, SlcaNaive, XmlGenConfig};
 use quegel::coordinator::{Admit, EdgeSplit, Engine, Layout, Pipeline, Sched, Split};
-use quegel::graph::{gen, Graph, GraphBuilder};
+use quegel::graph::{gen, Graph, GraphBuilder, MutationBatch, VersionedGraph};
 use quegel::metrics::Table;
 use quegel::network::Cluster;
-use quegel::util::env_flag;
+use quegel::util::{env_flag, Rng};
 use quegel::vertex::QueryApp;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -1224,6 +1236,230 @@ fn json_serve_rows(rows: &[ServeRow]) -> String {
     format!("[{}]", items.join(","))
 }
 
+// ---------------------------------------------------------------------------
+// Mutation sweep: incremental hub2 maintenance vs full index rebuild.
+// ---------------------------------------------------------------------------
+
+/// One (mode, threads) configuration of the streaming-mutation sweep.
+struct MutRow {
+    mode: &'static str,
+    threads: usize,
+    /// End-to-end host wall of the whole maintain-and-serve loop.
+    wall: f64,
+    /// The maintenance share: overlay apply + affected-hub refresh for the
+    /// incremental mode, CSR fold + full `build_with_hubs` for rebuild.
+    maint: f64,
+    epochs_applied: u64,
+    delta_bytes_peak: u64,
+    completed: u64,
+}
+
+/// Deterministic streaming schedule: `rounds` small batches, each a few
+/// edge deletes drawn from arcs that exist plus a few random adds — the
+/// streaming regime the overlay exists for, where recomputing every hub
+/// BFS per batch is almost all waste. Batches are built against the
+/// serially folded chain so every delete names a live arc.
+fn mutation_schedule(g0: &Graph, rounds: usize, edits: usize, seed: u64) -> Vec<MutationBatch> {
+    let mut rng = Rng::new(seed);
+    let mut cur = g0.clone();
+    let mut batches = Vec::new();
+    for _ in 0..rounds {
+        let n = cur.num_vertices();
+        let mut b = MutationBatch::new();
+        for _ in 0..edits {
+            let v = rng.below(n as u64) as u32;
+            let out = cur.out(v);
+            if !out.is_empty() {
+                b.delete_edge(v, out[rng.below_usize(out.len())]);
+            }
+        }
+        for _ in 0..edits {
+            let u = rng.below(n as u64) as u32;
+            let w = rng.below(n as u64) as u32;
+            b.add_edge(u, w);
+        }
+        cur = cur.apply(&b);
+        batches.push(b);
+    }
+    batches
+}
+
+/// Incremental mode: ONE always-on [`Hub2Serve`] engine; each round queues
+/// a batch via `try_mutate` (applied to the epoch overlay and incrementally
+/// maintained at the next round boundary) and serves a wave of lazy
+/// lookups. `maint` is attributed on a standalone overlay + maintainer
+/// replay of the same schedule, since the engine's own refresh runs inside
+/// its round loop where it is part of `wall`.
+fn mut_incremental_row(
+    g: &Graph,
+    indexer: &Hub2Indexer,
+    batches: &[MutationBatch],
+    waves: &[Vec<(u32, u32)>],
+    workers: usize,
+    threads: usize,
+) -> MutRow {
+    let app = Hub2Serve::build(g.clone(), indexer, Cluster::new(workers), &RustMinPlus);
+    let mut eng = Engine::new(app, Cluster::new(workers), g.num_vertices())
+        .capacity(8)
+        .admit(Admit::Static(8))
+        .threads(threads)
+        .scheduler(Sched::Stealing)
+        .pipeline(Pipeline::Off);
+    let t0 = Instant::now();
+    for (b, wave) in batches.iter().zip(waves) {
+        eng.try_mutate(b.clone(), eng.sim_time())
+            .expect("Hub2Serve supports mutations");
+        for &(s, t) in wave {
+            eng.try_submit(lazy_serve_query(s, t), eng.sim_time())
+                .expect("queue accepts");
+        }
+        eng.run_until_idle();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut gin = g.clone();
+    gin.ensure_in_edges();
+    let (mut idx, _) = indexer.build(&gin, Cluster::new(workers), &RustMinPlus);
+    let mut vg = VersionedGraph::new(gin);
+    let mut maintainer = Hub2Maintainer::new(&vg, &idx, false);
+    let tm = Instant::now();
+    for b in batches {
+        vg.apply(b);
+        maintainer.refresh(&vg, &mut idx, b);
+    }
+    let maint = tm.elapsed().as_secs_f64();
+    MutRow {
+        mode: "incremental",
+        threads,
+        wall,
+        maint,
+        epochs_applied: eng.metrics().epochs_applied,
+        delta_bytes_peak: eng.metrics().delta_bytes_peak,
+        completed: eng.metrics().queries_completed,
+    }
+}
+
+/// Rebuild mode: the correctness baseline run as a strategy — each round
+/// folds the batch into a fresh CSR and rebuilds the ENTIRE index over the
+/// same frozen hub set, then serves the wave with the immutable
+/// [`Hub2Query`] app. `epochs_applied` stays 0: no engine in this mode
+/// ever sees a mutation, which is the shape `ci/validate_bench.py` pins.
+fn mut_rebuild_row(
+    g: &Graph,
+    indexer: &Hub2Indexer,
+    batches: &[MutationBatch],
+    waves: &[Vec<(u32, u32)>],
+    workers: usize,
+    threads: usize,
+) -> MutRow {
+    let mut cur = g.clone();
+    cur.ensure_in_edges();
+    let hubs = indexer.pick_hubs(&cur);
+    let mut maint = 0.0;
+    let mut completed = 0u64;
+    let mut epochs = 0u64;
+    let t0 = Instant::now();
+    for (b, wave) in batches.iter().zip(waves) {
+        let tm = Instant::now();
+        cur = cur.apply(b);
+        cur.ensure_in_edges();
+        let (idx, _) =
+            indexer.build_with_hubs(&cur, hubs.clone(), Cluster::new(workers), &RustMinPlus);
+        maint += tm.elapsed().as_secs_f64();
+        let mut eng = Engine::new(
+            Hub2Query::new(&cur, &idx),
+            Cluster::new(workers),
+            cur.num_vertices(),
+        )
+        .capacity(8)
+        .admit(Admit::Static(8))
+        .threads(threads)
+        .scheduler(Sched::Stealing)
+        .pipeline(Pipeline::Off);
+        for &(s, t) in wave {
+            eng.submit(lazy_query(s, t));
+        }
+        eng.run_until_idle();
+        completed += eng.metrics().queries_completed;
+        epochs += eng.metrics().epochs_applied;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    MutRow {
+        mode: "rebuild",
+        threads,
+        wall,
+        maint,
+        epochs_applied: epochs,
+        delta_bytes_peak: 0,
+        completed,
+    }
+}
+
+/// End-to-end wall speedup of incremental maintenance over full rebuild at
+/// the same thread count — the quantity the ≥1.2× streaming target is on.
+fn mut_speedup(rows: &[MutRow], threads: usize) -> f64 {
+    let wall = |mode: &str| {
+        rows.iter()
+            .find(|r| r.mode == mode && r.threads == threads)
+            .map(|r| r.wall)
+            .unwrap_or(f64::NAN)
+    };
+    wall("rebuild") / wall("incremental")
+}
+
+fn print_mut_table(name: &str, rows: &[MutRow]) {
+    let mut t = Table::new(vec![
+        "mode",
+        "threads",
+        "wall",
+        "maintenance",
+        "epochs",
+        "delta peak",
+        "completed",
+        "vs rebuild",
+    ]);
+    for r in rows {
+        let vs = match r.mode {
+            "rebuild" => "baseline".to_string(),
+            _ => format!("{:.2}x", mut_speedup(rows, r.threads)),
+        };
+        t.row(vec![
+            r.mode.to_string(),
+            r.threads.to_string(),
+            format!("{:.1} ms", r.wall * 1e3),
+            format!("{:.1} ms", r.maint * 1e3),
+            r.epochs_applied.to_string(),
+            format!("{} B", r.delta_bytes_peak),
+            r.completed.to_string(),
+            vs,
+        ]);
+    }
+    println!("[{name}]");
+    println!("{}", t.render());
+}
+
+fn json_mut_rows(rows: &[MutRow]) -> String {
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "{{\"mode\":\"{}\",\"threads\":{},\"wall_s\":{:.6},",
+                    "\"maint_s\":{:.6},\"epochs_applied\":{},",
+                    "\"delta_bytes_peak\":{},\"completed\":{}}}"
+                ),
+                r.mode,
+                r.threads,
+                r.wall,
+                r.maint,
+                r.epochs_applied,
+                r.delta_bytes_peak,
+                r.completed,
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
 pub fn run() {
     let smoke = smoke();
     let reps = if smoke { 1 } else { 3 };
@@ -1525,6 +1761,62 @@ pub fn run() {
     println!("slice buys. Outputs are bit-identical across the admit axis");
     println!("(tests/determinism.rs admit_choice_never_changes_outputs).");
 
+    // --- Mutation sweep: streaming graph updates against the hub2 index.
+    // The incremental mode keeps ONE always-on serving engine: each batch
+    // folds into the epoch overlay at a round boundary and only the
+    // affected hub rows/columns are recomputed (Hub2Maintainer). The
+    // rebuild mode is the correctness baseline run as a strategy: fold the
+    // batch into a fresh CSR and rebuild the entire index over the same
+    // frozen hub set, every time. Small batches are the streaming regime
+    // the overlay exists for — recomputing all 2k hub BFS trees per
+    // handful of edits is exactly the waste the incremental path avoids.
+    let (mu_n, mu_deg, mu_hubs, mu_rounds, mu_edits, mu_wave) = if smoke {
+        (6_000, 6, 8usize, 3usize, 3usize, 8usize)
+    } else {
+        (40_000, 8, 16, 6, 4, 16)
+    };
+    let mu_workers = 8;
+    let mu_g = gen::twitter_like(mu_n, mu_deg, 448);
+    let mu_indexer = Hub2Indexer::new(mu_hubs);
+    let mu_batches = mutation_schedule(&mu_g, mu_rounds, mu_edits, 449);
+    let mu_waves: Vec<Vec<(u32, u32)>> = (0..mu_rounds)
+        .map(|i| gen::random_pairs(mu_n, mu_wave, 450 + i as u64))
+        .collect();
+    let mut mut_rows = Vec::new();
+    for &threads in &[1usize, 4] {
+        mut_rows.push(mut_incremental_row(
+            &mu_g,
+            &mu_indexer,
+            &mu_batches,
+            &mu_waves,
+            mu_workers,
+            threads,
+        ));
+        mut_rows.push(mut_rebuild_row(
+            &mu_g,
+            &mu_indexer,
+            &mu_batches,
+            &mu_waves,
+            mu_workers,
+            threads,
+        ));
+    }
+    print_mut_table(
+        "hub2 streaming mutations C=8 W=8 (incremental vs rebuild)",
+        &mut_rows,
+    );
+    let mut_headline = mut_speedup(&mut_rows, 4);
+    println!(
+        "incremental vs full-rebuild end-to-end wall at 4 threads: {:.2}x",
+        mut_headline
+    );
+    println!("target: incremental maintenance >= 1.2x over rebuild at 4");
+    println!("threads end-to-end; epochs_applied > 0 and delta_bytes_peak > 0");
+    println!("on incremental rows (and epochs_applied == 0 on rebuild rows)");
+    println!("show the overlay actually engaged. Outputs are bit-identical");
+    println!("across the mutation axis by construction (tests/determinism.rs");
+    println!("mutating_runs_replay_against_the_serial_snapshot_oracle).");
+
     if JSON.load(Ordering::Relaxed) {
         let payload = format!(
             concat!(
@@ -1670,6 +1962,29 @@ pub fn run() {
         match std::fs::write("BENCH_serving.json", &payload) {
             Ok(()) => println!("wrote BENCH_serving.json"),
             Err(e) => eprintln!("could not write BENCH_serving.json: {e}"),
+        }
+        let payload = format!(
+            concat!(
+                "{{\"pr\":9,\"bench\":\"perf_mutation_maintenance\",",
+                "\"graph\":\"twitter_like\",\"n\":{},\"workers\":{},",
+                "\"hubs\":{},\"rounds\":{},\"edits_per_batch\":{},",
+                "\"wave_queries\":{},\"threads_swept\":[1,4],\"reps\":1,",
+                "\"smoke\":{},\"rows\":{},",
+                "\"hub2_incremental_vs_rebuild_speedup_t4\":{:.3}}}\n"
+            ),
+            mu_n,
+            mu_workers,
+            mu_hubs,
+            mu_rounds,
+            mu_edits,
+            mu_wave,
+            smoke,
+            json_mut_rows(&mut_rows),
+            mut_headline,
+        );
+        match std::fs::write("BENCH_pr9.json", &payload) {
+            Ok(()) => println!("wrote BENCH_pr9.json"),
+            Err(e) => eprintln!("could not write BENCH_pr9.json: {e}"),
         }
     }
 }

@@ -21,7 +21,9 @@
 use super::bibfs::{BiAgg, BiState, BWD, FWD};
 use super::{PpspQuery, UNREACHED};
 use crate::coordinator::Engine;
-use crate::graph::{Graph, VertexId};
+use crate::graph::{
+    Epoch, Graph, Mutation, MutationApplied, MutationBatch, VersionedGraph, VertexId,
+};
 use crate::metrics::EngineMetrics;
 use crate::network::Cluster;
 use crate::runtime::rowmin;
@@ -449,8 +451,25 @@ impl Hub2Indexer {
     /// Build the index. `g` must have in-edges materialized.
     pub fn build(&self, g: &Graph, cluster: Cluster, mp: &dyn MinPlus) -> (Hub2Index, IndexStats) {
         assert!(g.has_in_edges(), "Hub2Indexer requires ensure_in_edges()");
-        let n = g.num_vertices();
         let hubs = self.pick_hubs(g);
+        self.build_with_hubs(g, hubs, cluster, mp)
+    }
+
+    /// Build the index over a **caller-chosen hub set** (rank order as
+    /// given). This is the rebuild primitive of the streaming-mutation
+    /// path: [`Hub2Maintainer`] freezes the hub set at index-build time
+    /// (degree ranks drift under mutations, but re-picking hubs would
+    /// invalidate every label at once), so the correctness baseline it is
+    /// tested against must rebuild over the *same* hubs.
+    pub fn build_with_hubs(
+        &self,
+        g: &Graph,
+        hubs: Vec<VertexId>,
+        cluster: Cluster,
+        mp: &dyn MinPlus,
+    ) -> (Hub2Index, IndexStats) {
+        assert!(g.has_in_edges(), "Hub2Indexer requires ensure_in_edges()");
+        let n = g.num_vertices();
         let k = hubs.len();
         let mut hub_rank = FxHashMap::default();
         for (i, &h) in hubs.iter().enumerate() {
@@ -768,6 +787,509 @@ impl<'g, 'i> QueryApp for Hub2Query<'g, 'i> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Streaming mutations: incremental label maintenance + the serving app.
+// ---------------------------------------------------------------------------
+
+/// Serial level-synchronous replay of one [`HubBfs`] job over a
+/// [`VersionedGraph`] at a fixed epoch. Reproduces the engine app's
+/// semantics exactly: `d(v) = superstep - 1`; `pre(v)` is the OR over all
+/// shortest-path predecessors `u` of the message `u` relays, where the
+/// root sends FALSE at step 1 and every other vertex relays
+/// `is_hub(u) || pre(u)`. Reads go through the overlay accessors, so no
+/// snapshot CSR is ever materialized — that is the whole point of
+/// incremental maintenance.
+fn hub_bfs_at(
+    vg: &VersionedGraph,
+    hub_rank: &FxHashMap<VertexId, u16>,
+    pass: Pass,
+    h: VertexId,
+    e: Epoch,
+) -> (Vec<u32>, Vec<bool>) {
+    let n = vg.num_vertices_at(e);
+    let mut dist = vec![UNREACHED; n];
+    let mut pre = vec![false; n];
+    if (h as usize) >= n {
+        return (dist, pre);
+    }
+    dist[h as usize] = 0;
+    let mut frontier = vec![h];
+    let mut level = 1u32;
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &u in &frontier {
+            let msg = u != h && (hub_rank.contains_key(&u) || pre[u as usize]);
+            let nbrs = match pass {
+                Pass::Forward => vg.out_at(u, e),
+                Pass::Backward => vg.in_at(u, e),
+            };
+            for &v in nbrs.iter() {
+                let dv = &mut dist[v as usize];
+                if *dv == UNREACHED {
+                    *dv = level;
+                    pre[v as usize] |= msg;
+                    next.push(v);
+                } else if *dv == level {
+                    // Another shortest-path predecessor: OR, exactly like
+                    // the engine app's message combiner.
+                    pre[v as usize] |= msg;
+                }
+            }
+        }
+        frontier = next;
+        level += 1;
+    }
+    (dist, pre)
+}
+
+/// Incremental maintenance of a [`Hub2Index`] under streaming mutations.
+///
+/// The hub set is **frozen** at index-build time: degree ranks drift as
+/// edges come and go, but re-picking hubs would invalidate every label at
+/// once — the maintainer instead keeps the original hubs and repairs
+/// their BFS trees. It caches each rank's full `(dist, pre)` rows (the
+/// per-rank output of [`HubBfs`]); on a mutation batch it decides per
+/// rank whether the batch can possibly change that rank's tree
+/// (*affected-hub detection*, evaluated against the pre-batch rows):
+///
+/// * `AddEdge(u, v)` affects a forward rank iff
+///   `d(h, u) + 1 <= d(h, v)` — strictly smaller shortens distances,
+///   equal adds a shortest-path predecessor and may flip `pre(v)`;
+/// * `DeleteEdge(u, v)` affects it iff `d(h, u) + 1 == d(h, v)` with both
+///   finite — only tight arcs lie on shortest paths;
+/// * `DeleteVertex(v)` affects it iff `d(h, v)` is finite;
+/// * `AddVertex` affects nothing (the new slot is isolated);
+/// * backward ranks mirror the criteria with the arc reversed.
+///
+/// (Soundness: walk any post-batch shortest path; if no added arc on it
+/// triggers the `<=` test, induction over the old distances bounds the
+/// old distance by the new length — so a change implies a trigger.)
+/// Affected ranks rerun one serial BFS each over the overlay accessors
+/// and patch their `hub_dist` row/column and their label entries in
+/// place; unaffected ranks are untouched. With full (untruncated) BFS
+/// distances the repaired table is already closed, so no min-plus
+/// re-closure is needed. The correctness baseline is
+/// [`Hub2Indexer::build_with_hubs`] over a materialized snapshot with the
+/// same frozen hubs — the parity tests below hold the two bit-identical.
+pub struct Hub2Maintainer {
+    undirected: bool,
+    hubs: Vec<VertexId>,
+    hub_rank: FxHashMap<VertexId, u16>,
+    /// Per-rank forward BFS rows: `dist_fwd[i][v] = d(h_i, v)`.
+    dist_fwd: Vec<Vec<u32>>,
+    pre_fwd: Vec<Vec<bool>>,
+    /// Backward side (`d(v, h_i)`); empty when undirected.
+    dist_bwd: Vec<Vec<u32>>,
+    pre_bwd: Vec<Vec<bool>>,
+}
+
+impl Hub2Maintainer {
+    /// Seed the maintainer from a freshly built index (full BFS only:
+    /// truncated-radius indexes under-represent the trees the maintainer
+    /// repairs). Runs one serial BFS per rank and pass at the current
+    /// epoch of `vg`.
+    pub fn new(vg: &VersionedGraph, idx: &Hub2Index, undirected: bool) -> Self {
+        let e = vg.epoch();
+        let k = idx.k();
+        let mut m = Self {
+            undirected,
+            hubs: idx.hubs.clone(),
+            hub_rank: idx.hub_rank.clone(),
+            dist_fwd: Vec::with_capacity(k),
+            pre_fwd: Vec::with_capacity(k),
+            dist_bwd: Vec::new(),
+            pre_bwd: Vec::new(),
+        };
+        for i in 0..k {
+            let (d, p) = hub_bfs_at(vg, &m.hub_rank, Pass::Forward, m.hubs[i], e);
+            m.dist_fwd.push(d);
+            m.pre_fwd.push(p);
+            if !undirected {
+                let (d, p) = hub_bfs_at(vg, &m.hub_rank, Pass::Backward, m.hubs[i], e);
+                m.dist_bwd.push(d);
+                m.pre_bwd.push(p);
+            }
+        }
+        m
+    }
+
+    /// Number of hubs under maintenance.
+    pub fn k(&self) -> usize {
+        self.hubs.len()
+    }
+
+    /// Strip rank `rank`'s entry from every label row, then re-insert
+    /// `(rank, d)` (rank-sorted, matching build order) for every live
+    /// non-hub vertex with a finite, un-shadowed distance.
+    fn patch_labels(
+        labels: &mut [Vec<(u16, u32)>],
+        hub_rank: &FxHashMap<VertexId, u16>,
+        rank: u16,
+        dist: &[u32],
+        pre: &[bool],
+    ) {
+        for (v, row) in labels.iter_mut().enumerate() {
+            if let Some(p) = row.iter().position(|&(r, _)| r == rank) {
+                row.remove(p);
+            }
+            let d = dist.get(v).copied().unwrap_or(UNREACHED);
+            if d != UNREACHED && !pre[v] && !hub_rank.contains_key(&(v as VertexId)) {
+                let p = row.partition_point(|&(r, _)| r < rank);
+                row.insert(p, (rank, d));
+            }
+        }
+    }
+
+    /// Fold one applied batch into the index. `vg` must already be at the
+    /// post-batch epoch (the batch this call repairs is the one that
+    /// produced `vg.epoch()`). For undirected-stored graphs the batch
+    /// must contain both arcs of every logical edge, like the builder
+    /// does. Returns the number of BFS recomputations performed — the
+    /// quantity the incremental path saves versus `2k` (or `k`
+    /// undirected) for a full rebuild.
+    pub fn refresh(
+        &mut self,
+        vg: &VersionedGraph,
+        idx: &mut Hub2Index,
+        batch: &MutationBatch,
+    ) -> usize {
+        let e = vg.epoch();
+        let k = self.hubs.len();
+        let n = vg.num_vertices_at(e);
+        let d_of = |row: &[u32], v: VertexId| row.get(v as usize).copied().unwrap_or(UNREACHED);
+        let mut aff_fwd = vec![false; k];
+        let mut aff_bwd = vec![false; k];
+        let mut deleted: Vec<VertexId> = Vec::new();
+        for m in &batch.muts {
+            match *m {
+                Mutation::AddEdge { src, dst, .. } => {
+                    for i in 0..k {
+                        let (du, dv) = (d_of(&self.dist_fwd[i], src), d_of(&self.dist_fwd[i], dst));
+                        aff_fwd[i] |= du != UNREACHED && du + 1 <= dv;
+                        if !self.undirected {
+                            let (dv, du) =
+                                (d_of(&self.dist_bwd[i], dst), d_of(&self.dist_bwd[i], src));
+                            aff_bwd[i] |= dv != UNREACHED && dv + 1 <= du;
+                        }
+                    }
+                }
+                Mutation::DeleteEdge { src, dst } => {
+                    for i in 0..k {
+                        let (du, dv) = (d_of(&self.dist_fwd[i], src), d_of(&self.dist_fwd[i], dst));
+                        aff_fwd[i] |= du != UNREACHED && dv != UNREACHED && du + 1 == dv;
+                        if !self.undirected {
+                            let (dv, du) =
+                                (d_of(&self.dist_bwd[i], dst), d_of(&self.dist_bwd[i], src));
+                            aff_bwd[i] |= dv != UNREACHED && du != UNREACHED && dv + 1 == du;
+                        }
+                    }
+                }
+                Mutation::AddVertex => {}
+                Mutation::DeleteVertex { v } => {
+                    deleted.push(v);
+                    for i in 0..k {
+                        aff_fwd[i] |= d_of(&self.dist_fwd[i], v) != UNREACHED;
+                        if !self.undirected {
+                            aff_bwd[i] |= d_of(&self.dist_bwd[i], v) != UNREACHED;
+                        }
+                    }
+                }
+            }
+        }
+        // Grow per-vertex rows for slots added by this batch (for
+        // unaffected ranks too: every row tracks the current id space).
+        idx.label_out.resize(n, Vec::new());
+        idx.label_in.resize(n, Vec::new());
+        for i in 0..k {
+            self.dist_fwd[i].resize(n, UNREACHED);
+            self.pre_fwd[i].resize(n, false);
+            if !self.undirected {
+                self.dist_bwd[i].resize(n, UNREACHED);
+                self.pre_bwd[i].resize(n, false);
+            }
+        }
+        let mut recomputed = 0;
+        for i in 0..k {
+            if aff_fwd[i] {
+                recomputed += 1;
+                let (d, p) = hub_bfs_at(vg, &self.hub_rank, Pass::Forward, self.hubs[i], e);
+                for j in 0..k {
+                    idx.hub_dist[i * k + j] = to_f(d_of(&d, self.hubs[j]));
+                }
+                Self::patch_labels(&mut idx.label_out, &self.hub_rank, i as u16, &d, &p);
+                if self.undirected {
+                    Self::patch_labels(&mut idx.label_in, &self.hub_rank, i as u16, &d, &p);
+                }
+                self.dist_fwd[i] = d;
+                self.pre_fwd[i] = p;
+            }
+            if !self.undirected && aff_bwd[i] {
+                recomputed += 1;
+                let (d, p) = hub_bfs_at(vg, &self.hub_rank, Pass::Backward, self.hubs[i], e);
+                for j in 0..k {
+                    idx.hub_dist[j * k + i] = to_f(d_of(&d, self.hubs[j]));
+                }
+                Self::patch_labels(&mut idx.label_in, &self.hub_rank, i as u16, &d, &p);
+                self.dist_bwd[i] = d;
+                self.pre_bwd[i] = p;
+            }
+        }
+        // Deleted slots read as isolated from `e` on: no labels at all.
+        // (Every rank that could have labeled them is affected and was
+        // just repaired; the explicit clear also covers their entries.)
+        for v in deleted {
+            idx.label_out[v as usize].clear();
+            idx.label_in[v as usize].clear();
+        }
+        recomputed
+    }
+}
+
+/// Query content of the serving app: a [`Hub2QueryContent`] plus the
+/// graph epoch pinned at admission (stamped by [`QueryApp::pin_epoch`] —
+/// part of the frozen query content, so the whole lifetime of the query
+/// reads one consistent version).
+pub type Hub2ServeQuery = (VertexId, VertexId, u32, Epoch);
+
+/// A lazily-bounded serving query: `d_ub` is filled by the admission
+/// hook's batched kernel sweep and the epoch is stamped at admission.
+/// This is the sanctioned submission path under mutations — an
+/// *explicitly* bounded query computed against an older epoch could
+/// carry a `d_ub` a later delete has invalidated; the lazy path computes
+/// the bound at admission, against the index at the very epoch the query
+/// pins, so it is always valid for the version the query reads.
+#[inline]
+pub fn lazy_serve_query(s: VertexId, t: VertexId) -> Hub2ServeQuery {
+    (s, t, DUB_PENDING, 0)
+}
+
+/// The always-on serving variant of [`Hub2Query`]: owns a
+/// [`VersionedGraph`] plus the index and its maintainer, and accepts
+/// streaming mutations through the [`QueryApp`] mutation hooks. Each
+/// query reads the version pinned at its admission
+/// ([`VersionedGraph::out_at`] / [`VersionedGraph::in_at`] at the
+/// stamped epoch); the hub set is frozen, so `is_hub` — the only index
+/// state `compute` consults — is epoch-independent.
+pub struct Hub2Serve {
+    vg: VersionedGraph,
+    idx: Hub2Index,
+    maint: Hub2Maintainer,
+}
+
+impl Hub2Serve {
+    /// Build the index over `g` (full BFS — the maintainer requires
+    /// untruncated hub distances) and wrap `g` for versioned serving.
+    pub fn build(mut g: Graph, indexer: &Hub2Indexer, cluster: Cluster, mp: &dyn MinPlus) -> Self {
+        assert!(
+            indexer.radius.is_none(),
+            "Hub2Maintainer requires full-BFS indexing (radius = None)"
+        );
+        g.ensure_in_edges();
+        let (idx, _) = indexer.build(&g, cluster, mp);
+        let vg = VersionedGraph::new(g);
+        let maint = Hub2Maintainer::new(&vg, &idx, indexer.undirected);
+        Self { vg, idx, maint }
+    }
+
+    /// The versioned graph being served.
+    pub fn graph(&self) -> &VersionedGraph {
+        &self.vg
+    }
+
+    /// The maintained index (current-epoch view).
+    pub fn index(&self) -> &Hub2Index {
+        &self.idx
+    }
+
+    fn broadcast(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, dir: u8, e: Epoch) {
+        if dir == FWD {
+            let nbrs = self.vg.out_at(v, e);
+            for &u in nbrs.iter() {
+                ctx.send(u, FWD);
+            }
+            let n = nbrs.len() as u64;
+            ctx.aggregate(|_, a| a.fwd_sent += n);
+        } else {
+            let nbrs = self.vg.in_at(v, e);
+            for &u in nbrs.iter() {
+                ctx.send(u, BWD);
+            }
+            let n = nbrs.len() as u64;
+            ctx.aggregate(|_, a| a.bwd_sent += n);
+        }
+    }
+}
+
+impl QueryApp for Hub2Serve {
+    type Query = Hub2ServeQuery;
+    type VQ = BiState;
+    type Msg = u8;
+    type Agg = BiAgg;
+    type Out = Option<u32>;
+
+    fn supports_mutations(&self) -> bool {
+        true
+    }
+
+    fn apply_mutations(&mut self, batch: &MutationBatch) -> MutationApplied {
+        let applied = self.vg.apply(batch);
+        self.maint.refresh(&self.vg, &mut self.idx, batch);
+        applied
+    }
+
+    fn pin_epoch(&self, batch: &mut [Hub2ServeQuery], epoch: Epoch) {
+        for q in batch {
+            q.3 = epoch;
+        }
+    }
+
+    fn retire_epochs(&mut self, oldest: Epoch) {
+        self.vg.retire(oldest);
+    }
+
+    /// Same batched sweep as [`Hub2Query::admit_batch`]. Runs after
+    /// [`QueryApp::pin_epoch`] in the same admission round, and mutations
+    /// land before admission — so the bound is computed against the index
+    /// at exactly the epoch the query pins.
+    fn admit_batch(&self, batch: &mut [Hub2ServeQuery]) {
+        let lazy: Vec<usize> = batch
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| q.2 == DUB_PENDING)
+            .map(|(i, _)| i)
+            .collect();
+        if lazy.is_empty() {
+            return;
+        }
+        let pairs: Vec<PpspQuery> = lazy.iter().map(|&i| (batch[i].0, batch[i].1)).collect();
+        let dubs = self
+            .idx
+            .dub_for(&pairs, &BlockedMinPlus, rowmin::RM_TILE.0, self.idx.k());
+        for (&i, d) in lazy.iter().zip(dubs) {
+            batch[i].2 = d;
+        }
+    }
+
+    fn is_heavy(&self, q: &Hub2ServeQuery) -> bool {
+        q.2 != DUB_PENDING && q.2 >= HEAVY_DUB_THRESHOLD
+    }
+
+    fn init_activate(&self, q: &Hub2ServeQuery) -> Vec<VertexId> {
+        debug_assert_ne!(q.2, DUB_PENDING, "admit_batch must fill lazy d_ub");
+        if q.0 == q.1 {
+            vec![q.0]
+        } else {
+            vec![q.0, q.1]
+        }
+    }
+
+    fn init_value(&self, q: &Hub2ServeQuery, v: VertexId) -> BiState {
+        BiState {
+            ds: if v == q.0 { 0 } else { UNREACHED },
+            dt: if v == q.1 { 0 } else { UNREACHED },
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, st: &mut BiState) {
+        let step = ctx.superstep();
+        let (s, t, _dub, e) = *ctx.query();
+        if step == 1 {
+            if s == t {
+                ctx.aggregate(|_, a| a.best = 0);
+                ctx.force_terminate();
+                ctx.vote_halt();
+                return;
+            }
+            if v == s {
+                self.broadcast(ctx, v, FWD, e);
+            }
+            if v == t {
+                self.broadcast(ctx, v, BWD, e);
+            }
+            ctx.vote_halt();
+            return;
+        }
+        let mut mask = 0u8;
+        for &m in ctx.msgs() {
+            mask |= m;
+        }
+        let newly_fwd = mask & FWD != 0 && st.ds == UNREACHED;
+        let newly_bwd = mask & BWD != 0 && st.dt == UNREACHED;
+        if newly_fwd {
+            st.ds = (step - 1) as u32;
+        }
+        if newly_bwd {
+            st.dt = (step - 1) as u32;
+        }
+        if self.idx.is_hub(v) && v != s && v != t {
+            ctx.vote_halt();
+            return;
+        }
+        if st.ds != UNREACHED && st.dt != UNREACHED && (newly_fwd || newly_bwd) {
+            let sum = st.ds.saturating_add(st.dt);
+            ctx.aggregate(|_, a| a.best = a.best.min(sum));
+            ctx.force_terminate();
+            ctx.vote_halt();
+            return;
+        }
+        if newly_fwd {
+            self.broadcast(ctx, v, FWD, e);
+        }
+        if newly_bwd {
+            self.broadcast(ctx, v, BWD, e);
+        }
+        ctx.vote_halt();
+    }
+
+    fn combine(&self, into: &mut u8, from: &u8) -> bool {
+        *into |= *from;
+        true
+    }
+
+    fn agg_merge(&self, into: &mut BiAgg, from: &BiAgg) {
+        into.best = into.best.min(from.best);
+        into.fwd_sent += from.fwd_sent;
+        into.bwd_sent += from.bwd_sent;
+    }
+
+    fn master_step(
+        &self,
+        q: &Hub2ServeQuery,
+        step: u64,
+        prev: &BiAgg,
+        agg: &mut BiAgg,
+    ) -> MasterAction {
+        let dub = q.2;
+        agg.best = agg.best.min(prev.best);
+        if agg.best != UNREACHED {
+            return MasterAction::Terminate;
+        }
+        if dub != UNREACHED && step >= 1 + (dub as u64) / 2 {
+            return MasterAction::Terminate;
+        }
+        if step >= 1 && (agg.fwd_sent == 0 || agg.bwd_sent == 0) {
+            return MasterAction::Terminate;
+        }
+        agg.fwd_sent = 0;
+        agg.bwd_sent = 0;
+        MasterAction::Continue
+    }
+
+    fn finish(
+        &self,
+        q: &Hub2ServeQuery,
+        _touched: &mut dyn Iterator<Item = (VertexId, &BiState)>,
+        agg: &BiAgg,
+    ) -> Option<u32> {
+        let d = q.2.min(agg.best);
+        (d != UNREACHED).then_some(d)
+    }
+
+    fn msg_bytes(&self) -> usize {
+        1
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::oracle;
@@ -1030,6 +1552,197 @@ mod tests {
             let want = oracle::bfs_dist(&g, s, t);
             assert_eq!(got, (want != UNREACHED).then_some(want), "({s},{t})");
         }
+    }
+
+    fn xorshift(seed: &mut u32) -> u32 {
+        *seed ^= *seed << 13;
+        *seed ^= *seed >> 17;
+        *seed ^= *seed << 5;
+        *seed
+    }
+
+    /// The incremental maintainer must stay bit-identical to a full
+    /// rebuild over the same frozen hubs, batch after batch — edge adds,
+    /// edge deletes, a vertex add wired into the graph, and a vertex
+    /// delete (directed graph, both BFS passes).
+    #[test]
+    fn maintainer_matches_frozen_hub_rebuild_directed() {
+        let mut g = gen::twitter_like(300, 5, 51);
+        g.ensure_in_edges();
+        let indexer = Hub2Indexer::new(10);
+        let (mut idx, _) = indexer.build(&g, Cluster::new(4), &RustMinPlus);
+        let hubs = idx.hubs.clone();
+        let mut vg = VersionedGraph::new(g);
+        let mut maint = Hub2Maintainer::new(&vg, &idx, false);
+        let mut seed = 0x9E37_79B9u32;
+        for round in 0..6 {
+            let e = vg.epoch();
+            let n = vg.num_vertices_at(e) as VertexId;
+            let mut batch = MutationBatch::new();
+            if round == 4 {
+                let v = loop {
+                    let v = xorshift(&mut seed) % n;
+                    if vg.is_live_at(v, e) && !idx.is_hub(v) {
+                        break v;
+                    }
+                };
+                batch.delete_vertex(v);
+            } else {
+                for _ in 0..3 {
+                    let (u, v) = loop {
+                        let u = xorshift(&mut seed) % n;
+                        let v = xorshift(&mut seed) % n;
+                        if u != v && vg.is_live_at(u, e) && vg.is_live_at(v, e) {
+                            break (u, v);
+                        }
+                    };
+                    batch.add_edge(u, v);
+                }
+                for _ in 0..2 {
+                    // Deletes are drawn from arcs that actually exist.
+                    let (u, v) = loop {
+                        let u = xorshift(&mut seed) % n;
+                        let nb = vg.out_at(u, e);
+                        if !nb.is_empty() {
+                            let v = nb[xorshift(&mut seed) as usize % nb.len()];
+                            break (u, v);
+                        }
+                    };
+                    batch.delete_edge(u, v);
+                }
+                if round == 2 {
+                    let x = loop {
+                        let x = xorshift(&mut seed) % n;
+                        if vg.is_live_at(x, e) {
+                            break x;
+                        }
+                    };
+                    batch.add_vertex().add_edge(n, x).add_edge(x, n);
+                }
+            }
+            vg.apply(&batch);
+            let recomputed = maint.refresh(&vg, &mut idx, &batch);
+            assert!(recomputed <= 2 * maint.k(), "round {round}");
+            let mut snap = vg.snapshot_at(vg.epoch());
+            snap.ensure_in_edges();
+            let (want, _) =
+                indexer.build_with_hubs(&snap, hubs.clone(), Cluster::new(4), &RustMinPlus);
+            assert_eq!(idx.hub_dist, want.hub_dist, "hub_dist round {round}");
+            assert_eq!(idx.label_out, want.label_out, "label_out round {round}");
+            assert_eq!(idx.label_in, want.label_in, "label_in round {round}");
+        }
+    }
+
+    /// Undirected parity: batches carry both arcs of every logical edge
+    /// (matching the undirected storage) and `L_in` must stay the mirror
+    /// of `L_out` through every refresh.
+    #[test]
+    fn maintainer_matches_frozen_hub_rebuild_undirected() {
+        let mut g = gen::btc_like(200, 20, 3, 52);
+        g.ensure_in_edges();
+        let indexer = Hub2Indexer::new(8).undirected(true);
+        let (mut idx, _) = indexer.build(&g, Cluster::new(4), &RustMinPlus);
+        let hubs = idx.hubs.clone();
+        let mut vg = VersionedGraph::new(g);
+        let mut maint = Hub2Maintainer::new(&vg, &idx, true);
+        let mut seed = 0xB5EE_D101u32;
+        for round in 0..5 {
+            let e = vg.epoch();
+            let n = vg.num_vertices_at(e) as VertexId;
+            let mut batch = MutationBatch::new();
+            if round == 3 {
+                let v = loop {
+                    let v = xorshift(&mut seed) % n;
+                    if vg.is_live_at(v, e) && !idx.is_hub(v) {
+                        break v;
+                    }
+                };
+                batch.delete_vertex(v);
+            } else {
+                for _ in 0..2 {
+                    let (u, v) = loop {
+                        let u = xorshift(&mut seed) % n;
+                        let v = xorshift(&mut seed) % n;
+                        if u != v && vg.is_live_at(u, e) && vg.is_live_at(v, e) {
+                            break (u, v);
+                        }
+                    };
+                    batch.add_edge(u, v).add_edge(v, u);
+                }
+                let (u, v) = loop {
+                    let u = xorshift(&mut seed) % n;
+                    let nb = vg.out_at(u, e);
+                    if !nb.is_empty() {
+                        let v = nb[xorshift(&mut seed) as usize % nb.len()];
+                        break (u, v);
+                    }
+                };
+                batch.delete_edge(u, v).delete_edge(v, u);
+            }
+            vg.apply(&batch);
+            maint.refresh(&vg, &mut idx, &batch);
+            let mut snap = vg.snapshot_at(vg.epoch());
+            snap.ensure_in_edges();
+            let (want, _) =
+                indexer.build_with_hubs(&snap, hubs.clone(), Cluster::new(4), &RustMinPlus);
+            assert_eq!(idx.hub_dist, want.hub_dist, "hub_dist round {round}");
+            assert_eq!(idx.label_out, want.label_out, "label_out round {round}");
+            assert_eq!(idx.label_in, idx.label_out, "L_in mirrors L_out, round {round}");
+        }
+    }
+
+    /// The pinned-d_ub regression: a query admitted at epoch 0 carries a
+    /// d_ub computed against epoch 0's index; a delete that lands while
+    /// it is in flight severs the very path behind that bound — but the
+    /// query reads its pinned version and must still report the epoch-0
+    /// distance. A query admitted after the delete sees the cut.
+    #[test]
+    fn pinned_query_is_isolated_from_later_deletes() {
+        // Directed path 0 -> 1 -> ... -> 7 (d(0, 7) = 7).
+        let mut b = crate::graph::GraphBuilder::new(8);
+        for i in 0..7u32 {
+            b.edge(i, i + 1);
+        }
+        let mut g = b.build();
+        g.ensure_in_edges();
+        let app = Hub2Serve::build(g, &Hub2Indexer::new(2), Cluster::new(4), &RustMinPlus);
+        let mut eng = Engine::new(app, Cluster::new(4), 8);
+        let qid = eng.try_submit(lazy_serve_query(0, 7), 0.0).unwrap();
+        // One super-round: the query is admitted (pinning epoch 0, with a
+        // d_ub priced against epoch 0) and runs superstep 1.
+        assert!(eng.super_round());
+        // Cut the path mid-flight. The batch applies at the next round
+        // boundary, creating epoch 1 — invisible to the pinned query.
+        let mut batch = MutationBatch::new();
+        batch.delete_edge(3, 4);
+        eng.try_mutate(batch, 0.0).unwrap();
+        eng.run_until_idle();
+        let r = eng.results().iter().find(|r| r.qid == qid).unwrap();
+        assert_eq!(r.out, Some(7), "pinned query must answer at epoch 0");
+        assert_eq!(r.stats.epoch, 0);
+        assert_eq!(eng.metrics().epochs_applied, 1);
+        assert!(eng.metrics().delta_bytes_peak > 0);
+        // Idle with nothing pinned behind: the overlay compacted.
+        assert_eq!(eng.metrics().oldest_pinned_epoch, 1);
+        assert_eq!(eng.app().graph().base_epoch(), 1);
+        // A fresh query pins epoch 1 and sees the severed path.
+        let qid2 = eng.try_submit(lazy_serve_query(0, 7), eng.sim_time()).unwrap();
+        eng.run_until_idle();
+        let r2 = eng.results().iter().find(|r| r.qid == qid2).unwrap();
+        assert_eq!(r2.out, None, "post-delete epoch has no 0 -> 7 path");
+        assert_eq!(r2.stats.epoch, 1);
+    }
+
+    /// Mutations offered to an app without mutation support bounce back.
+    #[test]
+    fn try_mutate_rejects_immutable_apps() {
+        let mut g = gen::twitter_like(100, 4, 53);
+        g.ensure_in_edges();
+        let idx = build_index(&g, 4, false);
+        let mut eng = Engine::new(Hub2Query::new(&g, &idx), Cluster::new(4), 100);
+        let mut batch = MutationBatch::new();
+        batch.add_edge(0, 1);
+        assert!(eng.try_mutate(batch, 0.0).is_err());
     }
 
     #[test]

@@ -1,15 +1,20 @@
 //! Point-to-point shortest-path (PPSP) queries on unweighted graphs
 //! (paper §5.1): plain BFS, bidirectional BFS, and the Hub²-indexed
-//! algorithm, plus a serial oracle for testing.
+//! algorithm, plus a serial oracle for testing. The streaming-mutation
+//! variants read through the epoch overlay instead of a borrowed CSR:
+//! [`VersionedBfs`] (index-free) and [`Hub2Serve`] (with incremental
+//! index maintenance by [`Hub2Maintainer`]).
 
 pub mod bfs;
 pub mod bibfs;
 pub mod hub2;
 pub mod oracle;
+pub mod vbfs;
 
 pub use bfs::Bfs;
 pub use bibfs::BiBfs;
-pub use hub2::{Hub2Index, Hub2Indexer, Hub2Query};
+pub use hub2::{lazy_serve_query, Hub2Index, Hub2Indexer, Hub2Maintainer, Hub2Query, Hub2Serve};
+pub use vbfs::{vbfs_query, VersionedBfs};
 
 /// "Infinite" hop count for unreachable pairs.
 pub const UNREACHED: u32 = u32::MAX;

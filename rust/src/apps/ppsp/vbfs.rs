@@ -1,0 +1,186 @@
+//! Plain BFS over a [`VersionedGraph`] — the index-free mutation-capable
+//! PPSP app.
+//!
+//! [`VersionedBfs`] is [`super::Bfs`] with the adjacency reads routed
+//! through the epoch overlay: each query carries the epoch pinned at its
+//! admission ([`crate::vertex::QueryApp::pin_epoch`]) and traverses
+//! exactly that version for its whole lifetime. No index means no
+//! maintenance on mutation — [`VersionedGraph::apply`] is the entire
+//! apply hook — which makes this the reference app for the serial
+//! snapshot-replay oracle and the mutation-schedule fuzzer: its output on
+//! a mutating engine must match plain [`super::Bfs`] on the
+//! [`crate::graph::Graph::apply`]-folded snapshot of the pinned epoch.
+
+use super::UNREACHED;
+use crate::graph::{Epoch, Graph, MutationApplied, MutationBatch, VersionedGraph, VertexId};
+use crate::vertex::{Ctx, QueryApp};
+
+/// A versioned PPSP query: `(s, t, epoch)`. The epoch slot is stamped by
+/// the engine at admission; submit via [`vbfs_query`].
+pub type VBfsQuery = (VertexId, VertexId, Epoch);
+
+/// Build a query for submission (the epoch is filled at admission).
+#[inline]
+pub fn vbfs_query(s: VertexId, t: VertexId) -> VBfsQuery {
+    (s, t, 0)
+}
+
+/// BFS PPSP over a versioned graph. V-data = the overlay adjacency.
+pub struct VersionedBfs {
+    vg: VersionedGraph,
+    /// Whale classification knob for admission-planner tests: a query is
+    /// heavy iff `heavy_every != 0 && (s + t) % heavy_every == 0`. Purely
+    /// content-derived, so it never perturbs the determinism contract.
+    pub heavy_every: u32,
+}
+
+impl VersionedBfs {
+    /// Wrap `g` as epoch 0.
+    pub fn new(g: Graph) -> Self {
+        Self {
+            vg: VersionedGraph::new(g),
+            heavy_every: 0,
+        }
+    }
+
+    /// The versioned graph being served.
+    pub fn graph(&self) -> &VersionedGraph {
+        &self.vg
+    }
+}
+
+impl QueryApp for VersionedBfs {
+    type Query = VBfsQuery;
+    /// d(s, v) estimate at the pinned epoch.
+    type VQ = u32;
+    type Msg = ();
+    type Agg = ();
+    type Out = Option<u32>;
+
+    fn supports_mutations(&self) -> bool {
+        true
+    }
+
+    fn apply_mutations(&mut self, batch: &MutationBatch) -> MutationApplied {
+        self.vg.apply(batch)
+    }
+
+    fn pin_epoch(&self, batch: &mut [VBfsQuery], epoch: Epoch) {
+        for q in batch {
+            q.2 = epoch;
+        }
+    }
+
+    fn retire_epochs(&mut self, oldest: Epoch) {
+        self.vg.retire(oldest);
+    }
+
+    fn is_heavy(&self, q: &VBfsQuery) -> bool {
+        self.heavy_every != 0 && (q.0.wrapping_add(q.1)) % self.heavy_every == 0
+    }
+
+    fn init_activate(&self, q: &VBfsQuery) -> Vec<VertexId> {
+        vec![q.0]
+    }
+
+    fn init_value(&self, q: &VBfsQuery, v: VertexId) -> u32 {
+        if v == q.0 {
+            0
+        } else {
+            UNREACHED
+        }
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, v: VertexId, d: &mut u32) {
+        let step = ctx.superstep();
+        let (_, t, e) = *ctx.query();
+        if step == 1 {
+            if v == t {
+                ctx.force_terminate(); // s == t: d = 0 already recorded
+            }
+            for &u in self.vg.out_at(v, e).iter() {
+                ctx.send(u, ());
+            }
+            ctx.vote_halt();
+            return;
+        }
+        if *d == UNREACHED {
+            *d = (step - 1) as u32;
+            if v == t {
+                ctx.force_terminate();
+            } else {
+                for &u in self.vg.out_at(v, e).iter() {
+                    ctx.send(u, ());
+                }
+            }
+        }
+        ctx.vote_halt();
+    }
+
+    fn combine(&self, _into: &mut (), _from: &()) -> bool {
+        true
+    }
+
+    fn finish(
+        &self,
+        q: &VBfsQuery,
+        touched: &mut dyn Iterator<Item = (VertexId, &u32)>,
+        _agg: &(),
+    ) -> Option<u32> {
+        let t = q.1;
+        for (v, &d) in touched {
+            if v == t && d != UNREACHED {
+                return Some(d);
+            }
+        }
+        None
+    }
+
+    fn msg_bytes(&self) -> usize {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::oracle;
+    use super::*;
+    use crate::coordinator::Engine;
+    use crate::graph::gen;
+    use crate::network::Cluster;
+
+    #[test]
+    fn matches_plain_bfs_at_epoch_zero() {
+        let g = gen::twitter_like(300, 4, 61);
+        let mut eng = Engine::new(VersionedBfs::new(g.clone()), Cluster::new(4), 300);
+        for (s, t) in gen::random_pairs(300, 10, 62) {
+            let want = oracle::bfs_dist(&g, s, t);
+            let got = eng.run_one(vbfs_query(s, t)).out;
+            assert_eq!(got, (want != UNREACHED).then_some(want), "({s},{t})");
+        }
+    }
+
+    #[test]
+    fn matches_oracle_on_the_folded_snapshot_after_mutations() {
+        let g = gen::twitter_like(300, 4, 63);
+        let mut eng = Engine::new(VersionedBfs::new(g.clone()), Cluster::new(4), 300);
+        let mut batch = MutationBatch::new();
+        for v in 0..5u32 {
+            if let Some(&u) = g.out(v).first() {
+                batch.delete_edge(v, u);
+            }
+        }
+        batch.add_edge(7, 251).add_vertex().add_edge(300, 3);
+        let folded = g.apply(&batch);
+        eng.try_mutate(batch, 0.0).unwrap();
+        for (s, t) in gen::random_pairs(300, 10, 64) {
+            let r = eng.run_one(vbfs_query(s, t));
+            let want = oracle::bfs_dist(&folded, s, t);
+            assert_eq!(r.out, (want != UNREACHED).then_some(want), "({s},{t})");
+            assert_eq!(r.stats.epoch, 1, "queries after the batch pin epoch 1");
+        }
+        // The new vertex is reachable through its wired arcs.
+        let want = oracle::bfs_dist(&folded, 7, 300);
+        assert_eq!(eng.run_one(vbfs_query(7, 300)).out, Some(want));
+    }
+}

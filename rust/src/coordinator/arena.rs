@@ -118,9 +118,23 @@ pub(crate) struct FlatStore<A: QueryApp> {
 
 impl<A: QueryApp> FlatStore<A> {
     pub fn new(stride: usize) -> Self {
+        Self::with_vertex_hint(stride, 0)
+    }
+
+    /// Arena pre-sized for a graph of `n_vertices` id slots: the handle
+    /// table is allocated up front at the worker's share of the id space
+    /// instead of growing lazily. Under streaming mutations this is the
+    /// epoch-aware entry point — each query's shards are sized to the
+    /// vertex-slot count of the epoch **pinned at admission** (delta-added
+    /// vertices included, deleted slots retained), so mid-flight epoch
+    /// bumps never reshape a live handle table. A hint of 0 keeps the
+    /// lazy-growth behavior; `touch` still grows past any hint, so the
+    /// hint is capacity, never a bound.
+    pub fn with_vertex_hint(stride: usize, n_vertices: usize) -> Self {
+        let stride = stride.max(1);
         Self {
-            stride: stride.max(1),
-            handles: Vec::new(),
+            stride,
+            handles: vec![NO_HANDLE; n_vertices.div_ceil(stride)],
             verts: Vec::new(),
             state: Vec::new(),
             msg: Vec::new(),
@@ -227,12 +241,19 @@ pub(crate) enum VStore<A: QueryApp> {
 
 impl<A: QueryApp> VStore<A> {
     pub fn new(layout: Layout, workers: usize) -> Self {
+        Self::with_vertex_hint(layout, workers, 0)
+    }
+
+    /// Store pre-sized for `n_vertices` id slots (see
+    /// [`FlatStore::with_vertex_hint`]); the hashed layout ignores the
+    /// hint (its maps size to touched vertices, not the id space).
+    pub fn with_vertex_hint(layout: Layout, workers: usize, n_vertices: usize) -> Self {
         match layout {
             Layout::Hashed => VStore::Hashed {
                 vstate: FxHashMap::default(),
                 inbox: FxHashMap::default(),
             },
-            Layout::Flat => VStore::Flat(FlatStore::new(workers)),
+            Layout::Flat => VStore::Flat(FlatStore::with_vertex_hint(workers, n_vertices)),
         }
     }
 
@@ -499,6 +520,25 @@ mod tests {
         let h401 = fs.touch(401);
         assert_eq!(h401, 2);
         assert_eq!(fs.handle_of(9), Some(h9));
+    }
+
+    #[test]
+    fn vertex_hint_presizes_the_handle_table_without_bounding_it() {
+        // Worker share of a 10-slot id space across 4 workers: ceil(10/4).
+        let fs = FlatStore::<SumBelow100>::with_vertex_hint(4, 10);
+        assert_eq!(fs.handles.len(), 3);
+        assert!(fs.handles.iter().all(|&h| h == NO_HANDLE));
+        assert!(fs.verts.is_empty(), "hint allocates capacity, not handles");
+        // The hint is capacity, never a bound: touching past it grows.
+        let mut fs = FlatStore::<SumBelow100>::with_vertex_hint(4, 10);
+        let h = fs.touch(9);
+        assert_eq!(fs.handle_of(9), Some(h));
+        let h2 = fs.touch(41); // local index 10, beyond the hint
+        assert_eq!(fs.handle_of(41), Some(h2));
+        assert_eq!(fs.verts, vec![9, 41]);
+        // Hint 0 is the lazy baseline.
+        let fs = FlatStore::<SumBelow100>::with_vertex_hint(4, 0);
+        assert!(fs.handles.is_empty());
     }
 
     #[test]

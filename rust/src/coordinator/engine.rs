@@ -99,6 +99,26 @@
 //! `Layout::{Hashed, Flat}` — the layout axis joins threads × workers ×
 //! capacity × scheduler × split × edge-split × pipeline in the
 //! determinism suite and the fuzzer.
+//!
+//! Finally, the graph itself may move underneath the serving front end:
+//! [`Engine::try_mutate`] queues [`MutationBatch`]es on the simulated
+//! clock next to `try_submit`, and every queued batch is applied at the
+//! NEXT super-round boundary — on the coordinator, before admission,
+//! never mid-superstep — bumping the engine's **epoch** by one per batch.
+//! Each admitted query pins the epoch current at its admission round
+//! (stamped into the query content by [`QueryApp::pin_epoch`] and into
+//! `QueryStats::epoch`) and reads that one consistent version for its
+//! whole lifetime through the app's `VersionedGraph` delta overlays;
+//! after each round the engine recomputes the oldest still-pinned epoch
+//! and lets the app retire (compact) everything older. This extends the
+//! bit-identical contract with a **mutation axis**: `QueryResult::out`
+//! is a pure function of (graph version pinned at admission, query) —
+//! for any interleaving of `try_submit`/`try_mutate` calls, the
+//! concurrent versioned run matches a serial engine replayed on the
+//! materialized snapshot of the pinned epoch, regardless of threads ×
+//! workers × scheduler × split × edge-split × pipeline × layout × admit
+//! (pinned by the snapshot-replay oracle in `tests/determinism.rs` and
+//! the mutation-schedule fuzz leg in `tests/fuzz_determinism.rs`).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -111,7 +131,7 @@ use super::query::{
     FanTask, OrderedStaging, Phase, QueryResult, QueryRt, StageStream, StageUnit, StagingCol,
     SubBuf, VState, WorkItem, WorkerShard,
 };
-use crate::graph::VertexId;
+use crate::graph::{Epoch, MutationBatch, VertexId};
 use crate::metrics::EngineMetrics;
 use crate::network::Cluster;
 use crate::util::FxHashMap;
@@ -331,6 +351,14 @@ pub struct Engine<A: QueryApp> {
     /// it and joined when the engine drops (even mid-queue).
     pool: Option<WorkerPool>,
     n_vertices: usize,
+    /// Current graph epoch: bumped once per applied [`MutationBatch`].
+    /// Stays 0 forever for immutable-graph apps. Queries pin the value
+    /// current at their admission round.
+    epoch: Epoch,
+    /// Mutation batches queued by [`Engine::try_mutate`], waiting for the
+    /// next super-round boundary (FIFO; the `f64` is the simulated
+    /// arrival stamp, mirroring `try_submit`).
+    muts: Vec<(MutationBatch, f64)>,
     queue: VecDeque<Queued<A::Query>>,
     inflight: Vec<QueryRt<A>>,
     /// Queries whose reporting superstep a pipelined round deferred: their
@@ -1673,6 +1701,8 @@ impl<A: QueryApp> Engine<A> {
             seen_max_fan: 0,
             pool: None,
             n_vertices,
+            epoch: 0,
+            muts: Vec::new(),
             queue: VecDeque::new(),
             inflight: Vec::new(),
             pending_reports: Vec::new(),
@@ -1919,6 +1949,73 @@ impl<A: QueryApp> Engine<A> {
         self.queue.len()
     }
 
+    /// Queue a graph mutation batch on the simulated clock, next to
+    /// [`Engine::try_submit`]: the batch is applied at the NEXT
+    /// super-round boundary (all queued batches, FIFO, each bumping the
+    /// epoch by one), never mid-round — an in-flight query keeps reading
+    /// the epoch it pinned at admission for its whole lifetime.
+    /// `arrived_at` is a stamp only (like a submission's arrival time);
+    /// it does not reorder batches. Hands the batch back (`Err`) when the
+    /// app's graph is immutable
+    /// ([`crate::vertex::QueryApp::supports_mutations`] is false).
+    pub fn try_mutate(
+        &mut self,
+        batch: MutationBatch,
+        arrived_at: f64,
+    ) -> Result<(), MutationBatch> {
+        if !self.app.supports_mutations() {
+            return Err(batch);
+        }
+        self.muts.push((batch, arrived_at));
+        Ok(())
+    }
+
+    /// Current graph epoch (what the next admitted query would pin).
+    pub fn epoch(&self) -> Epoch {
+        self.epoch
+    }
+
+    /// Apply every queued mutation batch, FIFO, each bumping the epoch by
+    /// one. Runs on the coordinator at the very top of `super_round` —
+    /// strictly between supersteps, before admission — so a batch is
+    /// visible to exactly the queries admitted at its epoch or later.
+    fn apply_pending_mutations(&mut self) {
+        if self.muts.is_empty() {
+            return;
+        }
+        for (batch, _arrived_at) in std::mem::take(&mut self.muts) {
+            let applied = self.app.apply_mutations(&batch);
+            self.epoch = applied.epoch;
+            self.n_vertices = applied.n_vertices;
+            self.metrics.epochs_applied += 1;
+            // Peak is sampled per apply, BEFORE any compaction: a batch
+            // that is applied and immediately retired still registers.
+            self.metrics.delta_bytes_peak = self
+                .metrics
+                .delta_bytes_peak
+                .max(applied.delta_bytes as u64);
+        }
+    }
+
+    /// Recompute the oldest epoch still pinned by an in-flight (or
+    /// pending-report) query and let the app retire everything older —
+    /// when the oldest pin catches up with the current epoch the app's
+    /// overlay compacts. No-op for immutable-graph apps.
+    fn refresh_epoch_pin(&mut self) {
+        if !self.app.supports_mutations() {
+            return;
+        }
+        let oldest = self
+            .inflight
+            .iter()
+            .map(|rt| rt.epoch)
+            .chain(self.pending_reports.iter().map(|p| p.rt.epoch))
+            .min()
+            .unwrap_or(self.epoch);
+        self.metrics.oldest_pinned_epoch = oldest;
+        self.app.retire_epochs(oldest);
+    }
+
     /// Run super-rounds until the queue and all in-flight queries drain.
     pub fn run_until_idle(&mut self) {
         while self.super_round() {}
@@ -1943,11 +2040,20 @@ impl<A: QueryApp> Engine<A> {
 
     /// Execute one super-round. Returns false if there was nothing to do.
     pub fn super_round(&mut self) -> bool {
+        // Queued mutation batches land here and only here — at the
+        // super-round boundary, BEFORE admission and BEFORE the idle
+        // check (a mutation-only round still advances the epoch) — so a
+        // version change falls strictly between supersteps: in-flight
+        // queries keep their pinned epoch, queries admitted below pin
+        // the fresh one.
+        self.apply_pending_mutations();
         if self.inflight.is_empty() && self.queue.is_empty() {
             // The last pipelined round may have deferred reporting work
             // with no next round to overlap it onto — run it now, so
             // `run_until_idle` never strands a result.
             self.flush_pending_reports();
+            // Nothing in flight pins anything: let the overlay compact.
+            self.refresh_epoch_pin();
             return false;
         }
         let wall_start = Instant::now();
@@ -2028,11 +2134,25 @@ impl<A: QueryApp> Engine<A> {
             qs.push(e.query);
         }
         if !qs.is_empty() {
+            // Epoch pinning precedes the batched-kernel hook: whatever
+            // admit_batch computes (e.g. hub2's lazy d_ub fill) is
+            // computed against the pinned version's index state, and the
+            // epoch is frozen query content from here on.
+            self.app.pin_epoch(&mut qs, self.epoch);
             self.app.admit_batch(&mut qs);
         }
         for ((id, arrived_at, submitted_at, heavy), q) in metas.into_iter().zip(qs) {
-            let mut rt =
-                QueryRt::<A>::new(id, q, workers, self.layout, arrived_at, submitted_at, heavy);
+            let mut rt = QueryRt::<A>::new(
+                id,
+                q,
+                workers,
+                self.layout,
+                arrived_at,
+                submitted_at,
+                heavy,
+                self.epoch,
+                self.n_vertices,
+            );
             rt.stats.started_at = self.clock;
             // init_activate: seed the initial activation set V_q^I.
             let init = self.app.init_activate(&rt.query);
@@ -2053,6 +2173,7 @@ impl<A: QueryApp> Engine<A> {
         self.metrics.peak_inflight = self.metrics.peak_inflight.max(self.inflight.len());
         if self.inflight.is_empty() {
             self.flush_pending_reports();
+            self.refresh_epoch_pin();
             return false;
         }
 
@@ -2631,7 +2752,6 @@ impl<A: QueryApp> Engine<A> {
         // all VQ-data / Q-data of finished queries. Completion is counted
         // in the engine metrics here, so per-query accounting never depends
         // on the caller draining `take_results`.
-        let n_vertices = self.n_vertices;
         let clock = self.clock;
         let results = &mut self.results;
         let metrics = &mut self.metrics;
@@ -2641,7 +2761,10 @@ impl<A: QueryApp> Engine<A> {
             }
             let touched = rt.touched();
             rt.stats.touched = touched;
-            rt.stats.access_rate = touched as f64 / n_vertices.max(1) as f64;
+            // Normalized against the |V| of the version this query
+            // pinned at admission, not the engine's current count —
+            // mutations applied mid-flight must not skew the rate.
+            rt.stats.access_rate = touched as f64 / rt.n_vertices.max(1) as f64;
             rt.stats.finished_at = clock;
             metrics.queries_completed += 1;
             metrics.latency.record(rt.stats.latency());
@@ -2660,6 +2783,10 @@ impl<A: QueryApp> Engine<A> {
         });
         ft.stop();
 
+        // Queries that just reported released their epoch pins: retire
+        // everything below the new oldest pin (compacts the overlay once
+        // every pre-mutation query drains).
+        self.refresh_epoch_pin();
         self.fold_busy_into_metrics(&compute_busy, &exchange_busy, &fold_busy);
         self.metrics.wall_time += wall_start.elapsed().as_secs_f64();
         true
@@ -2913,7 +3040,8 @@ impl<A: QueryApp> Engine<A> {
             let mut rt = self.inflight.remove(i);
             let touched = rt.touched();
             rt.stats.touched = touched;
-            rt.stats.access_rate = touched as f64 / self.n_vertices.max(1) as f64;
+            // Pinned-version |V|, as on the barrier path.
+            rt.stats.access_rate = touched as f64 / rt.n_vertices.max(1) as f64;
             rt.stats.finished_at = self.clock;
             self.metrics.queries_completed += 1;
             self.metrics.latency.record(rt.stats.latency());
@@ -2923,6 +3051,10 @@ impl<A: QueryApp> Engine<A> {
 
         drop(pipe_queries);
         self.sweep_flat_staging();
+        // Extracted queries moved their pins into `pending_reports`
+        // (counted by refresh), so retirement here is exactly as
+        // conservative as the barrier path's.
+        self.refresh_epoch_pin();
         self.metrics.overlap_time +=
             overlap_seconds(&shared.intervals.into_inner().expect("no poisoned batch"));
         self.fold_busy_into_metrics(&compute_busy, &exchange_busy, &fold_busy);

@@ -74,6 +74,21 @@
 //! p50/p99/p999 latency and queueing sketches plus an `admit_deferrals`
 //! engagement counter.
 //!
+//! Since streaming mutations ([`Engine::try_mutate`]), the graph is no
+//! longer frozen at load: mutation batches
+//! ([`crate::graph::MutationBatch`] — edge/vertex insert/delete) queue on
+//! the same simulated clock as submissions and are applied **only at
+//! super-round boundaries**, each applied batch bumping a monotonically
+//! increasing epoch ([`crate::graph::VersionedGraph`]). A query pins the
+//! epoch current at its *admission* (stamped into `QueryStats::epoch`)
+//! and reads that snapshot for its whole lifetime through per-vertex
+//! delta overlays on the base CSR; once every in-flight and pending
+//! report has retired past an epoch, the engine tells the app to compact
+//! overlays into the base (`QueryApp::retire_epochs`, surfaced as the
+//! `epochs_applied` / `oldest_pinned_epoch` / `delta_bytes_peak` gauges
+//! in `EngineMetrics`). Apps opt in via `QueryApp::supports_mutations`;
+//! `try_mutate` on an immutable app is an error, never a silent drop.
+//!
 //! The determinism argument is uniform: stealing moves jobs between
 //! executors, splitting (either granularity) re-groups a fixed serial
 //! order, pipelining only *re-times* each query's private
@@ -88,7 +103,16 @@
 //! count, scheduler, split, edge-split, pipeline, layout and admission
 //! setting produces bit-identical per-query results (see
 //! `rust/tests/determinism.rs` and the randomized matrix in
-//! `rust/tests/fuzz_determinism.rs`).
+//! `rust/tests/fuzz_determinism.rs`). The mutation axis extends rather
+//! than weakens this: boundary-only application plus admission-time
+//! pinning make every query's output a pure function of
+//! (pinned version, query), bit-identical to a serial replay on the
+//! `Graph::apply`-folded snapshot of its pinned epoch. Axes that cannot
+//! re-time admission (threads, scheduler, layout, splits) must also
+//! agree bit-for-bit on the `(epoch, out)` record stream; axes that
+//! legitimately may (pipelining, adaptive admission) are held to the
+//! per-run snapshot oracle. Both gates run in the same two suites, plus
+//! the mutation-schedule fuzzer's randomized interleavings.
 
 mod arena;
 mod engine;

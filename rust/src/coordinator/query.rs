@@ -200,9 +200,14 @@ pub(crate) struct WorkerShard<A: QueryApp> {
 }
 
 impl<A: QueryApp> WorkerShard<A> {
-    fn new(workers: usize, layout: Layout) -> Self {
+    /// `n_vertices` is the vertex-slot count of the graph version this
+    /// query reads (the epoch pinned at admission under streaming
+    /// mutations): the flat layout pre-sizes its handle table to the
+    /// worker's share of that id space, so mid-flight epoch bumps never
+    /// reshape a live table.
+    fn new(workers: usize, layout: Layout, n_vertices: usize) -> Self {
         Self {
-            store: VStore::new(layout, workers),
+            store: VStore::with_vertex_hint(layout, workers, n_vertices),
             active: Vec::new(),
             staged: (0..workers).map(|_| StagedBuf::new(layout)).collect(),
             agg_round: A::Agg::default(),
@@ -771,10 +776,18 @@ pub(crate) struct QueryRt<A: QueryApp> {
     /// adaptive admission planner counts heavy in-flight queries against
     /// the reserved capacity slice.
     pub heavy: bool,
+    /// Graph epoch pinned at admission: the version this query reads for
+    /// its whole lifetime (0 for immutable-graph apps).
+    pub epoch: u64,
+    /// Vertex-slot count of the pinned version — the `|V|` this query's
+    /// access rate normalizes against (the engine's current count may
+    /// have moved on by the time the query reports).
+    pub n_vertices: usize,
     pub stats: QueryStats,
 }
 
 impl<A: QueryApp> QueryRt<A> {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: QueryId,
         query: A::Query,
@@ -783,6 +796,8 @@ impl<A: QueryApp> QueryRt<A> {
         arrived_at: f64,
         submitted_at: f64,
         heavy: bool,
+        epoch: u64,
+        n_vertices: usize,
     ) -> Self {
         Self {
             id,
@@ -790,15 +805,18 @@ impl<A: QueryApp> QueryRt<A> {
             step: 0,
             phase: Phase::Running,
             shards: (0..workers)
-                .map(|_| WorkerShard::new(workers, layout))
+                .map(|_| WorkerShard::new(workers, layout, n_vertices))
                 .collect(),
             agg_prev: A::Agg::default(),
             terminated: false,
             heavy,
+            epoch,
+            n_vertices,
             stats: QueryStats {
                 qid: id,
                 arrived_at,
                 submitted_at,
+                epoch,
                 ..Default::default()
             },
         }

@@ -1,8 +1,12 @@
 //! Graph substrate: CSR storage with optional in-edges and edge weights,
-//! plus loaders and synthetic dataset generators.
+//! plus loaders, synthetic dataset generators, and epoch-versioned delta
+//! overlays for streaming mutations (`versioned`).
 
 pub mod gen;
 pub mod io;
+pub mod versioned;
+
+pub use versioned::{Epoch, Mutation, MutationApplied, MutationBatch, VersionedGraph};
 
 use crate::util::FxHashMap;
 

@@ -1,0 +1,719 @@
+//! Streaming graph mutations under an epoch/snapshot scheme.
+//!
+//! The base [`Graph`] stays an immutable CSR; a [`VersionedGraph`] layers
+//! per-vertex **delta overlays** on top of it, stamped with the epoch at
+//! which each change became visible. Every applied [`MutationBatch`] bumps
+//! the epoch by one, so the overlay encodes *every* version between the
+//! compacted base and the current epoch at once:
+//!
+//! - a base arc is visible at epoch `e` unless a tombstone with
+//!   `deleted_at <= e` covers it;
+//! - a delta arc is visible at `e` iff `added_at <= e < deleted_at`;
+//! - added vertices extend the id space (`num_vertices_at` is monotone in
+//!   `e`); deleted vertices **keep their id slot** (id stability for
+//!   handle tables) with every incident arc tombstoned, so they simply
+//!   read as isolated from their deletion epoch on.
+//!
+//! Readers pick an epoch once ([`VersionedGraph::out_at`],
+//! [`VersionedGraph::in_at`]) and observe a consistent version for as long
+//! as they keep asking for it — this is what lets the engine pin the epoch
+//! current at admission for each query's whole lifetime. When the oldest
+//! pinned epoch catches up with the current one,
+//! [`VersionedGraph::retire`] compacts: the overlay is folded into a fresh
+//! base CSR and cleared. Compaction is deliberately all-or-nothing
+//! (partial compaction would re-index base-slice tombstones for no
+//! observable benefit; the engine retires epochs quickly in practice).
+//!
+//! [`Graph::apply`] is the *serial oracle's* primitive: it folds one batch
+//! into a brand-new materialized [`Graph`], so a test can replay a
+//! mutation schedule snapshot-by-snapshot (`g.apply(b1).apply(b2)...`)
+//! without going anywhere near the overlay machinery, then assert the
+//! overlay read the same world ([`VersionedGraph::snapshot_at`] agrees
+//! with the `apply` fold by construction — unit-tested below).
+
+use std::borrow::Cow;
+
+use crate::util::FxHashMap;
+
+use super::{Graph, GraphBuilder, VertexId};
+
+/// Graph version number. Epoch 0 is the loaded base; each applied
+/// [`MutationBatch`] bumps it by one.
+pub type Epoch = u64;
+
+/// Sentinel for "never deleted".
+const NEVER: Epoch = Epoch::MAX;
+
+/// One edge/vertex insert or delete.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Mutation {
+    /// Insert the arc `src -> dst` (both endpoints must exist and be live).
+    /// `w` is the edge weight for weighted graphs (defaults to 1.0).
+    AddEdge {
+        src: VertexId,
+        dst: VertexId,
+        w: Option<f32>,
+    },
+    /// Delete **one** visible occurrence of the arc `src -> dst`. A
+    /// documented silent no-op when no such arc is visible (so schedules
+    /// replay identically whether or not an earlier delete already won).
+    DeleteEdge { src: VertexId, dst: VertexId },
+    /// Append a fresh isolated vertex at the next id.
+    AddVertex,
+    /// Delete vertex `v`: every incident arc is tombstoned and the id slot
+    /// is retained (reads as isolated from this epoch on).
+    DeleteVertex { v: VertexId },
+}
+
+/// An ordered batch of mutations applied atomically as one epoch bump.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MutationBatch {
+    pub muts: Vec<Mutation>,
+}
+
+impl MutationBatch {
+    /// Empty batch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue an unweighted edge insert.
+    pub fn add_edge(&mut self, src: VertexId, dst: VertexId) -> &mut Self {
+        self.muts.push(Mutation::AddEdge { src, dst, w: None });
+        self
+    }
+
+    /// Queue a weighted edge insert.
+    pub fn add_wedge(&mut self, src: VertexId, dst: VertexId, w: f32) -> &mut Self {
+        self.muts.push(Mutation::AddEdge {
+            src,
+            dst,
+            w: Some(w),
+        });
+        self
+    }
+
+    /// Queue an edge delete.
+    pub fn delete_edge(&mut self, src: VertexId, dst: VertexId) -> &mut Self {
+        self.muts.push(Mutation::DeleteEdge { src, dst });
+        self
+    }
+
+    /// Queue a vertex insert.
+    pub fn add_vertex(&mut self) -> &mut Self {
+        self.muts.push(Mutation::AddVertex);
+        self
+    }
+
+    /// Queue a vertex delete.
+    pub fn delete_vertex(&mut self, v: VertexId) -> &mut Self {
+        self.muts.push(Mutation::DeleteVertex { v });
+        self
+    }
+
+    /// Number of queued mutations.
+    pub fn len(&self) -> usize {
+        self.muts.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.muts.is_empty()
+    }
+}
+
+/// What one applied batch did — the receipt the engine folds into its
+/// epoch gauges.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MutationApplied {
+    /// The epoch the batch created (current epoch after the apply).
+    pub epoch: Epoch,
+    /// Overlay footprint estimate right after the apply, **before** any
+    /// compaction — the engine maxes this into `delta_bytes_peak`.
+    pub delta_bytes: usize,
+    /// Vertex-slot count at the new epoch.
+    pub n_vertices: usize,
+}
+
+/// Per-vertex delta overlay: arcs added since the base, and tombstones
+/// over the base CSR slice.
+#[derive(Debug, Clone, Default)]
+struct VertexDelta {
+    /// `(other, weight, added_at, deleted_at)` — visible at `e` iff
+    /// `added_at <= e < deleted_at`.
+    adds: Vec<(VertexId, f32, Epoch, Epoch)>,
+    /// `(index into the base CSR slice, deleted_at)` — the base arc at
+    /// that index is hidden from `deleted_at` on. Tombstones never
+    /// resurrect, so at most one per index.
+    tombs: Vec<(u32, Epoch)>,
+}
+
+impl VertexDelta {
+    fn bytes(&self) -> usize {
+        48 + self.adds.len() * 24 + self.tombs.len() * 12
+    }
+}
+
+/// A base CSR plus epoch-stamped delta overlays: every version between
+/// the compacted base epoch and the current epoch is readable at once.
+/// See the module docs for the visibility rules.
+#[derive(Debug, Clone)]
+pub struct VersionedGraph {
+    base: Graph,
+    /// Epoch at which `base` is exact (all older overlays compacted away).
+    base_epoch: Epoch,
+    /// Latest applied epoch.
+    epoch: Epoch,
+    /// `base.num_vertices()` — ids below this index the base CSR.
+    base_n: usize,
+    /// Epoch stamp per overlay-added vertex (ids `base_n..`), ascending.
+    vertex_added_at: Vec<Epoch>,
+    /// `deleted_at` per id slot (`NEVER` while live). Indexed by id.
+    vertex_deleted_at: Vec<Epoch>,
+    out_delta: FxHashMap<VertexId, VertexDelta>,
+    in_delta: FxHashMap<VertexId, VertexDelta>,
+}
+
+impl VersionedGraph {
+    /// Wrap `base` as epoch `0`. Materializes the base in-adjacency
+    /// (vertex deletes expand through it, and [`VersionedGraph::in_at`]
+    /// mirrors the overlay over it).
+    pub fn new(mut base: Graph) -> Self {
+        base.ensure_in_edges();
+        let base_n = base.num_vertices();
+        Self {
+            base,
+            base_epoch: 0,
+            epoch: 0,
+            base_n,
+            vertex_added_at: Vec::new(),
+            vertex_deleted_at: vec![NEVER; base_n],
+            out_delta: FxHashMap::default(),
+            in_delta: FxHashMap::default(),
+        }
+    }
+
+    /// Latest applied epoch.
+    pub fn epoch(&self) -> Epoch {
+        self.epoch
+    }
+
+    /// Epoch at which the compacted base is exact.
+    pub fn base_epoch(&self) -> Epoch {
+        self.base_epoch
+    }
+
+    /// The compacted base CSR (exact at [`VersionedGraph::base_epoch`]).
+    pub fn base(&self) -> &Graph {
+        &self.base
+    }
+
+    /// Vertex-slot count at epoch `e` (deleted vertices keep their slot).
+    pub fn num_vertices_at(&self, e: Epoch) -> usize {
+        self.base_n + self.vertex_added_at.partition_point(|&a| a <= e)
+    }
+
+    /// Vertex-slot count at the current epoch.
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices_at(self.epoch)
+    }
+
+    /// True if vertex slot `v` exists and is live at epoch `e`.
+    pub fn is_live_at(&self, v: VertexId, e: Epoch) -> bool {
+        (v as usize) < self.num_vertices_at(e) && self.vertex_deleted_at[v as usize] > e
+    }
+
+    /// Overlay footprint estimate in bytes (zero right after compaction).
+    pub fn delta_bytes(&self) -> usize {
+        let mut b = self.vertex_added_at.len() * 16;
+        for d in self.out_delta.values().chain(self.in_delta.values()) {
+            b += d.bytes();
+        }
+        b
+    }
+
+    fn base_out(&self, v: VertexId) -> &[VertexId] {
+        if (v as usize) < self.base_n {
+            self.base.out(v)
+        } else {
+            &[]
+        }
+    }
+
+    fn base_in(&self, v: VertexId) -> &[VertexId] {
+        if (v as usize) < self.base_n {
+            self.base.inn(v)
+        } else {
+            &[]
+        }
+    }
+
+    fn neighbors_at<'a>(
+        base: &'a [VertexId],
+        delta: Option<&VertexDelta>,
+        dead: bool,
+        e: Epoch,
+    ) -> Cow<'a, [VertexId]> {
+        if dead {
+            return Cow::Borrowed(&[]);
+        }
+        let Some(d) = delta else {
+            // Fast path: untouched vertex borrows the base CSR slice.
+            return Cow::Borrowed(base);
+        };
+        let mut v: Vec<VertexId> = Vec::with_capacity(base.len() + d.adds.len());
+        for (idx, &u) in base.iter().enumerate() {
+            let hidden = d
+                .tombs
+                .iter()
+                .any(|&(ti, at)| ti as usize == idx && at <= e);
+            if !hidden {
+                v.push(u);
+            }
+        }
+        for &(u, _, added, deleted) in &d.adds {
+            if added <= e && deleted > e {
+                v.push(u);
+            }
+        }
+        Cow::Owned(v)
+    }
+
+    /// Out-neighbors of `v` at epoch `e`. Untouched vertices borrow the
+    /// base CSR slice directly; touched ones assemble the visible list
+    /// (base order first, then delta-insertion order — the order
+    /// [`VersionedGraph::snapshot_at`] also emits, so snapshot CSRs and
+    /// overlay reads iterate identically).
+    pub fn out_at(&self, v: VertexId, e: Epoch) -> Cow<'_, [VertexId]> {
+        debug_assert!(e >= self.base_epoch, "epoch {e} predates compacted base");
+        if (v as usize) >= self.num_vertices_at(e) {
+            return Cow::Borrowed(&[]);
+        }
+        let dead = self.vertex_deleted_at[v as usize] <= e;
+        Self::neighbors_at(self.base_out(v), self.out_delta.get(&v), dead, e)
+    }
+
+    /// In-neighbors of `v` at epoch `e` (mirror of
+    /// [`VersionedGraph::out_at`] over the transposed base).
+    pub fn in_at(&self, v: VertexId, e: Epoch) -> Cow<'_, [VertexId]> {
+        debug_assert!(e >= self.base_epoch, "epoch {e} predates compacted base");
+        if (v as usize) >= self.num_vertices_at(e) {
+            return Cow::Borrowed(&[]);
+        }
+        let dead = self.vertex_deleted_at[v as usize] <= e;
+        Self::neighbors_at(self.base_in(v), self.in_delta.get(&v), dead, e)
+    }
+
+    /// Visible out-arcs of `v` at `e` with weights (for snapshot builds).
+    fn out_edges_at(&self, v: VertexId, e: Epoch) -> Vec<(VertexId, f32)> {
+        if (v as usize) >= self.num_vertices_at(e) || self.vertex_deleted_at[v as usize] <= e {
+            return Vec::new();
+        }
+        let base = self.base_out(v);
+        let weighted = self.base.weighted();
+        let d = self.out_delta.get(&v);
+        let mut out = Vec::with_capacity(base.len());
+        for (idx, &u) in base.iter().enumerate() {
+            let hidden = d.is_some_and(|d| {
+                d.tombs
+                    .iter()
+                    .any(|&(ti, at)| ti as usize == idx && at <= e)
+            });
+            if !hidden {
+                let w = if weighted { self.base.out_w(v)[idx] } else { 1.0 };
+                out.push((u, w));
+            }
+        }
+        if let Some(d) = d {
+            for &(u, w, added, deleted) in &d.adds {
+                if added <= e && deleted > e {
+                    out.push((u, w));
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialize the graph visible at epoch `e` as a plain CSR. Per-
+    /// vertex arc order matches [`VersionedGraph::out_at`] exactly.
+    pub fn snapshot_at(&self, e: Epoch) -> Graph {
+        let n = self.num_vertices_at(e);
+        let weighted = self.base.weighted();
+        let mut b = GraphBuilder::new(n);
+        for v in 0..n as VertexId {
+            for (u, w) in self.out_edges_at(v, e) {
+                if weighted {
+                    b.wedge(v, u, w);
+                } else {
+                    b.edge(v, u);
+                }
+            }
+        }
+        b.build()
+    }
+
+    /// Tombstone one visible `src -> dst` occurrence on the `out` side and
+    /// one on the `in` side (or every occurrence when `all` is set).
+    /// Returns true if anything was deleted.
+    fn delete_arc(&mut self, src: VertexId, dst: VertexId, e: Epoch, all: bool) -> bool {
+        let mut any = false;
+        // Out side: base slice first, then delta adds.
+        let mut remaining = if all { usize::MAX } else { 1 };
+        let base_hits: Vec<u32> = self
+            .base_out(src)
+            .iter()
+            .enumerate()
+            .filter(|&(_, &u)| u == dst)
+            .map(|(i, _)| i as u32)
+            .collect();
+        let d = self.out_delta.entry(src).or_default();
+        for idx in base_hits {
+            if remaining == 0 {
+                break;
+            }
+            if !d.tombs.iter().any(|&(ti, _)| ti == idx) {
+                d.tombs.push((idx, e));
+                remaining -= 1;
+                any = true;
+            }
+        }
+        for a in d.adds.iter_mut() {
+            if remaining == 0 {
+                break;
+            }
+            if a.0 == dst && a.2 <= e && a.3 == NEVER {
+                a.3 = e;
+                remaining -= 1;
+                any = true;
+            }
+        }
+        if d.adds.is_empty() && d.tombs.is_empty() {
+            self.out_delta.remove(&src);
+        }
+        // In side: mirror on dst's transposed structures.
+        let mut remaining = if all { usize::MAX } else { 1 };
+        let base_hits: Vec<u32> = self
+            .base_in(dst)
+            .iter()
+            .enumerate()
+            .filter(|&(_, &u)| u == src)
+            .map(|(i, _)| i as u32)
+            .collect();
+        let d = self.in_delta.entry(dst).or_default();
+        for idx in base_hits {
+            if remaining == 0 {
+                break;
+            }
+            if !d.tombs.iter().any(|&(ti, _)| ti == idx) {
+                d.tombs.push((idx, e));
+                remaining -= 1;
+            }
+        }
+        for a in d.adds.iter_mut() {
+            if remaining == 0 {
+                break;
+            }
+            if a.0 == src && a.2 <= e && a.3 == NEVER {
+                a.3 = e;
+                remaining -= 1;
+            }
+        }
+        if d.adds.is_empty() && d.tombs.is_empty() {
+            self.in_delta.remove(&dst);
+        }
+        any
+    }
+
+    /// Apply one batch, bumping the epoch by one. Every mutation in the
+    /// batch lands at the *same* new epoch (the batch is atomic: no
+    /// reader can observe a partially applied batch).
+    pub fn apply(&mut self, batch: &MutationBatch) -> MutationApplied {
+        let e = self.epoch + 1;
+        for m in &batch.muts {
+            match *m {
+                Mutation::AddEdge { src, dst, w } => {
+                    assert!(
+                        self.is_live_at(src, e) && self.is_live_at(dst, e),
+                        "AddEdge({src}, {dst}) references a missing or deleted vertex"
+                    );
+                    let w = w.unwrap_or(1.0);
+                    self.out_delta
+                        .entry(src)
+                        .or_default()
+                        .adds
+                        .push((dst, w, e, NEVER));
+                    self.in_delta
+                        .entry(dst)
+                        .or_default()
+                        .adds
+                        .push((src, w, e, NEVER));
+                }
+                Mutation::DeleteEdge { src, dst } => {
+                    // Silent no-op when absent (documented on `Mutation`).
+                    self.delete_arc(src, dst, e, false);
+                }
+                Mutation::AddVertex => {
+                    self.vertex_added_at.push(e);
+                    self.vertex_deleted_at.push(NEVER);
+                }
+                Mutation::DeleteVertex { v } => {
+                    assert!(
+                        self.is_live_at(v, e),
+                        "DeleteVertex({v}) references a missing or deleted vertex"
+                    );
+                    let ins = self.in_at(v, e).into_owned();
+                    for u in ins {
+                        self.delete_arc(u, v, e, true);
+                    }
+                    let outs = self.out_at(v, e).into_owned();
+                    for w in outs {
+                        self.delete_arc(v, w, e, true);
+                    }
+                    self.vertex_deleted_at[v as usize] = e;
+                }
+            }
+        }
+        self.epoch = e;
+        MutationApplied {
+            epoch: e,
+            delta_bytes: self.delta_bytes(),
+            n_vertices: self.num_vertices_at(e),
+        }
+    }
+
+    /// Retire every epoch below `oldest_pinned`. Compaction is
+    /// all-or-nothing: only when no pinned reader is behind the current
+    /// epoch (`oldest_pinned >= epoch`) is the overlay folded into a
+    /// fresh base CSR and cleared — otherwise this is a no-op (partial
+    /// compaction would re-index base-slice tombstones for no observable
+    /// benefit).
+    pub fn retire(&mut self, oldest_pinned: Epoch) {
+        if oldest_pinned < self.epoch || self.base_epoch == self.epoch {
+            return;
+        }
+        if self.out_delta.is_empty() && self.in_delta.is_empty() && self.vertex_added_at.is_empty()
+        {
+            self.base_epoch = self.epoch;
+            return;
+        }
+        let mut base = self.snapshot_at(self.epoch);
+        base.ensure_in_edges();
+        self.base_n = base.num_vertices();
+        self.base = base;
+        self.base_epoch = self.epoch;
+        self.vertex_added_at.clear();
+        // Deleted slots stay deleted across compaction (their arcs are
+        // already gone from the new base; the stamp keeps `is_live_at`
+        // honest so later mutations can't target them).
+        for d in self.vertex_deleted_at.iter_mut() {
+            if *d != NEVER {
+                *d = self.base_epoch;
+            }
+        }
+        self.vertex_deleted_at.resize(self.base_n, NEVER);
+        self.out_delta.clear();
+        self.in_delta.clear();
+    }
+}
+
+impl Graph {
+    /// Fold one mutation batch into a brand-new materialized CSR — the
+    /// serial replay oracle's primitive. `g.apply(b1).apply(b2)` walks a
+    /// mutation schedule snapshot-by-snapshot without any overlay
+    /// machinery; [`VersionedGraph::snapshot_at`] agrees with this fold
+    /// arc-for-arc (unit-tested in `graph::versioned`).
+    pub fn apply(&self, batch: &MutationBatch) -> Graph {
+        let mut vg = VersionedGraph::new(self.clone());
+        let applied = vg.apply(batch);
+        vg.snapshot_at(applied.epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3
+        let mut b = GraphBuilder::new(4);
+        b.edge(0, 1);
+        b.edge(0, 2);
+        b.edge(1, 3);
+        b.edge(2, 3);
+        b.build()
+    }
+
+    fn ids(c: Cow<'_, [VertexId]>) -> Vec<VertexId> {
+        c.into_owned()
+    }
+
+    #[test]
+    fn epoch_zero_reads_the_base() {
+        let vg = VersionedGraph::new(diamond());
+        assert_eq!(vg.epoch(), 0);
+        assert_eq!(vg.num_vertices_at(0), 4);
+        assert_eq!(ids(vg.out_at(0, 0)), vec![1, 2]);
+        assert_eq!(ids(vg.in_at(3, 0)), vec![1, 2]);
+        // Untouched vertices take the borrowed fast path.
+        assert!(matches!(vg.out_at(0, 0), Cow::Borrowed(_)));
+    }
+
+    #[test]
+    fn add_and_delete_are_visible_only_from_their_epoch() {
+        let mut vg = VersionedGraph::new(diamond());
+        let mut b = MutationBatch::new();
+        b.add_edge(3, 0).delete_edge(0, 1);
+        let applied = vg.apply(&b);
+        assert_eq!(applied.epoch, 1);
+        assert!(applied.delta_bytes > 0);
+        // Epoch 0 still reads the original world.
+        assert_eq!(ids(vg.out_at(0, 0)), vec![1, 2]);
+        assert_eq!(ids(vg.out_at(3, 0)), Vec::<VertexId>::new());
+        // Epoch 1 sees both changes.
+        assert_eq!(ids(vg.out_at(0, 1)), vec![2]);
+        assert_eq!(ids(vg.out_at(3, 1)), vec![0]);
+        assert_eq!(ids(vg.in_at(1, 1)), Vec::<VertexId>::new());
+        assert_eq!(ids(vg.in_at(0, 1)), vec![3]);
+    }
+
+    #[test]
+    fn delete_edge_removes_one_occurrence_and_missing_is_a_noop() {
+        // Parallel arcs: 0 -> 1 twice.
+        let mut b = GraphBuilder::new(2);
+        b.edge(0, 1);
+        b.edge(0, 1);
+        let mut vg = VersionedGraph::new(b.build());
+        let mut del = MutationBatch::new();
+        del.delete_edge(0, 1);
+        vg.apply(&del);
+        assert_eq!(ids(vg.out_at(0, 1)), vec![1]);
+        assert_eq!(ids(vg.in_at(1, 1)), vec![0]);
+        vg.apply(&del);
+        assert_eq!(ids(vg.out_at(0, 2)), Vec::<VertexId>::new());
+        // A third delete of the now-absent arc is a silent no-op.
+        vg.apply(&del);
+        assert_eq!(vg.epoch(), 3);
+        assert_eq!(ids(vg.out_at(0, 3)), Vec::<VertexId>::new());
+    }
+
+    #[test]
+    fn add_vertex_extends_the_id_space_monotonically() {
+        let mut vg = VersionedGraph::new(diamond());
+        let mut b = MutationBatch::new();
+        b.add_vertex().add_edge(4, 0);
+        vg.apply(&b);
+        assert_eq!(vg.num_vertices_at(0), 4);
+        assert_eq!(vg.num_vertices_at(1), 5);
+        assert_eq!(ids(vg.out_at(4, 0)), Vec::<VertexId>::new());
+        assert_eq!(ids(vg.out_at(4, 1)), vec![0]);
+        assert_eq!(ids(vg.in_at(0, 1)), vec![4]);
+    }
+
+    #[test]
+    fn delete_vertex_keeps_the_slot_and_drops_every_incident_arc() {
+        let mut vg = VersionedGraph::new(diamond());
+        let mut b = MutationBatch::new();
+        b.delete_vertex(1);
+        vg.apply(&b);
+        // Slot count is unchanged; the old world is intact at epoch 0.
+        assert_eq!(vg.num_vertices_at(1), 4);
+        assert_eq!(ids(vg.out_at(0, 0)), vec![1, 2]);
+        assert_eq!(ids(vg.in_at(3, 0)), vec![1, 2]);
+        // At epoch 1 vertex 1 is isolated and unreferenced.
+        assert_eq!(ids(vg.out_at(1, 1)), Vec::<VertexId>::new());
+        assert_eq!(ids(vg.in_at(1, 1)), Vec::<VertexId>::new());
+        assert_eq!(ids(vg.out_at(0, 1)), vec![2]);
+        assert_eq!(ids(vg.in_at(3, 1)), vec![2]);
+        assert!(!vg.is_live_at(1, 1));
+        assert!(vg.is_live_at(1, 0));
+    }
+
+    #[test]
+    fn snapshot_agrees_with_graph_apply_fold() {
+        let g = diamond();
+        let mut b1 = MutationBatch::new();
+        b1.add_vertex().add_edge(4, 3).delete_edge(0, 2);
+        let mut b2 = MutationBatch::new();
+        b2.delete_vertex(1).add_edge(3, 4);
+        // Overlay path.
+        let mut vg = VersionedGraph::new(g.clone());
+        vg.apply(&b1);
+        vg.apply(&b2);
+        // Oracle fold path.
+        let folded = g.apply(&b1).apply(&b2);
+        let snap = vg.snapshot_at(2);
+        assert_eq!(snap.num_vertices(), folded.num_vertices());
+        for v in 0..snap.num_vertices() as VertexId {
+            assert_eq!(snap.out(v), folded.out(v), "vertex {v} arcs diverge");
+            // And the overlay reads the same list without materializing.
+            assert_eq!(ids(vg.out_at(v, 2)), snap.out(v).to_vec());
+        }
+    }
+
+    #[test]
+    fn retire_compacts_only_when_nothing_older_is_pinned() {
+        let mut vg = VersionedGraph::new(diamond());
+        let mut b = MutationBatch::new();
+        b.add_edge(3, 0);
+        vg.apply(&b);
+        let before = vg.snapshot_at(1);
+        // A reader still pins epoch 0: no compaction.
+        vg.retire(0);
+        assert_eq!(vg.base_epoch(), 0);
+        assert!(vg.delta_bytes() > 0);
+        // Oldest pin catches up: the overlay folds into the base.
+        vg.retire(1);
+        assert_eq!(vg.base_epoch(), 1);
+        assert_eq!(vg.delta_bytes(), 0);
+        let after = vg.snapshot_at(1);
+        for v in 0..after.num_vertices() as VertexId {
+            assert_eq!(after.out(v), before.out(v));
+            // Post-compaction reads borrow the new base directly.
+            assert!(matches!(vg.out_at(v, 1), Cow::Borrowed(_)));
+        }
+    }
+
+    #[test]
+    fn retire_preserves_deleted_slots() {
+        let mut vg = VersionedGraph::new(diamond());
+        let mut b = MutationBatch::new();
+        b.delete_vertex(2);
+        vg.apply(&b);
+        vg.retire(1);
+        assert_eq!(vg.num_vertices_at(1), 4);
+        assert!(!vg.is_live_at(2, 1));
+        assert_eq!(ids(vg.out_at(0, 1)), vec![1]);
+        // Mutating through a retired-but-deleted slot still traps.
+        let mut bad = MutationBatch::new();
+        bad.add_edge(0, 2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| vg.apply(&bad)));
+        assert!(r.is_err(), "AddEdge to a deleted slot must panic");
+    }
+
+    #[test]
+    fn weighted_arcs_survive_the_overlay_and_snapshot() {
+        let mut b = GraphBuilder::new(3);
+        b.wedge(0, 1, 2.5);
+        b.wedge(0, 2, 1.5);
+        let mut vg = VersionedGraph::new(b.build());
+        let mut m = MutationBatch::new();
+        m.add_wedge(1, 2, 4.0).delete_edge(0, 2);
+        vg.apply(&m);
+        let snap = vg.snapshot_at(1);
+        assert!(snap.weighted());
+        assert_eq!(snap.out(0), &[1]);
+        assert_eq!(snap.out_w(0), &[2.5]);
+        assert_eq!(snap.out(1), &[2]);
+        assert_eq!(snap.out_w(1), &[4.0]);
+    }
+
+    #[test]
+    fn graph_apply_does_not_disturb_the_original() {
+        let g = diamond();
+        let mut b = MutationBatch::new();
+        b.delete_edge(0, 1);
+        let g2 = g.apply(&b);
+        assert_eq!(g.out(0), &[1, 2]);
+        assert_eq!(g2.out(0), &[2]);
+    }
+}

@@ -59,6 +59,21 @@
 //!   and streaming p50/p99/p999 latency + queueing sketches in
 //!   `EngineMetrics` — the planner reads deterministic inputs only, so
 //!   per-query outputs stay bit-identical across the admission axis.
+//!   Finally the graph itself is no longer frozen at load: `try_mutate`
+//!   queues [`graph::MutationBatch`]es (edge/vertex insert/delete) that
+//!   the engine applies atomically at the next super-round boundary,
+//!   bumping a monotonically increasing **epoch**. Each admitted query
+//!   pins the epoch current at its admission and reads that consistent
+//!   snapshot for its whole lifetime through per-vertex delta overlays
+//!   on the base CSR ([`graph::VersionedGraph`]); overlays compact into
+//!   the base once the oldest pinned epoch retires past them. The
+//!   determinism contract extends to the mutation axis: a query's output
+//!   is a pure function of (pinned version, query) — bit-identical to a
+//!   serial replay on the [`graph::Graph::apply`]-folded snapshot of its
+//!   pinned epoch — for every thread count, scheduler, layout, pipeline
+//!   and admission setting, pinned by the snapshot-replay oracle in
+//!   `rust/tests/determinism.rs` and the mutation-schedule fuzzer in
+//!   `rust/tests/fuzz_determinism.rs`.
 //! * [`vertex`] — the `QueryApp` programming interface (paper §4); app and
 //!   associated types carry the `Send`/`Sync` bounds the threaded shards
 //!   require.

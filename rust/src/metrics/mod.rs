@@ -33,6 +33,9 @@ pub struct QueryStats {
     pub finished_at: f64,
     /// True if the query hit the engine's superstep cap.
     pub truncated: bool,
+    /// Graph epoch pinned at admission: the version this query read for
+    /// its whole lifetime (0 for immutable-graph apps — the loaded base).
+    pub epoch: u64,
 }
 
 impl QueryStats {
@@ -291,6 +294,22 @@ pub struct EngineMetrics {
     /// times). Zero under `Admit::Static` — tests and the serving bench
     /// read this to prove the planner actually engaged.
     pub admit_deferrals: u64,
+    /// Mutation batches applied (one epoch bump each). Zero for
+    /// immutable-graph apps — tests and the versioned bench read this to
+    /// prove the delta-overlay path actually engaged. Engine-lifetime
+    /// (epochs never rewind), preserved by [`EngineMetrics::reset`].
+    pub epochs_applied: u64,
+    /// Oldest epoch still pinned by an in-flight query (equals the
+    /// current epoch when nothing is in flight — everything older has
+    /// retired and the overlay may compact). Engine-lifetime, preserved
+    /// by [`EngineMetrics::reset`].
+    pub oldest_pinned_epoch: u64,
+    /// High-water mark of the delta-overlay footprint in bytes, sampled
+    /// right after each mutation batch applies (before any compaction).
+    /// Zero when no mutation ever landed — the fuzzer's engagement
+    /// signal for the overlay path. Engine-lifetime, preserved by
+    /// [`EngineMetrics::reset`].
+    pub delta_bytes_peak: u64,
 }
 
 impl EngineMetrics {
@@ -325,11 +344,17 @@ impl EngineMetrics {
         let peak_inflight = self.peak_inflight;
         let max_edge_task = self.max_edge_task;
         let staging_bytes_peak = self.staging_bytes_peak;
+        let epochs_applied = self.epochs_applied;
+        let oldest_pinned_epoch = self.oldest_pinned_epoch;
+        let delta_bytes_peak = self.delta_bytes_peak;
         *self = EngineMetrics {
             sim_time,
             peak_inflight,
             max_edge_task,
             staging_bytes_peak,
+            epochs_applied,
+            oldest_pinned_epoch,
+            delta_bytes_peak,
             ..EngineMetrics::default()
         };
     }
@@ -500,6 +525,9 @@ mod tests {
         m.peak_inflight = 6;
         m.max_edge_task = 4096;
         m.staging_bytes_peak = 1 << 20;
+        m.epochs_applied = 3;
+        m.oldest_pinned_epoch = 2;
+        m.delta_bytes_peak = 512;
         m.reset();
         assert_eq!(m.steals(), 0);
         assert_eq!(m.jobs_executed(), 0);
@@ -519,6 +547,9 @@ mod tests {
         assert_eq!(m.peak_inflight, 6, "high-water mark preserved");
         assert_eq!(m.max_edge_task, 4096, "high-water mark preserved");
         assert_eq!(m.staging_bytes_peak, 1 << 20, "high-water mark preserved");
+        assert_eq!(m.epochs_applied, 3, "epoch gauge preserved");
+        assert_eq!(m.oldest_pinned_epoch, 2, "epoch gauge preserved");
+        assert_eq!(m.delta_bytes_peak, 512, "high-water mark preserved");
     }
 
     #[test]

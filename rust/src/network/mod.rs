@@ -131,6 +131,79 @@ impl Cluster {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Wire framing
+// ---------------------------------------------------------------------------
+
+/// Maximum frame payload accepted by [`FrameDecoder`]: a corrupt or
+/// hostile length prefix must not make the decoder reserve gigabytes.
+/// Generous enough for any message block the exchange phase emits.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Encode one length-prefixed frame: a `u32` little-endian payload length
+/// followed by the payload itself. This is the on-wire unit a future
+/// socket transport would exchange per (worker, super-round) message
+/// block; the cost model above charges for it via `msg_header_bytes`.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_FRAME_BYTES, "frame too large");
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Try to split one complete frame off the front of `buf`. Returns the
+/// payload and the total number of bytes consumed (header + payload), or
+/// `None` if `buf` does not yet hold a complete frame.
+pub fn decode_frame(buf: &[u8]) -> Option<(&[u8], usize)> {
+    if buf.len() < 4 {
+        return None;
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    assert!(len <= MAX_FRAME_BYTES, "frame length prefix out of range");
+    if buf.len() < 4 + len {
+        return None;
+    }
+    Some((&buf[4..4 + len], 4 + len))
+}
+
+/// Incremental frame reassembler for a stream that arrives in arbitrary
+/// chunks (TCP segments, pipe reads): [`FrameDecoder::push`] bytes as they
+/// arrive, then drain complete frames with [`FrameDecoder::next_frame`].
+/// Partial frames are buffered until their remaining bytes show up.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    /// Empty decoder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append newly received bytes to the reassembly buffer.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame's payload, or `None` if the buffer
+    /// currently ends mid-frame (more bytes are needed).
+    pub fn next_frame(&mut self) -> Option<Vec<u8>> {
+        let (payload, consumed) = {
+            let (p, c) = decode_frame(&self.buf)?;
+            (p.to_vec(), c)
+        };
+        self.buf.drain(..consumed);
+        Some(payload)
+    }
+
+    /// Bytes currently buffered without forming a complete frame.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,5 +291,79 @@ mod tests {
         assert_eq!(Cluster::new(16).machines(), 2);
         assert_eq!(Cluster::new(17).machines(), 3);
         assert_eq!(Cluster::new(120).machines(), 15); // the paper cluster
+    }
+
+    #[test]
+    fn frame_round_trips() {
+        let payload = b"quegel message block".as_slice();
+        let wire = encode_frame(payload);
+        assert_eq!(wire.len(), 4 + payload.len());
+        let (got, consumed) = decode_frame(&wire).expect("complete frame");
+        assert_eq!(got, payload);
+        assert_eq!(consumed, wire.len());
+    }
+
+    #[test]
+    fn empty_payload_frames_are_legal() {
+        // A worker with nothing to say still sends its barrier frame.
+        let wire = encode_frame(&[]);
+        assert_eq!(wire, vec![0, 0, 0, 0]);
+        let (got, consumed) = decode_frame(&wire).expect("complete frame");
+        assert!(got.is_empty());
+        assert_eq!(consumed, 4);
+        let mut dec = FrameDecoder::new();
+        dec.push(&wire);
+        assert_eq!(dec.next_frame(), Some(Vec::new()));
+        assert_eq!(dec.next_frame(), None);
+    }
+
+    #[test]
+    fn decode_frame_waits_for_complete_input() {
+        let wire = encode_frame(b"0123456789");
+        // No prefix, partial prefix, and partial payload are all "not yet".
+        assert!(decode_frame(&[]).is_none());
+        assert!(decode_frame(&wire[..3]).is_none());
+        assert!(decode_frame(&wire[..wire.len() - 1]).is_none());
+        assert!(decode_frame(&wire).is_some());
+    }
+
+    #[test]
+    fn decoder_reassembles_byte_at_a_time_delivery() {
+        // The adversarial TCP segmentation: every byte its own chunk.
+        let frames: [&[u8]; 3] = [b"alpha", b"", b"gamma-delta"];
+        let mut wire = Vec::new();
+        for f in frames {
+            wire.extend_from_slice(&encode_frame(f));
+        }
+        let mut dec = FrameDecoder::new();
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        for &b in &wire {
+            dec.push(&[b]);
+            while let Some(f) = dec.next_frame() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got.len(), 3);
+        for (g, f) in got.iter().zip(frames) {
+            assert_eq!(g.as_slice(), f);
+        }
+        assert_eq!(dec.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn decoder_drains_multiple_frames_from_one_push() {
+        let mut wire = encode_frame(b"one");
+        wire.extend_from_slice(&encode_frame(b"two"));
+        // ... and carries a partial third frame across pushes.
+        let third = encode_frame(b"three");
+        wire.extend_from_slice(&third[..4]);
+        let mut dec = FrameDecoder::new();
+        dec.push(&wire);
+        assert_eq!(dec.next_frame().as_deref(), Some(b"one".as_slice()));
+        assert_eq!(dec.next_frame().as_deref(), Some(b"two".as_slice()));
+        assert_eq!(dec.next_frame(), None, "third frame is incomplete");
+        assert_eq!(dec.pending_bytes(), 4);
+        dec.push(&third[4..]);
+        assert_eq!(dec.next_frame().as_deref(), Some(b"three".as_slice()));
     }
 }

@@ -14,7 +14,7 @@
 //! struct itself — it is query-independent and shared by every in-flight
 //! query, which is exactly the paper's V-data / VQ-data split.
 
-use crate::graph::VertexId;
+use crate::graph::{Epoch, MutationApplied, MutationBatch, VertexId};
 
 /// Query identifier assigned by the engine at submission.
 pub type QueryId = u64;
@@ -143,6 +143,44 @@ pub trait QueryApp: Sync {
     fn msg_bytes(&self) -> usize {
         std::mem::size_of::<Self::Msg>()
     }
+
+    // ------- streaming-mutation hooks (epoch/snapshot scheme) -------
+    //
+    // Apps that own a `VersionedGraph` (instead of a borrowed immutable
+    // `&Graph`) opt into mutations by overriding the four hooks below.
+    // The engine applies queued `MutationBatch`es only at super-round
+    // boundaries, BEFORE admission, so every batch lands between
+    // supersteps: an in-flight query never observes a version change.
+
+    /// Does this app accept streaming mutations? `Engine::try_mutate`
+    /// rejects batches (returning them to the caller) when this is false.
+    /// Apps that override it must also override
+    /// [`QueryApp::apply_mutations`] and [`QueryApp::pin_epoch`].
+    fn supports_mutations(&self) -> bool {
+        false
+    }
+
+    /// Apply one mutation batch, bumping the app's graph to a new epoch,
+    /// and report what happened (the engine folds the receipt into its
+    /// epoch gauges). Called on the coordinator between super-rounds —
+    /// never concurrently with `compute`/`finish`. Apps that return true
+    /// from [`QueryApp::supports_mutations`] must override this; the
+    /// default is unreachable because the engine gates on that flag.
+    fn apply_mutations(&mut self, _batch: &MutationBatch) -> MutationApplied {
+        unreachable!("apply_mutations called on an app without mutation support")
+    }
+
+    /// Stamp the epoch current at admission into each query of the batch,
+    /// so `compute`/`finish` read that pinned version for the query's
+    /// whole lifetime. Called right before [`QueryApp::admit_batch`] (the
+    /// epoch is part of the frozen query content). Default: no-op for
+    /// immutable-graph apps.
+    fn pin_epoch(&self, _batch: &mut [Self::Query], _epoch: Epoch) {}
+
+    /// Every epoch below `oldest` is no longer pinned by any in-flight
+    /// query: the app may compact its overlays (e.g.
+    /// `VersionedGraph::retire`). Called after each super-round.
+    fn retire_epochs(&mut self, _oldest: Epoch) {}
 }
 
 /// Per-vertex, per-query execution context (the paper's `C_vertex` +

@@ -14,7 +14,7 @@ use quegel::apps::terrain::baseline::dijkstra;
 use quegel::apps::terrain::{Dem, TerrainNet, TerrainSssp};
 use quegel::apps::xml::{self, SlcaLevelAligned, SlcaNaive};
 use quegel::coordinator::{Admit, EdgeSplit, Engine, Layout, Pipeline, Sched, Split};
-use quegel::graph::{gen, Graph, VertexId};
+use quegel::graph::{gen, Graph, MutationBatch, VertexId};
 use quegel::network::Cluster;
 use quegel::vertex::{Ctx, QueryApp};
 
@@ -935,4 +935,150 @@ fn terrain_sssp_deterministic_and_correct() {
             outs[i].dist
         );
     }
+}
+
+/// The serial snapshot-replay oracle for the mutation axis: drive a
+/// mutating serving run — `try_submit` and `try_mutate` interleaved on the
+/// simulated clock — and replay every completed query against plain serial
+/// BFS on the materialized snapshot of the epoch it pinned at admission.
+/// The snapshots come from [`Graph::apply`] folds, so no overlay machinery
+/// is anywhere near the oracle side. Outputs must be a pure function of
+/// (pinned version, query) for every engine configuration, and the axes
+/// that cannot shift admission timing (threads, scheduler, layout) must
+/// agree bit-for-bit on the `(epoch, out)` record stream as well.
+#[test]
+fn mutating_runs_replay_against_the_serial_snapshot_oracle() {
+    use quegel::apps::ppsp::{vbfs_query, VersionedBfs};
+
+    // CI matrix knob: the mutations-off leg proves the rest of the suite
+    // is independent of the versioning machinery.
+    if std::env::var("QUEGEL_TEST_MUT").is_ok_and(|v| v == "off") {
+        eprintln!("QUEGEL_TEST_MUT=off: skipping mutation-schedule oracle test");
+        return;
+    }
+
+    let n = 600usize;
+    let g = gen::twitter_like(n, 5, 9801);
+
+    // A fixed three-batch schedule: deletes drawn from arcs that exist,
+    // adds between live vertices, one vertex add (wired both directions)
+    // and one vertex delete.
+    let mut b1 = MutationBatch::new();
+    for v in [3u32, 57, 120] {
+        if let Some(&u) = g.out(v).first() {
+            b1.delete_edge(v, u);
+        }
+    }
+    b1.add_edge(11, 503).add_edge(250, 9);
+    let mut b2 = MutationBatch::new();
+    b2.add_vertex().add_edge(n as u32, 42).add_edge(17, n as u32);
+    for v in [200u32, 301] {
+        if let Some(&u) = g.out(v).last() {
+            b2.delete_edge(v, u);
+        }
+    }
+    let mut b3 = MutationBatch::new();
+    b3.delete_vertex(77).add_edge(5, 505);
+    let batches = [b1, b2, b3];
+
+    // folds[e] = the world at epoch e, by serial replay.
+    let mut folds: Vec<Graph> = vec![g.clone()];
+    for b in &batches {
+        folds.push(folds.last().unwrap().apply(b));
+    }
+
+    // Wave w is submitted right after batch w is queued (wave 0 before
+    // any mutation), so admitted queries span several pinned epochs.
+    let waves: Vec<Vec<(u32, u32)>> = (0..=batches.len())
+        .map(|w| gen::random_pairs(n, 6, 9810 + w as u64))
+        .collect();
+    let queries: Vec<(u32, u32)> = waves.iter().flatten().copied().collect();
+
+    let run = |threads: usize, sched: Sched, pipeline: Pipeline, layout: Layout, admit: Admit| {
+        let mut app = VersionedBfs::new(g.clone());
+        app.heavy_every = 3; // content-derived whales for the Adaptive leg
+        let mut eng = Engine::new(app, Cluster::new(4), n)
+            .capacity(4)
+            .threads(threads)
+            .scheduler(sched)
+            .pipeline(pipeline)
+            .layout(layout)
+            .admit(admit);
+        let mut ids = Vec::new();
+        for &(s, t) in &waves[0] {
+            ids.push(eng.try_submit(vbfs_query(s, t), 0.0).expect("queue accepts"));
+        }
+        for (bi, b) in batches.iter().enumerate() {
+            // Let earlier queries make progress (some stay in flight, so
+            // old and new versions must coexist after the batch lands).
+            eng.super_round();
+            eng.super_round();
+            eng.try_mutate(b.clone(), eng.sim_time())
+                .expect("app supports mutations");
+            for &(s, t) in &waves[bi + 1] {
+                ids.push(
+                    eng.try_submit(vbfs_query(s, t), eng.sim_time())
+                        .expect("queue accepts"),
+                );
+            }
+        }
+        eng.run_until_idle();
+        assert_eq!(eng.metrics().epochs_applied, 3);
+        assert!(
+            eng.metrics().delta_bytes_peak > 0,
+            "delta overlay never engaged"
+        );
+        assert_eq!(eng.metrics().oldest_pinned_epoch, 3, "all pins retired");
+        let recs: Vec<(u64, Option<u32>)> = ids
+            .iter()
+            .map(|id| {
+                let r = eng
+                    .results()
+                    .iter()
+                    .find(|r| r.qid == *id)
+                    .expect("query completed");
+                (r.stats.epoch, r.out)
+            })
+            .collect();
+        // The oracle: every output equals serial BFS on the snapshot of
+        // the epoch that query pinned.
+        for (i, &(e, out)) in recs.iter().enumerate() {
+            let (s, t) = queries[i];
+            let want = ppsp_oracle::bfs_dist(&folds[e as usize], s, t);
+            assert_eq!(
+                out,
+                (want != UNREACHED).then_some(want),
+                "query ({s},{t}) at epoch {e}"
+            );
+        }
+        // Version coexistence really happened: the record stream spans
+        // both the pre-mutation world and the final epoch.
+        assert!(recs.iter().any(|&(e, _)| e == 0));
+        assert!(recs.iter().any(|&(e, _)| e == 3));
+        recs
+    };
+
+    // Axes that cannot re-time admission must agree bit-for-bit on the
+    // (pinned epoch, output) stream.
+    let mut base: Option<Vec<(u64, Option<u32>)>> = None;
+    for threads in [1usize, 4] {
+        for sched in [Sched::Static, Sched::Stealing] {
+            for layout in [Layout::Hashed, Layout::Flat] {
+                let recs = run(threads, sched, Pipeline::Off, layout, Admit::Static(4));
+                match &base {
+                    None => base = Some(recs),
+                    Some(b) => assert_eq!(
+                        &recs, b,
+                        "threads={threads} sched={sched:?} layout={layout:?}"
+                    ),
+                }
+            }
+        }
+    }
+    // Pipelining and adaptive admission may legitimately re-time
+    // admission (and so re-pin epochs); the per-run oracle above still
+    // gates their outputs.
+    run(4, Sched::Stealing, Pipeline::On, Layout::Flat, Admit::Static(4));
+    run(4, Sched::Stealing, Pipeline::Off, Layout::Hashed, Admit::Adaptive);
+    run(4, Sched::Stealing, Pipeline::On, Layout::Flat, Admit::Adaptive);
 }

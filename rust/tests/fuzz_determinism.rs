@@ -39,9 +39,9 @@
 //! fuzz-sized graphs — asserted at the end, to make sure the fuzz can
 //! never silently degenerate into testing the unsplit paths.
 
-use quegel::apps::ppsp::{Bfs, BiBfs, UNREACHED};
+use quegel::apps::ppsp::{oracle as ppsp_oracle, vbfs_query, Bfs, BiBfs, VersionedBfs, UNREACHED};
 use quegel::coordinator::{Admit, EdgeSplit, Engine, Layout, Pipeline, Sched, Split};
-use quegel::graph::{gen, Graph, VertexId};
+use quegel::graph::{gen, Graph, MutationBatch, VertexId};
 use quegel::network::Cluster;
 use quegel::util::{env_flag, env_u64, env_usize, Rng};
 use quegel::vertex::{Ctx, QueryApp};
@@ -473,5 +473,263 @@ fn randomized_matrix_is_bit_identical_to_serial() {
         admit_engaged,
         "no fuzz configuration ever deferred a heavy query: the fuzzer is \
          not exercising the adaptive admission planner"
+    );
+}
+
+/// One event of a random mutation schedule: the fuzzer interleaves
+/// arrivals, mutation batches and explicit super-rounds on the simulated
+/// clock, so queries pinned to old epochs routinely overlap batches that
+/// create newer ones.
+enum Ev {
+    /// Submit the next query from the case's query list.
+    Submit,
+    /// Queue mutation batch `i` (applies at the next round boundary).
+    Mutate(usize),
+    /// Drive `k` explicit super-rounds before the next event.
+    Rounds(usize),
+}
+
+/// Mutation-schedule fuzzer: random graphs × random mutation schedules
+/// (edge deletes drawn from arcs that exist, edge adds between live
+/// vertices, vertex adds wired both directions, vertex deletes) × random
+/// `try_submit`/`try_mutate`/super-round interleavings × random engine
+/// configurations. Every completed query is replayed against plain serial
+/// BFS on the [`Graph::apply`]-folded snapshot of the epoch it pinned at
+/// admission — the same serial oracle the hand-written suite uses — and
+/// each random configuration must be `(epoch, out)`-bit-identical to its
+/// own single-threaded twin (thread count can never re-time admission).
+/// Two forcing legs per case compose the overlay with the split/flat and
+/// pipelined machinery; engagement is asserted so the fuzz can never
+/// silently degenerate into an immutable-graph test.
+#[test]
+fn random_mutation_schedules_replay_against_serial_snapshots() {
+    // CI matrix knob: the mutations-off leg proves the rest of the suite
+    // is independent of the versioning machinery.
+    if std::env::var("QUEGEL_TEST_MUT").is_ok_and(|v| v == "off") {
+        eprintln!("QUEGEL_TEST_MUT=off: skipping mutation-schedule fuzz");
+        return;
+    }
+
+    let master_seed = env_u64("QUEGEL_FUZZ_SEED").unwrap_or(0x5eed_f022);
+    let smoke = env_flag("QUEGEL_BENCH_SMOKE");
+    let cases = env_usize("QUEGEL_FUZZ_CASES").unwrap_or(if smoke { 8 } else { 60 });
+    let configs_per_case = 2;
+    // Overlay × split/flat forcing: both splits armed with tiny thresholds
+    // under the arena/columnar layout, reading through epoch overlays.
+    let flat_forcing = Config {
+        threads: 4,
+        workers: 3,
+        capacity: 8,
+        sched: Sched::Stealing,
+        split: Split::MaxTaskVertices(5),
+        edge: EdgeSplit::MaxFanout(1),
+        pipeline: Pipeline::Off,
+        layout: Layout::Flat,
+        admit: Admit::Static(8),
+    };
+    // Overlay × pipeline forcing: ready-driven rounds with mutations
+    // landing between them.
+    let pipe_forcing = Config {
+        threads: 4,
+        workers: 3,
+        capacity: 8,
+        sched: Sched::Stealing,
+        split: Split::Off,
+        edge: EdgeSplit::Off,
+        pipeline: Pipeline::On,
+        layout: Layout::Hashed,
+        admit: Admit::Static(8),
+    };
+
+    let mut flat_engaged = false;
+    let mut pipeline_engaged = false;
+    let mut overlap_seen = false;
+    for case in 0..cases {
+        // A different salt than the immutable fuzzer, so the two tests
+        // cover distinct graph/config universes under one master seed.
+        let case_seed = master_seed.wrapping_add(0xbeef + case as u64 * 0x9e37);
+        let mut rng = Rng::new(case_seed);
+        let (g, desc) = random_graph(&mut rng, case_seed);
+        let n = g.num_vertices();
+        let heavy_every = if rng.chance(0.5) { 2 + rng.below(4) as u32 } else { 0 };
+
+        // Build the batch chain against serial folds, so every op is valid
+        // by construction (deletes name arcs that exist, adds touch live
+        // vertices) and the folds double as the oracle's snapshots.
+        let n_batches = 1 + rng.below_usize(3);
+        let mut live: Vec<bool> = vec![true; n];
+        let mut folds: Vec<Graph> = vec![g.clone()];
+        let mut batches: Vec<MutationBatch> = Vec::new();
+        for _ in 0..n_batches {
+            let cur = folds.last().unwrap();
+            let live_ids: Vec<u32> = (0..cur.num_vertices() as u32)
+                .filter(|&v| live[v as usize])
+                .collect();
+            let mut b = MutationBatch::new();
+            for _ in 0..(1 + rng.below_usize(3)) {
+                let v = live_ids[rng.below_usize(live_ids.len())];
+                let out = cur.out(v);
+                if !out.is_empty() {
+                    b.delete_edge(v, out[rng.below_usize(out.len())]);
+                }
+            }
+            for _ in 0..(1 + rng.below_usize(3)) {
+                let u = live_ids[rng.below_usize(live_ids.len())];
+                let w = live_ids[rng.below_usize(live_ids.len())];
+                b.add_edge(u, w);
+            }
+            if rng.chance(0.4) {
+                let nv = cur.num_vertices() as u32;
+                let x = live_ids[rng.below_usize(live_ids.len())];
+                let y = live_ids[rng.below_usize(live_ids.len())];
+                b.add_vertex().add_edge(nv, x).add_edge(y, nv);
+                live.push(true);
+            }
+            if rng.chance(0.3) {
+                let v = live_ids[rng.below_usize(live_ids.len())];
+                b.delete_vertex(v);
+                live[v as usize] = false;
+            }
+            folds.push(cur.apply(&b));
+            batches.push(b);
+        }
+
+        // The interleaving: a burst of arrivals, maybe some rounds, then
+        // the next batch; stragglers arrive after the last batch.
+        let mut schedule: Vec<Ev> = Vec::new();
+        let mut n_submits = 0usize;
+        for bi in 0..batches.len() {
+            for _ in 0..(1 + rng.below_usize(3)) {
+                schedule.push(Ev::Submit);
+                n_submits += 1;
+            }
+            if rng.chance(0.7) {
+                schedule.push(Ev::Rounds(1 + rng.below_usize(2)));
+            }
+            schedule.push(Ev::Mutate(bi));
+        }
+        for _ in 0..(1 + rng.below_usize(3)) {
+            schedule.push(Ev::Submit);
+            n_submits += 1;
+        }
+        // Queries stay within the epoch-0 id range, which every later
+        // version also contains (deleted vertices keep their slots).
+        let queries = gen::random_pairs(n, n_submits, case_seed ^ 0x77aa);
+
+        let run = |cfg: Config| {
+            let mut app = VersionedBfs::new(g.clone());
+            app.heavy_every = heavy_every;
+            let mut eng = Engine::new(app, Cluster::new(cfg.workers), n)
+                .capacity(cfg.capacity)
+                .threads(cfg.threads)
+                .scheduler(cfg.sched)
+                .split(cfg.split)
+                .edge_split(cfg.edge)
+                .pipeline(cfg.pipeline)
+                .layout(cfg.layout)
+                .admit(cfg.admit);
+            let mut ids = Vec::new();
+            let mut qi = 0usize;
+            for ev in &schedule {
+                match ev {
+                    Ev::Submit => {
+                        let (s, t) = queries[qi];
+                        qi += 1;
+                        ids.push(
+                            eng.try_submit(vbfs_query(s, t), eng.sim_time())
+                                .expect("queue accepts"),
+                        );
+                    }
+                    Ev::Mutate(bi) => {
+                        eng.try_mutate(batches[*bi].clone(), eng.sim_time())
+                            .expect("app supports mutations");
+                    }
+                    Ev::Rounds(k) => {
+                        for _ in 0..*k {
+                            eng.super_round();
+                        }
+                    }
+                }
+            }
+            eng.run_until_idle();
+            // Engagement: every batch landed and the overlay really held
+            // delta bytes at some point — the fuzz must never degenerate
+            // into an immutable-graph run.
+            assert_eq!(
+                eng.metrics().epochs_applied,
+                batches.len() as u64,
+                "fuzz case {case} (seed {case_seed:#x}, {desc}) {cfg:?}: \
+                 not every mutation batch was applied"
+            );
+            assert!(
+                eng.metrics().delta_bytes_peak > 0,
+                "fuzz case {case} (seed {case_seed:#x}, {desc}) {cfg:?}: \
+                 the delta overlay never engaged"
+            );
+            let recs: Vec<(u64, Option<u32>)> = ids
+                .iter()
+                .map(|id| {
+                    let r = eng
+                        .results()
+                        .iter()
+                        .find(|r| r.qid == *id)
+                        .expect("query completed");
+                    (r.stats.epoch, r.out)
+                })
+                .collect();
+            let flat = eng.metrics().staging_bytes_peak > 0;
+            let piped = eng.metrics().pipelined_rounds > 0;
+            (recs, flat, piped)
+        };
+        let check = |recs: &[(u64, Option<u32>)], what: &str| {
+            for (i, &(e, out)) in recs.iter().enumerate() {
+                let (s, t) = queries[i];
+                let want = ppsp_oracle::bfs_dist(&folds[e as usize], s, t);
+                assert_eq!(
+                    out,
+                    (want != UNREACHED).then_some(want),
+                    "fuzz case {case} (seed {case_seed:#x}, {desc}) {what}: \
+                     query ({s},{t}) pinned to epoch {e} diverged from the \
+                     serial snapshot replay"
+                );
+            }
+        };
+
+        for ci in 0..configs_per_case {
+            let cfg = random_config(&mut rng);
+            let (serial_recs, _, _) = run(Config { threads: 1, ..cfg });
+            check(&serial_recs, "single-threaded twin");
+            overlap_seen |= serial_recs
+                .iter()
+                .any(|&(e, _)| e < batches.len() as u64 && serial_recs.iter().any(|&(e2, _)| e2 > e));
+            let (recs, _, _) = run(cfg);
+            assert_eq!(
+                recs, serial_recs,
+                "fuzz case {case} (seed {case_seed:#x}, {desc}) config {ci} \
+                 {cfg:?} changed the (epoch, out) stream vs its \
+                 single-threaded twin"
+            );
+        }
+        let (recs, flat, _) = run(flat_forcing);
+        check(&recs, "flat/split forcing config");
+        flat_engaged |= flat;
+        let (recs, _, piped) = run(pipe_forcing);
+        check(&recs, "pipeline forcing config");
+        pipeline_engaged |= piped;
+    }
+    assert!(
+        flat_engaged,
+        "no mutation-fuzz configuration ever engaged the flat layout: the \
+         overlay × arena/columnar composition is not being exercised"
+    );
+    assert!(
+        pipeline_engaged,
+        "no mutation-fuzz configuration ever ran a pipelined super-round: \
+         the overlay × ready-driven composition is not being exercised"
+    );
+    assert!(
+        overlap_seen,
+        "no fuzz case ever completed queries pinned to distinct epochs: \
+         the schedules are not creating version overlap"
     );
 }
