@@ -10,7 +10,10 @@ BENCH_pr5.json (edge-level split sweep), BENCH_pr6.json
 serving sweep: open-loop arrivals with a whale burst under
 ``Admit::Static`` vs ``Admit::Adaptive``) and BENCH_pr9.json (streaming
 mutation sweep: incremental hub2 maintenance over the epoch overlay vs
-folding every batch into a fresh CSR and rebuilding the whole index).
+folding every batch into a fresh CSR and rebuilding the whole index) and
+BENCH_pr10.json (multi-process sweep: the same query batch served
+in-process and across worker processes over localhost TCP, with wire
+gauges proving which mode actually ran).
 This script is the single
 source of truth for their shape, shared by the ``bench-smoke`` CI lane
 and local runs:
@@ -334,6 +337,44 @@ def check_pr9(doc, name):
     )
 
 
+PROC_ROW_KEYS = (
+    "procs",
+    "wall_s",
+    "bytes_on_wire",
+    "rpc_round_trips",
+    "completed",
+)
+
+
+def check_pr10(doc, name):
+    rows = doc.get("rows") or fail(f"{name}: multi-process sweep produced no rows")
+    for row in rows:
+        require_keys(row, PROC_ROW_KEYS, name)
+    procs = {r["procs"] for r in rows}
+    if 1 not in procs or not any(p > 1 for p in procs):
+        fail(f"{name}: rows must cover procs=1 and at least one procs>1 setting")
+    for r in rows:
+        if r["completed"] <= 0:
+            fail(f"{name}: procs={r['procs']} completed nothing")
+        if r["wall_s"] <= 0:
+            fail(f"{name}: procs={r['procs']} nonsensical timing")
+    # Engagement: the wire gauges are the proof of mode. A 1-process run
+    # delegates fully in-process and must never touch the socket; an
+    # N-process run cannot complete a single query without the exchange
+    # riding the wire — zero bytes there means the sweep silently
+    # measured the in-process engine twice.
+    for r in rows:
+        if r["procs"] == 1 and (r["bytes_on_wire"] != 0 or r["rpc_round_trips"] != 0):
+            fail(f"{name}: procs=1 row moved the wire gauges: {r}")
+        if r["procs"] > 1 and not (r["bytes_on_wire"] > 0 and r["rpc_round_trips"] > 0):
+            fail(f"{name}: procs={r['procs']} row never engaged the wire")
+    # Every row serves the identical query batch (the bench asserts the
+    # outputs bit-identical), so completion counts must agree.
+    if len({r["completed"] for r in rows}) != 1:
+        fail(f"{name}: completed counts diverge across the process sweep")
+    print(f"{name} ok: {len(rows)} rows; procs swept: {sorted(procs)}")
+
+
 CHECKERS = {
     "perf_engine": check_pr2,
     "perf_skew_sched": check_pr3,
@@ -343,6 +384,7 @@ CHECKERS = {
     "perf_flat_layout": check_pr7,
     "perf_serving": check_serving,
     "perf_mutation_maintenance": check_pr9,
+    "perf_multiprocess": check_pr10,
 }
 
 
@@ -434,6 +476,33 @@ def _pr9_fixture():
     }
 
 
+def _pr10_fixture():
+    """A minimal trajectory-grade BENCH_pr10.json document."""
+
+    def row(procs, wall, wire, rpcs):
+        return {
+            "procs": procs,
+            "wall_s": wall,
+            "bytes_on_wire": wire,
+            "rpc_round_trips": rpcs,
+            "completed": 48,
+        }
+
+    return {
+        "pr": 10,
+        "bench": "perf_multiprocess",
+        "graph": "twitter_like",
+        "n": 30000,
+        "workers": 8,
+        "capacity": 8,
+        "queries": 48,
+        "procs_swept": [1, 2],
+        "reps": 1,
+        "smoke": False,
+        "rows": [row(1, 0.4, 0, 0), row(2, 0.9, 1_500_000, 240)],
+    }
+
+
 def selftest():
     """Validator self-checks on synthetic in-memory fixtures.
 
@@ -506,6 +575,29 @@ def selftest():
     del mut_no_headline["hub2_incremental_vs_rebuild_speedup_t4"]
     expect_rejected(mut_no_headline, "fixture-pr9-missing-headline")
 
+    mp_good = _pr10_fixture()
+    CHECKERS[mp_good["bench"]](mp_good, "fixture-pr10-good")
+
+    mp_one_proc = _pr10_fixture()
+    mp_one_proc["rows"] = [r for r in mp_one_proc["rows"] if r["procs"] == 1]
+    expect_rejected(mp_one_proc, "fixture-pr10-single-process-only")
+
+    mp_local_wire = _pr10_fixture()
+    mp_local_wire["rows"][0]["bytes_on_wire"] = 64
+    expect_rejected(mp_local_wire, "fixture-pr10-inprocess-moved-wire-gauge")
+
+    mp_dry_wire = _pr10_fixture()
+    mp_dry_wire["rows"][1]["bytes_on_wire"] = 0
+    expect_rejected(mp_dry_wire, "fixture-pr10-multiprocess-never-on-wire")
+
+    mp_diverged = _pr10_fixture()
+    mp_diverged["rows"][1]["completed"] = 47
+    expect_rejected(mp_diverged, "fixture-pr10-completed-diverge")
+
+    mp_missing_key = _pr10_fixture()
+    del mp_missing_key["rows"][0]["rpc_round_trips"]
+    expect_rejected(mp_missing_key, "fixture-pr10-missing-row-key")
+
     # Gate logic against the committed floors file: the good fixture's
     # headline (2.0) clears the serving floor; a sub-floor headline must
     # fail strictly and pass only when downgraded to advisory.
@@ -525,7 +617,10 @@ def selftest():
         if saved is not None:
             os.environ["QUEGEL_BENCH_NO_GATE"] = saved
 
-    print("selftest ok: serving + mutation checkers and gate fixtures all behaved")
+    print(
+        "selftest ok: serving + mutation + multi-process checkers and gate "
+        "fixtures all behaved"
+    )
 
 
 def main(argv):

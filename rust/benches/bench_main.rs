@@ -21,6 +21,12 @@ mod tables;
 use std::time::Instant;
 
 fn main() {
+    // Worker-process entrypoint: the perf module's multi-process sweep
+    // spawns children of this bench binary; when the worker env knobs
+    // are set, serve the remote protocol instead of running experiments.
+    if quegel::coordinator::remote::maybe_serve_worker::<quegel::apps::ppsp::VersionedBfs>() {
+        return;
+    }
     let args: Vec<String> = std::env::args().skip(1).collect();
     let filter: Vec<&str> = args
         .iter()

@@ -60,8 +60,9 @@
 //! (thread sweep), `BENCH_pr3.json` (skew sweep), `BENCH_pr4.json`
 //! (split sweep), `BENCH_pr5.json` (edge-split sweep), `BENCH_pr6.json`
 //! (pipeline sweep), `BENCH_pr7.json` (layout sweep),
-//! `BENCH_serving.json` (serving sweep) and `BENCH_pr9.json` (mutation
-//! sweep) so the committed perf trajectory
+//! `BENCH_serving.json` (serving sweep), `BENCH_pr9.json` (mutation
+//! sweep) and `BENCH_pr10.json` (multi-process sweep: 1-process vs
+//! N-process rows with wire gauges) so the committed perf trajectory
 //! is machine-readable; CI's `bench-smoke` lane validates
 //! them with `ci/validate_bench.py` and archives them as workflow
 //! artifacts. Setting `QUEGEL_BENCH_SMOKE=1` shrinks every input so the
@@ -1817,6 +1818,102 @@ pub fn run() {
     println!("across the mutation axis by construction (tests/determinism.rs");
     println!("mutating_runs_replay_against_the_serial_snapshot_oracle).");
 
+    // --- Multi-process sweep: the same PPSP batch served in-process
+    // (procs = 1) and across worker processes over localhost TCP
+    // (children of this bench binary — `bench_main` serves the worker
+    // protocol when the worker env knobs are set). Outputs are asserted
+    // bit-identical across the sweep; the rows report end-to-end wall
+    // time (spawn + handshake included — that IS the cost of the mode)
+    // plus the wire gauges. `bytes_on_wire` is exactly 0 on the
+    // 1-process row and necessarily positive on every N-process row, so
+    // the validator can prove which mode each row actually ran.
+    let (mp_n, mp_deg, mp_q) = if smoke {
+        (4_000usize, 5usize, 16usize)
+    } else {
+        (30_000, 6, 48)
+    };
+    let mp_workers = 8;
+    let mp_procs: [usize; 2] = [1, 2];
+    let mp_g = gen::twitter_like(mp_n, mp_deg, 777);
+    let mp_queries = gen::random_pairs(mp_n, mp_q, 778);
+    let mp_cfg = quegel::coordinator::EngineConfig {
+        capacity: 8,
+        threads: 1,
+        pipeline: Pipeline::Off,
+        admit: Admit::Static(8),
+        ..quegel::coordinator::EngineConfig::default()
+    };
+    struct ProcRow {
+        procs: usize,
+        wall: f64,
+        bytes: u64,
+        rpcs: u64,
+        completed: u64,
+    }
+    let mut mp_rows: Vec<ProcRow> = Vec::new();
+    let mut mp_base: Option<Vec<(u64, Option<u32>)>> = None;
+    for &procs in &mp_procs {
+        use quegel::apps::ppsp::{vbfs_query, VersionedBfs};
+        use quegel::coordinator::remote::ProcEngine;
+        let t = Instant::now();
+        let mut pe = ProcEngine::new(
+            VersionedBfs::new(mp_g.clone()),
+            Cluster::new(mp_workers),
+            mp_n,
+            mp_cfg,
+            procs,
+            &[],
+        );
+        let ids: Vec<_> = mp_queries
+            .iter()
+            .map(|&(s, t)| pe.submit(vbfs_query(s, t)))
+            .collect();
+        pe.run_until_idle();
+        let wall = t.elapsed().as_secs_f64();
+        let results = pe.take_results();
+        let outs: Vec<(u64, Option<u32>)> = ids
+            .iter()
+            .map(|id| {
+                let r = results.iter().find(|r| r.qid == *id).unwrap();
+                (r.qid, r.out)
+            })
+            .collect();
+        match &mp_base {
+            None => mp_base = Some(outs),
+            Some(b) => assert_eq!(
+                &outs, b,
+                "{procs}-process outputs diverged from the 1-process run"
+            ),
+        }
+        let m = pe.metrics();
+        mp_rows.push(ProcRow {
+            procs,
+            wall,
+            bytes: m.bytes_on_wire,
+            rpcs: m.rpc_round_trips,
+            completed: m.queries_completed,
+        });
+        pe.shutdown();
+    }
+    println!();
+    println!(
+        "vbfs multi-process C=8 W={mp_workers} twitter_like n={mp_n} \
+         ({mp_q} queries, wall includes spawn + handshake)"
+    );
+    println!(
+        "{:>6} {:>10} {:>14} {:>10} {:>10}",
+        "procs", "wall_s", "bytes_on_wire", "rpcs", "completed"
+    );
+    for r in &mp_rows {
+        println!(
+            "{:>6} {:>10.3} {:>14} {:>10} {:>10}",
+            r.procs, r.wall, r.bytes, r.rpcs, r.completed
+        );
+    }
+    println!("outputs bit-identical across the process sweep (asserted above);");
+    println!("no speedup target on this table — the sweep prices the wire, it");
+    println!("does not claim localhost TCP beats shared memory.");
+
     if JSON.load(Ordering::Relaxed) {
         let payload = format!(
             concat!(
@@ -1985,6 +2082,35 @@ pub fn run() {
         match std::fs::write("BENCH_pr9.json", &payload) {
             Ok(()) => println!("wrote BENCH_pr9.json"),
             Err(e) => eprintln!("could not write BENCH_pr9.json: {e}"),
+        }
+        let mp_json: Vec<String> = mp_rows
+            .iter()
+            .map(|r| {
+                format!(
+                    concat!(
+                        "{{\"procs\":{},\"wall_s\":{:.6},\"bytes_on_wire\":{},",
+                        "\"rpc_round_trips\":{},\"completed\":{}}}"
+                    ),
+                    r.procs, r.wall, r.bytes, r.rpcs, r.completed
+                )
+            })
+            .collect();
+        let payload = format!(
+            concat!(
+                "{{\"pr\":10,\"bench\":\"perf_multiprocess\",",
+                "\"graph\":\"twitter_like\",\"n\":{},\"workers\":{},",
+                "\"capacity\":8,\"queries\":{},\"procs_swept\":[1,2],",
+                "\"reps\":1,\"smoke\":{},\"rows\":[{}]}}\n"
+            ),
+            mp_n,
+            mp_workers,
+            mp_q,
+            smoke,
+            mp_json.join(","),
+        );
+        match std::fs::write("BENCH_pr10.json", &payload) {
+            Ok(()) => println!("wrote BENCH_pr10.json"),
+            Err(e) => eprintln!("could not write BENCH_pr10.json: {e}"),
         }
     }
 }

@@ -12,7 +12,9 @@
 //! [`crate::graph::Graph::apply`]-folded snapshot of the pinned epoch.
 
 use super::UNREACHED;
+use crate::coordinator::remote::WireApp;
 use crate::graph::{Epoch, Graph, MutationApplied, MutationBatch, VersionedGraph, VertexId};
+use crate::network::wire::{self, put_u32, put_u64, put_u8, WireError, WireReader, WireResult};
 use crate::vertex::{Ctx, QueryApp};
 
 /// A versioned PPSP query: `(s, t, epoch)`. The epoch slot is stamped by
@@ -141,6 +143,78 @@ impl QueryApp for VersionedBfs {
     }
 }
 
+impl WireApp for VersionedBfs {
+    /// Base graph + the heavy-classification knob. Shipped at worker
+    /// spawn, which happens before any mutation batch can have been
+    /// applied — asserted here rather than shipping the overlay chain.
+    fn spec_bytes(&self) -> Vec<u8> {
+        assert_eq!(
+            self.vg.epoch(),
+            0,
+            "spawn worker processes before applying mutations"
+        );
+        let mut out = Vec::new();
+        wire::encode_graph(self.vg.base(), &mut out);
+        put_u32(&mut out, self.heavy_every);
+        out
+    }
+
+    fn from_spec(r: &mut WireReader<'_>) -> WireResult<Self> {
+        let g = wire::decode_graph(r)?;
+        let mut app = VersionedBfs::new(g);
+        app.heavy_every = r.u32()?;
+        Ok(app)
+    }
+
+    fn enc_query(q: &VBfsQuery, out: &mut Vec<u8>) {
+        put_u32(out, q.0);
+        put_u32(out, q.1);
+        put_u64(out, q.2);
+    }
+
+    fn dec_query(r: &mut WireReader<'_>) -> WireResult<VBfsQuery> {
+        Ok((r.u32()?, r.u32()?, r.u64()?))
+    }
+
+    fn enc_msg(_m: &(), _out: &mut Vec<u8>) {}
+
+    fn dec_msg(_r: &mut WireReader<'_>) -> WireResult<()> {
+        Ok(())
+    }
+
+    fn enc_vq(vq: &u32, out: &mut Vec<u8>) {
+        put_u32(out, *vq);
+    }
+
+    fn dec_vq(r: &mut WireReader<'_>) -> WireResult<u32> {
+        r.u32()
+    }
+
+    fn enc_agg(_a: &(), _out: &mut Vec<u8>) {}
+
+    fn dec_agg(_r: &mut WireReader<'_>) -> WireResult<()> {
+        Ok(())
+    }
+
+    fn enc_out(o: &Option<u32>, out: &mut Vec<u8>) {
+        match o {
+            Some(d) => {
+                put_u8(out, 1);
+                put_u32(out, *d);
+            }
+            None => put_u8(out, 0),
+        }
+    }
+
+    fn dec_out(r: &mut WireReader<'_>) -> WireResult<Option<u32>> {
+        match r.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(r.u32()?)),
+            _ => Err(WireError::Corrupt("option flag")),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::oracle;
@@ -148,6 +222,50 @@ mod tests {
     use crate::coordinator::Engine;
     use crate::graph::gen;
     use crate::network::Cluster;
+
+    #[test]
+    fn wire_codecs_round_trip_and_reject_corrupt_bytes() {
+        use crate::network::wire::WireReader;
+
+        // Query codec.
+        let q = (7u32, 911u32, 3u64);
+        let mut buf = Vec::new();
+        VersionedBfs::enc_query(&q, &mut buf);
+        let mut r = WireReader::new(&buf);
+        assert_eq!(VersionedBfs::dec_query(&mut r).unwrap(), q);
+        r.expect_end().unwrap();
+
+        // Out codec: both variants, bad flag is an error, never a panic.
+        for o in [None, Some(42u32)] {
+            let mut buf = Vec::new();
+            VersionedBfs::enc_out(&o, &mut buf);
+            let mut r = WireReader::new(&buf);
+            assert_eq!(VersionedBfs::dec_out(&mut r).unwrap(), o);
+            r.expect_end().unwrap();
+        }
+        let mut r = WireReader::new(&[9u8]);
+        assert!(VersionedBfs::dec_out(&mut r).is_err());
+
+        // Spec round trip rebuilds an identical replica: same adjacency,
+        // same heavy knob.
+        let g = gen::twitter_like(80, 3, 41);
+        let mut app = VersionedBfs::new(g.clone());
+        app.heavy_every = 5;
+        let spec = app.spec_bytes();
+        let mut r = WireReader::new(&spec);
+        let back = VersionedBfs::from_spec(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(back.heavy_every, 5);
+        assert_eq!(back.vg.base().num_vertices(), g.num_vertices());
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(back.vg.base().out(v), g.out(v));
+        }
+        // Every truncation of the spec errors.
+        for cut in [0, 1, spec.len() / 2, spec.len() - 1] {
+            let mut r = WireReader::new(&spec[..cut]);
+            assert!(VersionedBfs::from_spec(&mut r).is_err());
+        }
+    }
 
     #[test]
     fn matches_plain_bfs_at_epoch_zero() {

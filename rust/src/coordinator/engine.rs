@@ -222,7 +222,7 @@ pub enum EdgeSplit {
 /// Per-round edge-split decision, derived from (`Sched`, `EdgeSplit`,
 /// thread budget) once and copied into every lane.
 #[derive(Debug, Clone, Copy)]
-enum EdgePolicy {
+pub(crate) enum EdgePolicy {
     Never,
     /// Park outboxes longer than `.0`, cut at ranges of `.0`.
     Fixed(usize),
@@ -468,14 +468,16 @@ struct FanPrep<A: QueryApp> {
     stream: StageStream<A>,
 }
 
-/// One (query, worker) compute unit inside a lane.
-struct Task<'a, A: QueryApp> {
-    qid: QueryId,
+/// One (query, worker) compute unit inside a lane. `pub(crate)` because
+/// the multi-process worker loop ([`super::remote`]) drives the exact
+/// same task body for the shards it hosts.
+pub(crate) struct Task<'a, A: QueryApp> {
+    pub(crate) qid: QueryId,
     /// Superstep this compute phase executes (1-based).
-    step: u64,
-    query: &'a A::Query,
-    agg_prev: &'a A::Agg,
-    shard: &'a mut WorkerShard<A>,
+    pub(crate) step: u64,
+    pub(crate) query: &'a A::Query,
+    pub(crate) agg_prev: &'a A::Agg,
+    pub(crate) shard: &'a mut WorkerShard<A>,
 }
 
 /// A task the prep pass transposed for splitting: its serial-order work
@@ -653,16 +655,16 @@ impl<'a, A: QueryApp> ComputeCall<'a, A> {
 }
 
 /// Result of one serially executed (query, worker) compute task.
-struct TaskRun<A: QueryApp> {
-    calls: u64,
-    handled: u64,
-    sent: u64,
+pub(crate) struct TaskRun<A: QueryApp> {
+    pub(crate) calls: u64,
+    pub(crate) handled: u64,
+    pub(crate) sent: u64,
     /// Largest single compute-call fanout of this task.
-    max_fan: u64,
+    pub(crate) max_fan: u64,
     /// Messages parked into fans (⊆ `sent`).
-    fanned: u64,
+    pub(crate) fanned: u64,
     /// Post-first-fan staging capture, when a mega-fanout parked.
-    overflow: Option<StageStream<A>>,
+    pub(crate) overflow: Option<StageStream<A>>,
 }
 
 /// Execute one (query, worker) compute task serially: the PR 3 per-task
@@ -670,7 +672,7 @@ struct TaskRun<A: QueryApp> {
 /// straight into the shard's staging maps until (if ever) a mega-fanout
 /// parks; from then on staging is captured in the returned overflow
 /// stream for the staging-column merge to replay in place.
-fn run_task<A: QueryApp>(
+pub(crate) fn run_task<A: QueryApp>(
     app: &A,
     cluster: &Cluster,
     edge: EdgePolicy,
@@ -1182,32 +1184,6 @@ pub enum Sched {
     Stealing,
 }
 
-impl Sched {
-    /// The default scheduler for new engines: [`Sched::Stealing`], unless
-    /// the `QUEGEL_TEST_SCHED` environment variable says `static`. This is
-    /// the CI test-matrix hook — `QUEGEL_TEST_SCHED=static cargo test`
-    /// runs the whole suite under the static baseline without touching any
-    /// call site; explicit [`Engine::scheduler`] calls still win.
-    pub fn default_from_env() -> Self {
-        match std::env::var("QUEGEL_TEST_SCHED") {
-            Ok(v) if v.eq_ignore_ascii_case("static") => {
-                // An ambient env var silently changing engine behavior is
-                // surprising outside CI — say so once, loudly enough to
-                // explain unexpected static-baseline performance.
-                static NOTE: std::sync::Once = std::sync::Once::new();
-                NOTE.call_once(|| {
-                    eprintln!(
-                        "quegel: QUEGEL_TEST_SCHED=static overrides the default \
-                         scheduler (test-matrix hook); unset it for production use"
-                    );
-                });
-                Sched::Static
-            }
-            _ => Sched::Stealing,
-        }
-    }
-}
-
 /// Super-round execution mode: strict barriers or ready-driven pipelining.
 ///
 /// Under [`Pipeline::On`] a super-round is ONE pool batch of per-(query,
@@ -1231,30 +1207,6 @@ pub enum Pipeline {
     /// Ready-driven super-rounds: eager per-query column handoff and
     /// fold, with reporting overlapped onto the next round's compute.
     On,
-}
-
-impl Pipeline {
-    /// The default mode for new engines: [`Pipeline::Off`], unless the
-    /// `QUEGEL_TEST_PIPELINE` environment variable says `on` (or `1`).
-    /// This is the CI test-matrix hook — `QUEGEL_TEST_PIPELINE=on cargo
-    /// test` runs the whole suite pipelined without touching any call
-    /// site; explicit [`Engine::pipeline`] calls still win.
-    pub fn default_from_env() -> Self {
-        match std::env::var("QUEGEL_TEST_PIPELINE") {
-            Ok(v) if v.eq_ignore_ascii_case("on") || v == "1" => {
-                static NOTE: std::sync::Once = std::sync::Once::new();
-                NOTE.call_once(|| {
-                    eprintln!(
-                        "quegel: QUEGEL_TEST_PIPELINE=on overrides the default \
-                         super-round mode (test-matrix hook); unset it for the \
-                         barrier baseline"
-                    );
-                });
-                Pipeline::On
-            }
-            _ => Pipeline::Off,
-        }
-    }
 }
 
 /// Admission-control policy: which queued queries a super-round admits
@@ -1290,17 +1242,123 @@ pub enum Admit {
     Adaptive,
 }
 
-impl Admit {
-    /// The default admission policy for new engines: [`Admit::Adaptive`],
-    /// unless the `QUEGEL_TEST_ADMIT` environment variable says `static`.
-    /// This is the CI test-matrix hook — `QUEGEL_TEST_ADMIT=static cargo
-    /// test` runs the whole suite under the fixed-capacity baseline
-    /// without touching any call site; explicit [`Engine::admit`] calls
-    /// still win. The static payload starts at the engine's default
-    /// capacity and [`Engine::capacity`] re-syncs it, so the baseline leg
-    /// reproduces the historical admission loop exactly.
-    pub fn default_from_env() -> Self {
-        match std::env::var("QUEGEL_TEST_ADMIT") {
+/// The complete, plain-data configuration of an [`Engine`]: every knob
+/// the builder methods set, in one serializable struct.
+///
+/// Two jobs:
+///
+/// 1. **One front door for defaults.** [`EngineConfig::from_env`] is the
+///    single place the `QUEGEL_TEST_*` CI-matrix env hooks are read
+///    (scheduler / pipeline / admission / layout) — it replaces the three
+///    per-knob `default_from_env()` impls that used to be scattered across
+///    `Sched`, `Pipeline` and `Admit`. `Engine::new` is now a thin
+///    delegate to [`Engine::with_config`]`(…, EngineConfig::from_env())`,
+///    and the existing builder methods keep working as per-field setters
+///    on top of whatever config the engine started from.
+///
+/// 2. **The handshake object of the multi-process mode.** The coordinator
+///    ships exactly this struct — via [`EngineConfig::to_bytes`] /
+///    [`EngineConfig::from_bytes`], a zero-dependency byte codec — to
+///    every worker process at connection setup, so remote shards run
+///    under bit-identical knobs without re-reading any environment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Capacity `C`: max in-flight queries per super-round.
+    pub capacity: usize,
+    /// OS threads for the parallel phases (1 = serial loop).
+    pub threads: usize,
+    /// Phase-job granularity (see [`Sched`]).
+    pub sched: Sched,
+    /// Intra-lane sub-job splitting policy (see [`Split`]).
+    pub split: Split,
+    /// Edge-level splitting policy for mega-fanouts (see [`EdgeSplit`]).
+    pub edge_split: EdgeSplit,
+    /// Super-round execution mode (see [`Pipeline`]).
+    pub pipeline: Pipeline,
+    /// Per-query state layout (see [`Layout`]).
+    pub layout: Layout,
+    /// Admission policy (see [`Admit`]). Taken verbatim by
+    /// [`Engine::with_config`] — unlike the [`Engine::capacity`] builder,
+    /// no `Admit::Static` re-sync happens, so set the payload you mean.
+    pub admit: Admit,
+    /// Submission-queue bound (`None` = unbounded batch behavior).
+    pub queue_bound: Option<usize>,
+    /// Superstep safety cap per query.
+    pub max_supersteps: u64,
+}
+
+impl Default for EngineConfig {
+    /// The hard-coded engine defaults, ignoring the environment.
+    fn default() -> Self {
+        Self {
+            capacity: DEFAULT_CAPACITY, // paper: throughput saturates around C = 8
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            sched: Sched::Stealing,
+            split: Split::Adaptive,
+            edge_split: EdgeSplit::Adaptive,
+            pipeline: Pipeline::Off,
+            layout: Layout::Flat,
+            admit: Admit::Adaptive,
+            queue_bound: None,
+            max_supersteps: DEFAULT_MAX_SUPERSTEPS,
+        }
+    }
+}
+
+/// Current version byte of the [`EngineConfig`] wire encoding; bumped on
+/// any layout change so a stale worker binary fails the handshake loudly
+/// instead of silently misreading knobs.
+const ENGINE_CONFIG_WIRE_VERSION: u8 = 1;
+
+impl EngineConfig {
+    /// The defaults for new engines, honoring every `QUEGEL_TEST_*`
+    /// test-matrix env hook in one place:
+    ///
+    /// - `QUEGEL_TEST_SCHED=static` → [`Sched::Static`] (else `Stealing`)
+    /// - `QUEGEL_TEST_PIPELINE=on|1` → [`Pipeline::On`] (else `Off`)
+    /// - `QUEGEL_TEST_ADMIT=static` → [`Admit::Static`] at the default
+    ///   capacity (else `Adaptive`); the [`Engine::capacity`] builder
+    ///   re-syncs the static payload, so the baseline leg reproduces the
+    ///   historical fixed-capacity admission at every call site
+    /// - `QUEGEL_TEST_LAYOUT=hashed` → [`Layout::Hashed`] (else `Flat`,
+    ///   via [`Layout::default_from_env`], which stays in `arena.rs` next
+    ///   to the layout itself)
+    ///
+    /// Each override announces itself on stderr once per process (an
+    /// ambient env var silently changing engine behavior is surprising
+    /// outside CI). Explicit builder calls and explicit field writes on
+    /// the returned config still win.
+    pub fn from_env() -> Self {
+        let sched = match std::env::var("QUEGEL_TEST_SCHED") {
+            Ok(v) if v.eq_ignore_ascii_case("static") => {
+                static NOTE: std::sync::Once = std::sync::Once::new();
+                NOTE.call_once(|| {
+                    eprintln!(
+                        "quegel: QUEGEL_TEST_SCHED=static overrides the default \
+                         scheduler (test-matrix hook); unset it for production use"
+                    );
+                });
+                Sched::Static
+            }
+            _ => Sched::Stealing,
+        };
+        let pipeline = match std::env::var("QUEGEL_TEST_PIPELINE") {
+            Ok(v) if v.eq_ignore_ascii_case("on") || v == "1" => {
+                static NOTE: std::sync::Once = std::sync::Once::new();
+                NOTE.call_once(|| {
+                    eprintln!(
+                        "quegel: QUEGEL_TEST_PIPELINE=on overrides the default \
+                         super-round mode (test-matrix hook); unset it for the \
+                         barrier baseline"
+                    );
+                });
+                Pipeline::On
+            }
+            _ => Pipeline::Off,
+        };
+        let admit = match std::env::var("QUEGEL_TEST_ADMIT") {
             Ok(v) if v.eq_ignore_ascii_case("static") => {
                 static NOTE: std::sync::Once = std::sync::Once::new();
                 NOTE.call_once(|| {
@@ -1313,7 +1371,150 @@ impl Admit {
                 Admit::Static(DEFAULT_CAPACITY)
             }
             _ => Admit::Adaptive,
+        };
+        Self {
+            sched,
+            pipeline,
+            admit,
+            layout: Layout::default_from_env(),
+            ..Self::default()
         }
+    }
+
+    /// The invariants the builder methods assert, in one place. Called by
+    /// [`Engine::with_config`] and after [`EngineConfig::from_bytes`].
+    fn validate(&self) -> Result<(), &'static str> {
+        if self.capacity == 0 {
+            return Err("capacity must be > 0");
+        }
+        if self.threads == 0 {
+            return Err("threads must be > 0");
+        }
+        if matches!(self.admit, Admit::Static(0)) {
+            return Err("static admission budget must be > 0");
+        }
+        if matches!(self.split, Split::MaxTaskVertices(0)) {
+            return Err("split threshold must be > 0");
+        }
+        if matches!(self.edge_split, EdgeSplit::MaxFanout(0)) {
+            return Err("edge-split threshold must be > 0");
+        }
+        if self.queue_bound == Some(0) {
+            return Err("queue bound must be > 0");
+        }
+        Ok(())
+    }
+
+    /// Serialize for the worker handshake: a version byte, then every
+    /// knob as fixed-width little-endian fields (enum tags as `u8`,
+    /// counts as `u64`, `Option` as a presence flag). Zero dependencies.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        use crate::network::wire::{put_u8, put_u64};
+        let mut out = Vec::with_capacity(64);
+        put_u8(&mut out, ENGINE_CONFIG_WIRE_VERSION);
+        put_u64(&mut out, self.capacity as u64);
+        put_u64(&mut out, self.threads as u64);
+        put_u8(&mut out, matches!(self.sched, Sched::Stealing) as u8);
+        match self.split {
+            Split::Off => put_u8(&mut out, 0),
+            Split::MaxTaskVertices(n) => {
+                put_u8(&mut out, 1);
+                put_u64(&mut out, n as u64);
+            }
+            Split::Adaptive => put_u8(&mut out, 2),
+        }
+        match self.edge_split {
+            EdgeSplit::Off => put_u8(&mut out, 0),
+            EdgeSplit::MaxFanout(n) => {
+                put_u8(&mut out, 1);
+                put_u64(&mut out, n as u64);
+            }
+            EdgeSplit::Adaptive => put_u8(&mut out, 2),
+        }
+        put_u8(&mut out, matches!(self.pipeline, Pipeline::On) as u8);
+        put_u8(&mut out, matches!(self.layout, Layout::Flat) as u8);
+        match self.admit {
+            Admit::Static(c) => {
+                put_u8(&mut out, 0);
+                put_u64(&mut out, c as u64);
+            }
+            Admit::Adaptive => put_u8(&mut out, 1),
+        }
+        match self.queue_bound {
+            Some(n) => {
+                put_u8(&mut out, 1);
+                put_u64(&mut out, n as u64);
+            }
+            None => put_u8(&mut out, 0),
+        }
+        put_u64(&mut out, self.max_supersteps);
+        out
+    }
+
+    /// Inverse of [`EngineConfig::to_bytes`]. Errors (never panics) on a
+    /// version mismatch, an unknown enum tag, truncation, trailing bytes,
+    /// or a config that fails the builder invariants.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, crate::network::wire::WireError> {
+        use crate::network::wire::{WireError, WireReader};
+        let mut r = WireReader::new(bytes);
+        if r.u8()? != ENGINE_CONFIG_WIRE_VERSION {
+            return Err(WireError::Corrupt("engine-config version"));
+        }
+        let capacity = r.u64()? as usize;
+        let threads = r.u64()? as usize;
+        let sched = match r.u8()? {
+            0 => Sched::Static,
+            1 => Sched::Stealing,
+            _ => return Err(WireError::Corrupt("sched tag")),
+        };
+        let split = match r.u8()? {
+            0 => Split::Off,
+            1 => Split::MaxTaskVertices(r.u64()? as usize),
+            2 => Split::Adaptive,
+            _ => return Err(WireError::Corrupt("split tag")),
+        };
+        let edge_split = match r.u8()? {
+            0 => EdgeSplit::Off,
+            1 => EdgeSplit::MaxFanout(r.u64()? as usize),
+            2 => EdgeSplit::Adaptive,
+            _ => return Err(WireError::Corrupt("edge-split tag")),
+        };
+        let pipeline = match r.u8()? {
+            0 => Pipeline::Off,
+            1 => Pipeline::On,
+            _ => return Err(WireError::Corrupt("pipeline tag")),
+        };
+        let layout = match r.u8()? {
+            0 => Layout::Hashed,
+            1 => Layout::Flat,
+            _ => return Err(WireError::Corrupt("layout tag")),
+        };
+        let admit = match r.u8()? {
+            0 => Admit::Static(r.u64()? as usize),
+            1 => Admit::Adaptive,
+            _ => return Err(WireError::Corrupt("admit tag")),
+        };
+        let queue_bound = match r.u8()? {
+            0 => None,
+            1 => Some(r.u64()? as usize),
+            _ => return Err(WireError::Corrupt("queue-bound flag")),
+        };
+        let max_supersteps = r.u64()?;
+        r.expect_end()?;
+        let cfg = Self {
+            capacity,
+            threads,
+            sched,
+            split,
+            edge_split,
+            pipeline,
+            layout,
+            admit,
+            queue_bound,
+            max_supersteps,
+        };
+        cfg.validate().map_err(WireError::Corrupt)?;
+        Ok(cfg)
     }
 }
 
@@ -1322,7 +1523,7 @@ impl Admit {
 /// admission slice from capacity/4 to capacity/8. An integer count from
 /// the deterministic message accounting — never wall time — so the
 /// squeeze decision replays identically on any machine.
-const ADMIT_BUSY_MSGS_PER_SLOT: u64 = 256;
+pub(crate) const ADMIT_BUSY_MSGS_PER_SLOT: u64 = 256;
 
 /// One entry of the submission queue: a request waiting for admission.
 struct Queued<Q> {
@@ -1680,22 +1881,38 @@ fn fold_query<A: QueryApp>(app: &A, rt: &mut QueryRt<A>, max_supersteps: u64) {
 
 impl<A: QueryApp> Engine<A> {
     /// Engine over `app` (which owns the graph / V-data) on `cluster`.
-    /// `n_vertices` is |V|, used for access-rate accounting.
+    /// `n_vertices` is |V|, used for access-rate accounting. Equivalent to
+    /// [`Engine::with_config`] with [`EngineConfig::from_env`] — the env
+    /// test-matrix hooks apply, and the builder methods below adjust
+    /// individual knobs from there.
     pub fn new(app: A, cluster: Cluster, n_vertices: usize) -> Self {
+        Self::with_config(app, cluster, n_vertices, EngineConfig::from_env())
+    }
+
+    /// Engine with an explicit, complete configuration — the constructor
+    /// the multi-process mode uses on both sides of the handshake (the
+    /// coordinator ships `cfg` in bytes; the worker rebuilds the identical
+    /// engine knobs from them). No environment is consulted and no knob is
+    /// adjusted: `cfg` is applied verbatim (in particular, an
+    /// [`Admit::Static`] payload is NOT re-synced to `cfg.capacity` the
+    /// way the [`Engine::capacity`] builder does). Panics if `cfg` fails
+    /// the builder invariants (zero capacity/threads/bounds).
+    pub fn with_config(app: A, cluster: Cluster, n_vertices: usize, cfg: EngineConfig) -> Self {
+        if let Err(what) = cfg.validate() {
+            panic!("invalid EngineConfig: {what}");
+        }
         Self {
             app,
             cluster,
-            capacity: DEFAULT_CAPACITY, // paper: throughput saturates around C = 8
-            threads: std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1),
-            sched: Sched::default_from_env(),
-            split: Split::Adaptive,
-            edge_split: EdgeSplit::Adaptive,
-            pipeline: Pipeline::default_from_env(),
-            layout: Layout::default_from_env(),
-            admit: Admit::default_from_env(),
-            queue_bound: None,
+            capacity: cfg.capacity,
+            threads: cfg.threads,
+            sched: cfg.sched,
+            split: cfg.split,
+            edge_split: cfg.edge_split,
+            pipeline: cfg.pipeline,
+            layout: cfg.layout,
+            admit: cfg.admit,
+            queue_bound: cfg.queue_bound,
             last_round_messages: 0,
             last_compute_imbalance: 0.0,
             seen_max_fan: 0,
@@ -1709,7 +1926,7 @@ impl<A: QueryApp> Engine<A> {
             results: Vec::new(),
             next_qid: 0,
             clock: 0.0,
-            max_supersteps: DEFAULT_MAX_SUPERSTEPS,
+            max_supersteps: cfg.max_supersteps,
             metrics: EngineMetrics::default(),
             lane_scratch: Vec::new(),
             exchange_scratch: Vec::new(),
@@ -3126,5 +3343,119 @@ mod tests {
         assert_eq!(overlap_seconds(&[]), 0.0);
         let log = [(PHASE_COMPUTE, 0, 10 * S), (PHASE_EXCHANGE, 5 * S, 5 * S)];
         assert_eq!(overlap_seconds(&log), 0.0);
+    }
+
+    #[test]
+    fn engine_config_round_trips_every_variant() {
+        let cfgs = [
+            EngineConfig::default(),
+            EngineConfig {
+                capacity: 17,
+                threads: 3,
+                sched: Sched::Static,
+                split: Split::MaxTaskVertices(128),
+                edge_split: EdgeSplit::MaxFanout(512),
+                pipeline: Pipeline::On,
+                layout: Layout::Hashed,
+                admit: Admit::Static(5),
+                queue_bound: Some(64),
+                max_supersteps: 42,
+            },
+            EngineConfig {
+                split: Split::Off,
+                edge_split: EdgeSplit::Off,
+                queue_bound: Some(1),
+                ..EngineConfig::default()
+            },
+        ];
+        for cfg in cfgs {
+            let bytes = cfg.to_bytes();
+            let got = EngineConfig::from_bytes(&bytes).expect("round trip");
+            assert_eq!(got, cfg);
+        }
+    }
+
+    #[test]
+    fn engine_config_decode_rejects_garbage_without_panicking() {
+        use crate::network::wire::WireError;
+        let wire = EngineConfig {
+            split: Split::MaxTaskVertices(128),
+            admit: Admit::Static(4),
+            queue_bound: Some(8),
+            ..EngineConfig::default()
+        }
+        .to_bytes();
+        // Every strict prefix fails cleanly.
+        for cut in 0..wire.len() {
+            assert!(
+                EngineConfig::from_bytes(&wire[..cut]).is_err(),
+                "prefix of {cut} bytes must fail"
+            );
+        }
+        // Trailing bytes are rejected (the handshake frame is exactly one
+        // config).
+        let mut long = wire.clone();
+        long.push(0);
+        assert_eq!(
+            EngineConfig::from_bytes(&long),
+            Err(WireError::Corrupt("trailing bytes"))
+        );
+        // A wrong version byte is rejected before anything else is read.
+        let mut vers = wire.clone();
+        vers[0] ^= 0xFF;
+        assert_eq!(
+            EngineConfig::from_bytes(&vers),
+            Err(WireError::Corrupt("engine-config version"))
+        );
+        // Single-byte corruption sweep: any verdict, never a panic.
+        for i in 0..wire.len() {
+            for flip in [0x01u8, 0x80, 0xFF] {
+                let mut bad = wire.clone();
+                bad[i] ^= flip;
+                let _ = EngineConfig::from_bytes(&bad);
+            }
+        }
+        // A structurally valid encoding of an invalid config (capacity 0)
+        // is caught by the builder invariants at decode time.
+        let mut zero_cap = EngineConfig::default();
+        zero_cap.capacity = 1;
+        let mut bytes = zero_cap.to_bytes();
+        // capacity is the u64 right after the version byte
+        bytes[1..9].copy_from_slice(&0u64.to_le_bytes());
+        assert_eq!(
+            EngineConfig::from_bytes(&bytes),
+            Err(WireError::Corrupt("capacity must be > 0"))
+        );
+    }
+
+    #[test]
+    fn with_config_applies_knobs_verbatim() {
+        use crate::apps::ppsp::VersionedBfs;
+        use crate::graph::gen;
+        let cfg = EngineConfig {
+            capacity: 3,
+            threads: 1,
+            sched: Sched::Static,
+            split: Split::Off,
+            edge_split: EdgeSplit::Off,
+            pipeline: Pipeline::Off,
+            layout: Layout::Hashed,
+            admit: Admit::Static(2),
+            queue_bound: Some(4),
+            max_supersteps: 7,
+        };
+        let g = gen::twitter_like(50, 3, 7101);
+        let eng = Engine::with_config(VersionedBfs::new(g), Cluster::new(2), 50, cfg);
+        assert_eq!(eng.capacity, 3);
+        assert_eq!(eng.threads, 1);
+        assert_eq!(eng.sched, Sched::Static);
+        assert_eq!(eng.split, Split::Off);
+        assert_eq!(eng.edge_split, EdgeSplit::Off);
+        assert_eq!(eng.pipeline, Pipeline::Off);
+        assert_eq!(eng.layout, Layout::Hashed);
+        // No capacity re-sync: the static budget stays what cfg said.
+        assert_eq!(eng.admit, Admit::Static(2));
+        assert_eq!(eng.queue_bound, Some(4));
+        assert_eq!(eng.max_supersteps, 7);
     }
 }

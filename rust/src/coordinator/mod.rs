@@ -113,12 +113,32 @@
 //! legitimately may (pipelining, adaptive admission) are held to the
 //! per-run snapshot oracle. Both gates run in the same two suites, plus
 //! the mutation-schedule fuzzer's randomized interleavings.
+//!
+//! Since the multi-process mode ([`remote::ProcEngine`]), the engine's
+//! process boundary is explicit: one coordinator process plus N worker
+//! processes (children of the same binary) connected over localhost TCP
+//! with the crate's length-prefixed framing. The whole configuration
+//! travels as one serializable [`EngineConfig`] — built in code or from
+//! the environment once, on the coordinator, via
+//! [`EngineConfig::from_env`], then shipped in its byte codec at the
+//! handshake so remote shards run under bit-identical knobs without
+//! re-reading any environment. Admission, epoch pinning, the aggregator
+//! fold and the simulated clock stay on the coordinator; compute and
+//! message delivery run in the workers with the destination-sharded
+//! exchange riding the wire through the same `merge_msg` chokepoints in
+//! the same source order — so the process count joins threads, scheduler,
+//! splits, layout and admission as one more axis the bit-identical output
+//! contract quantifies over.
 
 mod arena;
 mod engine;
 mod pool;
 mod query;
+pub mod remote;
 
 pub use arena::Layout;
-pub use engine::{Admit, EdgeSplit, Engine, Pipeline, Sched, Split};
+pub use engine::{Admit, EdgeSplit, Engine, EngineConfig, Pipeline, Sched, Split};
 pub use query::{QueryResult, VState};
+pub use remote::{
+    libtest_worker_args, maybe_serve_worker, procs_from_env, ProcEngine, WireApp,
+};

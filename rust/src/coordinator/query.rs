@@ -205,7 +205,7 @@ impl<A: QueryApp> WorkerShard<A> {
     /// mutations): the flat layout pre-sizes its handle table to the
     /// worker's share of that id space, so mid-flight epoch bumps never
     /// reshape a live table.
-    fn new(workers: usize, layout: Layout, n_vertices: usize) -> Self {
+    pub(crate) fn new(workers: usize, layout: Layout, n_vertices: usize) -> Self {
         Self {
             store: VStore::with_vertex_hint(layout, workers, n_vertices),
             active: Vec::new(),
@@ -410,6 +410,20 @@ impl<A: QueryApp> OrderedStaging<A> {
             index: FxHashMap::default(),
             slots: Vec::new(),
         }
+    }
+
+    /// Rebuild an ordered staging buffer from explicit `(dst, slot)` pairs
+    /// — the multi-process mode's decode path: a remote worker ships its
+    /// staged column as exactly these pairs in first-touch order, and the
+    /// receiving side reconstitutes the buffer (index included, first
+    /// occurrence wins) so delivery replays the identical order the
+    /// in-process exchange would have seen.
+    pub(crate) fn from_slots(slots: Vec<(VertexId, MsgSlot<A::Msg>)>) -> Self {
+        let mut index = FxHashMap::default();
+        for (i, (dst, _)) in slots.iter().enumerate() {
+            index.entry(*dst).or_insert(i);
+        }
+        Self { index, slots }
     }
 
     /// Stage one message, replaying the sender-side combiner against the
@@ -936,7 +950,7 @@ mod tests {
     #[test]
     fn split_items_replays_serial_order_and_dedups_actives() {
         let app = SumBelow100;
-        let mut shard = WorkerShard::<SumBelow100>::new(2, Layout::Hashed);
+        let mut shard = WorkerShard::<SumBelow100>::new(2, Layout::Hashed, 0);
         // Receiver 2 is new to the query (no VQ-data yet — the receiver
         // pass must insert it); actives are [4, 2], and 2 also received,
         // so the active pass must dedup it exactly like the serial loop.
@@ -977,7 +991,7 @@ mod tests {
         // out in `recv` delivery order, actives dedup, and the arena's
         // state slots back every work-item pointer.
         let app = SumBelow100;
-        let mut shard = WorkerShard::<SumBelow100>::new(2, Layout::Flat);
+        let mut shard = WorkerShard::<SumBelow100>::new(2, Layout::Flat, 0);
         let VStore::Flat(fs) = &mut shard.store else {
             unreachable!("Layout::Flat was requested")
         };
@@ -1044,7 +1058,7 @@ mod tests {
     #[test]
     fn staging_column_replays_combiner_in_subrange_order() {
         let app = SumBelow100;
-        let mut shard = WorkerShard::<SumBelow100>::new(2, Layout::Hashed);
+        let mut shard = WorkerShard::<SumBelow100>::new(2, Layout::Hashed, 0);
         let mut bufs = vec![SubBuf::<SumBelow100>::new(2), SubBuf::new(2)];
         bufs[0].stream.stage(&app, 0, 8, 7);
         bufs[0].stream.stage(&app, 0, 8, 3); // combines: 7 + 3 = 10 < 100

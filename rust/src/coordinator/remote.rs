@@ -1,0 +1,1704 @@
+//! Multi-process execution: one coordinator plus N worker processes over
+//! localhost TCP.
+//!
+//! [`ProcEngine`] is the process-count axis of the determinism contract.
+//! With `procs == 1` it IS the in-process [`Engine`] (zero sockets, zero
+//! bytes on the wire); with `procs >= 2` it spawns N child processes of
+//! the *same binary* (`std::env::current_exe()`), connects them over
+//! loopback TCP with the crate's length-prefixed framing
+//! ([`crate::network::encode_frame`] / [`crate::network::FrameDecoder`]),
+//! and splits every super-round into three request/reply RPCs:
+//!
+//! 1. **StartRound → Columns.** The coordinator broadcasts the epoch
+//!    retirement watermark, any queued [`MutationBatch`]es, the queries
+//!    admitted this round (with their pinned epoch and `|V|`), and every
+//!    running query's `(step, agg_prev)`. Each worker process applies the
+//!    batches to its graph replica, seeds shards for the admitted
+//!    queries, runs the compute phase serially over the BSP workers it
+//!    owns (`w % procs == rank`) via the exact same
+//!    [`run_task`](super::engine) body as the in-process engine, and
+//!    replies with the staged columns destined for *other* processes.
+//! 2. **Deliver → FoldReports.** The coordinator relays each column —
+//!    body bytes verbatim, never decoded — to the process owning its
+//!    destination worker. Workers replay delivery per destination shard
+//!    in source-worker order, interleaving local staged buffers with
+//!    decoded remote columns through the one
+//!    [`deliver_into_sink`]/`merge_msg` chokepoint, so per-destination
+//!    delivery order is preserved byte-for-byte. The reply carries each
+//!    owned shard's fold inputs: integer phase counters, the aggregator
+//!    partial, the `force_terminate` flag, and the quiescence gauges.
+//! 3. **Report → Touched** (only on rounds where a query converges). The
+//!    reporting worker ships its shards' touched `(v, VQ)` entries in
+//!    first-touch order; the coordinator assembles them in global
+//!    worker order and runs `finish` locally.
+//!
+//! Everything *decision-shaped* stays on the coordinator, replicating the
+//! in-process engine formula for formula: admission (both `Admit`
+//! planners, fed by the replicated `last_round_messages` saturation
+//! signal), epoch pinning and retirement, the per-query fold
+//! (worker-order `agg_merge`, `master_step`, lifecycle), the simulated
+//! clock (per-lane integer counters × the cluster cost model), and
+//! result assembly. That is what makes `QueryResult::out` — and the
+//! whole `(epoch, out)` stream under streaming mutations — bit-identical
+//! across process counts, exactly as it is across thread counts.
+//!
+//! The handshake ships the full [`EngineConfig`] in its zero-dependency
+//! byte codec plus an app *spec* ([`WireApp::spec_bytes`]) from which the
+//! worker rebuilds an identical app replica (graph included). Worker
+//! shards always use [`Layout::Flat`]: its insertion-ordered staging
+//! buffers give the wire encoder the explicit first-touch slot order the
+//! hashed layout keeps implicit. Worker compute is the serial reference
+//! path (`EdgePolicy::Never`, no pool) — the knobs in the shipped config
+//! that tune intra-process parallelism are validated but not yet acted
+//! on by workers; they exist so a future worker-side pool sees the same
+//! configuration the coordinator does.
+//!
+//! Metrics: [`crate::metrics::EngineMetrics::bytes_on_wire`] counts every
+//! framed byte the coordinator sends *and* receives (payload + the 4-byte
+//! length prefix); `rpc_round_trips` counts request/reply pairs per
+//! worker. Both are exactly 0 in `procs == 1` mode.
+
+use std::collections::VecDeque;
+use std::io::{Read as _, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::time::Instant;
+
+use super::arena::{deliver_into_sink, Layout, StagedBuf};
+use super::engine::{
+    run_task, Admit, EdgePolicy, Engine, EngineConfig, Task, ADMIT_BUSY_MSGS_PER_SLOT,
+};
+use super::query::{MsgSlot, OrderedStaging, Phase, QueryResult, VState, WorkerShard};
+use crate::graph::{Epoch, MutationBatch, VertexId};
+use crate::metrics::{EngineMetrics, QueryStats};
+use crate::network::wire::{
+    self, put_bytes, put_f64, put_u32, put_u64, put_u8, WireError, WireReader, WireResult,
+};
+use crate::network::{encode_frame, Cluster, FrameDecoder};
+use crate::util::FxHashMap;
+use crate::vertex::{MasterAction, QueryApp, QueryId};
+
+/// Frame tags, coordinator star topology. Worker → coordinator: `Hello`,
+/// `Columns`, `FoldReports`, `Touched`. Coordinator → worker: the rest.
+const TAG_HELLO: u8 = 0x01;
+const TAG_INIT: u8 = 0x02;
+const TAG_START_ROUND: u8 = 0x03;
+const TAG_COLUMNS: u8 = 0x04;
+const TAG_DELIVER: u8 = 0x05;
+const TAG_FOLD: u8 = 0x06;
+const TAG_REPORT_REQ: u8 = 0x07;
+const TAG_TOUCHED: u8 = 0x08;
+const TAG_SHUTDOWN: u8 = 0x09;
+
+/// Upper bound on messages per wire slot. Staged slots are
+/// *post-combiner*, so a slot beyond this is a corrupt count, not data —
+/// the guard keeps a hostile count from spinning the decoder even for
+/// zero-byte message types, where `remaining()` cannot bound it.
+const MAX_WIRE_MSGS_PER_SLOT: usize = 1 << 20;
+
+/// Env knobs a worker process is identified by. Set only by
+/// [`ProcEngine`]'s spawner — never exported by anything else — so
+/// [`maybe_serve_worker`] in an ordinary run is an immediate `false`.
+pub const WORKER_ADDR_ENV: &str = "QUEGEL_WORKER_ADDR";
+/// See [`WORKER_ADDR_ENV`].
+pub const WORKER_RANK_ENV: &str = "QUEGEL_WORKER_RANK";
+
+/// Process count requested by the `QUEGEL_TEST_PROCS` test-matrix env
+/// hook (the CI process axis); 1 — in-process mode — when unset or
+/// unparsable.
+pub fn procs_from_env() -> usize {
+    match std::env::var("QUEGEL_TEST_PROCS") {
+        Ok(s) => s.trim().parse::<usize>().ok().filter(|&p| p >= 1).unwrap_or(1),
+        Err(_) => 1,
+    }
+}
+
+/// The child argv that makes a libtest binary run ONLY the given worker
+/// entry test: pass the result as `child_args` when the calling binary is
+/// a `cargo test` harness (the entry test's body is one
+/// [`maybe_serve_worker`] call). Binaries with a `main` put the hook at
+/// the top of `main` and pass `&[]` instead.
+pub fn libtest_worker_args(entry_test: &str) -> Vec<String> {
+    vec![
+        entry_test.to_string(),
+        "--exact".to_string(),
+        "--test-threads=1".to_string(),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// WireApp: the per-app serialization seam
+// ---------------------------------------------------------------------------
+
+/// What an app must add to [`QueryApp`] to ride the wire: a *spec* that
+/// rebuilds an identical replica in a worker process, plus byte codecs
+/// for every app-typed value the protocol carries. All codecs are
+/// deterministic and self-delimiting (decode consumes exactly what
+/// encode wrote), so replicas stay bit-identical and frames need no
+/// per-field length prefixes.
+pub trait WireApp: QueryApp + Sized {
+    /// Serialize the app's complete current state. Called once, at
+    /// spawn time — apps with versioned state may require spawning
+    /// before any mutation is applied (the engine's constructor path
+    /// guarantees that) and should assert so here.
+    fn spec_bytes(&self) -> Vec<u8>;
+    /// Rebuild a replica from [`WireApp::spec_bytes`] output.
+    fn from_spec(r: &mut WireReader<'_>) -> WireResult<Self>;
+    fn enc_query(q: &Self::Query, out: &mut Vec<u8>);
+    fn dec_query(r: &mut WireReader<'_>) -> WireResult<Self::Query>;
+    fn enc_msg(m: &Self::Msg, out: &mut Vec<u8>);
+    fn dec_msg(r: &mut WireReader<'_>) -> WireResult<Self::Msg>;
+    fn enc_vq(vq: &Self::VQ, out: &mut Vec<u8>);
+    fn dec_vq(r: &mut WireReader<'_>) -> WireResult<Self::VQ>;
+    fn enc_agg(a: &Self::Agg, out: &mut Vec<u8>);
+    fn dec_agg(r: &mut WireReader<'_>) -> WireResult<Self::Agg>;
+    fn enc_out(o: &Self::Out, out: &mut Vec<u8>);
+    fn dec_out(r: &mut WireReader<'_>) -> WireResult<Self::Out>;
+}
+
+// ---------------------------------------------------------------------------
+// Message-column and result codecs
+// ---------------------------------------------------------------------------
+
+/// Encode one staged column (every slot bound for one destination worker)
+/// in first-touch slot order — the order [`OrderedStaging`] materializes
+/// and delivery replays. Slots are post-combiner, exactly what the
+/// in-process exchange would hand the destination.
+pub(crate) fn encode_column_body<A: WireApp>(
+    slots: &[(VertexId, MsgSlot<A::Msg>)],
+    out: &mut Vec<u8>,
+) {
+    put_u32(out, slots.len() as u32);
+    for (dst, slot) in slots {
+        put_u32(out, *dst);
+        let msgs = slot.as_slice();
+        put_u32(out, msgs.len() as u32);
+        for m in msgs {
+            A::enc_msg(m, out);
+        }
+    }
+}
+
+/// Decode a column body back into an insertion-ordered staging buffer.
+/// Single-message slots decode to the inline [`MsgSlot::One`]
+/// representation — unobservable either way, since delivery only reads
+/// the slice view. Corrupt input is an `Err`, never a panic or an
+/// unbounded allocation.
+pub(crate) fn decode_column_body<A: WireApp>(body: &[u8]) -> WireResult<OrderedStaging<A>> {
+    let mut r = WireReader::new(body);
+    // Each slot is at least dst(4) + count(4) bytes.
+    let n = r.count(8, "column slot count")?;
+    let mut slots: Vec<(VertexId, MsgSlot<A::Msg>)> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let dst = r.u32()?;
+        let n_msgs = r.u32()? as usize;
+        if n_msgs == 0 {
+            return Err(WireError::Corrupt("empty message slot"));
+        }
+        if n_msgs > MAX_WIRE_MSGS_PER_SLOT {
+            return Err(WireError::Corrupt("message count out of range"));
+        }
+        if n_msgs == 1 {
+            slots.push((dst, MsgSlot::One(A::dec_msg(&mut r)?)));
+        } else {
+            let mut v = Vec::with_capacity(n_msgs.min(r.remaining().max(1)));
+            for _ in 0..n_msgs {
+                v.push(A::dec_msg(&mut r)?);
+            }
+            slots.push((dst, MsgSlot::Many(v)));
+        }
+    }
+    r.expect_end()?;
+    Ok(OrderedStaging::from_slots(slots))
+}
+
+/// Encode a completed [`QueryResult`] — the codec a serving process uses
+/// to ship finished results (output + full per-query stats) off-box.
+pub fn encode_result<A: WireApp>(res: &QueryResult<A::Out>, out: &mut Vec<u8>) {
+    put_u64(out, res.qid);
+    A::enc_out(&res.out, out);
+    let s = &res.stats;
+    put_u64(out, s.qid);
+    put_u64(out, s.supersteps);
+    put_u64(out, s.messages);
+    put_u64(out, s.bytes);
+    put_u64(out, s.touched);
+    put_f64(out, s.access_rate);
+    put_f64(out, s.arrived_at);
+    put_f64(out, s.submitted_at);
+    put_f64(out, s.started_at);
+    put_f64(out, s.finished_at);
+    put_u8(out, s.truncated as u8);
+    put_u64(out, s.epoch);
+}
+
+/// Inverse of [`encode_result`].
+pub fn decode_result<A: WireApp>(r: &mut WireReader<'_>) -> WireResult<QueryResult<A::Out>> {
+    let qid = r.u64()?;
+    let out = A::dec_out(r)?;
+    let stats = QueryStats {
+        qid: r.u64()?,
+        supersteps: r.u64()?,
+        messages: r.u64()?,
+        bytes: r.u64()?,
+        touched: r.u64()?,
+        access_rate: r.f64()?,
+        arrived_at: r.f64()?,
+        submitted_at: r.f64()?,
+        started_at: r.f64()?,
+        finished_at: r.f64()?,
+        truncated: match r.u8()? {
+            0 => false,
+            1 => true,
+            _ => return Err(WireError::Corrupt("truncated flag")),
+        },
+        epoch: r.u64()?,
+    };
+    Ok(QueryResult { qid, out, stats })
+}
+
+// ---------------------------------------------------------------------------
+// Framed connection
+// ---------------------------------------------------------------------------
+
+/// One framed peer: a TCP stream, the incremental frame decoder, and a
+/// read scratch buffer. Both sides fully read each request before
+/// replying and fully write each request before reading replies, so the
+/// star never deadlocks.
+struct Conn {
+    stream: TcpStream,
+    dec: FrameDecoder,
+    scratch: Vec<u8>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Self {
+        // Request/reply per round: latency matters, Nagle does not help.
+        let _ = stream.set_nodelay(true);
+        Self {
+            stream,
+            dec: FrameDecoder::new(),
+            scratch: vec![0u8; 64 * 1024],
+        }
+    }
+
+    /// Frame and send `payload`; returns framed bytes written.
+    fn send(&mut self, payload: &[u8]) -> std::io::Result<u64> {
+        let frame = encode_frame(payload);
+        self.stream.write_all(&frame)?;
+        Ok(frame.len() as u64)
+    }
+
+    /// Block until one whole frame arrives; malformed framing surfaces as
+    /// `InvalidData`, a peer closing mid-frame as `UnexpectedEof`.
+    fn recv(&mut self) -> std::io::Result<Vec<u8>> {
+        loop {
+            match self.dec.try_next_frame() {
+                Ok(Some(frame)) => return Ok(frame),
+                Ok(None) => {}
+                Err(e) => {
+                    return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e));
+                }
+            }
+            let n = self.stream.read(&mut self.scratch)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "peer closed mid-frame",
+                ));
+            }
+            self.dec.push(&self.scratch[..n]);
+        }
+    }
+}
+
+fn send_counted(conn: &mut Conn, payload: &[u8], bytes_on_wire: &mut u64) {
+    let n = conn
+        .send(payload)
+        .expect("coordinator: send to worker process");
+    *bytes_on_wire += n;
+}
+
+fn recv_counted(conn: &mut Conn, bytes_on_wire: &mut u64) -> Vec<u8> {
+    let frame = conn
+        .recv()
+        .expect("coordinator: recv from worker process");
+    *bytes_on_wire += frame.len() as u64 + 4;
+    frame
+}
+
+/// Coordinator-side decode helper: a malformed frame from our own worker
+/// is a protocol bug, so it fails loudly with context.
+fn must<T>(r: WireResult<T>, what: &str) -> T {
+    match r {
+        Ok(v) => v,
+        Err(e) => panic!("coordinator: malformed worker frame ({what}): {e}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ProcEngine: the public face
+// ---------------------------------------------------------------------------
+
+/// Engine front end with a process-count axis. `procs == 1` delegates to
+/// the in-process [`Engine`] outright; `procs >= 2` runs the
+/// coordinator/worker protocol described in the module docs. The serving
+/// API mirrors the engine subset the benches, tests and examples drive:
+/// submission, mutation, super-rounds, results, metrics, clock.
+pub struct ProcEngine<A: WireApp> {
+    mode: Mode<A>,
+}
+
+enum Mode<A: WireApp> {
+    Local(Engine<A>),
+    Remote(Box<RemoteCoordinator<A>>),
+}
+
+impl<A: WireApp> ProcEngine<A> {
+    /// Build the engine. For `procs >= 2` this spawns the worker
+    /// processes (children of the current binary, `child_args` argv —
+    /// see [`libtest_worker_args`]), completes the handshake (config +
+    /// app spec), and leaves the fleet idle awaiting the first round.
+    /// Panics on spawn/handshake failure: a half-formed fleet is not a
+    /// state to limp on in.
+    pub fn new(
+        app: A,
+        cluster: Cluster,
+        n_vertices: usize,
+        cfg: EngineConfig,
+        procs: usize,
+        child_args: &[String],
+    ) -> Self {
+        assert!(procs >= 1, "procs must be >= 1");
+        if procs == 1 {
+            return Self {
+                mode: Mode::Local(Engine::with_config(app, cluster, n_vertices, cfg)),
+            };
+        }
+        Self {
+            mode: Mode::Remote(Box::new(RemoteCoordinator::new(
+                app, cluster, n_vertices, cfg, procs, child_args,
+            ))),
+        }
+    }
+
+    /// Worker-process count (1 = in-process mode).
+    pub fn procs(&self) -> usize {
+        match &self.mode {
+            Mode::Local(_) => 1,
+            Mode::Remote(rc) => rc.procs,
+        }
+    }
+
+    /// See [`Engine::submit`].
+    pub fn submit(&mut self, q: A::Query) -> QueryId {
+        match &mut self.mode {
+            Mode::Local(eng) => eng.submit(q),
+            Mode::Remote(rc) => {
+                let clock = rc.clock;
+                rc.try_submit(q, clock)
+                    .unwrap_or_else(|_| panic!("submission queue full: use try_submit"))
+            }
+        }
+    }
+
+    /// See [`Engine::try_submit`].
+    pub fn try_submit(&mut self, q: A::Query, arrived_at: f64) -> Result<QueryId, A::Query> {
+        match &mut self.mode {
+            Mode::Local(eng) => eng.try_submit(q, arrived_at),
+            Mode::Remote(rc) => rc.try_submit(q, arrived_at),
+        }
+    }
+
+    /// See [`Engine::try_mutate`].
+    pub fn try_mutate(
+        &mut self,
+        batch: MutationBatch,
+        arrived_at: f64,
+    ) -> Result<(), MutationBatch> {
+        match &mut self.mode {
+            Mode::Local(eng) => eng.try_mutate(batch, arrived_at),
+            Mode::Remote(rc) => rc.try_mutate(batch),
+        }
+    }
+
+    /// See [`Engine::super_round`].
+    pub fn super_round(&mut self) -> bool {
+        match &mut self.mode {
+            Mode::Local(eng) => eng.super_round(),
+            Mode::Remote(rc) => rc.super_round(),
+        }
+    }
+
+    /// See [`Engine::run_until_idle`].
+    pub fn run_until_idle(&mut self) {
+        while self.super_round() {}
+    }
+
+    /// See [`Engine::take_results`].
+    pub fn take_results(&mut self) -> Vec<QueryResult<A::Out>> {
+        match &mut self.mode {
+            Mode::Local(eng) => eng.take_results(),
+            Mode::Remote(rc) => std::mem::take(&mut rc.results),
+        }
+    }
+
+    /// See [`Engine::metrics`].
+    pub fn metrics(&self) -> &EngineMetrics {
+        match &self.mode {
+            Mode::Local(eng) => eng.metrics(),
+            Mode::Remote(rc) => &rc.metrics,
+        }
+    }
+
+    /// See [`Engine::sim_time`].
+    pub fn sim_time(&self) -> f64 {
+        match &self.mode {
+            Mode::Local(eng) => eng.sim_time(),
+            Mode::Remote(rc) => rc.clock,
+        }
+    }
+
+    /// See [`Engine::epoch`].
+    pub fn epoch(&self) -> Epoch {
+        match &self.mode {
+            Mode::Local(eng) => eng.epoch(),
+            Mode::Remote(rc) => rc.epoch,
+        }
+    }
+
+    /// See [`Engine::queue_depth`].
+    pub fn queue_depth(&self) -> usize {
+        match &self.mode {
+            Mode::Local(eng) => eng.queue_depth(),
+            Mode::Remote(rc) => rc.queue.len(),
+        }
+    }
+
+    /// Stop the worker fleet (no-op in-process, idempotent). Also runs
+    /// on drop; call explicitly to observe the teardown point.
+    pub fn shutdown(&mut self) {
+        if let Mode::Remote(rc) = &mut self.mode {
+            rc.shutdown();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+/// Waiting submission, mirror of the in-process queue entry.
+struct QueuedReq<Q> {
+    id: QueryId,
+    query: Q,
+    arrived_at: f64,
+    enqueued_at: f64,
+    heavy: bool,
+}
+
+/// Coordinator-side runtime of one in-flight query: everything the
+/// in-process [`super::query::QueryRt`] tracks EXCEPT the shards, which
+/// live in the worker processes.
+struct RemoteRt<A: WireApp> {
+    id: QueryId,
+    query: A::Query,
+    step: u64,
+    phase: Phase,
+    agg_prev: A::Agg,
+    terminated: bool,
+    heavy: bool,
+    epoch: Epoch,
+    n_vertices: usize,
+    stats: QueryStats,
+}
+
+/// One shard's fold inputs, decoded from a worker's `FoldReports` frame.
+struct FoldRec<A: WireApp> {
+    calls: u64,
+    handled: u64,
+    sent: u64,
+    delivered: u64,
+    active: u64,
+    pending: u64,
+    terminated: bool,
+    agg: A::Agg,
+}
+
+struct RemoteCoordinator<A: WireApp> {
+    app: A,
+    cluster: Cluster,
+    cfg: EngineConfig,
+    procs: usize,
+    conns: Vec<Conn>,
+    children: Vec<Child>,
+    shut: bool,
+    queue: VecDeque<QueuedReq<A::Query>>,
+    muts: Vec<MutationBatch>,
+    /// Batches applied locally but not yet shipped (mutation-only rounds
+    /// return before any RPC): prepended to the next `StartRound`.
+    unsent_batches: Vec<Vec<u8>>,
+    inflight: Vec<RemoteRt<A>>,
+    results: Vec<QueryResult<A::Out>>,
+    next_qid: QueryId,
+    clock: f64,
+    epoch: Epoch,
+    n_vertices: usize,
+    last_round_messages: u64,
+    /// Watermark the workers retire to at their next `StartRound`: the
+    /// value of the coordinator's own most recent `retire_epochs` call,
+    /// so replicas retire at the same point in the round sequence.
+    retire_oldest: Epoch,
+    metrics: EngineMetrics,
+}
+
+impl<A: WireApp> RemoteCoordinator<A> {
+    fn new(
+        app: A,
+        cluster: Cluster,
+        n_vertices: usize,
+        cfg: EngineConfig,
+        procs: usize,
+        child_args: &[String],
+    ) -> Self {
+        if let Err(what) = cfg.validate() {
+            panic!("invalid EngineConfig: {what}");
+        }
+        let listener =
+            TcpListener::bind(("127.0.0.1", 0)).expect("coordinator: bind loopback listener");
+        let addr = listener
+            .local_addr()
+            .expect("coordinator: listener address");
+        let exe = std::env::current_exe().expect("coordinator: current_exe for worker spawn");
+        let mut children = Vec::with_capacity(procs);
+        for rank in 0..procs {
+            let child = Command::new(&exe)
+                .args(child_args)
+                .env(WORKER_ADDR_ENV, addr.to_string())
+                .env(WORKER_RANK_ENV, rank.to_string())
+                .stdin(Stdio::null())
+                // libtest chatter on stdout would corrupt nothing (the
+                // protocol rides the socket) but keeps logs clean;
+                // panics still reach the parent's stderr.
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .unwrap_or_else(|e| panic!("coordinator: spawn worker rank {rank}: {e}"));
+            children.push(child);
+        }
+        let mut bytes_on_wire = 0u64;
+        let mut slots: Vec<Option<Conn>> = (0..procs).map(|_| None).collect();
+        for _ in 0..procs {
+            let (stream, _) = listener.accept().expect("coordinator: accept worker");
+            let mut conn = Conn::new(stream);
+            let hello = recv_counted(&mut conn, &mut bytes_on_wire);
+            let mut r = WireReader::new(&hello);
+            let tag = must(r.u8(), "hello tag");
+            assert_eq!(tag, TAG_HELLO, "coordinator: expected Hello frame");
+            let rank = must(r.u32(), "hello rank") as usize;
+            must(r.expect_end(), "hello tail");
+            assert!(rank < procs, "coordinator: worker rank out of range");
+            assert!(slots[rank].is_none(), "coordinator: duplicate worker rank");
+            slots[rank] = Some(conn);
+        }
+        let mut conns: Vec<Conn> = slots.into_iter().map(|c| c.unwrap()).collect();
+
+        let mut init = Vec::new();
+        put_u8(&mut init, TAG_INIT);
+        put_u32(&mut init, procs as u32);
+        put_u32(&mut init, cluster.workers as u32);
+        put_u64(&mut init, n_vertices as u64);
+        put_bytes(&mut init, &cfg.to_bytes());
+        put_bytes(&mut init, &app.spec_bytes());
+        for conn in conns.iter_mut() {
+            send_counted(conn, &init, &mut bytes_on_wire);
+        }
+
+        let mut metrics = EngineMetrics::default();
+        metrics.bytes_on_wire = bytes_on_wire;
+        // Hello/Init is the handshake round trip, one per worker.
+        metrics.rpc_round_trips = procs as u64;
+        Self {
+            app,
+            cluster,
+            cfg,
+            procs,
+            conns,
+            children,
+            shut: false,
+            queue: VecDeque::new(),
+            muts: Vec::new(),
+            unsent_batches: Vec::new(),
+            inflight: Vec::new(),
+            results: Vec::new(),
+            next_qid: 0,
+            clock: 0.0,
+            epoch: 0,
+            n_vertices,
+            last_round_messages: 0,
+            retire_oldest: 0,
+            metrics,
+        }
+    }
+
+    /// Mirror of [`Engine::try_submit`], including the frozen
+    /// `is_heavy` evaluation the admission planner replays.
+    fn try_submit(&mut self, q: A::Query, arrived_at: f64) -> Result<QueryId, A::Query> {
+        if let Some(bound) = self.cfg.queue_bound {
+            if self.queue.len() >= bound {
+                return Err(q);
+            }
+        }
+        let id = self.next_qid;
+        self.next_qid += 1;
+        let heavy = self.app.is_heavy(&q);
+        self.queue.push_back(QueuedReq {
+            id,
+            query: q,
+            arrived_at,
+            enqueued_at: self.clock,
+            heavy,
+        });
+        Ok(id)
+    }
+
+    fn try_mutate(&mut self, batch: MutationBatch) -> Result<(), MutationBatch> {
+        if !self.app.supports_mutations() {
+            return Err(batch);
+        }
+        self.muts.push(batch);
+        Ok(())
+    }
+
+    /// Mirror of the in-process `refresh_epoch_pin`, additionally
+    /// recording the watermark the workers will replay next round.
+    fn refresh_epoch_pin(&mut self) {
+        if !self.app.supports_mutations() {
+            return;
+        }
+        let oldest = self
+            .inflight
+            .iter()
+            .map(|rt| rt.epoch)
+            .min()
+            .unwrap_or(self.epoch);
+        self.metrics.oldest_pinned_epoch = oldest;
+        self.app.retire_epochs(oldest);
+        self.retire_oldest = oldest;
+    }
+
+    /// One distributed super-round, replicating the in-process barrier
+    /// path decision for decision (see the module docs). Returns false
+    /// when there was nothing to do.
+    fn super_round(&mut self) -> bool {
+        // Mutations land at the boundary, exactly as in-process: applied
+        // to the coordinator replica now (the admission hooks below need
+        // the new epoch), shipped to the workers with the next
+        // StartRound.
+        if !self.muts.is_empty() {
+            for batch in std::mem::take(&mut self.muts) {
+                let mut enc = Vec::new();
+                wire::encode_mutation_batch(&batch, &mut enc);
+                self.unsent_batches.push(enc);
+                let applied = self.app.apply_mutations(&batch);
+                self.epoch = applied.epoch;
+                self.n_vertices = applied.n_vertices;
+                self.metrics.epochs_applied += 1;
+                self.metrics.delta_bytes_peak = self
+                    .metrics
+                    .delta_bytes_peak
+                    .max(applied.delta_bytes as u64);
+            }
+        }
+        if self.inflight.is_empty() && self.queue.is_empty() {
+            self.refresh_epoch_pin();
+            return false;
+        }
+        let wall_start = Instant::now();
+        let workers = self.cluster.workers;
+
+        // --- Admission: the planner replica. Same inputs as in-process
+        // (queue order, heavy flags, in-flight set, the previous round's
+        // message counter), same outputs, same deferral accounting.
+        let mut admitted: Vec<QueuedReq<A::Query>> = Vec::new();
+        let capacity = self.cfg.capacity;
+        match self.cfg.admit {
+            Admit::Static(c) => {
+                let budget = c.min(capacity);
+                while self.inflight.len() + admitted.len() < budget {
+                    let Some(e) = self.queue.pop_front() else {
+                        break;
+                    };
+                    admitted.push(e);
+                }
+            }
+            Admit::Adaptive => {
+                let saturated =
+                    self.last_round_messages > ADMIT_BUSY_MSGS_PER_SLOT * capacity as u64;
+                let light_waiting = self.queue.iter().any(|e| !e.heavy);
+                let div = if saturated && light_waiting { 8 } else { 4 };
+                let slice = (capacity / div).max(1);
+                let heavy_inflight = self.inflight.iter().filter(|rt| rt.heavy).count();
+                let mut heavy_budget = slice.saturating_sub(heavy_inflight);
+                let mut kept: VecDeque<QueuedReq<A::Query>> =
+                    VecDeque::with_capacity(self.queue.len());
+                while let Some(e) = self.queue.pop_front() {
+                    if self.inflight.len() + admitted.len() >= capacity {
+                        kept.push_back(e);
+                        continue;
+                    }
+                    if e.heavy && heavy_budget == 0 {
+                        self.metrics.admit_deferrals += 1;
+                        kept.push_back(e);
+                        continue;
+                    }
+                    if e.heavy {
+                        heavy_budget -= 1;
+                    }
+                    admitted.push(e);
+                }
+                self.queue = kept;
+            }
+        }
+        let mut metas: Vec<(QueryId, f64, f64, bool)> = Vec::with_capacity(admitted.len());
+        let mut qs: Vec<A::Query> = Vec::with_capacity(admitted.len());
+        for e in admitted {
+            metas.push((e.id, e.arrived_at, e.enqueued_at, e.heavy));
+            qs.push(e.query);
+        }
+        if !qs.is_empty() {
+            self.app.pin_epoch(&mut qs, self.epoch);
+            self.app.admit_batch(&mut qs);
+        }
+        let first_new = self.inflight.len();
+        for ((id, arrived_at, submitted_at, heavy), q) in metas.into_iter().zip(qs) {
+            let mut rt = RemoteRt {
+                id,
+                query: q,
+                step: 0,
+                phase: Phase::Running,
+                agg_prev: A::Agg::default(),
+                terminated: false,
+                heavy,
+                epoch: self.epoch,
+                n_vertices: self.n_vertices,
+                stats: QueryStats {
+                    qid: id,
+                    arrived_at,
+                    submitted_at,
+                    epoch: self.epoch,
+                    ..Default::default()
+                },
+            };
+            rt.stats.started_at = self.clock;
+            self.inflight.push(rt);
+        }
+        self.metrics.peak_inflight = self.metrics.peak_inflight.max(self.inflight.len());
+        if self.inflight.is_empty() {
+            self.refresh_epoch_pin();
+            return false;
+        }
+
+        // --- RPC 1: StartRound (identical broadcast; workers filter by
+        // shard ownership) → Columns.
+        let mut start = Vec::new();
+        put_u8(&mut start, TAG_START_ROUND);
+        // Retire first, then apply: replays the in-process temporal
+        // order (retirement ran at the END of the previous round, before
+        // this round's batches landed).
+        put_u64(&mut start, self.retire_oldest);
+        put_u32(&mut start, self.unsent_batches.len() as u32);
+        for b in self.unsent_batches.drain(..) {
+            put_bytes(&mut start, &b);
+        }
+        put_u32(&mut start, (self.inflight.len() - first_new) as u32);
+        for rt in &self.inflight[first_new..] {
+            put_u64(&mut start, rt.id);
+            put_u64(&mut start, rt.epoch);
+            put_u64(&mut start, rt.n_vertices as u64);
+            A::enc_query(&rt.query, &mut start);
+        }
+        // Every in-flight query is Running here (reporting queries left
+        // at the end of the previous round), each computing step+1.
+        put_u32(&mut start, self.inflight.len() as u32);
+        for rt in &self.inflight {
+            debug_assert_eq!(rt.phase, Phase::Running);
+            put_u64(&mut start, rt.id);
+            put_u64(&mut start, rt.step + 1);
+            A::enc_agg(&rt.agg_prev, &mut start);
+        }
+        for conn in self.conns.iter_mut() {
+            send_counted(conn, &start, &mut self.metrics.bytes_on_wire);
+        }
+
+        struct ColumnRec {
+            qid: QueryId,
+            src_w: u32,
+            dst_w: u32,
+            body: Vec<u8>,
+        }
+        let mut outgoing: Vec<Vec<ColumnRec>> = (0..self.procs).map(|_| Vec::new()).collect();
+        for conn in self.conns.iter_mut() {
+            let frame = recv_counted(conn, &mut self.metrics.bytes_on_wire);
+            let mut r = WireReader::new(&frame);
+            let tag = must(r.u8(), "columns tag");
+            assert_eq!(tag, TAG_COLUMNS, "coordinator: expected Columns frame");
+            let n = must(r.count(20, "column count"), "column count");
+            for _ in 0..n {
+                let qid = must(r.u64(), "column qid");
+                let src_w = must(r.u32(), "column src");
+                let dst_w = must(r.u32(), "column dst");
+                // Relay verbatim: the coordinator never decodes message
+                // bodies, only reads the length prefix.
+                let body = must(r.bytes(), "column body").to_vec();
+                let dest = dst_w as usize % self.procs;
+                outgoing[dest].push(ColumnRec { qid, src_w, dst_w, body });
+            }
+            must(r.expect_end(), "columns tail");
+        }
+        self.metrics.rpc_round_trips += self.procs as u64;
+
+        // --- RPC 2: Deliver (relay, possibly empty — workers must still
+        // deliver their local columns and fold) → FoldReports.
+        for (rank, cols) in outgoing.into_iter().enumerate() {
+            let mut f = Vec::new();
+            put_u8(&mut f, TAG_DELIVER);
+            put_u32(&mut f, cols.len() as u32);
+            for c in cols {
+                put_u64(&mut f, c.qid);
+                put_u32(&mut f, c.src_w);
+                put_u32(&mut f, c.dst_w);
+                put_bytes(&mut f, &c.body);
+            }
+            send_counted(&mut self.conns[rank], &f, &mut self.metrics.bytes_on_wire);
+        }
+        let mut fold: FxHashMap<(QueryId, u32), FoldRec<A>> = FxHashMap::default();
+        for conn in self.conns.iter_mut() {
+            let frame = recv_counted(conn, &mut self.metrics.bytes_on_wire);
+            let mut r = WireReader::new(&frame);
+            let tag = must(r.u8(), "fold tag");
+            assert_eq!(tag, TAG_FOLD, "coordinator: expected FoldReports frame");
+            let n = must(r.count(61, "fold report count"), "fold report count");
+            for _ in 0..n {
+                let qid = must(r.u64(), "fold qid");
+                let w = must(r.u32(), "fold worker");
+                let rec = FoldRec {
+                    calls: must(r.u64(), "fold calls"),
+                    handled: must(r.u64(), "fold handled"),
+                    sent: must(r.u64(), "fold sent"),
+                    delivered: must(r.u64(), "fold delivered"),
+                    active: must(r.u64(), "fold active"),
+                    pending: must(r.u64(), "fold pending"),
+                    terminated: must(r.u8(), "fold terminated") != 0,
+                    agg: must(A::dec_agg(&mut r), "fold agg"),
+                };
+                let prev = fold.insert((qid, w), rec);
+                assert!(prev.is_none(), "coordinator: duplicate fold report");
+            }
+            must(r.expect_end(), "fold tail");
+        }
+        self.metrics.rpc_round_trips += self.procs as u64;
+
+        // --- Exchange accounting + per-query fold, in in-flight order
+        // with worker-order aggregator merges: the in-process formulas
+        // over the replicated integer counters.
+        let msg_size = self.app.msg_bytes() + self.cluster.cost.msg_header_bytes;
+        let c1 = self.cluster.cost.per_vertex_compute_s;
+        let c2 = self.cluster.cost.per_msg_overhead_s;
+        let mut worker_cost = vec![0.0f64; workers];
+        let mut round_msgs: u64 = 0;
+        let mut round_bytes: u64 = 0;
+        let mut total_compute_calls: u64 = 0;
+        let max_supersteps = self.cfg.max_supersteps;
+        let app = &self.app;
+        for rt in self.inflight.iter_mut() {
+            rt.step += 1;
+            let mut q_msgs: u64 = 0;
+            let mut active_pending: u64 = 0;
+            let mut merged = A::Agg::default();
+            for (w, cost) in worker_cost.iter_mut().enumerate() {
+                let rec = fold
+                    .remove(&(rt.id, w as u32))
+                    .expect("coordinator: fold report for every shard");
+                q_msgs += rec.delivered;
+                round_msgs += rec.sent;
+                total_compute_calls += rec.calls;
+                *cost += rec.calls as f64 * c1 + rec.handled as f64 * c2;
+                active_pending += rec.active + rec.pending;
+                app.agg_merge(&mut merged, &rec.agg);
+                if rec.terminated {
+                    rt.terminated = true;
+                }
+            }
+            rt.stats.messages += q_msgs;
+            let q_bytes = q_msgs * msg_size as u64;
+            rt.stats.bytes += q_bytes;
+            round_bytes += q_bytes;
+            let action = app.master_step(&rt.query, rt.step, &rt.agg_prev, &mut merged);
+            rt.agg_prev = merged;
+            if action == MasterAction::Terminate {
+                rt.terminated = true;
+            }
+            if rt.step >= max_supersteps {
+                rt.terminated = true;
+                rt.stats.truncated = true;
+            }
+            if rt.terminated || active_pending == 0 {
+                rt.phase = Phase::Reporting;
+            }
+            rt.stats.supersteps = rt.step;
+        }
+        debug_assert!(fold.is_empty(), "fold reports for unknown shards");
+        // Aggregator sync bytes: one Agg per worker per in-flight query.
+        round_bytes += (self.inflight.len() * workers * std::mem::size_of::<A::Agg>()) as u64;
+
+        // --- Simulated clock, from the same cost model and counters.
+        let dt = self.cluster.super_round_time(&worker_cost, round_bytes as usize);
+        self.clock += dt;
+        self.metrics.super_rounds += 1;
+        self.metrics.total_messages += round_msgs;
+        self.metrics.total_bytes += round_bytes;
+        self.metrics.total_compute_calls += total_compute_calls;
+        self.metrics.sim_time = self.clock;
+        self.last_round_messages = round_msgs;
+
+        // --- RPC 3 (reporting rounds only): Report → Touched. Workers
+        // ship (v, VQ) in first-touch order per shard; assembly is in
+        // global worker order — exactly the in-process flat reporting
+        // iteration — and `finish` runs on the coordinator replica.
+        let reporting: Vec<QueryId> = self
+            .inflight
+            .iter()
+            .filter(|rt| rt.phase == Phase::Reporting)
+            .map(|rt| rt.id)
+            .collect();
+        if !reporting.is_empty() {
+            let mut req = Vec::new();
+            put_u8(&mut req, TAG_REPORT_REQ);
+            put_u32(&mut req, reporting.len() as u32);
+            for &qid in &reporting {
+                put_u64(&mut req, qid);
+            }
+            for conn in self.conns.iter_mut() {
+                send_counted(conn, &req, &mut self.metrics.bytes_on_wire);
+            }
+            let mut touched: FxHashMap<QueryId, Vec<Vec<(VertexId, A::VQ)>>> = reporting
+                .iter()
+                .map(|&qid| (qid, vec![Vec::new(); workers]))
+                .collect();
+            for (rank, conn) in self.conns.iter_mut().enumerate() {
+                let owned = (0..workers).filter(|w| w % self.procs == rank).count();
+                for _ in 0..reporting.len() * owned {
+                    let frame = recv_counted(conn, &mut self.metrics.bytes_on_wire);
+                    let mut r = WireReader::new(&frame);
+                    let tag = must(r.u8(), "touched tag");
+                    assert_eq!(tag, TAG_TOUCHED, "coordinator: expected Touched frame");
+                    let qid = must(r.u64(), "touched qid");
+                    let w = must(r.u32(), "touched worker") as usize;
+                    let n = must(r.count(4, "touched entry count"), "touched entry count");
+                    let mut entries = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let v = must(r.u32(), "touched vertex");
+                        let vq = must(A::dec_vq(&mut r), "touched vq");
+                        entries.push((v, vq));
+                    }
+                    must(r.expect_end(), "touched tail");
+                    let groups = touched
+                        .get_mut(&qid)
+                        .expect("coordinator: touched for unknown query");
+                    assert!(w < workers && groups[w].is_empty());
+                    groups[w] = entries;
+                }
+            }
+            self.metrics.rpc_round_trips += self.procs as u64;
+
+            let clock = self.clock;
+            let results = &mut self.results;
+            let metrics = &mut self.metrics;
+            let app = &self.app;
+            let mut touched = touched;
+            self.inflight.retain_mut(|rt| {
+                if rt.phase != Phase::Reporting {
+                    return true;
+                }
+                let groups = touched
+                    .remove(&rt.id)
+                    .expect("coordinator: touched groups for reporting query");
+                let n_touched: u64 = groups.iter().map(|g| g.len() as u64).sum();
+                rt.stats.touched = n_touched;
+                rt.stats.access_rate = n_touched as f64 / rt.n_vertices.max(1) as f64;
+                rt.stats.finished_at = clock;
+                metrics.queries_completed += 1;
+                metrics.latency.record(rt.stats.latency());
+                metrics.queueing.record(rt.stats.queueing());
+                let mut iter = groups.iter().flat_map(|g| g.iter().map(|(v, vq)| (*v, vq)));
+                let out = app.finish(&rt.query, &mut iter, &rt.agg_prev);
+                results.push(QueryResult {
+                    qid: rt.id,
+                    out,
+                    stats: rt.stats.clone(),
+                });
+                false
+            });
+        }
+
+        self.refresh_epoch_pin();
+        self.metrics.wall_time += wall_start.elapsed().as_secs_f64();
+        true
+    }
+
+    fn shutdown(&mut self) {
+        if self.shut {
+            return;
+        }
+        self.shut = true;
+        let mut f = Vec::new();
+        put_u8(&mut f, TAG_SHUTDOWN);
+        for conn in self.conns.iter_mut() {
+            if conn.send(&f).is_ok() {
+                self.metrics.bytes_on_wire += f.len() as u64 + 4;
+            }
+        }
+        for child in self.children.iter_mut() {
+            let _ = child.wait();
+        }
+    }
+}
+
+impl<A: WireApp> Drop for RemoteCoordinator<A> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker process
+// ---------------------------------------------------------------------------
+
+/// Serve as a worker process if (and only if) the worker env knobs are
+/// set — i.e. this process was spawned by a [`ProcEngine`] coordinator.
+/// Call at the very top of `main` (or from a dedicated libtest entry
+/// test); returns `false` immediately in an ordinary run, `true` after
+/// serving to shutdown. `A` must match the coordinator's app type —
+/// the spec decode fails loudly otherwise.
+pub fn maybe_serve_worker<A: WireApp>() -> bool {
+    let Ok(addr) = std::env::var(WORKER_ADDR_ENV) else {
+        return false;
+    };
+    let rank: usize = std::env::var(WORKER_RANK_ENV)
+        .expect("worker: QUEGEL_WORKER_RANK set alongside QUEGEL_WORKER_ADDR")
+        .trim()
+        .parse()
+        .expect("worker: QUEGEL_WORKER_RANK is an integer");
+    serve_worker::<A>(&addr, rank);
+    true
+}
+
+/// Per-shard integer counters for one round, reported at fold time.
+#[derive(Clone, Copy, Default)]
+struct LaneStats {
+    calls: u64,
+    handled: u64,
+    sent: u64,
+    delivered: u64,
+}
+
+/// Worker-side state of one in-flight query: the shards this process
+/// owns (`w % procs == rank`, ascending), in forced [`Layout::Flat`].
+struct WQuery<A: WireApp> {
+    query: A::Query,
+    shards: Vec<(usize, WorkerShard<A>, LaneStats)>,
+}
+
+struct WorkerState<A: WireApp> {
+    app: A,
+    cluster: Cluster,
+    rank: usize,
+    procs: usize,
+    workers: usize,
+    queries: FxHashMap<QueryId, WQuery<A>>,
+    /// Cross-process columns received in the current Deliver, keyed
+    /// `(qid, src_w, dst_w)`; delivery replay removes them in
+    /// source-worker order.
+    remote_cols: FxHashMap<(QueryId, u32, u32), Vec<u8>>,
+    /// Running qids of the current round, in StartRound (= in-flight)
+    /// order: fixes the fold-report iteration order.
+    round_qids: Vec<QueryId>,
+    outbox_scratch: Vec<(VertexId, A::Msg)>,
+}
+
+fn serve_worker<A: WireApp>(addr: &str, rank: usize) {
+    let stream = TcpStream::connect(addr).expect("worker: connect to coordinator");
+    let mut conn = Conn::new(stream);
+    let mut hello = Vec::new();
+    put_u8(&mut hello, TAG_HELLO);
+    put_u32(&mut hello, rank as u32);
+    conn.send(&hello).expect("worker: send hello");
+
+    let init = conn.recv().expect("worker: recv init");
+    let mut r = WireReader::new(&init);
+    assert_eq!(r.u8().expect("init tag"), TAG_INIT, "worker: expected Init");
+    let procs = r.u32().expect("init procs") as usize;
+    let workers = r.u32().expect("init workers") as usize;
+    let _n_vertices = r.u64().expect("init n_vertices");
+    let cfg_bytes = r.bytes().expect("init config");
+    let cfg = EngineConfig::from_bytes(cfg_bytes).expect("worker: config decode");
+    cfg.validate().expect("worker: config invariants");
+    let spec = r.bytes().expect("init spec");
+    r.expect_end().expect("init tail");
+    let mut sr = WireReader::new(spec);
+    let app = A::from_spec(&mut sr).expect("worker: app spec decode");
+    sr.expect_end().expect("worker: app spec tail");
+    assert!(rank < procs, "worker: rank out of range");
+
+    let mut st = WorkerState {
+        app,
+        cluster: Cluster::new(workers),
+        rank,
+        procs,
+        workers,
+        queries: FxHashMap::default(),
+        remote_cols: FxHashMap::default(),
+        round_qids: Vec::new(),
+        outbox_scratch: Vec::new(),
+    };
+    loop {
+        let frame = conn.recv().expect("worker: recv request");
+        let mut r = WireReader::new(&frame);
+        let tag = r.u8().expect("request tag");
+        match tag {
+            TAG_START_ROUND => {
+                let reply = st.handle_start_round(&mut r);
+                conn.send(&reply).expect("worker: send columns");
+            }
+            TAG_DELIVER => {
+                let reply = st.handle_deliver(&mut r);
+                conn.send(&reply).expect("worker: send fold reports");
+            }
+            TAG_REPORT_REQ => {
+                for f in st.handle_report(&mut r) {
+                    conn.send(&f).expect("worker: send touched");
+                }
+            }
+            TAG_SHUTDOWN => break,
+            other => panic!("worker: unexpected frame tag {other:#x}"),
+        }
+    }
+}
+
+impl<A: WireApp> WorkerState<A> {
+    fn owns(&self, w: usize) -> bool {
+        w % self.procs == self.rank
+    }
+
+    /// Retire + apply mutations, build admitted shards, run the compute
+    /// phase over owned shards, reply with the cross-process columns.
+    fn handle_start_round(&mut self, r: &mut WireReader<'_>) -> Vec<u8> {
+        let retire = r.u64().expect("start retire");
+        self.app.retire_epochs(retire);
+        let n_batches = r.count(4, "batch count").expect("batch count");
+        for _ in 0..n_batches {
+            let b = r.bytes().expect("batch bytes");
+            let mut br = WireReader::new(b);
+            let batch = wire::decode_mutation_batch(&mut br).expect("worker: batch decode");
+            br.expect_end().expect("worker: batch tail");
+            self.app.apply_mutations(&batch);
+        }
+
+        let n_adm = r.count(24, "admitted count").expect("admitted count");
+        for _ in 0..n_adm {
+            let qid = r.u64().expect("admitted qid");
+            let _epoch = r.u64().expect("admitted epoch");
+            let n_vertices = r.u64().expect("admitted n_vertices") as usize;
+            let query = A::dec_query(r).expect("worker: query decode");
+            // Forced Flat: insertion-ordered staging gives the wire
+            // codec the explicit first-touch slot order.
+            let mut shards: Vec<(usize, WorkerShard<A>, LaneStats)> = (0..self.workers)
+                .filter(|&w| self.owns(w))
+                .map(|w| {
+                    (
+                        w,
+                        WorkerShard::new(self.workers, Layout::Flat, n_vertices),
+                        LaneStats::default(),
+                    )
+                })
+                .collect();
+            // Seed V_q^I, preserving init_activate order within each
+            // owned shard (identical to the in-process seeding loop
+            // restricted to this process's workers).
+            let app = &self.app;
+            for v in app.init_activate(&query) {
+                let w = self.cluster.worker_of(v);
+                if !self.owns(w) {
+                    continue;
+                }
+                let (_, shard, _) = shards
+                    .iter_mut()
+                    .find(|(sw, _, _)| *sw == w)
+                    .expect("owned shard present");
+                let q = &query;
+                shard.store.seed_with(v, || VState {
+                    vq: app.init_value(q, v),
+                    halted: false,
+                    computed_step: 0,
+                });
+                shard.active.push(v);
+            }
+            self.queries.insert(qid, WQuery { query, shards });
+        }
+
+        let n_run = r.count(16, "running count").expect("running count");
+        self.round_qids.clear();
+        let mut cols: Vec<(QueryId, u32, u32, Vec<u8>)> = Vec::new();
+        for _ in 0..n_run {
+            let qid = r.u64().expect("running qid");
+            let step = r.u64().expect("running step");
+            let agg_prev = A::dec_agg(r).expect("worker: agg decode");
+            self.round_qids.push(qid);
+            let wq = self
+                .queries
+                .get_mut(&qid)
+                .expect("worker: running query unknown");
+            let WQuery { query, shards } = wq;
+            for (_, shard, lane) in shards.iter_mut() {
+                *lane = LaneStats::default();
+                let mut task = Task {
+                    qid,
+                    step,
+                    query,
+                    agg_prev: &agg_prev,
+                    shard,
+                };
+                // The serial reference body: no edge parking, staging
+                // straight into the shard's flat buffers.
+                let run = run_task(
+                    &self.app,
+                    &self.cluster,
+                    EdgePolicy::Never,
+                    &mut task,
+                    &mut self.outbox_scratch,
+                );
+                debug_assert!(run.overflow.is_none(), "EdgePolicy::Never never parks");
+                lane.calls += run.calls;
+                lane.handled += run.handled;
+                lane.sent += run.sent;
+            }
+            // Drain cross-process columns (owned destinations stay put
+            // for the local leg of delivery).
+            for (src_w, shard, _) in wq.shards.iter_mut() {
+                for dst_w in 0..self.workers {
+                    if dst_w % self.procs == self.rank {
+                        continue;
+                    }
+                    let StagedBuf::Flat(ord) = &mut shard.staged[dst_w] else {
+                        unreachable!("worker shards are Layout::Flat");
+                    };
+                    if ord.slots.is_empty() {
+                        continue;
+                    }
+                    let slots: Vec<(VertexId, MsgSlot<A::Msg>)> = ord.drain_slots().collect();
+                    let mut body = Vec::new();
+                    encode_column_body::<A>(&slots, &mut body);
+                    cols.push((qid, *src_w as u32, dst_w as u32, body));
+                }
+            }
+        }
+        r.expect_end().expect("worker: start round tail");
+
+        let mut reply = Vec::new();
+        put_u8(&mut reply, TAG_COLUMNS);
+        put_u32(&mut reply, cols.len() as u32);
+        for (qid, src_w, dst_w, body) in cols {
+            put_u64(&mut reply, qid);
+            put_u32(&mut reply, src_w);
+            put_u32(&mut reply, dst_w);
+            put_bytes(&mut reply, &body);
+        }
+        reply
+    }
+
+    /// Replay delivery for every owned destination shard — local staged
+    /// buffers and remote columns interleaved in source-worker order,
+    /// all through [`deliver_into_sink`] — then report fold inputs.
+    fn handle_deliver(&mut self, r: &mut WireReader<'_>) -> Vec<u8> {
+        let n = r.count(20, "deliver column count").expect("deliver count");
+        for _ in 0..n {
+            let qid = r.u64().expect("deliver qid");
+            let src_w = r.u32().expect("deliver src");
+            let dst_w = r.u32().expect("deliver dst");
+            let body = r.bytes().expect("deliver body").to_vec();
+            debug_assert!(self.owns(dst_w as usize));
+            self.remote_cols.insert((qid, src_w, dst_w), body);
+        }
+        r.expect_end().expect("worker: deliver tail");
+
+        let round_qids = std::mem::take(&mut self.round_qids);
+        let owned: Vec<usize> = (0..self.workers).filter(|&w| self.owns(w)).collect();
+        let mut reply = Vec::new();
+        put_u8(&mut reply, TAG_FOLD);
+        put_u32(&mut reply, (round_qids.len() * owned.len()) as u32);
+        for &qid in &round_qids {
+            let wq = self
+                .queries
+                .get_mut(&qid)
+                .expect("worker: delivering unknown query");
+            // Delivery per owned destination shard. The sink is moved
+            // out (owned) so local source shards — including the
+            // destination itself — can be borrowed for their staged
+            // buffers.
+            for di in 0..wq.shards.len() {
+                let dst_w = wq.shards[di].0;
+                let mut sink = wq.shards[di].1.store.take_exchange_sink();
+                let mut delivered: u64 = 0;
+                for src_w in 0..self.workers {
+                    if self.owns(src_w) {
+                        let si = wq
+                            .shards
+                            .iter()
+                            .position(|(sw, _, _)| *sw == src_w)
+                            .expect("owned source shard");
+                        let buf = &mut wq.shards[si].1.staged[dst_w];
+                        delivered += deliver_into_sink(&self.app, &mut sink, buf);
+                    } else if let Some(body) =
+                        self.remote_cols.remove(&(qid, src_w as u32, dst_w as u32))
+                    {
+                        let ord =
+                            decode_column_body::<A>(&body).expect("worker: column decode");
+                        let mut buf = StagedBuf::Flat(ord);
+                        delivered += deliver_into_sink(&self.app, &mut sink, &mut buf);
+                    }
+                }
+                wq.shards[di].1.store.restore_exchange_sink(sink);
+                wq.shards[di].2.delivered = delivered;
+            }
+            // Fold inputs per owned shard, ascending worker order.
+            for (w, shard, lane) in wq.shards.iter_mut() {
+                put_u64(&mut reply, qid);
+                put_u32(&mut reply, *w as u32);
+                put_u64(&mut reply, lane.calls);
+                put_u64(&mut reply, lane.handled);
+                put_u64(&mut reply, lane.sent);
+                put_u64(&mut reply, lane.delivered);
+                put_u64(&mut reply, shard.active.len() as u64);
+                put_u64(&mut reply, shard.store.pending() as u64);
+                put_u8(&mut reply, shard.terminated as u8);
+                shard.terminated = false;
+                let agg = std::mem::take(&mut shard.agg_round);
+                A::enc_agg(&agg, &mut reply);
+            }
+        }
+        self.remote_cols.clear();
+        reply
+    }
+
+    /// Ship touched `(v, VQ)` entries for every owned shard of every
+    /// reporting query — first-touch order within a shard (the flat
+    /// store's insertion order) — then drop the query state.
+    fn handle_report(&mut self, r: &mut WireReader<'_>) -> Vec<Vec<u8>> {
+        let n = r.count(8, "report qid count").expect("report count");
+        let mut frames = Vec::new();
+        for _ in 0..n {
+            let qid = r.u64().expect("report qid");
+            let wq = self
+                .queries
+                .remove(&qid)
+                .expect("worker: reporting unknown query");
+            for (w, shard, _) in wq.shards.iter() {
+                let mut f = Vec::new();
+                put_u8(&mut f, TAG_TOUCHED);
+                put_u64(&mut f, qid);
+                put_u32(&mut f, *w as u32);
+                put_u32(&mut f, shard.store.touched() as u32);
+                for (v, vq) in shard.store.touched_iter() {
+                    put_u32(&mut f, v);
+                    A::enc_vq(vq, &mut f);
+                }
+                frames.push(f);
+            }
+        }
+        r.expect_end().expect("worker: report tail");
+        frames
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::ppsp::{vbfs_query, VersionedBfs};
+    use crate::coordinator::{Pipeline, Sched};
+    use crate::graph::gen;
+    use crate::vertex::Ctx;
+
+    /// Codec probe: a do-nothing app with non-trivial wire types so the
+    /// column/result codecs are exercised with real payload bytes.
+    struct WireProbe;
+
+    impl QueryApp for WireProbe {
+        type Query = u32;
+        type VQ = u32;
+        type Msg = u32;
+        type Agg = u64;
+        type Out = Vec<u32>;
+
+        fn init_activate(&self, _q: &u32) -> Vec<VertexId> {
+            Vec::new()
+        }
+        fn init_value(&self, _q: &u32, _v: VertexId) -> u32 {
+            0
+        }
+        fn compute(&self, _ctx: &mut Ctx<'_, Self>, _v: VertexId, _vq: &mut u32) {}
+        fn finish(
+            &self,
+            _q: &u32,
+            touched: &mut dyn Iterator<Item = (VertexId, &u32)>,
+            _agg: &u64,
+        ) -> Vec<u32> {
+            touched.map(|(v, _)| v).collect()
+        }
+    }
+
+    impl WireApp for WireProbe {
+        fn spec_bytes(&self) -> Vec<u8> {
+            Vec::new()
+        }
+        fn from_spec(_r: &mut WireReader<'_>) -> WireResult<Self> {
+            Ok(WireProbe)
+        }
+        fn enc_query(q: &u32, out: &mut Vec<u8>) {
+            put_u32(out, *q);
+        }
+        fn dec_query(r: &mut WireReader<'_>) -> WireResult<u32> {
+            r.u32()
+        }
+        fn enc_msg(m: &u32, out: &mut Vec<u8>) {
+            put_u32(out, *m);
+        }
+        fn dec_msg(r: &mut WireReader<'_>) -> WireResult<u32> {
+            r.u32()
+        }
+        fn enc_vq(vq: &u32, out: &mut Vec<u8>) {
+            put_u32(out, *vq);
+        }
+        fn dec_vq(r: &mut WireReader<'_>) -> WireResult<u32> {
+            r.u32()
+        }
+        fn enc_agg(a: &u64, out: &mut Vec<u8>) {
+            put_u64(out, *a);
+        }
+        fn dec_agg(r: &mut WireReader<'_>) -> WireResult<u64> {
+            r.u64()
+        }
+        fn enc_out(o: &Vec<u32>, out: &mut Vec<u8>) {
+            put_u32(out, o.len() as u32);
+            for v in o {
+                put_u32(out, *v);
+            }
+        }
+        fn dec_out(r: &mut WireReader<'_>) -> WireResult<Vec<u32>> {
+            let n = r.count(4, "out count")?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(r.u32()?);
+            }
+            Ok(v)
+        }
+    }
+
+    #[test]
+    fn column_body_round_trips_in_slot_order() {
+        let slots: Vec<(VertexId, MsgSlot<u32>)> = vec![
+            (3, MsgSlot::One(7)),
+            (9, MsgSlot::Many(vec![1, 2, 3])),
+            (4, MsgSlot::One(5)),
+        ];
+        let mut body = Vec::new();
+        encode_column_body::<WireProbe>(&slots, &mut body);
+        let ord = decode_column_body::<WireProbe>(&body).unwrap();
+        assert_eq!(ord.slots.len(), slots.len());
+        for ((d1, s1), (d2, s2)) in slots.iter().zip(ord.slots.iter()) {
+            assert_eq!(d1, d2);
+            assert_eq!(s1.as_slice(), s2.as_slice());
+        }
+        // Single-message slots come back in the inline representation.
+        assert!(matches!(ord.slots[0].1, MsgSlot::One(_)));
+        assert!(matches!(ord.slots[1].1, MsgSlot::Many(_)));
+    }
+
+    #[test]
+    fn column_body_decode_rejects_corrupt_bytes_without_panicking() {
+        let slots: Vec<(VertexId, MsgSlot<u32>)> =
+            vec![(1, MsgSlot::One(2)), (3, MsgSlot::Many(vec![4, 5]))];
+        let mut body = Vec::new();
+        encode_column_body::<WireProbe>(&slots, &mut body);
+        // Every truncation errors.
+        for cut in 0..body.len() {
+            assert!(decode_column_body::<WireProbe>(&body[..cut]).is_err());
+        }
+        // Oversized slot count.
+        let mut bad = Vec::new();
+        put_u32(&mut bad, u32::MAX);
+        assert!(decode_column_body::<WireProbe>(&bad).is_err());
+        // Zero-message slot.
+        let mut bad = Vec::new();
+        put_u32(&mut bad, 1);
+        put_u32(&mut bad, 6);
+        put_u32(&mut bad, 0);
+        assert!(matches!(
+            decode_column_body::<WireProbe>(&bad),
+            Err(WireError::Corrupt("empty message slot"))
+        ));
+        // Message count beyond the post-combiner bound.
+        let mut bad = Vec::new();
+        put_u32(&mut bad, 1);
+        put_u32(&mut bad, 6);
+        put_u32(&mut bad, MAX_WIRE_MSGS_PER_SLOT as u32 + 1);
+        assert!(matches!(
+            decode_column_body::<WireProbe>(&bad),
+            Err(WireError::Corrupt("message count out of range"))
+        ));
+        // Trailing garbage.
+        let mut padded = body.clone();
+        padded.push(0);
+        assert!(decode_column_body::<WireProbe>(&padded).is_err());
+    }
+
+    #[test]
+    fn result_codec_round_trips() {
+        let res: QueryResult<Vec<u32>> = QueryResult {
+            qid: 42,
+            out: vec![1, 9, 17],
+            stats: QueryStats {
+                qid: 42,
+                supersteps: 3,
+                messages: 10,
+                bytes: 80,
+                touched: 5,
+                access_rate: 0.5,
+                arrived_at: 0.25,
+                submitted_at: 0.25,
+                started_at: 0.5,
+                finished_at: 1.5,
+                truncated: true,
+                epoch: 2,
+            },
+        };
+        let mut buf = Vec::new();
+        encode_result::<WireProbe>(&res, &mut buf);
+        let mut r = WireReader::new(&buf);
+        let back = decode_result::<WireProbe>(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(back.qid, res.qid);
+        assert_eq!(back.out, res.out);
+        assert_eq!(back.stats.supersteps, 3);
+        assert_eq!(back.stats.messages, 10);
+        assert_eq!(back.stats.bytes, 80);
+        assert_eq!(back.stats.touched, 5);
+        assert!(back.stats.truncated);
+        assert_eq!(back.stats.epoch, 2);
+        assert_eq!(back.stats.finished_at, 1.5);
+        // Truncation and a bad bool both error, never panic.
+        for cut in 0..buf.len() {
+            let mut r = WireReader::new(&buf[..cut]);
+            assert!(decode_result::<WireProbe>(&mut r).is_err());
+        }
+        let flag_pos = buf.len() - 9; // truncated byte sits before the u64 epoch
+        let mut bad = buf.clone();
+        bad[flag_pos] = 7;
+        let mut r = WireReader::new(&bad);
+        assert!(matches!(
+            decode_result::<WireProbe>(&mut r),
+            Err(WireError::Corrupt("truncated flag"))
+        ));
+    }
+
+    #[test]
+    fn procs_one_delegates_in_process_with_zero_wire_traffic() {
+        let g = gen::twitter_like(120, 4, 1201);
+        let cfg = EngineConfig {
+            threads: 1,
+            capacity: 4,
+            admit: Admit::Static(4),
+            sched: Sched::Stealing,
+            pipeline: Pipeline::Off,
+            ..EngineConfig::default()
+        };
+        let mut pe = ProcEngine::new(
+            VersionedBfs::new(g.clone()),
+            Cluster::new(4),
+            120,
+            cfg,
+            1,
+            &[],
+        );
+        let mut eng = Engine::with_config(VersionedBfs::new(g), Cluster::new(4), 120, cfg);
+        for (s, t) in gen::random_pairs(120, 6, 1202) {
+            pe.submit(vbfs_query(s, t));
+            eng.submit(vbfs_query(s, t));
+        }
+        pe.run_until_idle();
+        eng.run_until_idle();
+        let got: Vec<_> = pe.take_results().into_iter().map(|r| (r.qid, r.out)).collect();
+        let want: Vec<_> = eng.take_results().into_iter().map(|r| (r.qid, r.out)).collect();
+        assert_eq!(got, want);
+        assert_eq!(pe.metrics().bytes_on_wire, 0);
+        assert_eq!(pe.metrics().rpc_round_trips, 0);
+    }
+
+    /// Worker entrypoint for the lib test binary: the coordinator spawns
+    /// `current_exe()` with `--exact` on this test's full path, so the
+    /// child runs exactly this body. Without the env knobs (every
+    /// ordinary `cargo test` run) it is an immediate no-op pass.
+    #[test]
+    fn worker_entry() {
+        maybe_serve_worker::<VersionedBfs>();
+    }
+
+    #[test]
+    fn two_process_outputs_match_in_process_bit_for_bit() {
+        let n = 200usize;
+        let g = gen::twitter_like(n, 4, 907);
+        let cfg = EngineConfig {
+            threads: 1,
+            capacity: 4,
+            admit: Admit::Static(4),
+            sched: Sched::Stealing,
+            pipeline: Pipeline::Off,
+            ..EngineConfig::default()
+        };
+        let pairs = gen::random_pairs(n, 8, 908);
+
+        let mut eng =
+            Engine::with_config(VersionedBfs::new(g.clone()), Cluster::new(4), n, cfg);
+        for &(s, t) in &pairs {
+            eng.submit(vbfs_query(s, t));
+        }
+        eng.run_until_idle();
+        let want: Vec<_> = eng
+            .take_results()
+            .into_iter()
+            .map(|r| (r.qid, r.stats.epoch, r.out))
+            .collect();
+
+        let mut pe = ProcEngine::new(
+            VersionedBfs::new(g),
+            Cluster::new(4),
+            n,
+            cfg,
+            2,
+            &libtest_worker_args("coordinator::remote::tests::worker_entry"),
+        );
+        for &(s, t) in &pairs {
+            pe.submit(vbfs_query(s, t));
+        }
+        pe.run_until_idle();
+        let got: Vec<_> = pe
+            .take_results()
+            .into_iter()
+            .map(|r| (r.qid, r.stats.epoch, r.out))
+            .collect();
+        assert_eq!(got, want, "2-process results must replay in-process exactly");
+        assert!(pe.metrics().bytes_on_wire > 0, "exchange must ride the wire");
+        assert!(pe.metrics().rpc_round_trips > 0);
+        pe.shutdown();
+    }
+}

@@ -73,7 +73,19 @@
 //!   pinned epoch — for every thread count, scheduler, layout, pipeline
 //!   and admission setting, pinned by the snapshot-replay oracle in
 //!   `rust/tests/determinism.rs` and the mutation-schedule fuzzer in
-//!   `rust/tests/fuzz_determinism.rs`.
+//!   `rust/tests/fuzz_determinism.rs`. And since the multi-process mode
+//!   (`coordinator::remote::ProcEngine`) the process boundary is real:
+//!   one coordinator plus N worker processes — children of the same
+//!   binary, connected over localhost TCP with the crate's
+//!   length-prefixed framing — where the destination-sharded exchange,
+//!   admission decisions, mutation batches and epoch pins ride the wire.
+//!   The whole configuration is one serializable `EngineConfig`
+//!   (`EngineConfig::from_env()` reads every `QUEGEL_TEST_*` knob once,
+//!   on the coordinator; the byte codec ships it at the handshake), and
+//!   the process count is one more axis of the bit-identical contract:
+//!   `QueryResult::out` matches the in-process engine byte for byte at
+//!   every worker-process count, with `bytes_on_wire` and
+//!   `rpc_round_trips` gauges proving which mode actually ran.
 //! * [`vertex`] — the `QueryApp` programming interface (paper §4); app and
 //!   associated types carry the `Send`/`Sync` bounds the threaded shards
 //!   require.

@@ -27,6 +27,12 @@ use quegel::util::error::{Context, Result};
 use std::collections::HashMap;
 
 fn main() {
+    // Worker-process entrypoint: when a `ProcEngine` coordinator spawned
+    // this process (the worker env knobs are set), serve the remote
+    // protocol instead of parsing the CLI.
+    if quegel::coordinator::remote::maybe_serve_worker::<quegel::apps::ppsp::VersionedBfs>() {
+        return;
+    }
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);

@@ -310,6 +310,15 @@ pub struct EngineMetrics {
     /// signal for the overlay path. Engine-lifetime, preserved by
     /// [`EngineMetrics::reset`].
     pub delta_bytes_peak: u64,
+    /// Total framed bytes the multi-process coordinator put on (and read
+    /// off) its worker sockets: payload plus the 4-byte length prefix, per
+    /// frame, both directions. Exactly zero when everything runs in one
+    /// process — the engagement signal the bench validator gates on.
+    pub bytes_on_wire: u64,
+    /// Request/reply pairs the multi-process coordinator exchanged with
+    /// worker processes (counted per worker: a round that asks 2 workers
+    /// to compute is 2 round trips). Zero in-process.
+    pub rpc_round_trips: u64,
 }
 
 impl EngineMetrics {

@@ -1,0 +1,488 @@
+//! Zero-dependency wire codec for the multi-process mode.
+//!
+//! Everything that crosses a process boundary — engine configuration,
+//! mutation batches, graph specs, staged message columns, aggregator
+//! partials — is encoded with the little-endian primitives here and
+//! framed by [`super::encode_frame`]. The codec is deliberately dumb:
+//! fixed-width integers, `u32` length prefixes, no varints, no schema
+//! negotiation. What it *is* careful about is failure: every decode path
+//! returns [`WireError`] instead of panicking, and count fields are
+//! validated against the bytes actually present before any allocation,
+//! so a truncated or corrupted frame can never abort a worker process or
+//! reserve gigabytes (see the corrupt-bytes fuzz tests below).
+//!
+//! Determinism note: encoding is a pure function of the value, and the
+//! container orders serialized here (mutation order inside a batch,
+//! per-source adjacency order inside a graph spec) are exactly the orders
+//! the in-process engine replays — the wire adds no reordering anywhere.
+
+use std::fmt;
+
+use crate::graph::{Graph, GraphBuilder, Mutation, MutationBatch};
+
+/// A decode failure. Never a panic: the transport surfaces these to the
+/// coordinator/worker loop, which treats them as a fatal peer error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended before the value did.
+    Truncated,
+    /// The bytes are structurally invalid (bad tag, out-of-range count,
+    /// inconsistent lengths). The message names the field.
+    Corrupt(&'static str),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "wire: truncated input"),
+            WireError::Corrupt(what) => write!(f, "wire: corrupt input ({what})"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Codec result.
+pub type WireResult<T> = Result<T, WireError>;
+
+// ---------------------------------------------------------------------------
+// Writer primitives (append-only, infallible)
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+#[inline]
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// `u32` length prefix + raw bytes.
+#[inline]
+pub fn put_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
+    assert!(bytes.len() <= u32::MAX as usize, "byte blob too large");
+    put_u32(out, bytes.len() as u32);
+    out.extend_from_slice(bytes);
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+/// Cursor over a received payload. Every accessor checks bounds and
+/// returns [`WireError::Truncated`] instead of slicing out of range.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Take `n` raw bytes.
+    #[inline]
+    pub fn take(&mut self, n: usize) -> WireResult<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    #[inline]
+    pub fn u8(&mut self) -> WireResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    #[inline]
+    pub fn u32(&mut self) -> WireResult<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> WireResult<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> WireResult<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    #[inline]
+    pub fn f64(&mut self) -> WireResult<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// A `u32`-length-prefixed byte blob (inverse of [`put_bytes`]).
+    #[inline]
+    pub fn bytes(&mut self) -> WireResult<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    /// Read a count field and validate it against the bytes actually
+    /// remaining (each counted element occupies ≥ `min_elem_bytes`), so a
+    /// corrupted count can never drive an over-allocation.
+    #[inline]
+    pub fn count(&mut self, min_elem_bytes: usize, what: &'static str) -> WireResult<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_elem_bytes.max(1)) > self.remaining() {
+            return Err(WireError::Corrupt(what));
+        }
+        Ok(n)
+    }
+
+    /// Assert the payload was consumed exactly.
+    pub fn expect_end(&self) -> WireResult<()> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(WireError::Corrupt("trailing bytes"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MutationBatch codec
+// ---------------------------------------------------------------------------
+
+const MUT_ADD_EDGE: u8 = 0;
+const MUT_DELETE_EDGE: u8 = 1;
+const MUT_ADD_VERTEX: u8 = 2;
+const MUT_DELETE_VERTEX: u8 = 3;
+
+/// Serialize a mutation batch in its exact application order.
+pub fn encode_mutation_batch(batch: &MutationBatch, out: &mut Vec<u8>) {
+    assert!(batch.muts.len() <= u32::MAX as usize, "batch too large");
+    put_u32(out, batch.muts.len() as u32);
+    for m in &batch.muts {
+        match *m {
+            Mutation::AddEdge { src, dst, w } => {
+                put_u8(out, MUT_ADD_EDGE);
+                put_u32(out, src);
+                put_u32(out, dst);
+                match w {
+                    Some(w) => {
+                        put_u8(out, 1);
+                        put_f32(out, w);
+                    }
+                    None => put_u8(out, 0),
+                }
+            }
+            Mutation::DeleteEdge { src, dst } => {
+                put_u8(out, MUT_DELETE_EDGE);
+                put_u32(out, src);
+                put_u32(out, dst);
+            }
+            Mutation::AddVertex => put_u8(out, MUT_ADD_VERTEX),
+            Mutation::DeleteVertex { v } => {
+                put_u8(out, MUT_DELETE_VERTEX);
+                put_u32(out, v);
+            }
+        }
+    }
+}
+
+/// Inverse of [`encode_mutation_batch`]. Order-preserving by
+/// construction — batches apply in mutation order, so the replica graph
+/// on every worker folds the identical sequence.
+pub fn decode_mutation_batch(r: &mut WireReader<'_>) -> WireResult<MutationBatch> {
+    let n = r.count(1, "mutation count")?;
+    let mut batch = MutationBatch::new();
+    batch.muts.reserve(n);
+    for _ in 0..n {
+        let m = match r.u8()? {
+            MUT_ADD_EDGE => {
+                let src = r.u32()?;
+                let dst = r.u32()?;
+                let w = match r.u8()? {
+                    0 => None,
+                    1 => Some(r.f32()?),
+                    _ => return Err(WireError::Corrupt("edge weight flag")),
+                };
+                Mutation::AddEdge { src, dst, w }
+            }
+            MUT_DELETE_EDGE => Mutation::DeleteEdge {
+                src: r.u32()?,
+                dst: r.u32()?,
+            },
+            MUT_ADD_VERTEX => Mutation::AddVertex,
+            MUT_DELETE_VERTEX => Mutation::DeleteVertex { v: r.u32()? },
+            _ => return Err(WireError::Corrupt("mutation tag")),
+        };
+        batch.muts.push(m);
+    }
+    Ok(batch)
+}
+
+// ---------------------------------------------------------------------------
+// Graph spec codec
+// ---------------------------------------------------------------------------
+
+/// Serialize a CSR graph through its public accessors: vertex count,
+/// weighted flag, then each source's out-list in per-source insertion
+/// order. `GraphBuilder` preserves that order on rebuild, so
+/// `decode_graph(encode_graph(g))` produces a structurally identical CSR
+/// — which is what keeps replica apps' adjacency iteration (and thus
+/// every `ctx.send` order) byte-identical across processes.
+pub fn encode_graph(g: &Graph, out: &mut Vec<u8>) {
+    let n = g.num_vertices();
+    assert!(n <= u32::MAX as usize, "graph too large for the wire spec");
+    put_u32(out, n as u32);
+    put_u8(out, g.weighted() as u8);
+    for v in 0..n as u32 {
+        let outs = g.out(v);
+        assert!(outs.len() <= u32::MAX as usize);
+        put_u32(out, outs.len() as u32);
+        if g.weighted() {
+            for (i, &d) in outs.iter().enumerate() {
+                put_u32(out, d);
+                put_f32(out, g.out_w(v)[i]);
+            }
+        } else {
+            for &d in outs {
+                put_u32(out, d);
+            }
+        }
+    }
+}
+
+/// Inverse of [`encode_graph`]. Validates every endpoint against the
+/// declared vertex count before handing it to `GraphBuilder` (whose
+/// in-range asserts would otherwise panic on corrupt input).
+pub fn decode_graph(r: &mut WireReader<'_>) -> WireResult<Graph> {
+    let n = r.count(1, "vertex count")? as u32;
+    let weighted = match r.u8()? {
+        0 => false,
+        1 => true,
+        _ => return Err(WireError::Corrupt("weighted flag")),
+    };
+    let mut b = GraphBuilder::new(n as usize);
+    let elem = if weighted { 8 } else { 4 };
+    for v in 0..n {
+        let deg = r.count(elem, "out-degree")?;
+        for _ in 0..deg {
+            let d = r.u32()?;
+            if d >= n {
+                return Err(WireError::Corrupt("edge endpoint out of range"));
+            }
+            if weighted {
+                let w = r.f32()?;
+                b.wedge(v, d, w);
+            } else {
+                b.edge(v, d);
+            }
+        }
+    }
+    Ok(b.build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::util::Rng;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut out = Vec::new();
+        put_u8(&mut out, 0xAB);
+        put_u32(&mut out, 0xDEAD_BEEF);
+        put_u64(&mut out, u64::MAX - 7);
+        put_f32(&mut out, -1.5);
+        put_f64(&mut out, 2.25e-3);
+        put_bytes(&mut out, b"blob");
+        put_bytes(&mut out, b"");
+        let mut r = WireReader::new(&out);
+        assert_eq!(r.u8().unwrap(), 0xAB);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 7);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f64().unwrap(), 2.25e-3);
+        assert_eq!(r.bytes().unwrap(), b"blob");
+        assert_eq!(r.bytes().unwrap(), b"");
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn reader_reports_truncation_not_panic() {
+        let mut out = Vec::new();
+        put_u64(&mut out, 42);
+        // Every strict prefix must decode to Truncated, never panic.
+        for cut in 0..out.len() {
+            let mut r = WireReader::new(&out[..cut]);
+            assert_eq!(r.u64(), Err(WireError::Truncated), "cut at {cut}");
+        }
+        // A length prefix pointing past the end is truncation too.
+        let mut out = Vec::new();
+        put_u32(&mut out, 100); // claims 100 bytes follow
+        out.push(1);
+        let mut r = WireReader::new(&out);
+        assert_eq!(r.bytes(), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn count_guard_rejects_overallocation_bait() {
+        // A 4-byte payload claiming four billion elements must be caught
+        // before any Vec::with_capacity sees the number.
+        let mut out = Vec::new();
+        put_u32(&mut out, u32::MAX);
+        let mut r = WireReader::new(&out);
+        assert_eq!(r.count(4, "bait"), Err(WireError::Corrupt("bait")));
+    }
+
+    #[test]
+    fn expect_end_flags_trailing_bytes() {
+        let buf = [1u8, 2, 3];
+        let mut r = WireReader::new(&buf);
+        r.u8().unwrap();
+        assert_eq!(r.expect_end(), Err(WireError::Corrupt("trailing bytes")));
+        r.take(2).unwrap();
+        r.expect_end().unwrap();
+    }
+
+    fn sample_batch() -> MutationBatch {
+        let mut b = MutationBatch::new();
+        b.add_edge(3, 57)
+            .add_wedge(11, 503, 2.5)
+            .delete_edge(120, 9)
+            .add_vertex()
+            .delete_vertex(77)
+            .add_edge(250, 9);
+        b
+    }
+
+    #[test]
+    fn mutation_batch_round_trips_in_order() {
+        let batch = sample_batch();
+        let mut out = Vec::new();
+        encode_mutation_batch(&batch, &mut out);
+        let mut r = WireReader::new(&out);
+        let got = decode_mutation_batch(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(got, batch, "batch order and content must survive the wire");
+        // Empty batch round-trips too.
+        let mut out = Vec::new();
+        encode_mutation_batch(&MutationBatch::new(), &mut out);
+        let mut r = WireReader::new(&out);
+        assert_eq!(decode_mutation_batch(&mut r).unwrap(), MutationBatch::new());
+    }
+
+    #[test]
+    fn mutation_batch_truncation_and_corruption_error_cleanly() {
+        let batch = sample_batch();
+        let mut wire = Vec::new();
+        encode_mutation_batch(&batch, &mut wire);
+        // Every strict prefix: Err, never panic.
+        for cut in 0..wire.len() {
+            let mut r = WireReader::new(&wire[..cut]);
+            assert!(
+                decode_mutation_batch(&mut r).is_err(),
+                "prefix of {cut} bytes must fail to decode"
+            );
+        }
+        // Single-byte corruptions: decode must return (Ok or Err) without
+        // panicking. Tag bytes and count bytes are the interesting ones,
+        // but sweep everything.
+        for i in 0..wire.len() {
+            for flip in [0xFFu8, 0x01, 0x80] {
+                let mut bad = wire.clone();
+                bad[i] ^= flip;
+                let mut r = WireReader::new(&bad);
+                let _ = decode_mutation_batch(&mut r); // must not panic
+            }
+        }
+        // A specifically bad tag surfaces as Corrupt.
+        let mut bad = Vec::new();
+        put_u32(&mut bad, 1);
+        put_u8(&mut bad, 9); // no such mutation tag
+        let mut r = WireReader::new(&bad);
+        assert_eq!(
+            decode_mutation_batch(&mut r),
+            Err(WireError::Corrupt("mutation tag"))
+        );
+    }
+
+    #[test]
+    fn graph_spec_round_trips_adjacency_order() {
+        let g = gen::twitter_like(200, 4, 991);
+        let mut out = Vec::new();
+        encode_graph(&g, &mut out);
+        let mut r = WireReader::new(&out);
+        let got = decode_graph(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(got.num_vertices(), g.num_vertices());
+        assert_eq!(got.num_edges(), g.num_edges());
+        assert_eq!(got.weighted(), g.weighted());
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(got.out(v), g.out(v), "out-list of {v} must match exactly");
+        }
+    }
+
+    #[test]
+    fn graph_spec_decode_never_panics_on_garbage() {
+        let g = gen::twitter_like(60, 3, 992);
+        let mut wire = Vec::new();
+        encode_graph(&g, &mut wire);
+        for cut in 0..wire.len().min(600) {
+            let mut r = WireReader::new(&wire[..cut]);
+            assert!(decode_graph(&mut r).is_err(), "prefix {cut} must fail");
+        }
+        // Randomized corruption sweep: flip bytes at seeded positions and
+        // require a non-panicking verdict every time.
+        let mut rng = Rng::new(0x5eed_1010);
+        for _ in 0..500 {
+            let mut bad = wire.clone();
+            let i = rng.below_usize(bad.len());
+            bad[i] ^= (rng.below(255) + 1) as u8;
+            let mut r = WireReader::new(&bad);
+            let _ = decode_graph(&mut r); // must not panic
+        }
+        // An out-of-range endpoint is caught before GraphBuilder asserts.
+        let mut bad = Vec::new();
+        put_u32(&mut bad, 2); // n = 2
+        put_u8(&mut bad, 0);
+        put_u32(&mut bad, 1); // deg(0) = 1
+        put_u32(&mut bad, 7); // endpoint 7 >= n
+        let mut r = WireReader::new(&bad);
+        assert_eq!(
+            decode_graph(&mut r),
+            Err(WireError::Corrupt("edge endpoint out of range"))
+        );
+    }
+}

@@ -1082,3 +1082,147 @@ fn mutating_runs_replay_against_the_serial_snapshot_oracle() {
     run(4, Sched::Stealing, Pipeline::Off, Layout::Hashed, Admit::Adaptive);
     run(4, Sched::Stealing, Pipeline::On, Layout::Flat, Admit::Adaptive);
 }
+
+/// Worker-process entrypoint for this test binary: the multi-process
+/// tests spawn `current_exe()` filtered (`--exact`) to exactly this test,
+/// whose body serves the remote worker protocol. In an ordinary
+/// `cargo test` run the worker env knobs are absent and this passes as an
+/// immediate no-op.
+#[test]
+fn multiproc_worker_entry() {
+    quegel::coordinator::remote::maybe_serve_worker::<quegel::apps::ppsp::VersionedBfs>();
+}
+
+/// The process-count axis of the determinism contract: the full
+/// mutation-schedule serving run — streaming `try_mutate` batches, four
+/// submission waves pinning different epochs, the adaptive-vs-static
+/// admission schedule — must produce a bit-identical `(epoch, out)`
+/// record stream on a multi-process engine (coordinator + N worker
+/// processes over localhost TCP) as on the in-process engine. Process
+/// count joins threads/scheduler/layout as an axis that cannot re-time
+/// admission, so the comparison is exact, not via the snapshot oracle.
+#[test]
+fn multiprocess_outputs_match_in_process_bit_for_bit() {
+    use quegel::apps::ppsp::{vbfs_query, VersionedBfs};
+    use quegel::coordinator::remote::{libtest_worker_args, procs_from_env, ProcEngine};
+    use quegel::coordinator::EngineConfig;
+
+    if std::env::var("QUEGEL_TEST_MUT").is_ok_and(|v| v == "off") {
+        eprintln!("QUEGEL_TEST_MUT=off: skipping multi-process mutation test");
+        return;
+    }
+    // QUEGEL_TEST_PROCS sets the worker-process count (CI matrix axis);
+    // at least 2 so the wire path is always exercised here.
+    let procs = procs_from_env().max(2);
+
+    let n = 600usize;
+    let g = gen::twitter_like(n, 5, 9801);
+    let mut b1 = MutationBatch::new();
+    for v in [3u32, 57, 120] {
+        if let Some(&u) = g.out(v).first() {
+            b1.delete_edge(v, u);
+        }
+    }
+    b1.add_edge(11, 503).add_edge(250, 9);
+    let mut b2 = MutationBatch::new();
+    b2.add_vertex().add_edge(n as u32, 42).add_edge(17, n as u32);
+    for v in [200u32, 301] {
+        if let Some(&u) = g.out(v).last() {
+            b2.delete_edge(v, u);
+        }
+    }
+    let mut b3 = MutationBatch::new();
+    b3.delete_vertex(77).add_edge(5, 505);
+    let batches = [b1, b2, b3];
+    let waves: Vec<Vec<(u32, u32)>> = (0..=batches.len())
+        .map(|w| gen::random_pairs(n, 6, 9810 + w as u64))
+        .collect();
+
+    // The remote path is barrier-mode only, so both runs pin
+    // Pipeline::Off; Static admission keeps the schedule framework-free.
+    let cfg = EngineConfig {
+        capacity: 4,
+        threads: 1,
+        pipeline: Pipeline::Off,
+        layout: Layout::Flat,
+        admit: Admit::Static(4),
+        ..EngineConfig::default()
+    };
+    let mk_app = || {
+        let mut app = VersionedBfs::new(g.clone());
+        app.heavy_every = 3;
+        app
+    };
+
+    // In-process reference run.
+    let mut eng = Engine::with_config(mk_app(), Cluster::new(4), n, cfg);
+    let mut want_ids = Vec::new();
+    for &(s, t) in &waves[0] {
+        want_ids.push(eng.try_submit(vbfs_query(s, t), 0.0).expect("queue accepts"));
+    }
+    for (bi, b) in batches.iter().enumerate() {
+        eng.super_round();
+        eng.super_round();
+        eng.try_mutate(b.clone(), eng.sim_time()).expect("mutable app");
+        for &(s, t) in &waves[bi + 1] {
+            want_ids.push(
+                eng.try_submit(vbfs_query(s, t), eng.sim_time())
+                    .expect("queue accepts"),
+            );
+        }
+    }
+    eng.run_until_idle();
+    let want: Vec<(u64, u64, Option<u32>)> = want_ids
+        .iter()
+        .map(|id| {
+            let r = eng.results().iter().find(|r| r.qid == *id).expect("completed");
+            (r.qid, r.stats.epoch, r.out)
+        })
+        .collect();
+
+    // The same schedule through the multi-process engine.
+    let mut pe = ProcEngine::new(
+        mk_app(),
+        Cluster::new(4),
+        n,
+        cfg,
+        procs,
+        &libtest_worker_args("multiproc_worker_entry"),
+    );
+    let mut got_ids = Vec::new();
+    for &(s, t) in &waves[0] {
+        got_ids.push(pe.try_submit(vbfs_query(s, t), 0.0).expect("queue accepts"));
+    }
+    for (bi, b) in batches.iter().enumerate() {
+        pe.super_round();
+        pe.super_round();
+        pe.try_mutate(b.clone(), pe.sim_time()).expect("mutable app");
+        for &(s, t) in &waves[bi + 1] {
+            got_ids.push(
+                pe.try_submit(vbfs_query(s, t), pe.sim_time())
+                    .expect("queue accepts"),
+            );
+        }
+    }
+    pe.run_until_idle();
+    assert_eq!(got_ids, want_ids, "submission ids must replay identically");
+    let results = pe.take_results();
+    let got: Vec<(u64, u64, Option<u32>)> = got_ids
+        .iter()
+        .map(|id| {
+            let r = results.iter().find(|r| r.qid == *id).expect("completed");
+            (r.qid, r.stats.epoch, r.out)
+        })
+        .collect();
+    assert_eq!(
+        got, want,
+        "{procs}-process (epoch, out) stream must match in-process bit for bit"
+    );
+    assert!(
+        pe.metrics().bytes_on_wire > 0,
+        "multi-process run must put the exchange on the wire"
+    );
+    assert!(pe.metrics().rpc_round_trips > 0);
+    assert_eq!(pe.metrics().queries_completed, want_ids.len() as u64);
+    pe.shutdown();
+}

@@ -716,6 +716,92 @@ fn random_mutation_schedules_replay_against_serial_snapshots() {
         let (recs, _, piped) = run(pipe_forcing);
         check(&recs, "pipeline forcing config");
         pipeline_engaged |= piped;
+
+        // Process-axis forcing leg (every ~10th case — each run spawns
+        // two worker processes, so the leg is sampled rather than
+        // blanket): the same random schedule through a 2-process engine
+        // must replay its in-process twin's (epoch, out) stream bit for
+        // bit, with the exchange demonstrably on the wire.
+        if case % 10 == 0 {
+            use quegel::coordinator::remote::{libtest_worker_args, ProcEngine};
+            use quegel::coordinator::EngineConfig;
+            let pcfg = EngineConfig {
+                capacity: 8,
+                threads: 1,
+                pipeline: Pipeline::Off,
+                layout: Layout::Flat,
+                admit: Admit::Static(8),
+                ..EngineConfig::default()
+            };
+            let run_procs = |procs: usize| {
+                let mut app = VersionedBfs::new(g.clone());
+                app.heavy_every = heavy_every;
+                let mut pe = ProcEngine::new(
+                    app,
+                    Cluster::new(3),
+                    n,
+                    pcfg,
+                    procs,
+                    &libtest_worker_args("multiproc_worker_entry"),
+                );
+                let mut ids = Vec::new();
+                let mut qi = 0usize;
+                for ev in &schedule {
+                    match ev {
+                        Ev::Submit => {
+                            let (s, t) = queries[qi];
+                            qi += 1;
+                            ids.push(
+                                pe.try_submit(vbfs_query(s, t), pe.sim_time())
+                                    .expect("queue accepts"),
+                            );
+                        }
+                        Ev::Mutate(bi) => {
+                            pe.try_mutate(batches[*bi].clone(), pe.sim_time())
+                                .expect("app supports mutations");
+                        }
+                        Ev::Rounds(k) => {
+                            for _ in 0..*k {
+                                pe.super_round();
+                            }
+                        }
+                    }
+                }
+                pe.run_until_idle();
+                let results = pe.take_results();
+                let recs: Vec<(u64, Option<u32>)> = ids
+                    .iter()
+                    .map(|id| {
+                        let r = results
+                            .iter()
+                            .find(|r| r.qid == *id)
+                            .expect("query completed");
+                        (r.stats.epoch, r.out)
+                    })
+                    .collect();
+                let wire = pe.metrics().bytes_on_wire;
+                pe.shutdown();
+                (recs, wire)
+            };
+            let (twin, twin_wire) = run_procs(1);
+            assert_eq!(
+                twin_wire, 0,
+                "fuzz case {case}: a 1-process engine must not touch the wire"
+            );
+            check(&twin, "in-process twin of the process-axis leg");
+            let (recs, wire) = run_procs(2);
+            assert_eq!(
+                recs, twin,
+                "fuzz case {case} (seed {case_seed:#x}, {desc}): the \
+                 2-process run changed the (epoch, out) stream vs its \
+                 in-process twin"
+            );
+            assert!(
+                wire > 0,
+                "fuzz case {case}: the 2-process run never put bytes on \
+                 the wire"
+            );
+        }
     }
     assert!(
         flat_engaged,
@@ -732,4 +818,13 @@ fn random_mutation_schedules_replay_against_serial_snapshots() {
         "no fuzz case ever completed queries pinned to distinct epochs: \
          the schedules are not creating version overlap"
     );
+}
+
+/// Worker-process entrypoint for this test binary: the process-axis fuzz
+/// leg spawns `current_exe()` filtered (`--exact`) to exactly this test,
+/// whose body serves the remote worker protocol. Without the worker env
+/// knobs it passes as an immediate no-op.
+#[test]
+fn multiproc_worker_entry() {
+    quegel::coordinator::remote::maybe_serve_worker::<VersionedBfs>();
 }
